@@ -1,0 +1,112 @@
+//! End-to-end serving driver (the repo's headline validation run,
+//! recorded in EXPERIMENTS.md): starts the TCP server over the real AOT
+//! BERT artifacts, drives it with concurrent clients sending variable-
+//! length requests, and reports latency percentiles + throughput for the
+//! full router -> dynamic batcher -> prun engine -> PJRT path.
+//!
+//! ```bash
+//! cargo run --release --example bert_serving -- --requests 64 --clients 4
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dnc_serve::config::Config;
+use dnc_serve::coordinator::{Client, Server, ServerState};
+use dnc_serve::engine::Session;
+use dnc_serve::nlp::BertServer;
+use dnc_serve::ocr::{OcrMeta, OcrPipeline};
+use dnc_serve::runtime::{artifacts_dir, Manifest};
+use dnc_serve::util::args::Args;
+use dnc_serve::util::json::{arr, num, obj, s};
+use dnc_serve::util::prng::Rng;
+use dnc_serve::util::stats::percentiles;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let n_requests = args.usize_or("requests", 64);
+    let n_clients = args.usize_or("clients", 4);
+    let seed = args.u64_or("seed", 11);
+
+    // ---- stack ----
+    let dir = artifacts_dir();
+    let manifest = Arc::new(Manifest::load(&dir)?);
+    let session = Arc::new(Session::new(Arc::clone(&manifest), 16, 1)?);
+    let bert = BertServer::new(Arc::clone(&session));
+    let ocr = OcrPipeline::new(Arc::clone(&session), OcrMeta::load(&dir)?);
+    let mut config = Config::default();
+    config.port = 0;
+    config.max_wait_ms = 4;
+    let state = ServerState::new(bert, ocr, config);
+    let server = Server::bind(state)?;
+    let addr = server.local_addr().to_string();
+    let (stop, join) = server.serve_background();
+
+    // warm the buckets the workload will hit so percentiles measure the
+    // steady state, not JIT compilation
+    let warm: Vec<String> = manifest
+        .bert
+        .seq_buckets
+        .iter()
+        .map(|s| format!("bert_b1_s{s}"))
+        .collect();
+    session.warmup(&warm.iter().map(String::as_str).collect::<Vec<_>>())?;
+
+    // ---- load ----
+    println!("serving on {addr}; {n_clients} clients x {} requests", n_requests / n_clients);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        let per_client = n_requests / n_clients;
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+            let mut rng = Rng::new(seed + c as u64);
+            let mut client = Client::connect(&addr)?;
+            let mut lats = Vec::with_capacity(per_client);
+            for i in 0..per_client {
+                let len = rng.usize_in(8, 500);
+                let tokens = arr((0..len).map(|j| num(((j * 31 + i * 7 + c) % 8000 + 4) as f64)));
+                let t = Instant::now();
+                let resp = client.call(&obj(vec![
+                    ("op", s("embed_tokens")),
+                    ("id", num(i as f64)),
+                    ("tokens", tokens),
+                ]))?;
+                anyhow::ensure!(resp.get("embedding").is_some(), "bad response: {resp:?}");
+                lats.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok(lats)
+        }));
+    }
+    let mut all_lats = Vec::new();
+    for h in handles {
+        all_lats.extend(h.join().unwrap()?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // ---- report ----
+    let ps = percentiles(&all_lats, &[50.0, 95.0, 99.0]);
+    println!("\n== bert_serving results ==");
+    println!("requests      : {}", all_lats.len());
+    println!("wall time     : {wall:.2} s");
+    println!("throughput    : {:.1} req/s", all_lats.len() as f64 / wall);
+    println!("latency p50   : {:.1} ms", ps[0]);
+    println!("latency p95   : {:.1} ms", ps[1]);
+    println!("latency p99   : {:.1} ms", ps[2]);
+
+    let mut statc = Client::connect(&addr)?;
+    let stats = statc.call(&obj(vec![("op", s("stats"))]))?;
+    let batches = stats.get("counter.batches").and_then(|v| v.as_i64()).unwrap_or(0);
+    let breqs = stats.get("counter.batched_requests").and_then(|v| v.as_i64()).unwrap_or(0);
+    println!(
+        "batching      : {} requests in {} engine batches (avg {:.2}/batch)",
+        breqs,
+        batches,
+        breqs as f64 / batches.max(1) as f64
+    );
+
+    stop.stop();
+    join.join().unwrap();
+    println!("bert_serving OK");
+    Ok(())
+}

@@ -1,0 +1,29 @@
+//! Regenerate every paper figure/table (simulated 16-core machine,
+//! DESIGN.md §4) and print them as markdown — the data behind
+//! EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example figures_all            # full (1000 reps)
+//! cargo run --release --example figures_all -- --reps 100
+//! ```
+
+use dnc_serve::bench::figures;
+use dnc_serve::util::args::Args;
+
+fn main() {
+    let args = Args::parse_env();
+    let reps = args.usize_or("reps", 1000);
+    let threads = [1usize, 2, 4, 8, 16];
+
+    println!("# Paper figure regeneration (virtual 16-core machine)\n");
+    figures::fig2(&threads).print();
+    figures::fig3().print();
+    figures::fig4("cls").print();
+    figures::fig4("rec").print();
+    figures::fig4("total").print();
+    figures::fig5(&threads).print();
+    figures::fig6(reps).print();
+    figures::fig7().print();
+    figures::fig8().print();
+    figures::fig9().print();
+}

@@ -1,0 +1,63 @@
+//! Quickstart: load the AOT artifacts, run one inference with `run`,
+//! then a mixed batch with `prun` — the paper's §3.2 API in five minutes.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use dnc_serve::engine::{JobPart, PrunOptions, Session};
+use dnc_serve::nlp::Tokenizer;
+use dnc_serve::runtime::{artifacts_dir, Manifest, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the artifact manifest and open a session with a virtual
+    //    budget of 16 cores (the paper's testbed size).
+    let manifest = Arc::new(Manifest::load(&artifacts_dir())?);
+    let session = Session::new(Arc::clone(&manifest), 16, 1)?;
+
+    // 2. Single inference — the classic InferenceSession.run.
+    let tok = Tokenizer::new(manifest.bert.vocab);
+    let ids = tok.encode("divide and conquer improves inference", 16);
+    let padded = Tokenizer::pad(&ids, 16);
+    let t0 = std::time::Instant::now();
+    let out = session.run("bert_b1_s16", vec![Tensor::i32(vec![1, 16], padded)])?;
+    println!(
+        "run: pooled embedding[0..4] = {:?} ({:.1} ms)",
+        &out[0].as_f32()?[..4],
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // 3. Parallel inference over heterogeneous inputs — the paper's prun.
+    //    Three sequences of very different lengths; the engine weighs each
+    //    part by input size (Listing 1) and runs them in parallel.
+    let parts: Vec<JobPart> = [16usize, 64, 256]
+        .iter()
+        .enumerate()
+        .map(|(i, &len)| {
+            let ids = tok.synthetic(len, i as u64);
+            JobPart::new(
+                format!("bert_b1_s{len}"),
+                vec![Tensor::i32(vec![1, len], Tokenizer::pad(&ids, len))],
+            )
+        })
+        .collect();
+    let t1 = std::time::Instant::now();
+    let outcome = session.prun(parts, PrunOptions::default())?;
+    println!(
+        "prun: 3 parts, thread allocation {:?} (sizes 16/64/256 tokens), {:.1} ms",
+        outcome.allocation,
+        t1.elapsed().as_secs_f64() * 1e3
+    );
+    for (i, (out, rep)) in outcome.outputs.iter().zip(outcome.reports.iter()).enumerate() {
+        println!(
+            "  part {i}: {} threads, exec {:.1} ms, embedding[0] = {:.4}",
+            rep.threads,
+            rep.exec.as_secs_f64() * 1e3,
+            out[0].as_f32()?[0]
+        );
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Video-analytics demo (paper §6's third prun use case): a stream of
+//! synthetic frames with labeled moving objects runs through motion
+//! detection -> per-region recognition, with the recognition phase under
+//! `base` vs `prun`. Labels are checked against ground truth every frame.
+//!
+//! ```bash
+//! cargo run --release --example video_analytics -- --frames 30 --objects 4
+//! ```
+
+use std::sync::Arc;
+
+use dnc_serve::engine::Session;
+use dnc_serve::ocr::OcrMeta;
+use dnc_serve::runtime::{artifacts_dir, Manifest};
+use dnc_serve::simcpu::ocr::OcrVariant;
+use dnc_serve::util::args::Args;
+use dnc_serve::util::prng::Rng;
+use dnc_serve::util::stats::mean;
+use dnc_serve::video::{render_frame, scene, VideoPipeline};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let n_frames = args.usize_or("frames", 30);
+    let n_objects = args.usize_or("objects", 4);
+    let seed = args.u64_or("seed", 17);
+
+    let dir = artifacts_dir();
+    let manifest = Arc::new(Manifest::load(&dir)?);
+    let session = Arc::new(Session::new(manifest, 16, 1)?);
+    let meta = OcrMeta::load(&dir)?;
+    // pre-compile the recognizer buckets so the first variant measured
+    // isn't charged for JIT compilation
+    let warm: Vec<String> = meta
+        .rec_width_buckets
+        .iter()
+        .map(|w| format!("ocr_rec_w{w}"))
+        .collect();
+    session.warmup(&warm.iter().map(String::as_str).collect::<Vec<_>>())?;
+    let mut rng = Rng::new(seed);
+    let sc = scene(&meta, &mut rng, n_objects);
+    println!(
+        "scene: {} objects, labels {:?}\n",
+        sc.tracks.len(),
+        sc.tracks.iter().map(|t| t.label.as_str()).collect::<Vec<_>>()
+    );
+
+    for variant in [
+        OcrVariant::Base,
+        OcrVariant::Prun(dnc_serve::engine::AllocPolicy::PrunDef),
+    ] {
+        let mut pipeline = VideoPipeline::new(Arc::clone(&session), meta.clone());
+        let (mut motion_ms, mut rec_ms) = (Vec::new(), Vec::new());
+        let (mut hits, mut total) = (0usize, 0usize);
+        for t in 0..n_frames {
+            let frame = render_frame(&sc, &meta, t);
+            let res = pipeline.next_frame(&frame, variant)?;
+            if t == 0 {
+                continue; // primes the differencer
+            }
+            motion_ms.push(res.motion_time.as_secs_f64() * 1e3);
+            rec_ms.push(res.recognize_time.as_secs_f64() * 1e3);
+            // label accuracy vs ground truth at this frame's positions
+            for (x, y, label) in &res.objects {
+                total += 1;
+                let truth = sc.tracks.iter().find(|tr| {
+                    let (tx, ty) = tr.position(t, &meta);
+                    tx == *x && ty == *y
+                });
+                if let (Some(tr), Some(l)) = (truth, label) {
+                    if &tr.label == l {
+                        hits += 1;
+                    }
+                }
+            }
+        }
+        println!(
+            "{:9} | motion {:6.2} ms | recognize {:6.2} ms | per-frame {:6.2} ms | labels {}/{} ({:.0}%)",
+            variant.name(),
+            mean(&motion_ms),
+            mean(&rec_ms),
+            mean(&motion_ms) + mean(&rec_ms),
+            hits,
+            total,
+            100.0 * hits as f64 / total.max(1) as f64,
+        );
+    }
+    println!("\n(16-core behaviour for this pipeline: `cargo bench --bench video_pipeline`)");
+    Ok(())
+}

@@ -1,0 +1,264 @@
+"""AOT export: lower L2 graphs to HLO **text** + weight blobs + manifest.
+
+Run once at build time (``make artifacts``); Python never appears on the
+request path. The Rust runtime loads these with
+``HloModuleProto::from_text_file`` -> ``PjRtClient::compile`` -> execute.
+
+Interchange is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md). Lowering uses
+``return_tuple=True``; the Rust side unwraps with ``to_tuple1()``.
+
+Outputs under ``--out`` (default ../artifacts):
+
+    manifest.json           executable index: inputs, outputs, weights, flops
+    ocr_meta.json           glyph codebook / geometry shared with Rust
+    weights/bert.bin        concatenated little-endian f32 weight tensors
+    golden/*.json           golden inputs/outputs for Rust integration tests
+    *.hlo.txt               one per (model, shape-bucket)
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default elides big literals as
+    # `constant({...})`, which parses back as zeros on the Rust side —
+    # silently corrupting any model with non-scalar constants.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "s32"}[np.dtype(dt).name]
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out = out_dir
+        self.models: dict[str, dict] = {}
+        os.makedirs(out_dir, exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+
+    def export(self, name: str, fn, arg_specs, *, weights_ref: str | None = None,
+               flops: int = 0, tags: dict | None = None):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out, fname), "w") as f:
+            f.write(text)
+        out_aval = lowered.out_info
+        # out_info is a pytree matching fn's return (a single array here)
+        out_leaf = jax.tree_util.tree_leaves(out_aval)[0]
+        entry = {
+            "hlo": fname,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+                for s in arg_specs
+            ],
+            "outputs": [
+                {"shape": list(out_leaf.shape), "dtype": _dtype_name(out_leaf.dtype)}
+            ],
+            "flops": int(flops),
+        }
+        if weights_ref:
+            entry["weights"] = weights_ref
+        if tags:
+            entry.update(tags)
+        self.models[name] = entry
+        print(f"  exported {name:24s} ({len(text)//1024:5d} KiB, "
+              f"{time.time()-t0:.1f}s)")
+
+    def write_manifest(self, extra: dict):
+        manifest = {"version": 1, "models": self.models, **extra}
+        with open(os.path.join(self.out, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# BERT export
+# ---------------------------------------------------------------------------
+
+
+def export_bert(ex: Exporter) -> dict:
+    cfg = M.BERT
+    weights = M.init_bert_weights(seed=0, cfg=cfg)
+    specs = M.bert_weight_specs(cfg)
+
+    # weights/bert.bin: concatenated little-endian f32, manifest records slices
+    tensors = []
+    offset = 0
+    with open(os.path.join(ex.out, "weights", "bert.bin"), "wb") as f:
+        for (wname, shape), arr in zip(specs, weights):
+            data = np.ascontiguousarray(arr, dtype="<f4").tobytes()
+            f.write(data)
+            tensors.append(
+                {"name": wname, "shape": list(shape), "offset": offset,
+                 "len": arr.size}
+            )
+            offset += len(data)
+
+    weight_specs = [_spec(s, jnp.float32) for _, s in specs]
+    fwd = functools.partial(M.bert_forward, cfg=cfg)
+
+    for b in M.BATCH_BUCKETS:
+        for s in M.SEQ_BUCKETS:
+            ex.export(
+                f"bert_b{b}_s{s}",
+                fwd,
+                [_spec((b, s), jnp.int32)] + weight_specs,
+                weights_ref="bert",
+                flops=M.bert_flops(b, s, cfg),
+                tags={"family": "bert", "batch": b, "seq": s},
+            )
+
+    # Golden vectors for the Rust integration test (smallest bucket).
+    ids = np.arange(16, dtype=np.int32).reshape(1, 16) % cfg.vocab
+    pooled = np.asarray(M.bert_forward(jnp.asarray(ids), *[jnp.asarray(w) for w in weights]))
+    with open(os.path.join(ex.out, "golden", "bert_b1_s16.json"), "w") as f:
+        json.dump(
+            {"input": ids.flatten().tolist(),
+             "output": [float(x) for x in pooled.flatten()]}, f)
+
+    return {
+        "bert_weights": {
+            "file": "weights/bert.bin",
+            "tensors": tensors,
+        },
+        "bert_config": {
+            "vocab": cfg.vocab, "hidden": cfg.hidden, "layers": cfg.layers,
+            "heads": cfg.heads, "ff": cfg.ff, "max_seq": cfg.max_seq,
+            "seq_buckets": list(M.SEQ_BUCKETS),
+            "batch_buckets": list(M.BATCH_BUCKETS),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# OCR export
+# ---------------------------------------------------------------------------
+
+
+def export_ocr(ex: Exporter):
+    ex.export(
+        "ocr_det",
+        M.detector_forward,
+        [_spec((1, 3, M.IMG_H, M.IMG_W), jnp.float32)],
+        flops=M.det_flops(),
+        tags={"family": "ocr_det"},
+    )
+    for w in M.REC_WIDTH_BUCKETS:
+        ex.export(
+            f"ocr_cls_w{w}",
+            M.classifier_forward,
+            [_spec((1, 3, M.BOX_H, w), jnp.float32)],
+            flops=M.cls_flops(w),
+            tags={"family": "ocr_cls", "width": w},
+        )
+        ex.export(
+            f"ocr_rec_w{w}",
+            M.recognizer_forward,
+            [_spec((1, 3, M.BOX_H, w), jnp.float32)],
+            flops=M.rec_flops(w),
+            tags={"family": "ocr_rec", "width": w},
+        )
+
+    meta = {
+        "charset": M.CHARSET,
+        "glyph_w": M.GLYPH_W,
+        "box_h": M.BOX_H,
+        "marker_slot": M.MARKER_SLOT,
+        "img_h": M.IMG_H,
+        "img_w": M.IMG_W,
+        "pool": M.POOL,
+        "stride": M.STRIDE,
+        "det_thresh": M.DET_THRESH,
+        "det_gain": M.DET_GAIN,
+        "box_ink": M.BOX_INK,
+        "rec_width_buckets": list(M.REC_WIDTH_BUCKETS),
+        "n_classes": M.N_CLASSES,
+        "blank_id": M.BLANK_ID,
+        "marker_id": M.MARKER_ID,
+        "codebook": M.codebook().tolist(),
+    }
+    with open(os.path.join(ex.out, "ocr_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+    # Golden OCR vectors: a synthetic crop with known text, for Rust tests.
+    text = "hello-World_42"
+    w_bucket = 192
+    crop = render_crop(text, w_bucket)
+    logp = np.asarray(M.recognizer_forward(jnp.asarray(crop)))
+    cls = np.asarray(M.classifier_forward(jnp.asarray(crop)))
+    with open(os.path.join(ex.out, "golden", "ocr_rec_w192.json"), "w") as f:
+        json.dump(
+            {"text": text,
+             "crop": crop.flatten().tolist(),
+             "rec_argmax": np.argmax(logp, axis=1).tolist(),
+             "cls_logits": [float(x) for x in cls.flatten()]}, f)
+
+
+def render_crop(text: str, width_bucket: int) -> np.ndarray:
+    """Reference crop renderer (mirrors rust ocr::imagegen), for goldens."""
+    n = len(text)
+    w = (n + 1) * M.GLYPH_W
+    assert w <= width_bucket
+    cols = np.full(w, M.BOX_INK, np.float32)
+    for j, bit in enumerate(M.MARKER_SLOT):
+        if bit:
+            cols[j] = 1.0
+    for ci, ch in enumerate(text):
+        code = M.glyph_code(M.CHARSET.index(ch))
+        for j, bit in enumerate(code):
+            if bit:
+                cols[(ci + 1) * M.GLYPH_W + j] = 1.0
+    crop = np.zeros((1, 3, M.BOX_H, width_bucket), np.float32)
+    crop[0, :, :, :w] = cols[None, None, :]
+    return crop
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", choices=["bert", "ocr"], default=None,
+                    help="export a single family (debugging)")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    ex = Exporter(args.out)
+    extra = {}
+    if args.only in (None, "bert"):
+        extra.update(export_bert(ex))
+    if args.only in (None, "ocr"):
+        export_ocr(ex)
+    ex.write_manifest(extra)
+    print(f"AOT export complete: {len(ex.models)} executables in "
+          f"{time.time()-t0:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""L1 Pallas kernels (build-time only; lowered into the AOT HLO artifacts).
+
+Every kernel has a pure-jnp oracle in :mod:`ref` and a pytest sweep in
+``python/tests/test_kernels.py``.
+"""
+
+from .attention import attention
+from .gelu import gelu
+from .layernorm import layernorm
+from .matmul import linear, matmul
+from .softmax import softmax
+
+__all__ = ["attention", "gelu", "layernorm", "linear", "matmul", "softmax"]

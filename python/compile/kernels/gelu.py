@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: GELU activation (tanh approximation).
+
+Pure elementwise VPU work, tiled the same way as softmax/layernorm so the
+whole transformer MLP block shares one VMEM residency pattern.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_tile
+
+_SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    inner = _SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)
+    o_ref[...] = (0.5 * x * (1.0 + jnp.tanh(inner))).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def gelu(x: jax.Array, br: int | None = None):
+    """GELU on a 2-D array [R, N]."""
+    r, n = x.shape
+    br = br or _pick_tile(r, cap=64)
+    assert r % br == 0, (r, br)
+    return pl.pallas_call(
+        _gelu_kernel,
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: layer normalization over the feature axis.
+
+The paper singles out layernorm as a poorly-scaling operator (its §2.2):
+the mean/variance reduction needs cross-thread coordination on CPU. Here it
+is a row-tiled VPU kernel: each program normalizes (br, H) rows entirely in
+VMEM, so on TPU there is no cross-core traffic at all — the cost shows up
+as serial fraction in the simulator's per-phase profile instead.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_tile
+
+EPS = 1e-5
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + EPS)
+    o_ref[...] = (y * g_ref[...][None, :] + b_ref[...][None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, br: int | None = None):
+    """LayerNorm over the last axis of a 2-D array [R, H]."""
+    r, h = x.shape
+    assert gamma.shape == (h,) and beta.shape == (h,)
+    br = br or _pick_tile(r, cap=64)
+    assert r % br == 0, (r, br)
+    return pl.pallas_call(
+        _layernorm_kernel,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, h), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: tiled matrix multiplication.
+
+TPU-oriented structure: the grid tiles the output over (M, N); each program
+loads an (bm, K) strip of `x` and a (K, bn) strip of `w` into VMEM and
+feeds the MXU with a single `jnp.dot` (f32 accumulation). K is kept
+resident (all our K are <= 512, i.e. a 256 KiB f32 strip at bm=128 —
+comfortably inside the ~16 MiB VMEM budget; see DESIGN.md §Perf for the
+footprint table).
+
+Executed under interpret=True on CPU PJRT (Mosaic custom-calls cannot run
+on the CPU plugin); the BlockSpec schedule is what would drive the real
+HBM<->VMEM pipeline on TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile-size ladder: largest power-of-two tile that divides the dimension.
+# 128 matches the MXU lane width; smaller tiles keep odd shapes legal.
+_TILE_CANDIDATES = (128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def _pick_tile(dim: int, cap: int = 128) -> int:
+    for t in _TILE_CANDIDATES:
+        if t <= cap and dim % t == 0:
+            return t
+    return 1
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # One (bm, bn) output tile: full-K contraction on the MXU.
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(x: jax.Array, w: jax.Array, bm: int | None = None, bn: int | None = None):
+    """``x @ w`` via a Pallas kernel. x: [M, K], w: [K, N] -> [M, N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    bm = bm or _pick_tile(m)
+    bn = bn or _pick_tile(n)
+    assert m % bm == 0 and n % bn == 0, (m, bm, n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array):
+    """Affine layer on 2-D activations: ``x @ w + b``."""
+    return matmul(x, w) + b[None, :]

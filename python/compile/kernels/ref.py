@@ -1,0 +1,52 @@
+"""Pure-jnp correctness oracles for every L1 Pallas kernel.
+
+pytest (python/tests/test_kernels.py) asserts the Pallas implementations
+against these references across a hypothesis-driven shape/dtype sweep.
+Keep these boring: textbook formulas, no tiling, no cleverness.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-5
+_SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
+
+
+def matmul(x, w):
+    return jnp.matmul(x, w)
+
+
+def linear(x, w, b):
+    return jnp.matmul(x, w) + b[None, :]
+
+
+def softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def layernorm(x, gamma, beta):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) / jnp.sqrt(var + EPS)
+    return (y * gamma[None, :] + beta[None, :]).astype(x.dtype)
+
+
+def gelu(x):
+    x32 = x.astype(jnp.float32)
+    inner = _SQRT_2_OVER_PI * (x32 + 0.044715 * x32**3)
+    return (0.5 * x32 * (1.0 + jnp.tanh(inner))).astype(x.dtype)
+
+
+def attention(q, k, v):
+    """q, k, v: [BN, S, Dh]."""
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32), k.astype(jnp.float32))
+    p = softmax(scores * scale)
+    out = jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: numerically-stable row softmax.
+
+Row-tiled: the grid walks blocks of rows; each program keeps a (br, N) tile
+in VMEM and performs the max/exp/sum reduction along the lane dimension —
+on TPU this is VPU work, the canonical "non-scalable operator" tail the
+paper's divide-and-conquer policy exploits (DESIGN.md §3).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_tile
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def softmax(x: jax.Array, br: int | None = None):
+    """Softmax over the last axis of a 2-D array [R, N]."""
+    r, n = x.shape
+    br = br or _pick_tile(r, cap=64)
+    assert r % br == 0, (r, br)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n), x.dtype),
+        interpret=True,
+    )(x)

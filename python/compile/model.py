@@ -1,0 +1,273 @@
+"""L2: JAX model graphs, lowered AOT to HLO-text artifacts (see aot.py).
+
+Two model families, mirroring the paper's two evaluation tracks:
+
+* **BERT-tiny** — a transformer encoder (2 layers, hidden 128, 4 heads,
+  ff 512, vocab 8192) used for the heterogeneous/homogeneous batching
+  experiments (paper §4.2/§4.3, Figures 6-9). Weights are seeded-random
+  *parameters* (not HLO constants) so the HLO text stays small; the Rust
+  runtime feeds them from ``artifacts/weights/bert.bin``.
+
+* **OCR substrate** — a PaddleOCR-equivalent 3-phase pipeline (paper §4.1,
+  Figures 2-5): detector → orientation classifier → recognizer. We have no
+  trained PaddleOCR weights, so the models are *analytically weighted* to
+  be functionally correct on the synthetic glyph images produced by the
+  Rust workload generator (see DESIGN.md §4 substitution table):
+
+  - detector: channel-mean → 8x8/stride-4 average pool → sigmoid gate;
+    text boxes are brighter than the page, so the score map lights up
+    exactly over boxes.
+  - classifier: boxes carry a bright 4-column start marker on the left;
+    a 180°-rotated box has it on the right. Logits = (left-right,
+    right-left) mean-brightness difference.
+  - recognizer: each glyph is an 8-column binary pattern (column 0 bright,
+    columns 1..6 encode the 6-bit char index, column 7 dark). Column-mean
+    features are matched-filtered against the codebook via the Pallas
+    linear kernel -> per-slot logits over (64 chars + blank + marker).
+
+All hot-spot compute in both families routes through the L1 Pallas
+kernels (matmul/linear, layernorm, gelu, softmax, fused attention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import string
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+
+# ---------------------------------------------------------------------------
+# BERT-tiny
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BertConfig:
+    vocab: int = 8192
+    hidden: int = 128
+    layers: int = 2
+    heads: int = 4
+    ff: int = 512
+    max_seq: int = 512
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+
+BERT = BertConfig()
+
+# Shape buckets exported as artifacts. The Rust engine buckets a request of
+# exact length L to the smallest seq >= L and a batch of size k to the
+# smallest batch >= k (excess rows are dummies); the DES simulator uses
+# exact lengths, matching the paper's unpadded prun runs.
+SEQ_BUCKETS = (16, 32, 64, 96, 128, 192, 256, 384, 512)
+BATCH_BUCKETS = (1, 2, 4, 8)
+
+
+def bert_weight_specs(cfg: BertConfig = BERT) -> list[tuple[str, tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the parameter ABI of the artifact.
+
+    Order here IS the positional parameter order after ``token_ids``; the
+    Rust side reads the same order out of manifest.json.
+    """
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("embedding", (cfg.vocab, cfg.hidden)),
+        ("pos_embedding", (cfg.max_seq, cfg.hidden)),
+    ]
+    h, f = cfg.hidden, cfg.ff
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "wq", (h, h)), (p + "bq", (h,)),
+            (p + "wk", (h, h)), (p + "bk", (h,)),
+            (p + "wv", (h, h)), (p + "bv", (h,)),
+            (p + "wo", (h, h)), (p + "bo", (h,)),
+            (p + "ln1_g", (h,)), (p + "ln1_b", (h,)),
+            (p + "ff1_w", (h, f)), (p + "ff1_b", (f,)),
+            (p + "ff2_w", (f, h)), (p + "ff2_b", (h,)),
+            (p + "ln2_g", (h,)), (p + "ln2_b", (h,)),
+        ]
+    specs += [("final_ln_g", (h,)), ("final_ln_b", (h,))]
+    return specs
+
+
+def init_bert_weights(seed: int = 0, cfg: BertConfig = BERT) -> list[np.ndarray]:
+    """Seeded-random weights in spec order (f32)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in bert_weight_specs(cfg):
+        if name.endswith("_g"):
+            w = np.ones(shape, np.float32)
+        elif name.endswith(("_b", "bq", "bk", "bv", "bo")):
+            w = np.zeros(shape, np.float32)
+        else:
+            w = rng.normal(0.0, 0.02, size=shape).astype(np.float32)
+        out.append(w)
+    return out
+
+
+def bert_forward(token_ids: jax.Array, *weights: jax.Array, cfg: BertConfig = BERT):
+    """Encoder forward. token_ids: [B, S] int32 -> pooled [B, H] f32.
+
+    All matmuls / layernorms / gelus / attention go through the L1 Pallas
+    kernels; everything else (embedding gather, residual adds, reshapes)
+    is plain jnp and fuses away in XLA.
+    """
+    names = [n for n, _ in bert_weight_specs(cfg)]
+    w = dict(zip(names, weights))
+    b, s = token_ids.shape
+    h, nh, dh = cfg.hidden, cfg.heads, cfg.head_dim
+
+    x = jnp.take(w["embedding"], token_ids, axis=0)  # [B,S,H]
+    x = x + w["pos_embedding"][None, :s, :]
+    x2 = x.reshape(b * s, h)
+
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        q = kernels.linear(x2, w[p + "wq"], w[p + "bq"])
+        k = kernels.linear(x2, w[p + "wk"], w[p + "bk"])
+        v = kernels.linear(x2, w[p + "wv"], w[p + "bv"])
+
+        def heads(t):  # [B*S,H] -> [B*nh, S, dh]
+            return (
+                t.reshape(b, s, nh, dh).transpose(0, 2, 1, 3).reshape(b * nh, s, dh)
+            )
+
+        att = kernels.attention(heads(q), heads(k), heads(v))
+        att = (
+            att.reshape(b, nh, s, dh).transpose(0, 2, 1, 3).reshape(b * s, h)
+        )
+        att = kernels.linear(att, w[p + "wo"], w[p + "bo"])
+        x2 = kernels.layernorm(x2 + att, w[p + "ln1_g"], w[p + "ln1_b"])
+
+        ff = kernels.gelu(kernels.linear(x2, w[p + "ff1_w"], w[p + "ff1_b"]))
+        ff = kernels.linear(ff, w[p + "ff2_w"], w[p + "ff2_b"])
+        x2 = kernels.layernorm(x2 + ff, w[p + "ln2_g"], w[p + "ln2_b"])
+
+    x2 = kernels.layernorm(x2, w["final_ln_g"], w["final_ln_b"])
+    pooled = jnp.mean(x2.reshape(b, s, h), axis=1)  # [B,H]
+    return pooled
+
+
+def bert_flops(batch: int, seq: int, cfg: BertConfig = BERT) -> int:
+    """Analytic forward FLOPs (2*MACs), used by the cost-model weighting."""
+    h, f = cfg.hidden, cfg.ff
+    per_layer = (
+        4 * 2 * batch * seq * h * h  # q,k,v,o projections
+        + 2 * 2 * batch * seq * seq * h  # QK^T and PV
+        + 2 * 2 * batch * seq * h * f  # ff1 + ff2
+    )
+    return cfg.layers * per_layer
+
+
+# ---------------------------------------------------------------------------
+# OCR substrate: glyph code & geometry shared with the Rust generator
+# ---------------------------------------------------------------------------
+
+CHARSET = string.ascii_lowercase + string.digits + string.ascii_uppercase + "_-"
+assert len(CHARSET) == 64
+
+GLYPH_W = 8          # columns per glyph
+BOX_H = 32           # text box height in pixels
+# Orientation marker occupies slot 0. Column 7 bright is unique to the
+# marker (every glyph has column 7 dark), so it can never collide with a
+# character code in the matched filter.
+MARKER_SLOT = [1, 1, 1, 1, 0, 0, 0, 1]
+CLS_EDGE = 0.9  # upright boxes have a fully-bright 4-column left edge
+IMG_H, IMG_W = 192, 256
+POOL = 8             # detector pooling window
+STRIDE = 4           # detector pooling stride
+DET_THRESH = 0.15    # brightness gate inside sigmoid
+DET_GAIN = 24.0      # sigmoid sharpness
+BOX_INK = 0.25       # "paper" brightness inside a text box (dark columns)
+REC_WIDTH_BUCKETS = (64, 128, 192, 256, 320)
+N_CLASSES = len(CHARSET) + 2  # + blank + marker
+BLANK_ID = len(CHARSET)
+MARKER_ID = len(CHARSET) + 1
+
+
+def glyph_code(char_index: int) -> list[int]:
+    """8-column binary pattern for charset[char_index]."""
+    assert 0 <= char_index < len(CHARSET)
+    bits = [(char_index >> b) & 1 for b in range(6)]  # LSB-first, cols 1..6
+    return [1] + bits + [0]
+
+
+def codebook() -> np.ndarray:
+    """[N_CLASSES, 8] binary matched-filter codebook (blank row = zeros)."""
+    rows = [glyph_code(i) for i in range(len(CHARSET))]
+    rows.append([0] * GLYPH_W)        # blank
+    rows.append(list(MARKER_SLOT))    # marker
+    return np.asarray(rows, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# OCR models
+# ---------------------------------------------------------------------------
+
+
+def detector_forward(img: jax.Array):
+    """img: [1, 3, IMG_H, IMG_W] f32 in [0,1] -> score map [1, H/4, W/4].
+
+    Analytic text detector: local mean brightness gated by a sharp sigmoid.
+    Text boxes have mean brightness >= BOX_INK; the page is ~0.
+    """
+    x = jnp.mean(img[0], axis=0)  # [H, W]
+    pooled = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (POOL, POOL), (STRIDE, STRIDE), "SAME"
+    ) / float(POOL * POOL)
+    score = jax.nn.sigmoid(DET_GAIN * (pooled - DET_THRESH))
+    return score[None, :, :]
+
+
+def classifier_forward(crop: jax.Array):
+    """crop: [1, 3, BOX_H, W] -> [1, 2] logits (upright, rotated-180).
+
+    The bright start marker fills the left 4 columns of an upright box;
+    a 180°-rotated box starts with glyph-tail columns instead (mean
+    brightness <= 0.8125 given BOX_INK=0.25). Only the left edge is used
+    because crops are right-padded to the width bucket with zeros.
+    """
+    x = jnp.mean(crop[0], axis=0)  # [BOX_H, W]
+    left = jnp.mean(x[:, :4])
+    d = (left - CLS_EDGE) * 16.0
+    return jnp.stack([d, -d])[None, :]
+
+
+def recognizer_forward(crop: jax.Array):
+    """crop: [1, 3, BOX_H, W] -> [W/GLYPH_W, N_CLASSES] per-slot log-probs.
+
+    Column-mean features -> per-slot 8-vector -> Pallas linear against the
+    codebook (logit_i = 2*f.c_i - |c_i|, maximized by the true glyph), then
+    the Pallas softmax for calibrated per-slot probabilities.
+    """
+    _, _, bh, w = crop.shape
+    assert bh == BOX_H and w % GLYPH_W == 0
+    slots = w // GLYPH_W
+    cols = jnp.mean(crop[0], axis=(0, 1))  # [W] column means
+    feats = cols.reshape(slots, GLYPH_W)
+    cb = jnp.asarray(codebook())  # [N_CLASSES, 8]
+    wmat = (2.0 * cb).T  # [8, N_CLASSES]
+    bias = -jnp.sum(cb, axis=1)  # -|c_i| for binary codes
+    logits = kernels.linear(feats, wmat, bias)  # [slots, N_CLASSES]
+    probs = kernels.softmax(logits)
+    return jnp.log(probs + 1e-9)
+
+
+def det_flops() -> int:
+    # pool-window multiply-adds over the output grid
+    return (IMG_H // STRIDE) * (IMG_W // STRIDE) * POOL * POOL * 2
+
+
+def cls_flops(width: int) -> int:
+    return 3 * BOX_H * width * 2  # channel mean + column means
+
+
+def rec_flops(width: int) -> int:
+    slots = width // GLYPH_W
+    return 3 * BOX_H * width * 2 + 2 * slots * GLYPH_W * N_CLASSES

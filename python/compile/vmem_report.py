@@ -1,0 +1,98 @@
+"""L1 performance analysis: static VMEM footprint + MXU utilization
+estimates for every Pallas kernel at the shapes the models use.
+
+Pallas under ``interpret=True`` gives CPU-numpy timings that say nothing
+about TPU performance, so (per DESIGN.md §9) L1 optimization is
+*structural*: keep each grid step's working set comfortably inside VMEM
+(~16 MiB/core budget, we target <50%) and keep matmul tiles MXU-shaped
+(multiples of the 128x128 systolic array; f32 here, bf16 on real TPU
+doubles throughput). Run:
+
+    cd python && python -m compile.vmem_report
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from . import model as M
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes/core (v4-class)
+MXU = 128  # systolic array edge
+
+
+@dataclasses.dataclass
+class KernelCase:
+    kernel: str
+    shape_desc: str
+    grid: int
+    vmem_bytes: int
+    mxu_note: str
+
+    def row(self) -> str:
+        pct = 100.0 * self.vmem_bytes / VMEM_BUDGET
+        return (
+            f"| {self.kernel:9} | {self.shape_desc:26} | {self.grid:4} "
+            f"| {self.vmem_bytes/1024:8.1f} KiB | {pct:5.1f}% | {self.mxu_note} |"
+        )
+
+
+def _tile(dim: int, cap: int = 128) -> int:
+    for t in (128, 64, 32, 16, 8, 4, 2, 1):
+        if t <= cap and dim % t == 0:
+            return t
+    return 1
+
+
+def matmul_case(m: int, k: int, n: int, label: str) -> KernelCase:
+    bm, bn = _tile(m), _tile(n)
+    vmem = 4 * (bm * k + k * bn + bm * bn)  # x strip + w strip + out tile
+    util = min(bm, MXU) * min(bn, MXU) / (MXU * MXU)
+    note = f"tile {bm}x{k}x{bn}; MXU occupancy ~{util:.0%}"
+    return KernelCase("matmul", label, (m // bm) * (n // bn), vmem, note)
+
+
+def rowwise_case(kernel: str, r: int, n: int, label: str, copies: int = 2) -> KernelCase:
+    br = _tile(r, cap=64)
+    vmem = 4 * copies * br * n
+    return KernelCase(kernel, label, r // br, vmem, f"VPU row-tile {br}x{n}")
+
+
+def attention_case(bn: int, s: int, dh: int, label: str) -> KernelCase:
+    # q,k,v,o strips + s*s score matrix, all f32
+    vmem = 4 * (4 * s * dh + s * s)
+    util = min(dh, MXU) / MXU
+    note = f"scores {s}x{s} resident; QK^T/PV MXU occupancy ~{util:.0%} (dh={dh})"
+    return KernelCase("attention", label, bn, vmem, note)
+
+
+def cases() -> list[KernelCase]:
+    cfg = M.BERT
+    out: list[KernelCase] = []
+    for b, s in [(1, 16), (1, 512), (8, 512)]:
+        r = b * s
+        out.append(matmul_case(r, cfg.hidden, cfg.hidden, f"qkvo b{b} s{s} [{r}x128x128]"))
+        out.append(matmul_case(r, cfg.hidden, cfg.ff, f"ff1 b{b} s{s} [{r}x128x512]"))
+        out.append(attention_case(b * cfg.heads, s, cfg.head_dim, f"b{b} s{s}"))
+        out.append(rowwise_case("layernorm", r, cfg.hidden, f"b{b} s{s} [{r}x128]"))
+        out.append(rowwise_case("softmax", r, cfg.ff, f"b{b} s{s} [{r}x512]"))
+    out.append(matmul_case(40, 8, 66, "ocr rec codebook [40x8x66]"))
+    return out
+
+
+def main() -> None:
+    print("# L1 kernel VMEM/MXU report (static; TPU-targeted structure)\n")
+    print(f"VMEM budget {VMEM_BUDGET//1024//1024} MiB/core; target <50% per grid step\n")
+    print("| kernel    | shape                      | grid | VMEM/step    | budget | MXU/VPU note |")
+    print("|-----------|----------------------------|------|--------------|--------|--------------|")
+    worst = 0.0
+    for c in cases():
+        print(c.row())
+        worst = max(worst, c.vmem_bytes / VMEM_BUDGET)
+    print(f"\nworst-case VMEM occupancy: {100*worst:.1f}% of budget")
+    assert worst < 0.5, "a kernel tile exceeds the 50% VMEM target"
+    print("all kernel tiles within the 50% VMEM target ✓")
+
+
+if __name__ == "__main__":
+    main()

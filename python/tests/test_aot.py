@@ -1,0 +1,139 @@
+"""AOT pipeline tests: HLO text emission, manifest schema, weight blob."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrips_through_xla_client():
+    """The emitted HLO text must parse back as a module (what Rust does)."""
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_hlo_text_contains_pallas_lowering():
+    """A kernel lowered with interpret=True must produce plain HLO (no
+    Mosaic custom-calls the CPU plugin can't run)."""
+    from compile import kernels
+
+    lowered = jax.jit(lambda x, w: (kernels.matmul(x, w),)).lower(
+        jax.ShapeDtypeStruct((16, 16), jnp.float32),
+        jax.ShapeDtypeStruct((16, 16), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+def test_render_crop_matches_layout():
+    crop = aot.render_crop("ab", 64)
+    assert crop.shape == (1, 3, M.BOX_H, 64)
+    cols = crop[0, 0, 0, :]  # any row: pattern is column-constant
+    # marker slot
+    for j, bit in enumerate(M.MARKER_SLOT):
+        assert cols[j] == (1.0 if bit else M.BOX_INK)
+    # first glyph 'a' = index 0 -> code [1,0,0,0,0,0,0,0]
+    assert cols[M.GLYPH_W] == 1.0
+    assert np.all(cols[M.GLYPH_W + 1 : 2 * M.GLYPH_W] == M.BOX_INK)
+    # padding beyond the text is zero
+    assert np.all(cols[3 * M.GLYPH_W :] == 0.0)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_buckets_present(self, manifest):
+        models = manifest["models"]
+        for b in M.BATCH_BUCKETS:
+            for s in M.SEQ_BUCKETS:
+                assert f"bert_b{b}_s{s}" in models
+        assert "ocr_det" in models
+        for w in M.REC_WIDTH_BUCKETS:
+            assert f"ocr_cls_w{w}" in models
+            assert f"ocr_rec_w{w}" in models
+
+    def test_hlo_files_exist_and_parse_header(self, manifest):
+        for name, entry in manifest["models"].items():
+            path = os.path.join(ART, entry["hlo"])
+            assert os.path.exists(path), name
+            with open(path) as f:
+                head = f.read(4096)
+            assert "HloModule" in head, name
+
+    def test_no_elided_constants(self, manifest):
+        """`constant({...})` means as_hlo_text elided a large literal —
+        it parses back as zeros on the Rust side and silently corrupts
+        the model (this bit us: see aot.to_hlo_text)."""
+        for name, entry in manifest["models"].items():
+            path = os.path.join(ART, entry["hlo"])
+            with open(path) as f:
+                text = f.read()
+            assert "constant({...})" not in text, name
+
+    def test_weight_blob_matches_manifest(self, manifest):
+        info = manifest["bert_weights"]
+        blob = os.path.join(ART, info["file"])
+        size = os.path.getsize(blob)
+        total = sum(t["len"] * 4 for t in info["tensors"])
+        assert size == total
+        # offsets are contiguous and ordered
+        off = 0
+        for t in info["tensors"]:
+            assert t["offset"] == off
+            off += t["len"] * 4
+        # blob content round-trips against init_bert_weights(seed=0)
+        weights = M.init_bert_weights(seed=0)
+        with open(blob, "rb") as f:
+            data = f.read()
+        for t, w in zip(info["tensors"], weights):
+            arr = np.frombuffer(
+                data, "<f4", count=t["len"], offset=t["offset"]
+            ).reshape(t["shape"])
+            np.testing.assert_array_equal(arr, w.reshape(t["shape"]))
+
+    def test_manifest_input_shapes(self, manifest):
+        e = manifest["models"]["bert_b2_s64"]
+        assert e["inputs"][0] == {"shape": [2, 64], "dtype": "s32"}
+        n_weights = len(M.bert_weight_specs())
+        assert len(e["inputs"]) == 1 + n_weights
+        assert e["outputs"][0]["shape"] == [2, M.BERT.hidden]
+
+    def test_flops_recorded(self, manifest):
+        e = manifest["models"]["bert_b1_s128"]
+        assert e["flops"] == M.bert_flops(1, 128)
+
+    def test_ocr_meta_schema(self):
+        with open(os.path.join(ART, "ocr_meta.json")) as f:
+            meta = json.load(f)
+        assert meta["charset"] == M.CHARSET
+        assert meta["n_classes"] == M.N_CLASSES
+        cb = np.asarray(meta["codebook"], np.float32)
+        np.testing.assert_array_equal(cb, M.codebook())
+
+    def test_golden_bert_reproducible(self, manifest):
+        with open(os.path.join(ART, "golden", "bert_b1_s16.json")) as f:
+            g = json.load(f)
+        ids = jnp.asarray(np.asarray(g["input"], np.int32).reshape(1, 16))
+        weights = [jnp.asarray(w) for w in M.init_bert_weights(seed=0)]
+        out = np.asarray(M.bert_forward(ids, *weights)).flatten()
+        np.testing.assert_allclose(out, np.asarray(g["output"]), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,160 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (and dtypes for the shape-agnostic kernels);
+assert_allclose is the core signal — if these pass, the AOT artifacts
+compute the same numbers as the reference model.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Dimensions that appear in the real models (multiples of 8, plus odd tiles
+# the _pick_tile ladder has to handle).
+DIMS = st.sampled_from([2, 4, 8, 16, 24, 40, 64, 66, 128])
+SMALL_DIMS = st.sampled_from([2, 4, 8, 16, 32])
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+class TestMatmul:
+    @settings(max_examples=20, deadline=None)
+    @given(m=DIMS, k=SMALL_DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, k, n, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x, w = rand(k1, (m, k)), rand(k2, (k, n))
+        np.testing.assert_allclose(
+            kernels.matmul(x, w), ref.matmul(x, w), rtol=1e-5, atol=1e-5
+        )
+
+    def test_explicit_tiles(self):
+        key = jax.random.PRNGKey(0)
+        x, w = rand(key, (128, 64)), rand(key, (64, 128))
+        for bm in (8, 32, 128):
+            for bn in (16, 64, 128):
+                np.testing.assert_allclose(
+                    kernels.matmul(x, w, bm=bm, bn=bn),
+                    ref.matmul(x, w),
+                    rtol=1e-5,
+                    atol=1e-5,
+                )
+
+    def test_bf16_inputs(self):
+        key = jax.random.PRNGKey(1)
+        x = rand(key, (16, 16), jnp.bfloat16)
+        w = rand(key, (16, 16), jnp.bfloat16)
+        got = kernels.matmul(x, w).astype(jnp.float32)
+        want = ref.matmul(x, w).astype(jnp.float32)
+        np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+    def test_linear_bias(self):
+        key = jax.random.PRNGKey(2)
+        x, w = rand(key, (24, 8)), rand(key, (8, 66))
+        b = rand(key, (66,))
+        np.testing.assert_allclose(
+            kernels.linear(x, w, b), ref.linear(x, w, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_rejects_mismatched_contraction(self):
+        x = jnp.zeros((4, 8))
+        w = jnp.zeros((16, 4))
+        with pytest.raises(AssertionError):
+            kernels.matmul(x, w)
+
+
+class TestSoftmax:
+    @settings(max_examples=20, deadline=None)
+    @given(r=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, r, n, seed):
+        x = rand(jax.random.PRNGKey(seed), (r, n), scale=3.0)
+        np.testing.assert_allclose(
+            kernels.softmax(x), ref.softmax(x), rtol=1e-5, atol=1e-6
+        )
+
+    def test_rows_sum_to_one(self):
+        x = rand(jax.random.PRNGKey(0), (32, 66), scale=5.0)
+        s = jnp.sum(kernels.softmax(x), axis=-1)
+        np.testing.assert_allclose(s, jnp.ones(32), rtol=1e-5)
+
+    def test_stability_large_logits(self):
+        # Stable softmax must not overflow for big inputs.
+        x = jnp.full((8, 16), 1e4, jnp.float32)
+        out = np.asarray(kernels.softmax(x))
+        assert np.all(np.isfinite(out))
+        np.testing.assert_allclose(out.sum(axis=-1), np.ones(8), rtol=1e-5)
+
+
+class TestLayernorm:
+    @settings(max_examples=20, deadline=None)
+    @given(r=DIMS, h=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, r, h, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = rand(k1, (r, h), scale=2.0)
+        g = rand(k2, (h,)) + 1.0
+        b = rand(k3, (h,))
+        np.testing.assert_allclose(
+            kernels.layernorm(x, g, b), ref.layernorm(x, g, b), rtol=1e-4, atol=1e-5
+        )
+
+    def test_unit_gamma_zero_beta_moments(self):
+        x = rand(jax.random.PRNGKey(3), (16, 128), scale=4.0)
+        y = np.asarray(kernels.layernorm(x, jnp.ones(128), jnp.zeros(128)))
+        np.testing.assert_allclose(y.mean(axis=-1), np.zeros(16), atol=1e-5)
+        np.testing.assert_allclose(y.std(axis=-1), np.ones(16), rtol=1e-2)
+
+
+class TestGelu:
+    @settings(max_examples=20, deadline=None)
+    @given(r=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, r, n, seed):
+        x = rand(jax.random.PRNGKey(seed), (r, n), scale=3.0)
+        np.testing.assert_allclose(
+            kernels.gelu(x), ref.gelu(x), rtol=1e-5, atol=1e-6
+        )
+
+    def test_matches_jax_nn(self):
+        x = rand(jax.random.PRNGKey(4), (16, 64), scale=2.0)
+        np.testing.assert_allclose(
+            kernels.gelu(x), jax.nn.gelu(x, approximate=True), rtol=1e-4, atol=1e-5
+        )
+
+
+class TestAttention:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        bn=st.sampled_from([1, 2, 4, 8]),
+        s=st.sampled_from([4, 16, 32, 64]),
+        dh=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, bn, s, dh, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q, k, v = rand(k1, (bn, s, dh)), rand(k2, (bn, s, dh)), rand(k3, (bn, s, dh))
+        np.testing.assert_allclose(
+            kernels.attention(q, k, v), ref.attention(q, k, v), rtol=1e-4, atol=1e-5
+        )
+
+    def test_uniform_keys_average_values(self):
+        # With identical keys, attention weights are uniform -> output is
+        # the mean of V rows.
+        q = rand(jax.random.PRNGKey(0), (2, 8, 16))
+        k = jnp.ones((2, 8, 16))
+        v = rand(jax.random.PRNGKey(1), (2, 8, 16))
+        got = np.asarray(kernels.attention(q, k, v))
+        want = np.broadcast_to(np.asarray(v).mean(axis=1, keepdims=True), got.shape)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_long_sequence_512(self):
+        q = rand(jax.random.PRNGKey(5), (4, 512, 32), scale=0.5)
+        np.testing.assert_allclose(
+            kernels.attention(q, q, q), ref.attention(q, q, q), rtol=1e-4, atol=1e-4
+        )

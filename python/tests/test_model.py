@@ -1,0 +1,150 @@
+"""L2 model-level tests: shapes, determinism, and OCR functional checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.aot import render_crop
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def bert_weights():
+    return [jnp.asarray(w) for w in M.init_bert_weights(seed=0)]
+
+
+class TestBert:
+    def test_weight_specs_cover_init(self):
+        specs = M.bert_weight_specs()
+        weights = M.init_bert_weights()
+        assert len(specs) == len(weights)
+        for (name, shape), w in zip(specs, weights):
+            assert tuple(w.shape) == shape, name
+
+    def test_weight_init_deterministic(self):
+        a = M.init_bert_weights(seed=0)
+        b = M.init_bert_weights(seed=0)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+        c = M.init_bert_weights(seed=1)
+        assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+    @settings(max_examples=6, deadline=None)
+    @given(b=st.sampled_from([1, 2]), s=st.sampled_from([16, 32, 64]))
+    def test_forward_shapes(self, b, s, bert_weights):
+        ids = jnp.zeros((b, s), jnp.int32)
+        out = M.bert_forward(ids, *bert_weights)
+        assert out.shape == (b, M.BERT.hidden)
+        assert np.all(np.isfinite(np.asarray(out)))
+
+    def test_forward_deterministic(self, bert_weights):
+        ids = jnp.arange(32, dtype=jnp.int32).reshape(2, 16) % M.BERT.vocab
+        a = np.asarray(M.bert_forward(ids, *bert_weights))
+        b = np.asarray(M.bert_forward(ids, *bert_weights))
+        np.testing.assert_array_equal(a, b)
+
+    def test_batch_rows_independent(self, bert_weights):
+        """Row i of a batch must equal the same sequence run alone —
+        the property prun exploits when splitting a batch."""
+        ids = (jnp.arange(2 * 16, dtype=jnp.int32).reshape(2, 16) * 37) % M.BERT.vocab
+        both = np.asarray(M.bert_forward(ids, *bert_weights))
+        row0 = np.asarray(M.bert_forward(ids[:1], *bert_weights))
+        row1 = np.asarray(M.bert_forward(ids[1:], *bert_weights))
+        np.testing.assert_allclose(both[0], row0[0], rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(both[1], row1[0], rtol=1e-4, atol=1e-5)
+
+    def test_flops_monotone(self):
+        f = [M.bert_flops(1, s) for s in M.SEQ_BUCKETS]
+        assert all(a < b for a, b in zip(f, f[1:]))
+        assert M.bert_flops(4, 128) == 4 * M.bert_flops(1, 128)
+
+
+class TestGlyphCode:
+    def test_codes_unique(self):
+        codes = {tuple(M.glyph_code(i)) for i in range(len(M.CHARSET))}
+        assert len(codes) == len(M.CHARSET)
+
+    def test_codes_disjoint_from_marker_and_blank(self):
+        marker = tuple(M.MARKER_SLOT)
+        blank = tuple([0] * M.GLYPH_W)
+        for i in range(len(M.CHARSET)):
+            c = tuple(M.glyph_code(i))
+            assert c != marker and c != blank
+            # column 7 dark distinguishes every glyph from the marker
+            assert c[7] == 0
+
+    def test_codebook_shape(self):
+        cb = M.codebook()
+        assert cb.shape == (M.N_CLASSES, M.GLYPH_W)
+        assert np.all((cb == 0) | (cb == 1))
+
+
+class TestDetector:
+    def test_lights_up_over_box(self):
+        img = np.zeros((1, 3, M.IMG_H, M.IMG_W), np.float32)
+        img[0, :, 40:72, 60:156] = 1.0  # a bright 32x96 box
+        score = np.asarray(M.detector_forward(jnp.asarray(img)))[0]
+        # centre of the box in score-map coords
+        assert score[(40 + 16) // M.STRIDE, (60 + 48) // M.STRIDE] > 0.9
+        assert score[5, 5] < 0.1  # empty page corner
+
+    def test_blank_page_all_low(self):
+        img = np.zeros((1, 3, M.IMG_H, M.IMG_W), np.float32)
+        score = np.asarray(M.detector_forward(jnp.asarray(img)))
+        assert score.max() < 0.1
+
+
+class TestClassifier:
+    @settings(max_examples=10, deadline=None)
+    @given(st.text(alphabet=M.CHARSET, min_size=3, max_size=20))
+    def test_upright_vs_flipped(self, text):
+        w_bucket = next(
+            b for b in M.REC_WIDTH_BUCKETS if b >= (len(text) + 1) * M.GLYPH_W
+        )
+        crop = render_crop(text, w_bucket)
+        width = (len(text) + 1) * M.GLYPH_W
+        flipped = crop.copy()
+        flipped[0, :, :, :width] = crop[0, :, ::-1, width - 1 :: -1]
+        up = np.asarray(M.classifier_forward(jnp.asarray(crop)))[0]
+        fl = np.asarray(M.classifier_forward(jnp.asarray(flipped)))[0]
+        assert up[0] > up[1], text
+        assert fl[1] > fl[0], text
+
+
+class TestRecognizer:
+    @settings(max_examples=15, deadline=None)
+    @given(st.text(alphabet=M.CHARSET, min_size=1, max_size=20))
+    def test_exact_decode(self, text):
+        w_bucket = next(
+            b for b in M.REC_WIDTH_BUCKETS if b >= (len(text) + 1) * M.GLYPH_W
+        )
+        crop = render_crop(text, w_bucket)
+        logp = np.asarray(M.recognizer_forward(jnp.asarray(crop)))
+        ids = np.argmax(logp, axis=1)
+        assert ids[0] == M.MARKER_ID
+        decoded = "".join(
+            M.CHARSET[i] for i in ids[1 : len(text) + 1] if i < len(M.CHARSET)
+        )
+        assert decoded == text
+        assert all(i == M.BLANK_ID for i in ids[len(text) + 1 :])
+
+    def test_decode_with_noise(self):
+        rng = np.random.default_rng(0)
+        text = "noise-test-42"
+        crop = render_crop(text, 192)
+        noisy = np.clip(crop + rng.uniform(-0.05, 0.05, crop.shape), 0, 1)
+        logp = np.asarray(M.recognizer_forward(jnp.asarray(noisy.astype(np.float32))))
+        ids = np.argmax(logp, axis=1)
+        decoded = "".join(
+            M.CHARSET[i] for i in ids[1 : len(text) + 1] if i < len(M.CHARSET)
+        )
+        assert decoded == text
+
+    def test_log_probs_normalized(self):
+        crop = render_crop("abc", 64)
+        logp = np.asarray(M.recognizer_forward(jnp.asarray(crop)))
+        np.testing.assert_allclose(np.exp(logp).sum(axis=1), 1.0, rtol=1e-4)

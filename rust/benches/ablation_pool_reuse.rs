@@ -1,0 +1,34 @@
+//! Ablation (paper §4.1 future work): "reusing thread pools between prun
+//! invocations". Compares prun-def with cold (per-invocation) pools vs
+//! warm (reused) pools across box counts — quantifying the overhead the
+//! paper observed in the short classification phase.
+
+use dnc_serve::bench::table::{ms, Table};
+use dnc_serve::engine::allocator::AllocPolicy;
+use dnc_serve::simcpu::calib::PAPER_CORES;
+use dnc_serve::simcpu::ocr::{sim_image, sim_image_pool_reuse, OcrVariant};
+
+fn main() {
+    let v = OcrVariant::Prun(AllocPolicy::PrunDef);
+    let mut t = Table::new(
+        "Ablation A3 — prun-def with cold vs reused worker pools @16 cores (ms)",
+        &["boxes", "cls cold", "cls warm", "rec cold", "rec warm", "total saved"],
+    );
+    for n in [1usize, 2, 4, 6, 9, 12] {
+        let widths = vec![96usize; n];
+        let cold = sim_image(&widths, v, PAPER_CORES);
+        let warm = sim_image_pool_reuse(&widths, v, PAPER_CORES);
+        t.row(vec![
+            n.to_string(),
+            ms(cold.cls_ms),
+            ms(warm.cls_ms),
+            ms(cold.rec_ms),
+            ms(warm.rec_ms),
+            format!("{:.1} ms ({:.1}%)",
+                cold.total_ms() - warm.total_ms(),
+                100.0 * (cold.total_ms() - warm.total_ms()) / cold.total_ms()),
+        ]);
+    }
+    t.note("pool creation hurts most at small box counts (large per-part pools) and in the short cls phase — the paper's §4.1 observation");
+    t.print();
+}

@@ -1,0 +1,60 @@
+//! E9: microbenchmarks of the paper's allocator (Listing 1) and the DES —
+//! the L3 decision-making hot path. Hand-rolled harness (criterion is not
+//! available offline): warm up, then report ns/op over fixed iteration
+//! counts with black_box to defeat DCE.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use dnc_serve::engine::allocator::{allocate, AllocPolicy};
+use dnc_serve::simcpu::{simulate, ScalProfile, SimPart};
+use dnc_serve::util::prng::Rng;
+
+fn bench(name: &str, iters: u64, mut f: impl FnMut()) {
+    // warmup
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{name:44} {ns:10.1} ns/op   ({iters} iters)");
+}
+
+fn main() {
+    println!("# allocator + DES microbenchmarks\n");
+    let mut rng = Rng::new(42);
+
+    for &k in &[2usize, 8, 64] {
+        let sizes: Vec<usize> = (0..k).map(|_| rng.usize_in(16, 512)).collect();
+        bench(&format!("allocate prun-def k={k} C=16"), 2_000_000 / k as u64, || {
+            black_box(allocate(black_box(&sizes), 16, AllocPolicy::PrunDef));
+        });
+    }
+    let sizes: Vec<usize> = (0..8).map(|_| rng.usize_in(16, 512)).collect();
+    for policy in [AllocPolicy::PrunOne, AllocPolicy::PrunEq] {
+        bench(&format!("allocate {} k=8 C=16", policy.name()), 500_000, || {
+            black_box(allocate(black_box(&sizes), 16, policy));
+        });
+    }
+
+    let prof = ScalProfile::new(0.1, 1.0);
+    for &k in &[4usize, 32] {
+        let parts: Vec<SimPart> =
+            (0..k).map(|_| SimPart::new(rng.f64_in(1.0, 300.0), prof)).collect();
+        let alloc = allocate(
+            &parts.iter().map(|p| p.t1_ms as usize).collect::<Vec<_>>(),
+            16,
+            AllocPolicy::PrunDef,
+        );
+        bench(&format!("des simulate k={k} C=16"), 200_000 / k as u64, || {
+            black_box(simulate(black_box(&parts), &alloc, 16));
+        });
+    }
+
+    bench("scal_profile time_ms", 5_000_000, || {
+        black_box(prof.time_ms(black_box(123.4), black_box(7)));
+    });
+}

@@ -1,0 +1,5 @@
+//! E1: regenerate paper Figure 2 — PaddleOCR base latency vs threads,
+//! stacked by pipeline phase (calibrated simulator, DESIGN.md §6).
+fn main() {
+    dnc_serve::bench::figures::fig2(&[1, 2, 4, 8, 16]).print();
+}

@@ -1,0 +1,5 @@
+//! E2: regenerate paper Figure 3 — detected-box-count distribution of
+//! the 500-image evaluation dataset (workload generator).
+fn main() {
+    dnc_serve::bench::figures::fig3().print();
+}

@@ -1,0 +1,7 @@
+//! E3: regenerate paper Figure 4(a,b,c) — cls/rec/total latency by box
+//! count for base vs prun-def vs prun-1 vs prun-eq at 16 cores.
+fn main() {
+    dnc_serve::bench::figures::fig4("cls").print();
+    dnc_serve::bench::figures::fig4("rec").print();
+    dnc_serve::bench::figures::fig4("total").print();
+}

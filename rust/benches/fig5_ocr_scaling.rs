@@ -1,0 +1,4 @@
+//! E4: regenerate paper Figure 5 — OCR latency vs threads, base vs prun.
+fn main() {
+    dnc_serve::bench::figures::fig5(&[1, 2, 4, 8, 16]).print();
+}

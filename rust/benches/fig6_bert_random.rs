@@ -1,0 +1,9 @@
+//! E5: regenerate paper Figure 6 — BERT throughput on random-length
+//! batches (1000 repetitions per batch size, mean ± std).
+fn main() {
+    let reps = std::env::var("DNC_FIG6_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1000);
+    dnc_serve::bench::figures::fig6(reps).print();
+}

@@ -1,0 +1,4 @@
+//! E6: regenerate paper Figure 7 — BERT throughput on preset-length mixes.
+fn main() {
+    dnc_serve::bench::figures::fig7().print();
+}

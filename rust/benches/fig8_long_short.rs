@@ -1,0 +1,5 @@
+//! E7: regenerate paper Figure 8 — 1 long + X short sequences: throughput
+//! and the thread count prun-def gives the long sequence.
+fn main() {
+    dnc_serve::bench::figures::fig8().print();
+}

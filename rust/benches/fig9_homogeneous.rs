@@ -1,0 +1,5 @@
+//! E8: regenerate paper Figure 9 — homogeneous batches of 4: no-batch vs
+//! batch vs prun.
+fn main() {
+    dnc_serve::bench::figures::fig9().print();
+}

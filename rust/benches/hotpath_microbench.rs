@@ -1,0 +1,139 @@
+//! E10: microbenchmarks of L3 request-path components outside the model
+//! execute itself: tokenizer, JSON codec, image generation, detection
+//! post-processing, histogram recording, core leasing, and (if artifacts
+//! exist) a real single-inference PJRT hot-path measurement.
+
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::Instant;
+
+use dnc_serve::engine::CoreLease;
+use dnc_serve::metrics::Histogram;
+use dnc_serve::nlp::Tokenizer;
+use dnc_serve::ocr::{detect, generate, GenOptions, OcrMeta};
+use dnc_serve::runtime::{artifacts_dir, Manifest, Tensor};
+use dnc_serve::util::json::Json;
+use dnc_serve::util::prng::Rng;
+
+fn bench(name: &str, iters: u64, mut f: impl FnMut()) {
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    if ns > 100_000.0 {
+        println!("{name:44} {:10.1} us/op   ({iters} iters)", ns / 1000.0);
+    } else {
+        println!("{name:44} {ns:10.1} ns/op   ({iters} iters)");
+    }
+}
+
+fn main() {
+    println!("# L3 hot-path microbenchmarks\n");
+
+    let tok = Tokenizer::new(8192);
+    let text = "the quick brown fox jumps over the lazy dog again and again";
+    bench("tokenizer encode (12 words)", 500_000, || {
+        black_box(tok.encode(black_box(text), 128));
+    });
+    let ids = tok.synthetic(256, 1);
+    bench("tokenizer pad to 512", 500_000, || {
+        black_box(Tokenizer::pad(black_box(&ids), 512));
+    });
+
+    let req = r#"{"op":"embed_tokens","id":42,"tokens":[1,2,3,4,5,6,7,8,9,10,11,12,13,14,15,16]}"#;
+    bench("json parse request", 500_000, || {
+        black_box(Json::parse(black_box(req)).unwrap());
+    });
+    let parsed = Json::parse(req).unwrap();
+    bench("json serialize request", 500_000, || {
+        black_box(parsed.to_string());
+    });
+
+    let hist = Histogram::new();
+    bench("histogram record", 5_000_000, || {
+        hist.record_us(black_box(1234));
+    });
+
+    let lease = CoreLease::new(16);
+    bench("core lease acquire+release (uncontended)", 1_000_000, || {
+        black_box(lease.acquire(black_box(4)));
+    });
+
+    let dir = artifacts_dir();
+    if !dir.join("ocr_meta.json").exists() {
+        println!("\n(artifacts not built; skipping imagegen/detect/PJRT benches)");
+        return;
+    }
+    let meta = OcrMeta::load(&dir).unwrap();
+    let mut rng = Rng::new(3);
+    bench("imagegen 4-box page", 2_000, || {
+        black_box(generate(&meta, &mut rng, 4, &GenOptions::default()));
+    });
+
+    let img = generate(&meta, &mut Rng::new(5), 4, &GenOptions::default());
+    // analytic score map stand-in: bright-region mean pool (mirrors model)
+    let score = {
+        let h = meta.img_h.div_ceil(meta.stride);
+        let w = meta.img_w.div_ceil(meta.stride);
+        let mut s = vec![0.0f32; h * w];
+        for r in 0..h {
+            for c in 0..w {
+                let (pr, pc) = (r * meta.stride, c * meta.stride);
+                s[r * w + c] = img.pixels[pr.min(meta.img_h - 1) * meta.img_w + pc.min(meta.img_w - 1)];
+            }
+        }
+        s
+    };
+    bench("detect postprocess (components+refine)", 2_000, || {
+        black_box(detect::extract_boxes(black_box(&img), &meta, &score));
+    });
+
+    // Real PJRT single-inference hot path (compile amortized by warmup).
+    let manifest = Arc::new(Manifest::load(&dir).unwrap());
+    let mut engine = dnc_serve::runtime::LocalEngine::new(manifest).unwrap();
+    engine.warmup("bert_b1_s16").unwrap();
+    let ids16: Vec<i32> = (0..16).collect();
+    engine
+        .execute("bert_b1_s16", &[Tensor::i32(vec![1, 16], ids16.clone())])
+        .unwrap();
+    bench("PJRT execute bert_b1_s16 (end to end)", 500, || {
+        black_box(
+            engine
+                .execute("bert_b1_s16", &[Tensor::i32(vec![1, 16], ids16.clone())])
+                .unwrap(),
+        );
+    });
+
+    // prun dispatch overhead: wall time minus pure execute time, per part.
+    // This is the L3 cost of divide-and-conquer itself (thread spawn,
+    // lease, channel round-trip, input handoff).
+    {
+        use dnc_serve::engine::{JobPart, PrunOptions, Session};
+        let manifest = Arc::new(Manifest::load(&dir).unwrap());
+        let session = Session::new(manifest, 16, 1).unwrap();
+        session.warmup(&["ocr_rec_w64"]).unwrap();
+        let crop = Tensor::zeros_f32(vec![1, 3, 32, 64]);
+        let parts = || -> Vec<JobPart> {
+            (0..4).map(|_| JobPart::new("ocr_rec_w64", vec![crop.clone()])).collect()
+        };
+        // warmup
+        for _ in 0..5 {
+            session.prun(parts(), PrunOptions::default()).unwrap();
+        }
+        let iters = 100;
+        let mut overhead_ns = 0u128;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let outcome = session.prun(parts(), PrunOptions::default()).unwrap();
+            let wall = t0.elapsed();
+            let exec: std::time::Duration = outcome.reports.iter().map(|r| r.exec).sum();
+            overhead_ns += wall.saturating_sub(exec).as_nanos() / 4;
+        }
+        println!("{:44} {:10.1} us/part ({iters} iters)", "prun dispatch overhead (k=4, 1 worker)",
+            overhead_ns as f64 / iters as f64 / 1000.0);
+    }
+}

@@ -1,0 +1,36 @@
+//! E12 (paper §6 future work): per-frame latency of the video-analytics
+//! pipeline at 16 cores, base vs prun, across object counts — the
+//! recognition phase reuses the OCR rec cost model (same models), motion
+//! detection is L3 rust work measured on this box and held constant.
+
+use dnc_serve::bench::table::{ms, Table};
+use dnc_serve::engine::allocator::AllocPolicy;
+use dnc_serve::simcpu::calib::PAPER_CORES;
+use dnc_serve::simcpu::ocr::{sim_image, OcrVariant};
+use dnc_serve::util::prng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0x71de0);
+    let mut t = Table::new(
+        "Video pipeline — per-frame recognize latency @16 cores (ms), motion-detect excluded",
+        &["objects", "base", "prun-def", "prun-1", "speedup (def/base)"],
+    );
+    for n in [1usize, 2, 4, 6, 8] {
+        // object label widths: 3..8 chars like the generator
+        let widths: Vec<usize> = (0..n).map(|_| (rng.usize_in(3, 8) + 1) * 8).collect();
+        // reuse the rec-phase cost model; detection here is rust-side
+        // frame differencing, identical across variants.
+        let base = sim_image(&widths, OcrVariant::Base, PAPER_CORES).rec_ms;
+        let pdef = sim_image(&widths, OcrVariant::Prun(AllocPolicy::PrunDef), PAPER_CORES).rec_ms;
+        let p1 = sim_image(&widths, OcrVariant::Prun(AllocPolicy::PrunOne), PAPER_CORES).rec_ms;
+        t.row(vec![
+            n.to_string(),
+            ms(base),
+            ms(pdef),
+            ms(p1),
+            format!("{:.2}x", base / pdef),
+        ]);
+    }
+    t.note("prun turns per-frame latency ~flat in object count (parallel regions) where base grows linearly — the §6 motivation for pipeline-architecture models");
+    t.print();
+}

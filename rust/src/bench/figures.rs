@@ -1,0 +1,326 @@
+//! Regenerators for every table/figure in the paper's evaluation (§4).
+//!
+//! Each `figN` builds the paper's workload with `crate::workload`, runs it
+//! through the calibrated simulator at the paper's 16 cores (DESIGN.md §4
+//! explains why virtual time), and returns a table shaped like the
+//! figure. `cargo bench` prints them; EXPERIMENTS.md records the
+//! paper-vs-ours comparison.
+
+use crate::engine::allocator::AllocPolicy;
+use crate::simcpu::bert::{seqs_per_sec, sim_no_batch, sim_pad_batch, sim_prun, sim_prun_report};
+use crate::simcpu::calib::PAPER_CORES;
+use crate::simcpu::ocr::{sim_dataset, sim_image, OcrVariant};
+use crate::util::prng::Rng;
+use crate::util::stats::{mean, stddev};
+use crate::workload::{boxes, seqlen};
+
+use super::table::{ms, tput, Table};
+
+pub const DATASET_SEED: u64 = 0xf16;
+pub const DATASET_IMAGES: usize = 500;
+pub const GLYPH_W: usize = 8;
+
+fn dataset() -> Vec<Vec<usize>> {
+    boxes::dataset(DATASET_SEED, DATASET_IMAGES, GLYPH_W)
+}
+
+/// Fig. 2: PaddleOCR base latency vs threads, stacked by phase.
+pub fn fig2(threads: &[usize]) -> Table {
+    let imgs = dataset();
+    let mut t = Table::new(
+        "Figure 2 — PaddleOCR inference latency vs threads (base), per phase (ms)",
+        &["threads", "det", "cls", "rec", "total"],
+    );
+    for &c in threads {
+        let b = sim_dataset(&imgs, OcrVariant::Base, c);
+        t.row(vec![
+            c.to_string(),
+            ms(b.det_ms),
+            ms(b.cls_ms),
+            ms(b.rec_ms),
+            ms(b.total_ms()),
+        ]);
+    }
+    t.note("paper anchors: total 554 @1t, 364 @4t, 435 @16t; cls 27 @1t -> 38 @16t");
+    t
+}
+
+/// Fig. 3: distribution of detected box counts in the dataset.
+pub fn fig3() -> Table {
+    let imgs = dataset();
+    let hist = boxes::count_histogram(&imgs);
+    let mut t = Table::new(
+        "Figure 3 — distribution of detected text boxes (500 images)",
+        &["boxes", "images", "share"],
+    );
+    for (count, n) in &hist {
+        let label = if *count >= 10 { "10+".to_string() } else { count.to_string() };
+        t.row(vec![
+            label,
+            n.to_string(),
+            format!("{:.1}%", 100.0 * *n as f64 / imgs.len() as f64),
+        ]);
+    }
+    t.note(&format!("mean boxes/image = {:.2} (calibration uses 4.3)", boxes::mean_count(&imgs)));
+    t
+}
+
+/// Fig. 4: per-variant latency grouped by detected box count @16 cores.
+/// part: "cls" | "rec" | "total".
+pub fn fig4(part: &str) -> Table {
+    let imgs = dataset();
+    let mut t = Table::new(
+        &format!("Figure 4({}) — {} latency by box count @16 cores (ms)",
+            match part { "cls" => "a", "rec" => "b", _ => "c" }, part),
+        &["boxes", "base", "prun-def", "prun-1", "prun-eq", "def/base"],
+    );
+    for count in 2..=10usize {
+        let group: Vec<&Vec<usize>> = imgs
+            .iter()
+            .filter(|im| if count == 10 { im.len() >= 10 } else { im.len() == count })
+            .collect();
+        if group.is_empty() {
+            continue;
+        }
+        let mean_of = |v: OcrVariant| -> f64 {
+            let vals: Vec<f64> = group
+                .iter()
+                .map(|w| {
+                    let b = sim_image(w, v, PAPER_CORES);
+                    match part {
+                        "cls" => b.cls_ms,
+                        "rec" => b.rec_ms,
+                        _ => b.total_ms(),
+                    }
+                })
+                .collect();
+            mean(&vals)
+        };
+        let base = mean_of(OcrVariant::Base);
+        let pdef = mean_of(OcrVariant::Prun(AllocPolicy::PrunDef));
+        let p1 = mean_of(OcrVariant::Prun(AllocPolicy::PrunOne));
+        let peq = mean_of(OcrVariant::Prun(AllocPolicy::PrunEq));
+        let label = if count == 10 { "10+".to_string() } else { count.to_string() };
+        t.row(vec![
+            label,
+            ms(base),
+            ms(pdef),
+            ms(p1),
+            ms(peq),
+            format!("{:.2}x", base / pdef),
+        ]);
+    }
+    t.note("paper: prun-def gains grow with box count (2.33x at 9 boxes end-to-end); prun-1 wins cls at small counts");
+    t
+}
+
+/// Fig. 5: end-to-end + cls/rec latency vs threads, base vs prun-def.
+pub fn fig5(threads: &[usize]) -> Table {
+    let imgs = dataset();
+    let mut t = Table::new(
+        "Figure 5 — PaddleOCR latency vs threads, base vs prun (ms)",
+        &["threads", "base total", "prun total", "base cls", "prun cls", "base rec", "prun rec", "speedup"],
+    );
+    for &c in threads {
+        let b = sim_dataset(&imgs, OcrVariant::Base, c);
+        let p = sim_dataset(&imgs, OcrVariant::Prun(AllocPolicy::PrunDef), c);
+        t.row(vec![
+            c.to_string(),
+            ms(b.total_ms()),
+            ms(p.total_ms()),
+            ms(b.cls_ms),
+            ms(p.cls_ms),
+            ms(b.rec_ms),
+            ms(p.rec_ms),
+            format!("{:.2}x", b.total_ms() / p.total_ms()),
+        ]);
+    }
+    t.note("paper @16t: rec speedup >2.4x, end-to-end 1.5x (detection phase shared)");
+    t
+}
+
+/// Fig. 6: BERT throughput on random-length batches (1000 reps, ±std).
+pub fn fig6(reps: usize) -> Table {
+    let mut rng = Rng::new(0xbe27);
+    let mut t = Table::new(
+        "Figure 6 — BERT throughput, batches of U[16,512] lengths (seq/s)",
+        &["batch", "pad-batch", "±std", "prun", "±std", "prun/pad"],
+    );
+    for x in 2..=8usize {
+        let mut pad = Vec::with_capacity(reps);
+        let mut prun = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let lens = seqlen::random_batch(&mut rng, x);
+            pad.push(seqs_per_sec(x, sim_pad_batch(&lens, PAPER_CORES)));
+            prun.push(seqs_per_sec(x, sim_prun(&lens, PAPER_CORES, AllocPolicy::PrunDef)));
+        }
+        t.row(vec![
+            x.to_string(),
+            tput(mean(&pad)),
+            tput(stddev(&pad)),
+            tput(mean(&prun)),
+            tput(stddev(&prun)),
+            format!("{:.2}x", mean(&prun) / mean(&pad)),
+        ]);
+    }
+    t.note("paper: prun outperforms pad-batch at every batch size; variance is inherently high");
+    t
+}
+
+/// Fig. 7: preset length mixes.
+pub fn fig7() -> Table {
+    let mut t = Table::new(
+        "Figure 7 — BERT throughput on preset batches (seq/s)",
+        &["batch", "pad-batch", "prun", "prun/pad"],
+    );
+    for (label, lens) in seqlen::preset_mixes() {
+        let pad = seqs_per_sec(lens.len(), sim_pad_batch(&lens, PAPER_CORES));
+        let prun = seqs_per_sec(lens.len(), sim_prun(&lens, PAPER_CORES, AllocPolicy::PrunDef));
+        t.row(vec![
+            label.to_string(),
+            tput(pad),
+            tput(prun),
+            format!("{:.2}x", prun / pad),
+        ]);
+    }
+    t.note("paper: prun wins grow with batch heterogeneity (padding waste eliminated)");
+    t
+}
+
+/// Fig. 8: 1 long (256) + X short (16) sequences; threads for the long one.
+pub fn fig8() -> Table {
+    let mut t = Table::new(
+        "Figure 8 — 1x256-token + Xx16-token batch (seq/s; threads of long seq)",
+        &["X", "pad-batch", "prun", "long-seq threads", "prun/pad"],
+    );
+    for x in 0..=15usize {
+        let lens = seqlen::long_short(x);
+        let pad = seqs_per_sec(lens.len(), sim_pad_batch(&lens, PAPER_CORES));
+        let (report, alloc) = sim_prun_report(&lens, PAPER_CORES, AllocPolicy::PrunDef);
+        let prun = seqs_per_sec(lens.len(), report.makespan_ms);
+        t.row(vec![
+            x.to_string(),
+            tput(pad),
+            tput(prun),
+            alloc[0].to_string(),
+            format!("{:.2}x", prun / pad),
+        ]);
+    }
+    t.note("paper: X=0 overhead negligible; steep growth to X~3; long seq sheds threads as shorts join");
+    t
+}
+
+/// Fig. 9: homogeneous batches of 4.
+pub fn fig9() -> Table {
+    let mut t = Table::new(
+        "Figure 9 — BERT throughput, 4 equal-length sequences (seq/s)",
+        &["len", "no-batch", "batch", "prun", "prun/batch"],
+    );
+    for &len in &seqlen::FIG9_LENGTHS {
+        let lens = seqlen::homogeneous(len);
+        let nb = seqs_per_sec(4, sim_no_batch(&lens, PAPER_CORES));
+        let b = seqs_per_sec(4, sim_pad_batch(&lens, PAPER_CORES));
+        let p = seqs_per_sec(4, sim_prun(&lens, PAPER_CORES, AllocPolicy::PrunDef));
+        t.row(vec![
+            len.to_string(),
+            tput(nb),
+            tput(b),
+            tput(p),
+            format!("{:.2}x", p / b),
+        ]);
+    }
+    t.note("paper: batch > no-batch (batching pays); prun > batch modestly (no padding waste to recover)");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_shape() {
+        let t = fig2(&[1, 4, 16]);
+        assert_eq!(t.rows.len(), 3);
+        // dip-then-rise in the totals column
+        let total = |i: usize| t.rows[i][4].parse::<f64>().unwrap();
+        assert!(total(1) < total(0));
+        assert!(total(1) < total(2));
+    }
+
+    #[test]
+    fn fig2_dataset_anchors_match_paper() {
+        // The quantitative calibration check: base totals over the full
+        // 500-image dataset vs the paper's measured 554/364/435 ms, and
+        // cls negative scaling 27 -> 38 ms. ±10% tolerance.
+        let t = fig2(&[1, 4, 16]);
+        let cell = |r: usize, c: usize| t.rows[r][c].parse::<f64>().unwrap();
+        let anchors = [(0, 554.0), (1, 364.0), (2, 435.0)];
+        for (row, want) in anchors {
+            let got = cell(row, 4);
+            assert!((got - want).abs() / want < 0.10, "total row {row}: {got} vs {want}");
+        }
+        let cls1 = cell(0, 2);
+        let cls16 = cell(2, 2);
+        assert!((cls1 - 27.0).abs() / 27.0 < 0.20, "cls@1 {cls1}");
+        assert!((cls16 - 38.0).abs() / 38.0 < 0.20, "cls@16 {cls16}");
+        assert!(cls16 > cls1, "cls negative scaling");
+    }
+
+    #[test]
+    fn fig5_dataset_speedups_match_paper() {
+        // paper @16t: rec speedup > 2.4x, end-to-end ~1.5x (1.2..2.3 band)
+        let t = fig5(&[16]);
+        let row = &t.rows[0];
+        let base_total: f64 = row[1].parse().unwrap();
+        let prun_total: f64 = row[2].parse().unwrap();
+        let base_rec: f64 = row[5].parse().unwrap();
+        let prun_rec: f64 = row[6].parse().unwrap();
+        assert!(base_rec / prun_rec > 2.0, "rec speedup {}", base_rec / prun_rec);
+        let e2e = base_total / prun_total;
+        assert!((1.2..2.3).contains(&e2e), "end-to-end speedup {e2e}");
+    }
+
+    #[test]
+    fn fig3_shares_sum_to_one() {
+        let t = fig3();
+        let total: usize = t.rows.iter().map(|r| r[1].parse::<usize>().unwrap()).sum();
+        assert_eq!(total, DATASET_IMAGES);
+    }
+
+    #[test]
+    fn fig4_speedup_grows() {
+        let t = fig4("total");
+        let first: f64 = t.rows.first().unwrap()[5].trim_end_matches('x').parse().unwrap();
+        let last: f64 = t.rows.last().unwrap()[5].trim_end_matches('x').parse().unwrap();
+        assert!(last > first, "speedup grows with boxes: {first} -> {last}");
+    }
+
+    #[test]
+    fn fig6_prun_wins_everywhere() {
+        let t = fig6(50);
+        for row in &t.rows {
+            let ratio: f64 = row[5].trim_end_matches('x').parse().unwrap();
+            assert!(ratio > 1.0, "batch {}: {ratio}", row[0]);
+        }
+    }
+
+    #[test]
+    fn fig8_thread_column_monotone_nonincreasing() {
+        let t = fig8();
+        let threads: Vec<usize> = t.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        assert!(threads.windows(2).all(|w| w[0] >= w[1]), "{threads:?}");
+        assert_eq!(threads[0], 16);
+    }
+
+    #[test]
+    fn fig9_ordering() {
+        let t = fig9();
+        for row in &t.rows {
+            let nb: f64 = row[1].parse().unwrap();
+            let b: f64 = row[2].parse().unwrap();
+            let p: f64 = row[3].parse().unwrap();
+            assert!(b > nb, "batching pays at len {}", row[0]);
+            assert!(p > b, "prun wins at len {}", row[0]);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Benchmark/figure-regeneration harness (one regenerator per paper
+//! table/figure; see DESIGN.md §6 for the experiment index).
+
+pub mod figures;
+pub mod table;
+
+pub use table::Table;

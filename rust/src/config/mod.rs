@@ -1,0 +1,166 @@
+//! Serving configuration: JSON file + CLI/env overrides.
+//!
+//! Precedence (lowest to highest): built-in defaults < `--config file`
+//! < individual CLI flags. `DNC_ARTIFACTS` keeps working for the
+//! artifacts directory as elsewhere in the runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::engine::AllocPolicy;
+use crate::util::args::Args;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// virtual core budget C the allocator divides (paper: 16)
+    pub cores: usize,
+    /// real executor threads (PJRT clients); default = machine cores
+    pub workers: usize,
+    /// default allocation policy for prun
+    pub policy: AllocPolicy,
+    /// serving endpoint
+    pub host: String,
+    pub port: u16,
+    /// dynamic batcher limits
+    pub max_batch: usize,
+    pub max_wait_ms: u64,
+    pub artifacts: PathBuf,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cores: 16,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            policy: AllocPolicy::PrunDef,
+            host: "127.0.0.1".to_string(),
+            port: 7070,
+            max_batch: 8,
+            max_wait_ms: 5,
+            artifacts: crate::runtime::artifacts_dir(),
+        }
+    }
+}
+
+impl Config {
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let mut cfg = Config::default();
+        cfg.apply_json(&Json::parse_file(path)?)?;
+        Ok(cfg)
+    }
+
+    fn apply_json(&mut self, v: &Json) -> Result<()> {
+        if let Some(x) = v.get("cores") {
+            self.cores = x.as_usize().context("cores")?;
+        }
+        if let Some(x) = v.get("workers") {
+            self.workers = x.as_usize().context("workers")?;
+        }
+        if let Some(x) = v.get("policy") {
+            let name = x.as_str().context("policy")?;
+            self.policy = AllocPolicy::parse(name)
+                .with_context(|| format!("unknown policy '{name}'"))?;
+        }
+        if let Some(x) = v.get("host") {
+            self.host = x.as_str().context("host")?.to_string();
+        }
+        if let Some(x) = v.get("port") {
+            self.port = x.as_usize().context("port")? as u16;
+        }
+        if let Some(x) = v.get("max_batch") {
+            self.max_batch = x.as_usize().context("max_batch")?;
+        }
+        if let Some(x) = v.get("max_wait_ms") {
+            self.max_wait_ms = x.as_usize().context("max_wait_ms")? as u64;
+        }
+        if let Some(x) = v.get("artifacts") {
+            self.artifacts = PathBuf::from(x.as_str().context("artifacts")?);
+        }
+        Ok(())
+    }
+
+    /// Layer CLI flags on top (flags win over file values).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(path) = args.get("config") {
+            let file = Config::from_file(Path::new(path))?;
+            *self = file;
+        }
+        self.cores = args.usize_or("cores", self.cores);
+        self.workers = args.usize_or("workers", self.workers);
+        if let Some(p) = args.get("policy") {
+            self.policy =
+                AllocPolicy::parse(p).with_context(|| format!("unknown policy '{p}'"))?;
+        }
+        if let Some(h) = args.get("host") {
+            self.host = h.to_string();
+        }
+        self.port = args.usize_or("port", self.port as usize) as u16;
+        self.max_batch = args.usize_or("max-batch", self.max_batch);
+        self.max_wait_ms = args.u64_or("max-wait-ms", self.max_wait_ms);
+        if let Some(a) = args.get("artifacts") {
+            self.artifacts = PathBuf::from(a);
+        }
+        Ok(())
+    }
+
+    pub fn addr(&self) -> String {
+        format!("{}:{}", self.host, self.port)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn defaults_sane() {
+        let c = Config::default();
+        assert_eq!(c.cores, 16);
+        assert!(c.workers >= 1);
+        assert_eq!(c.policy, AllocPolicy::PrunDef);
+    }
+
+    #[test]
+    fn file_overrides() {
+        let dir = std::env::temp_dir().join(format!("dnc_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"cores": 8, "policy": "prun-eq", "port": 9999}"#).unwrap();
+        let c = Config::from_file(&p).unwrap();
+        assert_eq!(c.cores, 8);
+        assert_eq!(c.policy, AllocPolicy::PrunEq);
+        assert_eq!(c.port, 9999);
+        assert_eq!(c.max_batch, 8); // untouched default
+    }
+
+    #[test]
+    fn cli_overrides_file() {
+        let dir = std::env::temp_dir().join(format!("dnc_cfg2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"cores": 8}"#).unwrap();
+        let mut c = Config::default();
+        c.apply_args(&args(&format!("serve --config {} --cores 4 --policy one", p.display())))
+            .unwrap();
+        assert_eq!(c.cores, 4);
+        assert_eq!(c.policy, AllocPolicy::PrunOne);
+    }
+
+    #[test]
+    fn bad_policy_rejected() {
+        let mut c = Config::default();
+        assert!(c.apply_args(&args("serve --policy nope")).is_err());
+    }
+
+    #[test]
+    fn addr_formats() {
+        let c = Config::default();
+        assert_eq!(c.addr(), "127.0.0.1:7070");
+    }
+}

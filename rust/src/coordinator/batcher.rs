@@ -1,0 +1,192 @@
+//! Dynamic request batcher.
+//!
+//! Accumulates requests until `max_batch` are waiting or the oldest has
+//! waited `max_wait` (the tunable the paper's §2.5 attributes to serving
+//! systems like TensorFlow Serving / TorchServe), then hands the batch to
+//! the handler on a dedicated flusher thread. Callers block on a reply
+//! channel. The handler returns one result per request, in order.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct Pending<T, R> {
+    item: T,
+    reply: Sender<R>,
+    enqueued: Instant,
+}
+
+struct Queue<T, R> {
+    items: Vec<Pending<T, R>>,
+    shutdown: bool,
+}
+
+pub struct Batcher<T, R> {
+    queue: Arc<(Mutex<Queue<T, R>>, Condvar)>,
+    flusher: Option<std::thread::JoinHandle<()>>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
+    /// Start a batcher with a handler run on the flusher thread.
+    pub fn start(
+        max_batch: usize,
+        max_wait: Duration,
+        handler: impl Fn(Vec<T>) -> Vec<R> + Send + 'static,
+    ) -> Batcher<T, R> {
+        assert!(max_batch >= 1);
+        let queue = Arc::new((
+            Mutex::new(Queue { items: Vec::new(), shutdown: false }),
+            Condvar::new(),
+        ));
+        let q2 = Arc::clone(&queue);
+        let flusher = std::thread::Builder::new()
+            .name("dnc-batcher".into())
+            .spawn(move || flusher_loop(q2, max_batch, max_wait, handler))
+            .expect("spawn batcher");
+        Batcher { queue, flusher: Some(flusher), max_batch, max_wait }
+    }
+
+    /// Enqueue a request; returns the reply channel.
+    pub fn submit(&self, item: T) -> Receiver<R> {
+        let (reply, rx) = channel();
+        let (lock, cv) = &*self.queue;
+        let mut q = lock.lock().unwrap();
+        q.items.push(Pending { item, reply, enqueued: Instant::now() });
+        cv.notify_all();
+        rx
+    }
+
+    /// Number of requests currently waiting.
+    pub fn pending(&self) -> usize {
+        self.queue.0.lock().unwrap().items.len()
+    }
+}
+
+impl<T, R> Drop for Batcher<T, R> {
+    fn drop(&mut self) {
+        {
+            let (lock, cv) = &*self.queue;
+            lock.lock().unwrap().shutdown = true;
+            cv.notify_all();
+        }
+        if let Some(h) = self.flusher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn flusher_loop<T, R>(
+    queue: Arc<(Mutex<Queue<T, R>>, Condvar)>,
+    max_batch: usize,
+    max_wait: Duration,
+    handler: impl Fn(Vec<T>) -> Vec<R>,
+) {
+    let (lock, cv) = &*queue;
+    loop {
+        let batch: Vec<Pending<T, R>> = {
+            let mut q = lock.lock().unwrap();
+            loop {
+                if q.shutdown && q.items.is_empty() {
+                    return;
+                }
+                if q.items.len() >= max_batch || q.shutdown {
+                    break;
+                }
+                if let Some(oldest) = q.items.first() {
+                    let waited = oldest.enqueued.elapsed();
+                    if waited >= max_wait {
+                        break;
+                    }
+                    let (qq, _timeout) = cv.wait_timeout(q, max_wait - waited).unwrap();
+                    q = qq;
+                } else {
+                    q = cv.wait(q).unwrap();
+                }
+            }
+            let take = q.items.len().min(max_batch);
+            q.items.drain(..take).collect()
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        let (items, replies): (Vec<T>, Vec<Sender<R>>) =
+            batch.into_iter().map(|p| (p.item, p.reply)).unzip();
+        let results = handler(items);
+        assert_eq!(results.len(), replies.len(), "handler must return one result per item");
+        for (r, tx) in results.into_iter().zip(replies) {
+            let _ = tx.send(r); // caller may have given up
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_up_to_max() {
+        let b: Batcher<u32, usize> = Batcher::start(4, Duration::from_millis(50), |items| {
+            let n = items.len();
+            items.iter().map(|_| n).collect()
+        });
+        let rxs: Vec<_> = (0..4).map(|i| b.submit(i)).collect();
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap(), 4, "full batch flushed at once");
+        }
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let b: Batcher<u32, usize> = Batcher::start(100, Duration::from_millis(10), |items| {
+            let n = items.len();
+            items.iter().map(|_| n).collect()
+        });
+        let rx = b.submit(7);
+        let t0 = Instant::now();
+        assert_eq!(rx.recv().unwrap(), 1, "lone request flushed by timer");
+        assert!(t0.elapsed() >= Duration::from_millis(8));
+    }
+
+    #[test]
+    fn results_in_request_order() {
+        let b: Batcher<u32, u32> = Batcher::start(3, Duration::from_millis(20), |items| {
+            items.iter().map(|x| x * 10).collect()
+        });
+        let rxs: Vec<_> = (0..3).map(|i| b.submit(i)).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap(), i as u32 * 10);
+        }
+    }
+
+    #[test]
+    fn drop_flushes_pending() {
+        let rx = {
+            let b: Batcher<u32, u32> =
+                Batcher::start(100, Duration::from_secs(10), |items| items);
+            b.submit(42)
+            // drop: shutdown flag flushes the waiting item
+        };
+        assert_eq!(rx.recv().unwrap(), 42);
+    }
+
+    #[test]
+    fn concurrent_submitters() {
+        let b: Arc<Batcher<u32, u32>> =
+            Arc::new(Batcher::start(8, Duration::from_millis(5), |items| items));
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let b = Arc::clone(&b);
+            joins.push(std::thread::spawn(move || {
+                for i in 0..10 {
+                    let v = t * 100 + i;
+                    assert_eq!(b.submit(v).recv().unwrap(), v);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Serving coordinator: the request-path layer above the prun engine —
+//! dynamic batcher, request router, JSON-lines TCP server.
+
+pub mod batcher;
+pub mod router;
+pub mod server;
+
+pub use batcher::Batcher;
+pub use router::{route, ServerState};
+pub use server::{Client, Server, StopHandle};

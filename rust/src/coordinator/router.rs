@@ -1,0 +1,158 @@
+//! Request router: JSON ops -> handlers over the shared serving state.
+//!
+//! Protocol (JSON-lines over TCP, one object per line):
+//!
+//! | op             | request fields                        | response fields |
+//! |----------------|---------------------------------------|-----------------|
+//! | `ping`         | –                                     | `ok`            |
+//! | `embed`        | `text`                                | `embedding`     |
+//! | `embed_tokens` | `tokens` (array of ids)               | `embedding`     |
+//! | `ocr`          | `seed`, `boxes`, opt `variant`        | `texts`, timing |
+//! | `stats`        | –                                     | metrics snapshot|
+//!
+//! Every request may carry an `id`, echoed back. Errors come back as
+//! `{"id":..,"error":"..."}`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::coordinator::batcher::Batcher;
+use crate::metrics::Metrics;
+use crate::nlp::{BertServer, Strategy};
+use crate::ocr::{generate, GenOptions, OcrPipeline};
+use crate::simcpu::ocr::OcrVariant;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::prng::Rng;
+
+pub struct ServerState {
+    pub bert: BertServer,
+    pub ocr: OcrPipeline,
+    pub metrics: Arc<Metrics>,
+    pub config: Config,
+    /// cross-connection dynamic batcher for embed requests
+    pub embed_batcher: Batcher<Vec<i32>, Result<Vec<f32>, String>>,
+}
+
+impl ServerState {
+    pub fn new(bert: BertServer, ocr: OcrPipeline, config: Config) -> Arc<ServerState> {
+        let metrics = Metrics::new();
+        let session = Arc::clone(bert.session());
+        let policy = config.policy;
+        let m2 = Arc::clone(&metrics);
+        let embed_batcher = Batcher::start(
+            config.max_batch,
+            std::time::Duration::from_millis(config.max_wait_ms),
+            move |requests: Vec<Vec<i32>>| {
+                let t0 = Instant::now();
+                let server = BertServer::new(Arc::clone(&session));
+                let n = requests.len();
+                m2.add("batches", 1);
+                m2.add("batched_requests", n as u64);
+                match server.serve(&requests, Strategy::Prun(policy)) {
+                    Ok(res) => {
+                        m2.record("bert_batch", t0.elapsed());
+                        res.outputs.into_iter().map(Ok).collect()
+                    }
+                    Err(e) => (0..n).map(|_| Err(format!("{e:#}"))).collect(),
+                }
+            },
+        );
+        Arc::new(ServerState { bert, ocr, metrics, config, embed_batcher })
+    }
+}
+
+/// Handle one request object, producing the response object.
+pub fn route(state: &ServerState, req: &Json) -> Json {
+    let id = req.get("id").cloned().unwrap_or(Json::Null);
+    let t0 = Instant::now();
+    let mut resp = match req.get("op").and_then(|v| v.as_str()) {
+        Some("ping") => obj(vec![("ok", Json::Bool(true))]),
+        Some("embed") => handle_embed(state, req),
+        Some("embed_tokens") => handle_embed_tokens(state, req),
+        Some("ocr") => handle_ocr(state, req),
+        Some("stats") => state.metrics.snapshot_json(),
+        Some(other) => err(format!("unknown op '{other}'")),
+        None => err("missing 'op'".to_string()),
+    };
+    state.metrics.add("requests", 1);
+    state.metrics.record("request", t0.elapsed());
+    if let Json::Obj(pairs) = &mut resp {
+        pairs.insert(0, ("id".to_string(), id));
+    }
+    resp
+}
+
+fn err(msg: String) -> Json {
+    obj(vec![("error", Json::Str(msg))])
+}
+
+fn embedding_json(vec: &[f32]) -> Json {
+    arr(vec.iter().map(|&x| num(x as f64)))
+}
+
+fn handle_embed(state: &ServerState, req: &Json) -> Json {
+    let Some(text) = req.get("text").and_then(|v| v.as_str()) else {
+        return err("embed needs 'text'".into());
+    };
+    let tok = state.bert.tokenizer();
+    let max_seq = state.bert.session().manifest().bert.max_seq;
+    let ids = tok.encode(text, max_seq);
+    embed_ids(state, ids)
+}
+
+fn handle_embed_tokens(state: &ServerState, req: &Json) -> Json {
+    let Some(tokens) = req.get("tokens").and_then(|v| v.as_arr()) else {
+        return err("embed_tokens needs 'tokens'".into());
+    };
+    let ids: Vec<i32> = tokens
+        .iter()
+        .filter_map(|v| v.as_i64().map(|x| x as i32))
+        .collect();
+    if ids.len() != tokens.len() || ids.len() < 2 {
+        return err("tokens must be >=2 integers".into());
+    }
+    embed_ids(state, ids)
+}
+
+fn embed_ids(state: &ServerState, ids: Vec<i32>) -> Json {
+    match state.embed_batcher.submit(ids).recv() {
+        Ok(Ok(embedding)) => obj(vec![("embedding", embedding_json(&embedding))]),
+        Ok(Err(e)) => err(e),
+        Err(_) => err("server shutting down".into()),
+    }
+}
+
+fn handle_ocr(state: &ServerState, req: &Json) -> Json {
+    let seed = req.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64;
+    let boxes = req.get("boxes").and_then(|v| v.as_usize()).unwrap_or(3);
+    let variant = match req.get("variant").and_then(|v| v.as_str()) {
+        None => OcrVariant::Prun(state.config.policy),
+        Some(name) => match crate::ocr::variant_from_name(name) {
+            Some(v) => v,
+            None => return err(format!("unknown variant '{name}'")),
+        },
+    };
+    let mut rng = Rng::new(seed);
+    let img = generate(state.ocr.meta(), &mut rng, boxes, &GenOptions::default());
+    match state.ocr.process(&img, variant) {
+        Ok(res) => {
+            state.metrics.add("ocr_images", 1);
+            state.metrics.add("ocr_boxes", res.boxes.len() as u64);
+            let texts = arr(res.texts.iter().map(|t| match t {
+                Some(t) => s(t),
+                None => Json::Null,
+            }));
+            let truth = arr(img.boxes.iter().map(|b| s(&b.text)));
+            obj(vec![
+                ("texts", texts),
+                ("ground_truth", truth),
+                ("variant", s(variant.name())),
+                ("det_ms", num(res.timing.det.as_secs_f64() * 1e3)),
+                ("cls_ms", num(res.timing.cls.as_secs_f64() * 1e3)),
+                ("rec_ms", num(res.timing.rec.as_secs_f64() * 1e3)),
+            ])
+        }
+        Err(e) => err(format!("{e:#}")),
+    }
+}

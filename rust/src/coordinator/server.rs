@@ -1,0 +1,141 @@
+//! JSON-lines TCP serving front end.
+//!
+//! One coordinator thread accepts connections; each connection gets a
+//! handler thread (requests within a connection are processed in order,
+//! concurrency comes from multiple connections — batching across them
+//! happens in the shared `embed` batcher). The whole request path is
+//! Rust + PJRT; Python ended at `make artifacts`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::router::{route, ServerState};
+
+pub struct Server {
+    state: Arc<ServerState>,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind to the configured address (port 0 picks a free port).
+    pub fn bind(state: Arc<ServerState>) -> Result<Server> {
+        let addr = state.config.addr();
+        let listener = TcpListener::bind(&addr).with_context(|| format!("binding {addr}"))?;
+        Ok(Server { state, listener, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().unwrap()
+    }
+
+    /// Handle for stopping a `serve_background` server.
+    pub fn stop_handle(&self) -> StopHandle {
+        StopHandle { stop: Arc::clone(&self.stop), addr: self.local_addr() }
+    }
+
+    /// Serve until the stop handle fires. Blocks.
+    pub fn serve(self) -> Result<()> {
+        crate::info!("serving on {}", self.local_addr());
+        for conn in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let state = Arc::clone(&self.state);
+                    std::thread::Builder::new()
+                        .name("dnc-conn".into())
+                        .spawn(move || {
+                            if let Err(e) = handle_connection(stream, &state) {
+                                crate::debug!("connection ended: {e:#}");
+                            }
+                        })
+                        .context("spawning connection handler")?;
+                }
+                Err(e) => crate::warn!("accept failed: {e}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve on a background thread; returns after bind.
+    pub fn serve_background(self) -> (StopHandle, std::thread::JoinHandle<()>) {
+        let handle = self.stop_handle();
+        let join = std::thread::Builder::new()
+            .name("dnc-server".into())
+            .spawn(move || {
+                if let Err(e) = self.serve() {
+                    crate::error!("server error: {e:#}");
+                }
+            })
+            .expect("spawn server");
+        (handle, join)
+    }
+}
+
+pub struct StopHandle {
+    stop: Arc<AtomicBool>,
+    addr: std::net::SocketAddr,
+}
+
+impl StopHandle {
+    /// Signal the accept loop to exit (pokes it with a connection).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+fn handle_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let peer = stream.peer_addr().ok();
+    crate::debug!("connection from {peer:?}");
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Json::parse(&line) {
+            Ok(req) => route(state, &req),
+            Err(e) => crate::util::json::obj(vec![(
+                "error",
+                Json::Str(format!("bad json: {e}")),
+            )]),
+        };
+        writer.write_all(resp.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+/// Minimal client for tests/examples: send one request, read one reply.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim())
+            .map_err(|e| anyhow::anyhow!("bad response json: {e}: {line}"))?)
+    }
+}

@@ -1,0 +1,239 @@
+//! The paper's thread-allocation algorithm (Listing 1) and the two
+//! baseline policies it is evaluated against (§4.1).
+//!
+//! Given `k` job parts with sizes `s_i` and `C` cores, `prun-def` assigns
+//! relative weight `w_i = s_i / Σs` and `c_i = max(1, floor(w_i * C))`
+//! cores, then distributes any cores left by the flooring one-by-one to
+//! the parts with the largest unallocated remainder `w_i*C - c_i`
+//! (round-robin in descending-remainder order, exactly as the paper's
+//! C++ listing does).
+//!
+//! `prun-1` gives every part one thread; `prun-eq` gives every part an
+//! equal share `max(1, floor(C/k))`. (The paper's §4.1 prose writes
+//! `⌊k/C⌋` for prun-eq — an obvious transposition; equal *cores per
+//! input* is `⌊C/k⌋`, which is what we implement.)
+
+/// Thread-allocation policy for `prun`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AllocPolicy {
+    /// Paper Listing 1: size-proportional with remainder distribution.
+    PrunDef,
+    /// One worker thread per job part.
+    PrunOne,
+    /// Equal share per part: `max(1, floor(C/k))`.
+    PrunEq,
+}
+
+impl AllocPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllocPolicy::PrunDef => "prun-def",
+            AllocPolicy::PrunOne => "prun-1",
+            AllocPolicy::PrunEq => "prun-eq",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AllocPolicy> {
+        match s {
+            "prun-def" | "def" => Some(AllocPolicy::PrunDef),
+            "prun-1" | "one" => Some(AllocPolicy::PrunOne),
+            "prun-eq" | "eq" => Some(AllocPolicy::PrunEq),
+            _ => None,
+        }
+    }
+}
+
+/// Allocate worker threads to job parts of the given `sizes`.
+///
+/// Faithful port of the paper's Listing 1 for [`AllocPolicy::PrunDef`].
+/// Returns one thread count per part (same order as `sizes`).
+///
+/// Invariants (property-tested in `tests/prop_allocator.rs`):
+/// - every part gets >= 1 thread;
+/// - when `k <= C`, prun-def allocates exactly `C` threads in total;
+/// - when `k > C`, every part gets exactly 1 thread;
+/// - a part never gets fewer threads than a smaller part.
+pub fn allocate(sizes: &[usize], num_cores: usize, policy: AllocPolicy) -> Vec<usize> {
+    allocate_weighted(&weights(sizes), num_cores, policy)
+}
+
+/// Listing-1 allocation from explicit relative weights (must sum to ~1).
+/// `allocate` derives weights from input sizes (the paper's default);
+/// the profiled strategy (engine::profile, paper §6 future work) feeds
+/// measured-latency weights through this same code path.
+pub fn allocate_weighted(w: &[f64], num_cores: usize, policy: AllocPolicy) -> Vec<usize> {
+    assert!(num_cores >= 1, "need at least one core");
+    let k = w.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    match policy {
+        AllocPolicy::PrunOne => vec![1; k],
+        AllocPolicy::PrunEq => vec![std::cmp::max(1, num_cores / k); k],
+        AllocPolicy::PrunDef => allocate_listing1(w, num_cores),
+    }
+}
+
+fn allocate_listing1(w: &[f64], num_cores: usize) -> Vec<usize> {
+    let num_inputs = w.len();
+    let mut thread_allocation = Vec::with_capacity(num_inputs);
+    // (index, unallocated weight) — only populated when k <= C, as in the
+    // paper listing.
+    let mut unallocated_weight: Vec<(usize, f64)> = Vec::new();
+    let mut allocated_cores = 0usize;
+
+    for (index, &w_i) in w.iter().enumerate() {
+        let mut num_threads_to_use = 1usize;
+        if num_inputs <= num_cores {
+            num_threads_to_use = (w_i * num_cores as f64).floor() as usize;
+            // this may happen due to flooring
+            if num_threads_to_use < 1 {
+                num_threads_to_use = 1;
+            }
+            unallocated_weight
+                .push((index, w_i * num_cores as f64 - num_threads_to_use as f64));
+        }
+        thread_allocation.push(num_threads_to_use);
+        allocated_cores += num_threads_to_use;
+    }
+
+    if allocated_cores < num_cores && !unallocated_weight.is_empty() {
+        // sort in decreasing order of unallocated weight (stable: ties keep
+        // input order, matching std::sort-with-comparator determinism needs)
+        unallocated_weight.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut next_to_adjust = 0usize;
+        while allocated_cores < num_cores {
+            let index = unallocated_weight[next_to_adjust % num_inputs].0;
+            thread_allocation[index] += 1;
+            allocated_cores += 1;
+            next_to_adjust += 1;
+        }
+    }
+    thread_allocation
+}
+
+/// The relative weights `w_i` used by prun-def (exported for reporting —
+/// paper Fig. 8 plots the threads given to the long sequence).
+pub fn weights(sizes: &[usize]) -> Vec<f64> {
+    let total: usize = sizes.iter().sum();
+    if total == 0 {
+        return vec![1.0 / sizes.len().max(1) as f64; sizes.len()];
+    }
+    sizes.iter().map(|&s| s as f64 / total as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_part_gets_all_cores() {
+        assert_eq!(allocate(&[100], 16, AllocPolicy::PrunDef), vec![16]);
+    }
+
+    #[test]
+    fn equal_sizes_split_evenly() {
+        assert_eq!(allocate(&[50, 50], 16, AllocPolicy::PrunDef), vec![8, 8]);
+        assert_eq!(allocate(&[10, 10, 10, 10], 16, AllocPolicy::PrunDef), vec![4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn proportional_split() {
+        // w = [0.75, 0.25], C=16 -> floor: [12, 4], no remainder
+        assert_eq!(allocate(&[300, 100], 16, AllocPolicy::PrunDef), vec![12, 4]);
+    }
+
+    #[test]
+    fn remainder_goes_to_largest_fraction() {
+        // w = [0.5, 0.3, 0.2] * 10 -> floor [5, 3, 2] -> exact
+        assert_eq!(allocate(&[5, 3, 2], 10, AllocPolicy::PrunDef), vec![5, 3, 2]);
+        // w*16 = [8.533, 4.266, 3.2] -> floor [8, 4, 3] = 15, remainder
+        // fractions [0.533, 0.266, 0.2] -> part 0 gets the spare core.
+        assert_eq!(allocate(&[8, 4, 3], 16, AllocPolicy::PrunDef), vec![9, 4, 3]);
+    }
+
+    #[test]
+    fn paper_fig8_long_short_allocations() {
+        // 1 long (256 tokens) + X short (16 tokens): the long sequence's
+        // thread count decreases as shorts join (paper Fig. 8 curve).
+        let c = 16;
+        let t0 = allocate(&[256], c, AllocPolicy::PrunDef)[0];
+        assert_eq!(t0, 16);
+        let t3 = allocate(&[256, 16, 16, 16], c, AllocPolicy::PrunDef)[0];
+        let t8 = allocate(&[256, 16, 16, 16, 16, 16, 16, 16, 16], c, AllocPolicy::PrunDef)[0];
+        assert!(t0 > t3 && t3 > t8, "{t0} {t3} {t8}");
+        // with 3 shorts: w_long = 256/304, floor(0.842*16)=13
+        assert_eq!(t3, 13);
+    }
+
+    #[test]
+    fn more_parts_than_cores_gives_one_each() {
+        let sizes: Vec<usize> = (1..=20).collect();
+        let alloc = allocate(&sizes, 16, AllocPolicy::PrunDef);
+        assert!(alloc.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn tiny_parts_clamped_to_one() {
+        // w*16 < 1 for the small parts
+        let alloc = allocate(&[1000, 1, 1, 1], 16, AllocPolicy::PrunDef);
+        assert!(alloc[1] >= 1 && alloc[2] >= 1 && alloc[3] >= 1);
+        assert!(alloc[0] >= 12);
+    }
+
+    #[test]
+    fn prun_one_policy() {
+        assert_eq!(allocate(&[5, 10, 20], 16, AllocPolicy::PrunOne), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn prun_eq_policy() {
+        assert_eq!(allocate(&[5, 10, 20], 16, AllocPolicy::PrunEq), vec![5, 5, 5]);
+        // k > C: still at least one each
+        let alloc = allocate(&[1; 20], 16, AllocPolicy::PrunEq);
+        assert!(alloc.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn zero_sizes_degenerate_to_equal() {
+        assert_eq!(allocate(&[0, 0], 8, AllocPolicy::PrunDef), vec![4, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(allocate(&[], 16, AllocPolicy::PrunDef).is_empty());
+    }
+
+    #[test]
+    fn policy_parse_names() {
+        assert_eq!(AllocPolicy::parse("prun-def"), Some(AllocPolicy::PrunDef));
+        assert_eq!(AllocPolicy::parse("one"), Some(AllocPolicy::PrunOne));
+        assert_eq!(AllocPolicy::parse("prun-eq"), Some(AllocPolicy::PrunEq));
+        assert_eq!(AllocPolicy::parse("nope"), None);
+        assert_eq!(AllocPolicy::PrunDef.name(), "prun-def");
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let w = weights(&[1, 2, 3]);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((w[2] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allocate_weighted_matches_size_path() {
+        let sizes = [300usize, 100, 50];
+        let via_sizes = allocate(&sizes, 16, AllocPolicy::PrunDef);
+        let via_weights = allocate_weighted(&weights(&sizes), 16, AllocPolicy::PrunDef);
+        assert_eq!(via_sizes, via_weights);
+    }
+
+    #[test]
+    fn allocate_weighted_profiled_weights() {
+        // profiled weights can diverge from sizes: 90/10 split on 16
+        // floors [14, 1]; the leftover core goes to the larger remainder
+        // (0.6 for part 1 vs 0.4 for part 0) per Listing 1.
+        let alloc = allocate_weighted(&[0.9, 0.1], 16, AllocPolicy::PrunDef);
+        assert_eq!(alloc, vec![14, 2]);
+    }
+}

@@ -1,0 +1,175 @@
+//! Counting semaphore over the machine's cores ("core leases").
+//!
+//! `prun` admits a job part once its allocated thread count can be leased;
+//! parts that don't fit wait, preserving the paper's behaviour that an
+//! oversubscribed allocation simply runs some parts after others
+//! (§3.1: "some job parts will be run after other job parts have
+//! finished"). FIFO fairness: waiters are woken in arrival order so a
+//! large part cannot be starved by a stream of small ones.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+pub struct CoreLease {
+    capacity: usize,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+struct State {
+    available: usize,
+    /// Tickets of waiting acquirers, FIFO.
+    queue: VecDeque<u64>,
+    next_ticket: u64,
+}
+
+pub struct LeaseGuard<'a> {
+    lease: &'a CoreLease,
+    pub n: usize,
+}
+
+impl CoreLease {
+    pub fn new(capacity: usize) -> CoreLease {
+        assert!(capacity >= 1);
+        CoreLease {
+            capacity,
+            state: Mutex::new(State { available: capacity, queue: VecDeque::new(), next_ticket: 0 }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Acquire `n` leases (clamped to capacity so a part asking for more
+    /// cores than exist still runs — matching the paper's oversubscription
+    /// tolerance). Blocks until available; FIFO order among waiters.
+    pub fn acquire(&self, n: usize) -> LeaseGuard<'_> {
+        let n = n.clamp(1, self.capacity);
+        let mut st = self.state.lock().unwrap();
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        st.queue.push_back(ticket);
+        loop {
+            let first = st.queue.front().copied();
+            if first == Some(ticket) && st.available >= n {
+                st.queue.pop_front();
+                st.available -= n;
+                // wake the next waiter in line (it may also fit)
+                self.cv.notify_all();
+                return LeaseGuard { lease: self, n };
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    pub fn available(&self) -> usize {
+        self.state.lock().unwrap().available
+    }
+
+    fn release(&self, n: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.available += n;
+        debug_assert!(st.available <= self.capacity);
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+impl Drop for LeaseGuard<'_> {
+    fn drop(&mut self) {
+        self.lease.release(self.n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn acquire_release_basic() {
+        let lease = CoreLease::new(4);
+        {
+            let g = lease.acquire(3);
+            assert_eq!(g.n, 3);
+            assert_eq!(lease.available(), 1);
+        }
+        assert_eq!(lease.available(), 4);
+    }
+
+    #[test]
+    fn over_capacity_request_clamped() {
+        let lease = CoreLease::new(4);
+        let g = lease.acquire(100);
+        assert_eq!(g.n, 4);
+        assert_eq!(lease.available(), 0);
+    }
+
+    #[test]
+    fn zero_request_rounded_to_one() {
+        let lease = CoreLease::new(2);
+        let g = lease.acquire(0);
+        assert_eq!(g.n, 1);
+    }
+
+    #[test]
+    fn never_over_leases_under_contention() {
+        let lease = Arc::new(CoreLease::new(4));
+        let active = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for i in 0..16 {
+            let lease = Arc::clone(&lease);
+            let active = Arc::clone(&active);
+            let peak = Arc::clone(&peak);
+            handles.push(std::thread::spawn(move || {
+                let n = 1 + i % 3;
+                let g = lease.acquire(n);
+                let now = active.fetch_add(g.n, Ordering::SeqCst) + g.n;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                active.fetch_sub(g.n, Ordering::SeqCst);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 4, "peak {}", peak.load(Ordering::SeqCst));
+        assert_eq!(lease.available(), 4);
+    }
+
+    #[test]
+    fn fifo_large_waiter_not_starved() {
+        // One big request queued behind a held lease must get served even
+        // while small requests keep arriving.
+        let lease = Arc::new(CoreLease::new(4));
+        let first = lease.acquire(4);
+        let big_done = Arc::new(AtomicUsize::new(0));
+
+        let l2 = Arc::clone(&lease);
+        let bd = Arc::clone(&big_done);
+        let big = std::thread::spawn(move || {
+            let _g = l2.acquire(4);
+            bd.store(1, Ordering::SeqCst);
+        });
+        // small requests arrive after the big one
+        let mut smalls = Vec::new();
+        for _ in 0..4 {
+            let l3 = Arc::clone(&lease);
+            smalls.push(std::thread::spawn(move || {
+                let _g = l3.acquire(1);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        drop(first);
+        big.join().unwrap();
+        assert_eq!(big_done.load(Ordering::SeqCst), 1);
+        for s in smalls {
+            s.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 inference engine — the paper's contribution.
+//!
+//! - [`allocator`] — Listing 1 (`prun-def`) and the `prun-1` / `prun-eq`
+//!   baselines.
+//! - [`part`] — job parts and their size-based weights.
+//! - [`lease`] — core leasing (admission control under oversubscription).
+//! - [`session`] — `run` / `prun` over the PJRT executor pool.
+
+pub mod allocator;
+pub mod lease;
+pub mod optimizer;
+pub mod part;
+pub mod profile;
+pub mod session;
+
+pub use allocator::{allocate, allocate_weighted, weights, AllocPolicy};
+pub use lease::CoreLease;
+pub use optimizer::{allocate_optimal, OptPart};
+pub use part::{part_sizes, JobPart};
+pub use profile::ProfileStore;
+pub use session::{PartReport, PrunOptions, PrunOutcome, Session, WeightSource};

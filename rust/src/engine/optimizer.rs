@@ -1,0 +1,156 @@
+//! Makespan-aware thread allocation — the "dynamic strategy" the paper
+//! leaves as future work (§4.1: "the results in Figure 4 call for a
+//! dynamic mechanism, which would choose the best thread allocation
+//! strategy based on the given workload and available resources").
+//!
+//! Given each part's single-thread cost and scalability profile, greedily
+//! assign cores by marginal benefit: every part starts at 1 thread; the
+//! next core goes to the part whose completion time drops the most, and
+//! never to a part already past its profile's optimum (where extra
+//! threads *hurt* — the paper's negative-scaling phases). This subsumes
+//! prun-1 (optimum=1 everywhere) and approaches prun-def when scaling is
+//! uniform. Ablated against the paper's policies in
+//! `benches/ablation_policies.rs`.
+
+use crate::simcpu::profile::ScalProfile;
+
+/// A part as seen by the optimizer.
+#[derive(Debug, Clone, Copy)]
+pub struct OptPart {
+    pub t1_ms: f64,
+    pub profile: ScalProfile,
+}
+
+/// Greedy marginal-benefit allocation of `cores` over `parts`.
+/// Returns thread counts (>=1 each). Cores that no part can profit from
+/// are left unassigned — unlike Listing 1, which always spends them.
+pub fn allocate_optimal(parts: &[OptPart], cores: usize) -> Vec<usize> {
+    assert!(cores >= 1);
+    let k = parts.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut alloc = vec![1usize; k];
+    if k >= cores {
+        return alloc;
+    }
+    let mut budget = cores - k;
+    let time = |i: usize, c: usize| parts[i].profile.time_ms(parts[i].t1_ms, c);
+    while budget > 0 {
+        // best (gain, index) for one more thread
+        let mut best: Option<(f64, usize)> = None;
+        for i in 0..k {
+            let gain = time(i, alloc[i]) - time(i, alloc[i] + 1);
+            if gain > 1e-12 && best.map(|(g, _)| gain > g).unwrap_or(true) {
+                best = Some((gain, i));
+            }
+        }
+        match best {
+            Some((_, i)) => {
+                alloc[i] += 1;
+                budget -= 1;
+            }
+            None => break, // every part is at (or past) its optimum
+        }
+    }
+    alloc
+}
+
+/// Expected makespan if all parts run concurrently (lower bound used by
+/// the ablation; the DES gives the exact queued value).
+pub fn expected_makespan_ms(parts: &[OptPart], alloc: &[usize]) -> f64 {
+    parts
+        .iter()
+        .zip(alloc.iter())
+        .map(|(p, &c)| p.profile.time_ms(p.t1_ms, c))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::allocator::{allocate, AllocPolicy};
+    use crate::simcpu::des::{simulate, SimPart};
+
+    fn part(t1: f64, serial: f64, ovh: f64) -> OptPart {
+        OptPart { t1_ms: t1, profile: ScalProfile::new(serial, ovh) }
+    }
+
+    #[test]
+    fn single_scalable_part_gets_cores_up_to_optimum() {
+        let p = part(160.0, 0.0, 0.0); // perfectly scalable
+        assert_eq!(allocate_optimal(&[p], 16), vec![16]);
+    }
+
+    #[test]
+    fn negative_scaling_part_stays_at_one() {
+        // optimum at 1 thread: extra threads only hurt
+        let p = part(5.0, 0.9, 2.0);
+        assert_eq!(allocate_optimal(&[p], 16), vec![1]);
+    }
+
+    #[test]
+    fn equal_parts_split_evenly() {
+        let p = part(100.0, 0.1, 0.1);
+        let alloc = allocate_optimal(&[p, p], 16);
+        assert_eq!(alloc[0] + alloc[1], 16);
+        assert!((alloc[0] as i64 - alloc[1] as i64).abs() <= 1);
+    }
+
+    #[test]
+    fn bigger_part_gets_more() {
+        let small = part(20.0, 0.1, 0.1);
+        let big = part(200.0, 0.1, 0.1);
+        let alloc = allocate_optimal(&[small, big], 16);
+        assert!(alloc[1] > alloc[0], "{alloc:?}");
+    }
+
+    #[test]
+    fn more_parts_than_cores_one_each() {
+        let p = part(50.0, 0.0, 0.0);
+        let alloc = allocate_optimal(&vec![p; 20], 16);
+        assert!(alloc.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn never_beyond_individual_optimum() {
+        // a part whose optimum is ~4 threads must not get more even with
+        // the whole machine free
+        let p = part(80.0, 0.25, 2.5);
+        let best = p.profile.optimal_threads(p.t1_ms, 16);
+        let alloc = allocate_optimal(&[p], 16);
+        assert_eq!(alloc[0], best);
+    }
+
+    #[test]
+    fn optimal_never_worse_than_prun_def_in_sim() {
+        // On the paper's negative-scaling rec phase, the dynamic policy
+        // should dominate Listing 1 (which spends all cores blindly).
+        let prof = ScalProfile::new(0.35, 6.5);
+        for k in [2usize, 3, 5, 8] {
+            let t1s: Vec<f64> = (0..k).map(|i| 30.0 + 12.0 * i as f64).collect();
+            let parts: Vec<SimPart> = t1s.iter().map(|&t| SimPart::new(t, prof)).collect();
+            let opt_parts: Vec<OptPart> =
+                t1s.iter().map(|&t| OptPart { t1_ms: t, profile: prof }).collect();
+
+            let sizes: Vec<usize> = t1s.iter().map(|&t| t as usize).collect();
+            let def = allocate(&sizes, 16, AllocPolicy::PrunDef);
+            let opt = allocate_optimal(&opt_parts, 16);
+
+            let m_def = simulate(&parts, &def, 16).makespan_ms;
+            let m_opt = simulate(&parts, &opt, 16).makespan_ms;
+            assert!(
+                m_opt <= m_def * 1.001,
+                "k={k}: optimal {m_opt} worse than prun-def {m_def} ({opt:?} vs {def:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn expected_makespan_is_max() {
+        let a = part(100.0, 0.0, 0.0);
+        let b = part(50.0, 0.0, 0.0);
+        let m = expected_makespan_ms(&[a, b], &[2, 2]);
+        assert!((m - 50.0).abs() < 1e-9);
+    }
+}

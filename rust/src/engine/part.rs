@@ -1,0 +1,52 @@
+//! Job parts: the unit `prun` divides work into.
+
+use crate::runtime::Tensor;
+
+/// One independent piece of an inference job (paper §3.1's `j_i`): a
+/// model to run and its inputs. The part's *size* — the total element
+/// count of its input tensors — is what prun-def weighs by.
+#[derive(Debug, Clone)]
+pub struct JobPart {
+    pub model: String,
+    pub inputs: Vec<Tensor>,
+}
+
+impl JobPart {
+    pub fn new(model: impl Into<String>, inputs: Vec<Tensor>) -> JobPart {
+        JobPart { model: model.into(), inputs }
+    }
+
+    /// Input-tensor size, the paper's default weight proxy (§3.1: weight
+    /// set "proportionally to the size of input tensors").
+    pub fn size(&self) -> usize {
+        self.inputs.iter().map(|t| t.size()).sum()
+    }
+}
+
+/// Extract the sizes vector for the allocator.
+pub fn part_sizes(parts: &[JobPart]) -> Vec<usize> {
+    parts.iter().map(|p| p.size()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_sums_inputs() {
+        let p = JobPart::new(
+            "m",
+            vec![Tensor::zeros_f32(vec![2, 3]), Tensor::i32(vec![4], vec![0; 4])],
+        );
+        assert_eq!(p.size(), 10);
+    }
+
+    #[test]
+    fn sizes_vector() {
+        let parts = vec![
+            JobPart::new("a", vec![Tensor::zeros_f32(vec![1, 16])]),
+            JobPart::new("b", vec![Tensor::zeros_f32(vec![1, 64])]),
+        ];
+        assert_eq!(part_sizes(&parts), vec![16, 64]);
+    }
+}

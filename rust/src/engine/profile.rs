@@ -1,0 +1,140 @@
+//! Online latency profiling — the paper's first future-work item (§6):
+//! "more dynamic thread allocation strategies, e.g. ones that can better
+//! adjust to the cases where the weight of a work chunk does not
+//! correlate linearly with its size".
+//!
+//! `ProfileStore` keeps an EWMA of per-model single-execution latency,
+//! observed from real `ExecResult`s. `PrunOptions::weights =
+//! WeightSource::Profiled` then weighs job parts by their *measured*
+//! cost instead of raw input size (the paper's §3.1 sketches exactly
+//! this: "assigning weight can be done with the help of a profiling
+//! phase ... which associates job parts of the same (or similar) shape
+//! to the relative weight obtained during profiling").
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// EWMA smoothing factor: new = alpha*obs + (1-alpha)*old.
+const ALPHA: f64 = 0.3;
+
+#[derive(Default)]
+pub struct ProfileStore {
+    ewma_ms: Mutex<HashMap<String, f64>>,
+}
+
+impl ProfileStore {
+    pub fn new() -> ProfileStore {
+        ProfileStore::default()
+    }
+
+    /// Record an observed execution of `model`.
+    pub fn observe(&self, model: &str, elapsed: Duration) {
+        let ms = elapsed.as_secs_f64() * 1e3;
+        let mut map = self.ewma_ms.lock().unwrap();
+        map.entry(model.to_string())
+            .and_modify(|v| *v = ALPHA * ms + (1.0 - ALPHA) * *v)
+            .or_insert(ms);
+    }
+
+    /// Current latency estimate for `model`, if any.
+    pub fn estimate_ms(&self, model: &str) -> Option<f64> {
+        self.ewma_ms.lock().unwrap().get(model).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ewma_ms.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Relative weights for a list of (model, size) parts: profiled
+    /// latency where known, falling back to input size for unprofiled
+    /// models (scaled into the same ballpark via the mean ms/size ratio
+    /// of the profiled parts, so mixed batches stay sane).
+    pub fn weights(&self, parts: &[(&str, usize)]) -> Vec<f64> {
+        let map = self.ewma_ms.lock().unwrap();
+        let known: Vec<(f64, usize)> = parts
+            .iter()
+            .filter_map(|(m, s)| map.get(*m).map(|&ms| (ms, *s)))
+            .collect();
+        // ms per size unit among profiled parts (1.0 if none profiled)
+        let ratio = if known.is_empty() {
+            1.0
+        } else {
+            let (ms_sum, sz_sum) = known
+                .iter()
+                .fold((0.0, 0usize), |(a, b), (ms, s)| (a + ms, b + s));
+            ms_sum / (sz_sum.max(1) as f64)
+        };
+        let raw: Vec<f64> = parts
+            .iter()
+            .map(|(m, s)| map.get(*m).copied().unwrap_or(ratio * *s as f64).max(1e-9))
+            .collect();
+        let total: f64 = raw.iter().sum();
+        raw.into_iter().map(|w| w / total).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_converges_to_observations() {
+        let p = ProfileStore::new();
+        for _ in 0..50 {
+            p.observe("m", Duration::from_millis(100));
+        }
+        let est = p.estimate_ms("m").unwrap();
+        assert!((est - 100.0).abs() < 1.0, "{est}");
+    }
+
+    #[test]
+    fn ewma_tracks_shift() {
+        let p = ProfileStore::new();
+        p.observe("m", Duration::from_millis(10));
+        for _ in 0..30 {
+            p.observe("m", Duration::from_millis(50));
+        }
+        let est = p.estimate_ms("m").unwrap();
+        assert!((est - 50.0).abs() < 1.0, "{est}");
+    }
+
+    #[test]
+    fn unknown_model_none() {
+        let p = ProfileStore::new();
+        assert!(p.estimate_ms("nope").is_none());
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn weights_use_profiles_over_sizes() {
+        // Two models with equal input sizes but 4x different measured
+        // cost: profiled weights must reflect the cost, not the size.
+        let p = ProfileStore::new();
+        p.observe("cheap", Duration::from_millis(10));
+        p.observe("dear", Duration::from_millis(40));
+        let w = p.weights(&[("cheap", 100), ("dear", 100)]);
+        assert!((w[1] / w[0] - 4.0).abs() < 1e-6, "{w:?}");
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unprofiled_fallback_scaled_by_ratio() {
+        let p = ProfileStore::new();
+        p.observe("a", Duration::from_millis(100)); // size 100 -> 1 ms/unit
+        let w = p.weights(&[("a", 100), ("unseen", 50)]);
+        // unseen gets 50 * 1.0 ms/unit = 50 -> weights 100:50
+        assert!((w[0] / w[1] - 2.0).abs() < 1e-6, "{w:?}");
+    }
+
+    #[test]
+    fn all_unprofiled_degenerates_to_sizes() {
+        let p = ProfileStore::new();
+        let w = p.weights(&[("x", 30), ("y", 10)]);
+        assert!((w[0] / w[1] - 3.0).abs() < 1e-6, "{w:?}");
+    }
+}

@@ -1,0 +1,199 @@
+//! The `prun` inference session — the paper's extended API (§3.2).
+//!
+//! `Session::run` mirrors OnnxRuntime's `InferenceSession.run`;
+//! `Session::prun` accepts a *list* of job parts, sizes a private worker
+//! allocation for each via [`allocator`](super::allocator), runs them in
+//! parallel (one coordinator thread per part, exactly like the paper's
+//! implementation creates one worker thread per input), and returns the
+//! outputs in input order.
+//!
+//! Core accounting: a part allocated `c_i` threads holds `c_i` leases
+//! from the session's [`CoreLease`] while it executes, so concurrent
+//! parts never oversubscribe the machine, and an allocation with
+//! `Σc_i > C` degrades to the paper's "run some parts after others".
+//!
+//! On this testbed the PJRT CPU executable is single-threaded, so `c_i`
+//! does not change a *real* part's execution speed — the lease models
+//! occupancy only; the calibrated simulator (crate::simcpu) models the
+//! intra-op scaling the paper measured on its 16-core VM (DESIGN.md §4).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{ExecutorPool, Manifest, Tensor};
+
+use super::allocator::{allocate_weighted, weights, AllocPolicy};
+use super::lease::CoreLease;
+use super::part::{part_sizes, JobPart};
+use super::profile::ProfileStore;
+
+/// Where part weights come from (paper §3.1: size by default; §6 future
+/// work: measured-latency profiles — implemented in engine::profile).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WeightSource {
+    #[default]
+    Size,
+    Profiled,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrunOptions {
+    pub policy: AllocPolicy,
+    pub weights: WeightSource,
+}
+
+impl Default for AllocPolicy {
+    fn default() -> Self {
+        AllocPolicy::PrunDef
+    }
+}
+
+/// Per-part timing report.
+#[derive(Debug, Clone)]
+pub struct PartReport {
+    pub threads: usize,
+    /// time from prun start until the part acquired its leases
+    pub queue: Duration,
+    /// pure execute time inside the worker
+    pub exec: Duration,
+}
+
+/// Result of a `prun` call.
+#[derive(Debug)]
+pub struct PrunOutcome {
+    /// per-part model outputs, input order
+    pub outputs: Vec<Vec<Tensor>>,
+    pub reports: Vec<PartReport>,
+    pub allocation: Vec<usize>,
+    pub wall: Duration,
+}
+
+pub struct Session {
+    pool: Arc<ExecutorPool>,
+    lease: CoreLease,
+    cores: usize,
+    manifest: Arc<Manifest>,
+    profiles: ProfileStore,
+}
+
+impl Session {
+    /// `cores` is the virtual core budget C the allocator divides;
+    /// `workers` is the number of real executor threads (usually = the
+    /// machine's available parallelism).
+    pub fn new(manifest: Arc<Manifest>, cores: usize, workers: usize) -> Result<Session> {
+        let pool = Arc::new(ExecutorPool::new(Arc::clone(&manifest), workers)?);
+        Ok(Session {
+            pool,
+            lease: CoreLease::new(cores),
+            cores,
+            manifest,
+            profiles: ProfileStore::new(),
+        })
+    }
+
+    /// Online latency profiles observed by this session.
+    pub fn profiles(&self) -> &ProfileStore {
+        &self.profiles
+    }
+
+    pub fn cores(&self) -> usize {
+        self.cores
+    }
+
+    pub fn manifest(&self) -> &Arc<Manifest> {
+        &self.manifest
+    }
+
+    pub fn pool(&self) -> &Arc<ExecutorPool> {
+        &self.pool
+    }
+
+    /// Pre-compile models on the executor workers.
+    pub fn warmup(&self, models: &[&str]) -> Result<()> {
+        self.pool.warmup(models)
+    }
+
+    /// Single-job inference using the whole core budget (the baseline the
+    /// paper compares against).
+    pub fn run(&self, model: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let _all = self.lease.acquire(self.cores);
+        let res = self.pool.run(model, inputs)?;
+        self.profiles.observe(model, res.exec_time);
+        Ok(res.outputs)
+    }
+
+    /// Parallel inference over independent job parts (the paper's `prun`).
+    pub fn prun(&self, parts: Vec<JobPart>, opts: PrunOptions) -> Result<PrunOutcome> {
+        if parts.is_empty() {
+            return Ok(PrunOutcome {
+                outputs: Vec::new(),
+                reports: Vec::new(),
+                allocation: Vec::new(),
+                wall: Duration::ZERO,
+            });
+        }
+        let sizes = part_sizes(&parts);
+        let w = match opts.weights {
+            WeightSource::Size => weights(&sizes),
+            WeightSource::Profiled => {
+                let keyed: Vec<(&str, usize)> = parts
+                    .iter()
+                    .zip(sizes.iter())
+                    .map(|(p, &s)| (p.model.as_str(), s))
+                    .collect();
+                self.profiles.weights(&keyed)
+            }
+        };
+        let allocation = allocate_weighted(&w, self.cores, opts.policy);
+        let t0 = Instant::now();
+
+        let k = parts.len();
+        // Model names survive the move into worker threads (needed for
+        // error context and profile observations).
+        let models: Vec<String> = parts.iter().map(|p| p.model.clone()).collect();
+        let mut outputs: Vec<Option<Vec<Tensor>>> = (0..k).map(|_| None).collect();
+        let mut reports: Vec<Option<PartReport>> = (0..k).map(|_| None).collect();
+
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(k);
+            // Parts are *moved* into their worker threads — the input
+            // tensors are handed to the executor without copying (§Perf:
+            // an OCR crop is ~120 KiB; cloning per part dominated the
+            // dispatch overhead before this).
+            for (part, &threads) in parts.into_iter().zip(allocation.iter()) {
+                let pool = Arc::clone(&self.pool);
+                let lease = &self.lease;
+                handles.push(scope.spawn(move || -> Result<(Vec<Tensor>, PartReport)> {
+                    // One worker thread per job part, as in the paper; the
+                    // thread leases its allocation before running.
+                    let guard = lease.acquire(threads);
+                    let queue = t0.elapsed();
+                    let model = part.model;
+                    let res = pool
+                        .run(&model, part.inputs)
+                        .with_context(|| format!("part model {model}"))?;
+                    drop(guard);
+                    Ok((res.outputs, PartReport { threads, queue, exec: res.exec_time }))
+                }));
+            }
+            for (i, h) in handles.into_iter().enumerate() {
+                let (out, rep) = h
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("prun worker {i} panicked"))??;
+                self.profiles.observe(&models[i], rep.exec);
+                outputs[i] = Some(out);
+                reports[i] = Some(rep);
+            }
+            Ok(())
+        })?;
+
+        Ok(PrunOutcome {
+            outputs: outputs.into_iter().map(Option::unwrap).collect(),
+            reports: reports.into_iter().map(Option::unwrap).collect(),
+            allocation,
+            wall: t0.elapsed(),
+        })
+    }
+}

@@ -1,0 +1,20 @@
+//! dnc-serve: Divide-and-Conquer inference serving.
+//!
+//! Reproduction of *"Improving Inference Performance of Machine Learning
+//! with the Divide-and-Conquer Principle"* (Kogan, 2023) as a three-layer
+//! Rust + JAX + Pallas stack: Pallas kernels (L1) and JAX models (L2) are
+//! AOT-lowered to HLO text at build time; this crate (L3) loads and serves
+//! them over PJRT with the paper's `prun` parallel-inference engine.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod metrics;
+pub mod runtime;
+pub mod nlp;
+pub mod ocr;
+pub mod simcpu;
+pub mod workload;
+pub mod util;
+pub mod video;

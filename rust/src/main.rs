@@ -1,0 +1,259 @@
+//! `dnc-serve` — Divide-and-Conquer inference serving CLI.
+//!
+//! ```text
+//! dnc-serve serve   [--port P] [--cores C] [--policy prun-def] ...
+//! dnc-serve ocr     [--images N] [--variant base|prun-def|...] [--seed S]
+//! dnc-serve bert    [--batch X] [--strategy pad-batch|no-batch|prun-def] [--reps N]
+//! dnc-serve figures [--only fig2,...] [--reps N]
+//! dnc-serve info
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use dnc_serve::bench::figures;
+use dnc_serve::config::Config;
+use dnc_serve::coordinator::{Server, ServerState};
+use dnc_serve::engine::Session;
+use dnc_serve::nlp::{BertServer, Strategy, Tokenizer};
+use dnc_serve::ocr::{exact_match, generate, GenOptions, OcrMeta, OcrPipeline};
+use dnc_serve::runtime::Manifest;
+use dnc_serve::util::args::Args;
+use dnc_serve::util::prng::Rng;
+use dnc_serve::util::stats::mean;
+use dnc_serve::workload::seqlen;
+use dnc_serve::{info, simcpu};
+
+fn main() {
+    dnc_serve::util::logging::init_from_env();
+    let args = Args::parse_env();
+    let result = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("ocr") => cmd_ocr(&args),
+        Some("bert") => cmd_bert(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!("{}", HELP);
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "dnc-serve — Divide-and-Conquer inference serving
+
+USAGE:
+  dnc-serve serve   [--port P] [--cores C] [--workers W] [--policy POLICY]
+                    [--max-batch N] [--max-wait-ms T] [--config FILE]
+  dnc-serve ocr     [--images N] [--variant base|prun-def|prun-1|prun-eq]
+                    [--seed S] [--boxes N] [--cores C]
+  dnc-serve bert    [--batch X] [--strategy pad-batch|no-batch|prun-def]
+                    [--reps N] [--seed S] [--cores C]
+  dnc-serve figures [--only LIST] [--reps N]   regenerate the paper's figures
+  dnc-serve info                               artifact + machine summary
+";
+
+fn load_stack(cfg: &Config) -> Result<(Arc<Session>, OcrMeta)> {
+    let manifest = Arc::new(
+        Manifest::load(&cfg.artifacts)
+            .context("loading artifacts (run `make artifacts` first)")?,
+    );
+    let session = Arc::new(Session::new(manifest, cfg.cores, cfg.workers)?);
+    let meta = OcrMeta::load(&cfg.artifacts)?;
+    Ok((session, meta))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = Config::default();
+    cfg.apply_args(args)?;
+    args.finish()?;
+    let (session, meta) = load_stack(&cfg)?;
+    let bert = BertServer::new(Arc::clone(&session));
+    let ocr = OcrPipeline::new(session, meta);
+    info!("warming up executors...");
+    ocr.warmup()?;
+    let state = ServerState::new(bert, ocr, cfg);
+    let server = Server::bind(state)?;
+    info!("ready on {} (JSON-lines; ops: ping/embed/embed_tokens/ocr/stats)", server.local_addr());
+    server.serve()
+}
+
+fn cmd_ocr(args: &Args) -> Result<()> {
+    let mut cfg = Config::default();
+    cfg.apply_args(args)?;
+    let n_images = args.usize_or("images", 10);
+    let n_boxes = args.usize_or("boxes", 0); // 0 = sample from Fig. 3 dist
+    let seed = args.u64_or("seed", 42);
+    let variant_name = args.get_or("variant", "prun-def").to_string();
+    args.finish()?;
+    let variant = dnc_serve::ocr::variant_from_name(&variant_name)
+        .with_context(|| format!("unknown variant '{variant_name}'"))?;
+
+    let (session, meta) = load_stack(&cfg)?;
+    let pipeline = OcrPipeline::new(session, meta);
+    pipeline.warmup()?;
+
+    let mut rng = Rng::new(seed);
+    let mut totals = Vec::new();
+    let (mut hits, mut boxes_total) = (0usize, 0usize);
+    let t0 = Instant::now();
+    for i in 0..n_images {
+        let count = if n_boxes > 0 {
+            n_boxes
+        } else {
+            dnc_serve::workload::boxes::sample_box_count(&mut rng)
+        };
+        let img = generate(pipeline.meta(), &mut rng, count, &GenOptions::default());
+        let res = pipeline.process(&img, variant)?;
+        let (h, n) = exact_match(&res, &img);
+        hits += h;
+        boxes_total += n;
+        totals.push(res.timing.total().as_secs_f64() * 1e3);
+        println!(
+            "image {i:3}: {} boxes, {}/{} exact, det {:.1}ms cls {:.1}ms rec {:.1}ms",
+            res.boxes.len(),
+            h,
+            n,
+            res.timing.det.as_secs_f64() * 1e3,
+            res.timing.cls.as_secs_f64() * 1e3,
+            res.timing.rec.as_secs_f64() * 1e3,
+        );
+    }
+    println!(
+        "\n{} images in {:.2}s | variant {} | mean latency {:.1} ms | exact-match {}/{} ({:.1}%)",
+        n_images,
+        t0.elapsed().as_secs_f64(),
+        variant_name,
+        mean(&totals),
+        hits,
+        boxes_total,
+        100.0 * hits as f64 / boxes_total.max(1) as f64
+    );
+    Ok(())
+}
+
+fn cmd_bert(args: &Args) -> Result<()> {
+    let mut cfg = Config::default();
+    cfg.apply_args(args)?;
+    let x = args.usize_or("batch", 4);
+    let reps = args.usize_or("reps", 10);
+    let seed = args.u64_or("seed", 7);
+    let strategy_name = args.get_or("strategy", "prun-def").to_string();
+    args.finish()?;
+    let strategy = Strategy::parse(&strategy_name)
+        .with_context(|| format!("unknown strategy '{strategy_name}'"))?;
+
+    let (session, _) = load_stack(&cfg)?;
+    let server = BertServer::new(session);
+    let tok = Tokenizer::new(server.session().manifest().bert.vocab);
+
+    let mut rng = Rng::new(seed);
+    let mut lat = Vec::new();
+    let t0 = Instant::now();
+    let mut served = 0usize;
+    for rep in 0..reps {
+        let lens = seqlen::random_batch(&mut rng, x);
+        let reqs: Vec<Vec<i32>> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| tok.synthetic(l, seed + (rep * 64 + i) as u64))
+            .collect();
+        let res = server.serve(&reqs, strategy)?;
+        lat.push(res.wall.as_secs_f64() * 1e3);
+        served += x;
+    }
+    let total = t0.elapsed().as_secs_f64();
+    println!(
+        "strategy {strategy_name} | batch {x} | {reps} reps | mean batch latency {:.1} ms | throughput {:.1} seq/s",
+        mean(&lat),
+        served as f64 / total
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let only = args.get("only").map(|s| s.to_string());
+    let reps = args.usize_or("reps", 1000);
+    args.finish()?;
+    let want = |name: &str| only.as_deref().map(|o| o.split(',').any(|x| x == name)).unwrap_or(true);
+    let threads = [1usize, 2, 4, 8, 16];
+    if want("fig2") {
+        figures::fig2(&threads).print();
+    }
+    if want("fig3") {
+        figures::fig3().print();
+    }
+    if want("fig4") {
+        figures::fig4("cls").print();
+        figures::fig4("rec").print();
+        figures::fig4("total").print();
+    }
+    if want("fig5") {
+        figures::fig5(&threads).print();
+    }
+    if want("fig6") {
+        figures::fig6(reps).print();
+    }
+    if want("fig7") {
+        figures::fig7().print();
+    }
+    if want("fig8") {
+        figures::fig8().print();
+    }
+    if want("fig9") {
+        figures::fig9().print();
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let mut cfg = Config::default();
+    cfg.apply_args(args)?;
+    args.finish()?;
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    println!("artifacts dir : {}", cfg.artifacts.display());
+    println!("executables   : {}", manifest.models.len());
+    let mut families: Vec<(&str, usize)> = Vec::new();
+    for fam in ["bert", "ocr_det", "ocr_cls", "ocr_rec"] {
+        let n = manifest.models.values().filter(|m| m.family == fam).count();
+        families.push((fam, n));
+    }
+    for (fam, n) in families {
+        println!("  {fam:8}    : {n}");
+    }
+    println!(
+        "bert          : {} layers, hidden {}, vocab {}, seq buckets {:?}, batch buckets {:?}",
+        manifest.bert.layers,
+        manifest.bert.hidden,
+        manifest.bert.vocab,
+        manifest.bert.seq_buckets,
+        manifest.bert.batch_buckets
+    );
+    println!("weights       : {} tensors in {}", manifest.bert_weights.tensors.len(), manifest.bert_weights.file);
+    println!(
+        "machine       : {} cores available; paper testbed {} cores (simulated)",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        simcpu::calib::PAPER_CORES
+    );
+    if !manifest.models.is_empty() {
+        bail_if_missing(&manifest, &cfg)?;
+    }
+    Ok(())
+}
+
+fn bail_if_missing(manifest: &Manifest, cfg: &Config) -> Result<()> {
+    for entry in manifest.models.values() {
+        let p = cfg.artifacts.join(&entry.hlo);
+        if !p.exists() {
+            bail!("manifest references missing HLO file {}", p.display());
+        }
+    }
+    println!("all HLO files present ✓");
+    Ok(())
+}

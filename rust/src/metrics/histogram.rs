@@ -1,0 +1,193 @@
+//! Log-bucketed latency histogram (HdrHistogram-lite).
+//!
+//! Buckets are powers of sqrt(2) over microseconds, giving <= ~6% relative
+//! quantile error across 1 us .. 70 s with 64 buckets — plenty for serving
+//! latency reporting, and allocation-free on the record path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BUCKETS: usize = 64;
+const SQRT2: f64 = std::f64::consts::SQRT_2;
+
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    total: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            total: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        if us <= 1 {
+            return 0;
+        }
+        // log_sqrt2(us) = 2*log2(us)
+        let b = (2.0 * (us as f64).log2()).floor() as usize;
+        b.min(BUCKETS - 1)
+    }
+
+    /// Lower edge (us) of bucket i.
+    fn bucket_floor(i: usize) -> f64 {
+        SQRT2.powi(i as i32)
+    }
+
+    pub fn record(&self, duration: std::time::Duration) {
+        self.record_us(duration.as_micros() as u64);
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.counts[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile (0..=1) in microseconds.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for i in 0..BUCKETS {
+            acc += self.counts[i].load(Ordering::Relaxed);
+            if acc >= target {
+                // midpoint of the bucket in log space
+                return Self::bucket_floor(i) * SQRT2.sqrt();
+            }
+        }
+        self.max_us() as f64
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            count: self.count(),
+            mean_us: self.mean_us(),
+            p50_us: self.quantile_us(0.50),
+            p95_us: self.quantile_us(0.95),
+            p99_us: self.quantile_us(0.99),
+            max_us: self.max_us(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: u64,
+}
+
+impl Snapshot {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num, obj};
+        obj(vec![
+            ("count", num(self.count as f64)),
+            ("mean_us", num(self.mean_us)),
+            ("p50_us", num(self.p50_us)),
+            ("p95_us", num(self.p95_us)),
+            ("p99_us", num(self.p99_us)),
+            ("max_us", num(self.max_us as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.quantile_us(0.5), 0.0);
+    }
+
+    #[test]
+    fn mean_and_max_exact() {
+        let h = Histogram::new();
+        for us in [100u64, 200, 300] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean_us() - 200.0).abs() < 1e-9);
+        assert_eq!(h.max_us(), 300);
+    }
+
+    #[test]
+    fn quantiles_within_bucket_error() {
+        let h = Histogram::new();
+        for us in 1..=10_000u64 {
+            h.record_us(us);
+        }
+        let p50 = h.quantile_us(0.50);
+        let p99 = h.quantile_us(0.99);
+        assert!((p50 / 5000.0 - 1.0).abs() < 0.45, "p50={p50}");
+        assert!((p99 / 9900.0 - 1.0).abs() < 0.45, "p99={p99}");
+        assert!(p99 > p50);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.record_us(t * 1000 + i);
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn snapshot_json_shape() {
+        let h = Histogram::new();
+        h.record_us(500);
+        let j = h.snapshot().to_json();
+        assert_eq!(j.get("count").unwrap().as_usize().unwrap(), 1);
+        assert!(j.get("p99_us").is_some());
+    }
+}

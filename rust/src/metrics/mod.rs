@@ -1,0 +1,101 @@
+//! Serving metrics: counters + latency histograms with JSON snapshots.
+
+pub mod histogram;
+
+pub use histogram::{Histogram, Snapshot};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::{num, Json};
+
+/// Named counters and histograms shared across the serving stack.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<HashMap<String, Arc<AtomicU64>>>,
+    histograms: Mutex<HashMap<String, Arc<Histogram>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Arc<Metrics> {
+        Arc::new(Metrics::default())
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut map = self.counters.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    pub fn add(&self, name: &str, delta: u64) {
+        self.counter(name).fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().unwrap();
+        Arc::clone(
+            map.entry(name.to_string())
+                .or_insert_with(|| Arc::new(Histogram::new())),
+        )
+    }
+
+    pub fn record(&self, name: &str, d: std::time::Duration) {
+        self.histogram(name).record(d);
+    }
+
+    /// JSON snapshot of everything (served by the `stats` op).
+    pub fn snapshot_json(&self) -> Json {
+        let mut pairs: Vec<(String, Json)> = Vec::new();
+        {
+            let counters = self.counters.lock().unwrap();
+            let mut names: Vec<_> = counters.keys().cloned().collect();
+            names.sort();
+            for name in names {
+                pairs.push((
+                    format!("counter.{name}"),
+                    num(counters[&name].load(Ordering::Relaxed) as f64),
+                ));
+            }
+        }
+        {
+            let hists = self.histograms.lock().unwrap();
+            let mut names: Vec<_> = hists.keys().cloned().collect();
+            names.sort();
+            for name in names {
+                pairs.push((format!("latency.{name}"), hists[&name].snapshot().to_json()));
+            }
+        }
+        Json::Obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.add("requests", 2);
+        m.add("requests", 3);
+        assert_eq!(m.counter("requests").load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn histograms_shared_by_name() {
+        let m = Metrics::new();
+        m.record("serve", std::time::Duration::from_micros(100));
+        m.record("serve", std::time::Duration::from_micros(300));
+        assert_eq!(m.histogram("serve").count(), 2);
+    }
+
+    #[test]
+    fn snapshot_contains_both_kinds() {
+        let m = Metrics::new();
+        m.add("reqs", 1);
+        m.record("lat", std::time::Duration::from_micros(50));
+        let j = m.snapshot_json();
+        assert!(j.get("counter.reqs").is_some());
+        assert!(j.get("latency.lat").is_some());
+    }
+}

@@ -1,0 +1,9 @@
+//! BERT serving substrate (paper §4.2/§4.3): tokenizer, length
+//! bucketing, and the three batch-serving strategies (pad-batch /
+//! no-batch / prun).
+
+pub mod serving;
+pub mod tokenizer;
+
+pub use serving::{BatchResult, BertServer, Strategy};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,158 @@
+//! BERT batch-serving strategies over the real engine (paper §4.2/§4.3).
+//!
+//! Mirrors `simcpu::bert` in real execution: `pad-batch` pads the whole
+//! batch to one (bucketed) shape and runs it once; `no-batch` runs each
+//! sequence alone; `prun` gives each sequence its own part at its own
+//! length bucket. Shape bucketing (DESIGN.md §4) stands in for the
+//! paper's exact-length runs: a sequence of length L runs in the smallest
+//! artifact bucket >= L, padded with PAD only to the bucket edge.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::engine::{AllocPolicy, JobPart, PrunOptions, Session};
+use crate::runtime::Tensor;
+
+use super::tokenizer::Tokenizer;
+
+/// Serving strategy for a batch of variable-length requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    PadBatch,
+    NoBatch,
+    Prun(AllocPolicy),
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::PadBatch => "pad-batch",
+            Strategy::NoBatch => "no-batch",
+            Strategy::Prun(p) => p.name(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s {
+            "pad-batch" | "batch" => Some(Strategy::PadBatch),
+            "no-batch" => Some(Strategy::NoBatch),
+            other => AllocPolicy::parse(other).map(Strategy::Prun),
+        }
+    }
+}
+
+/// Result of serving one batch.
+#[derive(Debug)]
+pub struct BatchResult {
+    /// pooled embedding per request, request order
+    pub outputs: Vec<Vec<f32>>,
+    pub wall: Duration,
+    /// model invocations performed (1 for pad-batch, k otherwise)
+    pub invocations: usize,
+}
+
+pub struct BertServer {
+    session: Arc<Session>,
+}
+
+impl BertServer {
+    pub fn new(session: Arc<Session>) -> BertServer {
+        BertServer { session }
+    }
+
+    pub fn session(&self) -> &Arc<Session> {
+        &self.session
+    }
+
+    pub fn tokenizer(&self) -> Tokenizer {
+        Tokenizer::new(self.session.manifest().bert.vocab)
+    }
+
+    /// Serve a batch of token-id sequences (unpadded, variable length).
+    pub fn serve(&self, requests: &[Vec<i32>], strategy: Strategy) -> Result<BatchResult> {
+        if requests.is_empty() {
+            bail!("empty batch");
+        }
+        let m = self.session.manifest();
+        let t0 = Instant::now();
+        match strategy {
+            Strategy::PadBatch => {
+                let max_len = requests.iter().map(Vec::len).max().unwrap();
+                let seq = m.seq_bucket(max_len)?;
+                let batch = m.batch_bucket(requests.len())?;
+                let mut data = Vec::with_capacity(batch * seq);
+                for r in requests {
+                    data.extend(Tokenizer::pad(r, seq));
+                }
+                // dummy rows fill the batch bucket
+                data.resize(batch * seq, super::tokenizer::PAD_ID);
+                let model = m.bert_model_name(batch, seq);
+                let out = self.session.run(&model, vec![Tensor::i32(vec![batch, seq], data)])?;
+                let pooled = out[0].as_f32()?;
+                let hidden = out[0].shape[1];
+                let outputs = requests
+                    .iter()
+                    .enumerate()
+                    .map(|(i, _)| pooled[i * hidden..(i + 1) * hidden].to_vec())
+                    .collect();
+                Ok(BatchResult { outputs, wall: t0.elapsed(), invocations: 1 })
+            }
+            Strategy::NoBatch => {
+                let mut outputs = Vec::with_capacity(requests.len());
+                for r in requests {
+                    let (model, tensor) = self.single_part(r)?;
+                    let out = self.session.run(&model, vec![tensor])?;
+                    outputs.push(out[0].as_f32()?.to_vec());
+                }
+                Ok(BatchResult { outputs, wall: t0.elapsed(), invocations: requests.len() })
+            }
+            Strategy::Prun(policy) => {
+                let parts = requests
+                    .iter()
+                    .map(|r| {
+                        let (model, tensor) = self.single_part(r)?;
+                        Ok(JobPart::new(model, vec![tensor]))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let outcome = self.session.prun(parts, PrunOptions { policy, ..Default::default() })?;
+                let outputs = outcome
+                    .outputs
+                    .iter()
+                    .map(|out| Ok(out[0].as_f32()?.to_vec()))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(BatchResult {
+                    outputs,
+                    wall: t0.elapsed(),
+                    invocations: requests.len(),
+                })
+            }
+        }
+    }
+
+    /// (model name, [1, bucket] tensor) for a single request.
+    fn single_part(&self, ids: &[i32]) -> Result<(String, Tensor)> {
+        let m = self.session.manifest();
+        let seq = m.seq_bucket(ids.len())?;
+        let data = Tokenizer::pad(ids, seq);
+        Ok((m.bert_model_name(1, seq), Tensor::i32(vec![1, seq], data)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_names_parse() {
+        assert_eq!(Strategy::parse("pad-batch"), Some(Strategy::PadBatch));
+        assert_eq!(Strategy::parse("no-batch"), Some(Strategy::NoBatch));
+        assert_eq!(
+            Strategy::parse("prun-def"),
+            Some(Strategy::Prun(AllocPolicy::PrunDef))
+        );
+        assert_eq!(Strategy::parse("bogus"), None);
+        assert_eq!(Strategy::Prun(AllocPolicy::PrunEq).name(), "prun-eq");
+    }
+}

@@ -1,0 +1,145 @@
+//! Tokenizer for the BERT serving path.
+//!
+//! Deterministic hash-based wordpiece-lite: lowercase, split on
+//! non-alphanumerics, greedy-chunk long words, FNV-hash each piece into
+//! the model's vocab range (reserving the special ids). Untrained BERT
+//! weights mean token *identity* only has to be stable, not meaningful —
+//! what the serving experiments exercise is sequence length.
+
+pub const PAD_ID: i32 = 0;
+pub const CLS_ID: i32 = 1;
+pub const SEP_ID: i32 = 2;
+pub const UNK_ID: i32 = 3;
+pub const FIRST_WORD_ID: i32 = 4;
+
+pub struct Tokenizer {
+    vocab: usize,
+    max_piece: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize) -> Tokenizer {
+        assert!(vocab > FIRST_WORD_ID as usize);
+        Tokenizer { vocab, max_piece: 8 }
+    }
+
+    /// Encode text into ids: [CLS] pieces... [SEP], truncated to max_len.
+    pub fn encode(&self, text: &str, max_len: usize) -> Vec<i32> {
+        assert!(max_len >= 2, "need room for CLS and SEP");
+        let mut ids = vec![CLS_ID];
+        'outer: for word in text
+            .to_lowercase()
+            .split(|c: char| !c.is_alphanumeric())
+            .filter(|w| !w.is_empty())
+        {
+            let bytes = word.as_bytes();
+            let mut i = 0;
+            while i < bytes.len() {
+                let end = (i + self.max_piece).min(bytes.len());
+                ids.push(self.piece_id(&bytes[i..end], i > 0));
+                i = end;
+                if ids.len() == max_len - 1 {
+                    break 'outer;
+                }
+            }
+        }
+        ids.push(SEP_ID);
+        ids
+    }
+
+    fn piece_id(&self, piece: &[u8], continuation: bool) -> i32 {
+        // FNV-1a, salted with the continuation flag (## prefix analogue)
+        let mut h: u64 = 0xcbf29ce484222325 ^ (continuation as u64);
+        for &b in piece {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        let range = self.vocab as u64 - FIRST_WORD_ID as u64;
+        (FIRST_WORD_ID as u64 + h % range) as i32
+    }
+
+    /// Pad ids to `len` with PAD (the pad-batch baseline's padding).
+    pub fn pad(ids: &[i32], len: usize) -> Vec<i32> {
+        assert!(ids.len() <= len);
+        let mut out = ids.to_vec();
+        out.resize(len, PAD_ID);
+        out
+    }
+
+    /// Synthetic sequence of exactly `len` tokens (for workload gen).
+    pub fn synthetic(&self, len: usize, seed: u64) -> Vec<i32> {
+        assert!(len >= 2);
+        let mut rng = crate::util::prng::Rng::new(seed);
+        let mut ids = vec![CLS_ID];
+        let range = self.vocab as u64 - FIRST_WORD_ID as u64;
+        for _ in 0..len - 2 {
+            ids.push((FIRST_WORD_ID as u64 + rng.next_u64() % range) as i32);
+        }
+        ids.push(SEP_ID);
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_has_cls_sep_and_is_deterministic() {
+        let t = Tokenizer::new(8192);
+        let a = t.encode("Hello, world!", 64);
+        let b = t.encode("Hello, world!", 64);
+        assert_eq!(a, b);
+        assert_eq!(a[0], CLS_ID);
+        assert_eq!(*a.last().unwrap(), SEP_ID);
+        assert_eq!(a.len(), 4); // CLS hello world SEP
+    }
+
+    #[test]
+    fn case_and_punct_insensitive_splitting() {
+        let t = Tokenizer::new(8192);
+        assert_eq!(t.encode("HELLO world", 64), t.encode("hello, WORLD", 64));
+    }
+
+    #[test]
+    fn long_words_chunked() {
+        let t = Tokenizer::new(8192);
+        let ids = t.encode("abcdefghijklmnop", 64); // 16 chars -> 2 pieces
+        assert_eq!(ids.len(), 4);
+        // continuation piece differs from the same bytes at word start
+        let a = t.encode("abcdefgh", 64)[1];
+        assert_ne!(ids[2], a, "continuation salt distinguishes pieces");
+    }
+
+    #[test]
+    fn truncation_respects_max_len() {
+        let t = Tokenizer::new(8192);
+        let long_text = "word ".repeat(100);
+        let ids = t.encode(&long_text, 16);
+        assert_eq!(ids.len(), 16);
+        assert_eq!(*ids.last().unwrap(), SEP_ID);
+    }
+
+    #[test]
+    fn ids_in_vocab_range() {
+        let t = Tokenizer::new(8192);
+        for id in t.encode("The quick brown fox jumps over the lazy dog 1234567890", 64) {
+            assert!((0..8192).contains(&id));
+        }
+    }
+
+    #[test]
+    fn pad_fills_with_pad_id() {
+        let padded = Tokenizer::pad(&[CLS_ID, 42, SEP_ID], 6);
+        assert_eq!(padded, vec![CLS_ID, 42, SEP_ID, PAD_ID, PAD_ID, PAD_ID]);
+    }
+
+    #[test]
+    fn synthetic_exact_length_and_seeded() {
+        let t = Tokenizer::new(8192);
+        let a = t.synthetic(37, 5);
+        assert_eq!(a.len(), 37);
+        assert_eq!(a, t.synthetic(37, 5));
+        assert_ne!(a, t.synthetic(37, 6));
+    }
+}

@@ -1,0 +1,103 @@
+//! Recognizer-output decoding: per-slot log-probs -> text.
+//!
+//! The recognizer emits [slots, n_classes] log-probabilities. Decoding is
+//! CTC-style argmax: take the best class per slot, drop the marker slot,
+//! stop at the first blank (the generator leaves no embedded blanks), and
+//! map the rest through the charset.
+
+use anyhow::{bail, Result};
+
+use super::meta::OcrMeta;
+
+/// Argmax per row of a [rows, n_classes] flat matrix.
+pub fn argmax_rows(logp: &[f32], n_classes: usize) -> Vec<usize> {
+    logp.chunks(n_classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Decode per-slot class ids into text.
+pub fn decode_ids(ids: &[usize], meta: &OcrMeta) -> Result<String> {
+    let mut out = String::new();
+    let mut seen_blank = false;
+    for (slot, &id) in ids.iter().enumerate() {
+        if id == meta.marker_id {
+            if slot != 0 {
+                bail!("marker class in interior slot {slot}");
+            }
+            continue;
+        }
+        if id == meta.blank_id {
+            seen_blank = true;
+            continue;
+        }
+        if seen_blank {
+            bail!("character after blank at slot {slot} — misaligned crop?");
+        }
+        if id >= meta.charset.len() {
+            bail!("class id {id} out of charset range");
+        }
+        out.push(meta.charset[id]);
+    }
+    Ok(out)
+}
+
+/// Full decode from the recognizer output tensor data.
+pub fn decode(logp: &[f32], n_classes: usize, meta: &OcrMeta) -> Result<String> {
+    decode_ids(&argmax_rows(logp, n_classes), meta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_dir;
+
+    fn meta() -> Option<OcrMeta> {
+        let dir = artifacts_dir();
+        if !dir.join("ocr_meta.json").exists() {
+            return None;
+        }
+        Some(OcrMeta::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let logp = [0.1f32, 0.9, 0.0, 0.7, 0.2, 0.1];
+        assert_eq!(argmax_rows(&logp, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn decode_marker_chars_blanks() {
+        let Some(m) = meta() else { return };
+        // marker, 'a'(0), 'b'(1), blank, blank
+        let ids = vec![m.marker_id, 0, 1, m.blank_id, m.blank_id];
+        assert_eq!(decode_ids(&ids, &m).unwrap(), "ab");
+    }
+
+    #[test]
+    fn decode_rejects_char_after_blank() {
+        let Some(m) = meta() else { return };
+        let ids = vec![m.marker_id, 0, m.blank_id, 1];
+        assert!(decode_ids(&ids, &m).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_interior_marker() {
+        let Some(m) = meta() else { return };
+        let ids = vec![m.marker_id, 0, m.marker_id];
+        assert!(decode_ids(&ids, &m).is_err());
+    }
+
+    #[test]
+    fn decode_empty_text() {
+        let Some(m) = meta() else { return };
+        let ids = vec![m.marker_id, m.blank_id, m.blank_id];
+        assert_eq!(decode_ids(&ids, &m).unwrap(), "");
+    }
+}

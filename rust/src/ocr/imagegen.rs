@@ -1,0 +1,292 @@
+//! Synthetic document-image generator — the OpenImages substitute
+//! (DESIGN.md §4): pages with glyph-coded text boxes at known positions,
+//! so the pipeline's output can be checked exactly against ground truth.
+//!
+//! Layout contract (shared with `python/compile/model.py`):
+//! - page background ~0 brightness (plus optional noise);
+//! - a text box is `box_h` tall: column-constant pattern of bright (1.0)
+//!   and ink (box_ink) columns — marker slot then one 8-column glyph per
+//!   character;
+//! - a "rotated" box is the 180° rotation of its upright rendering;
+//! - boxes are separated by >= 16 px so the detector's 8x8/stride-4
+//!   pooling keeps them as distinct components.
+
+use crate::runtime::Tensor;
+use crate::util::prng::Rng;
+
+use super::meta::OcrMeta;
+
+/// Ground-truth box.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GtBox {
+    pub x: usize,
+    pub y: usize,
+    pub width: usize,
+    pub text: String,
+    pub flipped: bool,
+}
+
+/// A generated page with ground truth.
+#[derive(Debug, Clone)]
+pub struct Image {
+    /// channel-major pixels, [3, img_h, img_w] flattened
+    pub pixels: Vec<f32>,
+    pub boxes: Vec<GtBox>,
+}
+
+impl Image {
+    /// As the detector's input tensor [1, 3, H, W].
+    pub fn to_tensor(&self, meta: &OcrMeta) -> Tensor {
+        Tensor::f32(vec![1, 3, meta.img_h, meta.img_w], self.pixels.clone())
+    }
+
+    pub fn texts(&self) -> Vec<&str> {
+        self.boxes.iter().map(|b| b.text.as_str()).collect()
+    }
+}
+
+/// Generator options.
+#[derive(Debug, Clone)]
+pub struct GenOptions {
+    /// uniform noise amplitude added per pixel (clamped to [0,1])
+    pub noise: f32,
+    /// probability a box is rendered rotated by 180°
+    pub flip_prob: f64,
+    /// text length range (chars)
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        GenOptions { noise: 0.03, flip_prob: 0.3, min_len: 3, max_len: 20 }
+    }
+}
+
+const H_GAP: usize = 16;
+const V_GAP: usize = 16;
+const MARGIN: usize = 8;
+
+/// Generate a page with (up to) `n_boxes` text boxes. Fewer boxes are
+/// placed if the page runs out of room (caller can check `boxes.len()`).
+pub fn generate(meta: &OcrMeta, rng: &mut Rng, n_boxes: usize, opts: &GenOptions) -> Image {
+    let mut pixels = vec![0.0f32; 3 * meta.img_h * meta.img_w];
+    let mut boxes = Vec::new();
+
+    // Row-major greedy placement.
+    let rows = (meta.img_h - 2 * MARGIN + V_GAP) / (meta.box_h + V_GAP);
+    let mut cursor_y = MARGIN;
+    let mut cursor_x = MARGIN;
+    let mut row = 0;
+
+    while boxes.len() < n_boxes && row < rows {
+        let len = rng.usize_in(opts.min_len, opts.max_len.min(meta.max_text_len()));
+        let width = meta.text_width(len);
+        if cursor_x + width + MARGIN > meta.img_w {
+            // next row
+            row += 1;
+            cursor_y += meta.box_h + V_GAP;
+            cursor_x = MARGIN;
+            continue;
+        }
+        let text: String = (0..len)
+            .map(|_| meta.charset[rng.usize_in(0, meta.charset.len() - 1)])
+            .collect();
+        let flipped = rng.bool(opts.flip_prob);
+        draw_box(&mut pixels, meta, cursor_x, cursor_y, &text, flipped);
+        boxes.push(GtBox { x: cursor_x, y: cursor_y, width, text, flipped });
+        cursor_x += width + H_GAP;
+    }
+
+    if opts.noise > 0.0 {
+        // One RNG draw per pixel location, shared across the three
+        // channels (§Perf: per-channel draws tripled generation cost; the
+        // models consume channel means, so the distinction is immaterial).
+        let plane = meta.img_h * meta.img_w;
+        for i in 0..plane {
+            let delta = (rng.f32() * 2.0 - 1.0) * opts.noise;
+            for ch in 0..3 {
+                let p = &mut pixels[ch * plane + i];
+                *p = (*p + delta).clamp(0.0, 1.0);
+            }
+        }
+    }
+    Image { pixels, boxes }
+}
+
+/// Column pattern of a rendered text: marker slot then per-char glyphs.
+pub fn column_pattern(meta: &OcrMeta, text: &str) -> Vec<f32> {
+    let mut cols = Vec::with_capacity(meta.text_width(text.chars().count()));
+    for &bit in &meta.marker_slot {
+        cols.push(if bit == 1 { 1.0 } else { meta.box_ink });
+    }
+    for c in text.chars() {
+        let idx = meta
+            .char_index(c)
+            .unwrap_or_else(|| panic!("char '{c}' not in charset"));
+        for &bit in meta.glyph_code(idx) {
+            cols.push(if bit == 1.0 { 1.0 } else { meta.box_ink });
+        }
+    }
+    cols
+}
+
+fn draw_box(pixels: &mut [f32], meta: &OcrMeta, x: usize, y: usize, text: &str, flipped: bool) {
+    let mut cols = column_pattern(meta, text);
+    if flipped {
+        cols.reverse(); // column-constant pattern: 180° rotation == reverse
+    }
+    let plane = meta.img_h * meta.img_w;
+    for (j, &v) in cols.iter().enumerate() {
+        for r in 0..meta.box_h {
+            let base = (y + r) * meta.img_w + x + j;
+            for ch in 0..3 {
+                pixels[ch * plane + base] = v;
+            }
+        }
+    }
+}
+
+/// Crop a box region out of an image, padded to `bucket_w`, as the
+/// classifier/recognizer input tensor [1, 3, box_h, bucket_w].
+pub fn crop_tensor(
+    img: &Image,
+    meta: &OcrMeta,
+    x: usize,
+    y: usize,
+    width: usize,
+    bucket_w: usize,
+    rotate180: bool,
+) -> Tensor {
+    assert!(width <= bucket_w);
+    let plane = meta.img_h * meta.img_w;
+    let mut out = vec![0.0f32; 3 * meta.box_h * bucket_w];
+    for ch in 0..3 {
+        for r in 0..meta.box_h {
+            for c in 0..width {
+                let (sr, sc) = if rotate180 {
+                    (meta.box_h - 1 - r, width - 1 - c)
+                } else {
+                    (r, c)
+                };
+                out[ch * meta.box_h * bucket_w + r * bucket_w + c] =
+                    img.pixels[ch * plane + (y + sr) * meta.img_w + x + sc];
+            }
+        }
+    }
+    Tensor::f32(vec![1, 3, meta.box_h, bucket_w], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_dir;
+
+    fn meta() -> Option<OcrMeta> {
+        let dir = artifacts_dir();
+        if !dir.join("ocr_meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(OcrMeta::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn generates_requested_boxes() {
+        let Some(m) = meta() else { return };
+        let mut rng = Rng::new(1);
+        let img = generate(&m, &mut rng, 4, &GenOptions::default());
+        assert_eq!(img.boxes.len(), 4);
+        assert_eq!(img.pixels.len(), 3 * m.img_h * m.img_w);
+        // boxes inside the page and non-overlapping rows/cols
+        for b in &img.boxes {
+            assert!(b.x + b.width <= m.img_w);
+            assert!(b.y + m.box_h <= m.img_h);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let Some(m) = meta() else { return };
+        let a = generate(&m, &mut Rng::new(7), 3, &GenOptions::default());
+        let b = generate(&m, &mut Rng::new(7), 3, &GenOptions::default());
+        assert_eq!(a.pixels, b.pixels);
+        assert_eq!(a.boxes, b.boxes);
+    }
+
+    #[test]
+    fn box_pixels_bright_background_dark() {
+        let Some(m) = meta() else { return };
+        let opts = GenOptions { noise: 0.0, flip_prob: 0.0, ..Default::default() };
+        let img = generate(&m, &mut Rng::new(3), 2, &opts);
+        let b = &img.boxes[0];
+        // marker column 0 is bright
+        let v = img.pixels[b.y * m.img_w + b.x];
+        assert_eq!(v, 1.0);
+        // background corner dark
+        assert_eq!(img.pixels[0], 0.0);
+        // inside-box ink columns >= box_ink
+        let v2 = img.pixels[b.y * m.img_w + b.x + 4]; // marker cols 4..8 are ink
+        assert_eq!(v2, m.box_ink);
+    }
+
+    #[test]
+    fn flipped_box_is_reversed_pattern() {
+        let Some(m) = meta() else { return };
+        let opts = GenOptions { noise: 0.0, flip_prob: 1.0, ..Default::default() };
+        let img = generate(&m, &mut Rng::new(9), 1, &opts);
+        let b = &img.boxes[0];
+        assert!(b.flipped);
+        // last column of a flipped box = first column of upright = bright
+        let v = img.pixels[b.y * m.img_w + b.x + b.width - 1];
+        assert_eq!(v, 1.0);
+    }
+
+    #[test]
+    fn crop_recovers_column_pattern() {
+        let Some(m) = meta() else { return };
+        let opts = GenOptions { noise: 0.0, flip_prob: 0.0, ..Default::default() };
+        let img = generate(&m, &mut Rng::new(11), 1, &opts);
+        let b = &img.boxes[0];
+        let bucket = m.width_bucket(b.width).unwrap();
+        let crop = crop_tensor(&img, &m, b.x, b.y, b.width, bucket, false);
+        let data = crop.as_f32().unwrap();
+        let pattern = column_pattern(&m, &b.text);
+        for (j, &want) in pattern.iter().enumerate() {
+            assert_eq!(data[j], want, "col {j}");
+        }
+        // padding is zero
+        assert_eq!(data[bucket - 1], 0.0);
+    }
+
+    #[test]
+    fn crop_rotate180_unflips() {
+        let Some(m) = meta() else { return };
+        let opts = GenOptions { noise: 0.0, flip_prob: 1.0, ..Default::default() };
+        let img = generate(&m, &mut Rng::new(13), 1, &opts);
+        let b = &img.boxes[0];
+        let bucket = m.width_bucket(b.width).unwrap();
+        let crop = crop_tensor(&img, &m, b.x, b.y, b.width, bucket, true);
+        let data = crop.as_f32().unwrap();
+        let pattern = column_pattern(&m, &b.text);
+        for (j, &want) in pattern.iter().enumerate() {
+            assert_eq!(data[j], want, "col {j}");
+        }
+    }
+
+    #[test]
+    fn too_many_boxes_truncated_not_overlapping() {
+        let Some(m) = meta() else { return };
+        let mut rng = Rng::new(5);
+        let img = generate(&m, &mut rng, 50, &GenOptions::default());
+        assert!(img.boxes.len() < 50);
+        // pairwise disjoint (rows are disjoint by construction; check x in same row)
+        for a in &img.boxes {
+            for b in &img.boxes {
+                if a != b && a.y == b.y {
+                    assert!(a.x + a.width <= b.x || b.x + b.width <= a.x);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Typed view of `artifacts/ocr_meta.json` — glyph codebook and geometry
+//! shared between the Python models and the Rust generator/decoder.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct OcrMeta {
+    pub charset: Vec<char>,
+    pub glyph_w: usize,
+    pub box_h: usize,
+    pub marker_slot: Vec<u8>,
+    pub img_h: usize,
+    pub img_w: usize,
+    pub pool: usize,
+    pub stride: usize,
+    pub det_thresh: f64,
+    pub box_ink: f32,
+    pub rec_width_buckets: Vec<usize>,
+    pub n_classes: usize,
+    pub blank_id: usize,
+    pub marker_id: usize,
+    /// [n_classes][glyph_w] binary codes
+    pub codebook: Vec<Vec<f32>>,
+}
+
+impl OcrMeta {
+    pub fn load(artifacts_dir: &Path) -> Result<OcrMeta> {
+        let v = Json::parse_file(&artifacts_dir.join("ocr_meta.json"))?;
+        let charset: Vec<char> = v.req("charset")?.as_str().context("charset")?.chars().collect();
+        let codebook = v
+            .req("codebook")?
+            .as_arr()
+            .context("codebook")?
+            .iter()
+            .map(|row| row.f32_arr())
+            .collect::<Result<Vec<_>>>()?;
+        let meta = OcrMeta {
+            glyph_w: v.req("glyph_w")?.as_usize().context("glyph_w")?,
+            box_h: v.req("box_h")?.as_usize().context("box_h")?,
+            marker_slot: v
+                .req("marker_slot")?
+                .usize_arr()?
+                .into_iter()
+                .map(|b| b as u8)
+                .collect(),
+            img_h: v.req("img_h")?.as_usize().context("img_h")?,
+            img_w: v.req("img_w")?.as_usize().context("img_w")?,
+            pool: v.req("pool")?.as_usize().context("pool")?,
+            stride: v.req("stride")?.as_usize().context("stride")?,
+            det_thresh: v.req("det_thresh")?.as_f64().context("det_thresh")?,
+            box_ink: v.req("box_ink")?.as_f64().context("box_ink")? as f32,
+            rec_width_buckets: v.req("rec_width_buckets")?.usize_arr()?,
+            n_classes: v.req("n_classes")?.as_usize().context("n_classes")?,
+            blank_id: v.req("blank_id")?.as_usize().context("blank_id")?,
+            marker_id: v.req("marker_id")?.as_usize().context("marker_id")?,
+            charset,
+            codebook,
+        };
+        if meta.codebook.len() != meta.n_classes {
+            bail!("codebook rows {} != n_classes {}", meta.codebook.len(), meta.n_classes);
+        }
+        Ok(meta)
+    }
+
+    pub fn char_index(&self, c: char) -> Option<usize> {
+        self.charset.iter().position(|&x| x == c)
+    }
+
+    /// 8-column glyph code for a charset index (from the codebook).
+    pub fn glyph_code(&self, idx: usize) -> &[f32] {
+        &self.codebook[idx]
+    }
+
+    /// Smallest recognizer width bucket that fits a box of `width` px.
+    pub fn width_bucket(&self, width: usize) -> Result<usize> {
+        self.rec_width_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= width)
+            .with_context(|| format!("box width {width} exceeds largest bucket"))
+    }
+
+    /// Pixel width of a rendered text of `n` chars (marker + glyphs).
+    pub fn text_width(&self, n_chars: usize) -> usize {
+        (n_chars + 1) * self.glyph_w
+    }
+
+    /// Longest text that still fits the largest width bucket.
+    pub fn max_text_len(&self) -> usize {
+        self.rec_width_buckets.last().unwrap() / self.glyph_w - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_dir;
+
+    fn meta() -> Option<OcrMeta> {
+        let dir = artifacts_dir();
+        if !dir.join("ocr_meta.json").exists() {
+            return None;
+        }
+        Some(OcrMeta::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn loads_and_is_consistent() {
+        let Some(m) = meta() else { return };
+        assert_eq!(m.charset.len(), 64);
+        assert_eq!(m.n_classes, 66);
+        assert_eq!(m.glyph_w, 8);
+        assert_eq!(m.codebook.len(), 66);
+        assert!(m.codebook.iter().all(|r| r.len() == m.glyph_w));
+        // blank row is all zero, marker row matches marker_slot
+        assert!(m.codebook[m.blank_id].iter().all(|&x| x == 0.0));
+        for (a, &b) in m.codebook[m.marker_id].iter().zip(m.marker_slot.iter()) {
+            assert_eq!(*a, b as f32);
+        }
+    }
+
+    #[test]
+    fn char_roundtrip() {
+        let Some(m) = meta() else { return };
+        for (i, &c) in m.charset.iter().enumerate() {
+            assert_eq!(m.char_index(c), Some(i));
+        }
+        assert_eq!(m.char_index('!'), None);
+    }
+
+    #[test]
+    fn width_buckets() {
+        let Some(m) = meta() else { return };
+        assert_eq!(m.width_bucket(1).unwrap(), 64);
+        assert_eq!(m.width_bucket(64).unwrap(), 64);
+        assert_eq!(m.width_bucket(65).unwrap(), 128);
+        assert!(m.width_bucket(10_000).is_err());
+        assert_eq!(m.text_width(7), 64);
+        assert!(m.max_text_len() >= 20);
+    }
+}

@@ -1,0 +1,14 @@
+//! PaddleOCR-equivalent substrate (paper §4.1): synthetic page generator,
+//! detection post-processing, orientation rectification, CTC-style
+//! decoding, and the 3-phase pipeline with base/prun execution paths.
+
+pub mod decode;
+pub mod detect;
+pub mod imagegen;
+pub mod meta;
+pub mod pipeline;
+
+pub use detect::DetBox;
+pub use imagegen::{generate, GenOptions, GtBox, Image};
+pub use meta::OcrMeta;
+pub use pipeline::{exact_match, variant_from_name, OcrPipeline, OcrResult, PhaseTiming};

@@ -1,0 +1,179 @@
+//! The 3-phase OCR pipeline (paper Fig. 1) over the real PJRT engine.
+//!
+//! detection -> per-box orientation classification -> rectification ->
+//! per-box recognition -> decode. The classification and recognition
+//! phases run either `base` (loop over boxes, each `run` with the whole
+//! core budget — the unmodified pipeline) or via `prun` (all boxes
+//! submitted at once, threads allocated by size — the paper's Listings
+//! 2 -> 3 change).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::engine::{AllocPolicy, JobPart, PrunOptions, Session};
+use crate::runtime::Tensor;
+use crate::simcpu::ocr::OcrVariant;
+
+use super::decode;
+use super::detect::{self, DetBox};
+use super::imagegen::{crop_tensor, Image};
+use super::meta::OcrMeta;
+
+/// Per-phase wall-clock timing of one image.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseTiming {
+    pub det: Duration,
+    pub cls: Duration,
+    pub rec: Duration,
+}
+
+impl PhaseTiming {
+    pub fn total(&self) -> Duration {
+        self.det + self.cls + self.rec
+    }
+}
+
+/// Result for one image.
+#[derive(Debug)]
+pub struct OcrResult {
+    pub boxes: Vec<DetBox>,
+    /// decoded text per box (post-rectification); None if decode failed
+    pub texts: Vec<Option<String>>,
+    pub flipped: Vec<bool>,
+    pub timing: PhaseTiming,
+}
+
+pub struct OcrPipeline {
+    session: Arc<Session>,
+    meta: OcrMeta,
+}
+
+impl OcrPipeline {
+    pub fn new(session: Arc<Session>, meta: OcrMeta) -> OcrPipeline {
+        OcrPipeline { session, meta }
+    }
+
+    pub fn meta(&self) -> &OcrMeta {
+        &self.meta
+    }
+
+    /// Pre-compile all OCR models.
+    pub fn warmup(&self) -> Result<()> {
+        let mut models = vec!["ocr_det".to_string()];
+        for &w in &self.meta.rec_width_buckets {
+            models.push(format!("ocr_cls_w{w}"));
+            models.push(format!("ocr_rec_w{w}"));
+        }
+        let refs: Vec<&str> = models.iter().map(String::as_str).collect();
+        self.session.warmup(&refs)
+    }
+
+    /// Run the full pipeline on one image.
+    pub fn process(&self, img: &Image, variant: OcrVariant) -> Result<OcrResult> {
+        // ---- Phase 1: detection (identical in all variants) ----
+        let t0 = Instant::now();
+        let score = self
+            .session
+            .run("ocr_det", vec![img.to_tensor(&self.meta)])
+            .context("detection")?;
+        let boxes = detect::extract_boxes(img, &self.meta, score[0].as_f32()?);
+        let det = t0.elapsed();
+
+        if boxes.is_empty() {
+            return Ok(OcrResult { boxes, texts: vec![], flipped: vec![], timing: PhaseTiming { det, ..Default::default() } });
+        }
+
+        // ---- Phase 2: orientation classification ----
+        let t1 = Instant::now();
+        let upright_crops: Vec<(Tensor, usize)> = boxes
+            .iter()
+            .map(|b| {
+                let bucket = self.meta.width_bucket(b.width)?;
+                Ok((crop_tensor(img, &self.meta, b.x, b.y, b.width, bucket, false), bucket))
+            })
+            .collect::<Result<_>>()?;
+        let cls_logits = self.run_phase(
+            upright_crops.iter().map(|(t, bucket)| (format!("ocr_cls_w{bucket}"), t.clone())),
+            variant,
+        )?;
+        let flipped: Vec<bool> = cls_logits
+            .iter()
+            .map(|out| {
+                let l = out[0].as_f32().unwrap();
+                l[1] > l[0]
+            })
+            .collect();
+        let cls = t1.elapsed();
+
+        // ---- Phase 3: rectify + recognition ----
+        let t2 = Instant::now();
+        let rec_inputs: Vec<(String, Tensor)> = boxes
+            .iter()
+            .zip(flipped.iter())
+            .map(|(b, &fl)| {
+                let bucket = self.meta.width_bucket(b.width)?;
+                let crop = crop_tensor(img, &self.meta, b.x, b.y, b.width, bucket, fl);
+                Ok((format!("ocr_rec_w{bucket}"), crop))
+            })
+            .collect::<Result<_>>()?;
+        let rec_out = self.run_phase(rec_inputs.into_iter(), variant)?;
+        let texts: Vec<Option<String>> = rec_out
+            .iter()
+            .map(|out| {
+                let logp = out[0].as_f32().ok()?;
+                let n_classes = out[0].shape[1];
+                decode::decode(logp, n_classes, &self.meta).ok()
+            })
+            .collect();
+        let rec = t2.elapsed();
+
+        Ok(OcrResult { boxes, texts, flipped, timing: PhaseTiming { det, cls, rec } })
+    }
+
+    /// Run one per-box phase under the chosen variant.
+    fn run_phase(
+        &self,
+        inputs: impl Iterator<Item = (String, Tensor)>,
+        variant: OcrVariant,
+    ) -> Result<Vec<Vec<Tensor>>> {
+        let parts: Vec<JobPart> =
+            inputs.map(|(model, t)| JobPart::new(model, vec![t])).collect();
+        match variant {
+            OcrVariant::Base => {
+                // unmodified pipeline: iterate, each run owns all cores
+                parts
+                    .into_iter()
+                    .map(|p| self.session.run(&p.model, p.inputs))
+                    .collect()
+            }
+            OcrVariant::Prun(policy) => {
+                Ok(self.session.prun(parts, PrunOptions { policy, ..Default::default() })?.outputs)
+            }
+        }
+    }
+}
+
+/// Exact-match accuracy of a result against ground truth.
+pub fn exact_match(result: &OcrResult, img: &Image) -> (usize, usize) {
+    let mut hits = 0;
+    let total = img.boxes.len();
+    for gt in &img.boxes {
+        // match by position (results are sorted top-left first)
+        if let Some(i) = result.boxes.iter().position(|b| b.x == gt.x && b.y == gt.y) {
+            if result.texts[i].as_deref() == Some(gt.text.as_str()) {
+                hits += 1;
+            }
+        }
+    }
+    (hits, total)
+}
+
+/// Convenience: which policy to use for a CLI variant name.
+pub fn variant_from_name(name: &str) -> Option<OcrVariant> {
+    match name {
+        "base" => Some(OcrVariant::Base),
+        other => AllocPolicy::parse(other).map(OcrVariant::Prun),
+    }
+}

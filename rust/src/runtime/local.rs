@@ -1,0 +1,157 @@
+//! Per-thread PJRT engine: owns a CPU client, lazily compiles HLO-text
+//! artifacts, keeps model weights device-resident, and executes models.
+//!
+//! `xla::PjRtClient` is `Rc`-based (not `Send`), so a `LocalEngine` never
+//! crosses threads — the `pool` module gives each executor thread its own
+//! engine, which is also how OnnxRuntime structures per-session worker
+//! state. Weights are uploaded once per engine via
+//! `buffer_from_host_buffer` and reused across every `execute_b` call, so
+//! the request hot path copies only the (tiny) activations.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor::{Tensor, TensorData};
+
+pub struct LocalEngine {
+    client: xla::PjRtClient,
+    manifest: Arc<Manifest>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// weights_ref ("bert") -> device-resident parameter buffers
+    weight_buffers: HashMap<String, Vec<xla::PjRtBuffer>>,
+    /// cumulative compile time, surfaced through stats
+    pub compile_time: Duration,
+    pub executions: u64,
+}
+
+impl LocalEngine {
+    pub fn new(manifest: Arc<Manifest>) -> Result<LocalEngine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(LocalEngine {
+            client,
+            manifest,
+            executables: HashMap::new(),
+            weight_buffers: HashMap::new(),
+            compile_time: Duration::ZERO,
+            executions: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (once) and cache the executable for `model`.
+    fn ensure_compiled(&mut self, model: &str) -> Result<()> {
+        if self.executables.contains_key(model) {
+            return Ok(());
+        }
+        let entry = self.manifest.model(model)?.clone();
+        let path = self.manifest.dir.join(&entry.hlo);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {model}"))?;
+        self.compile_time += t0.elapsed();
+        crate::debug!("compiled {model} in {:?}", t0.elapsed());
+        self.executables.insert(model.to_string(), exe);
+
+        if let Some(wref) = entry.weights_ref.as_deref() {
+            self.ensure_weights(wref)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_weights(&mut self, wref: &str) -> Result<()> {
+        if self.weight_buffers.contains_key(wref) {
+            return Ok(());
+        }
+        if wref != "bert" {
+            bail!("unknown weights ref '{wref}'");
+        }
+        let t0 = Instant::now();
+        let tensors = self.manifest.load_bert_weight_tensors()?;
+        let mut buffers = Vec::with_capacity(tensors.len());
+        for t in &tensors {
+            let data = t.as_f32()?;
+            buffers.push(
+                self.client
+                    .buffer_from_host_buffer(data, &t.shape, None)
+                    .context("uploading weight tensor")?,
+            );
+        }
+        crate::debug!("uploaded {} '{wref}' weight tensors in {:?}", buffers.len(), t0.elapsed());
+        self.weight_buffers.insert(wref.to_string(), buffers);
+        Ok(())
+    }
+
+    /// Warm the executable + weight caches for `model` without running it.
+    pub fn warmup(&mut self, model: &str) -> Result<()> {
+        self.ensure_compiled(model)
+    }
+
+    /// Execute `model` on `inputs` (the non-weight inputs only; weights are
+    /// appended automatically from the device-resident cache).
+    pub fn execute(&mut self, model: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(model)?;
+        let entry = self.manifest.model(model)?;
+        let n_user = entry.inputs.len()
+            - entry
+                .weights_ref
+                .as_deref()
+                .map(|_| self.manifest.bert_weights.tensors.len())
+                .unwrap_or(0);
+        if inputs.len() != n_user {
+            bail!(
+                "model {model} expects {n_user} user input(s), got {}",
+                inputs.len()
+            );
+        }
+        // Validate declared shapes early — mismatches would otherwise
+        // surface as opaque XLA errors.
+        for (i, (t, spec)) in inputs.iter().zip(entry.inputs.iter()).enumerate() {
+            if t.shape != spec.shape || t.dtype_name() != spec.dtype {
+                bail!(
+                    "model {model} input {i}: expected {:?}/{}, got {:?}/{}",
+                    spec.shape, spec.dtype, t.shape, t.dtype_name()
+                );
+            }
+        }
+
+        let weights_ref = entry.weights_ref.clone();
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(entry.inputs.len());
+        for t in inputs {
+            let buf = match &t.data {
+                TensorData::F32(v) => self.client.buffer_from_host_buffer(v, &t.shape, None)?,
+                TensorData::I32(v) => self.client.buffer_from_host_buffer(v, &t.shape, None)?,
+            };
+            args.push(buf);
+        }
+
+        let exe = self.executables.get(model).unwrap();
+        let outputs = if let Some(wref) = weights_ref.as_deref() {
+            let weights = &self.weight_buffers[wref];
+            let mut all: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len() + weights.len());
+            all.extend(args.iter());
+            all.extend(weights.iter());
+            exe.execute_b(&all)?
+        } else {
+            let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+            exe.execute_b(&refs)?
+        };
+        self.executions += 1;
+
+        // aot.py lowers with return_tuple=True: one tuple output.
+        let lit = outputs[0][0].to_literal_sync()?;
+        let elems = lit.to_tuple()?;
+        elems.iter().map(Tensor::from_literal).collect()
+    }
+}

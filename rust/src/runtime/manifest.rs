@@ -1,0 +1,295 @@
+//! Typed view of `artifacts/manifest.json` — the contract between
+//! `python/compile/aot.py` and the Rust runtime.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            shape: v.req("shape")?.usize_arr()?,
+            dtype: v.req("dtype")?.as_str().context("dtype")?.to_string(),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub hlo: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub flops: u64,
+    /// "bert" for models fed from the shared weight blob; None for
+    /// weight-free (analytic) models.
+    pub weights_ref: Option<String>,
+    pub family: String,
+    pub batch: Option<usize>,
+    pub seq: Option<usize>,
+    pub width: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightBlob {
+    pub file: String,
+    pub tensors: Vec<WeightTensor>,
+}
+
+#[derive(Debug, Clone)]
+pub struct BertConfig {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ff: usize,
+    pub max_seq: usize,
+    pub seq_buckets: Vec<usize>,
+    pub batch_buckets: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: HashMap<String, ModelEntry>,
+    pub bert_weights: WeightBlob,
+    pub bert: BertConfig,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let root = Json::parse_file(&artifacts_dir.join("manifest.json"))?;
+        let version = root.req("version")?.as_usize().context("version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+
+        let mut models = HashMap::new();
+        for (name, entry) in root.req("models")?.as_obj().context("models")? {
+            let inputs = entry
+                .req("inputs")?
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(IoSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = entry
+                .req("outputs")?
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(IoSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    hlo: entry.req("hlo")?.as_str().context("hlo")?.to_string(),
+                    inputs,
+                    outputs,
+                    flops: entry.req("flops")?.as_i64().context("flops")? as u64,
+                    weights_ref: entry
+                        .get("weights")
+                        .and_then(|v| v.as_str())
+                        .map(String::from),
+                    family: entry
+                        .get("family")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("unknown")
+                        .to_string(),
+                    batch: entry.get("batch").and_then(|v| v.as_usize()),
+                    seq: entry.get("seq").and_then(|v| v.as_usize()),
+                    width: entry.get("width").and_then(|v| v.as_usize()),
+                },
+            );
+        }
+
+        let bw = root.req("bert_weights")?;
+        let tensors = bw
+            .req("tensors")?
+            .as_arr()
+            .context("tensors")?
+            .iter()
+            .map(|t| {
+                Ok(WeightTensor {
+                    name: t.req("name")?.as_str().context("name")?.to_string(),
+                    shape: t.req("shape")?.usize_arr()?,
+                    offset: t.req("offset")?.as_usize().context("offset")?,
+                    len: t.req("len")?.as_usize().context("len")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let bert_weights = WeightBlob {
+            file: bw.req("file")?.as_str().context("file")?.to_string(),
+            tensors,
+        };
+
+        let bc = root.req("bert_config")?;
+        let bert = BertConfig {
+            vocab: bc.req("vocab")?.as_usize().context("vocab")?,
+            hidden: bc.req("hidden")?.as_usize().context("hidden")?,
+            layers: bc.req("layers")?.as_usize().context("layers")?,
+            heads: bc.req("heads")?.as_usize().context("heads")?,
+            ff: bc.req("ff")?.as_usize().context("ff")?,
+            max_seq: bc.req("max_seq")?.as_usize().context("max_seq")?,
+            seq_buckets: bc.req("seq_buckets")?.usize_arr()?,
+            batch_buckets: bc.req("batch_buckets")?.usize_arr()?,
+        };
+
+        Ok(Manifest { dir: artifacts_dir.to_path_buf(), models, bert_weights, bert })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model '{name}' not in manifest"))
+    }
+
+    /// Smallest seq bucket >= len (paper's prun runs exact lengths; we
+    /// quantize to the artifact grid — see DESIGN.md §4).
+    pub fn seq_bucket(&self, len: usize) -> Result<usize> {
+        self.bert
+            .seq_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= len)
+            .with_context(|| format!("sequence length {len} exceeds largest bucket"))
+    }
+
+    pub fn batch_bucket(&self, k: usize) -> Result<usize> {
+        self.bert
+            .batch_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= k)
+            .with_context(|| format!("batch size {k} exceeds largest bucket"))
+    }
+
+    pub fn bert_model_name(&self, batch: usize, seq: usize) -> String {
+        format!("bert_b{batch}_s{seq}")
+    }
+
+    /// Load the raw f32 weight blob and split it per-tensor.
+    pub fn load_bert_weight_tensors(&self) -> Result<Vec<crate::runtime::Tensor>> {
+        let path = self.dir.join(&self.bert_weights.file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut out = Vec::with_capacity(self.bert_weights.tensors.len());
+        for t in &self.bert_weights.tensors {
+            let end = t.offset + t.len * 4;
+            if end > bytes.len() {
+                bail!("weight tensor {} overruns blob ({} > {})", t.name, end, bytes.len());
+            }
+            let mut data = Vec::with_capacity(t.len);
+            for chunk in bytes[t.offset..end].chunks_exact(4) {
+                data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+            }
+            out.push(crate::runtime::Tensor::f32(t.shape.clone(), data));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_json() -> &'static str {
+        r#"{
+  "version": 1,
+  "models": {
+    "bert_b1_s16": {
+      "hlo": "bert_b1_s16.hlo.txt",
+      "inputs": [{"shape": [1, 16], "dtype": "s32"}],
+      "outputs": [{"shape": [1, 128], "dtype": "f32"}],
+      "flops": 1000,
+      "weights": "bert",
+      "family": "bert", "batch": 1, "seq": 16
+    },
+    "ocr_det": {
+      "hlo": "ocr_det.hlo.txt",
+      "inputs": [{"shape": [1, 3, 192, 256], "dtype": "f32"}],
+      "outputs": [{"shape": [1, 48, 64], "dtype": "f32"}],
+      "flops": 500,
+      "family": "ocr_det"
+    }
+  },
+  "bert_weights": {"file": "weights/bert.bin", "tensors": [
+    {"name": "embedding", "shape": [4, 2], "offset": 0, "len": 8}
+  ]},
+  "bert_config": {
+    "vocab": 8192, "hidden": 128, "layers": 2, "heads": 4, "ff": 512,
+    "max_seq": 512, "seq_buckets": [16, 32, 64], "batch_buckets": [1, 2, 4, 8]
+  }
+}"#
+    }
+
+    fn load_fixture() -> Manifest {
+        let dir = std::env::temp_dir().join(format!("dnc_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest_json()).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn parses_models_and_config() {
+        let m = load_fixture();
+        let e = m.model("bert_b1_s16").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![1, 16]);
+        assert_eq!(e.inputs[0].dtype, "s32");
+        assert_eq!(e.flops, 1000);
+        assert_eq!(e.weights_ref.as_deref(), Some("bert"));
+        assert_eq!(e.batch, Some(1));
+        let det = m.model("ocr_det").unwrap();
+        assert_eq!(det.weights_ref, None);
+        assert_eq!(det.family, "ocr_det");
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = load_fixture();
+        assert_eq!(m.seq_bucket(1).unwrap(), 16);
+        assert_eq!(m.seq_bucket(16).unwrap(), 16);
+        assert_eq!(m.seq_bucket(17).unwrap(), 32);
+        assert_eq!(m.seq_bucket(64).unwrap(), 64);
+        assert!(m.seq_bucket(65).is_err());
+        assert_eq!(m.batch_bucket(3).unwrap(), 4);
+        assert_eq!(m.bert_model_name(2, 32), "bert_b2_s32");
+    }
+
+    #[test]
+    fn weight_blob_split() {
+        let m = load_fixture();
+        let blob: Vec<u8> = (0..8u32)
+            .flat_map(|i| (i as f32).to_le_bytes())
+            .collect();
+        std::fs::create_dir_all(m.dir.join("weights")).unwrap();
+        std::fs::write(m.dir.join("weights/bert.bin"), &blob).unwrap();
+        let tensors = m.load_bert_weight_tensors().unwrap();
+        assert_eq!(tensors.len(), 1);
+        assert_eq!(tensors[0].shape, vec![4, 2]);
+        assert_eq!(tensors[0].as_f32().unwrap()[3], 3.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! Runtime layer: loads the AOT artifacts produced by `python/compile/`
+//! (HLO text + weight blobs + manifest) and executes them on PJRT CPU.
+//!
+//! Structure:
+//! - [`manifest`] — typed view of `artifacts/manifest.json`.
+//! - [`tensor`] — Send-able host tensors and Literal conversion.
+//! - [`local`] — per-thread engine (client, executable cache, weights).
+//! - [`pool`] — N executor threads; the unit of real parallelism.
+//!
+//! Python never runs at serving time: once `make artifacts` has produced
+//! the HLO text, the Rust binary is self-contained.
+
+pub mod local;
+pub mod manifest;
+pub mod pool;
+pub mod tensor;
+
+pub use local::LocalEngine;
+pub use manifest::{Manifest, ModelEntry};
+pub use pool::{ExecResult, ExecutorPool};
+pub use tensor::{Tensor, TensorData};
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory: `DNC_ARTIFACTS` env var or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("DNC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

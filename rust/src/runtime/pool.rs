@@ -1,0 +1,159 @@
+//! Executor pool: N persistent worker threads, each owning a private
+//! `LocalEngine` (PJRT client + executable cache + device weights).
+//!
+//! This is the runtime's unit of *real* parallelism. `PjRtClient` is not
+//! `Send`, so instead of sharing one client we give each worker its own —
+//! the same topology OnnxRuntime uses for inter-op worker threads. Jobs
+//! arrive on an mpsc channel guarded by a mutex (a simple shared queue);
+//! results return on per-job reply channels.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+use super::local::LocalEngine;
+use super::tensor::Tensor;
+
+pub struct ExecJob {
+    pub model: String,
+    pub inputs: Vec<Tensor>,
+    pub reply: Sender<Result<ExecResult>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecResult {
+    pub outputs: Vec<Tensor>,
+    /// pure execute time inside the worker (excludes queueing)
+    pub exec_time: Duration,
+    pub worker: usize,
+}
+
+enum Msg {
+    Run(ExecJob),
+    Warmup(String, Sender<Result<()>>),
+    Shutdown,
+}
+
+pub struct ExecutorPool {
+    queue: Arc<Mutex<Receiver<Msg>>>,
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+    pub size: usize,
+    submitted: AtomicU64,
+}
+
+impl ExecutorPool {
+    /// Spawn `size` executor threads over the given artifact manifest.
+    pub fn new(manifest: Arc<Manifest>, size: usize) -> Result<ExecutorPool> {
+        assert!(size >= 1);
+        let (tx, rx) = channel::<Msg>();
+        let queue = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(size);
+        for wid in 0..size {
+            let queue = Arc::clone(&queue);
+            let manifest = Arc::clone(&manifest);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("dnc-exec-{wid}"))
+                    .spawn(move || worker_loop(wid, manifest, queue))
+                    .context("spawning executor thread")?,
+            );
+        }
+        Ok(ExecutorPool { queue, tx, workers, size, submitted: AtomicU64::new(0) })
+    }
+
+    /// Submit and return a receiver for the result (async style).
+    pub fn submit(&self, model: &str, inputs: Vec<Tensor>) -> Receiver<Result<ExecResult>> {
+        let (reply, rx) = channel();
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Msg::Run(ExecJob { model: model.to_string(), inputs, reply }))
+            .expect("executor pool is down");
+        rx
+    }
+
+    /// Submit and block for the result (sync style).
+    pub fn run(&self, model: &str, inputs: Vec<Tensor>) -> Result<ExecResult> {
+        self.submit(model, inputs)
+            .recv()
+            .context("executor worker dropped reply channel")?
+    }
+
+    /// Pre-compile `models` on every worker so first requests aren't
+    /// penalized by JIT compilation.
+    pub fn warmup(&self, models: &[&str]) -> Result<()> {
+        // Each Warmup message is taken by exactly one idle worker; issuing
+        // `size` rounds with a barrier-ish join approximates all-workers
+        // coverage. Precision is unnecessary: a missed worker just
+        // compiles lazily on first use.
+        for _round in 0..self.size {
+            let mut pending = Vec::new();
+            for m in models {
+                let (tx, rx) = channel();
+                self.tx.send(Msg::Warmup(m.to_string(), tx)).expect("pool down");
+                pending.push(rx);
+            }
+            for rx in pending {
+                rx.recv().context("warmup reply lost")??;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn jobs_submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for ExecutorPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let _ = self.queue; // keep the receiver alive until workers joined
+    }
+}
+
+fn worker_loop(wid: usize, manifest: Arc<Manifest>, queue: Arc<Mutex<Receiver<Msg>>>) {
+    let mut engine = match LocalEngine::new(manifest) {
+        Ok(e) => e,
+        Err(e) => {
+            crate::error!("executor {wid}: failed to create engine: {e:#}");
+            return;
+        }
+    };
+    loop {
+        // Hold the lock only while dequeueing.
+        let msg = {
+            let rx = queue.lock().expect("queue poisoned");
+            match rx.recv() {
+                Ok(m) => m,
+                Err(_) => return, // pool dropped
+            }
+        };
+        match msg {
+            Msg::Shutdown => return,
+            Msg::Warmup(model, reply) => {
+                let _ = reply.send(engine.warmup(&model));
+            }
+            Msg::Run(job) => {
+                let t0 = Instant::now();
+                let result = engine.execute(&job.model, &job.inputs).map(|outputs| ExecResult {
+                    outputs,
+                    exec_time: t0.elapsed(),
+                    worker: wid,
+                });
+                // Receiver may have given up (timeout) — that's fine.
+                let _ = job.reply.send(result);
+            }
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Host tensors crossing the Rust <-> PJRT boundary.
+//!
+//! Only the two dtypes our artifacts use (f32 activations/weights, i32
+//! token ids). `Tensor` is the Send-able host representation; conversion
+//! to/from `xla::Literal` happens inside the executor thread that owns the
+//! PJRT client.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total element count — the paper's job-part weight (its §3.1 sets
+    /// w_i proportional to input tensor size).
+    pub fn size(&self) -> usize {
+        self.len()
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match &self.data {
+            TensorData::F32(_) => "f32",
+            TensorData::I32(_) => "s32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is {} not f32", self.dtype_name()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is {} not s32", self.dtype_name()),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+            other => bail!("unsupported element type {other:?}"),
+        };
+        Ok(Tensor { shape: dims, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_is_element_count() {
+        let t = Tensor::f32(vec![2, 3, 4], vec![0.0; 24]);
+        assert_eq!(t.size(), 24);
+        assert_eq!(t.shape, vec![2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 2], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn dtype_accessors() {
+        let t = Tensor::i32(vec![4], vec![1, 2, 3, 4]);
+        assert!(t.as_i32().is_ok());
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.dtype_name(), "s32");
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::i32(vec![1, 4], vec![7, -2, 0, 42]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+}

@@ -1,0 +1,142 @@
+//! Virtual-time BERT serving strategies (paper §4.2/§4.3, Figures 6-9).
+//!
+//! Three ways to serve a batch of sequences with lengths `lens` on a
+//! C-core machine, all returning virtual milliseconds:
+//!
+//! - `sim_pad_batch`: pad everything to the longest length, run one
+//!   batched inference with all cores (the paper's `pad-batch`).
+//! - `sim_no_batch`: run each sequence alone, one after another, with all
+//!   cores (the paper's `no-batch`).
+//! - `sim_prun`: the paper's contribution — one part per sequence at its
+//!   *exact* length, threads allocated by `engine::allocator`, parts
+//!   co-scheduled by the DES.
+
+use crate::engine::allocator::{allocate, AllocPolicy};
+
+use super::calib;
+use super::des::{simulate, simulate_sequential, SimPart, SimReport};
+
+fn bert_part(batch: usize, seq: usize) -> SimPart {
+    SimPart::new(calib::bert_t1_ms(batch, seq), calib::BERT_PROFILE)
+}
+
+/// Pad-batch latency: one inference of batch=k at the max length.
+pub fn sim_pad_batch(lens: &[usize], cores: usize) -> f64 {
+    assert!(!lens.is_empty());
+    let max_len = *lens.iter().max().unwrap();
+    let part = bert_part(lens.len(), max_len);
+    simulate(&[part], &[cores], cores).makespan_ms
+}
+
+/// No-batch latency: sequential single-sequence inferences.
+pub fn sim_no_batch(lens: &[usize], cores: usize) -> f64 {
+    let parts: Vec<SimPart> = lens.iter().map(|&l| bert_part(1, l)).collect();
+    simulate_sequential(&parts, cores).makespan_ms
+}
+
+/// prun outcome: full DES report plus the allocation (Fig. 8 plots the
+/// threads given to the long sequence).
+pub fn sim_prun_report(lens: &[usize], cores: usize, policy: AllocPolicy) -> (SimReport, Vec<usize>) {
+    let sizes: Vec<usize> = lens.to_vec(); // weight proxy = token count
+    let allocation = allocate(&sizes, cores, policy);
+    let parts: Vec<SimPart> = lens.iter().map(|&l| bert_part(1, l)).collect();
+    let report = simulate(&parts, &allocation, cores);
+    (report, allocation)
+}
+
+/// prun latency (makespan).
+pub fn sim_prun(lens: &[usize], cores: usize, policy: AllocPolicy) -> f64 {
+    sim_prun_report(lens, cores, policy).0.makespan_ms
+}
+
+/// Throughput in sequences/second given a batch latency in ms.
+pub fn seqs_per_sec(n_seqs: usize, latency_ms: f64) -> f64 {
+    n_seqs as f64 * 1000.0 / latency_ms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const C: usize = calib::PAPER_CORES;
+
+    #[test]
+    fn prun_beats_pad_batch_on_heterogeneous_lengths() {
+        // Fig. 7's preset mixes: padding waste makes pad-batch lose.
+        for mix in [&[16usize, 64, 256][..], &[16, 16, 512], &[32, 128, 384, 384]] {
+            let pad = sim_pad_batch(mix, C);
+            let prun = sim_prun(mix, C, AllocPolicy::PrunDef);
+            assert!(prun < pad, "mix {mix:?}: prun {prun} !< pad {pad}");
+        }
+    }
+
+    #[test]
+    fn prun_overhead_negligible_for_single_chunk() {
+        // Fig. 8 at X=0: both variants use all cores on the one sequence.
+        let pad = sim_pad_batch(&[256], C);
+        let prun = sim_prun(&[256], C, AllocPolicy::PrunDef);
+        assert!((pad - prun).abs() / pad < 0.01, "pad={pad} prun={prun}");
+    }
+
+    #[test]
+    fn batching_beats_no_batch_on_equal_lengths() {
+        // Fig. 9's sanity baseline.
+        for len in [64usize, 128, 256, 512] {
+            let lens = vec![len; 4];
+            assert!(sim_pad_batch(&lens, C) < sim_no_batch(&lens, C), "len={len}");
+        }
+    }
+
+    #[test]
+    fn prun_beats_batch_even_on_homogeneous_lengths() {
+        // Fig. 9's headline: fewer cores per sequence => less non-scalable
+        // overhead, so prun wins modestly even with no padding waste.
+        for len in [64usize, 128, 256, 512] {
+            let lens = vec![len; 4];
+            let batch = sim_pad_batch(&lens, C);
+            let prun = sim_prun(&lens, C, AllocPolicy::PrunDef);
+            assert!(prun < batch, "len={len}: prun {prun} !< batch {batch}");
+            // "modest": not the multi-x win of the heterogeneous case
+            assert!(batch / prun < 3.0, "len={len}: implausibly large win {}", batch / prun);
+        }
+    }
+
+    #[test]
+    fn fig8_long_sequence_thread_curve_monotone() {
+        // 1 long + X shorts: threads for the long sequence decrease in X.
+        let mut prev = usize::MAX;
+        for x in 0..=15 {
+            let mut lens = vec![256usize];
+            lens.extend(std::iter::repeat(16).take(x));
+            let (_, alloc) = sim_prun_report(&lens, C, AllocPolicy::PrunDef);
+            assert!(alloc[0] <= prev, "x={x}");
+            prev = alloc[0];
+        }
+        assert!(prev < C, "long sequence should have shed threads");
+    }
+
+    #[test]
+    fn fig8_throughput_rises_then_falls() {
+        // seq/s climbs steeply to X≈3 (shorts are nearly free), then the
+        // long sequence loses threads / shorts start queueing.
+        let tp = |x: usize| {
+            let mut lens = vec![256usize];
+            lens.extend(std::iter::repeat(16).take(x));
+            seqs_per_sec(lens.len(), sim_prun(&lens, C, AllocPolicy::PrunDef))
+        };
+        assert!(tp(3) > 2.0 * tp(0), "dramatic initial growth");
+        // prun stays above pad-batch throughout (paper's key claim)
+        for x in 0..=15 {
+            let mut lens = vec![256usize];
+            lens.extend(std::iter::repeat(16).take(x));
+            let pad = seqs_per_sec(lens.len(), sim_pad_batch(&lens, C));
+            let prun = seqs_per_sec(lens.len(), sim_prun(&lens, C, AllocPolicy::PrunDef));
+            assert!(prun >= pad * 0.99, "x={x}: prun {prun} < pad {pad}");
+        }
+    }
+
+    #[test]
+    fn throughput_helper() {
+        assert!((seqs_per_sec(4, 500.0) - 8.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,227 @@
+//! Calibration constants: per-phase scalability profiles fitted to the
+//! paper's *measured* anchor points, so the simulator reproduces the
+//! shape of every figure on a machine where real 16-core scaling cannot
+//! be measured (this CI box has one core — DESIGN.md §4, §5).
+//!
+//! Paper anchors used for fitting (all from §4):
+//! - Fig. 2: PaddleOCR base latency 554 ms @1t -> 364 ms @4t -> 435 ms
+//!   @16t (dip then rise); Text Classification 27 ms @1t -> 38 ms @16t
+//!   (negative scaling); Text Recognition dominant, best around 4-8
+//!   threads, regressing at 16.
+//! - Fig. 5: rec-phase prun outperforms base by >2.4x @16t; end-to-end
+//!   ~1.5x @16t (Text Detection is shared and dominant).
+//! - Fig. 8: a 256-token sequence takes about the same time with 16
+//!   threads as with 13 (flat top of the BERT scaling curve).
+//! - §4.1: prun variants pay a per-invocation worker-pool creation cost
+//!   (threads created, bound and destroyed per `prun` call).
+//!
+//! Resulting base-pipeline curve over the 500-image Fig.-3 dataset
+//! (includes the base variant's batch-padding waste): 556 ms @1t,
+//! 390 @4t, 461 @16t — within 7% of the paper's anchors, same shape.
+
+use super::profile::ScalProfile;
+
+/// Core count of the paper's testbed (OCI VM.Standard.E3.Flex).
+pub const PAPER_CORES: usize = 16;
+
+// ---------------------------------------------------------------------------
+// OCR pipeline (paper §4.1)
+// ---------------------------------------------------------------------------
+
+/// Average detected-box width (px) the per-box costs are normalized to.
+pub const OCR_AVG_BOX_W: f64 = 96.0;
+
+/// Per-invocation framework dispatch cost (ms) — §2.3's overhead; paid
+/// once per batched `run` in base, once per part in prun.
+pub const OCR_FIXED_MS: f64 = 2.0;
+
+/// The base pipeline batches up to this many boxes per `run` call
+/// (PaddleOCR's `batch_num`, visible in the paper's Listing 2).
+pub const OCR_BATCH_NUM: usize = 6;
+
+/// Text Detection: single-thread 195 ms, mostly serial (the paper
+/// attributes this to framework-inserted layout-conversion operators).
+pub const DET_T1_MS: f64 = 195.0;
+pub const DET_PROFILE: ScalProfile = ScalProfile::new(0.78, 1.0);
+
+/// Text Classification per average-width box: 3.95 ms single-thread.
+/// The per-invocation thread overhead (0.875 ms/extra thread) produces
+/// the paper's negative scaling: per image, ~28 ms @1t -> ~40 ms @16t.
+pub const CLS_T1_MS_PER_AVG_BOX: f64 = 3.95;
+pub const CLS_PROFILE: ScalProfile = ScalProfile::new(0.85, 0.875);
+
+/// Text Recognition per average-width box: 51.3 ms single-thread. The
+/// heavy per-thread overhead (the paper blames inflated output-reorder
+/// operators) puts the per-image optimum near 4-8 threads and makes 16
+/// threads regress, matching Fig. 2's rec curve.
+pub const REC_T1_MS_PER_AVG_BOX: f64 = 51.3;
+pub const REC_PROFILE: ScalProfile = ScalProfile::new(0.35, 6.5);
+
+/// Per-invocation worker-pool creation cost paid by the prun variants
+/// (base reuses the session's persistent pool; prun creates, binds and
+/// destroys a pool of c_i threads per part — §4.1).
+pub const POOL_BASE_MS: f64 = 0.3;
+pub const POOL_PER_THREAD_MS: f64 = 0.7;
+
+/// Base-variant phase profile: framework dispatch cost only.
+pub fn base_profile(p: ScalProfile) -> ScalProfile {
+    p.with_pool_cost(OCR_FIXED_MS, 0.0)
+}
+
+/// Prun-variant phase profile: dispatch + per-part pool creation.
+pub fn prun_profile(p: ScalProfile) -> ScalProfile {
+    p.with_pool_cost(OCR_FIXED_MS + POOL_BASE_MS, POOL_PER_THREAD_MS)
+}
+
+/// Single-thread classification time for a box of `width_px`.
+pub fn cls_t1_ms(width_px: usize) -> f64 {
+    CLS_T1_MS_PER_AVG_BOX * width_px as f64 / OCR_AVG_BOX_W
+}
+
+/// Single-thread recognition time for a box of `width_px`.
+pub fn rec_t1_ms(width_px: usize) -> f64 {
+    REC_T1_MS_PER_AVG_BOX * width_px as f64 / OCR_AVG_BOX_W
+}
+
+// ---------------------------------------------------------------------------
+// BERT (paper §4.2 / §4.3)
+// ---------------------------------------------------------------------------
+
+/// Transformer dimensions used by the cost model (our BERT-tiny; ratios
+/// across sequence lengths — what the weights depend on — are preserved).
+#[derive(Debug, Clone, Copy)]
+pub struct BertDims {
+    pub hidden: usize,
+    pub ff: usize,
+    pub layers: usize,
+}
+
+pub const BERT_DIMS: BertDims = BertDims { hidden: 128, ff: 512, layers: 2 };
+
+/// Fixed per-inference framework cost (ms): kernel dispatch, layout
+/// conversion, output assembly — §2.3's framework overhead. This is what
+/// makes batching beat no-batch (Fig. 9) and bounds the benefit of
+/// splitting off very short sequences (Fig. 8's decline past X≈3).
+pub const BERT_FIXED_MS: f64 = 35.0;
+
+/// Single-thread latency of the calibration point: batch 1, 256 tokens.
+pub const BERT_T1_256_MS: f64 = 300.0;
+
+/// BERT scalability: nearly no Amdahl-serial fraction but a per-thread
+/// coordination cost, giving the paper's flat t(13)..t(16) top.
+pub const BERT_PROFILE: ScalProfile = ScalProfile::new(0.02, 1.3);
+
+/// Forward FLOPs (2*MACs) — mirrors `python/compile/model.py::bert_flops`.
+pub fn bert_flops(batch: usize, seq: usize, d: BertDims) -> f64 {
+    let (b, s, h, f) = (batch as f64, seq as f64, d.hidden as f64, d.ff as f64);
+    d.layers as f64
+        * (4.0 * 2.0 * b * s * h * h + 2.0 * 2.0 * b * s * s * h + 2.0 * 2.0 * b * s * h * f)
+}
+
+/// FLOP rate implied by the calibration point.
+pub fn bert_rate_flops_per_ms() -> f64 {
+    bert_flops(1, 256, BERT_DIMS) / (BERT_T1_256_MS - BERT_FIXED_MS)
+}
+
+/// Single-thread latency of a (batch, seq) inference.
+pub fn bert_t1_ms(batch: usize, seq: usize) -> f64 {
+    BERT_FIXED_MS + bert_flops(batch, seq, BERT_DIMS) / bert_rate_flops_per_ms()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Qualitative anchor tests. The quantitative dataset-level anchors
+    // (554/364/435 ms totals, 27->38 ms cls — which include the base
+    // pipeline's *padding waste* over the Fig. 3 box-width mix) live in
+    // `bench::figures::tests`, where the evaluation dataset is available.
+
+    const AVG_BOXES: f64 = 4.3;
+    /// Mean padding inflation of a base batched run over the Fig. 3
+    /// width mix (boxes padded to the widest in their batch).
+    const PAD_FACTOR: f64 = 1.49;
+
+    /// Base pipeline on an average image: detection + one batched cls run
+    /// + one batched rec run (4.3 boxes fit in a single batch of 6).
+    fn ocr_base_total(c: usize) -> f64 {
+        DET_PROFILE.time_ms(DET_T1_MS, c)
+            + base_profile(CLS_PROFILE).time_ms(PAD_FACTOR * AVG_BOXES * CLS_T1_MS_PER_AVG_BOX, c)
+            + base_profile(REC_PROFILE).time_ms(PAD_FACTOR * AVG_BOXES * REC_T1_MS_PER_AVG_BOX, c)
+    }
+
+    #[test]
+    fn fig2_base_total_anchors() {
+        // paper: 554 @1t, 364 @4t, 435 @16t (±10% at the analytic
+        // average-image approximation; the dataset-level test is exact)
+        let t1 = ocr_base_total(1);
+        let t4 = ocr_base_total(4);
+        let t16 = ocr_base_total(16);
+        assert!((t1 - 554.0).abs() / 554.0 < 0.10, "t1={t1}");
+        assert!((t4 - 364.0).abs() / 364.0 < 0.10, "t4={t4}");
+        assert!((t16 - 435.0).abs() / 435.0 < 0.10, "t16={t16}");
+        // the characteristic dip-then-rise
+        assert!(t4 < t1 && t4 < t16, "t1={t1} t4={t4} t16={t16}");
+    }
+
+    #[test]
+    fn fig2_cls_negative_scaling() {
+        // paper: 27 ms @1t -> 38 ms @16t per image (1.4x slowdown)
+        let p = base_profile(CLS_PROFILE);
+        let w = PAD_FACTOR * AVG_BOXES * CLS_T1_MS_PER_AVG_BOX;
+        let c1 = p.time_ms(w, 1);
+        let c16 = p.time_ms(w, 16);
+        assert!((c1 - 27.0).abs() / 27.0 < 0.15, "c1={c1}");
+        assert!((c16 - 38.0).abs() / 38.0 < 0.15, "c16={c16}");
+        assert!(c16 / c1 > 1.25, "slowdown {}", c16 / c1);
+    }
+
+    #[test]
+    fn fig2_rec_optimum_mid_thread_counts() {
+        let p = base_profile(REC_PROFILE);
+        let t1 = AVG_BOXES * REC_T1_MS_PER_AVG_BOX;
+        let best = p.optimal_threads(t1, 16);
+        assert!((3..=8).contains(&best), "best={best}");
+        // and regresses at 16 (paper's rec curve turns back up)
+        assert!(p.time_ms(t1, 16) > 1.1 * p.time_ms(t1, best));
+    }
+
+    #[test]
+    fn fig8_bert_flat_top_13_to_16() {
+        let t13 = BERT_PROFILE.time_ms(BERT_T1_256_MS, 13);
+        let t16 = BERT_PROFILE.time_ms(BERT_T1_256_MS, 16);
+        assert!((t13 - t16).abs() / t16 < 0.02, "t13={t13} t16={t16}");
+    }
+
+    #[test]
+    fn bert_t1_calibration_point() {
+        assert!((bert_t1_ms(1, 256) - BERT_T1_256_MS).abs() < 1e-9);
+        // FLOPs scale linearly in batch
+        let f1 = bert_flops(1, 128, BERT_DIMS);
+        let f4 = bert_flops(4, 128, BERT_DIMS);
+        assert!((f4 / f1 - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bert_fixed_cost_makes_batching_pay() {
+        // Fig. 9 precondition: batch(k) cheaper than k x no-batch.
+        let batch = BERT_PROFILE.time_ms(bert_t1_ms(4, 128), 16);
+        let nobatch = 4.0 * BERT_PROFILE.time_ms(bert_t1_ms(1, 128), 16);
+        assert!(batch < nobatch, "batch={batch} nobatch={nobatch}");
+    }
+
+    #[test]
+    fn ocr_per_box_costs_scale_with_width() {
+        assert!((rec_t1_ms(96) - REC_T1_MS_PER_AVG_BOX).abs() < 1e-9);
+        assert!((rec_t1_ms(192) / rec_t1_ms(96) - 2.0).abs() < 1e-9);
+        assert!(cls_t1_ms(48) < cls_t1_ms(96));
+    }
+
+    #[test]
+    fn prun_profile_adds_pool_cost() {
+        let base = base_profile(REC_PROFILE).time_ms(75.0, 4);
+        let prun = prun_profile(REC_PROFILE).time_ms(75.0, 4);
+        let expect = POOL_BASE_MS + 4.0 * POOL_PER_THREAD_MS;
+        assert!((prun - base - expect).abs() < 1e-9);
+    }
+}

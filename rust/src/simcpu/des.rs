@@ -1,0 +1,167 @@
+//! Discrete-event simulation of `prun` on a C-core machine.
+//!
+//! Each job part has a single-thread cost `t1_ms` and a scalability
+//! profile; the allocator has already assigned it `c_i` threads. Parts
+//! are admitted FIFO in input order: a part starts when `c_i` cores are
+//! free (mirroring `engine::lease`), runs for `profile.time_ms(t1, c_i)`
+//! of virtual time, then releases its cores — reproducing the paper's
+//! oversubscription behaviour ("some job parts will be run after other
+//! job parts have finished", §3.1) without wall-clock measurement noise.
+
+use super::profile::ScalProfile;
+
+#[derive(Debug, Clone)]
+pub struct SimPart {
+    pub t1_ms: f64,
+    pub profile: ScalProfile,
+}
+
+impl SimPart {
+    pub fn new(t1_ms: f64, profile: ScalProfile) -> SimPart {
+        SimPart { t1_ms, profile }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Virtual time when each part started (ms from prun entry).
+    pub start_ms: Vec<f64>,
+    /// Virtual time when each part finished.
+    pub end_ms: Vec<f64>,
+    /// Total virtual time of the prun call (max end).
+    pub makespan_ms: f64,
+    /// Threads each part ran with (post-clamping to C).
+    pub threads: Vec<usize>,
+}
+
+/// Simulate `parts` with the given per-part thread `allocation` on a
+/// `cores`-core machine. Allocation entries are clamped to `cores`
+/// (a single part may ask for the whole machine, as `run` does).
+pub fn simulate(parts: &[SimPart], allocation: &[usize], cores: usize) -> SimReport {
+    assert_eq!(parts.len(), allocation.len());
+    assert!(cores >= 1);
+    let k = parts.len();
+    let threads: Vec<usize> = allocation.iter().map(|&c| c.clamp(1, cores)).collect();
+
+    let mut start_ms = vec![0.0f64; k];
+    let mut end_ms = vec![0.0f64; k];
+
+    // Running set: (end_time, cores_held). Strict FIFO admission.
+    let mut running: Vec<(f64, usize)> = Vec::new();
+    let mut free = cores;
+    let mut now = 0.0f64;
+    let mut next = 0usize; // next part to admit
+
+    while next < k || !running.is_empty() {
+        // Admit as many queued parts (in order) as fit right now.
+        while next < k && threads[next] <= free {
+            let c = threads[next];
+            let dur = parts[next].profile.time_ms(parts[next].t1_ms, c);
+            assert!(dur.is_finite() && dur >= 0.0);
+            start_ms[next] = now;
+            end_ms[next] = now + dur;
+            running.push((now + dur, c));
+            free -= c;
+            next += 1;
+        }
+        if running.is_empty() {
+            // Can't happen while next < k because threads are clamped to
+            // cores and free == cores when nothing runs.
+            break;
+        }
+        // Advance to the earliest completion.
+        let (idx, &(t_end, c)) = running
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .0.partial_cmp(&b.1 .0).unwrap())
+            .unwrap();
+        now = t_end;
+        free += c;
+        running.swap_remove(idx);
+    }
+
+    let makespan_ms = end_ms.iter().cloned().fold(0.0, f64::max);
+    SimReport { start_ms, end_ms, makespan_ms, threads }
+}
+
+/// Simulate the *base* (no-prun) variant: parts run one after another,
+/// each with all `cores` threads — what the unmodified pipeline does when
+/// it loops over text boxes calling `run` (paper §4.1).
+pub fn simulate_sequential(parts: &[SimPart], cores: usize) -> SimReport {
+    let allocation = vec![cores; parts.len()];
+    simulate(parts, &allocation, cores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(t1: f64) -> SimPart {
+        SimPart::new(t1, ScalProfile::new(0.0, 0.0))
+    }
+
+    #[test]
+    fn single_part_uses_profile_time() {
+        let r = simulate(&[flat(100.0)], &[4], 16);
+        assert!((r.makespan_ms - 25.0).abs() < 1e-9);
+        assert_eq!(r.threads, vec![4]);
+    }
+
+    #[test]
+    fn parallel_parts_overlap() {
+        // two parts, 8 cores each on a 16-core machine: fully parallel
+        let r = simulate(&[flat(80.0), flat(80.0)], &[8, 8], 16);
+        assert!((r.makespan_ms - 10.0).abs() < 1e-9);
+        assert_eq!(r.start_ms, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn oversubscription_queues_fifo() {
+        // three parts x 8 cores on 16: third waits for the first to end
+        let r = simulate(&[flat(80.0), flat(160.0), flat(80.0)], &[8, 8, 8], 16);
+        assert_eq!(r.start_ms[2], r.end_ms[0]);
+        assert!((r.end_ms[2] - (10.0 + 10.0)).abs() < 1e-9);
+        assert!((r.makespan_ms - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fifo_head_blocks_smaller_followers() {
+        // part1 wants 16 cores and is behind part0 (8 cores); part2 (1
+        // core) queues behind part1 — strict FIFO, as the lease behaves.
+        let r = simulate(&[flat(80.0), flat(16.0), flat(1.0)], &[8, 16, 1], 16);
+        assert_eq!(r.start_ms[1], r.end_ms[0]);
+        assert_eq!(r.start_ms[2], r.end_ms[1]);
+    }
+
+    #[test]
+    fn sequential_equals_sum() {
+        let parts = vec![flat(60.0), flat(40.0), flat(20.0)];
+        let r = simulate_sequential(&parts, 4);
+        // each runs alone on 4 cores: 15 + 10 + 5
+        assert!((r.makespan_ms - 30.0).abs() < 1e-9);
+        assert_eq!(r.start_ms[1], r.end_ms[0]);
+    }
+
+    #[test]
+    fn allocation_clamped_to_machine() {
+        let r = simulate(&[flat(100.0)], &[64], 16);
+        assert_eq!(r.threads, vec![16]);
+        assert!((r.makespan_ms - 100.0 / 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_parts() {
+        let r = simulate(&[], &[], 16);
+        assert_eq!(r.makespan_ms, 0.0);
+    }
+
+    #[test]
+    fn negative_scaling_profile_in_sim() {
+        // prun-1 beats all-cores when the profile scales negatively.
+        let bad = ScalProfile::new(0.6, 0.9);
+        let parts: Vec<SimPart> = (0..4).map(|_| SimPart::new(27.0, bad)).collect();
+        let seq = simulate_sequential(&parts, 16); // base: 4x t(16)
+        let one = simulate(&parts, &[1, 1, 1, 1], 16); // prun-1: parallel t(1)
+        assert!(one.makespan_ms < seq.makespan_ms);
+    }
+}

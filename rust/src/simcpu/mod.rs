@@ -1,0 +1,25 @@
+//! `simcpu`: a discrete-event simulator of `prun` on a multi-core CPU.
+//!
+//! The paper's evaluation ran on a 16-core OCI VM; this repository's CI
+//! machine has a single core, so real intra-op scaling is physically
+//! unmeasurable here. `simcpu` substitutes a calibrated virtual-time
+//! model (DESIGN.md §4/§5):
+//!
+//! - [`profile`] — extended-Amdahl per-phase scalability curves;
+//! - [`calib`] — constants fitted to the paper's measured anchors, with
+//!   anchor tests that fail if calibration drifts;
+//! - [`des`] — FIFO-admission discrete-event execution of allocated parts;
+//! - [`bert`] / [`ocr`] — the paper's two workload families composed on
+//!   top, sharing the *production* allocator in `engine::allocator`.
+//!
+//! The policy code under test (allocation, admission ordering) is the
+//! same code the real PJRT path runs; only the clock is virtual.
+
+pub mod bert;
+pub mod calib;
+pub mod des;
+pub mod ocr;
+pub mod profile;
+
+pub use des::{simulate, simulate_sequential, SimPart, SimReport};
+pub use profile::ScalProfile;

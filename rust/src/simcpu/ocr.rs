@@ -1,0 +1,285 @@
+//! Virtual-time OCR pipeline (paper §4.1, Figures 2, 4, 5).
+//!
+//! An image is summarized by its detected-box widths; the three phases
+//! compose sequentially (detection -> classification -> recognition,
+//! Fig. 1). The cls/rec phases run either as the unmodified pipeline
+//! (`base`: boxes processed in padded batches of `OCR_BATCH_NUM`, each
+//! batch a `run` with all cores — the paper's Listing 2) or via `prun`
+//! (one part per box at exact width, threads from the allocator).
+
+use crate::engine::allocator::{allocate, AllocPolicy};
+
+use super::calib;
+use super::des::{simulate, simulate_sequential, SimPart};
+use super::profile::ScalProfile;
+
+/// Pipeline variant under evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OcrVariant {
+    Base,
+    Prun(AllocPolicy),
+}
+
+impl OcrVariant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OcrVariant::Base => "base",
+            OcrVariant::Prun(p) => p.name(),
+        }
+    }
+
+    pub fn all() -> [OcrVariant; 4] {
+        [
+            OcrVariant::Base,
+            OcrVariant::Prun(AllocPolicy::PrunDef),
+            OcrVariant::Prun(AllocPolicy::PrunOne),
+            OcrVariant::Prun(AllocPolicy::PrunEq),
+        ]
+    }
+}
+
+/// Per-phase virtual latency of one image.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OcrBreakdown {
+    pub det_ms: f64,
+    pub cls_ms: f64,
+    pub rec_ms: f64,
+}
+
+impl OcrBreakdown {
+    pub fn total_ms(&self) -> f64 {
+        self.det_ms + self.cls_ms + self.rec_ms
+    }
+}
+
+/// One phase over all boxes.
+///
+/// base: boxes grouped into padded batches of `OCR_BATCH_NUM` (every box
+/// padded to the batch max width — the padding waste prun eliminates),
+/// batches run sequentially with all cores.
+///
+/// prun: one part per box, exact width, allocator-assigned threads,
+/// co-scheduled by the DES with per-part pool-creation cost.
+fn phase_ms(
+    t1_per_px: impl Fn(usize) -> f64,
+    profile: ScalProfile,
+    widths: &[usize],
+    variant: OcrVariant,
+    cores: usize,
+) -> f64 {
+    match variant {
+        OcrVariant::Base => {
+            let prof = calib::base_profile(profile);
+            let parts: Vec<SimPart> = widths
+                .chunks(calib::OCR_BATCH_NUM)
+                .map(|chunk| {
+                    let max_w = *chunk.iter().max().unwrap();
+                    // every box padded to the widest in its batch
+                    SimPart::new(t1_per_px(max_w) * chunk.len() as f64, prof)
+                })
+                .collect();
+            simulate_sequential(&parts, cores).makespan_ms
+        }
+        OcrVariant::Prun(policy) => {
+            let prof = calib::prun_profile(profile);
+            let allocation = allocate(widths, cores, policy);
+            let parts: Vec<SimPart> =
+                widths.iter().map(|&w| SimPart::new(t1_per_px(w), prof)).collect();
+            simulate(&parts, &allocation, cores).makespan_ms
+        }
+    }
+}
+
+/// Like [`sim_image`] but with reusable worker pools: the paper's §4.1
+/// future-work idea ("reusing thread pools between prun invocations")
+/// modeled as prun paying no per-part pool-creation cost. Ablated in
+/// `benches/ablation_pool_reuse.rs`.
+pub fn sim_image_pool_reuse(
+    box_widths: &[usize],
+    variant: OcrVariant,
+    cores: usize,
+) -> OcrBreakdown {
+    let det_ms = calib::DET_PROFILE.time_ms(calib::DET_T1_MS, cores);
+    if box_widths.is_empty() {
+        return OcrBreakdown { det_ms, cls_ms: 0.0, rec_ms: 0.0 };
+    }
+    let phase = |t1_per_px: fn(usize) -> f64, profile: ScalProfile| match variant {
+        OcrVariant::Base => phase_ms(t1_per_px, profile, box_widths, variant, cores),
+        OcrVariant::Prun(policy) => {
+            // prun path with base-style (dispatch-only) profile: pools
+            // are warm, creation cost gone.
+            let prof = calib::base_profile(profile);
+            let allocation = allocate(box_widths, cores, policy);
+            let parts: Vec<SimPart> = box_widths
+                .iter()
+                .map(|&w| SimPart::new(t1_per_px(w), prof))
+                .collect();
+            simulate(&parts, &allocation, cores).makespan_ms
+        }
+    };
+    OcrBreakdown {
+        det_ms,
+        cls_ms: phase(calib::cls_t1_ms, calib::CLS_PROFILE),
+        rec_ms: phase(calib::rec_t1_ms, calib::REC_PROFILE),
+    }
+}
+
+/// Simulate one image whose detected boxes have the given pixel widths.
+pub fn sim_image(box_widths: &[usize], variant: OcrVariant, cores: usize) -> OcrBreakdown {
+    // Phase 1: detection — one job over the whole image, all cores, in
+    // every variant (the paper applies prun only to phases 2 and 3).
+    let det_ms = calib::DET_PROFILE.time_ms(calib::DET_T1_MS, cores);
+
+    if box_widths.is_empty() {
+        return OcrBreakdown { det_ms, cls_ms: 0.0, rec_ms: 0.0 };
+    }
+
+    let cls_ms = phase_ms(calib::cls_t1_ms, calib::CLS_PROFILE, box_widths, variant, cores);
+    let rec_ms = phase_ms(calib::rec_t1_ms, calib::REC_PROFILE, box_widths, variant, cores);
+
+    OcrBreakdown { det_ms, cls_ms, rec_ms }
+}
+
+/// Mean breakdown over a dataset of images (vec of box-width vectors).
+pub fn sim_dataset(images: &[Vec<usize>], variant: OcrVariant, cores: usize) -> OcrBreakdown {
+    assert!(!images.is_empty());
+    let mut acc = OcrBreakdown { det_ms: 0.0, cls_ms: 0.0, rec_ms: 0.0 };
+    for widths in images {
+        let b = sim_image(widths, variant, cores);
+        acc.det_ms += b.det_ms;
+        acc.cls_ms += b.cls_ms;
+        acc.rec_ms += b.rec_ms;
+    }
+    let n = images.len() as f64;
+    OcrBreakdown { det_ms: acc.det_ms / n, cls_ms: acc.cls_ms / n, rec_ms: acc.rec_ms / n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const C: usize = calib::PAPER_CORES;
+
+    fn avg_image() -> Vec<usize> {
+        vec![96; 4] // four average boxes
+    }
+
+    #[test]
+    fn base_breakdown_sums() {
+        let b = sim_image(&avg_image(), OcrVariant::Base, C);
+        assert!((b.total_ms() - (b.det_ms + b.cls_ms + b.rec_ms)).abs() < 1e-12);
+        assert!(b.rec_ms > b.cls_ms, "recognition dominates");
+    }
+
+    #[test]
+    fn fig5_prun_beats_base_at_16_cores() {
+        let widths = avg_image();
+        let base = sim_image(&widths, OcrVariant::Base, C);
+        let prun = sim_image(&widths, OcrVariant::Prun(AllocPolicy::PrunDef), C);
+        assert!(prun.rec_ms < base.rec_ms / 2.0, "rec speedup >2x (paper: 2.4x): base {} prun {}", base.rec_ms, prun.rec_ms);
+        assert!(prun.total_ms() < base.total_ms());
+        // end-to-end speedup is capped by the shared detection phase
+        let speedup = base.total_ms() / prun.total_ms();
+        assert!((1.2..2.6).contains(&speedup), "total speedup {speedup} (paper: 1.5x)");
+    }
+
+    #[test]
+    fn fig4_benefit_grows_with_box_count() {
+        let speedup = |n: usize| {
+            let widths = vec![96usize; n];
+            let base = sim_image(&widths, OcrVariant::Base, C).total_ms();
+            let prun = sim_image(&widths, OcrVariant::Prun(AllocPolicy::PrunDef), C).total_ms();
+            base / prun
+        };
+        assert!(speedup(2) > 1.05, "some win at 2 boxes: {}", speedup(2));
+        assert!(speedup(9) > speedup(2), "win grows with boxes: {} vs {}", speedup(9), speedup(2));
+    }
+
+    #[test]
+    fn fig4a_prun_one_wins_cls_at_small_box_counts() {
+        // paper: prun-1 produces the lowest cls latency at small counts
+        // (negative scaling + cheapest pools); variants converge at 9+.
+        let widths = vec![96usize; 2];
+        let base = sim_image(&widths, OcrVariant::Base, C).cls_ms;
+        let p1 = sim_image(&widths, OcrVariant::Prun(AllocPolicy::PrunOne), C).cls_ms;
+        let pdef = sim_image(&widths, OcrVariant::Prun(AllocPolicy::PrunDef), C).cls_ms;
+        let peq = sim_image(&widths, OcrVariant::Prun(AllocPolicy::PrunEq), C).cls_ms;
+        assert!(p1 < base && p1 < pdef && p1 < peq, "prun-1 lowest: {p1} {base} {pdef} {peq}");
+
+        // convergence: at 9 boxes prun-def within 20% of prun-1
+        let many = vec![96usize; 9];
+        let p1m = sim_image(&many, OcrVariant::Prun(AllocPolicy::PrunOne), C).cls_ms;
+        let pdm = sim_image(&many, OcrVariant::Prun(AllocPolicy::PrunDef), C).cls_ms;
+        assert!((pdm - p1m).abs() / p1m < 0.35, "converged: {pdm} vs {p1m}");
+    }
+
+    #[test]
+    fn no_boxes_only_detection() {
+        let b = sim_image(&[], OcrVariant::Prun(AllocPolicy::PrunDef), C);
+        assert_eq!(b.cls_ms, 0.0);
+        assert_eq!(b.rec_ms, 0.0);
+        assert!(b.det_ms > 0.0);
+    }
+
+    #[test]
+    fn single_box_prun_close_to_base() {
+        // with one box, prun-def uses all cores like base; only the pool
+        // creation differs (paper: prun adds no overhead in this case).
+        let widths = vec![96usize];
+        let base = sim_image(&widths, OcrVariant::Base, C).total_ms();
+        let prun = sim_image(&widths, OcrVariant::Prun(AllocPolicy::PrunDef), C).total_ms();
+        // the only delta is two per-part pool creations (~23 ms on ~340 ms)
+        assert!((prun - base) / base < 0.08, "base {base} prun {prun}");
+    }
+
+    #[test]
+    fn base_pays_padding_waste_on_mixed_widths() {
+        // same total pixels, but the wide box forces padding of the rest
+        let mixed = vec![48usize, 48, 48, 192];
+        let uniform = vec![84usize; 4];
+        let b_mixed = sim_image(&mixed, OcrVariant::Base, C).rec_ms;
+        let b_uniform = sim_image(&uniform, OcrVariant::Base, C).rec_ms;
+        assert!(b_mixed > b_uniform * 1.3, "padding waste: {b_mixed} vs {b_uniform}");
+    }
+
+    #[test]
+    fn base_batches_of_six() {
+        // 7 boxes -> 2 sequential batched runs; 6 -> 1
+        let six = sim_image(&vec![96; 6], OcrVariant::Base, C).rec_ms;
+        let seven = sim_image(&vec![96; 7], OcrVariant::Base, C).rec_ms;
+        assert!(seven > six * 1.1, "second batch adds a run: {seven} vs {six}");
+    }
+
+    #[test]
+    fn dataset_mean() {
+        let imgs = vec![vec![96; 2], vec![96; 6]];
+        let mean = sim_dataset(&imgs, OcrVariant::Base, C);
+        let a = sim_image(&imgs[0], OcrVariant::Base, C);
+        let b = sim_image(&imgs[1], OcrVariant::Base, C);
+        assert!((mean.total_ms() - (a.total_ms() + b.total_ms()) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pool_reuse_strictly_helps_prun() {
+        // future-work ablation: warm pools remove the per-part creation
+        // cost, so prun with reuse is never slower.
+        for n in [1usize, 2, 4, 9] {
+            let widths = vec![96usize; n];
+            let v = OcrVariant::Prun(AllocPolicy::PrunDef);
+            let cold = sim_image(&widths, v, C).total_ms();
+            let warm = sim_image_pool_reuse(&widths, v, C).total_ms();
+            assert!(warm < cold, "n={n}: warm {warm} !< cold {cold}");
+            // base is unaffected by pool reuse
+            let b1 = sim_image(&widths, OcrVariant::Base, C).total_ms();
+            let b2 = sim_image_pool_reuse(&widths, OcrVariant::Base, C).total_ms();
+            assert!((b1 - b2).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn variant_names() {
+        assert_eq!(OcrVariant::Base.name(), "base");
+        assert_eq!(OcrVariant::Prun(AllocPolicy::PrunDef).name(), "prun-def");
+        assert_eq!(OcrVariant::all().len(), 4);
+    }
+}

@@ -1,0 +1,124 @@
+//! Extended-Amdahl scalability profiles.
+//!
+//! The paper's §2 catalogue of why inference doesn't scale (non-scalable
+//! operators, framework overhead, per-invocation pool setup) maps onto a
+//! three-term cost model for a job of single-thread time `t1` run with
+//! `c` threads:
+//!
+//! ```text
+//! t(c) = t1 * (serial + (1-serial)/c)   // Amdahl split
+//!      + ovh_per_thread * (c-1)         // coordination cost per extra thread
+//!      + pool_base + pool_per_thread*c  // per-invocation pool setup (§4.1)
+//! ```
+//!
+//! `ovh_per_thread` is what produces the paper's *negative scaling*
+//! (Text Classification: 27 ms @1t -> 38 ms @16t) and the rec-phase
+//! regression beyond 4 threads.
+
+/// Scalability profile of one model/phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScalProfile {
+    /// Amdahl serial fraction in [0, 1].
+    pub serial: f64,
+    /// Per-extra-thread coordination cost (ms).
+    pub ovh_ms_per_thread: f64,
+    /// Fixed thread-pool creation cost per invocation (ms).
+    pub pool_base_ms: f64,
+    /// Pool creation cost per pool thread (ms).
+    pub pool_per_thread_ms: f64,
+}
+
+impl ScalProfile {
+    pub const fn new(serial: f64, ovh_ms_per_thread: f64) -> ScalProfile {
+        ScalProfile { serial, ovh_ms_per_thread, pool_base_ms: 0.0, pool_per_thread_ms: 0.0 }
+    }
+
+    pub const fn with_pool_cost(mut self, base_ms: f64, per_thread_ms: f64) -> ScalProfile {
+        self.pool_base_ms = base_ms;
+        self.pool_per_thread_ms = per_thread_ms;
+        self
+    }
+
+    /// Execution time of a `t1_ms` single-thread job on `c` threads.
+    pub fn time_ms(&self, t1_ms: f64, c: usize) -> f64 {
+        assert!(c >= 1, "thread count must be >= 1");
+        debug_assert!((0.0..=1.0).contains(&self.serial));
+        let c_f = c as f64;
+        t1_ms * (self.serial + (1.0 - self.serial) / c_f)
+            + self.ovh_ms_per_thread * (c_f - 1.0)
+            + self.pool_base_ms
+            + self.pool_per_thread_ms * c_f
+    }
+
+    /// Speedup over 1 thread (can be < 1: negative scaling).
+    pub fn speedup(&self, t1_ms: f64, c: usize) -> f64 {
+        self.time_ms(t1_ms, 1) / self.time_ms(t1_ms, c)
+    }
+
+    /// Thread count minimizing `time_ms` over 1..=max (the paper's "best
+    /// performance at 4 threads" style observation).
+    pub fn optimal_threads(&self, t1_ms: f64, max: usize) -> usize {
+        (1..=max)
+            .min_by(|&a, &b| {
+                self.time_ms(t1_ms, a)
+                    .partial_cmp(&self.time_ms(t1_ms, b))
+                    .unwrap()
+            })
+            .unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_thread_is_t1_plus_pool() {
+        let p = ScalProfile::new(0.3, 1.0);
+        assert!((p.time_ms(100.0, 1) - 100.0).abs() < 1e-9);
+        let q = p.with_pool_cost(2.0, 0.5);
+        assert!((q.time_ms(100.0, 1) - 102.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fully_parallel_scales_linearly() {
+        let p = ScalProfile::new(0.0, 0.0);
+        assert!((p.time_ms(160.0, 16) - 10.0).abs() < 1e-9);
+        assert!((p.speedup(160.0, 16) - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn amdahl_ceiling() {
+        let p = ScalProfile::new(0.5, 0.0);
+        // speedup bounded by 1/serial = 2
+        assert!(p.speedup(100.0, 1024) < 2.0);
+        assert!(p.speedup(100.0, 1024) > 1.9);
+    }
+
+    #[test]
+    fn negative_scaling_with_overhead() {
+        // Mimics paper Text Classification: more threads -> slower.
+        let p = ScalProfile::new(0.6, 0.9);
+        let t1 = p.time_ms(27.0, 1);
+        let t16 = p.time_ms(27.0, 16);
+        assert!(t16 > t1, "t16={t16} t1={t1}");
+        // the optimum sits at a very low thread count, far below 16
+        assert!(p.optimal_threads(27.0, 16) <= 3);
+    }
+
+    #[test]
+    fn sweet_spot_in_the_middle() {
+        // Mimics paper Text Recognition: fastest around 4 threads.
+        let p = ScalProfile::new(0.25, 2.5);
+        let best = p.optimal_threads(80.0, 16);
+        assert!((3..=6).contains(&best), "best={best}");
+        assert!(p.time_ms(80.0, 16) > p.time_ms(80.0, best));
+        assert!(p.time_ms(80.0, 1) > p.time_ms(80.0, best));
+    }
+
+    #[test]
+    fn time_monotone_in_t1() {
+        let p = ScalProfile::new(0.2, 1.0);
+        assert!(p.time_ms(200.0, 8) > p.time_ms(100.0, 8));
+    }
+}

@@ -1,0 +1,176 @@
+//! Tiny CLI argument parser (offline substitute for clap).
+//!
+//! Grammar: `prog <subcommand> [--key value]... [--flag]... [positional]...`
+//! Flags must be declared as boolean via `flag()` lookups; everything else
+//! written `--key value`. Unknown-key detection is the caller's job via
+//! `finish()`.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    kv: HashMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut it = items.into_iter().peekable();
+        let mut subcommand = None;
+        let mut positional = Vec::new();
+        let mut kv = HashMap::new();
+        let mut flags = Vec::new();
+
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // --key=value or --key value or bare --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    kv.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    kv.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    flags.push(key.to_string());
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        Args {
+            subcommand,
+            positional,
+            kv,
+            flags,
+            consumed: std::cell::RefCell::new(Vec::new()),
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+            || self.kv.get(key).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    /// Comma-separated list: `--threads 1,2,4` -> vec![1,2,4].
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|x| x.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad int '{x}'")))
+                .collect(),
+        }
+    }
+
+    /// Error on any provided --key the program never consulted (typos).
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let consumed = self.consumed.borrow();
+        for k in self.kv.keys().chain(self.flags.iter()) {
+            if !consumed.iter().any(|c| c == k) {
+                anyhow::bail!("unknown option --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_kv() {
+        let a = parse("serve --port 8080 --threads 4");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize_or("port", 0), 8080);
+        assert_eq!(a.usize_or("threads", 1), 4);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse("bench --mode=sim --verbose");
+        assert_eq!(a.get("mode"), Some("sim"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.usize_or("cores", 16), 16);
+        assert_eq!(a.f64_or("rate", 1.5), 1.5);
+        assert_eq!(a.get_or("name", "x"), "x");
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = parse("ocr img1.png img2.png --variant prun");
+        assert_eq!(a.positional, vec!["img1.png", "img2.png"]);
+        assert_eq!(a.get("variant"), Some("prun"));
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse("x --threads 1,2,4,8");
+        assert_eq!(a.usize_list_or("threads", &[16]), vec![1, 2, 4, 8]);
+        let b = parse("x");
+        assert_eq!(b.usize_list_or("threads", &[16]), vec![16]);
+    }
+
+    #[test]
+    fn finish_rejects_unknown() {
+        let a = parse("x --oops 3");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn no_subcommand_when_first_is_option() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Infrastructure the offline environment requires us to own: JSON,
+//! PRNG, CLI parsing, logging, stats, and a mini property-testing kit.
+
+pub mod args;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod prop;
+pub mod stats;

@@ -1,0 +1,134 @@
+//! Mini property-testing kit (offline substitute for proptest).
+//!
+//! `check(cases, |g| { ... })` runs the closure `cases` times with a
+//! seeded `Gen`; on panic or `Err`, it reruns the failing seed to confirm
+//! and reports it so the case is reproducible with `check_seed`.
+//! No shrinking — generators are kept small-biased instead (sizes drawn
+//! log-uniformly), which in practice yields readable counterexamples.
+
+use super::prng::Rng;
+
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.usize_in(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_in(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    /// Log-uniform size in [1, hi]: biases toward small, still covers big.
+    pub fn size(&mut self, hi: usize) -> usize {
+        assert!(hi >= 1);
+        let log_hi = (hi as f64).ln();
+        let x = (self.rng.f64() * log_hi).exp();
+        (x as usize).clamp(1, hi)
+    }
+
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Positive weights that sum to ~1 (for allocator tests).
+    pub fn weights(&mut self, k: usize) -> Vec<f64> {
+        let raw: Vec<f64> = (0..k).map(|_| self.rng.f64() + 1e-6).collect();
+        let total: f64 = raw.iter().sum();
+        raw.into_iter().map(|w| w / total).collect()
+    }
+
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        self.rng.choice(items)
+    }
+}
+
+/// Run `f` for `cases` seeded cases; panic with the failing seed on error.
+pub fn check(cases: u64, f: impl Fn(&mut Gen)) {
+    let base = match std::env::var("DNC_PROP_SEED") {
+        Ok(s) => s.parse().expect("DNC_PROP_SEED must be u64"),
+        Err(_) => DEFAULT_BASE_SEED,
+    };
+    for i in 0..cases {
+        let seed = base.wrapping_add(i);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen { rng: Rng::new(seed), seed };
+            f(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property failed at case {i} (seed {seed}): {msg}\n\
+                 reproduce with DNC_PROP_SEED={seed} and 1 case"
+            );
+        }
+    }
+}
+
+/// Re-run a single seed (debugging helper).
+pub fn check_seed(seed: u64, f: impl Fn(&mut Gen)) {
+    let mut g = Gen { rng: Rng::new(seed), seed };
+    f(&mut g);
+}
+
+const DEFAULT_BASE_SEED: u64 = 0xdc5e_11e0_0000_0001;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(50, |g| {
+            let n = g.usize_in(0, 100);
+            assert!(n <= 100);
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check(50, |g| {
+                let n = g.usize_in(0, 100);
+                assert!(n < 95, "n={n}");
+            });
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().unwrap().clone(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn weights_normalized() {
+        check(30, |g| {
+            let k = g.usize_in(1, 20);
+            let w = g.weights(k);
+            assert_eq!(w.len(), k);
+            let sum: f64 = w.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+            assert!(w.iter().all(|&x| x > 0.0));
+        });
+    }
+
+    #[test]
+    fn size_biased_small_but_covers_range() {
+        let mut g = Gen { rng: Rng::new(42), seed: 42 };
+        let sizes: Vec<usize> = (0..2000).map(|_| g.size(1000)).collect();
+        assert!(sizes.iter().any(|&s| s <= 3));
+        assert!(sizes.iter().any(|&s| s > 500));
+        assert!(sizes.iter().all(|&s| (1..=1000).contains(&s)));
+    }
+}

@@ -1,0 +1,12 @@
+//! Video-analytics substrate — the paper's §6 third prun use case
+//! ("other ML models that feature a pipeline-based architecture,
+//! e.g. [21, 29]"): a streaming motion-detect -> per-region-recognize
+//! pipeline over synthetic scenes with exact ground truth.
+
+pub mod framegen;
+pub mod motion;
+pub mod pipeline;
+
+pub use framegen::{frame_tensor, render_frame, scene, ObjectTrack, Scene};
+pub use motion::moving_regions;
+pub use pipeline::{FrameResult, VideoPipeline};

@@ -1,0 +1,107 @@
+//! Motion detection: frame differencing + connected components.
+//!
+//! The classic first stage of a video-analytics pipeline (the paper's §6
+//! cites [21, 29] as prun targets): regions that changed since the last
+//! frame become candidate objects. Because our objects move on a dark
+//! background, a changed region is the union of the object's old and new
+//! positions; we then snap to the *current* object rectangle by running
+//! the same brightness-projection refine the OCR detector uses.
+
+use crate::ocr::detect::{components, DetBox};
+use crate::ocr::imagegen::Image;
+use crate::ocr::meta::OcrMeta;
+
+/// Per-pixel change threshold.
+pub const DIFF_THRESH: f32 = 0.1;
+
+/// Difference mask at score-map resolution: fraction of changed pixels
+/// per stride x stride cell (cheap downsample so `components` reuses the
+/// OCR grid machinery).
+pub fn diff_mask(prev: &[f32], curr: &[f32], meta: &OcrMeta) -> Vec<f32> {
+    let plane = meta.img_h * meta.img_w;
+    assert_eq!(prev.len(), 3 * plane);
+    assert_eq!(curr.len(), 3 * plane);
+    let gh = meta.img_h.div_ceil(meta.stride);
+    let gw = meta.img_w.div_ceil(meta.stride);
+    let mut mask = vec![0.0f32; gh * gw];
+    for r in 0..meta.img_h {
+        for c in 0..meta.img_w {
+            let idx = r * meta.img_w + c;
+            // channel 0 is representative (channels are near-identical)
+            if (curr[idx] - prev[idx]).abs() > DIFF_THRESH {
+                mask[(r / meta.stride) * gw + c / meta.stride] = 1.0;
+            }
+        }
+    }
+    mask
+}
+
+/// Moving regions in the current frame: diff components refined against
+/// the current pixels (snaps the old+new union to the new rectangle).
+pub fn moving_regions(prev: &[f32], curr: &[f32], meta: &OcrMeta) -> Vec<DetBox> {
+    let mask = diff_mask(prev, curr, meta);
+    let gh = meta.img_h.div_ceil(meta.stride);
+    let gw = meta.img_w.div_ceil(meta.stride);
+    let img = Image { pixels: curr.to_vec(), boxes: vec![] };
+    components(&mask, gh, gw)
+        .iter()
+        .filter_map(|rough| crate::ocr::detect::refine(&img, meta, rough))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_dir;
+    use crate::util::prng::Rng;
+    use crate::video::framegen::{render_frame, scene};
+
+    fn meta() -> Option<OcrMeta> {
+        let dir = artifacts_dir();
+        if !dir.join("ocr_meta.json").exists() {
+            return None;
+        }
+        Some(OcrMeta::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn identical_frames_no_motion() {
+        let Some(m) = meta() else { return };
+        let mut rng = Rng::new(4);
+        let sc = scene(&m, &mut rng, 2);
+        let f = render_frame(&sc, &m, 0);
+        assert!(moving_regions(&f, &f, &m).is_empty());
+    }
+
+    #[test]
+    fn moving_object_found_at_current_position() {
+        let Some(m) = meta() else { return };
+        let mut rng = Rng::new(5);
+        let sc = scene(&m, &mut rng, 1);
+        let f0 = render_frame(&sc, &m, 0);
+        let f1 = render_frame(&sc, &m, 1);
+        let regions = moving_regions(&f0, &f1, &m);
+        assert_eq!(regions.len(), 1);
+        let (x, y) = sc.tracks[0].position(1, &m);
+        assert_eq!(regions[0].x, x);
+        assert_eq!(regions[0].y, y);
+        assert_eq!(regions[0].width, sc.tracks[0].width);
+    }
+
+    #[test]
+    fn multiple_separated_objects_all_found() {
+        let Some(m) = meta() else { return };
+        // hand-placed well-separated tracks to avoid union overlaps
+        use crate::video::framegen::{ObjectTrack, Scene};
+        let sc = Scene {
+            tracks: vec![
+                ObjectTrack { label: "abc".into(), width: m.text_width(3), x0: 10.0, y0: 10.0, vx: 3.0, vy: 0.0 },
+                ObjectTrack { label: "xyz9".into(), width: m.text_width(4), x0: 150.0, y0: 120.0, vx: -3.0, vy: 0.0 },
+            ],
+        };
+        let f0 = render_frame(&sc, &m, 0);
+        let f1 = render_frame(&sc, &m, 1);
+        let regions = moving_regions(&f0, &f1, &m);
+        assert_eq!(regions.len(), 2, "{regions:?}");
+    }
+}

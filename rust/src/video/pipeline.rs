@@ -1,0 +1,97 @@
+//! Streaming video-analytics pipeline (paper §6's third prun target):
+//! per frame, motion detection (rust) -> per-region label recognition
+//! (the OCR recognizer artifacts) with `base` or `prun` execution —
+//! structurally the OCR pipeline minus detection-by-model, plus state
+//! (previous frame) carried across the stream.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::engine::{JobPart, PrunOptions, Session};
+use crate::ocr::decode;
+use crate::ocr::imagegen::{crop_tensor, Image};
+use crate::ocr::meta::OcrMeta;
+use crate::simcpu::ocr::OcrVariant;
+
+use super::motion;
+
+#[derive(Debug)]
+pub struct FrameResult {
+    /// (x, y, decoded label) per moving region
+    pub objects: Vec<(usize, usize, Option<String>)>,
+    pub motion_time: Duration,
+    pub recognize_time: Duration,
+}
+
+pub struct VideoPipeline {
+    session: Arc<Session>,
+    meta: OcrMeta,
+    prev: Option<Vec<f32>>,
+}
+
+impl VideoPipeline {
+    pub fn new(session: Arc<Session>, meta: OcrMeta) -> VideoPipeline {
+        VideoPipeline { session, meta, prev: None }
+    }
+
+    pub fn meta(&self) -> &OcrMeta {
+        &self.meta
+    }
+
+    /// Reset stream state (e.g. scene cut).
+    pub fn reset(&mut self) {
+        self.prev = None;
+    }
+
+    /// Process the next frame. The first frame only primes the
+    /// differencer and reports no objects.
+    pub fn next_frame(&mut self, pixels: &[f32], variant: OcrVariant) -> Result<FrameResult> {
+        let Some(prev) = self.prev.replace(pixels.to_vec()) else {
+            return Ok(FrameResult {
+                objects: vec![],
+                motion_time: Duration::ZERO,
+                recognize_time: Duration::ZERO,
+            });
+        };
+
+        let t0 = Instant::now();
+        let regions = motion::moving_regions(&prev, pixels, &self.meta);
+        let motion_time = t0.elapsed();
+
+        let t1 = Instant::now();
+        let img = Image { pixels: pixels.to_vec(), boxes: vec![] };
+        let parts: Vec<JobPart> = regions
+            .iter()
+            .map(|b| {
+                let bucket = self.meta.width_bucket(b.width)?;
+                let crop = crop_tensor(&img, &self.meta, b.x, b.y, b.width, bucket, false);
+                Ok(JobPart::new(format!("ocr_rec_w{bucket}"), vec![crop]))
+            })
+            .collect::<Result<_>>()?;
+        let outputs = match variant {
+            OcrVariant::Base => parts
+                .into_iter()
+                .map(|p| self.session.run(&p.model, p.inputs))
+                .collect::<Result<Vec<_>>>()?,
+            OcrVariant::Prun(policy) => {
+                self.session
+                    .prun(parts, PrunOptions { policy, ..Default::default() })?
+                    .outputs
+            }
+        };
+        let objects = regions
+            .iter()
+            .zip(outputs.iter())
+            .map(|(b, out)| {
+                let label = out[0]
+                    .as_f32()
+                    .ok()
+                    .and_then(|logp| decode::decode(logp, out[0].shape[1], &self.meta).ok());
+                (b.x, b.y, label)
+            })
+            .collect();
+        Ok(FrameResult { objects, motion_time, recognize_time: t1.elapsed() })
+    }
+}

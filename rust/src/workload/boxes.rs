@@ -1,0 +1,119 @@
+//! OCR workload generator: the paper's evaluation dataset shape.
+//!
+//! The paper selects 500 OpenImages pictures with >= 2 detected text
+//! boxes and reports the detected-box-count distribution as a pie chart
+//! (Fig. 3). The exact percentages aren't tabulated; `BOX_COUNT_DIST`
+//! encodes a right-skewed distribution consistent with the chart's
+//! description (2 most common, a 10+ tail), mean ~4.3 boxes — the value
+//! the simulator calibration uses (DESIGN.md §5).
+
+use crate::util::prng::Rng;
+
+/// (box count, probability) — counts of 10+ are drawn from 10..=14.
+pub const BOX_COUNT_DIST: [(usize, f64); 9] = [
+    (2, 0.30),
+    (3, 0.19),
+    (4, 0.14),
+    (5, 0.10),
+    (6, 0.08),
+    (7, 0.06),
+    (8, 0.05),
+    (9, 0.04),
+    (10, 0.04), // "10+" bucket
+];
+
+/// Sample a detected-box count from the Fig. 3 distribution.
+pub fn sample_box_count(rng: &mut Rng) -> usize {
+    let weights: Vec<f64> = BOX_COUNT_DIST.iter().map(|&(_, p)| p).collect();
+    let idx = rng.weighted_index(&weights);
+    let (count, _) = BOX_COUNT_DIST[idx];
+    if count >= 10 {
+        rng.usize_in(10, 14)
+    } else {
+        count
+    }
+}
+
+/// Sample a text length (chars) for one box; widths follow as
+/// `(len+1) * glyph_w`. Lengths 3..=20 as in `ocr::imagegen`.
+pub fn sample_text_len(rng: &mut Rng) -> usize {
+    rng.usize_in(3, 20)
+}
+
+/// A dataset entry for the simulator: just the box widths.
+pub fn sample_box_widths(rng: &mut Rng, glyph_w: usize) -> Vec<usize> {
+    let n = sample_box_count(rng);
+    (0..n).map(|_| (sample_text_len(rng) + 1) * glyph_w).collect()
+}
+
+/// The paper's 500-image evaluation dataset (as width vectors).
+pub fn dataset(seed: u64, n_images: usize, glyph_w: usize) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(seed);
+    (0..n_images).map(|_| sample_box_widths(&mut rng, glyph_w)).collect()
+}
+
+/// Empirical distribution of box counts in a dataset (for Fig. 3).
+pub fn count_histogram(images: &[Vec<usize>]) -> Vec<(usize, usize)> {
+    let mut hist = std::collections::BTreeMap::new();
+    for img in images {
+        *hist.entry(img.len().min(10)).or_insert(0usize) += 1;
+    }
+    hist.into_iter().collect()
+}
+
+/// Mean box count of a dataset.
+pub fn mean_count(images: &[Vec<usize>]) -> f64 {
+    images.iter().map(Vec::len).sum::<usize>() as f64 / images.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distribution_sums_to_one() {
+        let total: f64 = BOX_COUNT_DIST.iter().map(|&(_, p)| p).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counts_at_least_two() {
+        // the paper's dataset only keeps images with >= 2 boxes
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            assert!(sample_box_count(&mut rng) >= 2);
+        }
+    }
+
+    #[test]
+    fn mean_near_calibration_value() {
+        let imgs = dataset(42, 5000, 8);
+        let mean = mean_count(&imgs);
+        assert!((3.8..4.8).contains(&mean), "mean={mean}");
+    }
+
+    #[test]
+    fn histogram_matches_weights_roughly() {
+        let imgs = dataset(7, 10_000, 8);
+        let hist = count_histogram(&imgs);
+        let two = hist.iter().find(|&&(c, _)| c == 2).unwrap().1 as f64 / 10_000.0;
+        assert!((two - 0.30).abs() < 0.03, "P(2 boxes)={two}");
+        let tail = hist.iter().find(|&&(c, _)| c == 10).unwrap().1 as f64 / 10_000.0;
+        assert!((tail - 0.04).abs() < 0.02, "P(10+)={tail}");
+    }
+
+    #[test]
+    fn widths_are_glyph_multiples() {
+        let mut rng = Rng::new(3);
+        for w in sample_box_widths(&mut rng, 8) {
+            assert_eq!(w % 8, 0);
+            assert!((32..=168).contains(&w));
+        }
+    }
+
+    #[test]
+    fn dataset_deterministic() {
+        assert_eq!(dataset(5, 50, 8), dataset(5, 50, 8));
+        assert_ne!(dataset(5, 50, 8), dataset(6, 50, 8));
+    }
+}

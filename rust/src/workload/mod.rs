@@ -1,0 +1,6 @@
+//! Workload generators reproducing the paper's evaluation inputs:
+//! the Fig. 3 box-count distribution for OCR and the §4.2/§4.3
+//! sequence-length patterns for BERT.
+
+pub mod boxes;
+pub mod seqlen;

@@ -1,0 +1,83 @@
+//! BERT workload generators: the sequence-length patterns of the paper's
+//! §4.2/§4.3 experiments.
+
+use crate::util::prng::Rng;
+
+/// Fig. 6: batch of `x` lengths drawn uniformly from [16, 512].
+pub fn random_batch(rng: &mut Rng, x: usize) -> Vec<usize> {
+    (0..x).map(|_| rng.usize_in(16, 512)).collect()
+}
+
+/// Fig. 7's preset mixes, labeled as in the paper ("16-64-256" etc.).
+pub fn preset_mixes() -> Vec<(&'static str, Vec<usize>)> {
+    vec![
+        ("16-64", vec![16, 64]),
+        ("16-256", vec![16, 256]),
+        ("16-64-256", vec![16, 64, 256]),
+        ("64-128-256", vec![64, 128, 256]),
+        ("16-64-256-512", vec![16, 64, 256, 512]),
+        ("32-32-256-512", vec![32, 32, 256, 512]),
+        ("16-16-16-512", vec![16, 16, 16, 512]),
+        ("128-128-128-128-512", vec![128, 128, 128, 128, 512]),
+    ]
+}
+
+/// Fig. 8: one long sequence (256) plus `x` short ones (16 each).
+pub fn long_short(x: usize) -> Vec<usize> {
+    let mut lens = vec![256];
+    lens.extend(std::iter::repeat(16).take(x));
+    lens
+}
+
+/// Fig. 9: homogeneous batch of 4 sequences of length `len`.
+pub fn homogeneous(len: usize) -> Vec<usize> {
+    vec![len; 4]
+}
+
+pub const FIG9_LENGTHS: [usize; 4] = [64, 128, 256, 512];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_batch_in_range() {
+        let mut rng = Rng::new(1);
+        for x in 2..=8 {
+            let lens = random_batch(&mut rng, x);
+            assert_eq!(lens.len(), x);
+            assert!(lens.iter().all(|&l| (16..=512).contains(&l)));
+        }
+    }
+
+    #[test]
+    fn random_batch_covers_range() {
+        let mut rng = Rng::new(2);
+        let all: Vec<usize> = (0..500).flat_map(|_| random_batch(&mut rng, 4)).collect();
+        assert!(all.iter().any(|&l| l < 64));
+        assert!(all.iter().any(|&l| l > 448));
+    }
+
+    #[test]
+    fn preset_mix_labels_match_contents() {
+        for (label, lens) in preset_mixes() {
+            let from_label: Vec<usize> =
+                label.split('-').map(|s| s.parse().unwrap()).collect();
+            assert_eq!(from_label, lens, "{label}");
+        }
+    }
+
+    #[test]
+    fn long_short_shapes() {
+        assert_eq!(long_short(0), vec![256]);
+        let l3 = long_short(3);
+        assert_eq!(l3.len(), 4);
+        assert_eq!(l3[0], 256);
+        assert!(l3[1..].iter().all(|&l| l == 16));
+    }
+
+    #[test]
+    fn homogeneous_is_four_equal() {
+        assert_eq!(homogeneous(128), vec![128; 4]);
+    }
+}

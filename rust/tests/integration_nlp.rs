@@ -1,0 +1,168 @@
+//! End-to-end NLP integration: tokenizer -> bucketed artifacts -> the
+//! three serving strategies, checking result equivalence (padding and
+//! splitting must not change the numbers beyond bucket effects).
+
+use std::sync::Arc;
+
+use dnc_serve::engine::{AllocPolicy, Session};
+use dnc_serve::nlp::{BertServer, Strategy, Tokenizer};
+use dnc_serve::runtime::{artifacts_dir, Manifest};
+use dnc_serve::workload::seqlen;
+use dnc_serve::util::prng::Rng;
+
+fn server() -> Option<BertServer> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = Arc::new(Manifest::load(&dir).unwrap());
+    let session = Arc::new(Session::new(manifest, 16, 2).unwrap());
+    Some(BertServer::new(session))
+}
+
+fn requests(lens: &[usize], seed: u64) -> Vec<Vec<i32>> {
+    let tok = Tokenizer::new(8192);
+    lens.iter()
+        .enumerate()
+        .map(|(i, &l)| tok.synthetic(l, seed + i as u64))
+        .collect()
+}
+
+#[test]
+fn no_batch_and_prun_agree_exactly() {
+    // both run each sequence in its own bucket: identical numerics
+    let Some(srv) = server() else { return };
+    let reqs = requests(&[16, 30, 64], 1);
+    let solo = srv.serve(&reqs, Strategy::NoBatch).unwrap();
+    for policy in [AllocPolicy::PrunDef, AllocPolicy::PrunOne, AllocPolicy::PrunEq] {
+        let prun = srv.serve(&reqs, Strategy::Prun(policy)).unwrap();
+        assert_eq!(prun.outputs, solo.outputs, "{policy:?}");
+        assert_eq!(prun.invocations, 3);
+    }
+}
+
+#[test]
+fn pad_batch_returns_per_request_outputs() {
+    let Some(srv) = server() else { return };
+    let reqs = requests(&[16, 16], 2);
+    let res = srv.serve(&reqs, Strategy::PadBatch).unwrap();
+    assert_eq!(res.outputs.len(), 2);
+    assert_eq!(res.invocations, 1);
+    let hidden = srv.session().manifest().bert.hidden;
+    assert!(res.outputs.iter().all(|o| o.len() == hidden));
+    // different inputs -> different embeddings
+    assert_ne!(res.outputs[0], res.outputs[1]);
+}
+
+#[test]
+fn identical_requests_same_output_across_strategies() {
+    // With equal lengths there is no padding difference, so pad-batch
+    // row i must equal the no-batch output for request i.
+    let Some(srv) = server() else { return };
+    let reqs = requests(&[32, 32], 3);
+    let nb = srv.serve(&reqs, Strategy::NoBatch).unwrap();
+    let pb = srv.serve(&reqs, Strategy::PadBatch).unwrap();
+    for (i, (a, b)) in nb.outputs.iter().zip(pb.outputs.iter()).enumerate() {
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x - y).abs() < 1e-4, "request {i}: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn random_length_batches_all_strategies_complete() {
+    let Some(srv) = server() else { return };
+    let mut rng = Rng::new(4);
+    for x in [2usize, 5, 8] {
+        let lens = seqlen::random_batch(&mut rng, x);
+        let reqs = requests(&lens, 10 + x as u64);
+        for strat in [
+            Strategy::PadBatch,
+            Strategy::NoBatch,
+            Strategy::Prun(AllocPolicy::PrunDef),
+        ] {
+            let res = srv.serve(&reqs, strat).unwrap();
+            assert_eq!(res.outputs.len(), x, "{strat:?} x={x}");
+            assert!(res.outputs.iter().flatten().all(|v| v.is_finite()));
+        }
+    }
+}
+
+#[test]
+fn batch_too_large_is_an_error() {
+    let Some(srv) = server() else { return };
+    let reqs = requests(&vec![16; 9], 5); // largest batch bucket is 8
+    assert!(srv.serve(&reqs, Strategy::PadBatch).is_err());
+    // but prun handles any k (one part per request)
+    assert!(srv.serve(&reqs, Strategy::Prun(AllocPolicy::PrunDef)).is_ok());
+}
+
+#[test]
+fn sequence_too_long_is_an_error() {
+    let Some(srv) = server() else { return };
+    let tok = Tokenizer::new(8192);
+    let reqs = vec![tok.synthetic(600, 6)];
+    assert!(srv.serve(&reqs, Strategy::NoBatch).is_err());
+}
+
+#[test]
+fn empty_batch_rejected() {
+    let Some(srv) = server() else { return };
+    assert!(srv.serve(&[], Strategy::PadBatch).is_err());
+}
+
+#[test]
+fn tokenizer_end_to_end_text_path() {
+    let Some(srv) = server() else { return };
+    let tok = srv.tokenizer();
+    let reqs = vec![
+        tok.encode("the quick brown fox jumps over the lazy dog", 64),
+        tok.encode("hello", 64),
+    ];
+    let res = srv.serve(&reqs, Strategy::Prun(AllocPolicy::PrunDef)).unwrap();
+    assert_eq!(res.outputs.len(), 2);
+    assert_ne!(res.outputs[0], res.outputs[1]);
+}
+
+#[test]
+fn profiled_weights_prun_after_warm_observations() {
+    // paper §6 future work: weight by measured latency instead of size.
+    // After observing each bucket, Profiled weights must produce valid
+    // allocations and identical outputs.
+    use dnc_serve::engine::{JobPart, PrunOptions, WeightSource};
+    use dnc_serve::runtime::Tensor;
+    let Some(srv) = server() else { return };
+    let sess = srv.session();
+    // warm the profile store with real observations
+    for len in [16usize, 64] {
+        let ids = Tokenizer::new(8192).synthetic(len, 9);
+        let data = Tokenizer::pad(&ids, len);
+        sess.run(&format!("bert_b1_s{len}"), vec![Tensor::i32(vec![1, len], data)]).unwrap();
+    }
+    assert!(sess.profiles().len() >= 2);
+    let parts: Vec<JobPart> = [16usize, 64]
+        .iter()
+        .map(|&len| {
+            let ids = Tokenizer::new(8192).synthetic(len, 9);
+            JobPart::new(
+                format!("bert_b1_s{len}"),
+                vec![Tensor::i32(vec![1, len], Tokenizer::pad(&ids, len))],
+            )
+        })
+        .collect();
+    let solo: Vec<_> = parts
+        .iter()
+        .map(|p| sess.run(&p.model, p.inputs.clone()).unwrap())
+        .collect();
+    let opts = PrunOptions {
+        policy: AllocPolicy::PrunDef,
+        weights: WeightSource::Profiled,
+    };
+    let outcome = sess.prun(parts, opts).unwrap();
+    assert_eq!(outcome.outputs, solo);
+    // allocation sums to the core budget and respects ordering (the
+    // longer sequence measured slower, so it gets more threads)
+    assert_eq!(outcome.allocation.iter().sum::<usize>(), 16);
+    assert!(outcome.allocation[1] >= outcome.allocation[0], "{:?}", outcome.allocation);
+}

@@ -1,0 +1,124 @@
+//! End-to-end OCR integration: synthetic page -> real PJRT detection ->
+//! classification -> rectification -> recognition -> exact-match decode,
+//! under every pipeline variant. This is the repo's proof that all three
+//! layers compose on the paper's §4.1 workload.
+
+use std::sync::Arc;
+
+use dnc_serve::engine::{AllocPolicy, Session};
+use dnc_serve::ocr::{exact_match, generate, GenOptions, OcrMeta, OcrPipeline};
+use dnc_serve::runtime::{artifacts_dir, Manifest};
+use dnc_serve::simcpu::ocr::OcrVariant;
+use dnc_serve::util::prng::Rng;
+
+fn pipeline() -> Option<OcrPipeline> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = Arc::new(Manifest::load(&dir).unwrap());
+    let session = Arc::new(Session::new(manifest, 16, 2).unwrap());
+    let meta = OcrMeta::load(&dir).unwrap();
+    Some(OcrPipeline::new(session, meta))
+}
+
+#[test]
+fn base_pipeline_exact_match_on_clean_images() {
+    let Some(p) = pipeline() else { return };
+    let mut rng = Rng::new(100);
+    let opts = GenOptions { noise: 0.0, ..Default::default() };
+    let mut total = (0usize, 0usize);
+    for _ in 0..3 {
+        let img = generate(p.meta(), &mut rng, 3, &opts);
+        let result = p.process(&img, OcrVariant::Base).unwrap();
+        assert_eq!(result.boxes.len(), img.boxes.len(), "all boxes detected");
+        let (hits, n) = exact_match(&result, &img);
+        total.0 += hits;
+        total.1 += n;
+    }
+    assert_eq!(total.0, total.1, "exact match on clean pages: {total:?}");
+}
+
+#[test]
+fn prun_def_pipeline_matches_base_outputs() {
+    let Some(p) = pipeline() else { return };
+    let mut rng = Rng::new(200);
+    let img = generate(p.meta(), &mut rng, 4, &GenOptions::default());
+    let base = p.process(&img, OcrVariant::Base).unwrap();
+    let prun = p.process(&img, OcrVariant::Prun(AllocPolicy::PrunDef)).unwrap();
+    assert_eq!(base.boxes, prun.boxes);
+    assert_eq!(base.texts, prun.texts);
+    assert_eq!(base.flipped, prun.flipped);
+}
+
+#[test]
+fn all_prun_variants_exact_match_with_noise_and_flips() {
+    let Some(p) = pipeline() else { return };
+    let opts = GenOptions { noise: 0.04, flip_prob: 0.5, ..Default::default() };
+    for (i, policy) in [AllocPolicy::PrunDef, AllocPolicy::PrunOne, AllocPolicy::PrunEq]
+        .into_iter()
+        .enumerate()
+    {
+        let mut rng = Rng::new(300 + i as u64);
+        let img = generate(p.meta(), &mut rng, 4, &opts);
+        let result = p.process(&img, OcrVariant::Prun(policy)).unwrap();
+        let (hits, n) = exact_match(&result, &img);
+        assert_eq!(hits, n, "{policy:?}: {hits}/{n}");
+        // flips detected correctly
+        for gt in &img.boxes {
+            let i = result
+                .boxes
+                .iter()
+                .position(|b| b.x == gt.x && b.y == gt.y)
+                .expect("box found");
+            assert_eq!(result.flipped[i], gt.flipped, "flip for '{}'", gt.text);
+        }
+    }
+}
+
+#[test]
+fn empty_page_detects_nothing() {
+    let Some(p) = pipeline() else { return };
+    let mut rng = Rng::new(400);
+    let img = generate(p.meta(), &mut rng, 0, &GenOptions::default());
+    let result = p.process(&img, OcrVariant::Base).unwrap();
+    assert!(result.boxes.is_empty());
+    assert!(result.texts.is_empty());
+}
+
+#[test]
+fn single_box_page_prun_no_failure() {
+    // the paper's <2-box case: prun must behave like run
+    let Some(p) = pipeline() else { return };
+    let mut rng = Rng::new(500);
+    let opts = GenOptions { noise: 0.0, flip_prob: 0.0, ..Default::default() };
+    let img = generate(p.meta(), &mut rng, 1, &opts);
+    let result = p.process(&img, OcrVariant::Prun(AllocPolicy::PrunDef)).unwrap();
+    let (hits, n) = exact_match(&result, &img);
+    assert_eq!((hits, n), (1, 1));
+}
+
+#[test]
+fn many_boxes_page_all_recognized() {
+    let Some(p) = pipeline() else { return };
+    let mut rng = Rng::new(600);
+    let opts = GenOptions { noise: 0.02, flip_prob: 0.3, min_len: 3, max_len: 8 };
+    let img = generate(p.meta(), &mut rng, 10, &opts);
+    assert!(img.boxes.len() >= 8, "placed {} boxes", img.boxes.len());
+    let result = p.process(&img, OcrVariant::Prun(AllocPolicy::PrunDef)).unwrap();
+    let (hits, n) = exact_match(&result, &img);
+    assert_eq!(hits, n, "{hits}/{n}");
+}
+
+#[test]
+fn timing_breakdown_populated() {
+    let Some(p) = pipeline() else { return };
+    let mut rng = Rng::new(700);
+    let img = generate(p.meta(), &mut rng, 3, &GenOptions::default());
+    let r = p.process(&img, OcrVariant::Base).unwrap();
+    assert!(r.timing.det.as_nanos() > 0);
+    assert!(r.timing.cls.as_nanos() > 0);
+    assert!(r.timing.rec.as_nanos() > 0);
+    assert_eq!(r.timing.total(), r.timing.det + r.timing.cls + r.timing.rec);
+}

@@ -1,0 +1,141 @@
+//! End-to-end runtime integration: artifacts -> PJRT compile -> execute,
+//! with numerics checked against goldens produced by the Python reference.
+//!
+//! Requires `make artifacts` (tests are skipped politely otherwise).
+
+use std::sync::Arc;
+
+use dnc_serve::runtime::{artifacts_dir, ExecutorPool, LocalEngine, Manifest, Tensor};
+use dnc_serve::util::json::Json;
+
+fn manifest() -> Option<Arc<Manifest>> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Arc::new(Manifest::load(&dir).expect("manifest parses")))
+}
+
+#[test]
+fn bert_b1_s16_matches_python_golden() {
+    let Some(m) = manifest() else { return };
+    let golden = Json::parse_file(&m.dir.join("golden/bert_b1_s16.json")).unwrap();
+    let input: Vec<i32> = golden
+        .req("input")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_i64().unwrap() as i32)
+        .collect();
+    let want = golden.req("output").unwrap().f32_arr().unwrap();
+
+    let mut engine = LocalEngine::new(m).unwrap();
+    let out = engine
+        .execute("bert_b1_s16", &[Tensor::i32(vec![1, 16], input)])
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape, vec![1, 128]);
+    let got = out[0].as_f32().unwrap();
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert!(
+            (g - w).abs() <= 1e-4 + 1e-4 * w.abs(),
+            "element {i}: got {g}, want {w}"
+        );
+    }
+}
+
+#[test]
+fn ocr_recognizer_matches_python_golden() {
+    let Some(m) = manifest() else { return };
+    let golden = Json::parse_file(&m.dir.join("golden/ocr_rec_w192.json")).unwrap();
+    let crop = golden.req("crop").unwrap().f32_arr().unwrap();
+    let want_ids = golden.req("rec_argmax").unwrap().usize_arr().unwrap();
+
+    let mut engine = LocalEngine::new(m).unwrap();
+    let out = engine
+        .execute("ocr_rec_w192", &[Tensor::f32(vec![1, 3, 32, 192], crop.clone())])
+        .unwrap();
+    let logp = out[0].as_f32().unwrap();
+    let n_classes = out[0].shape[1];
+    let got_ids: Vec<usize> = logp
+        .chunks(n_classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        })
+        .collect();
+    assert_eq!(got_ids, want_ids);
+
+    // classifier agrees too
+    let cls = engine
+        .execute("ocr_cls_w192", &[Tensor::f32(vec![1, 3, 32, 192], crop)])
+        .unwrap();
+    let logits = cls[0].as_f32().unwrap();
+    let want_cls = golden.req("cls_logits").unwrap().f32_arr().unwrap();
+    assert!((logits[0] - want_cls[0]).abs() < 1e-4);
+    assert!(logits[0] > logits[1], "golden crop is upright");
+}
+
+#[test]
+fn detector_runs_and_shapes() {
+    let Some(m) = manifest() else { return };
+    let mut engine = LocalEngine::new(m).unwrap();
+    let img = Tensor::zeros_f32(vec![1, 3, 192, 256]);
+    let out = engine.execute("ocr_det", &[img]).unwrap();
+    assert_eq!(out[0].shape, vec![1, 48, 64]);
+    // blank page -> all scores low
+    let max = out[0].as_f32().unwrap().iter().cloned().fold(0.0f32, f32::max);
+    assert!(max < 0.1, "blank page max score {max}");
+}
+
+#[test]
+fn input_validation_errors_are_friendly() {
+    let Some(m) = manifest() else { return };
+    let mut engine = LocalEngine::new(m).unwrap();
+    // wrong arity
+    let err = engine.execute("ocr_det", &[]).unwrap_err().to_string();
+    assert!(err.contains("expects"), "{err}");
+    // wrong shape
+    let err = engine
+        .execute("ocr_det", &[Tensor::zeros_f32(vec![1, 3, 64, 64])])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("expected"), "{err}");
+    // unknown model
+    assert!(engine.execute("nope", &[]).is_err());
+}
+
+#[test]
+fn executor_pool_parallel_submissions() {
+    let Some(m) = manifest() else { return };
+    let pool = ExecutorPool::new(m, 2).unwrap();
+    pool.warmup(&["bert_b1_s16"]).unwrap();
+
+    let mut rxs = Vec::new();
+    for i in 0..6i32 {
+        let ids: Vec<i32> = (0..16).map(|j| (i * 31 + j) % 8192).collect();
+        rxs.push(pool.submit("bert_b1_s16", vec![Tensor::i32(vec![1, 16], ids)]));
+    }
+    for rx in rxs {
+        let res = rx.recv().unwrap().unwrap();
+        assert_eq!(res.outputs[0].shape, vec![1, 128]);
+        assert!(res.outputs[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+    }
+    assert_eq!(pool.jobs_submitted(), 6);
+}
+
+#[test]
+fn pool_same_input_deterministic_across_workers() {
+    let Some(m) = manifest() else { return };
+    let pool = ExecutorPool::new(m, 2).unwrap();
+    let ids: Vec<i32> = (0..16).collect();
+    let a = pool.run("bert_b1_s16", vec![Tensor::i32(vec![1, 16], ids.clone())]).unwrap();
+    let b = pool.run("bert_b1_s16", vec![Tensor::i32(vec![1, 16], ids)]).unwrap();
+    assert_eq!(a.outputs[0], b.outputs[0]);
+}

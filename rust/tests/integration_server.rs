@@ -1,0 +1,149 @@
+//! Server round-trip: TCP JSON-lines protocol over the full stack.
+
+use std::sync::Arc;
+
+use dnc_serve::config::Config;
+use dnc_serve::coordinator::{Client, Server, ServerState};
+use dnc_serve::nlp::BertServer;
+use dnc_serve::engine::Session;
+use dnc_serve::ocr::{OcrMeta, OcrPipeline};
+use dnc_serve::runtime::{artifacts_dir, Manifest};
+use dnc_serve::util::json::{arr, num, obj, s, Json};
+
+fn start_server() -> Option<(dnc_serve::coordinator::StopHandle, std::thread::JoinHandle<()>, String)> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = Arc::new(Manifest::load(&dir).unwrap());
+    let session = Arc::new(Session::new(manifest, 16, 2).unwrap());
+    let bert = BertServer::new(Arc::clone(&session));
+    let ocr = OcrPipeline::new(session, OcrMeta::load(&dir).unwrap());
+    let mut config = Config::default();
+    config.port = 0; // pick a free port
+    config.max_wait_ms = 2;
+    let state = ServerState::new(bert, ocr, config);
+    let server = Server::bind(state).unwrap();
+    let addr = server.local_addr().to_string();
+    let (stop, join) = server.serve_background();
+    Some((stop, join, addr))
+}
+
+#[test]
+fn full_protocol_round_trip() {
+    let Some((stop, join, addr)) = start_server() else { return };
+    let mut client = Client::connect(&addr).unwrap();
+
+    // ping
+    let resp = client
+        .call(&obj(vec![("op", s("ping")), ("id", num(1.0))]))
+        .unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(resp.get("id").unwrap().as_i64(), Some(1));
+
+    // embed text
+    let resp = client
+        .call(&obj(vec![
+            ("op", s("embed")),
+            ("id", num(2.0)),
+            ("text", s("divide and conquer inference")),
+        ]))
+        .unwrap();
+    let emb = resp.get("embedding").expect("embedding").f32_arr().unwrap();
+    assert_eq!(emb.len(), 128);
+    assert!(emb.iter().all(|x| x.is_finite()));
+
+    // embed_tokens: same tokens -> same embedding (determinism through
+    // the whole router/batcher/prun path)
+    let tokens = arr((0..16).map(|i| num((i % 8000) as f64)));
+    let r1 = client
+        .call(&obj(vec![("op", s("embed_tokens")), ("tokens", tokens.clone())]))
+        .unwrap();
+    let r2 = client
+        .call(&obj(vec![("op", s("embed_tokens")), ("tokens", tokens)]))
+        .unwrap();
+    assert_eq!(
+        r1.get("embedding").unwrap().f32_arr().unwrap(),
+        r2.get("embedding").unwrap().f32_arr().unwrap()
+    );
+
+    // ocr round trip with exact ground-truth echo
+    let resp = client
+        .call(&obj(vec![
+            ("op", s("ocr")),
+            ("seed", num(7.0)),
+            ("boxes", num(3.0)),
+            ("variant", s("prun-def")),
+        ]))
+        .unwrap();
+    let texts = resp.get("texts").unwrap().as_arr().unwrap();
+    let truth = resp.get("ground_truth").unwrap().as_arr().unwrap();
+    assert_eq!(texts.len(), truth.len());
+    for (t, g) in texts.iter().zip(truth.iter()) {
+        assert_eq!(t.as_str(), g.as_str(), "OCR output matches ground truth");
+    }
+    assert!(resp.get("det_ms").unwrap().as_f64().unwrap() > 0.0);
+
+    // stats reflect the traffic
+    let resp = client.call(&obj(vec![("op", s("stats"))])).unwrap();
+    assert!(resp.get("counter.requests").unwrap().as_i64().unwrap() >= 5);
+    assert!(resp.get("latency.request").is_some());
+
+    // errors are structured
+    let resp = client.call(&obj(vec![("op", s("nope"))])).unwrap();
+    assert!(resp.get("error").unwrap().as_str().unwrap().contains("unknown op"));
+    let resp = client.call(&Json::parse("{\"op\":\"embed\"}").unwrap()).unwrap();
+    assert!(resp.get("error").is_some());
+
+    stop.stop();
+    join.join().unwrap();
+}
+
+#[test]
+fn concurrent_clients_get_batched() {
+    let Some((stop, join, addr)) = start_server() else { return };
+    let mut joins = Vec::new();
+    for t in 0..4i64 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            for i in 0..3i64 {
+                let tokens = arr((0..16).map(|j| num(((t * 37 + i * 11 + j) % 8000) as f64)));
+                let resp = client
+                    .call(&obj(vec![("op", s("embed_tokens")), ("tokens", tokens)]))
+                    .unwrap();
+                assert!(resp.get("embedding").is_some(), "{resp:?}");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    // check the batcher actually aggregated something
+    let mut client = Client::connect(&addr).unwrap();
+    let stats = client.call(&obj(vec![("op", s("stats"))])).unwrap();
+    let batches = stats.get("counter.batches").unwrap().as_i64().unwrap();
+    let reqs = stats.get("counter.batched_requests").unwrap().as_i64().unwrap();
+    assert_eq!(reqs, 12);
+    assert!(batches <= reqs, "batches={batches} reqs={reqs}");
+
+    stop.stop();
+    join.join().unwrap();
+}
+
+#[test]
+fn malformed_json_line_reported() {
+    let Some((stop, join, addr)) = start_server() else { return };
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writer.write_all(b"this is not json\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).unwrap();
+    assert!(resp.get("error").unwrap().as_str().unwrap().contains("bad json"));
+    stop.stop();
+    join.join().unwrap();
+}

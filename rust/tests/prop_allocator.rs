@@ -1,0 +1,147 @@
+//! Property tests for the paper's Listing-1 allocator (DESIGN.md §8).
+
+use dnc_serve::engine::allocator::{allocate, weights, AllocPolicy};
+use dnc_serve::util::prop::check;
+
+const CASES: u64 = 500;
+
+fn gen_sizes(g: &mut dnc_serve::util::prop::Gen) -> Vec<usize> {
+    let k = g.size(64);
+    g.vec(k, |g| g.usize_in(1, 10_000))
+}
+
+#[test]
+fn every_part_gets_at_least_one_thread() {
+    check(CASES, |g| {
+        let sizes = gen_sizes(g);
+        let cores = g.usize_in(1, 64);
+        for policy in [AllocPolicy::PrunDef, AllocPolicy::PrunOne, AllocPolicy::PrunEq] {
+            let alloc = allocate(&sizes, cores, policy);
+            assert_eq!(alloc.len(), sizes.len());
+            assert!(alloc.iter().all(|&c| c >= 1), "{policy:?} {alloc:?}");
+        }
+    });
+}
+
+#[test]
+fn prun_def_exactly_fills_cores_when_parts_fit() {
+    // Listing 1's remainder distribution: when k <= C and no part was
+    // clamped below its floor, the total allocation is exactly C.
+    check(CASES, |g| {
+        let cores = g.usize_in(1, 64);
+        let k = g.usize_in(1, cores);
+        let sizes: Vec<usize> = g.vec(k, |g| g.usize_in(1, 10_000));
+        let alloc = allocate(&sizes, cores, AllocPolicy::PrunDef);
+        let total: usize = alloc.iter().sum();
+        // clamping to >=1 can push the total above C, never below
+        assert!(total >= cores, "sizes={sizes:?} cores={cores} alloc={alloc:?}");
+        // without clamping pressure (every floor >= 1), total == C
+        let w = weights(&sizes);
+        if w.iter().all(|&wi| wi * cores as f64 >= 1.0) {
+            assert_eq!(total, cores, "sizes={sizes:?} alloc={alloc:?}");
+        }
+    });
+}
+
+#[test]
+fn more_parts_than_cores_means_one_thread_each() {
+    check(CASES, |g| {
+        let cores = g.usize_in(1, 32);
+        let k = cores + g.usize_in(1, 64);
+        let sizes: Vec<usize> = g.vec(k, |g| g.usize_in(1, 10_000));
+        let alloc = allocate(&sizes, cores, AllocPolicy::PrunDef);
+        assert!(alloc.iter().all(|&c| c == 1), "k={k} cores={cores}");
+    });
+}
+
+#[test]
+fn allocation_monotone_in_size() {
+    // A strictly larger part never receives fewer threads.
+    check(CASES, |g| {
+        let sizes = gen_sizes(g);
+        let cores = g.usize_in(1, 64);
+        let alloc = allocate(&sizes, cores, AllocPolicy::PrunDef);
+        for i in 0..sizes.len() {
+            for j in 0..sizes.len() {
+                if sizes[i] > sizes[j] {
+                    assert!(
+                        alloc[i] >= alloc[j],
+                        "sizes[{i}]={} > sizes[{j}]={} but alloc {} < {} ({sizes:?} -> {alloc:?})",
+                        sizes[i], sizes[j], alloc[i], alloc[j]
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn equal_sizes_get_near_equal_threads() {
+    check(CASES, |g| {
+        let cores = g.usize_in(1, 64);
+        let k = g.usize_in(1, 64);
+        let size = g.usize_in(1, 10_000);
+        let alloc = allocate(&vec![size; k], cores, AllocPolicy::PrunDef);
+        let min = *alloc.iter().min().unwrap();
+        let max = *alloc.iter().max().unwrap();
+        assert!(max - min <= 1, "equal parts differ by >1: {alloc:?}");
+    });
+}
+
+#[test]
+fn permutation_equivariant() {
+    // Reordering the inputs reorders the allocation the same way.
+    check(CASES, |g| {
+        let sizes = gen_sizes(g);
+        let cores = g.usize_in(1, 64);
+        let alloc = allocate(&sizes, cores, AllocPolicy::PrunDef);
+        let mut idx: Vec<usize> = (0..sizes.len()).collect();
+        // deterministic rotation as the permutation
+        let rot = g.usize_in(0, sizes.len() - 1);
+        idx.rotate_left(rot);
+        let permuted: Vec<usize> = idx.iter().map(|&i| sizes[i]).collect();
+        let alloc_p = allocate(&permuted, cores, AllocPolicy::PrunDef);
+        // sizes can repeat: compare as multisets keyed by size
+        let mut a: Vec<(usize, usize)> = sizes.iter().cloned().zip(alloc.iter().cloned()).collect();
+        let mut b: Vec<(usize, usize)> =
+            permuted.iter().cloned().zip(alloc_p.iter().cloned()).collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    });
+}
+
+#[test]
+fn allocation_bounded_by_cores() {
+    check(CASES, |g| {
+        let sizes = gen_sizes(g);
+        let cores = g.usize_in(1, 64);
+        let alloc = allocate(&sizes, cores, AllocPolicy::PrunDef);
+        assert!(alloc.iter().all(|&c| c <= cores), "{alloc:?}");
+    });
+}
+
+#[test]
+fn weights_normalized_and_proportional() {
+    check(CASES, |g| {
+        let sizes = gen_sizes(g);
+        let w = weights(&sizes);
+        let sum: f64 = w.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        let total: usize = sizes.iter().sum();
+        for (wi, &si) in w.iter().zip(sizes.iter()) {
+            assert!((wi - si as f64 / total as f64).abs() < 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prun_eq_uniform() {
+    check(CASES, |g| {
+        let sizes = gen_sizes(g);
+        let cores = g.usize_in(1, 64);
+        let alloc = allocate(&sizes, cores, AllocPolicy::PrunEq);
+        let expect = std::cmp::max(1, cores / sizes.len());
+        assert!(alloc.iter().all(|&c| c == expect));
+    });
+}

@@ -1,0 +1,100 @@
+//! Property tests over the *real* prun engine (PJRT-backed): output
+//! ordering, allocation consistency, lease discipline. Requires built
+//! artifacts (skips otherwise). Thread counts are virtual here (1-core
+//! box) but the policy/scheduling code is the production path.
+
+use std::sync::Arc;
+
+use dnc_serve::engine::{AllocPolicy, JobPart, PrunOptions, Session};
+use dnc_serve::runtime::{artifacts_dir, Manifest, Tensor};
+use dnc_serve::util::prop::check;
+
+fn session(cores: usize) -> Option<Session> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let m = Arc::new(Manifest::load(&dir).unwrap());
+    Some(Session::new(m, cores, 2).unwrap())
+}
+
+fn bert_part(seq_bucket: usize, seed: i32) -> JobPart {
+    let ids: Vec<i32> = (0..seq_bucket as i32).map(|j| (seed * 131 + j * 7) % 8192).collect();
+    JobPart::new(
+        format!("bert_b1_s{seq_bucket}"),
+        vec![Tensor::i32(vec![1, seq_bucket], ids)],
+    )
+}
+
+#[test]
+fn prun_outputs_in_input_order_and_match_run() {
+    let Some(sess) = session(16) else { return };
+    sess.warmup(&["bert_b1_s16", "bert_b1_s32"]).unwrap();
+    // run() each part alone, then prun() them together: same outputs,
+    // same order — independence is what makes divide-and-conquer sound.
+    check(8, |g| {
+        let k = g.usize_in(2, 5);
+        let parts: Vec<JobPart> = (0..k)
+            .map(|i| bert_part(*g.choice(&[16usize, 32]), i as i32))
+            .collect();
+        let solo: Vec<Vec<Tensor>> = parts
+            .iter()
+            .map(|p| sess.run(&p.model, p.inputs.clone()).unwrap())
+            .collect();
+        let policy = *g.choice(&[AllocPolicy::PrunDef, AllocPolicy::PrunOne, AllocPolicy::PrunEq]);
+        let outcome = sess.prun(parts, PrunOptions { policy, ..Default::default() }).unwrap();
+        assert_eq!(outcome.outputs.len(), k);
+        for (i, (got, want)) in outcome.outputs.iter().zip(solo.iter()).enumerate() {
+            assert_eq!(got, want, "part {i} differs from solo run");
+        }
+    });
+}
+
+#[test]
+fn prun_allocation_matches_allocator() {
+    let Some(sess) = session(16) else { return };
+    sess.warmup(&["bert_b1_s16", "bert_b1_s64"]).unwrap();
+    check(6, |g| {
+        let k = g.usize_in(1, 4);
+        let parts: Vec<JobPart> = (0..k)
+            .map(|i| bert_part(*g.choice(&[16usize, 64]), i as i32))
+            .collect();
+        let sizes: Vec<usize> = parts.iter().map(|p| p.size()).collect();
+        let expect = dnc_serve::engine::allocate(&sizes, 16, AllocPolicy::PrunDef);
+        let outcome = sess.prun(parts, PrunOptions::default()).unwrap();
+        assert_eq!(outcome.allocation, expect);
+        // every report carries its allocation
+        for (r, &e) in outcome.reports.iter().zip(expect.iter()) {
+            assert_eq!(r.threads, e);
+        }
+    });
+}
+
+#[test]
+fn prun_empty_is_noop() {
+    let Some(sess) = session(16) else { return };
+    let outcome = sess.prun(Vec::new(), PrunOptions::default()).unwrap();
+    assert!(outcome.outputs.is_empty());
+    assert!(outcome.reports.is_empty());
+}
+
+#[test]
+fn prun_single_part_equals_run() {
+    // paper: prun on one chunk adds negligible overhead and identical
+    // results (Fig. 8 X=0).
+    let Some(sess) = session(16) else { return };
+    sess.warmup(&["bert_b1_s16"]).unwrap();
+    let part = bert_part(16, 7);
+    let solo = sess.run(&part.model, part.inputs.clone()).unwrap();
+    let outcome = sess.prun(vec![part], PrunOptions::default()).unwrap();
+    assert_eq!(outcome.outputs[0], solo);
+    assert_eq!(outcome.allocation, vec![16]);
+}
+
+#[test]
+fn prun_bad_model_reports_error() {
+    let Some(sess) = session(16) else { return };
+    let parts = vec![JobPart::new("no_such_model", vec![Tensor::zeros_f32(vec![1, 4])])];
+    assert!(sess.prun(parts, PrunOptions::default()).is_err());
+}

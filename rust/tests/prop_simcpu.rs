@@ -1,0 +1,142 @@
+//! Property tests for the discrete-event simulator (DESIGN.md §8).
+
+use dnc_serve::engine::allocator::{allocate, AllocPolicy};
+use dnc_serve::simcpu::{simulate, simulate_sequential, ScalProfile, SimPart};
+use dnc_serve::util::prop::{check, Gen};
+
+const CASES: u64 = 300;
+
+fn gen_profile(g: &mut Gen) -> ScalProfile {
+    ScalProfile::new(g.f64_in(0.0, 0.95), g.f64_in(0.0, 5.0))
+}
+
+fn gen_parts(g: &mut Gen) -> Vec<SimPart> {
+    let k = g.size(32);
+    let prof = gen_profile(g);
+    g.vec(k, |g| SimPart::new(g.f64_in(0.1, 500.0), prof))
+}
+
+#[test]
+fn cores_never_over_leased() {
+    // Replay the admission schedule and verify occupancy <= C always.
+    check(CASES, |g| {
+        let parts = gen_parts(g);
+        let cores = g.usize_in(1, 32);
+        let alloc: Vec<usize> = g.vec(parts.len(), |g| g.usize_in(1, 48));
+        let r = simulate(&parts, &alloc, cores);
+        // occupancy at every start event
+        for i in 0..parts.len() {
+            let t = r.start_ms[i];
+            let occupied: usize = (0..parts.len())
+                .filter(|&j| r.start_ms[j] <= t && r.end_ms[j] > t)
+                .map(|j| r.threads[j])
+                .sum();
+            assert!(occupied <= cores, "t={t} occupied={occupied} cores={cores}");
+        }
+    });
+}
+
+#[test]
+fn makespan_is_max_end_and_bounds_hold() {
+    check(CASES, |g| {
+        let parts = gen_parts(g);
+        let cores = g.usize_in(1, 32);
+        let alloc = allocate(
+            &parts.iter().map(|p| p.t1_ms as usize + 1).collect::<Vec<_>>(),
+            cores,
+            AllocPolicy::PrunDef,
+        );
+        let r = simulate(&parts, &alloc, cores);
+        let max_end = r.end_ms.iter().cloned().fold(0.0, f64::max);
+        assert!((r.makespan_ms - max_end).abs() < 1e-9);
+        // lower bound: the longest single part at its own thread count
+        let lb = parts
+            .iter()
+            .zip(r.threads.iter())
+            .map(|(p, &c)| p.profile.time_ms(p.t1_ms, c))
+            .fold(0.0, f64::max);
+        assert!(r.makespan_ms >= lb - 1e-9);
+        // upper bound: fully sequential execution
+        let ub: f64 = parts
+            .iter()
+            .zip(r.threads.iter())
+            .map(|(p, &c)| p.profile.time_ms(p.t1_ms, c))
+            .sum();
+        assert!(r.makespan_ms <= ub + 1e-9);
+    });
+}
+
+#[test]
+fn starts_monotone_in_input_order() {
+    // Strict FIFO admission: start times are non-decreasing in input
+    // order (matches engine::lease's ticket queue).
+    check(CASES, |g| {
+        let parts = gen_parts(g);
+        let cores = g.usize_in(1, 32);
+        let alloc: Vec<usize> = g.vec(parts.len(), |g| g.usize_in(1, cores));
+        let r = simulate(&parts, &alloc, cores);
+        for w in r.start_ms.windows(2) {
+            assert!(w[0] <= w[1] + 1e-9, "FIFO violated: {:?}", r.start_ms);
+        }
+    });
+}
+
+#[test]
+fn virtual_time_non_negative_and_finite() {
+    check(CASES, |g| {
+        let parts = gen_parts(g);
+        let cores = g.usize_in(1, 32);
+        let alloc: Vec<usize> = g.vec(parts.len(), |g| g.usize_in(1, 64));
+        let r = simulate(&parts, &alloc, cores);
+        for i in 0..parts.len() {
+            assert!(r.start_ms[i] >= 0.0);
+            assert!(r.end_ms[i] >= r.start_ms[i]);
+            assert!(r.end_ms[i].is_finite());
+        }
+    });
+}
+
+#[test]
+fn sequential_equals_sum_of_each() {
+    check(CASES, |g| {
+        let parts = gen_parts(g);
+        let cores = g.usize_in(1, 32);
+        let r = simulate_sequential(&parts, cores);
+        let sum: f64 = parts.iter().map(|p| p.profile.time_ms(p.t1_ms, cores)).sum();
+        assert!((r.makespan_ms - sum).abs() < 1e-6, "{} vs {sum}", r.makespan_ms);
+    });
+}
+
+#[test]
+fn adding_cores_never_hurts_fully_parallel_parts() {
+    // With a zero-overhead profile, a bigger machine can't be slower for
+    // the same per-part thread allocation.
+    check(CASES, |g| {
+        let prof = ScalProfile::new(0.0, 0.0);
+        let k = g.size(16);
+        let parts: Vec<SimPart> = g.vec(k, |g| SimPart::new(g.f64_in(1.0, 100.0), prof));
+        let alloc: Vec<usize> = g.vec(k, |g| g.usize_in(1, 8));
+        let small = g.usize_in(1, 16);
+        let big = small + g.usize_in(1, 16);
+        let r_small = simulate(&parts, &alloc, small);
+        let r_big = simulate(&parts, &alloc, big);
+        assert!(
+            r_big.makespan_ms <= r_small.makespan_ms + 1e-9,
+            "big {} > small {}",
+            r_big.makespan_ms,
+            r_small.makespan_ms
+        );
+    });
+}
+
+#[test]
+fn single_part_time_matches_profile_exactly() {
+    check(CASES, |g| {
+        let prof = gen_profile(g);
+        let t1 = g.f64_in(0.1, 1000.0);
+        let cores = g.usize_in(1, 32);
+        let c = g.usize_in(1, cores);
+        let r = simulate(&[SimPart::new(t1, prof)], &[c], cores);
+        assert!((r.makespan_ms - prof.time_ms(t1, c)).abs() < 1e-9);
+    });
+}
