@@ -1,13 +1,14 @@
 //! E10: microbenchmarks of L3 request-path components outside the model
 //! execute itself: tokenizer, JSON codec, image generation, detection
-//! post-processing, histogram recording, core leasing, and (if artifacts
-//! exist) a real single-inference PJRT hot-path measurement.
+//! post-processing, histogram recording, scheduler dispatch, and (if
+//! artifacts exist) a real single-inference PJRT hot-path measurement.
 
 use std::hint::black_box;
 use std::sync::Arc;
 use std::time::Instant;
 
-use dnc_serve::engine::CoreLease;
+use dnc_serve::engine::{PartTask, SchedConfig, Scheduler, TaskRunner};
+use dnc_serve::runtime::ReplyFn;
 use dnc_serve::metrics::Histogram;
 use dnc_serve::nlp::Tokenizer;
 use dnc_serve::ocr::{detect, generate, GenOptions, OcrMeta};
@@ -58,9 +59,31 @@ fn main() {
         hist.record_us(black_box(1234));
     });
 
-    let lease = CoreLease::new(16);
-    bench("core lease acquire+release (uncontended)", 1_000_000, || {
-        black_box(lease.acquire(black_box(4)));
+    // Scheduler ledger round trip with a no-op runner: submit -> admit
+    // -> complete -> handle wake-up. This is the full L3 dispatch cost
+    // the scheduler adds per job part (replaces the old core-lease
+    // acquire/release number; the ledger now lives in the dispatcher).
+    struct InlineRunner;
+    impl TaskRunner for InlineRunner {
+        fn workers(&self) -> usize {
+            1
+        }
+        fn run_on(&self, worker: usize, _model: &str, _inputs: Vec<dnc_serve::runtime::Tensor>, reply: ReplyFn) {
+            reply(Ok(dnc_serve::runtime::ExecResult {
+                outputs: Vec::new(),
+                exec_time: std::time::Duration::ZERO,
+                worker,
+            }));
+        }
+    }
+    let sched = Scheduler::start(SchedConfig::default(), Arc::new(InlineRunner));
+    bench("sched submit->complete round trip", 50_000, || {
+        black_box(
+            sched
+                .submit(PartTask::new("noop", Vec::new(), black_box(4)))
+                .wait()
+                .unwrap(),
+        );
     });
 
     let dir = artifacts_dir();
@@ -109,8 +132,8 @@ fn main() {
     });
 
     // prun dispatch overhead: wall time minus pure execute time, per part.
-    // This is the L3 cost of divide-and-conquer itself (thread spawn,
-    // lease, channel round-trip, input handoff).
+    // This is the L3 cost of divide-and-conquer itself (scheduler submit,
+    // ledger admission, channel round-trip, input handoff).
     {
         use dnc_serve::engine::{JobPart, PrunOptions, Session};
         let manifest = Arc::new(Manifest::load(&dir).unwrap());

@@ -26,6 +26,10 @@ pub struct Config {
     /// dynamic batcher limits
     pub max_batch: usize,
     pub max_wait_ms: u64,
+    /// scheduler: max time the queue head may be bypassed by backfill
+    pub aging_ms: u64,
+    /// router: max time a connection thread waits for a batched reply
+    pub request_timeout_ms: u64,
     pub artifacts: PathBuf,
 }
 
@@ -39,6 +43,8 @@ impl Default for Config {
             port: 7070,
             max_batch: 8,
             max_wait_ms: 5,
+            aging_ms: 50,
+            request_timeout_ms: 30_000,
             artifacts: crate::runtime::artifacts_dir(),
         }
     }
@@ -75,6 +81,12 @@ impl Config {
         if let Some(x) = v.get("max_wait_ms") {
             self.max_wait_ms = x.as_usize().context("max_wait_ms")? as u64;
         }
+        if let Some(x) = v.get("aging_ms") {
+            self.aging_ms = x.as_usize().context("aging_ms")? as u64;
+        }
+        if let Some(x) = v.get("request_timeout_ms") {
+            self.request_timeout_ms = x.as_usize().context("request_timeout_ms")? as u64;
+        }
         if let Some(x) = v.get("artifacts") {
             self.artifacts = PathBuf::from(x.as_str().context("artifacts")?);
         }
@@ -99,6 +111,8 @@ impl Config {
         self.port = args.usize_or("port", self.port as usize) as u16;
         self.max_batch = args.usize_or("max-batch", self.max_batch);
         self.max_wait_ms = args.u64_or("max-wait-ms", self.max_wait_ms);
+        self.aging_ms = args.u64_or("aging-ms", self.aging_ms);
+        self.request_timeout_ms = args.u64_or("request-timeout-ms", self.request_timeout_ms);
         if let Some(a) = args.get("artifacts") {
             self.artifacts = PathBuf::from(a);
         }
@@ -107,6 +121,15 @@ impl Config {
 
     pub fn addr(&self) -> String {
         format!("{}:{}", self.host, self.port)
+    }
+
+    /// Scheduler tuning derived from this config.
+    pub fn sched(&self) -> crate::engine::SchedConfig {
+        crate::engine::SchedConfig {
+            cores: self.cores,
+            aging: std::time::Duration::from_millis(self.aging_ms),
+            backfill: true,
+        }
     }
 }
 
@@ -124,6 +147,31 @@ mod tests {
         assert_eq!(c.cores, 16);
         assert!(c.workers >= 1);
         assert_eq!(c.policy, AllocPolicy::PrunDef);
+        assert_eq!(c.aging_ms, 50);
+        assert_eq!(c.request_timeout_ms, 30_000);
+        let s = c.sched();
+        assert_eq!(s.cores, 16);
+        assert_eq!(s.aging, std::time::Duration::from_millis(50));
+        assert!(s.backfill);
+    }
+
+    #[test]
+    fn sched_knobs_from_file_and_cli() {
+        let dir = std::env::temp_dir().join(format!("dnc_cfg3_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"aging_ms": 20, "request_timeout_ms": 1000}"#).unwrap();
+        let c = Config::from_file(&p).unwrap();
+        assert_eq!(c.aging_ms, 20);
+        assert_eq!(c.request_timeout_ms, 1000);
+        let mut c = Config::default();
+        c.apply_args(&args(&format!(
+            "serve --config {} --aging-ms 75 --request-timeout-ms 500",
+            p.display()
+        )))
+        .unwrap();
+        assert_eq!(c.aging_ms, 75);
+        assert_eq!(c.request_timeout_ms, 500);
     }
 
     #[test]

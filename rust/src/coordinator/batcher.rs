@@ -2,13 +2,28 @@
 //!
 //! Accumulates requests until `max_batch` are waiting or the oldest has
 //! waited `max_wait` (the tunable the paper's §2.5 attributes to serving
-//! systems like TensorFlow Serving / TorchServe), then hands the batch to
-//! the handler on a dedicated flusher thread. Callers block on a reply
-//! channel. The handler returns one result per request, in order.
+//! systems like TensorFlow Serving / TorchServe), then hands the batch
+//! off. Callers block on a reply channel (with or without timeout). The
+//! handler returns one result per request, in order.
+//!
+//! Two execution modes:
+//! - [`Batcher::start`]: the handler runs synchronously on the flusher
+//!   thread (simple; the flusher is busy while a batch executes).
+//! - [`Batcher::start_pipelined`]: the submitter only *enqueues* the
+//!   batch (e.g. into `engine::sched` via `Session::prun_submit`) and
+//!   returns a resolver closure; a dedicated completion thread waits on
+//!   the resolver and distributes replies. The flusher is immediately
+//!   free to accumulate the next batch, so batch N+1 forms and submits
+//!   while batch N executes — and a stalled batch never blocks
+//!   accumulation. Thread count stays fixed (flusher + completer).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Deferred completion of one submitted batch: blocks until the batch
+/// finishes and yields one result per item, in order.
+pub type Resolver<R> = Box<dyn FnOnce() -> Vec<R> + Send>;
 
 struct Pending<T, R> {
     item: T,
@@ -24,28 +39,69 @@ struct Queue<T, R> {
 pub struct Batcher<T, R> {
     queue: Arc<(Mutex<Queue<T, R>>, Condvar)>,
     flusher: Option<std::thread::JoinHandle<()>>,
+    completer: Option<std::thread::JoinHandle<()>>,
     pub max_batch: usize,
     pub max_wait: Duration,
 }
 
 impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
-    /// Start a batcher with a handler run on the flusher thread.
+    /// Start a batcher whose handler runs on the flusher thread.
     pub fn start(
         max_batch: usize,
         max_wait: Duration,
         handler: impl Fn(Vec<T>) -> Vec<R> + Send + 'static,
     ) -> Batcher<T, R> {
-        assert!(max_batch >= 1);
-        let queue = Arc::new((
-            Mutex::new(Queue { items: Vec::new(), shutdown: false }),
-            Condvar::new(),
-        ));
+        let queue = new_queue(max_batch);
         let q2 = Arc::clone(&queue);
         let flusher = std::thread::Builder::new()
             .name("dnc-batcher".into())
-            .spawn(move || flusher_loop(q2, max_batch, max_wait, handler))
+            .spawn(move || {
+                flusher_loop(q2, max_batch, max_wait, move |items, replies| {
+                    deliver(handler(items), replies);
+                })
+            })
             .expect("spawn batcher");
-        Batcher { queue, flusher: Some(flusher), max_batch, max_wait }
+        Batcher { queue, flusher: Some(flusher), completer: None, max_batch, max_wait }
+    }
+
+    /// Start a pipelined batcher: `submitter` enqueues the batch and
+    /// returns a [`Resolver`]; a dedicated completion thread resolves
+    /// batches in submission order and distributes replies.
+    pub fn start_pipelined(
+        max_batch: usize,
+        max_wait: Duration,
+        submitter: impl Fn(Vec<T>) -> Resolver<R> + Send + 'static,
+    ) -> Batcher<T, R> {
+        let queue = new_queue(max_batch);
+        let q2 = Arc::clone(&queue);
+        let (ctx, crx) = channel::<(Resolver<R>, Vec<Sender<R>>)>();
+        let flusher = std::thread::Builder::new()
+            .name("dnc-batcher".into())
+            .spawn(move || {
+                // `ctx` lives inside the flusher closure: when the
+                // flusher exits (shutdown), the channel disconnects and
+                // the completer drains whatever was submitted, then exits.
+                flusher_loop(q2, max_batch, max_wait, move |items, replies| {
+                    let resolver = submitter(items);
+                    let _ = ctx.send((resolver, replies));
+                })
+            })
+            .expect("spawn batcher");
+        let completer = std::thread::Builder::new()
+            .name("dnc-batcher-done".into())
+            .spawn(move || {
+                while let Ok((resolver, replies)) = crx.recv() {
+                    deliver(resolver(), replies);
+                }
+            })
+            .expect("spawn batcher completer");
+        Batcher {
+            queue,
+            flusher: Some(flusher),
+            completer: Some(completer),
+            max_batch,
+            max_wait,
+        }
     }
 
     /// Enqueue a request; returns the reply channel.
@@ -74,6 +130,23 @@ impl<T, R> Drop for Batcher<T, R> {
         if let Some(h) = self.flusher.take() {
             let _ = h.join();
         }
+        // The flusher's exit dropped the completion sender; the completer
+        // drains submitted batches and stops.
+        if let Some(h) = self.completer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn new_queue<T, R>(max_batch: usize) -> Arc<(Mutex<Queue<T, R>>, Condvar)> {
+    assert!(max_batch >= 1);
+    Arc::new((Mutex::new(Queue { items: Vec::new(), shutdown: false }), Condvar::new()))
+}
+
+fn deliver<R>(results: Vec<R>, replies: Vec<Sender<R>>) {
+    assert_eq!(results.len(), replies.len(), "handler must return one result per item");
+    for (r, tx) in results.into_iter().zip(replies) {
+        let _ = tx.send(r); // caller may have given up
     }
 }
 
@@ -81,7 +154,7 @@ fn flusher_loop<T, R>(
     queue: Arc<(Mutex<Queue<T, R>>, Condvar)>,
     max_batch: usize,
     max_wait: Duration,
-    handler: impl Fn(Vec<T>) -> Vec<R>,
+    mut sink: impl FnMut(Vec<T>, Vec<Sender<R>>),
 ) {
     let (lock, cv) = &*queue;
     loop {
@@ -113,11 +186,7 @@ fn flusher_loop<T, R>(
         }
         let (items, replies): (Vec<T>, Vec<Sender<R>>) =
             batch.into_iter().map(|p| (p.item, p.reply)).unzip();
-        let results = handler(items);
-        assert_eq!(results.len(), replies.len(), "handler must return one result per item");
-        for (r, tx) in results.into_iter().zip(replies) {
-            let _ = tx.send(r); // caller may have given up
-        }
+        sink(items, replies);
     }
 }
 
@@ -188,5 +257,65 @@ mod tests {
         for j in joins {
             j.join().unwrap();
         }
+    }
+
+    #[test]
+    fn pipelined_resolves_in_order() {
+        let b: Batcher<u32, u32> =
+            Batcher::start_pipelined(2, Duration::from_millis(5), |items| {
+                Box::new(move || items.iter().map(|x| x + 100).collect())
+            });
+        let rxs: Vec<_> = (0..4).map(|i| b.submit(i)).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap(), i as u32 + 100);
+        }
+    }
+
+    #[test]
+    fn pipelined_overlaps_batches() {
+        // The first batch blocks in its resolver until the second batch
+        // has been *submitted* — only possible if accumulation continues
+        // while a batch executes.
+        let submitted = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let s2 = Arc::clone(&submitted);
+        let b: Batcher<u32, u32> =
+            Batcher::start_pipelined(1, Duration::from_millis(1), move |items| {
+                let (lock, cv) = &*s2;
+                let mut n = lock.lock().unwrap();
+                *n += 1;
+                cv.notify_all();
+                let s3 = Arc::clone(&s2);
+                Box::new(move || {
+                    let (lock, cv) = &*s3;
+                    let mut n = lock.lock().unwrap();
+                    // wait until 2 batches have been submitted
+                    while *n < 2 {
+                        let (nn, timeout) =
+                            cv.wait_timeout(n, Duration::from_secs(2)).unwrap();
+                        n = nn;
+                        if timeout.timed_out() {
+                            break;
+                        }
+                    }
+                    assert!(*n >= 2, "second batch never submitted while first ran");
+                    items
+                })
+            });
+        let r1 = b.submit(1);
+        let r2 = b.submit(2);
+        assert_eq!(r1.recv().unwrap(), 1);
+        assert_eq!(r2.recv().unwrap(), 2);
+    }
+
+    #[test]
+    fn pipelined_drop_flushes_pending() {
+        let rx = {
+            let b: Batcher<u32, u32> =
+                Batcher::start_pipelined(100, Duration::from_secs(10), |items| {
+                    Box::new(move || items)
+                });
+            b.submit(9)
+        };
+        assert_eq!(rx.recv().unwrap(), 9);
     }
 }

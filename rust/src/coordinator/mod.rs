@@ -5,6 +5,6 @@ pub mod batcher;
 pub mod router;
 pub mod server;
 
-pub use batcher::Batcher;
+pub use batcher::{Batcher, Resolver};
 pub use router::{route, ServerState};
 pub use server::{Client, Server, StopHandle};

@@ -8,18 +8,25 @@
 //! | `embed`        | `text`                                | `embedding`     |
 //! | `embed_tokens` | `tokens` (array of ids)               | `embedding`     |
 //! | `ocr`          | `seed`, `boxes`, opt `variant`        | `texts`, timing |
-//! | `stats`        | –                                     | metrics snapshot|
+//! | `stats`        | –                                     | metrics snapshot + `sched.*` |
 //!
 //! Every request may carry an `id`, echoed back. Errors come back as
 //! `{"id":..,"error":"..."}`.
+//!
+//! Execution flows through `engine::sched`: embed batches are submitted
+//! via the pipelined batcher (`Session::prun_submit` under the hood), so
+//! a stalled model execution never pins the batcher's accumulation, and
+//! connection threads wait with a bounded timeout instead of a bare
+//! blocking `recv()`.
 
+use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::Config;
 use crate::coordinator::batcher::Batcher;
 use crate::metrics::Metrics;
-use crate::nlp::{BertServer, Strategy};
+use crate::nlp::BertServer;
 use crate::ocr::{generate, GenOptions, OcrPipeline};
 use crate::simcpu::ocr::OcrVariant;
 use crate::util::json::{arr, num, obj, s, Json};
@@ -40,21 +47,34 @@ impl ServerState {
         let session = Arc::clone(bert.session());
         let policy = config.policy;
         let m2 = Arc::clone(&metrics);
-        let embed_batcher = Batcher::start(
+        // The submitter runs on the batcher's flusher thread and only
+        // *enqueues* the batch into the scheduler; the returned resolver
+        // is waited on by the batcher's completion thread. Batch N+1
+        // accumulates and submits while batch N executes.
+        let batch_server = BertServer::new(session);
+        let embed_batcher: Batcher<Vec<i32>, Result<Vec<f32>, String>> = Batcher::start_pipelined(
             config.max_batch,
-            std::time::Duration::from_millis(config.max_wait_ms),
+            Duration::from_millis(config.max_wait_ms),
             move |requests: Vec<Vec<i32>>| {
                 let t0 = Instant::now();
-                let server = BertServer::new(Arc::clone(&session));
                 let n = requests.len();
                 m2.add("batches", 1);
                 m2.add("batched_requests", n as u64);
-                match server.serve(&requests, Strategy::Prun(policy)) {
-                    Ok(res) => {
-                        m2.record("bert_batch", t0.elapsed());
-                        res.outputs.into_iter().map(Ok).collect()
+                match batch_server.serve_submit(&requests, policy) {
+                    Ok(sub) => {
+                        let m3 = Arc::clone(&m2);
+                        Box::new(move || match sub.wait() {
+                            Ok(res) => {
+                                m3.record("bert_batch", t0.elapsed());
+                                res.outputs.into_iter().map(Ok).collect()
+                            }
+                            Err(e) => (0..n).map(|_| Err(format!("{e:#}"))).collect(),
+                        })
                     }
-                    Err(e) => (0..n).map(|_| Err(format!("{e:#}"))).collect(),
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        Box::new(move || (0..n).map(|_| Err(msg.clone())).collect())
+                    }
                 }
             },
         );
@@ -71,7 +91,7 @@ pub fn route(state: &ServerState, req: &Json) -> Json {
         Some("embed") => handle_embed(state, req),
         Some("embed_tokens") => handle_embed_tokens(state, req),
         Some("ocr") => handle_ocr(state, req),
-        Some("stats") => state.metrics.snapshot_json(),
+        Some("stats") => stats_json(state),
         Some(other) => err(format!("unknown op '{other}'")),
         None => err("missing 'op'".to_string()),
     };
@@ -81,6 +101,35 @@ pub fn route(state: &ServerState, req: &Json) -> Json {
         pairs.insert(0, ("id".to_string(), id));
     }
     resp
+}
+
+/// Metrics snapshot plus live scheduler observability (`sched.*`):
+/// queue depth, core occupancy, backfill and deadline-rejection counts.
+fn stats_json(state: &ServerState) -> Json {
+    // gauge: embed requests accumulated but not yet flushed to the
+    // scheduler (the batcher's own queue, upstream of sched.queue_depth)
+    state.metrics.set("embed_pending", state.embed_batcher.pending() as u64);
+    let mut snap = state.metrics.snapshot_json();
+    let st = state.bert.session().scheduler().stats();
+    if let Json::Obj(pairs) = &mut snap {
+        let fields: [(&str, f64); 11] = [
+            ("sched.capacity", st.capacity as f64),
+            ("sched.cores_busy", st.cores_busy as f64),
+            ("sched.cores_idle", st.cores_idle as f64),
+            ("sched.queue_depth", st.queue_depth as f64),
+            ("sched.peak_queue_depth", st.peak_queue_depth as f64),
+            ("sched.inflight", st.inflight as f64),
+            ("sched.submitted", st.submitted as f64),
+            ("sched.completed", st.completed as f64),
+            ("sched.failed", st.failed as f64),
+            ("sched.backfills", st.backfills as f64),
+            ("sched.deadline_rejected", st.deadline_rejected as f64),
+        ];
+        for (k, v) in fields {
+            pairs.push((k.to_string(), num(v)));
+        }
+    }
+    snap
 }
 
 fn err(msg: String) -> Json {
@@ -116,10 +165,17 @@ fn handle_embed_tokens(state: &ServerState, req: &Json) -> Json {
 }
 
 fn embed_ids(state: &ServerState, ids: Vec<i32>) -> Json {
-    match state.embed_batcher.submit(ids).recv() {
+    // Bounded wait: a stalled batch produces a structured timeout error
+    // instead of pinning this connection thread forever.
+    let timeout = Duration::from_millis(state.config.request_timeout_ms);
+    match state.embed_batcher.submit(ids).recv_timeout(timeout) {
         Ok(Ok(embedding)) => obj(vec![("embedding", embedding_json(&embedding))]),
         Ok(Err(e)) => err(e),
-        Err(_) => err("server shutting down".into()),
+        Err(RecvTimeoutError::Timeout) => {
+            state.metrics.add("request_timeouts", 1);
+            err("request timed out".into())
+        }
+        Err(RecvTimeoutError::Disconnected) => err("server shutting down".into()),
     }
 }
 

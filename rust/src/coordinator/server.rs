@@ -5,17 +5,30 @@
 //! concurrency comes from multiple connections — batching across them
 //! happens in the shared `embed` batcher). The whole request path is
 //! Rust + PJRT; Python ended at `make artifacts`.
+//!
+//! Shutdown is graceful: connection handlers poll the stop flag through
+//! a short socket read timeout, `serve` joins every handler it spawned,
+//! and finally drains the scheduler so in-flight tasks complete before
+//! `serve` returns. `StopHandle::stop()` therefore quiesces the whole
+//! stack, leaking no threads.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
 use super::router::{route, ServerState};
+
+/// How often an idle connection handler checks the stop flag.
+const STOP_POLL: Duration = Duration::from_millis(200);
+
+/// How long `serve` waits for in-flight scheduler tasks on shutdown.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
 
 pub struct Server {
     state: Arc<ServerState>,
@@ -40,28 +53,50 @@ impl Server {
         StopHandle { stop: Arc::clone(&self.stop), addr: self.local_addr() }
     }
 
-    /// Serve until the stop handle fires. Blocks.
+    /// Serve until the stop handle fires, then quiesce: join every
+    /// connection handler and drain in-flight scheduler tasks. Blocks.
     pub fn serve(self) -> Result<()> {
         crate::info!("serving on {}", self.local_addr());
+        let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
         for conn in self.listener.incoming() {
             if self.stop.load(Ordering::SeqCst) {
                 break;
             }
+            // Reap finished handlers so long-lived servers don't
+            // accumulate joined-but-unjoined threads.
+            handlers.retain(|h| !h.is_finished());
             match conn {
                 Ok(stream) => {
                     let state = Arc::clone(&self.state);
-                    std::thread::Builder::new()
+                    let stop = Arc::clone(&self.stop);
+                    let spawned = std::thread::Builder::new()
                         .name("dnc-conn".into())
                         .spawn(move || {
-                            if let Err(e) = handle_connection(stream, &state) {
+                            if let Err(e) = handle_connection(stream, &state, &stop) {
                                 crate::debug!("connection ended: {e:#}");
                             }
-                        })
-                        .context("spawning connection handler")?;
+                        });
+                    match spawned {
+                        Ok(h) => handlers.push(h),
+                        // Must not early-return here: the shutdown
+                        // contract (join handlers, drain scheduler)
+                        // still has to run. Dropping the stream closes
+                        // the connection; the server keeps serving.
+                        Err(e) => crate::warn!("spawning connection handler failed: {e}"),
+                    }
                 }
                 Err(e) => crate::warn!("accept failed: {e}"),
             }
         }
+        crate::info!("stopping: joining {} connection handler(s)", handlers.len());
+        for h in handlers {
+            let _ = h.join();
+        }
+        let sched = self.state.bert.session().scheduler();
+        if !sched.drain(DRAIN_TIMEOUT) {
+            crate::warn!("scheduler did not drain within {DRAIN_TIMEOUT:?}");
+        }
+        crate::info!("stopped");
         Ok(())
     }
 
@@ -87,32 +122,53 @@ pub struct StopHandle {
 
 impl StopHandle {
     /// Signal the accept loop to exit (pokes it with a connection).
+    /// `Server::serve` returns only after handlers joined and the
+    /// scheduler drained, so joining the serve thread after this call
+    /// observes a fully quiesced stack.
     pub fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
         let _ = TcpStream::connect(self.addr);
     }
 }
 
-fn handle_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
+fn handle_connection(stream: TcpStream, state: &ServerState, stop: &AtomicBool) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // Short read timeout: the handler wakes to check the stop flag even
+    // when the client is idle, so shutdown can join it.
+    stream.set_read_timeout(Some(STOP_POLL)).ok();
     let peer = stream.peer_addr().ok();
     crate::debug!("connection from {peer:?}");
-    let reader = BufReader::new(stream.try_clone()?);
+    let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
         }
-        let resp = match Json::parse(&line) {
-            Ok(req) => route(state, &req),
-            Err(e) => crate::util::json::obj(vec![(
-                "error",
-                Json::Str(format!("bad json: {e}")),
-            )]),
-        };
-        writer.write_all(resp.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) => {
+                let trimmed = line.trim();
+                if !trimmed.is_empty() {
+                    let resp = match Json::parse(trimmed) {
+                        Ok(req) => route(state, &req),
+                        Err(e) => crate::util::json::obj(vec![(
+                            "error",
+                            Json::Str(format!("bad json: {e}")),
+                        )]),
+                    };
+                    writer.write_all(resp.to_string().as_bytes())?;
+                    writer.write_all(b"\n")?;
+                }
+                line.clear();
+            }
+            // Timeout: any partial line read so far stays in `line` and
+            // completes on a later read.
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
     }
     Ok(())
 }

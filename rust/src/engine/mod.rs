@@ -3,19 +3,25 @@
 //! - [`allocator`] — Listing 1 (`prun-def`) and the `prun-1` / `prun-eq`
 //!   baselines.
 //! - [`part`] — job parts and their size-based weights.
-//! - [`lease`] — core leasing (admission control under oversubscription).
-//! - [`session`] — `run` / `prun` over the PJRT executor pool.
+//! - [`sched`] — the central core-aware scheduler: ledger admission
+//!   control, backfill + aging, priorities, deadlines.
+//! - [`session`] — `run` / `prun` as thin clients over the scheduler.
 
 pub mod allocator;
-pub mod lease;
 pub mod optimizer;
 pub mod part;
 pub mod profile;
+pub mod sched;
 pub mod session;
 
 pub use allocator::{allocate, allocate_weighted, weights, AllocPolicy};
-pub use lease::CoreLease;
 pub use optimizer::{allocate_optimal, OptPart};
 pub use part::{part_sizes, JobPart};
 pub use profile::ProfileStore;
-pub use session::{PartReport, PrunOptions, PrunOutcome, Session, WeightSource};
+pub use sched::{
+    PartTask, Priority, SchedConfig, SchedError, SchedStats, Scheduler, SubmitHandle,
+    TaskDone, TaskRunner,
+};
+pub use session::{
+    PartReport, PrunHandle, PrunOptions, PrunOutcome, Session, WeightSource,
+};

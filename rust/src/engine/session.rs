@@ -2,32 +2,36 @@
 //!
 //! `Session::run` mirrors OnnxRuntime's `InferenceSession.run`;
 //! `Session::prun` accepts a *list* of job parts, sizes a private worker
-//! allocation for each via [`allocator`](super::allocator), runs them in
-//! parallel (one coordinator thread per part, exactly like the paper's
-//! implementation creates one worker thread per input), and returns the
-//! outputs in input order.
+//! allocation for each via [`allocator`](super::allocator), and executes
+//! them through the central [`scheduler`](super::sched). The session is a
+//! thin client: `prun` submits one [`PartTask`] per part and waits on the
+//! returned handles; no OS threads are spawned per call (the seed's
+//! thread-per-part + blocking-lease topology is gone). `prun_submit`
+//! exposes the non-blocking half so callers (e.g. the coordinator's
+//! batcher) can overlap submission with other work.
 //!
-//! Core accounting: a part allocated `c_i` threads holds `c_i` leases
-//! from the session's [`CoreLease`] while it executes, so concurrent
-//! parts never oversubscribe the machine, and an allocation with
-//! `Σc_i > C` degrades to the paper's "run some parts after others".
+//! Core accounting: a part allocated `c_i` threads occupies `c_i` entries
+//! of the scheduler's core ledger while it executes, so concurrent parts
+//! never oversubscribe the machine, and an allocation with `Σc_i > C`
+//! degrades to the paper's "run some parts after others" — now with
+//! bounded backfill instead of strict FIFO (see `engine::sched`).
 //!
 //! On this testbed the PJRT CPU executable is single-threaded, so `c_i`
-//! does not change a *real* part's execution speed — the lease models
+//! does not change a *real* part's execution speed — the ledger models
 //! occupancy only; the calibrated simulator (crate::simcpu) models the
 //! intra-op scaling the paper measured on its 16-core VM (DESIGN.md §4).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::runtime::{ExecutorPool, Manifest, Tensor};
 
 use super::allocator::{allocate_weighted, weights, AllocPolicy};
-use super::lease::CoreLease;
 use super::part::{part_sizes, JobPart};
 use super::profile::ProfileStore;
+use super::sched::{PartTask, Priority, SchedConfig, Scheduler, SubmitHandle, TaskRunner};
 
 /// Where part weights come from (paper §3.1: size by default; §6 future
 /// work: measured-latency profiles — implemented in engine::profile).
@@ -42,6 +46,11 @@ pub enum WeightSource {
 pub struct PrunOptions {
     pub policy: AllocPolicy,
     pub weights: WeightSource,
+    /// queue priority for every part of this job
+    pub priority: Priority,
+    /// admission deadline (from submit) for every part; parts still
+    /// queued past it are rejected with `SchedError::DeadlineExceeded`
+    pub deadline: Option<Duration>,
 }
 
 impl Default for AllocPolicy {
@@ -54,10 +63,15 @@ impl Default for AllocPolicy {
 #[derive(Debug, Clone)]
 pub struct PartReport {
     pub threads: usize,
-    /// time from prun start until the part acquired its leases
+    /// time from submission until the scheduler admitted the part
     pub queue: Duration,
     /// pure execute time inside the worker
     pub exec: Duration,
+    /// executor worker the part ran on
+    pub worker: usize,
+    /// true if the part was admitted by backfill (bypassed a waiting
+    /// larger part that did not fit in the idle cores)
+    pub backfilled: bool,
 }
 
 /// Result of a `prun` call.
@@ -70,12 +84,68 @@ pub struct PrunOutcome {
     pub wall: Duration,
 }
 
+/// In-flight `prun` job: one scheduler handle per part. `wait` assembles
+/// the classic [`PrunOutcome`]; dropping the handle abandons the results
+/// (the scheduler still runs and accounts the parts).
+pub struct PrunHandle {
+    handles: Vec<SubmitHandle>,
+    models: Vec<String>,
+    allocation: Vec<usize>,
+    t0: Instant,
+    profiles: Arc<ProfileStore>,
+}
+
+impl PrunHandle {
+    /// Listing-1 thread allocation chosen for the parts, input order.
+    pub fn allocation(&self) -> &[usize] {
+        &self.allocation
+    }
+
+    /// Block until every part completes; outputs come back in input
+    /// order. If any part failed, returns the first error — after all
+    /// parts have finished, so no work is left dangling.
+    pub fn wait(self) -> Result<PrunOutcome> {
+        let PrunHandle { handles, models, allocation, t0, profiles } = self;
+        let k = handles.len();
+        let mut outputs: Vec<Vec<Tensor>> = Vec::with_capacity(k);
+        let mut reports: Vec<PartReport> = Vec::with_capacity(k);
+        let mut first_err: Option<anyhow::Error> = None;
+        for (i, h) in handles.into_iter().enumerate() {
+            match h.wait() {
+                Ok(done) => {
+                    profiles.observe(&models[i], done.exec);
+                    reports.push(PartReport {
+                        threads: done.threads,
+                        queue: done.queue,
+                        exec: done.exec,
+                        worker: done.worker,
+                        backfilled: done.backfilled,
+                    });
+                    outputs.push(done.outputs);
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err =
+                            Some(e.context(format!("part {i} model {}", models[i])));
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(PrunOutcome { outputs, reports, allocation, wall: t0.elapsed() })
+    }
+}
+
 pub struct Session {
+    // Field order matters: the scheduler drops (and joins its dispatcher,
+    // draining in-flight completions) before the executor pool goes away.
+    sched: Arc<Scheduler>,
     pool: Arc<ExecutorPool>,
-    lease: CoreLease,
     cores: usize,
     manifest: Arc<Manifest>,
-    profiles: ProfileStore,
+    profiles: Arc<ProfileStore>,
 }
 
 impl Session {
@@ -83,13 +153,24 @@ impl Session {
     /// `workers` is the number of real executor threads (usually = the
     /// machine's available parallelism).
     pub fn new(manifest: Arc<Manifest>, cores: usize, workers: usize) -> Result<Session> {
+        Session::with_config(manifest, SchedConfig { cores, ..SchedConfig::default() }, workers)
+    }
+
+    /// Full control over scheduler tuning (aging bound, backfill).
+    pub fn with_config(
+        manifest: Arc<Manifest>,
+        cfg: SchedConfig,
+        workers: usize,
+    ) -> Result<Session> {
         let pool = Arc::new(ExecutorPool::new(Arc::clone(&manifest), workers)?);
+        let runner: Arc<dyn TaskRunner> = Arc::clone(&pool) as Arc<dyn TaskRunner>;
+        let sched = Scheduler::start(cfg, runner);
         Ok(Session {
+            sched,
             pool,
-            lease: CoreLease::new(cores),
-            cores,
+            cores: cfg.cores,
             manifest,
-            profiles: ProfileStore::new(),
+            profiles: Arc::new(ProfileStore::new()),
         })
     }
 
@@ -110,29 +191,44 @@ impl Session {
         &self.pool
     }
 
+    /// The central core-aware scheduler all execution flows through.
+    pub fn scheduler(&self) -> &Arc<Scheduler> {
+        &self.sched
+    }
+
     /// Pre-compile models on the executor workers.
     pub fn warmup(&self, models: &[&str]) -> Result<()> {
         self.pool.warmup(models)
     }
 
     /// Single-job inference using the whole core budget (the baseline the
-    /// paper compares against).
+    /// paper compares against). Routed through the scheduler so it, too,
+    /// respects the core ledger against concurrent `prun` jobs.
     pub fn run(&self, model: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
-        let _all = self.lease.acquire(self.cores);
-        let res = self.pool.run(model, inputs)?;
-        self.profiles.observe(model, res.exec_time);
-        Ok(res.outputs)
+        let done = self.sched.submit(PartTask::new(model, inputs, self.cores)).wait()?;
+        self.profiles.observe(model, done.exec);
+        Ok(done.outputs)
     }
 
-    /// Parallel inference over independent job parts (the paper's `prun`).
+    /// Parallel inference over independent job parts (the paper's
+    /// `prun`). Blocking convenience over [`Session::prun_submit`].
     pub fn prun(&self, parts: Vec<JobPart>, opts: PrunOptions) -> Result<PrunOutcome> {
+        self.prun_submit(parts, opts).wait()
+    }
+
+    /// Submit a `prun` job without blocking: sizes each part's core
+    /// allocation (Listing 1), hands every part to the scheduler, and
+    /// returns a handle over the per-part completion futures.
+    pub fn prun_submit(&self, parts: Vec<JobPart>, opts: PrunOptions) -> PrunHandle {
+        let t0 = Instant::now();
         if parts.is_empty() {
-            return Ok(PrunOutcome {
-                outputs: Vec::new(),
-                reports: Vec::new(),
+            return PrunHandle {
+                handles: Vec::new(),
+                models: Vec::new(),
                 allocation: Vec::new(),
-                wall: Duration::ZERO,
-            });
+                t0,
+                profiles: Arc::clone(&self.profiles),
+            };
         }
         let sizes = part_sizes(&parts);
         let w = match opts.weights {
@@ -147,53 +243,27 @@ impl Session {
             }
         };
         let allocation = allocate_weighted(&w, self.cores, opts.policy);
-        let t0 = Instant::now();
-
-        let k = parts.len();
-        // Model names survive the move into worker threads (needed for
-        // error context and profile observations).
+        let deadline = opts.deadline.map(|d| t0 + d);
         let models: Vec<String> = parts.iter().map(|p| p.model.clone()).collect();
-        let mut outputs: Vec<Option<Vec<Tensor>>> = (0..k).map(|_| None).collect();
-        let mut reports: Vec<Option<PartReport>> = (0..k).map(|_| None).collect();
-
-        std::thread::scope(|scope| -> Result<()> {
-            let mut handles = Vec::with_capacity(k);
-            // Parts are *moved* into their worker threads — the input
-            // tensors are handed to the executor without copying (§Perf:
-            // an OCR crop is ~120 KiB; cloning per part dominated the
-            // dispatch overhead before this).
-            for (part, &threads) in parts.into_iter().zip(allocation.iter()) {
-                let pool = Arc::clone(&self.pool);
-                let lease = &self.lease;
-                handles.push(scope.spawn(move || -> Result<(Vec<Tensor>, PartReport)> {
-                    // One worker thread per job part, as in the paper; the
-                    // thread leases its allocation before running.
-                    let guard = lease.acquire(threads);
-                    let queue = t0.elapsed();
-                    let model = part.model;
-                    let res = pool
-                        .run(&model, part.inputs)
-                        .with_context(|| format!("part model {model}"))?;
-                    drop(guard);
-                    Ok((res.outputs, PartReport { threads, queue, exec: res.exec_time }))
-                }));
-            }
-            for (i, h) in handles.into_iter().enumerate() {
-                let (out, rep) = h
-                    .join()
-                    .map_err(|_| anyhow::anyhow!("prun worker {i} panicked"))??;
-                self.profiles.observe(&models[i], rep.exec);
-                outputs[i] = Some(out);
-                reports[i] = Some(rep);
-            }
-            Ok(())
-        })?;
-
-        Ok(PrunOutcome {
-            outputs: outputs.into_iter().map(Option::unwrap).collect(),
-            reports: reports.into_iter().map(Option::unwrap).collect(),
+        // Parts are *moved* into their tasks — the input tensors are
+        // handed to the executor without copying (§Perf: an OCR crop is
+        // ~120 KiB; cloning per part dominated dispatch overhead).
+        let handles: Vec<SubmitHandle> = parts
+            .into_iter()
+            .zip(allocation.iter())
+            .map(|(part, &threads)| {
+                let mut task =
+                    PartTask::new(part.model, part.inputs, threads).with_priority(opts.priority);
+                task.deadline = deadline;
+                self.sched.submit(task)
+            })
+            .collect();
+        PrunHandle {
+            handles,
+            models,
             allocation,
-            wall: t0.elapsed(),
-        })
+            t0,
+            profiles: Arc::clone(&self.profiles),
+        }
     }
 }

@@ -50,13 +50,14 @@ const HELP: &str = "dnc-serve — Divide-and-Conquer inference serving
 
 USAGE:
   dnc-serve serve   [--port P] [--cores C] [--workers W] [--policy POLICY]
-                    [--max-batch N] [--max-wait-ms T] [--config FILE]
+                    [--max-batch N] [--max-wait-ms T] [--aging-ms T]
+                    [--request-timeout-ms T] [--config FILE]
   dnc-serve ocr     [--images N] [--variant base|prun-def|prun-1|prun-eq]
                     [--seed S] [--boxes N] [--cores C]
   dnc-serve bert    [--batch X] [--strategy pad-batch|no-batch|prun-def]
                     [--reps N] [--seed S] [--cores C]
   dnc-serve figures [--only LIST] [--reps N]   regenerate the paper's figures
-  dnc-serve info                               artifact + machine summary
+  dnc-serve info                               artifact + machine + sched summary
 ";
 
 fn load_stack(cfg: &Config) -> Result<(Arc<Session>, OcrMeta)> {
@@ -64,7 +65,7 @@ fn load_stack(cfg: &Config) -> Result<(Arc<Session>, OcrMeta)> {
         Manifest::load(&cfg.artifacts)
             .context("loading artifacts (run `make artifacts` first)")?,
     );
-    let session = Arc::new(Session::new(manifest, cfg.cores, cfg.workers)?);
+    let session = Arc::new(Session::with_config(manifest, cfg.sched(), cfg.workers)?);
     let meta = OcrMeta::load(&cfg.artifacts)?;
     Ok((session, meta))
 }
@@ -240,6 +241,14 @@ fn cmd_info(args: &Args) -> Result<()> {
         "machine       : {} cores available; paper testbed {} cores (simulated)",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         simcpu::calib::PAPER_CORES
+    );
+    let sched = cfg.sched();
+    println!("sched         : core budget {}, aging {} ms, backfill {}, policy {}, {} executor worker(s)",
+        sched.cores,
+        sched.aging.as_millis(),
+        if sched.backfill { "on" } else { "off" },
+        cfg.policy.name(),
+        cfg.workers
     );
     if !manifest.models.is_empty() {
         bail_if_missing(&manifest, &cfg)?;

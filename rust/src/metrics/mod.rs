@@ -31,6 +31,12 @@ impl Metrics {
         self.counter(name).fetch_add(delta, Ordering::Relaxed);
     }
 
+    /// Gauge-style overwrite (e.g. queue depth, core occupancy): the
+    /// snapshot reports the latest value instead of an accumulation.
+    pub fn set(&self, name: &str, value: u64) {
+        self.counter(name).store(value, Ordering::Relaxed);
+    }
+
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
         let mut map = self.histograms.lock().unwrap();
         Arc::clone(
@@ -79,6 +85,14 @@ mod tests {
         m.add("requests", 2);
         m.add("requests", 3);
         assert_eq!(m.counter("requests").load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let m = Metrics::new();
+        m.set("queue_depth", 7);
+        m.set("queue_depth", 3);
+        assert_eq!(m.counter("queue_depth").load(Ordering::Relaxed), 3);
     }
 
     #[test]

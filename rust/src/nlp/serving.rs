@@ -12,7 +12,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::engine::{AllocPolicy, JobPart, PrunOptions, Session};
+use crate::engine::{AllocPolicy, JobPart, PrunHandle, PrunOptions, Session};
 use crate::runtime::Tensor;
 
 use super::tokenizer::Tokenizer;
@@ -51,6 +51,28 @@ pub struct BatchResult {
     pub wall: Duration,
     /// model invocations performed (1 for pad-batch, k otherwise)
     pub invocations: usize,
+}
+
+/// A batch submitted to the scheduler but not yet waited on: the
+/// non-blocking half of [`BertServer::serve`] for the prun strategy,
+/// used by the coordinator's pipelined batcher.
+pub struct BatchSubmit {
+    handle: PrunHandle,
+    t0: Instant,
+    n: usize,
+}
+
+impl BatchSubmit {
+    /// Block until every sequence's part completes.
+    pub fn wait(self) -> Result<BatchResult> {
+        let outcome = self.handle.wait()?;
+        let outputs = outcome
+            .outputs
+            .iter()
+            .map(|out| Ok(out[0].as_f32()?.to_vec()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BatchResult { outputs, wall: self.t0.elapsed(), invocations: self.n })
+    }
 }
 
 pub struct BertServer {
@@ -108,27 +130,33 @@ impl BertServer {
                 }
                 Ok(BatchResult { outputs, wall: t0.elapsed(), invocations: requests.len() })
             }
-            Strategy::Prun(policy) => {
-                let parts = requests
-                    .iter()
-                    .map(|r| {
-                        let (model, tensor) = self.single_part(r)?;
-                        Ok(JobPart::new(model, vec![tensor]))
-                    })
-                    .collect::<Result<Vec<_>>>()?;
-                let outcome = self.session.prun(parts, PrunOptions { policy, ..Default::default() })?;
-                let outputs = outcome
-                    .outputs
-                    .iter()
-                    .map(|out| Ok(out[0].as_f32()?.to_vec()))
-                    .collect::<Result<Vec<_>>>()?;
-                Ok(BatchResult {
-                    outputs,
-                    wall: t0.elapsed(),
-                    invocations: requests.len(),
-                })
-            }
+            Strategy::Prun(policy) => self.serve_submit(requests, policy)?.wait(),
         }
+    }
+
+    /// Submit a batch under the prun strategy without blocking: one job
+    /// part per sequence, handed to `engine::sched` via
+    /// [`Session::prun_submit`]. Returns immediately with a completion
+    /// handle.
+    pub fn serve_submit(
+        &self,
+        requests: &[Vec<i32>],
+        policy: AllocPolicy,
+    ) -> Result<BatchSubmit> {
+        if requests.is_empty() {
+            bail!("empty batch");
+        }
+        let t0 = Instant::now();
+        let parts = requests
+            .iter()
+            .map(|r| {
+                let (model, tensor) = self.single_part(r)?;
+                Ok(JobPart::new(model, vec![tensor]))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let handle =
+            self.session.prun_submit(parts, PrunOptions { policy, ..Default::default() });
+        Ok(BatchSubmit { handle, t0, n: requests.len() })
     }
 
     /// (model name, [1, bucket] tensor) for a single request.

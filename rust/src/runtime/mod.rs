@@ -17,7 +17,7 @@ pub mod tensor;
 
 pub use local::LocalEngine;
 pub use manifest::{Manifest, ModelEntry};
-pub use pool::{ExecResult, ExecutorPool};
+pub use pool::{ExecResult, ExecutorPool, ReplyFn};
 pub use tensor::{Tensor, TensorData};
 
 use std::path::PathBuf;

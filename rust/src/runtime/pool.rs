@@ -3,26 +3,40 @@
 //!
 //! This is the runtime's unit of *real* parallelism. `PjRtClient` is not
 //! `Send`, so instead of sharing one client we give each worker its own —
-//! the same topology OnnxRuntime uses for inter-op worker threads. Jobs
-//! arrive on an mpsc channel guarded by a mutex (a simple shared queue);
-//! results return on per-job reply channels.
+//! the same topology OnnxRuntime uses for inter-op worker threads.
+//!
+//! Queueing: every worker owns a **private channel** (no shared queue),
+//! so a caller can target a specific worker. `engine::sched` uses this to
+//! place admitted tasks on the least-loaded worker, and `warmup` uses it
+//! to pre-compile models on *every* worker exactly once (the old shared
+//! queue could only approximate all-workers coverage probabilistically).
+//! Untargeted `submit`/`run` round-robin across workers.
+//!
+//! Completion is callback-based: a job carries a [`ReplyFn`] invoked on
+//! the worker thread when execution finishes. Channel-style use (the
+//! `submit`/`run` API) wraps a channel sender in that callback; the
+//! scheduler instead forwards completions into its own event loop, which
+//! is what lets it release cores without a watcher thread per task.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::manifest::Manifest;
 use super::local::LocalEngine;
+use super::manifest::Manifest;
 use super::tensor::Tensor;
+
+/// Completion callback, invoked exactly once on the worker thread.
+pub type ReplyFn = Box<dyn FnOnce(Result<ExecResult>) + Send + 'static>;
 
 pub struct ExecJob {
     pub model: String,
     pub inputs: Vec<Tensor>,
-    pub reply: Sender<Result<ExecResult>>,
+    pub reply: ReplyFn,
 }
 
 #[derive(Debug, Clone)]
@@ -39,41 +53,62 @@ enum Msg {
     Shutdown,
 }
 
-pub struct ExecutorPool {
-    queue: Arc<Mutex<Receiver<Msg>>>,
+struct Worker {
     tx: Sender<Msg>,
-    workers: Vec<JoinHandle<()>>,
+    join: Option<JoinHandle<()>>,
+}
+
+pub struct ExecutorPool {
+    workers: Vec<Worker>,
     pub size: usize,
     submitted: AtomicU64,
+    rr: AtomicUsize,
 }
 
 impl ExecutorPool {
     /// Spawn `size` executor threads over the given artifact manifest.
     pub fn new(manifest: Arc<Manifest>, size: usize) -> Result<ExecutorPool> {
         assert!(size >= 1);
-        let (tx, rx) = channel::<Msg>();
-        let queue = Arc::new(Mutex::new(rx));
         let mut workers = Vec::with_capacity(size);
         for wid in 0..size {
-            let queue = Arc::clone(&queue);
+            let (tx, rx) = channel::<Msg>();
             let manifest = Arc::clone(&manifest);
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("dnc-exec-{wid}"))
-                    .spawn(move || worker_loop(wid, manifest, queue))
-                    .context("spawning executor thread")?,
-            );
+            let join = std::thread::Builder::new()
+                .name(format!("dnc-exec-{wid}"))
+                .spawn(move || worker_loop(wid, manifest, rx))
+                .context("spawning executor thread")?;
+            workers.push(Worker { tx, join: Some(join) });
         }
-        Ok(ExecutorPool { queue, tx, workers, size, submitted: AtomicU64::new(0) })
+        Ok(ExecutorPool { workers, size, submitted: AtomicU64::new(0), rr: AtomicUsize::new(0) })
     }
 
-    /// Submit and return a receiver for the result (async style).
+    /// Queue a job on a specific worker; `reply` fires on completion.
+    /// If the worker is down (engine creation failed), `reply` fires
+    /// immediately with an error instead of panicking.
+    pub fn dispatch(&self, worker: usize, model: &str, inputs: Vec<Tensor>, reply: ReplyFn) {
+        let wid = worker % self.size;
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        let job = ExecJob { model: model.to_string(), inputs, reply };
+        if let Err(e) = self.workers[wid].tx.send(Msg::Run(job)) {
+            if let Msg::Run(job) = e.0 {
+                (job.reply)(Err(anyhow::anyhow!("executor worker {wid} is down")));
+            }
+        }
+    }
+
+    /// Submit round-robin and return a receiver for the result.
     pub fn submit(&self, model: &str, inputs: Vec<Tensor>) -> Receiver<Result<ExecResult>> {
         let (reply, rx) = channel();
-        self.submitted.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Msg::Run(ExecJob { model: model.to_string(), inputs, reply }))
-            .expect("executor pool is down");
+        let wid = self.rr.fetch_add(1, Ordering::Relaxed);
+        self.dispatch(
+            wid,
+            model,
+            inputs,
+            Box::new(move |result| {
+                // Receiver may have given up (timeout) — that's fine.
+                let _ = reply.send(result);
+            }),
+        );
         rx
     }
 
@@ -84,23 +119,23 @@ impl ExecutorPool {
             .context("executor worker dropped reply channel")?
     }
 
-    /// Pre-compile `models` on every worker so first requests aren't
-    /// penalized by JIT compilation.
+    /// Pre-compile `models` on **every** worker so first requests aren't
+    /// penalized by JIT compilation. Deterministic: per-worker queues let
+    /// us address each worker exactly once (the old shared-queue pool
+    /// could only issue `size` best-effort rounds and hope coverage).
     pub fn warmup(&self, models: &[&str]) -> Result<()> {
-        // Each Warmup message is taken by exactly one idle worker; issuing
-        // `size` rounds with a barrier-ish join approximates all-workers
-        // coverage. Precision is unnecessary: a missed worker just
-        // compiles lazily on first use.
-        for _round in 0..self.size {
-            let mut pending = Vec::new();
+        let mut pending = Vec::with_capacity(self.size * models.len());
+        for w in &self.workers {
             for m in models {
                 let (tx, rx) = channel();
-                self.tx.send(Msg::Warmup(m.to_string(), tx)).expect("pool down");
+                if w.tx.send(Msg::Warmup(m.to_string(), tx)).is_err() {
+                    anyhow::bail!("executor worker is down during warmup");
+                }
                 pending.push(rx);
             }
-            for rx in pending {
-                rx.recv().context("warmup reply lost")??;
-            }
+        }
+        for rx in pending {
+            rx.recv().context("warmup reply lost")??;
         }
         Ok(())
     }
@@ -112,17 +147,18 @@ impl ExecutorPool {
 
 impl Drop for ExecutorPool {
     fn drop(&mut self) {
-        for _ in &self.workers {
-            let _ = self.tx.send(Msg::Shutdown);
+        for w in &self.workers {
+            let _ = w.tx.send(Msg::Shutdown);
         }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
         }
-        let _ = self.queue; // keep the receiver alive until workers joined
     }
 }
 
-fn worker_loop(wid: usize, manifest: Arc<Manifest>, queue: Arc<Mutex<Receiver<Msg>>>) {
+fn worker_loop(wid: usize, manifest: Arc<Manifest>, rx: Receiver<Msg>) {
     let mut engine = match LocalEngine::new(manifest) {
         Ok(e) => e,
         Err(e) => {
@@ -131,13 +167,9 @@ fn worker_loop(wid: usize, manifest: Arc<Manifest>, queue: Arc<Mutex<Receiver<Ms
         }
     };
     loop {
-        // Hold the lock only while dequeueing.
-        let msg = {
-            let rx = queue.lock().expect("queue poisoned");
-            match rx.recv() {
-                Ok(m) => m,
-                Err(_) => return, // pool dropped
-            }
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return, // pool dropped
         };
         match msg {
             Msg::Shutdown => return,
@@ -146,13 +178,24 @@ fn worker_loop(wid: usize, manifest: Arc<Manifest>, queue: Arc<Mutex<Receiver<Ms
             }
             Msg::Run(job) => {
                 let t0 = Instant::now();
-                let result = engine.execute(&job.model, &job.inputs).map(|outputs| ExecResult {
-                    outputs,
-                    exec_time: t0.elapsed(),
-                    worker: wid,
-                });
-                // Receiver may have given up (timeout) — that's fine.
-                let _ = job.reply.send(result);
+                // A panic inside execute must still produce a reply:
+                // the scheduler's core ledger frees on completion, so a
+                // dropped reply would leak cores forever.
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    engine.execute(&job.model, &job.inputs)
+                }));
+                let result = match result {
+                    Ok(r) => r.map(|outputs| ExecResult {
+                        outputs,
+                        exec_time: t0.elapsed(),
+                        worker: wid,
+                    }),
+                    Err(_) => Err(anyhow::anyhow!(
+                        "executor {wid} panicked running {}",
+                        job.model
+                    )),
+                };
+                (job.reply)(result);
             }
         }
     }

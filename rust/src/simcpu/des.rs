@@ -3,7 +3,8 @@
 //! Each job part has a single-thread cost `t1_ms` and a scalability
 //! profile; the allocator has already assigned it `c_i` threads. Parts
 //! are admitted FIFO in input order: a part starts when `c_i` cores are
-//! free (mirroring `engine::lease`), runs for `profile.time_ms(t1, c_i)`
+//! free (strict FIFO — `engine::sched` with backfill disabled, matching
+//! the paper's setup), runs for `profile.time_ms(t1, c_i)`
 //! of virtual time, then releases its cores — reproducing the paper's
 //! oversubscription behaviour ("some job parts will be run after other
 //! job parts have finished", §3.1) without wall-clock measurement noise.
@@ -127,7 +128,7 @@ mod tests {
     #[test]
     fn fifo_head_blocks_smaller_followers() {
         // part1 wants 16 cores and is behind part0 (8 cores); part2 (1
-        // core) queues behind part1 — strict FIFO, as the lease behaves.
+        // core) queues behind part1 — strict FIFO, as the no-backfill sched behaves.
         let r = simulate(&[flat(80.0), flat(16.0), flat(1.0)], &[8, 16, 1], 16);
         assert_eq!(r.start_ms[1], r.end_ms[0]);
         assert_eq!(r.start_ms[2], r.end_ms[1]);

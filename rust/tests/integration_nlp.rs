@@ -158,6 +158,7 @@ fn profiled_weights_prun_after_warm_observations() {
     let opts = PrunOptions {
         policy: AllocPolicy::PrunDef,
         weights: WeightSource::Profiled,
+        ..Default::default()
     };
     let outcome = sess.prun(parts, opts).unwrap();
     assert_eq!(outcome.outputs, solo);

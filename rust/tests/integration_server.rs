@@ -10,7 +10,14 @@ use dnc_serve::ocr::{OcrMeta, OcrPipeline};
 use dnc_serve::runtime::{artifacts_dir, Manifest};
 use dnc_serve::util::json::{arr, num, obj, s, Json};
 
-fn start_server() -> Option<(dnc_serve::coordinator::StopHandle, std::thread::JoinHandle<()>, String)> {
+type Running = (
+    dnc_serve::coordinator::StopHandle,
+    std::thread::JoinHandle<()>,
+    String,
+    Arc<ServerState>,
+);
+
+fn start_server() -> Option<Running> {
     let dir = artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built");
@@ -24,15 +31,15 @@ fn start_server() -> Option<(dnc_serve::coordinator::StopHandle, std::thread::Jo
     config.port = 0; // pick a free port
     config.max_wait_ms = 2;
     let state = ServerState::new(bert, ocr, config);
-    let server = Server::bind(state).unwrap();
+    let server = Server::bind(Arc::clone(&state)).unwrap();
     let addr = server.local_addr().to_string();
     let (stop, join) = server.serve_background();
-    Some((stop, join, addr))
+    Some((stop, join, addr, state))
 }
 
 #[test]
 fn full_protocol_round_trip() {
-    let Some((stop, join, addr)) = start_server() else { return };
+    let Some((stop, join, addr, _state)) = start_server() else { return };
     let mut client = Client::connect(&addr).unwrap();
 
     // ping
@@ -85,10 +92,14 @@ fn full_protocol_round_trip() {
     }
     assert!(resp.get("det_ms").unwrap().as_f64().unwrap() > 0.0);
 
-    // stats reflect the traffic
+    // stats reflect the traffic, including the scheduler section
     let resp = client.call(&obj(vec![("op", s("stats"))])).unwrap();
     assert!(resp.get("counter.requests").unwrap().as_i64().unwrap() >= 5);
     assert!(resp.get("latency.request").is_some());
+    assert_eq!(resp.get("sched.capacity").unwrap().as_i64(), Some(16));
+    assert!(resp.get("sched.completed").unwrap().as_i64().unwrap() >= 1);
+    let busy = resp.get("sched.cores_busy").unwrap().as_i64().unwrap();
+    assert!((0..=16).contains(&busy), "cores_busy {busy}");
 
     // errors are structured
     let resp = client.call(&obj(vec![("op", s("nope"))])).unwrap();
@@ -102,7 +113,7 @@ fn full_protocol_round_trip() {
 
 #[test]
 fn concurrent_clients_get_batched() {
-    let Some((stop, join, addr)) = start_server() else { return };
+    let Some((stop, join, addr, _state)) = start_server() else { return };
     let mut joins = Vec::new();
     for t in 0..4i64 {
         let addr = addr.clone();
@@ -134,7 +145,7 @@ fn concurrent_clients_get_batched() {
 
 #[test]
 fn malformed_json_line_reported() {
-    let Some((stop, join, addr)) = start_server() else { return };
+    let Some((stop, join, addr, _state)) = start_server() else { return };
     use std::io::{BufRead, BufReader, Write};
     let stream = std::net::TcpStream::connect(&addr).unwrap();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
@@ -146,4 +157,79 @@ fn malformed_json_line_reported() {
     assert!(resp.get("error").unwrap().as_str().unwrap().contains("bad json"));
     stop.stop();
     join.join().unwrap();
+}
+
+#[test]
+fn concurrent_prun_jobs_share_the_scheduler() {
+    // Mixed long/short prun work arriving from several connections at
+    // once: everything must complete through the shared core ledger,
+    // and afterwards the scheduler must be fully quiescent.
+    let Some((stop, join, addr, state)) = start_server() else { return };
+    let mut joins = Vec::new();
+    for t in 0..4i64 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            for i in 0..3i64 {
+                // long part mix: a bigger OCR page...
+                let resp = client
+                    .call(&obj(vec![
+                        ("op", s("ocr")),
+                        ("seed", num((t * 7 + i) as f64)),
+                        ("boxes", num(4.0)),
+                        ("variant", s("prun-def")),
+                    ]))
+                    .unwrap();
+                assert!(resp.get("texts").is_some(), "{resp:?}");
+                // ...interleaved with small embed parts
+                let tokens = arr((0..16).map(|j| num(((t * 31 + i * 13 + j) % 8000) as f64)));
+                let resp = client
+                    .call(&obj(vec![("op", s("embed_tokens")), ("tokens", tokens)]))
+                    .unwrap();
+                assert!(resp.get("embedding").is_some(), "{resp:?}");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    let mut client = Client::connect(&addr).unwrap();
+    let stats = client.call(&obj(vec![("op", s("stats"))])).unwrap();
+    let completed = stats.get("sched.completed").unwrap().as_i64().unwrap();
+    assert!(completed >= 12, "sched.completed {completed}");
+    assert_eq!(stats.get("sched.failed").unwrap().as_i64(), Some(0));
+    let busy = stats.get("sched.cores_busy").unwrap().as_i64().unwrap();
+    assert!((0..=16).contains(&busy), "cores_busy {busy}");
+
+    stop.stop();
+    join.join().unwrap();
+    // all replies were received before stop, so the ledger must be empty
+    let st = state.bert.session().scheduler().stats();
+    assert_eq!(st.inflight, 0);
+    assert_eq!(st.queue_depth, 0);
+    assert_eq!(st.cores_busy, 0);
+}
+
+#[test]
+fn shutdown_quiesces_scheduler_and_handlers() {
+    let Some((stop, join, addr, state)) = start_server() else { return };
+    // leave a connection open and idle to prove handlers are joined,
+    // not leaked
+    let mut idle = Client::connect(&addr).unwrap();
+    let resp = idle.call(&obj(vec![("op", s("ping"))])).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    let tokens = arr((0..16).map(|j| num(j as f64)));
+    let resp = idle
+        .call(&obj(vec![("op", s("embed_tokens")), ("tokens", tokens)]))
+        .unwrap();
+    assert!(resp.get("embedding").is_some());
+
+    stop.stop();
+    // serve() returns only after every connection handler joined and
+    // the scheduler drained — even with `idle` still connected.
+    join.join().unwrap();
+    let st = state.bert.session().scheduler().stats();
+    assert_eq!(st.inflight, 0, "in-flight tasks must drain on stop: {st:?}");
+    assert_eq!(st.queue_depth, 0);
 }

@@ -1,7 +1,9 @@
 //! Property tests over the *real* prun engine (PJRT-backed): output
-//! ordering, allocation consistency, lease discipline. Requires built
-//! artifacts (skips otherwise). Thread counts are virtual here (1-core
-//! box) but the policy/scheduling code is the production path.
+//! ordering, allocation consistency, scheduler ledger discipline.
+//! Requires built artifacts (skips otherwise). Thread counts are virtual
+//! here (1-core box) but the policy/scheduling code is the production
+//! path. Scheduler-only invariants live in `prop_sched.rs` (mock
+//! runner, no artifacts needed).
 
 use std::sync::Arc;
 

@@ -1,0 +1,239 @@
+//! Scheduler property tests over a mock runner — no PJRT artifacts
+//! needed, so these always run. They pin the acceptance criteria for
+//! `engine::sched`:
+//!
+//! - the core ledger **never oversubscribes** the budget, under random
+//!   part sizes/priorities and concurrent submitters;
+//! - **every** submitted task completes (or is deadline-rejected);
+//! - a large part is **never starved** past the aging bound by a stream
+//!   of backfilled small parts.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dnc_serve::engine::{
+    PartTask, Priority, SchedConfig, SchedError, Scheduler, TaskRunner,
+};
+use dnc_serve::runtime::{ExecResult, ReplyFn, Tensor};
+use dnc_serve::util::prop::check;
+
+/// Executes tasks on short sleeper threads while tracking virtual-core
+/// occupancy. The model name encodes `"t<threads>-s<sleep_ms>"`, where
+/// `<threads>` is the *clamped* allocation, so the tracker mirrors the
+/// ledger exactly.
+struct TrackingRunner {
+    workers: usize,
+    active: Arc<AtomicUsize>,
+    peak: Arc<AtomicUsize>,
+}
+
+fn model_name(threads: usize, sleep_ms: u64) -> String {
+    format!("t{threads}-s{sleep_ms}")
+}
+
+fn parse_model(model: &str) -> (usize, u64) {
+    let rest = model.strip_prefix('t').expect("mock model name");
+    let (t, s) = rest.split_once("-s").expect("mock model name");
+    (t.parse().unwrap(), s.parse().unwrap())
+}
+
+impl TaskRunner for TrackingRunner {
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn run_on(&self, worker: usize, model: &str, _inputs: Vec<Tensor>, reply: ReplyFn) {
+        let (threads, sleep_ms) = parse_model(model);
+        let active = Arc::clone(&self.active);
+        let peak = Arc::clone(&self.peak);
+        std::thread::spawn(move || {
+            let now = active.fetch_add(threads, Ordering::SeqCst) + threads;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(sleep_ms));
+            active.fetch_sub(threads, Ordering::SeqCst);
+            reply(Ok(ExecResult {
+                outputs: Vec::new(),
+                exec_time: Duration::from_millis(sleep_ms),
+                worker,
+            }));
+        });
+    }
+}
+
+fn tracking_sched(
+    cfg: SchedConfig,
+) -> (Arc<Scheduler>, Arc<AtomicUsize>, Arc<AtomicUsize>) {
+    let active = Arc::new(AtomicUsize::new(0));
+    let peak = Arc::new(AtomicUsize::new(0));
+    let runner = TrackingRunner {
+        workers: 4,
+        active: Arc::clone(&active),
+        peak: Arc::clone(&peak),
+    };
+    (Scheduler::start(cfg, Arc::new(runner)), active, peak)
+}
+
+#[test]
+fn never_oversubscribes_and_everything_completes() {
+    check(3, |g| {
+        let capacity = *g.choice(&[4usize, 8, 16]);
+        let (sched, active, peak) = tracking_sched(SchedConfig {
+            cores: capacity,
+            aging: Duration::from_millis(10),
+            backfill: true,
+        });
+        let k = g.usize_in(20, 40);
+        // random thread asks, deliberately sometimes over capacity
+        // (the scheduler must clamp), random priorities, short sleeps
+        let tasks: Vec<(usize, usize, u64, Priority)> = (0..k)
+            .map(|_| {
+                let raw = g.usize_in(1, capacity * 2);
+                let clamped = raw.clamp(1, capacity);
+                let ms = g.usize_in(1, 4) as u64;
+                let prio =
+                    *g.choice(&[Priority::Low, Priority::Normal, Priority::High]);
+                (raw, clamped, ms, prio)
+            })
+            .collect();
+
+        // 3 concurrent submitters, each waiting on its own handles
+        let mut joins = Vec::new();
+        for chunk in tasks.chunks(tasks.len().div_ceil(3)) {
+            let chunk = chunk.to_vec();
+            let sched = Arc::clone(&sched);
+            joins.push(std::thread::spawn(move || {
+                let handles: Vec<_> = chunk
+                    .iter()
+                    .map(|&(raw, clamped, ms, prio)| {
+                        let task =
+                            PartTask::new(model_name(clamped, ms), Vec::new(), raw)
+                                .with_priority(prio);
+                        (clamped, sched.submit(task))
+                    })
+                    .collect();
+                for (clamped, h) in handles {
+                    let done = h.wait().expect("task must complete");
+                    assert_eq!(done.threads, clamped, "scheduler clamp mismatch");
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+
+        assert!(
+            peak.load(Ordering::SeqCst) <= capacity,
+            "oversubscribed: peak {} > capacity {capacity}",
+            peak.load(Ordering::SeqCst)
+        );
+        assert!(sched.drain(Duration::from_secs(5)), "drain timed out");
+        assert_eq!(active.load(Ordering::SeqCst), 0);
+        let st = sched.stats();
+        assert_eq!(st.completed, k as u64, "every task completes: {st:?}");
+        assert_eq!(st.failed, 0);
+        assert_eq!(st.deadline_rejected, 0);
+        assert_eq!(st.inflight, 0);
+        assert_eq!(st.queue_depth, 0);
+        assert_eq!(st.cores_busy, 0, "ledger must return to empty: {st:?}");
+    });
+}
+
+#[test]
+fn large_part_never_starved_past_aging_bound() {
+    // Paper §3.1 semantics under load: a full-budget part queued behind
+    // a long occupier must keep running *small* parts via backfill, yet
+    // still be admitted once the aging bound passes.
+    let capacity = 4;
+    let aging = Duration::from_millis(25);
+    let (sched, _active, peak) = tracking_sched(SchedConfig {
+        cores: capacity,
+        aging,
+        backfill: true,
+    });
+
+    // Occupy one core for 60ms: the 4-core part cannot fit behind it.
+    let occupier = sched.submit(PartTask::new(model_name(1, 60), Vec::new(), 1));
+    std::thread::sleep(Duration::from_millis(5));
+    let t_large = Instant::now();
+    let large = sched.submit(PartTask::new(model_name(capacity, 5), Vec::new(), capacity));
+    // A stream of small parts arriving behind the large one: strict FIFO
+    // would idle 3 cores; backfill must run them — but only until the
+    // large part's aging bound expires.
+    let smalls: Vec<_> = (0..20)
+        .map(|_| sched.submit(PartTask::new(model_name(1, 3), Vec::new(), 1)))
+        .collect();
+
+    let done = large.wait().expect("large part must complete");
+    let waited = t_large.elapsed();
+    assert!(done.threads == capacity);
+    assert!(
+        waited < Duration::from_millis(500),
+        "large part starved: waited {waited:?}"
+    );
+    for s in smalls {
+        s.wait().expect("small part must complete");
+    }
+    occupier.wait().unwrap();
+
+    assert!(peak.load(Ordering::SeqCst) <= capacity);
+    let st = sched.stats();
+    assert!(
+        st.backfills >= 1,
+        "small parts should have backfilled the idle cores: {st:?}"
+    );
+    assert_eq!(st.completed, 22);
+}
+
+#[test]
+fn deadline_rejection_is_typed_and_counted() {
+    let capacity = 2;
+    let (sched, _active, _peak) = tracking_sched(SchedConfig {
+        cores: capacity,
+        aging: Duration::from_millis(25),
+        backfill: true,
+    });
+    let blocker = sched.submit(PartTask::new(model_name(2, 40), Vec::new(), 2));
+    std::thread::sleep(Duration::from_millis(5));
+    let doomed = sched.submit(
+        PartTask::new(model_name(2, 1), Vec::new(), 2)
+            .with_deadline(Instant::now() + Duration::from_millis(5)),
+    );
+    let err = doomed.wait().unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<SchedError>(),
+        Some(&SchedError::DeadlineExceeded),
+        "want typed deadline rejection, got: {err:#}"
+    );
+    blocker.wait().unwrap();
+    let st = sched.stats();
+    assert_eq!(st.deadline_rejected, 1);
+    assert_eq!(st.completed, 1);
+}
+
+#[test]
+fn backfill_disabled_preserves_strict_fifo() {
+    // With backfill off the scheduler degrades to the seed's FIFO lease
+    // semantics: a small part queued behind a non-fitting large part
+    // waits even though it would fit.
+    let capacity = 4;
+    let (sched, _active, _peak) = tracking_sched(SchedConfig {
+        cores: capacity,
+        aging: Duration::from_millis(25),
+        backfill: false,
+    });
+    let occupier = sched.submit(PartTask::new(model_name(1, 30), Vec::new(), 1));
+    std::thread::sleep(Duration::from_millis(5));
+    let large = sched.submit(PartTask::new(model_name(4, 1), Vec::new(), 4));
+    let small = sched.submit(PartTask::new(model_name(1, 1), Vec::new(), 1));
+    let large_done = large.wait().unwrap();
+    let small_done = small.wait().unwrap();
+    occupier.wait().unwrap();
+    assert!(
+        small_done.queue >= large_done.queue,
+        "strict FIFO: small ({:?}) must not bypass large ({:?})",
+        small_done.queue,
+        large_done.queue
+    );
+    assert_eq!(sched.stats().backfills, 0);
+}

@@ -69,7 +69,7 @@ fn makespan_is_max_end_and_bounds_hold() {
 #[test]
 fn starts_monotone_in_input_order() {
     // Strict FIFO admission: start times are non-decreasing in input
-    // order (matches engine::lease's ticket queue).
+    // order (matches engine::sched's no-backfill FIFO admission).
     check(CASES, |g| {
         let parts = gen_parts(g);
         let cores = g.usize_in(1, 32);
