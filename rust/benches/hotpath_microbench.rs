@@ -68,7 +68,14 @@ fn main() {
         fn workers(&self) -> usize {
             1
         }
-        fn run_on(&self, worker: usize, _model: &str, _inputs: Vec<dnc_serve::runtime::Tensor>, reply: ReplyFn) {
+        fn run_on(
+            &self,
+            worker: usize,
+            _model: &str,
+            _inputs: Vec<dnc_serve::runtime::Tensor>,
+            _cancel: dnc_serve::runtime::CancelToken,
+            reply: ReplyFn,
+        ) {
             reply(Ok(dnc_serve::runtime::ExecResult {
                 outputs: Vec::new(),
                 exec_time: std::time::Duration::ZERO,

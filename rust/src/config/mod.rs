@@ -29,7 +29,10 @@ pub struct Config {
     /// scheduler: max time the queue head may be bypassed by backfill
     pub aging_ms: u64,
     /// router: max time a connection thread waits for a batched reply
+    /// (on expiry the request's scheduler tasks are cancelled)
     pub request_timeout_ms: u64,
+    /// server shutdown: max time to wait for in-flight scheduler tasks
+    pub drain_timeout_ms: u64,
     pub artifacts: PathBuf,
 }
 
@@ -45,6 +48,7 @@ impl Default for Config {
             max_wait_ms: 5,
             aging_ms: 50,
             request_timeout_ms: 30_000,
+            drain_timeout_ms: 10_000,
             artifacts: crate::runtime::artifacts_dir(),
         }
     }
@@ -87,6 +91,9 @@ impl Config {
         if let Some(x) = v.get("request_timeout_ms") {
             self.request_timeout_ms = x.as_usize().context("request_timeout_ms")? as u64;
         }
+        if let Some(x) = v.get("drain_timeout_ms") {
+            self.drain_timeout_ms = x.as_usize().context("drain_timeout_ms")? as u64;
+        }
         if let Some(x) = v.get("artifacts") {
             self.artifacts = PathBuf::from(x.as_str().context("artifacts")?);
         }
@@ -113,6 +120,7 @@ impl Config {
         self.max_wait_ms = args.u64_or("max-wait-ms", self.max_wait_ms);
         self.aging_ms = args.u64_or("aging-ms", self.aging_ms);
         self.request_timeout_ms = args.u64_or("request-timeout-ms", self.request_timeout_ms);
+        self.drain_timeout_ms = args.u64_or("drain-timeout-ms", self.drain_timeout_ms);
         if let Some(a) = args.get("artifacts") {
             self.artifacts = PathBuf::from(a);
         }
@@ -149,6 +157,7 @@ mod tests {
         assert_eq!(c.policy, AllocPolicy::PrunDef);
         assert_eq!(c.aging_ms, 50);
         assert_eq!(c.request_timeout_ms, 30_000);
+        assert_eq!(c.drain_timeout_ms, 10_000);
         let s = c.sched();
         assert_eq!(s.cores, 16);
         assert_eq!(s.aging, std::time::Duration::from_millis(50));
@@ -160,18 +169,24 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("dnc_cfg3_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("cfg.json");
-        std::fs::write(&p, r#"{"aging_ms": 20, "request_timeout_ms": 1000}"#).unwrap();
+        std::fs::write(
+            &p,
+            r#"{"aging_ms": 20, "request_timeout_ms": 1000, "drain_timeout_ms": 2000}"#,
+        )
+        .unwrap();
         let c = Config::from_file(&p).unwrap();
         assert_eq!(c.aging_ms, 20);
         assert_eq!(c.request_timeout_ms, 1000);
+        assert_eq!(c.drain_timeout_ms, 2000);
         let mut c = Config::default();
         c.apply_args(&args(&format!(
-            "serve --config {} --aging-ms 75 --request-timeout-ms 500",
+            "serve --config {} --aging-ms 75 --request-timeout-ms 500 --drain-timeout-ms 1500",
             p.display()
         )))
         .unwrap();
         assert_eq!(c.aging_ms, 75);
         assert_eq!(c.request_timeout_ms, 500);
+        assert_eq!(c.drain_timeout_ms, 1500);
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //!   while batch N executes — and a stalled batch never blocks
 //!   accumulation. Thread count stays fixed (flusher + completer).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -38,6 +39,9 @@ struct Queue<T, R> {
 
 pub struct Batcher<T, R> {
     queue: Arc<(Mutex<Queue<T, R>>, Condvar)>,
+    /// requests flushed out of the queue but not yet delivered — the
+    /// batches currently executing (or queued behind the completer)
+    inflight: Arc<AtomicUsize>,
     flusher: Option<std::thread::JoinHandle<()>>,
     completer: Option<std::thread::JoinHandle<()>>,
     pub max_batch: usize,
@@ -53,15 +57,27 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
     ) -> Batcher<T, R> {
         let queue = new_queue(max_batch);
         let q2 = Arc::clone(&queue);
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let inf2 = Arc::clone(&inflight);
         let flusher = std::thread::Builder::new()
             .name("dnc-batcher".into())
             .spawn(move || {
                 flusher_loop(q2, max_batch, max_wait, move |items, replies| {
+                    let n = items.len();
+                    inf2.fetch_add(n, Ordering::Relaxed);
                     deliver(handler(items), replies);
+                    inf2.fetch_sub(n, Ordering::Relaxed);
                 })
             })
             .expect("spawn batcher");
-        Batcher { queue, flusher: Some(flusher), completer: None, max_batch, max_wait }
+        Batcher {
+            queue,
+            inflight,
+            flusher: Some(flusher),
+            completer: None,
+            max_batch,
+            max_wait,
+        }
     }
 
     /// Start a pipelined batcher: `submitter` enqueues the batch and
@@ -74,6 +90,9 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
     ) -> Batcher<T, R> {
         let queue = new_queue(max_batch);
         let q2 = Arc::clone(&queue);
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let inf_flush = Arc::clone(&inflight);
+        let inf_done = Arc::clone(&inflight);
         let (ctx, crx) = channel::<(Resolver<R>, Vec<Sender<R>>)>();
         let flusher = std::thread::Builder::new()
             .name("dnc-batcher".into())
@@ -82,6 +101,7 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
                 // flusher exits (shutdown), the channel disconnects and
                 // the completer drains whatever was submitted, then exits.
                 flusher_loop(q2, max_batch, max_wait, move |items, replies| {
+                    inf_flush.fetch_add(items.len(), Ordering::Relaxed);
                     let resolver = submitter(items);
                     let _ = ctx.send((resolver, replies));
                 })
@@ -91,12 +111,15 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
             .name("dnc-batcher-done".into())
             .spawn(move || {
                 while let Ok((resolver, replies)) = crx.recv() {
+                    let n = replies.len();
                     deliver(resolver(), replies);
+                    inf_done.fetch_sub(n, Ordering::Relaxed);
                 }
             })
             .expect("spawn batcher completer");
         Batcher {
             queue,
+            inflight,
             flusher: Some(flusher),
             completer: Some(completer),
             max_batch,
@@ -114,9 +137,18 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
         rx
     }
 
-    /// Number of requests currently waiting.
+    /// Number of requests accumulated but not yet flushed to a batch.
+    /// Requests in a flushed-but-unresolved batch are **not** counted
+    /// here — see [`in_flight`](Self::in_flight); a queue-depth gauge
+    /// that ignored them under-reported sustained load.
     pub fn pending(&self) -> usize {
         self.queue.0.lock().unwrap().items.len()
+    }
+
+    /// Number of requests in flushed batches that have not yet been
+    /// delivered (executing, or waiting on the completer).
+    pub fn in_flight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
     }
 }
 
@@ -305,6 +337,51 @@ mod tests {
         let r2 = b.submit(2);
         assert_eq!(r1.recv().unwrap(), 1);
         assert_eq!(r2.recv().unwrap(), 2);
+    }
+
+    #[test]
+    fn in_flight_counts_flushed_unresolved_batches() {
+        // A flushed batch leaves `pending` but must show in `in_flight`
+        // until its resolver delivers — otherwise requests "vanish" from
+        // the gauges while they execute.
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = Arc::clone(&gate);
+        let b: Batcher<u32, u32> =
+            Batcher::start_pipelined(1, Duration::from_millis(1), move |items| {
+                let g3 = Arc::clone(&g2);
+                Box::new(move || {
+                    let (lock, cv) = &*g3;
+                    let mut open = lock.lock().unwrap();
+                    while !*open {
+                        let (o, timeout) =
+                            cv.wait_timeout(open, Duration::from_secs(5)).unwrap();
+                        open = o;
+                        if timeout.timed_out() {
+                            break;
+                        }
+                    }
+                    items
+                })
+            });
+        let rx = b.submit(5);
+        // wait for the flush: request moves pending -> in_flight
+        let t0 = Instant::now();
+        while b.in_flight() != 1 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(b.in_flight(), 1, "flushed batch must be counted in flight");
+        assert_eq!(b.pending(), 0, "flushed batch must leave the pending gauge");
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        assert_eq!(rx.recv().unwrap(), 5);
+        let t0 = Instant::now();
+        while b.in_flight() != 0 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(b.in_flight(), 0, "delivered batch must clear the gauge");
     }
 
     #[test]

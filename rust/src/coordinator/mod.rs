@@ -6,5 +6,5 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{Batcher, Resolver};
-pub use router::{route, ServerState};
+pub use router::{embed_with_timeout, route, EmbedRequest, ServerState};
 pub use server::{Client, Server, StopHandle};

@@ -17,7 +17,12 @@
 //! via the pipelined batcher (`Session::prun_submit` under the hood), so
 //! a stalled model execution never pins the batcher's accumulation, and
 //! connection threads wait with a bounded timeout instead of a bare
-//! blocking `recv()`.
+//! blocking `recv()`. Every embed request carries a [`CancelToken`]
+//! into its job part: when the bounded wait expires, the router cancels
+//! the token, so the request's scheduler task is rejected from the
+//! queue (cores never taken) or stopped at the executor's next poll —
+//! a timed-out client no longer leaves orphaned work burning the core
+//! budget.
 
 use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
@@ -25,6 +30,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::Config;
 use crate::coordinator::batcher::Batcher;
+use crate::engine::CancelToken;
 use crate::metrics::Metrics;
 use crate::nlp::BertServer;
 use crate::ocr::{generate, GenOptions, OcrPipeline};
@@ -32,13 +38,20 @@ use crate::simcpu::ocr::OcrVariant;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::prng::Rng;
 
+/// One embed request travelling through the batcher: the token ids plus
+/// the requester's cancellation token (cancelled on router timeout).
+pub struct EmbedRequest {
+    pub ids: Vec<i32>,
+    pub cancel: CancelToken,
+}
+
 pub struct ServerState {
     pub bert: BertServer,
     pub ocr: OcrPipeline,
     pub metrics: Arc<Metrics>,
     pub config: Config,
     /// cross-connection dynamic batcher for embed requests
-    pub embed_batcher: Batcher<Vec<i32>, Result<Vec<f32>, String>>,
+    pub embed_batcher: Batcher<EmbedRequest, Result<Vec<f32>, String>>,
 }
 
 impl ServerState {
@@ -52,32 +65,36 @@ impl ServerState {
         // is waited on by the batcher's completion thread. Batch N+1
         // accumulates and submits while batch N executes.
         let batch_server = BertServer::new(session);
-        let embed_batcher: Batcher<Vec<i32>, Result<Vec<f32>, String>> = Batcher::start_pipelined(
-            config.max_batch,
-            Duration::from_millis(config.max_wait_ms),
-            move |requests: Vec<Vec<i32>>| {
-                let t0 = Instant::now();
-                let n = requests.len();
-                m2.add("batches", 1);
-                m2.add("batched_requests", n as u64);
-                match batch_server.serve_submit(&requests, policy) {
-                    Ok(sub) => {
-                        let m3 = Arc::clone(&m2);
-                        Box::new(move || match sub.wait() {
-                            Ok(res) => {
+        let embed_batcher: Batcher<EmbedRequest, Result<Vec<f32>, String>> =
+            Batcher::start_pipelined(
+                config.max_batch,
+                Duration::from_millis(config.max_wait_ms),
+                move |requests: Vec<EmbedRequest>| {
+                    let t0 = Instant::now();
+                    let n = requests.len();
+                    m2.add("batches", 1);
+                    m2.add("batched_requests", n as u64);
+                    let tagged: Vec<(Vec<i32>, CancelToken)> =
+                        requests.into_iter().map(|r| (r.ids, r.cancel)).collect();
+                    match batch_server.serve_submit_cancellable(&tagged, policy) {
+                        Ok(sub) => {
+                            let m3 = Arc::clone(&m2);
+                            // Per-request settlement: one timed-out
+                            // (cancelled) request yields its own error
+                            // without clobbering its batchmates.
+                            Box::new(move || {
+                                let results = sub.wait_each();
                                 m3.record("bert_batch", t0.elapsed());
-                                res.outputs.into_iter().map(Ok).collect()
-                            }
-                            Err(e) => (0..n).map(|_| Err(format!("{e:#}"))).collect(),
-                        })
+                                results
+                            })
+                        }
+                        Err(e) => {
+                            let msg = format!("{e:#}");
+                            Box::new(move || (0..n).map(|_| Err(msg.clone())).collect())
+                        }
                     }
-                    Err(e) => {
-                        let msg = format!("{e:#}");
-                        Box::new(move || (0..n).map(|_| Err(msg.clone())).collect())
-                    }
-                }
-            },
-        );
+                },
+            );
         Arc::new(ServerState { bert, ocr, metrics, config, embed_batcher })
     }
 }
@@ -104,19 +121,26 @@ pub fn route(state: &ServerState, req: &Json) -> Json {
 }
 
 /// Metrics snapshot plus live scheduler observability (`sched.*`):
-/// queue depth, core occupancy, backfill and deadline-rejection counts.
+/// queue depth (total and per priority), core occupancy, backfill,
+/// deadline-rejection and cancellation counts.
 fn stats_json(state: &ServerState) -> Json {
-    // gauge: embed requests accumulated but not yet flushed to the
+    // gauges: embed requests accumulated but not yet flushed to the
     // scheduler (the batcher's own queue, upstream of sched.queue_depth)
+    // and requests in flushed-but-unresolved batches — both are needed,
+    // or requests "vanish" from stats while their batch executes
     state.metrics.set("embed_pending", state.embed_batcher.pending() as u64);
+    state.metrics.set("embed_inflight", state.embed_batcher.in_flight() as u64);
     let mut snap = state.metrics.snapshot_json();
     let st = state.bert.session().scheduler().stats();
     if let Json::Obj(pairs) = &mut snap {
-        let fields: [(&str, f64); 11] = [
+        let fields: [(&str, f64); 15] = [
             ("sched.capacity", st.capacity as f64),
             ("sched.cores_busy", st.cores_busy as f64),
             ("sched.cores_idle", st.cores_idle as f64),
             ("sched.queue_depth", st.queue_depth as f64),
+            ("sched.queue_depth_high", st.queue_depth_high as f64),
+            ("sched.queue_depth_normal", st.queue_depth_normal as f64),
+            ("sched.queue_depth_low", st.queue_depth_low as f64),
             ("sched.peak_queue_depth", st.peak_queue_depth as f64),
             ("sched.inflight", st.inflight as f64),
             ("sched.submitted", st.submitted as f64),
@@ -124,6 +148,7 @@ fn stats_json(state: &ServerState) -> Json {
             ("sched.failed", st.failed as f64),
             ("sched.backfills", st.backfills as f64),
             ("sched.deadline_rejected", st.deadline_rejected as f64),
+            ("sched.cancelled", st.cancelled as f64),
         ];
         for (k, v) in fields {
             pairs.push((k.to_string(), num(v)));
@@ -165,22 +190,59 @@ fn handle_embed_tokens(state: &ServerState, req: &Json) -> Json {
 }
 
 fn embed_ids(state: &ServerState, ids: Vec<i32>) -> Json {
-    // Bounded wait: a stalled batch produces a structured timeout error
-    // instead of pinning this connection thread forever.
     let timeout = Duration::from_millis(state.config.request_timeout_ms);
-    match state.embed_batcher.submit(ids).recv_timeout(timeout) {
+    embed_with_timeout(&state.embed_batcher, &state.metrics, ids, timeout)
+}
+
+/// Routed embed with a bounded wait. On expiry the requester's
+/// [`CancelToken`] is cancelled before returning the structured timeout
+/// error, so the request's scheduler task is rejected from the queue
+/// (cores never taken) or stopped at the executor's next poll instead
+/// of running on for a client that already gave up.
+///
+/// Public so the timeout path is testable against a mock scheduler
+/// without PJRT artifacts (see `tests/integration_timeout.rs`).
+pub fn embed_with_timeout(
+    batcher: &Batcher<EmbedRequest, Result<Vec<f32>, String>>,
+    metrics: &Metrics,
+    ids: Vec<i32>,
+    timeout: Duration,
+) -> Json {
+    let cancel = CancelToken::new();
+    let rx = batcher.submit(EmbedRequest { ids, cancel: cancel.clone() });
+    match rx.recv_timeout(timeout) {
         Ok(Ok(embedding)) => obj(vec![("embedding", embedding_json(&embedding))]),
         Ok(Err(e)) => err(e),
         Err(RecvTimeoutError::Timeout) => {
-            state.metrics.add("request_timeouts", 1);
+            cancel.cancel();
+            metrics.add("request_timeouts", 1);
             err("request timed out".into())
         }
-        Err(RecvTimeoutError::Disconnected) => err("server shutting down".into()),
+        // A dead batcher abandons this request just as surely as a
+        // timeout does — cancel so an already-submitted task doesn't
+        // keep burning cores (and stall the shutdown drain) with no
+        // one left to read it.
+        Err(RecvTimeoutError::Disconnected) => {
+            cancel.cancel();
+            err("server shutting down".into())
+        }
     }
 }
 
 fn handle_ocr(state: &ServerState, req: &Json) -> Json {
-    let seed = req.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64;
+    // A negative seed used to wrap silently through `as u64` (and a
+    // fractional one truncated), serving a page the client could never
+    // reproduce from the seed it sent; reject anything that is not an
+    // exactly-representable non-negative integer.
+    let seed = match req.get("seed") {
+        None => 0u64,
+        Some(v) => match v.as_f64() {
+            // strict bound: `u64::MAX as f64` rounds up to 2^64, which
+            // would pass `<=` and then saturate to a different seed
+            Some(f) if f >= 0.0 && f.fract() == 0.0 && f < u64::MAX as f64 => f as u64,
+            _ => return err("'seed' must be a non-negative integer".into()),
+        },
+    };
     let boxes = req.get("boxes").and_then(|v| v.as_usize()).unwrap_or(3);
     let variant = match req.get("variant").and_then(|v| v.as_str()) {
         None => OcrVariant::Prun(state.config.policy),

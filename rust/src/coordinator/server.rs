@@ -27,9 +27,6 @@ use super::router::{route, ServerState};
 /// How often an idle connection handler checks the stop flag.
 const STOP_POLL: Duration = Duration::from_millis(200);
 
-/// How long `serve` waits for in-flight scheduler tasks on shutdown.
-const DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
-
 pub struct Server {
     state: Arc<ServerState>,
     listener: TcpListener,
@@ -93,8 +90,9 @@ impl Server {
             let _ = h.join();
         }
         let sched = self.state.bert.session().scheduler();
-        if !sched.drain(DRAIN_TIMEOUT) {
-            crate::warn!("scheduler did not drain within {DRAIN_TIMEOUT:?}");
+        let drain_timeout = Duration::from_millis(self.state.config.drain_timeout_ms);
+        if !sched.drain(drain_timeout) {
+            crate::warn!("scheduler did not drain within {drain_timeout:?}");
         }
         crate::info!("stopped");
         Ok(())

@@ -4,7 +4,8 @@
 //!   baselines.
 //! - [`part`] — job parts and their size-based weights.
 //! - [`sched`] — the central core-aware scheduler: ledger admission
-//!   control, backfill + aging, priorities, deadlines.
+//!   control, backfill + aging, priorities, deadlines, cooperative
+//!   cancellation.
 //! - [`session`] — `run` / `prun` as thin clients over the scheduler.
 
 pub mod allocator;
@@ -22,6 +23,9 @@ pub use sched::{
     PartTask, Priority, SchedConfig, SchedError, SchedStats, Scheduler, SubmitHandle,
     TaskDone, TaskRunner,
 };
+// Cancellation primitives live in `runtime` (the executor polls them)
+// but are part of the scheduler's public vocabulary.
+pub use crate::runtime::{CancelToken, TaskCancelled};
 pub use session::{
     PartReport, PrunHandle, PrunOptions, PrunOutcome, Session, WeightSource,
 };

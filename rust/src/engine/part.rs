@@ -1,6 +1,6 @@
 //! Job parts: the unit `prun` divides work into.
 
-use crate::runtime::Tensor;
+use crate::runtime::{CancelToken, Tensor};
 
 /// One independent piece of an inference job (paper §3.1's `j_i`): a
 /// model to run and its inputs. The part's *size* — the total element
@@ -9,11 +9,20 @@ use crate::runtime::Tensor;
 pub struct JobPart {
     pub model: String,
     pub inputs: Vec<Tensor>,
+    /// optional per-part cancellation token (e.g. the serving request
+    /// this part answers); parts without one share the job's fate
+    pub cancel: Option<CancelToken>,
 }
 
 impl JobPart {
     pub fn new(model: impl Into<String>, inputs: Vec<Tensor>) -> JobPart {
-        JobPart { model: model.into(), inputs }
+        JobPart { model: model.into(), inputs, cancel: None }
+    }
+
+    /// Attach the cancellation token of the request this part serves.
+    pub fn with_cancel(mut self, token: CancelToken) -> JobPart {
+        self.cancel = Some(token);
+        self
     }
 
     /// Input-tensor size, the paper's default weight proxy (§3.1: weight

@@ -36,6 +36,15 @@
 //!   executor worker through the [`TaskRunner`] seam (implemented by
 //!   `runtime::ExecutorPool`'s per-worker queues; mocked in tests so the
 //!   scheduler is property-testable without PJRT artifacts).
+//! - **Cancellation**: every task carries a [`CancelToken`]. Cancelling
+//!   a queued task removes it from the queue and rejects it with
+//!   [`SchedError::Cancelled`] — its cores are never taken. Cancelling a
+//!   running task is cooperative: the token travels into the executor,
+//!   which skips a not-yet-started task entirely and polls the token
+//!   between expensive steps; either way the task's cores return to the
+//!   ledger through the normal completion path. This is what lets the
+//!   serving edge (router timeouts, dropped `PrunHandle`s) stop paying
+//!   for work nobody will read, instead of abandoning it.
 //!
 //! Core accounting is unchanged in spirit from the old lease: a task
 //! allocated `c_i` threads occupies `c_i` entries of the ledger while it
@@ -53,11 +62,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::runtime::{ExecResult, ExecutorPool, ReplyFn, Tensor};
+use crate::runtime::{CancelToken, ExecResult, ExecutorPool, ReplyFn, TaskCancelled, Tensor};
 
-/// How often the dispatcher wakes to sweep queued-task deadlines when no
-/// submit/complete event arrives.
-const DEADLINE_TICK: Duration = Duration::from_millis(5);
+/// How often the dispatcher wakes to sweep queued tasks (deadline expiry
+/// and externally-cancelled tokens) when no submit/complete event
+/// arrives.
+const SWEEP_TICK: Duration = Duration::from_millis(5);
 
 /// Queue priority; higher admits first, FIFO within a level.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
@@ -74,6 +84,10 @@ pub enum Priority {
 pub enum SchedError {
     /// The task's admission deadline passed while it was still queued.
     DeadlineExceeded,
+    /// The task's [`CancelToken`] fired before it finished: while it was
+    /// queued (cores never taken) or while it was running (the executor
+    /// stopped at its next token poll and the cores were released).
+    Cancelled,
     /// The scheduler shut down before the task was admitted.
     Shutdown,
 }
@@ -82,6 +96,7 @@ impl fmt::Display for SchedError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             SchedError::DeadlineExceeded => write!(f, "deadline exceeded before admission"),
+            SchedError::Cancelled => write!(f, "task cancelled"),
             SchedError::Shutdown => write!(f, "scheduler shut down"),
         }
     }
@@ -100,6 +115,9 @@ pub struct PartTask {
     pub priority: Priority,
     /// admission deadline: reject if still queued at this instant
     pub deadline: Option<Instant>,
+    /// cooperative cancellation flag, shared with whoever may abandon
+    /// this task (each task gets a private token unless one is attached)
+    pub cancel: CancelToken,
 }
 
 impl PartTask {
@@ -110,6 +128,7 @@ impl PartTask {
             threads,
             priority: Priority::Normal,
             deadline: None,
+            cancel: CancelToken::new(),
         }
     }
 
@@ -120,6 +139,13 @@ impl PartTask {
 
     pub fn with_deadline(mut self, d: Instant) -> PartTask {
         self.deadline = Some(d);
+        self
+    }
+
+    /// Attach a shared cancellation token (e.g. one owned by the serving
+    /// request this part belongs to).
+    pub fn with_cancel(mut self, token: CancelToken) -> PartTask {
+        self.cancel = token;
         self
     }
 }
@@ -142,11 +168,32 @@ pub struct TaskDone {
 pub struct SubmitHandle {
     rx: Receiver<Result<TaskDone>>,
     id: u64,
+    cancel: CancelToken,
+    /// dispatcher event channel, used to nudge a prompt queue removal
+    tx: Sender<Event>,
 }
 
 impl SubmitHandle {
     pub fn id(&self) -> u64 {
         self.id
+    }
+
+    /// The task's cancellation token (cloning shares the flag).
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Cancel the task. Queued: it is removed and rejected with
+    /// [`SchedError::Cancelled`] without ever taking cores. Running: the
+    /// executor observes the token at its next poll and the cores are
+    /// released through the completion path. Completed: no-op. The
+    /// result (or rejection) still arrives through `wait`.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+        // Nudge the dispatcher so a queued task is removed promptly
+        // instead of at the next sweep tick. Ignore send failure: a
+        // gone dispatcher has already rejected everything.
+        let _ = self.tx.send(Event::Cancel(self.id));
     }
 
     /// Block until the task completes or is rejected.
@@ -193,8 +240,18 @@ impl Default for SchedConfig {
 pub trait TaskRunner: Send + Sync + 'static {
     /// Number of independently-addressable workers.
     fn workers(&self) -> usize;
-    /// Run `model` on `worker`; must invoke `reply` exactly once.
-    fn run_on(&self, worker: usize, model: &str, inputs: Vec<Tensor>, reply: ReplyFn);
+    /// Run `model` on `worker`; must invoke `reply` exactly once. A
+    /// cooperative runner polls `cancel` at its safe points and replies
+    /// with [`TaskCancelled`] instead of executing (or finishing) a
+    /// cancelled task.
+    fn run_on(
+        &self,
+        worker: usize,
+        model: &str,
+        inputs: Vec<Tensor>,
+        cancel: CancelToken,
+        reply: ReplyFn,
+    );
 }
 
 impl TaskRunner for ExecutorPool {
@@ -202,8 +259,15 @@ impl TaskRunner for ExecutorPool {
         self.size
     }
 
-    fn run_on(&self, worker: usize, model: &str, inputs: Vec<Tensor>, reply: ReplyFn) {
-        self.dispatch(worker, model, inputs, reply);
+    fn run_on(
+        &self,
+        worker: usize,
+        model: &str,
+        inputs: Vec<Tensor>,
+        cancel: CancelToken,
+        reply: ReplyFn,
+    ) {
+        self.dispatch(worker, model, inputs, cancel, reply);
     }
 }
 
@@ -215,6 +279,10 @@ pub struct SchedStats {
     pub cores_busy: usize,
     pub cores_idle: usize,
     pub queue_depth: usize,
+    /// queued tasks by priority level (gauges, sum = `queue_depth`)
+    pub queue_depth_high: usize,
+    pub queue_depth_normal: usize,
+    pub queue_depth_low: usize,
     pub peak_queue_depth: usize,
     pub inflight: usize,
     pub submitted: u64,
@@ -222,6 +290,7 @@ pub struct SchedStats {
     pub failed: u64,
     pub backfills: u64,
     pub deadline_rejected: u64,
+    pub cancelled: u64,
 }
 
 #[derive(Default)]
@@ -231,7 +300,11 @@ struct Counters {
     failed: AtomicU64,
     backfills: AtomicU64,
     deadline_rejected: AtomicU64,
+    cancelled: AtomicU64,
     queue_depth: AtomicUsize,
+    queue_depth_high: AtomicUsize,
+    queue_depth_normal: AtomicUsize,
+    queue_depth_low: AtomicUsize,
     peak_queue_depth: AtomicUsize,
     cores_busy: AtomicUsize,
     inflight: AtomicUsize,
@@ -240,6 +313,10 @@ struct Counters {
 enum Event {
     Submit(Queued),
     Done { id: u64, result: Result<ExecResult> },
+    /// prompt-removal nudge from `SubmitHandle::cancel` (the token is
+    /// the source of truth; the sweep also catches tokens cancelled
+    /// without a nudge, e.g. by the serving edge)
+    Cancel(u64),
     Drain(Sender<()>),
     Shutdown,
 }
@@ -282,6 +359,7 @@ impl Scheduler {
             counters: Arc::clone(&counters),
             free: cfg.cores,
             pending: VecDeque::new(),
+            queue_by_prio: [0; 3],
             inflight: HashMap::new(),
             worker_load: vec![0; runner.workers().max(1)],
             runner,
@@ -309,17 +387,27 @@ impl Scheduler {
     pub fn submit(&self, mut task: PartTask) -> SubmitHandle {
         task.threads = task.threads.clamp(1, self.capacity);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        let cancel = task.cancel.clone();
         let (reply, rx) = channel();
         let queued =
             Queued { id, task, reply, submitted: Instant::now(), bypassed_since: None };
+        // `submitted` is counted by the *dispatcher* when it receives the
+        // event — not here. A send can succeed in the narrow window where
+        // the dispatcher has decided to exit but its receiver is not yet
+        // dropped; counting sender-side would tally a task that never
+        // reaches any terminal counter and permanently skew the invariant
+        // `submitted == completed + failed + deadline_rejected +
+        // cancelled + queued + inflight`. Dispatcher-side counting makes
+        // "counted submitted" and "will be terminally counted" the same
+        // event. An unreceived task's reply sender drops with the
+        // channel, so its handle still resolves (Shutdown).
         if let Err(e) = self.tx.send(Event::Submit(queued)) {
             // dispatcher already gone: reject through the handle
             if let Event::Submit(q) = e.0 {
                 let _ = q.reply.send(Err(anyhow::Error::new(SchedError::Shutdown)));
             }
         }
-        SubmitHandle { rx, id }
+        SubmitHandle { rx, id, cancel, tx: self.tx.clone() }
     }
 
     /// Wait (up to `timeout`) until no task is queued or in flight.
@@ -341,6 +429,9 @@ impl Scheduler {
             cores_busy: busy,
             cores_idle: self.capacity.saturating_sub(busy),
             queue_depth: c.queue_depth.load(Ordering::Relaxed),
+            queue_depth_high: c.queue_depth_high.load(Ordering::Relaxed),
+            queue_depth_normal: c.queue_depth_normal.load(Ordering::Relaxed),
+            queue_depth_low: c.queue_depth_low.load(Ordering::Relaxed),
             peak_queue_depth: c.peak_queue_depth.load(Ordering::Relaxed),
             inflight: c.inflight.load(Ordering::Relaxed),
             submitted: c.submitted.load(Ordering::Relaxed),
@@ -348,6 +439,7 @@ impl Scheduler {
             failed: c.failed.load(Ordering::Relaxed),
             backfills: c.backfills.load(Ordering::Relaxed),
             deadline_rejected: c.deadline_rejected.load(Ordering::Relaxed),
+            cancelled: c.cancelled.load(Ordering::Relaxed),
         }
     }
 }
@@ -361,6 +453,15 @@ impl Drop for Scheduler {
     }
 }
 
+/// Index into the per-priority queue tally.
+fn prio_idx(p: Priority) -> usize {
+    match p {
+        Priority::Low => 0,
+        Priority::Normal => 1,
+        Priority::High => 2,
+    }
+}
+
 /// All mutable scheduling state, owned by the dispatcher thread.
 struct DispatchState {
     cfg: SchedConfig,
@@ -369,6 +470,9 @@ struct DispatchState {
     free: usize,
     /// queued tasks, (priority desc, arrival) order
     pending: VecDeque<Queued>,
+    /// queued-task tally by priority (kept incrementally: a full scan
+    /// per event would make gauge upkeep O(queue) on the hot path)
+    queue_by_prio: [usize; 3],
     inflight: HashMap<u64, Inflight>,
     /// tasks currently placed on each worker
     worker_load: Vec<usize>,
@@ -384,15 +488,16 @@ fn dispatcher_loop(rx: Receiver<Event>, mut st: DispatchState) {
         if shutting_down && st.inflight.is_empty() {
             break;
         }
-        // Queued deadlines need a clock even when no event arrives.
-        let needs_tick =
-            !shutting_down && st.pending.iter().any(|q| q.task.deadline.is_some());
+        // Queued tasks need a clock even when no event arrives: deadlines
+        // expire on their own, and the serving edge can cancel a token
+        // without sending a nudge (it may only hold the token).
+        let needs_tick = !shutting_down && !st.pending.is_empty();
         let ev = if needs_tick {
-            match rx.recv_timeout(DEADLINE_TICK) {
+            match rx.recv_timeout(SWEEP_TICK) {
                 Ok(ev) => ev,
                 Err(RecvTimeoutError::Timeout) => {
-                    // An expired head may have been unblocking admission:
-                    // admit() sweeps deadlines first, then re-admits.
+                    // A swept head may have been blocking admission:
+                    // admit() sweeps first, then re-admits.
                     st.admit();
                     st.sync_gauges();
                     st.notify_if_idle();
@@ -408,8 +513,11 @@ fn dispatcher_loop(rx: Receiver<Event>, mut st: DispatchState) {
         };
         match ev {
             Event::Submit(q) => {
+                // Received == submitted (see Scheduler::submit): every
+                // task counted here reaches exactly one terminal counter.
+                st.counters.submitted.fetch_add(1, Ordering::Relaxed);
                 if shutting_down {
-                    let _ = q.reply.send(Err(anyhow::Error::new(SchedError::Shutdown)));
+                    st.reject_shutdown(q);
                 } else {
                     st.enqueue(q);
                     st.admit();
@@ -421,12 +529,19 @@ fn dispatcher_loop(rx: Receiver<Event>, mut st: DispatchState) {
                     st.admit();
                 }
             }
+            Event::Cancel(id) => {
+                st.cancel_queued(id);
+                if !shutting_down {
+                    // removing a stuck head can unblock admission
+                    st.admit();
+                }
+            }
             Event::Drain(done) => st.drain_waiters.push(done),
             Event::Shutdown => {
                 shutting_down = true;
                 // reject everything still queued; in-flight work drains
-                while let Some(q) = st.pending.pop_front() {
-                    let _ = q.reply.send(Err(anyhow::Error::new(SchedError::Shutdown)));
+                while let Some(q) = st.take_queued(0) {
+                    st.reject_shutdown(q);
                 }
             }
         }
@@ -434,9 +549,10 @@ fn dispatcher_loop(rx: Receiver<Event>, mut st: DispatchState) {
         st.notify_if_idle();
     }
     // Dispatcher exiting: nothing queued may survive.
-    while let Some(q) = st.pending.pop_front() {
-        let _ = q.reply.send(Err(anyhow::Error::new(SchedError::Shutdown)));
+    while let Some(q) = st.take_queued(0) {
+        st.reject_shutdown(q);
     }
+    st.sync_gauges();
     st.notify_if_idle();
 }
 
@@ -448,22 +564,41 @@ impl DispatchState {
             .iter()
             .position(|e| e.task.priority < q.task.priority)
             .unwrap_or(self.pending.len());
+        self.queue_by_prio[prio_idx(q.task.priority)] += 1;
         self.pending.insert(at, q);
         let depth = self.pending.len();
         self.counters.peak_queue_depth.fetch_max(depth, Ordering::Relaxed);
     }
 
-    /// Reject queued tasks whose admission deadline has passed.
-    fn reject_expired(&mut self) {
+    /// The only way out of the queue: removes the task at `i` and keeps
+    /// the per-priority tally in step.
+    fn take_queued(&mut self, i: usize) -> Option<Queued> {
+        let q = self.pending.remove(i);
+        if let Some(q) = &q {
+            self.queue_by_prio[prio_idx(q.task.priority)] -= 1;
+        }
+        q
+    }
+
+    /// Reject queued tasks whose admission deadline has passed or whose
+    /// cancel token fired; neither ever takes cores from the ledger.
+    fn sweep_queue(&mut self) {
         let now = Instant::now();
         let mut i = 0;
         while i < self.pending.len() {
-            let expired = self.pending[i].task.deadline.is_some_and(|d| now >= d);
-            if expired {
-                if let Some(q) = self.pending.remove(i) {
-                    self.counters.deadline_rejected.fetch_add(1, Ordering::Relaxed);
-                    let _ =
-                        q.reply.send(Err(anyhow::Error::new(SchedError::DeadlineExceeded)));
+            let cancelled = self.pending[i].task.cancel.is_cancelled();
+            let expired =
+                !cancelled && self.pending[i].task.deadline.is_some_and(|d| now >= d);
+            if cancelled || expired {
+                if let Some(q) = self.take_queued(i) {
+                    let e = if cancelled {
+                        self.counters.cancelled.fetch_add(1, Ordering::Relaxed);
+                        SchedError::Cancelled
+                    } else {
+                        self.counters.deadline_rejected.fetch_add(1, Ordering::Relaxed);
+                        SchedError::DeadlineExceeded
+                    };
+                    let _ = q.reply.send(Err(anyhow::Error::new(e)));
                 }
             } else {
                 i += 1;
@@ -471,14 +606,34 @@ impl DispatchState {
         }
     }
 
+    /// Remove one queued task by id after a `SubmitHandle::cancel`
+    /// nudge. In-flight tasks are not touched here: the executor polls
+    /// the token and the cores come back through the completion path.
+    fn cancel_queued(&mut self, id: u64) {
+        if let Some(i) = self.pending.iter().position(|q| q.id == id) {
+            if let Some(q) = self.take_queued(i) {
+                self.counters.cancelled.fetch_add(1, Ordering::Relaxed);
+                let _ = q.reply.send(Err(anyhow::Error::new(SchedError::Cancelled)));
+            }
+        }
+    }
+
+    /// Reject a task because the scheduler is shutting down. Counted as
+    /// failed: it was accepted (counted submitted) but never ran, and
+    /// the accounting invariant must still balance.
+    fn reject_shutdown(&self, q: Queued) {
+        self.counters.failed.fetch_add(1, Ordering::Relaxed);
+        let _ = q.reply.send(Err(anyhow::Error::new(SchedError::Shutdown)));
+    }
+
     /// Admit as many queued tasks as fit, head-first with bounded
     /// backfill (see module docs).
     fn admit(&mut self) {
-        self.reject_expired();
+        self.sweep_queue();
         loop {
             let Some(head) = self.pending.front_mut() else { break };
             if head.task.threads <= self.free {
-                let q = self.pending.pop_front().unwrap();
+                let q = self.take_queued(0).unwrap();
                 self.launch(q, false);
                 continue;
             }
@@ -497,9 +652,11 @@ impl DispatchState {
             let fit = (1..self.pending.len())
                 .find(|&i| self.pending[i].task.threads <= self.free);
             match fit {
+                // `backfills` is counted inside launch(), after its
+                // cancel check — a picked candidate whose token fired
+                // in the meantime is no bypass at all.
                 Some(i) => {
-                    let q = self.pending.remove(i).unwrap();
-                    self.counters.backfills.fetch_add(1, Ordering::Relaxed);
+                    let q = self.take_queued(i).unwrap();
                     self.launch(q, true);
                 }
                 None => break,
@@ -510,7 +667,18 @@ impl DispatchState {
     /// Take cores from the ledger and hand the task to the least-loaded
     /// worker. Completion comes back as an [`Event::Done`].
     fn launch(&mut self, q: Queued, backfilled: bool) {
-        let Queued { id, task, reply, submitted } = q;
+        // `bypassed_since` is queue-side bookkeeping; it ends here.
+        let Queued { id, task, reply, submitted, .. } = q;
+        // Last-instant check: the token may have fired between the sweep
+        // and this launch. A cancelled task must never take cores.
+        if task.cancel.is_cancelled() {
+            self.counters.cancelled.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(Err(anyhow::Error::new(SchedError::Cancelled)));
+            return;
+        }
+        if backfilled {
+            self.counters.backfills.fetch_add(1, Ordering::Relaxed);
+        }
         let threads = task.threads;
         debug_assert!(threads <= self.free, "ledger oversubscription");
         self.free -= threads;
@@ -531,6 +699,7 @@ impl DispatchState {
             worker,
             &task.model,
             task.inputs,
+            task.cancel,
             Box::new(move |result| {
                 let _ = tx.send(Event::Done { id, result });
             }),
@@ -555,6 +724,13 @@ impl DispatchState {
                     backfilled: inf.backfilled,
                 }));
             }
+            // An executor that skipped or aborted a cancelled task
+            // reports the typed marker; surface the scheduler's own
+            // rejection and count it apart from real failures.
+            Err(e) if e.downcast_ref::<TaskCancelled>().is_some() => {
+                self.counters.cancelled.fetch_add(1, Ordering::Relaxed);
+                let _ = inf.reply.send(Err(anyhow::Error::new(SchedError::Cancelled)));
+            }
             Err(e) => {
                 self.counters.failed.fetch_add(1, Ordering::Relaxed);
                 let _ = inf.reply.send(Err(e));
@@ -563,7 +739,12 @@ impl DispatchState {
     }
 
     fn sync_gauges(&self) {
+        let [low, normal, high] = self.queue_by_prio;
+        debug_assert_eq!(low + normal + high, self.pending.len(), "priority tally drift");
         self.counters.queue_depth.store(self.pending.len(), Ordering::Relaxed);
+        self.counters.queue_depth_high.store(high, Ordering::Relaxed);
+        self.counters.queue_depth_normal.store(normal, Ordering::Relaxed);
+        self.counters.queue_depth_low.store(low, Ordering::Relaxed);
         self.counters
             .cores_busy
             .store(self.cfg.cores - self.free, Ordering::Relaxed);
@@ -598,10 +779,29 @@ mod tests {
             self.workers
         }
 
-        fn run_on(&self, worker: usize, model: &str, _inputs: Vec<Tensor>, reply: ReplyFn) {
+        fn run_on(
+            &self,
+            worker: usize,
+            model: &str,
+            _inputs: Vec<Tensor>,
+            cancel: CancelToken,
+            reply: ReplyFn,
+        ) {
             let ms = sleep_ms(model);
             std::thread::spawn(move || {
-                std::thread::sleep(Duration::from_millis(ms));
+                // cooperative: skip a task cancelled before it started,
+                // and poll once per sleep slice while it "executes"
+                if cancel.is_cancelled() {
+                    reply(Err(anyhow::Error::new(TaskCancelled)));
+                    return;
+                }
+                for _ in 0..ms {
+                    std::thread::sleep(Duration::from_millis(1));
+                    if cancel.is_cancelled() {
+                        reply(Err(anyhow::Error::new(TaskCancelled)));
+                        return;
+                    }
+                }
                 reply(Ok(ExecResult {
                     outputs: Vec::new(),
                     exec_time: Duration::from_millis(ms),
@@ -702,5 +902,85 @@ mod tests {
         let err = queued.wait().unwrap_err();
         assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::Shutdown));
         blocker.wait().unwrap(); // in-flight work still completes
+    }
+
+    #[test]
+    fn cancel_while_queued_is_typed_and_counted() {
+        let s = sched(1);
+        let blocker = s.submit(PartTask::new("sleep:30", Vec::new(), 1));
+        std::thread::sleep(Duration::from_millis(5));
+        let doomed = s.submit(PartTask::new("sleep:1", Vec::new(), 1));
+        doomed.cancel();
+        let err = doomed.wait().unwrap_err();
+        assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::Cancelled));
+        blocker.wait().unwrap();
+        assert!(s.drain(Duration::from_secs(5)));
+        let st = s.stats();
+        assert_eq!(st.cancelled, 1);
+        assert_eq!(st.completed, 1);
+        assert_eq!(st.cores_busy, 0, "cancelled task must not hold cores: {st:?}");
+    }
+
+    #[test]
+    fn cancel_while_running_stops_at_next_poll() {
+        let s = sched(2);
+        let h = s.submit(PartTask::new("sleep:200", Vec::new(), 2));
+        std::thread::sleep(Duration::from_millis(10)); // admitted, running
+        let t0 = Instant::now();
+        h.cancel();
+        let err = h.wait().unwrap_err();
+        assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::Cancelled));
+        assert!(
+            t0.elapsed() < Duration::from_millis(150),
+            "cancel did not interrupt the sleep: {:?}",
+            t0.elapsed()
+        );
+        assert!(s.drain(Duration::from_secs(5)));
+        let st = s.stats();
+        assert_eq!(st.cancelled, 1);
+        assert_eq!(st.cores_busy, 0, "cores must return on cancel: {st:?}");
+        assert_eq!(st.inflight, 0);
+    }
+
+    #[test]
+    fn shared_token_cancels_without_a_handle_nudge() {
+        // The serving edge may hold only the token (no SubmitHandle):
+        // the dispatcher's sweep tick must still reject the queued task.
+        let s = sched(1);
+        let blocker = s.submit(PartTask::new("sleep:40", Vec::new(), 1));
+        std::thread::sleep(Duration::from_millis(5));
+        let token = CancelToken::new();
+        let queued =
+            s.submit(PartTask::new("sleep:1", Vec::new(), 1).with_cancel(token.clone()));
+        token.cancel(); // no SubmitHandle::cancel — token only
+        let err = queued.wait().unwrap_err();
+        assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::Cancelled));
+        blocker.wait().unwrap();
+        assert_eq!(s.stats().cancelled, 1);
+    }
+
+    #[test]
+    fn submit_after_dispatcher_exit_is_not_counted() {
+        // Drive the dispatcher down while the Scheduler value is still
+        // alive, then submit: the task must be rejected with Shutdown
+        // and must NOT bump `submitted` (the accounting invariant).
+        let s = sched(1);
+        s.tx.send(Event::Shutdown).unwrap();
+        // wait for the dispatcher to exit (its receiver disconnects)
+        let mut exited = false;
+        for _ in 0..500 {
+            if s.tx.send(Event::Cancel(u64::MAX)).is_err() {
+                exited = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(exited, "dispatcher did not exit after Shutdown");
+        let h = s.submit(PartTask::new("sleep:1", Vec::new(), 1));
+        let err = h.wait().unwrap_err();
+        assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::Shutdown));
+        let st = s.stats();
+        assert_eq!(st.submitted, 0, "rejected-at-submit must not count: {st:?}");
+        assert_eq!(st.completed + st.failed + st.deadline_rejected + st.cancelled, 0);
     }
 }

@@ -8,7 +8,9 @@
 //! returned handles; no OS threads are spawned per call (the seed's
 //! thread-per-part + blocking-lease topology is gone). `prun_submit`
 //! exposes the non-blocking half so callers (e.g. the coordinator's
-//! batcher) can overlap submission with other work.
+//! batcher) can overlap submission with other work; the returned
+//! [`PrunHandle`] can cancel the job's parts, and cancels whatever is
+//! still outstanding if it is dropped unconsumed.
 //!
 //! Core accounting: a part allocated `c_i` threads occupies `c_i` entries
 //! of the scheduler's core ledger while it executes, so concurrent parts
@@ -31,7 +33,9 @@ use crate::runtime::{ExecutorPool, Manifest, Tensor};
 use super::allocator::{allocate_weighted, weights, AllocPolicy};
 use super::part::{part_sizes, JobPart};
 use super::profile::ProfileStore;
-use super::sched::{PartTask, Priority, SchedConfig, Scheduler, SubmitHandle, TaskRunner};
+use super::sched::{
+    PartTask, Priority, SchedConfig, Scheduler, SubmitHandle, TaskDone, TaskRunner,
+};
 
 /// Where part weights come from (paper §3.1: size by default; §6 future
 /// work: measured-latency profiles — implemented in engine::profile).
@@ -85,8 +89,11 @@ pub struct PrunOutcome {
 }
 
 /// In-flight `prun` job: one scheduler handle per part. `wait` assembles
-/// the classic [`PrunOutcome`]; dropping the handle abandons the results
-/// (the scheduler still runs and accounts the parts).
+/// the classic [`PrunOutcome`]; `wait_each` yields per-part results so
+/// one cancelled part does not clobber its siblings. **Dropping the
+/// handle cancels every part still outstanding** — abandoned work must
+/// not keep burning ledger cores (call `wait`/`wait_each` to consume
+/// results, or `cancel` to give up explicitly).
 pub struct PrunHandle {
     handles: Vec<SubmitHandle>,
     models: Vec<String>,
@@ -101,11 +108,23 @@ impl PrunHandle {
         &self.allocation
     }
 
+    /// Cancel every part of this job: queued parts are rejected without
+    /// taking cores; running parts stop at the executor's next token
+    /// poll. `wait`/`wait_each` then observe `SchedError::Cancelled`.
+    pub fn cancel(&self) {
+        for h in &self.handles {
+            h.cancel();
+        }
+    }
+
     /// Block until every part completes; outputs come back in input
     /// order. If any part failed, returns the first error — after all
     /// parts have finished, so no work is left dangling.
-    pub fn wait(self) -> Result<PrunOutcome> {
-        let PrunHandle { handles, models, allocation, t0, profiles } = self;
+    pub fn wait(mut self) -> Result<PrunOutcome> {
+        let handles = std::mem::take(&mut self.handles);
+        let models = std::mem::take(&mut self.models);
+        let allocation = std::mem::take(&mut self.allocation);
+        let (t0, profiles) = (self.t0, Arc::clone(&self.profiles));
         let k = handles.len();
         let mut outputs: Vec<Vec<Tensor>> = Vec::with_capacity(k);
         let mut reports: Vec<PartReport> = Vec::with_capacity(k);
@@ -135,6 +154,38 @@ impl PrunHandle {
             return Err(e);
         }
         Ok(PrunOutcome { outputs, reports, allocation, wall: t0.elapsed() })
+    }
+
+    /// Block until every part completes and return one result per part,
+    /// input order. Unlike [`wait`](Self::wait), a failed or cancelled
+    /// part yields its own error without discarding sibling outputs —
+    /// what a batch of independent serving requests needs.
+    pub fn wait_each(mut self) -> Vec<Result<TaskDone>> {
+        let handles = std::mem::take(&mut self.handles);
+        let models = std::mem::take(&mut self.models);
+        let profiles = Arc::clone(&self.profiles);
+        handles
+            .into_iter()
+            .enumerate()
+            .map(|(i, h)| match h.wait() {
+                Ok(done) => {
+                    profiles.observe(&models[i], done.exec);
+                    Ok(done)
+                }
+                Err(e) => Err(e.context(format!("part {i} model {}", models[i]))),
+            })
+            .collect()
+    }
+}
+
+impl Drop for PrunHandle {
+    fn drop(&mut self) {
+        // An abandoned job must not leave orphaned parts occupying the
+        // ledger. `wait`/`wait_each` take the handles out first, so a
+        // consumed PrunHandle cancels nothing.
+        for h in &self.handles {
+            h.cancel();
+        }
     }
 }
 
@@ -252,9 +303,13 @@ impl Session {
             .into_iter()
             .zip(allocation.iter())
             .map(|(part, &threads)| {
+                let JobPart { model, inputs, cancel } = part;
                 let mut task =
-                    PartTask::new(part.model, part.inputs, threads).with_priority(opts.priority);
+                    PartTask::new(model, inputs, threads).with_priority(opts.priority);
                 task.deadline = deadline;
+                if let Some(token) = cancel {
+                    task = task.with_cancel(token);
+                }
                 self.sched.submit(task)
             })
             .collect();

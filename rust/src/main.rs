@@ -51,7 +51,8 @@ const HELP: &str = "dnc-serve — Divide-and-Conquer inference serving
 USAGE:
   dnc-serve serve   [--port P] [--cores C] [--workers W] [--policy POLICY]
                     [--max-batch N] [--max-wait-ms T] [--aging-ms T]
-                    [--request-timeout-ms T] [--config FILE]
+                    [--request-timeout-ms T] [--drain-timeout-ms T]
+                    [--config FILE]
   dnc-serve ocr     [--images N] [--variant base|prun-def|prun-1|prun-eq]
                     [--seed S] [--boxes N] [--cores C]
   dnc-serve bert    [--batch X] [--strategy pad-batch|no-batch|prun-def]

@@ -12,7 +12,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::engine::{AllocPolicy, JobPart, PrunHandle, PrunOptions, Session};
+use crate::engine::{AllocPolicy, CancelToken, JobPart, PrunHandle, PrunOptions, Session};
 use crate::runtime::Tensor;
 
 use super::tokenizer::Tokenizer;
@@ -72,6 +72,30 @@ impl BatchSubmit {
             .map(|out| Ok(out[0].as_f32()?.to_vec()))
             .collect::<Result<Vec<_>>>()?;
         Ok(BatchResult { outputs, wall: self.t0.elapsed(), invocations: self.n })
+    }
+
+    /// Block until every part settles and return one result per request,
+    /// input order. A cancelled or failed request carries its own error
+    /// without discarding its batchmates' embeddings — the per-request
+    /// isolation the coordinator's batcher needs once requests can time
+    /// out (and be cancelled) individually.
+    pub fn wait_each(self) -> Vec<Result<Vec<f32>, String>> {
+        self.handle
+            .wait_each()
+            .into_iter()
+            .map(|r| match r {
+                Ok(done) => match done.outputs.first() {
+                    Some(t) => t.as_f32().map(|v| v.to_vec()).map_err(|e| format!("{e:#}")),
+                    None => Err("part returned no outputs".to_string()),
+                },
+                Err(e) => Err(format!("{e:#}")),
+            })
+            .collect()
+    }
+
+    /// Cancel every request of this batch still outstanding.
+    pub fn cancel(&self) {
+        self.handle.cancel();
     }
 }
 
@@ -143,20 +167,50 @@ impl BertServer {
         requests: &[Vec<i32>],
         policy: AllocPolicy,
     ) -> Result<BatchSubmit> {
-        if requests.is_empty() {
+        self.submit_parts(requests.iter().map(|r| (r.as_slice(), None)), policy)
+    }
+
+    /// [`serve_submit`](Self::serve_submit) with one [`CancelToken`] per
+    /// request: each sequence's job part carries its requester's token,
+    /// so a single timed-out request cancels exactly its own part — the
+    /// rest of the batch is untouched.
+    pub fn serve_submit_cancellable(
+        &self,
+        requests: &[(Vec<i32>, CancelToken)],
+        policy: AllocPolicy,
+    ) -> Result<BatchSubmit> {
+        self.submit_parts(
+            requests.iter().map(|(r, token)| (r.as_slice(), Some(token.clone()))),
+            policy,
+        )
+    }
+
+    /// Shared submit pipeline: one job part per sequence (carrying its
+    /// request's token, when there is one), handed to the scheduler via
+    /// [`Session::prun_submit`].
+    fn submit_parts<'a>(
+        &self,
+        requests: impl ExactSizeIterator<Item = (&'a [i32], Option<CancelToken>)>,
+        policy: AllocPolicy,
+    ) -> Result<BatchSubmit> {
+        let n = requests.len();
+        if n == 0 {
             bail!("empty batch");
         }
         let t0 = Instant::now();
         let parts = requests
-            .iter()
-            .map(|r| {
+            .map(|(r, token)| {
                 let (model, tensor) = self.single_part(r)?;
-                Ok(JobPart::new(model, vec![tensor]))
+                let part = JobPart::new(model, vec![tensor]);
+                Ok(match token {
+                    Some(t) => part.with_cancel(t),
+                    None => part,
+                })
             })
             .collect::<Result<Vec<_>>>()?;
         let handle =
             self.session.prun_submit(parts, PrunOptions { policy, ..Default::default() });
-        Ok(BatchSubmit { handle, t0, n: requests.len() })
+        Ok(BatchSubmit { handle, t0, n })
     }
 
     /// (model name, [1, bucket] tensor) for a single request.

@@ -1,0 +1,94 @@
+//! Cooperative task cancellation.
+//!
+//! A [`CancelToken`] is a cheap, clonable flag shared between whoever
+//! submitted a task (the serving edge: a timed-out router request, a
+//! dropped `PrunHandle`), the scheduler that queues it, and the executor
+//! that runs it. Setting the flag never interrupts anything by force —
+//! each layer polls it at its own safe points:
+//!
+//! - the scheduler's dispatcher removes cancelled tasks from the queue
+//!   before they ever take ledger cores;
+//! - an executor worker checks the token when it dequeues a job and
+//!   skips execution entirely if it is already cancelled;
+//! - the engine polls between its expensive steps (after JIT compile,
+//!   before the model run), so a task cancelled mid-pipeline stops at
+//!   the next seam instead of running to completion.
+//!
+//! Executors that skip or abort a cancelled task report it with the
+//! typed [`TaskCancelled`] error, which the scheduler maps to its own
+//! `SchedError::Cancelled` while releasing the task's cores — the
+//! accounting that keeps an abandoned request from burning the budget
+//! the paper's Listing 1 divides.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Shared cancellation flag. Cloning shares the flag; cancelling is
+/// idempotent and can never be undone.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation. Safe to call from any thread, any number
+    /// of times; observers see it at their next poll.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
+/// Typed error an executor returns when it skipped or aborted a task
+/// because its [`CancelToken`] was set. The scheduler downcasts to this
+/// to count the task as cancelled (not failed) and to surface
+/// `SchedError::Cancelled` through the submit handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskCancelled;
+
+impl fmt::Display for TaskCancelled {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "task cancelled")
+    }
+}
+
+impl std::error::Error for TaskCancelled {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clones_share_the_flag() {
+        let a = CancelToken::new();
+        let b = a.clone();
+        assert!(!a.is_cancelled());
+        b.cancel();
+        assert!(a.is_cancelled());
+        a.cancel(); // idempotent
+        assert!(b.is_cancelled());
+    }
+
+    #[test]
+    fn fresh_tokens_are_independent() {
+        let a = CancelToken::new();
+        let b = CancelToken::new();
+        a.cancel();
+        assert!(!b.is_cancelled());
+    }
+
+    #[test]
+    fn task_cancelled_is_a_typed_error() {
+        let e = anyhow::Error::new(TaskCancelled);
+        assert!(e.downcast_ref::<TaskCancelled>().is_some());
+        assert_eq!(e.to_string(), "task cancelled");
+    }
+}

@@ -14,6 +14,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use super::cancel::{CancelToken, TaskCancelled};
 use super::manifest::Manifest;
 use super::tensor::{Tensor, TensorData};
 
@@ -101,7 +102,31 @@ impl LocalEngine {
     /// Execute `model` on `inputs` (the non-weight inputs only; weights are
     /// appended automatically from the device-resident cache).
     pub fn execute(&mut self, model: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.execute_cancellable(model, inputs, &CancelToken::new())
+    }
+
+    /// [`execute`](Self::execute) with cooperative cancellation: the
+    /// token is polled at the execute path's seams — before (possibly
+    /// slow) JIT compilation and again before the model run — so a task
+    /// cancelled mid-pipeline stops at the next seam instead of running
+    /// to completion. Returns the typed [`TaskCancelled`] error, which
+    /// the scheduler maps to `SchedError::Cancelled` while releasing
+    /// the task's ledger cores.
+    pub fn execute_cancellable(
+        &mut self,
+        model: &str,
+        inputs: &[Tensor],
+        cancel: &CancelToken,
+    ) -> Result<Vec<Tensor>> {
+        if cancel.is_cancelled() {
+            return Err(anyhow::Error::new(TaskCancelled));
+        }
         self.ensure_compiled(model)?;
+        // The compile above can take hundreds of ms cold; re-poll before
+        // committing to the actual model run.
+        if cancel.is_cancelled() {
+            return Err(anyhow::Error::new(TaskCancelled));
+        }
         let entry = self.manifest.model(model)?;
         let n_user = entry.inputs.len()
             - entry

@@ -6,15 +6,19 @@
 //! - [`tensor`] — Send-able host tensors and Literal conversion.
 //! - [`local`] — per-thread engine (client, executable cache, weights).
 //! - [`pool`] — N executor threads; the unit of real parallelism.
+//! - [`cancel`] — cooperative cancellation tokens shared with the
+//!   scheduler and the serving edge.
 //!
 //! Python never runs at serving time: once `make artifacts` has produced
 //! the HLO text, the Rust binary is self-contained.
 
+pub mod cancel;
 pub mod local;
 pub mod manifest;
 pub mod pool;
 pub mod tensor;
 
+pub use cancel::{CancelToken, TaskCancelled};
 pub use local::LocalEngine;
 pub use manifest::{Manifest, ModelEntry};
 pub use pool::{ExecResult, ExecutorPool, ReplyFn};

@@ -26,6 +26,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use super::cancel::{CancelToken, TaskCancelled};
 use super::local::LocalEngine;
 use super::manifest::Manifest;
 use super::tensor::Tensor;
@@ -36,6 +37,9 @@ pub type ReplyFn = Box<dyn FnOnce(Result<ExecResult>) + Send + 'static>;
 pub struct ExecJob {
     pub model: String,
     pub inputs: Vec<Tensor>,
+    /// cooperative cancellation: checked when the job is dequeued and
+    /// polled by the engine between its expensive steps
+    pub cancel: CancelToken,
     pub reply: ReplyFn,
 }
 
@@ -84,11 +88,20 @@ impl ExecutorPool {
 
     /// Queue a job on a specific worker; `reply` fires on completion.
     /// If the worker is down (engine creation failed), `reply` fires
-    /// immediately with an error instead of panicking.
-    pub fn dispatch(&self, worker: usize, model: &str, inputs: Vec<Tensor>, reply: ReplyFn) {
+    /// immediately with an error instead of panicking. A job whose
+    /// `cancel` token fires before the worker reaches it is skipped
+    /// (reply: [`TaskCancelled`]) without touching the engine.
+    pub fn dispatch(
+        &self,
+        worker: usize,
+        model: &str,
+        inputs: Vec<Tensor>,
+        cancel: CancelToken,
+        reply: ReplyFn,
+    ) {
         let wid = worker % self.size;
         self.submitted.fetch_add(1, Ordering::Relaxed);
-        let job = ExecJob { model: model.to_string(), inputs, reply };
+        let job = ExecJob { model: model.to_string(), inputs, cancel, reply };
         if let Err(e) = self.workers[wid].tx.send(Msg::Run(job)) {
             if let Msg::Run(job) = e.0 {
                 (job.reply)(Err(anyhow::anyhow!("executor worker {wid} is down")));
@@ -104,6 +117,7 @@ impl ExecutorPool {
             wid,
             model,
             inputs,
+            CancelToken::new(),
             Box::new(move |result| {
                 // Receiver may have given up (timeout) — that's fine.
                 let _ = reply.send(result);
@@ -177,12 +191,20 @@ fn worker_loop(wid: usize, manifest: Arc<Manifest>, rx: Receiver<Msg>) {
                 let _ = reply.send(engine.warmup(&model));
             }
             Msg::Run(job) => {
+                // Cooperative cancellation: a task cancelled between
+                // admission and this dequeue is skipped outright — no
+                // compile, no execution. The typed reply still flows so
+                // the scheduler releases the task's ledger cores.
+                if job.cancel.is_cancelled() {
+                    (job.reply)(Err(anyhow::Error::new(TaskCancelled)));
+                    continue;
+                }
                 let t0 = Instant::now();
                 // A panic inside execute must still produce a reply:
                 // the scheduler's core ledger frees on completion, so a
                 // dropped reply would leak cores forever.
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    engine.execute(&job.model, &job.inputs)
+                    engine.execute_cancellable(&job.model, &job.inputs, &job.cancel)
                 }));
                 let result = match result {
                     Ok(r) => r.map(|outputs| ExecResult {

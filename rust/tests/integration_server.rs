@@ -100,12 +100,30 @@ fn full_protocol_round_trip() {
     assert!(resp.get("sched.completed").unwrap().as_i64().unwrap() >= 1);
     let busy = resp.get("sched.cores_busy").unwrap().as_i64().unwrap();
     assert!((0..=16).contains(&busy), "cores_busy {busy}");
+    // cancellation + per-priority queue observability is always present
+    assert_eq!(resp.get("sched.cancelled").unwrap().as_i64(), Some(0));
+    let qh = resp.get("sched.queue_depth_high").unwrap().as_i64().unwrap();
+    let qn = resp.get("sched.queue_depth_normal").unwrap().as_i64().unwrap();
+    let ql = resp.get("sched.queue_depth_low").unwrap().as_i64().unwrap();
+    let qd = resp.get("sched.queue_depth").unwrap().as_i64().unwrap();
+    assert_eq!(qh + qn + ql, qd, "per-priority gauges must sum to queue_depth");
+    // both halves of the embed pipeline are gauged: accumulated and
+    // flushed-but-unresolved
+    assert!(resp.get("counter.embed_pending").is_some());
+    assert!(resp.get("counter.embed_inflight").is_some());
 
     // errors are structured
     let resp = client.call(&obj(vec![("op", s("nope"))])).unwrap();
     assert!(resp.get("error").unwrap().as_str().unwrap().contains("unknown op"));
     let resp = client.call(&Json::parse("{\"op\":\"embed\"}").unwrap()).unwrap();
     assert!(resp.get("error").is_some());
+
+    // a negative OCR seed is rejected structurally, not wrapped
+    let resp = client
+        .call(&obj(vec![("op", s("ocr")), ("seed", num(-1.0)), ("boxes", num(2.0))]))
+        .unwrap();
+    let msg = resp.get("error").expect("negative seed must error").as_str().unwrap();
+    assert!(msg.contains("non-negative"), "unexpected error: {msg}");
 
     stop.stop();
     join.join().unwrap();

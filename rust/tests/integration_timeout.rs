@@ -1,0 +1,183 @@
+//! Router timeout path end to end over a mock scheduler — no PJRT
+//! artifacts needed, so this always runs. A stalled embed batch must:
+//!
+//! 1. return the structured `"request timed out"` error to the client,
+//! 2. bump the `request_timeouts` counter, and
+//! 3. cancel the batch's scheduler tasks, so `sched.cores_busy` returns
+//!    to 0 instead of the abandoned work occupying ledger cores for the
+//!    full (stalled) execution.
+//!
+//! This mirrors `ServerState::new`'s pipelined embed batcher exactly:
+//! the submitter tags one scheduler task per request with the request's
+//! [`CancelToken`], and `embed_with_timeout` (the function `embed` /
+//! `embed_tokens` route through) cancels that token on expiry.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dnc_serve::coordinator::{embed_with_timeout, Batcher, EmbedRequest};
+use dnc_serve::engine::{PartTask, SchedConfig, Scheduler, TaskRunner};
+use dnc_serve::metrics::Metrics;
+use dnc_serve::runtime::{CancelToken, ExecResult, ReplyFn, TaskCancelled, Tensor};
+
+/// "Executes" every task for 10 simulated seconds — far past any test
+/// timeout — unless its cancel token fires first (polled every 1ms).
+struct StallRunner;
+
+impl TaskRunner for StallRunner {
+    fn workers(&self) -> usize {
+        2
+    }
+
+    fn run_on(
+        &self,
+        worker: usize,
+        _model: &str,
+        _inputs: Vec<Tensor>,
+        cancel: CancelToken,
+        reply: ReplyFn,
+    ) {
+        std::thread::spawn(move || {
+            if cancel.is_cancelled() {
+                reply(Err(anyhow::Error::new(TaskCancelled)));
+                return;
+            }
+            for _ in 0..10_000 {
+                std::thread::sleep(Duration::from_millis(1));
+                if cancel.is_cancelled() {
+                    reply(Err(anyhow::Error::new(TaskCancelled)));
+                    return;
+                }
+            }
+            reply(Ok(ExecResult {
+                outputs: Vec::new(),
+                exec_time: Duration::from_secs(10),
+                worker,
+            }));
+        });
+    }
+}
+
+/// The router's embed pipeline over a mock scheduler: a pipelined
+/// batcher whose submitter enqueues one task per request, carrying the
+/// request's cancel token (what `ServerState::new` builds over
+/// `BertServer::serve_submit_cancellable`).
+fn stalling_embed_stack(
+    cores: usize,
+    threads_per_task: usize,
+) -> (Arc<Scheduler>, Batcher<EmbedRequest, Result<Vec<f32>, String>>) {
+    let sched = Scheduler::start(
+        SchedConfig { cores, aging: Duration::from_millis(10), backfill: true },
+        Arc::new(StallRunner),
+    );
+    let s2 = Arc::clone(&sched);
+    let batcher = Batcher::start_pipelined(
+        4,
+        Duration::from_millis(1),
+        move |requests: Vec<EmbedRequest>| {
+            let handles: Vec<_> = requests
+                .into_iter()
+                .map(|r| {
+                    s2.submit(
+                        PartTask::new("stall", Vec::new(), threads_per_task)
+                            .with_cancel(r.cancel),
+                    )
+                })
+                .collect();
+            Box::new(move || {
+                handles
+                    .into_iter()
+                    .map(|h| match h.wait() {
+                        Ok(_) => Ok(Vec::new()),
+                        Err(e) => Err(format!("{e:#}")),
+                    })
+                    .collect()
+            })
+        },
+    );
+    (sched, batcher)
+}
+
+#[test]
+fn timed_out_embed_returns_structured_error_and_cancels_its_task() {
+    let (sched, batcher) = stalling_embed_stack(2, 2);
+    let metrics = Metrics::new();
+
+    let t0 = Instant::now();
+    let resp =
+        embed_with_timeout(&batcher, &metrics, vec![1, 2, 3], Duration::from_millis(50));
+    // 1. structured timeout error, promptly
+    let msg = resp.get("error").expect("timeout must error").as_str().unwrap();
+    assert!(msg.contains("timed out"), "unexpected error: {msg}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "timeout path took {:?}",
+        t0.elapsed()
+    );
+    // 2. counted
+    assert_eq!(metrics.counter("request_timeouts").load(Ordering::Relaxed), 1);
+    // 3. the stalled task was cancelled: the scheduler must go fully
+    // idle (10s nominal execution, 5s drain budget — only cancellation
+    // makes this pass) and release every ledger core
+    let t0 = Instant::now();
+    while sched.stats().cancelled != 1 && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(
+        sched.drain(Duration::from_secs(5)),
+        "cancelled task did not release the scheduler: {:?}",
+        sched.stats()
+    );
+    let st = sched.stats();
+    assert_eq!(st.cores_busy, 0, "timed-out task still holds cores: {st:?}");
+    assert_eq!(st.inflight, 0);
+    assert_eq!(st.cancelled, 1, "{st:?}");
+    assert_eq!(st.completed, 0);
+    assert_eq!(
+        st.submitted,
+        st.completed + st.failed + st.deadline_rejected + st.cancelled,
+        "accounting invariant: {st:?}"
+    );
+}
+
+#[test]
+fn timed_out_embed_cancelled_while_queued_takes_no_cores() {
+    // One stalled request saturates the 2-core budget; the second times
+    // out while its task is still *queued* — it must be rejected from
+    // the queue without ever occupying cores or reaching a worker.
+    let (sched, batcher) = stalling_embed_stack(2, 2);
+    let metrics = Metrics::new();
+
+    // occupy the budget with a request nobody times out (yet)
+    let hog_cancel = CancelToken::new();
+    let hog_rx = batcher
+        .submit(EmbedRequest { ids: vec![9, 9], cancel: hog_cancel.clone() });
+    // wait until the hog's task actually holds the cores
+    let t0 = Instant::now();
+    while sched.stats().cores_busy != 2 && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(sched.stats().cores_busy, 2, "hog task never started");
+
+    let resp =
+        embed_with_timeout(&batcher, &metrics, vec![1, 2, 3], Duration::from_millis(50));
+    assert!(resp.get("error").is_some(), "queued request must time out: {resp:?}");
+    assert_eq!(metrics.counter("request_timeouts").load(Ordering::Relaxed), 1);
+
+    // the queued task must be swept without touching the ledger
+    let t0 = Instant::now();
+    while sched.stats().cancelled != 1 && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let st = sched.stats();
+    assert_eq!(st.cancelled, 1, "cancelled task never swept: {st:?}");
+    assert_eq!(st.queue_depth, 0, "cancelled task stuck in queue: {st:?}");
+    assert_eq!(st.cores_busy, 2, "only the hog may hold cores: {st:?}");
+
+    // release the hog too; everything must drain
+    hog_cancel.cancel();
+    assert!(sched.drain(Duration::from_secs(5)), "{:?}", sched.stats());
+    assert_eq!(sched.stats().cores_busy, 0);
+    drop(hog_rx);
+}

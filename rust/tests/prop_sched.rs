@@ -4,9 +4,14 @@
 //!
 //! - the core ledger **never oversubscribes** the budget, under random
 //!   part sizes/priorities and concurrent submitters;
-//! - **every** submitted task completes (or is deadline-rejected);
+//! - **every** submitted task completes (or is deadline-rejected or
+//!   cancelled) and the accounting invariant `submitted == completed +
+//!   failed + deadline_rejected + cancelled` holds at quiescence;
 //! - a large part is **never starved** past the aging bound by a stream
-//!   of backfilled small parts.
+//!   of backfilled small parts;
+//! - a **cancelled-while-queued task never reaches an executor worker**
+//!   and a cancelled-while-running task releases its cores at the next
+//!   cooperative poll — cancellation never leaks ledger cores.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -15,17 +20,39 @@ use std::time::{Duration, Instant};
 use dnc_serve::engine::{
     PartTask, Priority, SchedConfig, SchedError, Scheduler, TaskRunner,
 };
-use dnc_serve::runtime::{ExecResult, ReplyFn, Tensor};
+use dnc_serve::runtime::{CancelToken, ExecResult, ReplyFn, TaskCancelled, Tensor};
 use dnc_serve::util::prop::check;
 
 /// Executes tasks on short sleeper threads while tracking virtual-core
 /// occupancy. The model name encodes `"t<threads>-s<sleep_ms>"`, where
 /// `<threads>` is the *clamped* allocation, so the tracker mirrors the
-/// ledger exactly.
+/// ledger exactly. Cooperative: a task whose token is cancelled before
+/// it starts is skipped (never counted as a run), and the token is
+/// polled once per simulated millisecond while "executing".
 struct TrackingRunner {
     workers: usize,
+    probe: Probe,
+}
+
+/// Shared observation points into the mock runner.
+#[derive(Clone)]
+struct Probe {
+    /// virtual cores currently occupied by running tasks
     active: Arc<AtomicUsize>,
+    /// peak concurrent occupancy ever observed
     peak: Arc<AtomicUsize>,
+    /// tasks that actually began executing on a worker
+    runs: Arc<AtomicUsize>,
+}
+
+impl Probe {
+    fn new() -> Probe {
+        Probe {
+            active: Arc::new(AtomicUsize::new(0)),
+            peak: Arc::new(AtomicUsize::new(0)),
+            runs: Arc::new(AtomicUsize::new(0)),
+        }
+    }
 }
 
 fn model_name(threads: usize, sleep_ms: u64) -> String {
@@ -43,42 +70,72 @@ impl TaskRunner for TrackingRunner {
         self.workers
     }
 
-    fn run_on(&self, worker: usize, model: &str, _inputs: Vec<Tensor>, reply: ReplyFn) {
+    fn run_on(
+        &self,
+        worker: usize,
+        model: &str,
+        _inputs: Vec<Tensor>,
+        cancel: CancelToken,
+        reply: ReplyFn,
+    ) {
         let (threads, sleep_ms) = parse_model(model);
-        let active = Arc::clone(&self.active);
-        let peak = Arc::clone(&self.peak);
+        let probe = self.probe.clone();
         std::thread::spawn(move || {
-            let now = active.fetch_add(threads, Ordering::SeqCst) + threads;
-            peak.fetch_max(now, Ordering::SeqCst);
-            std::thread::sleep(Duration::from_millis(sleep_ms));
-            active.fetch_sub(threads, Ordering::SeqCst);
-            reply(Ok(ExecResult {
-                outputs: Vec::new(),
-                exec_time: Duration::from_millis(sleep_ms),
-                worker,
-            }));
+            if cancel.is_cancelled() {
+                // skipped before execution: not a run, no occupancy
+                reply(Err(anyhow::Error::new(TaskCancelled)));
+                return;
+            }
+            probe.runs.fetch_add(1, Ordering::SeqCst);
+            let now = probe.active.fetch_add(threads, Ordering::SeqCst) + threads;
+            probe.peak.fetch_max(now, Ordering::SeqCst);
+            let mut aborted = false;
+            for _ in 0..sleep_ms {
+                std::thread::sleep(Duration::from_millis(1));
+                if cancel.is_cancelled() {
+                    aborted = true;
+                    break;
+                }
+            }
+            probe.active.fetch_sub(threads, Ordering::SeqCst);
+            if aborted {
+                reply(Err(anyhow::Error::new(TaskCancelled)));
+            } else {
+                reply(Ok(ExecResult {
+                    outputs: Vec::new(),
+                    exec_time: Duration::from_millis(sleep_ms),
+                    worker,
+                }));
+            }
         });
     }
 }
 
-fn tracking_sched(
-    cfg: SchedConfig,
-) -> (Arc<Scheduler>, Arc<AtomicUsize>, Arc<AtomicUsize>) {
-    let active = Arc::new(AtomicUsize::new(0));
-    let peak = Arc::new(AtomicUsize::new(0));
-    let runner = TrackingRunner {
-        workers: 4,
-        active: Arc::clone(&active),
-        peak: Arc::clone(&peak),
-    };
-    (Scheduler::start(cfg, Arc::new(runner)), active, peak)
+fn tracking_sched(cfg: SchedConfig) -> (Arc<Scheduler>, Probe) {
+    let probe = Probe::new();
+    let runner = TrackingRunner { workers: 4, probe: probe.clone() };
+    (Scheduler::start(cfg, Arc::new(runner)), probe)
+}
+
+/// The accounting invariant every quiescent scheduler must satisfy.
+fn assert_accounting_balanced(sched: &Scheduler) {
+    assert!(sched.drain(Duration::from_secs(5)), "drain timed out");
+    let st = sched.stats();
+    assert_eq!(st.queue_depth, 0);
+    assert_eq!(st.inflight, 0);
+    assert_eq!(st.cores_busy, 0, "ledger must return to empty: {st:?}");
+    assert_eq!(
+        st.submitted,
+        st.completed + st.failed + st.deadline_rejected + st.cancelled,
+        "accounting invariant violated: {st:?}"
+    );
 }
 
 #[test]
 fn never_oversubscribes_and_everything_completes() {
     check(3, |g| {
         let capacity = *g.choice(&[4usize, 8, 16]);
-        let (sched, active, peak) = tracking_sched(SchedConfig {
+        let (sched, probe) = tracking_sched(SchedConfig {
             cores: capacity,
             aging: Duration::from_millis(10),
             backfill: true,
@@ -123,19 +180,17 @@ fn never_oversubscribes_and_everything_completes() {
         }
 
         assert!(
-            peak.load(Ordering::SeqCst) <= capacity,
+            probe.peak.load(Ordering::SeqCst) <= capacity,
             "oversubscribed: peak {} > capacity {capacity}",
-            peak.load(Ordering::SeqCst)
+            probe.peak.load(Ordering::SeqCst)
         );
-        assert!(sched.drain(Duration::from_secs(5)), "drain timed out");
-        assert_eq!(active.load(Ordering::SeqCst), 0);
+        assert_accounting_balanced(&sched);
+        assert_eq!(probe.active.load(Ordering::SeqCst), 0);
         let st = sched.stats();
         assert_eq!(st.completed, k as u64, "every task completes: {st:?}");
         assert_eq!(st.failed, 0);
         assert_eq!(st.deadline_rejected, 0);
-        assert_eq!(st.inflight, 0);
-        assert_eq!(st.queue_depth, 0);
-        assert_eq!(st.cores_busy, 0, "ledger must return to empty: {st:?}");
+        assert_eq!(st.cancelled, 0);
     });
 }
 
@@ -146,7 +201,7 @@ fn large_part_never_starved_past_aging_bound() {
     // still be admitted once the aging bound passes.
     let capacity = 4;
     let aging = Duration::from_millis(25);
-    let (sched, _active, peak) = tracking_sched(SchedConfig {
+    let (sched, probe) = tracking_sched(SchedConfig {
         cores: capacity,
         aging,
         backfill: true,
@@ -176,7 +231,7 @@ fn large_part_never_starved_past_aging_bound() {
     }
     occupier.wait().unwrap();
 
-    assert!(peak.load(Ordering::SeqCst) <= capacity);
+    assert!(probe.peak.load(Ordering::SeqCst) <= capacity);
     let st = sched.stats();
     assert!(
         st.backfills >= 1,
@@ -188,7 +243,7 @@ fn large_part_never_starved_past_aging_bound() {
 #[test]
 fn deadline_rejection_is_typed_and_counted() {
     let capacity = 2;
-    let (sched, _active, _peak) = tracking_sched(SchedConfig {
+    let (sched, _probe) = tracking_sched(SchedConfig {
         cores: capacity,
         aging: Duration::from_millis(25),
         backfill: true,
@@ -209,6 +264,7 @@ fn deadline_rejection_is_typed_and_counted() {
     let st = sched.stats();
     assert_eq!(st.deadline_rejected, 1);
     assert_eq!(st.completed, 1);
+    assert_accounting_balanced(&sched);
 }
 
 #[test]
@@ -217,7 +273,7 @@ fn backfill_disabled_preserves_strict_fifo() {
     // semantics: a small part queued behind a non-fitting large part
     // waits even though it would fit.
     let capacity = 4;
-    let (sched, _active, _peak) = tracking_sched(SchedConfig {
+    let (sched, _probe) = tracking_sched(SchedConfig {
         cores: capacity,
         aging: Duration::from_millis(25),
         backfill: false,
@@ -236,4 +292,137 @@ fn backfill_disabled_preserves_strict_fifo() {
         large_done.queue
     );
     assert_eq!(sched.stats().backfills, 0);
+}
+
+#[test]
+fn cancelled_while_queued_never_reaches_a_worker() {
+    // Saturate the budget with one long blocker, queue tasks behind it,
+    // cancel them: none may ever start on a worker, all must settle
+    // with the typed Cancelled error, and the ledger must come back
+    // clean — the acceptance criterion for admission-side cancellation.
+    let capacity = 2;
+    let (sched, probe) = tracking_sched(SchedConfig {
+        cores: capacity,
+        aging: Duration::from_millis(10),
+        backfill: true,
+    });
+    let blocker = sched.submit(PartTask::new(model_name(2, 40), Vec::new(), 2));
+    std::thread::sleep(Duration::from_millis(5)); // blocker admitted
+    let queued: Vec<_> = (0..3)
+        .map(|_| sched.submit(PartTask::new(model_name(1, 5), Vec::new(), 1)))
+        .collect();
+    for h in &queued {
+        h.cancel();
+    }
+    for h in queued {
+        let err = h.wait().unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SchedError>(),
+            Some(&SchedError::Cancelled),
+            "want typed cancellation, got: {err:#}"
+        );
+    }
+    blocker.wait().unwrap();
+    assert_accounting_balanced(&sched);
+    assert_eq!(
+        probe.runs.load(Ordering::SeqCst),
+        1,
+        "cancelled queued tasks must never reach a worker"
+    );
+    let st = sched.stats();
+    assert_eq!(st.cancelled, 3);
+    assert_eq!(st.completed, 1);
+}
+
+#[test]
+fn cancelled_while_running_releases_its_cores() {
+    // A running task's cancel is cooperative: the mock runner polls the
+    // token every simulated millisecond, so the cores must come back
+    // long before the task's nominal 300ms duration.
+    let capacity = 4;
+    let (sched, probe) = tracking_sched(SchedConfig {
+        cores: capacity,
+        aging: Duration::from_millis(10),
+        backfill: true,
+    });
+    let h = sched.submit(PartTask::new(model_name(4, 300), Vec::new(), 4));
+    std::thread::sleep(Duration::from_millis(10)); // admitted + running
+    assert_eq!(probe.runs.load(Ordering::SeqCst), 1);
+    let t0 = Instant::now();
+    h.cancel();
+    let err = h.wait().unwrap_err();
+    assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::Cancelled));
+    assert!(
+        t0.elapsed() < Duration::from_millis(200),
+        "cancel did not stop the running task promptly: {:?}",
+        t0.elapsed()
+    );
+    assert_accounting_balanced(&sched);
+    assert_eq!(probe.active.load(Ordering::SeqCst), 0, "occupancy must drop");
+    assert_eq!(sched.stats().cancelled, 1);
+}
+
+#[test]
+fn accounting_invariant_under_random_cancellation() {
+    // Random mix of completing and cancelled tasks, cancelled at random
+    // points (some while queued, some mid-execution): at quiescence
+    // submitted == completed + failed + deadline_rejected + cancelled,
+    // every handle settles, and no virtual core stays occupied.
+    check(3, |g| {
+        let capacity = *g.choice(&[2usize, 4, 8]);
+        let (sched, probe) = tracking_sched(SchedConfig {
+            cores: capacity,
+            aging: Duration::from_millis(10),
+            backfill: true,
+        });
+        let k = g.usize_in(15, 30);
+        let mut handles = Vec::with_capacity(k);
+        let mut want_cancel = Vec::with_capacity(k);
+        for _ in 0..k {
+            let threads = g.usize_in(1, capacity);
+            let ms = g.usize_in(1, 6) as u64;
+            let h = sched.submit(PartTask::new(
+                model_name(threads, ms),
+                Vec::new(),
+                threads,
+            ));
+            want_cancel.push(g.bool());
+            handles.push(h);
+        }
+        let mut cancelled_req = 0u64;
+        for (h, &c) in handles.iter().zip(&want_cancel) {
+            if c {
+                h.cancel();
+                cancelled_req += 1;
+            }
+        }
+        let (mut ok, mut cancelled_seen) = (0u64, 0u64);
+        for h in handles {
+            match h.wait() {
+                Ok(_) => ok += 1,
+                Err(e) => {
+                    assert_eq!(
+                        e.downcast_ref::<SchedError>(),
+                        Some(&SchedError::Cancelled),
+                        "only cancellation errors expected: {e:#}"
+                    );
+                    cancelled_seen += 1;
+                }
+            }
+        }
+        assert_accounting_balanced(&sched);
+        assert_eq!(probe.active.load(Ordering::SeqCst), 0);
+        let st = sched.stats();
+        assert_eq!(st.submitted, k as u64);
+        assert_eq!(st.completed, ok, "handle view and counters agree: {st:?}");
+        assert_eq!(st.cancelled, cancelled_seen);
+        assert_eq!(st.failed, 0);
+        // a cancel request may lose the race with completion, but never
+        // the other way around
+        assert!(
+            cancelled_seen <= cancelled_req,
+            "cancelled {cancelled_seen} > requested {cancelled_req}"
+        );
+        assert_eq!(ok + cancelled_seen, k as u64, "every handle settles");
+    });
 }
