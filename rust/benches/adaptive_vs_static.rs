@@ -1,0 +1,53 @@
+//! E12: static size-proportional vs profiled-adaptive core allocation
+//! on the fig-8 long/short mixed workload — with **misleading sizes**
+//! (the costly part declares a small input), the exact case the paper's
+//! §6 future-work names: "the weight of a work chunk does not correlate
+//! linearly with its size".
+//!
+//! Static (paper §3.1 default) weighs parts by declared input size and
+//! hands the 40ms part a single core; adaptive runs the §3.1 profiling
+//! phase online (engine::profile) and re-sizes by measured cost
+//! (engine::adaptive), giving the heavy part most of the budget. The
+//! acceptance bar — adaptive at least 10% better p95 — is asserted
+//! here and enforced per-PR by the `bench-gate` binary, which runs the
+//! same scenarios (this bench is the full-size member of the gate's
+//! scenario list; see rust/scripts/bench_gate.rs).
+//!
+//! Runs on the scaling-aware simulated runner (no PJRT artifacts
+//! needed), so it exercises the real dispatcher on any machine.
+
+use dnc_serve::bench::gate::{longshort_scenario, ScenarioResult};
+
+fn print_row(r: &ScenarioResult) {
+    println!(
+        "{:<22} {:>6} {:>14.1} {:>9.2} {:>9.2}",
+        r.name, r.jobs, r.throughput_jobs_s, r.p50_ms, r.p95_ms
+    );
+}
+
+fn main() {
+    const JOBS: usize = 60;
+    println!("# adaptive_vs_static — fig-8 long/short mix, misleading sizes, {JOBS} jobs each");
+    println!(
+        "{:<22} {:>6} {:>14} {:>9} {:>9}",
+        "variant", "jobs", "throughput/s", "p50 ms", "p95 ms"
+    );
+    let stat = longshort_scenario(false, JOBS);
+    print_row(&stat);
+    let adap = longshort_scenario(true, JOBS);
+    print_row(&adap);
+
+    let gain = 100.0 * (1.0 - adap.p95_ms / stat.p95_ms);
+    println!(
+        "\nprofiled adaptive allocation: {gain:.0}% better p95 ({:.2} -> {:.2} ms), {:.1}x throughput",
+        stat.p95_ms,
+        adap.p95_ms,
+        adap.throughput_jobs_s / stat.throughput_jobs_s
+    );
+    assert!(
+        adap.p95_ms <= 0.9 * stat.p95_ms,
+        "adaptive must be >=10% better p95: adaptive {:.2} ms vs static {:.2} ms",
+        adap.p95_ms,
+        stat.p95_ms
+    );
+}

@@ -73,6 +73,7 @@ fn main() {
             worker: usize,
             _model: &str,
             _inputs: Vec<dnc_serve::runtime::Tensor>,
+            _threads: usize,
             _cancel: dnc_serve::runtime::CancelToken,
             reply: ReplyFn,
         ) {

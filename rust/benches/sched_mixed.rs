@@ -30,7 +30,12 @@ fn main() {
         return;
     }
     let manifest = Arc::new(Manifest::load(&dir).unwrap());
-    let cfg = SchedConfig { cores: 16, aging: Duration::from_millis(50), backfill: true };
+    let cfg = SchedConfig {
+        cores: 16,
+        aging: Duration::from_millis(50),
+        backfill: true,
+        ..Default::default()
+    };
     let session = Arc::new(Session::with_config(manifest, cfg, 2).unwrap());
 
     let buckets = session.manifest().bert.seq_buckets.clone();

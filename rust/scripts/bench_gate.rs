@@ -1,0 +1,168 @@
+//! `bench-gate` — the CI bench-regression gate.
+//!
+//! Runs the artifact-free scheduler/adaptive smoke scenarios
+//! (`dnc_serve::bench::gate`), writes the results to `BENCH_pr.json`,
+//! and compares them against the checked-in `BENCH_baseline.json`:
+//! a scenario whose throughput drops (or p95 rises) beyond the
+//! tolerance fails the run — rebar-style recorded baselines keeping a
+//! performance-focused codebase honest.
+//!
+//! ```text
+//! bench-gate [--quick] [--out FILE] [--baseline FILE]
+//!            [--tolerance PCT] [--record]
+//! ```
+//!
+//! - `--quick`     smoke-sized job counts (what CI runs per PR)
+//! - `--out`       where to write the PR results (default BENCH_pr.json,
+//!                 resolved next to the baseline file)
+//! - `--baseline`  recorded baseline (default: BENCH_baseline.json in
+//!                 the current dir, then the parent — i.e. the repo
+//!                 root when invoked from rust/)
+//! - `--tolerance` default allowed drift in percent (15; a baseline
+//!                 scenario may override with its own "tolerance_pct")
+//! - `--record`    (re)write the baseline from this run instead of
+//!                 comparing — run on a quiet machine, then commit
+//!
+//! Exit codes: 0 pass/recorded, 1 regression (or the adaptive policy
+//! losing to static), 2 usage/environment error.
+
+use std::path::PathBuf;
+use std::process::exit;
+
+use dnc_serve::bench::gate;
+use dnc_serve::util::args::Args;
+use dnc_serve::util::json::Json;
+
+fn main() {
+    let args = Args::parse_env();
+    let quick = args.flag("quick");
+    let record = args.flag("record");
+    let tolerance = args.f64_or("tolerance", 15.0);
+    let baseline_path = match args.get("baseline") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            // Invoked from rust/ the trajectory files live one level up.
+            // An *existing* file wins in both modes — --record must
+            // overwrite the baseline CI compares against, not drop a
+            // fresh one in the crate dir.
+            let local = PathBuf::from("BENCH_baseline.json");
+            let parent = PathBuf::from("../BENCH_baseline.json");
+            if local.exists() {
+                local
+            } else if parent.exists() {
+                parent
+            } else {
+                local
+            }
+        }
+    };
+    let out_path = match args.get("out") {
+        Some(p) => PathBuf::from(p),
+        None => baseline_path.with_file_name("BENCH_pr.json"),
+    };
+    if let Err(e) = args.finish() {
+        eprintln!("error: {e:#}");
+        exit(2);
+    }
+
+    println!(
+        "# bench-gate ({} mode) — scheduler + adaptive-policy smoke scenarios",
+        if quick { "quick" } else { "full" }
+    );
+    let results = gate::run_all(quick);
+    println!(
+        "{:<22} {:>6} {:>14} {:>9} {:>9}",
+        "scenario", "jobs", "throughput/s", "p50 ms", "p95 ms"
+    );
+    for r in &results {
+        println!(
+            "{:<22} {:>6} {:>14.1} {:>9.2} {:>9.2}",
+            r.name, r.jobs, r.throughput_jobs_s, r.p50_ms, r.p95_ms
+        );
+    }
+    let pr_json = gate::results_to_json(&results);
+    if let Err(e) = std::fs::write(&out_path, pr_json.to_string()) {
+        eprintln!("error: writing {}: {e}", out_path.display());
+        exit(2);
+    }
+    println!("\nwrote {}", out_path.display());
+
+    // Self-relative acceptance criterion, independent of any baseline:
+    // on the misleading-size long/short workload, profiled core sizing
+    // must beat the static size-proportional split by >= 10% p95. In
+    // --record mode this only warns — recording must always be able to
+    // refresh a stale baseline.
+    let find = |name: &str| results.iter().find(|r| r.name == name);
+    if let (Some(st), Some(ad)) = (find("longshort_static"), find("longshort_adaptive")) {
+        if ad.p95_ms > 0.9 * st.p95_ms {
+            eprintln!(
+                "{}: adaptive p95 {:.2} ms not >=10% better than static {:.2} ms",
+                if record { "WARN" } else { "FAIL" },
+                ad.p95_ms,
+                st.p95_ms
+            );
+            if !record {
+                exit(1);
+            }
+        } else {
+            println!(
+                "adaptive beats static by {:.0}% p95 ({:.2} -> {:.2} ms)",
+                100.0 * (1.0 - ad.p95_ms / st.p95_ms),
+                st.p95_ms,
+                ad.p95_ms
+            );
+        }
+    }
+
+    if record {
+        // Preserve the hand-set per-scenario tolerance_pct overrides
+        // from the previous baseline — re-recording refreshes the
+        // numbers, not the noise model.
+        let mut recorded = pr_json.clone();
+        if let Ok(old) = Json::parse_file(&baseline_path) {
+            if let Json::Obj(root) = &mut recorded {
+                if let Some((_, Json::Obj(scen))) =
+                    root.iter_mut().find(|(k, _)| k == "scenarios")
+                {
+                    for (name, entry) in scen.iter_mut() {
+                        let tol = old
+                            .get("scenarios")
+                            .and_then(|s| s.get(name.as_str()))
+                            .and_then(|e| e.get("tolerance_pct"))
+                            .cloned();
+                        if let (Json::Obj(fields), Some(t)) = (entry, tol) {
+                            fields.push(("tolerance_pct".to_string(), t));
+                        }
+                    }
+                }
+            }
+        }
+        if let Err(e) = std::fs::write(&baseline_path, recorded.to_string()) {
+            eprintln!("error: writing {}: {e}", baseline_path.display());
+            exit(2);
+        }
+        println!("recorded baseline {}", baseline_path.display());
+        return;
+    }
+
+    let baseline = match Json::parse_file(&baseline_path) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!(
+                "error: no usable baseline at {} ({e:#}); record one with --record",
+                baseline_path.display()
+            );
+            exit(2);
+        }
+    };
+    let failures = gate::compare(&pr_json, &baseline, tolerance);
+    if failures.is_empty() {
+        println!("gate PASS: within tolerance of {}", baseline_path.display());
+    } else {
+        eprintln!("\ngate FAIL vs {}:", baseline_path.display());
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        exit(1);
+    }
+}

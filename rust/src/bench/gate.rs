@@ -1,0 +1,440 @@
+//! CI bench-gate scenarios: small, artifact-free benchmarks of the
+//! scheduler + adaptive policy, with machine-readable results.
+//!
+//! Modelled on rebar's recorded-baseline discipline: every scenario
+//! emits `(throughput, p50, p95)`; the `bench-gate` binary
+//! (`rust/scripts/bench_gate.rs`) writes them to `BENCH_pr.json`,
+//! compares against the checked-in `BENCH_baseline.json`, and fails CI
+//! on a regression beyond the tolerance. The scenarios run on a
+//! *scaling-aware mock runner* ([`SimRunner`]) so they exercise the
+//! real dispatcher (ledger, backfill/aging, adaptive recalibration)
+//! without PJRT artifacts — they run on any box, including CI.
+//!
+//! Scenario latencies are simulated sleeps, not CPU work, so results
+//! are stable across machines; per-scenario tolerances in the baseline
+//! absorb the residual timer jitter.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::engine::{
+    allocate_weighted, weights, AdaptiveConfig, AdaptivePolicy, AllocPolicy, PartTask,
+    ProfileStore, SchedConfig, Scheduler, TaskRunner,
+};
+use crate::runtime::{CancelToken, ExecResult, ReplyFn, TaskCancelled, Tensor};
+use crate::simcpu::ScalProfile;
+use crate::util::json::{num, obj, Json};
+use crate::util::stats::percentiles;
+
+/// Scalability profile of the simulated models: a small serial fraction
+/// and a mild per-thread coordination cost — the BERT-like shape whose
+/// optimum sits near the full budget (simcpu::calib documents the
+/// extended-Amdahl model).
+pub const SIM_PROFILE: ScalProfile = ScalProfile::new(0.05, 0.2);
+
+/// Virtual core budget every scenario schedules against (paper: 16).
+pub const SIM_CORES: usize = 16;
+
+/// Scaling-aware mock runner: a model named `"sim:<base_ms>"` executes
+/// for `SIM_PROFILE.time_ms(base_ms, threads)` wall-clock milliseconds
+/// (deadline-based sleep, so slice jitter does not accumulate), polling
+/// its cancel token about once per millisecond.
+pub struct SimRunner {
+    pub workers: usize,
+}
+
+/// `"sim:<base_ms>"` model name for [`SimRunner`].
+pub fn sim_model(base_ms: f64) -> String {
+    format!("sim:{base_ms}")
+}
+
+fn sim_base_ms(model: &str) -> f64 {
+    model
+        .strip_prefix("sim:")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+impl TaskRunner for SimRunner {
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn run_on(
+        &self,
+        worker: usize,
+        model: &str,
+        _inputs: Vec<Tensor>,
+        threads: usize,
+        cancel: CancelToken,
+        reply: ReplyFn,
+    ) {
+        let ms = SIM_PROFILE.time_ms(sim_base_ms(model), threads.max(1)).max(0.0);
+        std::thread::spawn(move || {
+            let deadline = Instant::now() + Duration::from_secs_f64(ms / 1e3);
+            loop {
+                if cancel.is_cancelled() {
+                    reply(Err(anyhow::Error::new(TaskCancelled)));
+                    return;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                std::thread::sleep((deadline - now).min(Duration::from_millis(1)));
+            }
+            reply(Ok(ExecResult {
+                outputs: Vec::new(),
+                exec_time: Duration::from_secs_f64(ms / 1e3),
+                worker,
+            }));
+        });
+    }
+}
+
+/// One scenario's measured outcome.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub name: String,
+    pub jobs: usize,
+    pub throughput_jobs_s: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+impl ScenarioResult {
+    fn from_walls(name: &str, walls_ms: &[f64], total_s: f64) -> ScenarioResult {
+        let ps = percentiles(walls_ms, &[50.0, 95.0]);
+        ScenarioResult {
+            name: name.to_string(),
+            jobs: walls_ms.len(),
+            throughput_jobs_s: walls_ms.len() as f64 / total_s.max(1e-9),
+            p50_ms: ps[0],
+            p95_ms: ps[1],
+        }
+    }
+}
+
+/// One job part of a scenario workload: a simulated model plus the
+/// *declared* input size the static (size-proportional) split sees.
+#[derive(Debug, Clone, Copy)]
+struct SimPart {
+    base_ms: f64,
+    size: usize,
+}
+
+/// The fig-8 long/short mixed job with **misleading sizes** — the §6
+/// motivation for profiled weights: the costly part *declares* a small
+/// input, so the size-proportional split starves it.
+/// 1 heavy part (40ms single-thread, size 16) + 3 light parts (5ms,
+/// size 256 each).
+const LONGSHORT: [SimPart; 4] = [
+    SimPart { base_ms: 40.0, size: 16 },
+    SimPart { base_ms: 5.0, size: 256 },
+    SimPart { base_ms: 5.0, size: 256 },
+    SimPart { base_ms: 5.0, size: 256 },
+];
+
+/// The fig-8 long/short mixed job with *honest* sizes (cost tracks
+/// size): 1 long (24ms, size 256) + 3 short (6ms, size 16).
+const HONEST_MIX: [SimPart; 4] = [
+    SimPart { base_ms: 24.0, size: 256 },
+    SimPart { base_ms: 6.0, size: 16 },
+    SimPart { base_ms: 6.0, size: 16 },
+    SimPart { base_ms: 6.0, size: 16 },
+];
+
+fn start_sched(deadline_running: Option<Duration>) -> Arc<Scheduler> {
+    Scheduler::start(
+        SchedConfig {
+            cores: SIM_CORES,
+            aging: Duration::from_millis(50),
+            backfill: true,
+            deadline_running,
+        },
+        Arc::new(SimRunner { workers: 4 }),
+    )
+}
+
+/// Submit one job (all parts with the given allocation) and block until
+/// every part finishes; returns the job wall time in ms.
+fn run_job(sched: &Scheduler, parts: &[SimPart], alloc: &[usize]) -> f64 {
+    let t0 = Instant::now();
+    let handles: Vec<_> = parts
+        .iter()
+        .zip(alloc.iter())
+        .map(|(p, &threads)| {
+            sched.submit(PartTask::new(sim_model(p.base_ms), Vec::new(), threads))
+        })
+        .collect();
+    for h in handles {
+        h.wait().expect("gate scenario part must complete");
+    }
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+/// The adaptive-vs-static comparison (acceptance criterion: profiled
+/// sizing beats the size-proportional split by >= 10% p95 on this
+/// workload). `adaptive = false` sizes parts by declared size;
+/// `adaptive = true` first runs the paper's §3.1 profiling phase (each
+/// model at one thread, enough samples to trust the window) and then
+/// sizes parts by measured cost via [`AdaptivePolicy::part_weights`].
+pub fn longshort_scenario(adaptive: bool, jobs: usize) -> ScenarioResult {
+    let sched = start_sched(None);
+    let parts = LONGSHORT;
+    let sizes: Vec<usize> = parts.iter().map(|p| p.size).collect();
+    let models: Vec<String> = parts.iter().map(|p| sim_model(p.base_ms)).collect();
+
+    let alloc = if adaptive {
+        let profiles = Arc::new(ProfileStore::new());
+        let policy =
+            AdaptivePolicy::new(Arc::clone(&profiles), AdaptiveConfig::default());
+        // Profiling phase: run every part once per round at 1 thread
+        // (prun-1), observing single-thread cost — repeated until the
+        // distribution window is trusted over the EWMA.
+        // (profiling time is excluded from the measurement window)
+        for _ in 0..crate::engine::profile::MIN_DISTRIBUTION_SAMPLES {
+            let handles: Vec<_> = parts
+                .iter()
+                .map(|p| sched.submit(PartTask::new(sim_model(p.base_ms), Vec::new(), 1)))
+                .collect();
+            for (h, m) in handles.into_iter().zip(models.iter()) {
+                let done = h.wait().expect("profiling part must complete");
+                profiles.observe(m, done.exec);
+            }
+        }
+        let keyed: Vec<(&str, usize)> = models
+            .iter()
+            .zip(sizes.iter())
+            .map(|(m, &s)| (m.as_str(), s))
+            .collect();
+        allocate_weighted(&policy.part_weights(&keyed), SIM_CORES, AllocPolicy::PrunDef)
+    } else {
+        allocate_weighted(&weights(&sizes), SIM_CORES, AllocPolicy::PrunDef)
+    };
+
+    let t0 = Instant::now();
+    let walls: Vec<f64> = (0..jobs).map(|_| run_job(&sched, &parts, &alloc)).collect();
+    let total_s = t0.elapsed().as_secs_f64();
+    let name = if adaptive { "longshort_adaptive" } else { "longshort_static" };
+    ScenarioResult::from_walls(name, &walls, total_s)
+}
+
+/// Serving-style smoke: concurrent submitters pushing honest-size mixed
+/// jobs through the dispatcher (ledger contention, backfill, queueing).
+pub fn sched_smoke_scenario(jobs_per_submitter: usize) -> ScenarioResult {
+    const SUBMITTERS: usize = 2;
+    let sched = start_sched(None);
+    let parts = HONEST_MIX;
+    let sizes: Vec<usize> = parts.iter().map(|p| p.size).collect();
+    let alloc = allocate_weighted(&weights(&sizes), SIM_CORES, AllocPolicy::PrunDef);
+
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for _ in 0..SUBMITTERS {
+        let sched = Arc::clone(&sched);
+        let alloc = alloc.clone();
+        joins.push(std::thread::spawn(move || {
+            (0..jobs_per_submitter)
+                .map(|_| run_job(&sched, &parts, &alloc))
+                .collect::<Vec<f64>>()
+        }));
+    }
+    let mut walls = Vec::new();
+    for j in joins {
+        walls.extend(j.join().expect("submitter thread"));
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    ScenarioResult::from_walls("sched_smoke", &walls, total_s)
+}
+
+/// Run the gate's full scenario list. `quick` shrinks job counts for
+/// the per-PR smoke run; the recorded baseline uses the same counts, so
+/// quick and full runs are not comparable to each other.
+pub fn run_all(quick: bool) -> Vec<ScenarioResult> {
+    let jobs = if quick { 20 } else { 60 };
+    vec![
+        sched_smoke_scenario(jobs / 2),
+        longshort_scenario(false, jobs),
+        longshort_scenario(true, jobs),
+    ]
+}
+
+// ---------------------------------------------------------------- JSON
+
+/// `{"scenarios": {"<name>": {"jobs": .., "throughput_jobs_s": ..,
+/// "p50_ms": .., "p95_ms": ..}}}`
+pub fn results_to_json(results: &[ScenarioResult]) -> Json {
+    let entries: Vec<(String, Json)> = results
+        .iter()
+        .map(|r| {
+            (
+                r.name.clone(),
+                obj(vec![
+                    ("jobs", num(r.jobs as f64)),
+                    ("throughput_jobs_s", num(r.throughput_jobs_s)),
+                    ("p50_ms", num(r.p50_ms)),
+                    ("p95_ms", num(r.p95_ms)),
+                ]),
+            )
+        })
+        .collect();
+    Json::Obj(vec![("scenarios".to_string(), Json::Obj(entries))])
+}
+
+/// Compare a PR run against the recorded baseline. `tolerance_pct` is
+/// the default allowed drift; a baseline scenario may override it with
+/// its own `"tolerance_pct"` field (noisier concurrent scenarios carry
+/// a wider one). Returns one human-readable line per regression; empty
+/// means the gate passes. Scenarios present in the baseline but missing
+/// from the PR run (or vice versa) are regressions too — a silently
+/// dropped benchmark must not pass the gate.
+pub fn compare(pr: &Json, baseline: &Json, tolerance_pct: f64) -> Vec<String> {
+    let mut failures = Vec::new();
+    let empty = Json::Obj(Vec::new());
+    let base_scen = baseline.get("scenarios").unwrap_or(&empty);
+    let pr_scen = pr.get("scenarios").unwrap_or(&empty);
+    let (Json::Obj(base_pairs), Json::Obj(pr_pairs)) = (base_scen, pr_scen) else {
+        return vec!["malformed bench JSON: missing 'scenarios' object".to_string()];
+    };
+    for (name, base) in base_pairs {
+        let Some(pr_entry) = pr_scen.get(name) else {
+            failures.push(format!("scenario '{name}' missing from PR run"));
+            continue;
+        };
+        let tol = base
+            .get("tolerance_pct")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(tolerance_pct)
+            / 100.0;
+        let metric = |j: &Json, key: &str| j.get(key).and_then(|v| v.as_f64());
+        // quick and full runs are not comparable (different job counts
+        // shift the percentiles and steady-state throughput): a jobs
+        // mismatch means the baseline was recorded in the other mode.
+        if let (Some(b), Some(p)) = (metric(base, "jobs"), metric(pr_entry, "jobs")) {
+            if b != p {
+                failures.push(format!(
+                    "{name}: job count mismatch (baseline {b}, PR {p}) — was the \
+                     baseline recorded without --quick (or vice versa)?"
+                ));
+                continue;
+            }
+        }
+        // throughput: lower is worse
+        if let (Some(b), Some(p)) =
+            (metric(base, "throughput_jobs_s"), metric(pr_entry, "throughput_jobs_s"))
+        {
+            if p < b * (1.0 - tol) {
+                failures.push(format!(
+                    "{name}: throughput regressed {p:.1} < {b:.1} jobs/s (-{:.0}% tolerance)",
+                    tol * 100.0
+                ));
+            }
+        }
+        // p95 latency: higher is worse
+        if let (Some(b), Some(p)) = (metric(base, "p95_ms"), metric(pr_entry, "p95_ms")) {
+            if p > b * (1.0 + tol) {
+                failures.push(format!(
+                    "{name}: p95 regressed {p:.1} > {b:.1} ms (+{:.0}% tolerance)",
+                    tol * 100.0
+                ));
+            }
+        }
+    }
+    for (name, _) in pr_pairs {
+        if base_scen.get(name).is_none() {
+            failures.push(format!(
+                "scenario '{name}' has no baseline — record one with --record"
+            ));
+        }
+    }
+    failures
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(name: &str, thr: f64, p95: f64) -> ScenarioResult {
+        ScenarioResult {
+            name: name.to_string(),
+            jobs: 10,
+            throughput_jobs_s: thr,
+            p50_ms: p95 / 2.0,
+            p95_ms: p95,
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let rs = vec![result("a", 100.0, 8.0), result("b", 50.0, 20.0)];
+        let j = results_to_json(&rs);
+        let back = Json::parse(&j.to_string()).unwrap();
+        let a = back.get("scenarios").unwrap().get("a").unwrap();
+        assert_eq!(a.get("jobs").unwrap().as_usize().unwrap(), 10);
+        assert!((a.get("p95_ms").unwrap().as_f64().unwrap() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compare_passes_within_tolerance() {
+        let base = results_to_json(&[result("a", 100.0, 10.0)]);
+        let pr = results_to_json(&[result("a", 90.0, 11.0)]);
+        assert!(compare(&pr, &base, 15.0).is_empty());
+    }
+
+    #[test]
+    fn compare_fails_on_regression() {
+        let base = results_to_json(&[result("a", 100.0, 10.0)]);
+        let slow = results_to_json(&[result("a", 100.0, 12.0)]);
+        let fails = compare(&slow, &base, 15.0);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("p95"), "{fails:?}");
+        let starved = results_to_json(&[result("a", 80.0, 10.0)]);
+        let fails = compare(&starved, &base, 15.0);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("throughput"), "{fails:?}");
+    }
+
+    #[test]
+    fn compare_fails_on_missing_scenarios() {
+        let base = results_to_json(&[result("a", 100.0, 10.0)]);
+        let pr = results_to_json(&[result("b", 100.0, 10.0)]);
+        let fails = compare(&pr, &base, 15.0);
+        assert_eq!(fails.len(), 2, "{fails:?}");
+    }
+
+    #[test]
+    fn per_scenario_tolerance_overrides_default() {
+        // baseline carries tolerance_pct = 50 for a noisy scenario
+        let mut base = results_to_json(&[result("noisy", 100.0, 10.0)]);
+        if let Json::Obj(pairs) = &mut base {
+            if let Json::Obj(scen) = &mut pairs[0].1 {
+                if let Json::Obj(entry) = &mut scen[0].1 {
+                    entry.push(("tolerance_pct".to_string(), num(50.0)));
+                }
+            }
+        }
+        let pr = results_to_json(&[result("noisy", 60.0, 14.0)]);
+        assert!(compare(&pr, &base, 15.0).is_empty());
+        let pr = results_to_json(&[result("noisy", 40.0, 14.0)]);
+        assert_eq!(compare(&pr, &base, 15.0).len(), 1);
+    }
+
+    #[test]
+    fn sim_runner_models_scaling() {
+        // more threads -> shorter simulated time, up to the overhead
+        let t1 = SIM_PROFILE.time_ms(40.0, 1);
+        let t12 = SIM_PROFILE.time_ms(40.0, 12);
+        assert!((t1 - 40.0).abs() < 1e-9);
+        assert!(t12 < 10.0, "{t12}");
+    }
+
+    #[test]
+    fn longshort_static_starves_the_heavy_part() {
+        // the declared sizes hand the heavy part a single core
+        let sizes: Vec<usize> = LONGSHORT.iter().map(|p| p.size).collect();
+        let alloc = allocate_weighted(&weights(&sizes), SIM_CORES, AllocPolicy::PrunDef);
+        assert_eq!(alloc[0], 1, "{alloc:?}");
+        assert_eq!(alloc.iter().sum::<usize>(), SIM_CORES);
+    }
+}

@@ -1,7 +1,9 @@
 //! Benchmark/figure-regeneration harness (one regenerator per paper
-//! table/figure; see DESIGN.md §6 for the experiment index).
+//! table/figure; see DESIGN.md §6 for the experiment index) plus the
+//! CI bench-gate scenarios ([`gate`]).
 
 pub mod figures;
+pub mod gate;
 pub mod table;
 
 pub use table::Table;

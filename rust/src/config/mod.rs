@@ -28,6 +28,12 @@ pub struct Config {
     pub max_wait_ms: u64,
     /// scheduler: max time the queue head may be bypassed by backfill
     pub aging_ms: u64,
+    /// adaptive mode: size parts by measured cost and re-derive the
+    /// aging bound from observed p95 part latency (engine::adaptive)
+    pub adaptive: bool,
+    /// scheduler: cancel a task still *executing* after this long and
+    /// reclaim its cores (0 = never)
+    pub deadline_running_ms: u64,
     /// router: max time a connection thread waits for a batched reply
     /// (on expiry the request's scheduler tasks are cancelled)
     pub request_timeout_ms: u64,
@@ -47,6 +53,8 @@ impl Default for Config {
             max_batch: 8,
             max_wait_ms: 5,
             aging_ms: 50,
+            adaptive: false,
+            deadline_running_ms: 0,
             request_timeout_ms: 30_000,
             drain_timeout_ms: 10_000,
             artifacts: crate::runtime::artifacts_dir(),
@@ -88,6 +96,12 @@ impl Config {
         if let Some(x) = v.get("aging_ms") {
             self.aging_ms = x.as_usize().context("aging_ms")? as u64;
         }
+        if let Some(x) = v.get("adaptive") {
+            self.adaptive = x.as_bool().context("adaptive")?;
+        }
+        if let Some(x) = v.get("deadline_running_ms") {
+            self.deadline_running_ms = x.as_usize().context("deadline_running_ms")? as u64;
+        }
         if let Some(x) = v.get("request_timeout_ms") {
             self.request_timeout_ms = x.as_usize().context("request_timeout_ms")? as u64;
         }
@@ -119,6 +133,9 @@ impl Config {
         self.max_batch = args.usize_or("max-batch", self.max_batch);
         self.max_wait_ms = args.u64_or("max-wait-ms", self.max_wait_ms);
         self.aging_ms = args.u64_or("aging-ms", self.aging_ms);
+        self.adaptive = self.adaptive || args.flag("adaptive");
+        self.deadline_running_ms =
+            args.u64_or("deadline-running-ms", self.deadline_running_ms);
         self.request_timeout_ms = args.u64_or("request-timeout-ms", self.request_timeout_ms);
         self.drain_timeout_ms = args.u64_or("drain-timeout-ms", self.drain_timeout_ms);
         if let Some(a) = args.get("artifacts") {
@@ -137,6 +154,8 @@ impl Config {
             cores: self.cores,
             aging: std::time::Duration::from_millis(self.aging_ms),
             backfill: true,
+            deadline_running: (self.deadline_running_ms > 0)
+                .then(|| std::time::Duration::from_millis(self.deadline_running_ms)),
         }
     }
 }
@@ -156,12 +175,35 @@ mod tests {
         assert!(c.workers >= 1);
         assert_eq!(c.policy, AllocPolicy::PrunDef);
         assert_eq!(c.aging_ms, 50);
+        assert!(!c.adaptive);
+        assert_eq!(c.deadline_running_ms, 0);
         assert_eq!(c.request_timeout_ms, 30_000);
         assert_eq!(c.drain_timeout_ms, 10_000);
         let s = c.sched();
         assert_eq!(s.cores, 16);
         assert_eq!(s.aging, std::time::Duration::from_millis(50));
         assert!(s.backfill);
+        assert_eq!(s.deadline_running, None);
+    }
+
+    #[test]
+    fn adaptive_knobs_from_file_and_cli() {
+        let dir = std::env::temp_dir().join(format!("dnc_cfg4_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"adaptive": true, "deadline_running_ms": 250}"#).unwrap();
+        let c = Config::from_file(&p).unwrap();
+        assert!(c.adaptive);
+        assert_eq!(c.deadline_running_ms, 250);
+        assert_eq!(
+            c.sched().deadline_running,
+            Some(std::time::Duration::from_millis(250))
+        );
+        // CLI: bare --adaptive flag + override of the running deadline
+        let mut c = Config::default();
+        c.apply_args(&args("serve --adaptive --deadline-running-ms 75")).unwrap();
+        assert!(c.adaptive);
+        assert_eq!(c.deadline_running_ms, 75);
     }
 
     #[test]

@@ -122,7 +122,10 @@ pub fn route(state: &ServerState, req: &Json) -> Json {
 
 /// Metrics snapshot plus live scheduler observability (`sched.*`):
 /// queue depth (total and per priority), core occupancy, backfill,
-/// deadline-rejection and cancellation counts.
+/// deadline-rejection and cancellation counts, the adaptive feedback
+/// loop (`sched.adaptive_resizes`, `sched.running_deadline_cancelled`,
+/// `sched.aging_effective_ms`) and the profile store it feeds from
+/// (`profile.p95_ms`, worst per-model windowed p95; `profile.models`).
 fn stats_json(state: &ServerState) -> Json {
     // gauges: embed requests accumulated but not yet flushed to the
     // scheduler (the batcher's own queue, upstream of sched.queue_depth)
@@ -131,9 +134,11 @@ fn stats_json(state: &ServerState) -> Json {
     state.metrics.set("embed_pending", state.embed_batcher.pending() as u64);
     state.metrics.set("embed_inflight", state.embed_batcher.in_flight() as u64);
     let mut snap = state.metrics.snapshot_json();
-    let st = state.bert.session().scheduler().stats();
+    let session = state.bert.session();
+    let st = session.scheduler().stats();
+    let profiles = session.profiles();
     if let Json::Obj(pairs) = &mut snap {
-        let fields: [(&str, f64); 15] = [
+        let fields: [(&str, f64); 20] = [
             ("sched.capacity", st.capacity as f64),
             ("sched.cores_busy", st.cores_busy as f64),
             ("sched.cores_idle", st.cores_idle as f64),
@@ -149,6 +154,11 @@ fn stats_json(state: &ServerState) -> Json {
             ("sched.backfills", st.backfills as f64),
             ("sched.deadline_rejected", st.deadline_rejected as f64),
             ("sched.cancelled", st.cancelled as f64),
+            ("sched.adaptive_resizes", st.adaptive_resizes as f64),
+            ("sched.running_deadline_cancelled", st.running_deadline_cancelled as f64),
+            ("sched.aging_effective_ms", st.aging_effective_ms),
+            ("profile.p95_ms", profiles.global_p95_ms().unwrap_or(0.0)),
+            ("profile.models", profiles.len() as f64),
         ];
         for (k, v) in fields {
             pairs.push((k.to_string(), num(v)));

@@ -1,0 +1,183 @@
+//! `engine::adaptive` — the profile→scheduler feedback loop.
+//!
+//! The paper's §6 names "more dynamic thread allocation strategies" as
+//! its first future-work item; §3.1 sketches profiling-derived part
+//! weights. [`ProfileStore`](super::profile::ProfileStore) measures
+//! per-model latency distributions — this module is the policy layer
+//! that *consumes* them:
+//!
+//! - **Profiled core sizing.** [`AdaptivePolicy::part_weights`] weighs
+//!   each job part by its measured cost (windowed p95 once enough fresh
+//!   samples exist) instead of raw input size, so the Listing-1 split
+//!   gives "cores according to expected computational cost" even when
+//!   cost does not correlate with size. `Session::prun_submit` consults
+//!   it whenever the session runs in adaptive mode.
+//! - **Adaptive aging bound.** [`AdaptivePolicy::aging_bound`] derives
+//!   the backfill aging bound from the observed worst per-model p95
+//!   part latency (`aging = aging_factor * p95`, clamped to
+//!   `[min_aging, max_aging]`) instead of the static `--aging-ms`: on a
+//!   fast workload the queue head waits less; on a slow one backfill
+//!   keeps the cores busy longer before draining. The dispatcher
+//!   recalibrates on a periodic tick (`recalibrate_every`).
+//! - **Running-task deadlines.** The scheduler's dispatcher enforces
+//!   `deadline_running` (`--deadline-running-ms`) over the in-flight
+//!   table as a thin loop over each task's `CancelToken`: a running
+//!   part past its deadline is cancelled cooperatively and its cores
+//!   reclaimed through the normal completion path — the cancellation
+//!   machinery turned from reactive (caller cancels) to proactive
+//!   (scheduler enforces). See `engine::sched::DispatchState`.
+//!
+//! The policy is deliberately stateless beyond its profile store: every
+//! decision is recomputed from the live distribution, so a workload
+//! shift (or staleness decay) feeds back within one recalibration tick.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::profile::ProfileStore;
+
+/// Tuning for the adaptive policy layer. All durations are wall-clock.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveConfig {
+    /// how often the dispatcher re-derives the aging bound from profiles
+    pub recalibrate_every: Duration,
+    /// aging bound = `aging_factor` * observed global p95 part latency
+    pub aging_factor: f64,
+    /// clamp floor for the derived aging bound
+    pub min_aging: Duration,
+    /// clamp ceiling for the derived aging bound
+    pub max_aging: Duration,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            recalibrate_every: Duration::from_millis(100),
+            // One bypassed queue head may wait roughly two typical part
+            // executions: one draining, one backfilled — the same "aging
+            // + drain of running work" budget the static default models,
+            // now sized from measurement instead of a constant.
+            aging_factor: 2.0,
+            min_aging: Duration::from_millis(5),
+            max_aging: Duration::from_millis(1000),
+        }
+    }
+}
+
+/// Profile-driven scheduling policy shared by the session (core sizing)
+/// and the scheduler's dispatcher (aging recalibration).
+pub struct AdaptivePolicy {
+    profiles: Arc<ProfileStore>,
+    cfg: AdaptiveConfig,
+}
+
+impl AdaptivePolicy {
+    pub fn new(profiles: Arc<ProfileStore>, cfg: AdaptiveConfig) -> AdaptivePolicy {
+        assert!(cfg.aging_factor > 0.0, "aging_factor must be positive");
+        assert!(cfg.min_aging <= cfg.max_aging, "aging clamp inverted");
+        AdaptivePolicy { profiles, cfg }
+    }
+
+    pub fn config(&self) -> &AdaptiveConfig {
+        &self.cfg
+    }
+
+    pub fn profiles(&self) -> &Arc<ProfileStore> {
+        &self.profiles
+    }
+
+    /// Measured-cost relative weights for `(model, size)` parts: the
+    /// profiled latency distribution where known (p95 once the window
+    /// has enough fresh samples), size-proportional fallback otherwise.
+    /// Feed the result to `allocate_weighted` — the Listing-1 budget
+    /// invariants (every part >= 1 core, total == C when k <= C) hold
+    /// for any weight vector, so adaptive sizing can never oversubscribe.
+    pub fn part_weights(&self, parts: &[(&str, usize)]) -> Vec<f64> {
+        self.profiles.weights(parts)
+    }
+
+    /// Backfill aging bound derived from the observed worst per-model
+    /// p95 part latency; `fallback` (the static `--aging-ms`) until
+    /// anything has been profiled.
+    pub fn aging_bound(&self, fallback: Duration) -> Duration {
+        match self.profiles.global_p95_ms() {
+            None => fallback,
+            Some(p95_ms) => {
+                let derived = Duration::from_secs_f64(
+                    (self.cfg.aging_factor * p95_ms / 1e3).max(0.0),
+                );
+                derived.clamp(self.cfg.min_aging, self.cfg.max_aging)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(cfg: AdaptiveConfig) -> AdaptivePolicy {
+        AdaptivePolicy::new(Arc::new(ProfileStore::new()), cfg)
+    }
+
+    #[test]
+    fn aging_bound_falls_back_until_profiled() {
+        let p = policy(AdaptiveConfig::default());
+        let fallback = Duration::from_millis(50);
+        assert_eq!(p.aging_bound(fallback), fallback);
+    }
+
+    #[test]
+    fn aging_bound_scales_with_p95_and_clamps() {
+        let cfg = AdaptiveConfig {
+            aging_factor: 2.0,
+            min_aging: Duration::from_millis(10),
+            max_aging: Duration::from_millis(100),
+            ..AdaptiveConfig::default()
+        };
+        let p = policy(cfg);
+        let fallback = Duration::from_millis(50);
+        // p95 ~ 20ms -> bound 40ms, inside the clamp
+        for _ in 0..10 {
+            p.profiles().observe("m", Duration::from_millis(20));
+        }
+        let b = p.aging_bound(fallback);
+        assert!(
+            (b.as_secs_f64() - 0.040).abs() < 0.005,
+            "want ~40ms, got {b:?}"
+        );
+        // p95 ~ 400ms -> derived 800ms, clamped to 100ms
+        for _ in 0..20 {
+            p.profiles().observe("m", Duration::from_millis(400));
+        }
+        assert_eq!(p.aging_bound(fallback), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn aging_bound_clamps_from_below() {
+        let cfg = AdaptiveConfig {
+            aging_factor: 1.0,
+            min_aging: Duration::from_millis(10),
+            max_aging: Duration::from_millis(100),
+            ..AdaptiveConfig::default()
+        };
+        let p = policy(cfg);
+        for _ in 0..10 {
+            p.profiles().observe("m", Duration::from_micros(100));
+        }
+        assert_eq!(p.aging_bound(Duration::from_millis(50)), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn part_weights_follow_measured_cost() {
+        let p = policy(AdaptiveConfig::default());
+        for _ in 0..10 {
+            p.profiles().observe("heavy", Duration::from_millis(40));
+            p.profiles().observe("light", Duration::from_millis(4));
+        }
+        // sizes say light is 16x bigger; measurement says heavy is 10x
+        // costlier — the policy must side with the measurement
+        let w = p.part_weights(&[("heavy", 16), ("light", 256)]);
+        assert!((w[0] / w[1] - 10.0).abs() < 0.5, "{w:?}");
+    }
+}

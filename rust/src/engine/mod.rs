@@ -4,10 +4,15 @@
 //!   baselines.
 //! - [`part`] — job parts and their size-based weights.
 //! - [`sched`] — the central core-aware scheduler: ledger admission
-//!   control, backfill + aging, priorities, deadlines, cooperative
-//!   cancellation.
+//!   control, backfill + aging, priorities, deadlines (admission and
+//!   running), cooperative cancellation.
+//! - [`profile`] — online per-model latency distributions (EWMA +
+//!   windowed p50/p95) observed from real executions.
+//! - [`adaptive`] — the profile→scheduler feedback loop: measured-cost
+//!   core sizing, adaptive aging bound, running-deadline policy.
 //! - [`session`] — `run` / `prun` as thin clients over the scheduler.
 
+pub mod adaptive;
 pub mod allocator;
 pub mod optimizer;
 pub mod part;
@@ -15,10 +20,11 @@ pub mod profile;
 pub mod sched;
 pub mod session;
 
+pub use adaptive::{AdaptiveConfig, AdaptivePolicy};
 pub use allocator::{allocate, allocate_weighted, weights, AllocPolicy};
 pub use optimizer::{allocate_optimal, OptPart};
 pub use part::{part_sizes, JobPart};
-pub use profile::ProfileStore;
+pub use profile::{ModelStats, ProfileStore};
 pub use sched::{
     PartTask, Priority, SchedConfig, SchedError, SchedStats, Scheduler, SubmitHandle,
     TaskDone, TaskRunner,

@@ -3,24 +3,135 @@
 //! adjust to the cases where the weight of a work chunk does not
 //! correlate linearly with its size".
 //!
-//! `ProfileStore` keeps an EWMA of per-model single-execution latency,
-//! observed from real `ExecResult`s. `PrunOptions::weights =
-//! WeightSource::Profiled` then weighs job parts by their *measured*
-//! cost instead of raw input size (the paper's §3.1 sketches exactly
-//! this: "assigning weight can be done with the help of a profiling
-//! phase ... which associates job parts of the same (or similar) shape
-//! to the relative weight obtained during profiling").
+//! `ProfileStore` keeps, per model, both an EWMA of single-execution
+//! latency *and* a bounded window of recent samples, observed from real
+//! `ExecResult`s. The window yields a latency **distribution** (p50/p95,
+//! sample counts) rather than a single point, which is what the adaptive
+//! policy layer (`engine::adaptive`) consumes: tail-aware part weights
+//! for the Listing-1 split, and an aging bound derived from observed p95
+//! part latency. `PrunOptions::weights = WeightSource::Profiled` weighs
+//! job parts by their *measured* cost instead of raw input size (the
+//! paper's §3.1 sketches exactly this: "assigning weight can be done
+//! with the help of a profiling phase ... which associates job parts of
+//! the same (or similar) shape to the relative weight obtained during
+//! profiling").
+//!
+//! Staleness: window samples older than [`STALE_AFTER`] are pruned on
+//! every observe/query, so a model whose behaviour shifted (recompiled,
+//! different bucket mix) decays back to the EWMA estimate instead of
+//! serving quantiles from another era.
+//!
+//! Locking: the store is shared across executor threads and the serving
+//! edge. A panicking executor must not poison the mutex for everyone
+//! else — all internal locking recovers from poison (the map is always
+//! in a consistent state: every mutation is a single insert/update).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
-use std::time::Duration;
+use std::collections::VecDeque;
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile_sorted;
 
 /// EWMA smoothing factor: new = alpha*obs + (1-alpha)*old.
 const ALPHA: f64 = 0.3;
 
+/// Bounded per-model sample window for the latency distribution.
+pub const WINDOW: usize = 128;
+
+/// Window samples older than this are pruned (staleness decay); the
+/// EWMA remains as the long-memory fallback.
+pub const STALE_AFTER: Duration = Duration::from_secs(60);
+
+/// Minimum window samples before quantiles are trusted over the EWMA
+/// (a 1-sample "p95" is just that sample, and a noisy one at that).
+pub const MIN_DISTRIBUTION_SAMPLES: usize = 5;
+
+/// Per-model profile: long-memory EWMA + recent-sample window.
+struct ModelProfile {
+    ewma_ms: f64,
+    /// (observed-at, latency-ms), oldest first, len <= WINDOW
+    window: VecDeque<(Instant, f64)>,
+    samples_total: u64,
+}
+
+impl ModelProfile {
+    fn new(ms: f64, now: Instant) -> ModelProfile {
+        let mut window = VecDeque::with_capacity(WINDOW);
+        window.push_back((now, ms));
+        ModelProfile { ewma_ms: ms, window, samples_total: 1 }
+    }
+
+    fn observe(&mut self, ms: f64, now: Instant) {
+        self.ewma_ms = ALPHA * ms + (1.0 - ALPHA) * self.ewma_ms;
+        if self.window.len() == WINDOW {
+            self.window.pop_front();
+        }
+        self.window.push_back((now, ms));
+        self.samples_total += 1;
+    }
+
+    fn prune_stale(&mut self, now: Instant) {
+        while let Some(&(t, _)) = self.window.front() {
+            if now.duration_since(t) > STALE_AFTER {
+                self.window.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Window samples, sorted ascending (one sort serves every quantile
+    /// a caller needs — `stats` reads p50 and p95 from the same buffer).
+    fn sorted_window(&self) -> Vec<f64> {
+        let mut xs: Vec<f64> = self.window.iter().map(|&(_, ms)| ms).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs
+    }
+
+    fn stats(&self) -> ModelStats {
+        let xs = self.sorted_window();
+        let (p50_ms, p95_ms) = if xs.is_empty() {
+            (self.ewma_ms, self.ewma_ms)
+        } else {
+            (percentile_sorted(&xs, 50.0), percentile_sorted(&xs, 95.0))
+        };
+        ModelStats {
+            ewma_ms: self.ewma_ms,
+            p50_ms,
+            p95_ms,
+            samples_window: self.window.len(),
+            samples_total: self.samples_total,
+        }
+    }
+
+    /// The cost estimate the allocator should weigh by: the windowed p95
+    /// once the distribution has enough fresh samples (tail latency is
+    /// what the Listing-1 split should budget for), the EWMA otherwise.
+    fn cost_ms(&self) -> f64 {
+        if self.window.len() >= MIN_DISTRIBUTION_SAMPLES {
+            percentile_sorted(&self.sorted_window(), 95.0)
+        } else {
+            self.ewma_ms
+        }
+    }
+}
+
+/// Point-in-time view of one model's latency profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelStats {
+    pub ewma_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    /// fresh (non-stale) samples currently in the window
+    pub samples_window: usize,
+    /// samples ever observed for this model
+    pub samples_total: u64,
+}
+
 #[derive(Default)]
 pub struct ProfileStore {
-    ewma_ms: Mutex<HashMap<String, f64>>,
+    models: Mutex<HashMap<String, ModelProfile>>,
 }
 
 impl ProfileStore {
@@ -28,39 +139,118 @@ impl ProfileStore {
         ProfileStore::default()
     }
 
+    /// Lock the model map, recovering from poison: a panicking executor
+    /// thread must not take down every unrelated session that profiles
+    /// through this store. Each mutation is a single insert/update, so
+    /// the map is consistent even if a holder panicked mid-`observe`.
+    fn guard(&self) -> MutexGuard<'_, HashMap<String, ModelProfile>> {
+        self.models.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
     /// Record an observed execution of `model`.
     pub fn observe(&self, model: &str, elapsed: Duration) {
         let ms = elapsed.as_secs_f64() * 1e3;
-        let mut map = self.ewma_ms.lock().unwrap();
-        map.entry(model.to_string())
-            .and_modify(|v| *v = ALPHA * ms + (1.0 - ALPHA) * *v)
-            .or_insert(ms);
+        let now = Instant::now();
+        let mut map = self.guard();
+        match map.get_mut(model) {
+            Some(p) => {
+                p.prune_stale(now);
+                p.observe(ms, now);
+            }
+            None => {
+                map.insert(model.to_string(), ModelProfile::new(ms, now));
+            }
+        }
     }
 
-    /// Current latency estimate for `model`, if any.
+    /// Current EWMA latency estimate for `model`, if any.
     pub fn estimate_ms(&self, model: &str) -> Option<f64> {
-        self.ewma_ms.lock().unwrap().get(model).copied()
+        self.guard().get(model).map(|p| p.ewma_ms)
+    }
+
+    /// Windowed p95 latency for `model` (EWMA fallback while the fresh
+    /// window is empty), if the model was ever observed.
+    pub fn p95_ms(&self, model: &str) -> Option<f64> {
+        let mut map = self.guard();
+        let now = Instant::now();
+        map.get_mut(model).map(|p| {
+            p.prune_stale(now);
+            p.stats().p95_ms
+        })
+    }
+
+    /// Full distribution snapshot for `model`, if ever observed.
+    pub fn stats(&self, model: &str) -> Option<ModelStats> {
+        let mut map = self.guard();
+        let now = Instant::now();
+        map.get_mut(model).map(|p| {
+            p.prune_stale(now);
+            p.stats()
+        })
+    }
+
+    /// Worst per-model windowed p95 across the models with *fresh*
+    /// (non-stale) samples — the "how long can one part plausibly run"
+    /// figure the adaptive aging bound is derived from. `None` until
+    /// something fresh exists. Deliberately NOT the per-model EWMA
+    /// fallback: a slow model that went idle must stop holding the
+    /// aging bound up once its window decays (the bound then returns
+    /// to the static default until live traffic re-profiles it).
+    pub fn global_p95_ms(&self) -> Option<f64> {
+        let mut map = self.guard();
+        let now = Instant::now();
+        map.values_mut()
+            .filter_map(|p| {
+                p.prune_stale(now);
+                if p.window.is_empty() {
+                    None
+                } else {
+                    Some(p.stats().p95_ms)
+                }
+            })
+            .fold(None, |acc, x| Some(acc.map_or(x, |a: f64| a.max(x))))
     }
 
     pub fn len(&self) -> usize {
-        self.ewma_ms.lock().unwrap().len()
+        self.guard().len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Relative weights for a list of (model, size) parts: profiled
-    /// latency where known, falling back to input size for unprofiled
-    /// models (scaled into the same ballpark via the mean ms/size ratio
-    /// of the profiled parts, so mixed batches stay sane).
+    /// Relative weights for a list of (model, size) parts: measured cost
+    /// (windowed p95 once [`MIN_DISTRIBUTION_SAMPLES`] fresh samples
+    /// exist, EWMA before that) where known, falling back to input size
+    /// for unprofiled models (scaled into the same ballpark via the mean
+    /// ms/size ratio of the profiled parts, so mixed batches stay sane).
     pub fn weights(&self, parts: &[(&str, usize)]) -> Vec<f64> {
-        let map = self.ewma_ms.lock().unwrap();
-        let known: Vec<(f64, usize)> = parts
+        let mut map = self.guard();
+        // One cost computation per *distinct* model: staleness applies
+        // to sizing like every other query path (a model idle past
+        // STALE_AFTER must not be weighed by its old-era distribution),
+        // and the window sort inside cost_ms runs once per model even
+        // when a job repeats the same model across many parts.
+        let now = Instant::now();
+        let mut cost_cache: HashMap<&str, Option<f64>> =
+            HashMap::with_capacity(parts.len());
+        let costs: Vec<Option<f64>> = parts
             .iter()
-            .filter_map(|(m, s)| map.get(*m).map(|&ms| (ms, *s)))
+            .map(|(m, _)| {
+                *cost_cache.entry(*m).or_insert_with(|| {
+                    map.get_mut(*m).map(|p| {
+                        p.prune_stale(now);
+                        p.cost_ms()
+                    })
+                })
+            })
             .collect();
         // ms per size unit among profiled parts (1.0 if none profiled)
+        let known: Vec<(f64, usize)> = parts
+            .iter()
+            .zip(costs.iter().copied())
+            .filter_map(|((_, s), c)| c.map(|ms| (ms, *s)))
+            .collect();
         let ratio = if known.is_empty() {
             1.0
         } else {
@@ -71,7 +261,8 @@ impl ProfileStore {
         };
         let raw: Vec<f64> = parts
             .iter()
-            .map(|(m, s)| map.get(*m).copied().unwrap_or(ratio * *s as f64).max(1e-9))
+            .zip(costs.iter().copied())
+            .map(|((_, s), c)| c.unwrap_or(ratio * *s as f64).max(1e-9))
             .collect();
         let total: f64 = raw.iter().sum();
         raw.into_iter().map(|w| w / total).collect()
@@ -81,6 +272,7 @@ impl ProfileStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn ewma_converges_to_observations() {
@@ -107,7 +299,48 @@ mod tests {
     fn unknown_model_none() {
         let p = ProfileStore::new();
         assert!(p.estimate_ms("nope").is_none());
+        assert!(p.p95_ms("nope").is_none());
+        assert!(p.stats("nope").is_none());
+        assert!(p.global_p95_ms().is_none());
         assert!(p.is_empty());
+    }
+
+    #[test]
+    fn window_quantiles_reflect_distribution() {
+        let p = ProfileStore::new();
+        // 19 fast + 1 slow: p50 stays at the fast mode, p95 sees the tail
+        for _ in 0..19 {
+            p.observe("m", Duration::from_millis(10));
+        }
+        p.observe("m", Duration::from_millis(100));
+        let st = p.stats("m").unwrap();
+        assert_eq!(st.samples_window, 20);
+        assert_eq!(st.samples_total, 20);
+        assert!(st.p50_ms < 15.0, "{st:?}");
+        assert!(st.p95_ms > 50.0, "{st:?}");
+        assert!(st.p95_ms <= 100.0, "{st:?}");
+    }
+
+    #[test]
+    fn window_is_bounded() {
+        let p = ProfileStore::new();
+        for _ in 0..(WINDOW + 50) {
+            p.observe("m", Duration::from_millis(5));
+        }
+        let st = p.stats("m").unwrap();
+        assert_eq!(st.samples_window, WINDOW);
+        assert_eq!(st.samples_total, (WINDOW + 50) as u64);
+    }
+
+    #[test]
+    fn global_p95_is_worst_model() {
+        let p = ProfileStore::new();
+        for _ in 0..MIN_DISTRIBUTION_SAMPLES {
+            p.observe("fast", Duration::from_millis(5));
+            p.observe("slow", Duration::from_millis(80));
+        }
+        let g = p.global_p95_ms().unwrap();
+        assert!((g - 80.0).abs() < 1.0, "{g}");
     }
 
     #[test]
@@ -120,6 +353,24 @@ mod tests {
         let w = p.weights(&[("cheap", 100), ("dear", 100)]);
         assert!((w[1] / w[0] - 4.0).abs() < 1e-6, "{w:?}");
         assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weights_become_tail_aware_with_enough_samples() {
+        // Same median, very different tails: once the window has enough
+        // samples the p95-based weights favour the tail-heavy model.
+        let p = ProfileStore::new();
+        for i in 0..20 {
+            p.observe("steady", Duration::from_millis(10));
+            // every 4th observation of "spiky" is a 90ms tail
+            let ms = if i % 4 == 0 { 90 } else { 10 };
+            p.observe("spiky", Duration::from_millis(ms));
+        }
+        let w = p.weights(&[("steady", 100), ("spiky", 100)]);
+        assert!(
+            w[1] > 2.0 * w[0],
+            "tail-heavy model must out-weigh the steady one: {w:?}"
+        );
     }
 
     #[test]
@@ -136,5 +387,27 @@ mod tests {
         let p = ProfileStore::new();
         let w = p.weights(&[("x", 30), ("y", 10)]);
         assert!((w[0] / w[1] - 3.0).abs() < 1e-6, "{w:?}");
+    }
+
+    #[test]
+    fn lock_poison_recovers() {
+        // Regression: a panicking thread holding the profile mutex used
+        // to poison it permanently — every later observe/estimate from
+        // unrelated sessions then panicked on `.unwrap()`. The store
+        // must shrug the poison off and keep serving.
+        let p = Arc::new(ProfileStore::new());
+        p.observe("m", Duration::from_millis(10));
+        let p2 = Arc::clone(&p);
+        let res = std::thread::spawn(move || {
+            let _g = p2.models.lock().unwrap();
+            panic!("poison the profile mutex");
+        })
+        .join();
+        assert!(res.is_err(), "the poisoning thread must have panicked");
+        p.observe("m", Duration::from_millis(20)); // must not panic
+        assert!(p.estimate_ms("m").is_some());
+        assert!(p.p95_ms("m").is_some());
+        assert_eq!(p.stats("m").unwrap().samples_total, 2);
+        let _ = p.weights(&[("m", 10)]);
     }
 }

@@ -45,6 +45,22 @@
 //!   ledger through the normal completion path. This is what lets the
 //!   serving edge (router timeouts, dropped `PrunHandle`s) stop paying
 //!   for work nobody will read, instead of abandoning it.
+//! - **Running-task deadlines**: with `deadline_running` set (globally
+//!   via `--deadline-running-ms` or per task), the dispatcher enforces a
+//!   wall-clock budget over the *in-flight* table too — a thin sweep
+//!   over each running task's [`CancelToken`]. A part still executing
+//!   past its budget (measured from launch) is cancelled cooperatively
+//!   and its cores reclaimed through the normal completion path: the
+//!   cancellation machinery turned from reactive (caller cancels) to
+//!   proactive (scheduler enforces). Counted separately as
+//!   `running_deadline_cancelled` (each such task is also counted in
+//!   `cancelled` when its executor acknowledges the token).
+//! - **Adaptive recalibration**: started with an
+//!   [`AdaptivePolicy`](super::adaptive::AdaptivePolicy), the dispatcher
+//!   re-derives the *effective* aging bound from observed part-latency
+//!   profiles on a periodic tick, replacing the static `--aging-ms`
+//!   (`engine::adaptive` documents the derivation). The live value is
+//!   exported as `aging_effective_ms`.
 //!
 //! Core accounting is unchanged in spirit from the old lease: a task
 //! allocated `c_i` threads occupies `c_i` entries of the ledger while it
@@ -62,6 +78,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use super::adaptive::AdaptivePolicy;
 use crate::runtime::{CancelToken, ExecResult, ExecutorPool, ReplyFn, TaskCancelled, Tensor};
 
 /// How often the dispatcher wakes to sweep queued tasks (deadline expiry
@@ -115,6 +132,9 @@ pub struct PartTask {
     pub priority: Priority,
     /// admission deadline: reject if still queued at this instant
     pub deadline: Option<Instant>,
+    /// running deadline: once launched, cancel if still executing after
+    /// this long (overrides the scheduler-wide `deadline_running`)
+    pub running_deadline: Option<Duration>,
     /// cooperative cancellation flag, shared with whoever may abandon
     /// this task (each task gets a private token unless one is attached)
     pub cancel: CancelToken,
@@ -128,6 +148,7 @@ impl PartTask {
             threads,
             priority: Priority::Normal,
             deadline: None,
+            running_deadline: None,
             cancel: CancelToken::new(),
         }
     }
@@ -139,6 +160,14 @@ impl PartTask {
 
     pub fn with_deadline(mut self, d: Instant) -> PartTask {
         self.deadline = Some(d);
+        self
+    }
+
+    /// Cap this task's *execution* time: once launched, the dispatcher
+    /// cancels it if it is still running after `d` (cores reclaimed at
+    /// the executor's next token poll).
+    pub fn with_running_deadline(mut self, d: Duration) -> PartTask {
+        self.running_deadline = Some(d);
         self
     }
 
@@ -222,15 +251,24 @@ pub struct SchedConfig {
     /// virtual core budget C (paper: 16)
     pub cores: usize,
     /// max time the queue head may be bypassed by backfill, measured
-    /// from the first bypass
+    /// from the first bypass (the *static* bound; an adaptive policy
+    /// re-derives the effective bound from observed part latencies)
     pub aging: Duration,
     /// allow small tasks to bypass a waiting larger task when they fit
     pub backfill: bool,
+    /// cancel any task still *executing* after this long (per-task
+    /// [`PartTask::running_deadline`] overrides; `None` = never)
+    pub deadline_running: Option<Duration>,
 }
 
 impl Default for SchedConfig {
     fn default() -> Self {
-        SchedConfig { cores: 16, aging: Duration::from_millis(50), backfill: true }
+        SchedConfig {
+            cores: 16,
+            aging: Duration::from_millis(50),
+            backfill: true,
+            deadline_running: None,
+        }
     }
 }
 
@@ -240,15 +278,19 @@ impl Default for SchedConfig {
 pub trait TaskRunner: Send + Sync + 'static {
     /// Number of independently-addressable workers.
     fn workers(&self) -> usize;
-    /// Run `model` on `worker`; must invoke `reply` exactly once. A
-    /// cooperative runner polls `cancel` at its safe points and replies
-    /// with [`TaskCancelled`] instead of executing (or finishing) a
-    /// cancelled task.
+    /// Run `model` on `worker`; must invoke `reply` exactly once.
+    /// `threads` is the ledger allocation the task occupies — the PJRT
+    /// CPU executable ignores it (single-threaded; occupancy only), but
+    /// scaling-aware runners (the simulated benches, mocks) use it to
+    /// model intra-op speedup. A cooperative runner polls `cancel` at
+    /// its safe points and replies with [`TaskCancelled`] instead of
+    /// executing (or finishing) a cancelled task.
     fn run_on(
         &self,
         worker: usize,
         model: &str,
         inputs: Vec<Tensor>,
+        threads: usize,
         cancel: CancelToken,
         reply: ReplyFn,
     );
@@ -264,6 +306,7 @@ impl TaskRunner for ExecutorPool {
         worker: usize,
         model: &str,
         inputs: Vec<Tensor>,
+        _threads: usize,
         cancel: CancelToken,
         reply: ReplyFn,
     ) {
@@ -291,6 +334,17 @@ pub struct SchedStats {
     pub backfills: u64,
     pub deadline_rejected: u64,
     pub cancelled: u64,
+    /// parts whose core request the adaptive policy changed away from
+    /// the size-proportional split (counted at submit by the session)
+    pub adaptive_resizes: u64,
+    /// running tasks the dispatcher's deadline sweep actually killed:
+    /// counted when the executor acknowledges the enforcement cancel,
+    /// so every one of these is also in `cancelled`, and a task whose
+    /// completion raced the sweep counts as completed instead
+    pub running_deadline_cancelled: u64,
+    /// the aging bound currently in force (static `aging`, or the
+    /// adaptive policy's latest derivation)
+    pub aging_effective_ms: f64,
 }
 
 #[derive(Default)]
@@ -301,6 +355,10 @@ struct Counters {
     backfills: AtomicU64,
     deadline_rejected: AtomicU64,
     cancelled: AtomicU64,
+    adaptive_resizes: AtomicU64,
+    running_deadline_cancelled: AtomicU64,
+    /// gauge, microseconds (set by the dispatcher each sync)
+    aging_effective_us: AtomicU64,
     queue_depth: AtomicUsize,
     queue_depth_high: AtomicUsize,
     queue_depth_normal: AtomicUsize,
@@ -338,6 +396,15 @@ struct Inflight {
     worker: usize,
     queue: Duration,
     backfilled: bool,
+    /// the running task's token, for dispatcher-side deadline enforcement
+    cancel: CancelToken,
+    /// cancel if still executing at this instant (running deadline)
+    kill_at: Option<Instant>,
+    /// the sweep cancelled this task's token; counted in
+    /// `running_deadline_cancelled` only once the executor acknowledges
+    /// (a completion may already be in flight when the sweep fires —
+    /// enforcement that lost that race must not count as a kill)
+    deadline_enforced: bool,
 }
 
 pub struct Scheduler {
@@ -351,9 +418,24 @@ pub struct Scheduler {
 impl Scheduler {
     /// Start the dispatcher thread over `runner`'s workers.
     pub fn start(cfg: SchedConfig, runner: Arc<dyn TaskRunner>) -> Arc<Scheduler> {
+        Scheduler::start_with_policy(cfg, runner, None)
+    }
+
+    /// Start with an adaptive policy: the dispatcher periodically
+    /// re-derives the effective aging bound from the policy's latency
+    /// profiles (see `engine::adaptive`). `None` keeps the static
+    /// `cfg.aging` for the scheduler's lifetime.
+    pub fn start_with_policy(
+        cfg: SchedConfig,
+        runner: Arc<dyn TaskRunner>,
+        policy: Option<Arc<AdaptivePolicy>>,
+    ) -> Arc<Scheduler> {
         assert!(cfg.cores >= 1, "scheduler needs at least one core");
         let (tx, rx) = channel::<Event>();
         let counters = Arc::new(Counters::default());
+        counters
+            .aging_effective_us
+            .store(cfg.aging.as_micros() as u64, Ordering::Relaxed);
         let state = DispatchState {
             cfg,
             counters: Arc::clone(&counters),
@@ -365,6 +447,10 @@ impl Scheduler {
             runner,
             drain_waiters: Vec::new(),
             tx: tx.clone(),
+            policy,
+            effective_aging: cfg.aging,
+            last_recalibration: Instant::now(),
+            armed_deadlines: 0,
         };
         let join = std::thread::Builder::new()
             .name("dnc-sched".into())
@@ -421,6 +507,15 @@ impl Scheduler {
         rx.recv_timeout(timeout).is_ok()
     }
 
+    /// Count parts whose core request the adaptive policy changed away
+    /// from the size-proportional split (called by `Session::prun_submit`
+    /// when it sizes a job adaptively).
+    pub(crate) fn note_adaptive_resizes(&self, n: u64) {
+        if n > 0 {
+            self.counters.adaptive_resizes.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
     pub fn stats(&self) -> SchedStats {
         let c = &self.counters;
         let busy = c.cores_busy.load(Ordering::Relaxed);
@@ -440,6 +535,11 @@ impl Scheduler {
             backfills: c.backfills.load(Ordering::Relaxed),
             deadline_rejected: c.deadline_rejected.load(Ordering::Relaxed),
             cancelled: c.cancelled.load(Ordering::Relaxed),
+            adaptive_resizes: c.adaptive_resizes.load(Ordering::Relaxed),
+            running_deadline_cancelled: c
+                .running_deadline_cancelled
+                .load(Ordering::Relaxed),
+            aging_effective_ms: c.aging_effective_us.load(Ordering::Relaxed) as f64 / 1e3,
         }
     }
 }
@@ -480,6 +580,15 @@ struct DispatchState {
     drain_waiters: Vec<Sender<()>>,
     /// clone handed to completion callbacks
     tx: Sender<Event>,
+    /// adaptive policy: recalibrates `effective_aging` from profiles
+    policy: Option<Arc<AdaptivePolicy>>,
+    /// the aging bound currently in force (== cfg.aging without a policy)
+    effective_aging: Duration,
+    last_recalibration: Instant,
+    /// in-flight tasks carrying a `kill_at` — kept as a count so the
+    /// per-event tick is O(1) in the common no-deadline configuration
+    /// instead of scanning the whole in-flight table
+    armed_deadlines: usize,
 }
 
 fn dispatcher_loop(rx: Receiver<Event>, mut st: DispatchState) {
@@ -490,14 +599,19 @@ fn dispatcher_loop(rx: Receiver<Event>, mut st: DispatchState) {
         }
         // Queued tasks need a clock even when no event arrives: deadlines
         // expire on their own, and the serving edge can cancel a token
-        // without sending a nudge (it may only hold the token).
-        let needs_tick = !shutting_down && !st.pending.is_empty();
+        // without sending a nudge (it may only hold the token). Running
+        // deadlines need the same clock over the in-flight table — even
+        // during shutdown, so a hung task cannot stall the drain past
+        // its budget.
+        let needs_tick =
+            (!shutting_down && !st.pending.is_empty()) || st.wants_running_sweep();
         let ev = if needs_tick {
             match rx.recv_timeout(SWEEP_TICK) {
                 Ok(ev) => ev,
                 Err(RecvTimeoutError::Timeout) => {
                     // A swept head may have been blocking admission:
                     // admit() sweeps first, then re-admits.
+                    st.tick();
                     st.admit();
                     st.sync_gauges();
                     st.notify_if_idle();
@@ -545,6 +659,10 @@ fn dispatcher_loop(rx: Receiver<Event>, mut st: DispatchState) {
                 }
             }
         }
+        // A steady event stream keeps recv_timeout from ever timing out,
+        // so the clock-driven work (running-deadline enforcement, aging
+        // recalibration) must also run on the event path.
+        st.tick();
         st.sync_gauges();
         st.notify_if_idle();
     }
@@ -646,7 +764,7 @@ impl DispatchState {
                 break;
             }
             let since = *head.bypassed_since.get_or_insert_with(Instant::now);
-            if since.elapsed() >= self.cfg.aging {
+            if since.elapsed() >= self.effective_aging {
                 break;
             }
             let fit = (1..self.pending.len())
@@ -690,15 +808,35 @@ impl DispatchState {
             .map(|(i, _)| i)
             .unwrap_or(0);
         self.worker_load[worker] += 1;
+        // Running deadline: per-task override, else the scheduler-wide
+        // default. The clock starts at launch — queue time is already
+        // policed by the admission deadline.
+        let kill_at = task
+            .running_deadline
+            .or(self.cfg.deadline_running)
+            .map(|d| Instant::now() + d);
+        if kill_at.is_some() {
+            self.armed_deadlines += 1;
+        }
         self.inflight.insert(
             id,
-            Inflight { reply, threads, worker, queue: submitted.elapsed(), backfilled },
+            Inflight {
+                reply,
+                threads,
+                worker,
+                queue: submitted.elapsed(),
+                backfilled,
+                cancel: task.cancel.clone(),
+                kill_at,
+                deadline_enforced: false,
+            },
         );
         let tx = self.tx.clone();
         self.runner.run_on(
             worker,
             &task.model,
             task.inputs,
+            threads,
             task.cancel,
             Box::new(move |result| {
                 let _ = tx.send(Event::Done { id, result });
@@ -706,9 +844,66 @@ impl DispatchState {
         );
     }
 
+    /// True if any in-flight task carries a running deadline — the
+    /// dispatcher then keeps a clock running even with an empty queue.
+    fn wants_running_sweep(&self) -> bool {
+        self.armed_deadlines > 0
+    }
+
+    /// Clock-driven work: enforce running deadlines over the in-flight
+    /// table and let the adaptive policy recalibrate the aging bound.
+    /// O(1) when no deadline is armed and no policy is attached — the
+    /// common static configuration pays nothing per event.
+    fn tick(&mut self) {
+        if self.armed_deadlines > 0 {
+            self.sweep_running();
+        }
+        self.recalibrate();
+    }
+
+    /// The ROADMAP's deadline-enforcer for *running* tasks: a thin loop
+    /// over the in-flight tasks' [`CancelToken`]s. A task executing past
+    /// its `kill_at` gets its token cancelled; the executor stops at its
+    /// next cooperative poll and the cores come back through the normal
+    /// completion path. The kill is *counted* there, in `complete` —
+    /// only when the executor acknowledges with `TaskCancelled` — so a
+    /// task whose completion was already in flight when the sweep fired
+    /// counts as completed, never as a deadline kill, and every
+    /// `running_deadline_cancelled` is also a `cancelled` by
+    /// construction. (With a shared request token, enforcement cancels
+    /// the whole request — a part overrunning its budget abandons work
+    /// its siblings were doing for the same caller, matching the
+    /// serving edge's timeout semantics.)
+    fn sweep_running(&mut self) {
+        let now = Instant::now();
+        for inf in self.inflight.values_mut() {
+            if let Some(kill_at) = inf.kill_at {
+                if now >= kill_at && !inf.deadline_enforced && !inf.cancel.is_cancelled()
+                {
+                    inf.cancel.cancel();
+                    inf.deadline_enforced = true;
+                }
+            }
+        }
+    }
+
+    /// Re-derive the effective aging bound from the adaptive policy's
+    /// latency profiles, at most once per `recalibrate_every`.
+    fn recalibrate(&mut self) {
+        let Some(policy) = &self.policy else { return };
+        if self.last_recalibration.elapsed() < policy.config().recalibrate_every {
+            return;
+        }
+        self.effective_aging = policy.aging_bound(self.cfg.aging);
+        self.last_recalibration = Instant::now();
+    }
+
     /// Return cores to the ledger and forward the result to the handle.
     fn complete(&mut self, id: u64, result: Result<ExecResult>) {
         let Some(inf) = self.inflight.remove(&id) else { return };
+        if inf.kill_at.is_some() {
+            self.armed_deadlines -= 1;
+        }
         self.free += inf.threads;
         debug_assert!(self.free <= self.cfg.cores, "ledger over-release");
         self.worker_load[inf.worker] = self.worker_load[inf.worker].saturating_sub(1);
@@ -726,9 +921,16 @@ impl DispatchState {
             }
             // An executor that skipped or aborted a cancelled task
             // reports the typed marker; surface the scheduler's own
-            // rejection and count it apart from real failures.
+            // rejection and count it apart from real failures. A kill
+            // the running-deadline sweep initiated is counted only now,
+            // at acknowledgement — see sweep_running.
             Err(e) if e.downcast_ref::<TaskCancelled>().is_some() => {
                 self.counters.cancelled.fetch_add(1, Ordering::Relaxed);
+                if inf.deadline_enforced {
+                    self.counters
+                        .running_deadline_cancelled
+                        .fetch_add(1, Ordering::Relaxed);
+                }
                 let _ = inf.reply.send(Err(anyhow::Error::new(SchedError::Cancelled)));
             }
             Err(e) => {
@@ -749,6 +951,9 @@ impl DispatchState {
             .cores_busy
             .store(self.cfg.cores - self.free, Ordering::Relaxed);
         self.counters.inflight.store(self.inflight.len(), Ordering::Relaxed);
+        self.counters
+            .aging_effective_us
+            .store(self.effective_aging.as_micros() as u64, Ordering::Relaxed);
     }
 
     fn notify_if_idle(&mut self) {
@@ -784,6 +989,7 @@ mod tests {
             worker: usize,
             model: &str,
             _inputs: Vec<Tensor>,
+            _threads: usize,
             cancel: CancelToken,
             reply: ReplyFn,
         ) {
@@ -940,6 +1146,54 @@ mod tests {
         assert_eq!(st.cancelled, 1);
         assert_eq!(st.cores_busy, 0, "cores must return on cancel: {st:?}");
         assert_eq!(st.inflight, 0);
+    }
+
+    #[test]
+    fn running_deadline_cancels_and_reclaims() {
+        // Scheduler-wide running deadline: a 300ms task must be stopped
+        // near the 20ms budget, typed as Cancelled, counted once in
+        // running_deadline_cancelled, and its cores returned.
+        let s = Scheduler::start(
+            SchedConfig {
+                cores: 2,
+                deadline_running: Some(Duration::from_millis(20)),
+                ..Default::default()
+            },
+            Arc::new(SleepRunner { workers: 2 }),
+        );
+        let t0 = Instant::now();
+        let h = s.submit(PartTask::new("sleep:300", Vec::new(), 2));
+        let err = h.wait().unwrap_err();
+        assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::Cancelled));
+        assert!(
+            t0.elapsed() < Duration::from_millis(200),
+            "running deadline did not interrupt: {:?}",
+            t0.elapsed()
+        );
+        assert!(s.drain(Duration::from_secs(5)));
+        let st = s.stats();
+        assert_eq!(st.running_deadline_cancelled, 1);
+        assert_eq!(st.cancelled, 1);
+        assert_eq!(st.cores_busy, 0, "cores must return: {st:?}");
+    }
+
+    #[test]
+    fn per_task_running_deadline_overrides_config() {
+        // No scheduler-wide deadline; the task carries its own.
+        let s = sched(2);
+        let t0 = Instant::now();
+        let h = s.submit(
+            PartTask::new("sleep:300", Vec::new(), 1)
+                .with_running_deadline(Duration::from_millis(20)),
+        );
+        let err = h.wait().unwrap_err();
+        assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::Cancelled));
+        assert!(t0.elapsed() < Duration::from_millis(200));
+        // an untimed sibling is untouched
+        let ok = s.submit(PartTask::new("sleep:1", Vec::new(), 1)).wait();
+        assert!(ok.is_ok());
+        assert!(s.drain(Duration::from_secs(5)));
+        assert_eq!(s.stats().running_deadline_cancelled, 1);
     }
 
     #[test]

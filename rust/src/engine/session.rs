@@ -30,6 +30,7 @@ use anyhow::Result;
 
 use crate::runtime::{ExecutorPool, Manifest, Tensor};
 
+use super::adaptive::{AdaptiveConfig, AdaptivePolicy};
 use super::allocator::{allocate_weighted, weights, AllocPolicy};
 use super::part::{part_sizes, JobPart};
 use super::profile::ProfileStore;
@@ -55,6 +56,10 @@ pub struct PrunOptions {
     /// admission deadline (from submit) for every part; parts still
     /// queued past it are rejected with `SchedError::DeadlineExceeded`
     pub deadline: Option<Duration>,
+    /// running deadline (from launch) for every part; a part still
+    /// executing past it is cancelled by the dispatcher and its cores
+    /// reclaimed (overrides the scheduler-wide `--deadline-running-ms`)
+    pub running_deadline: Option<Duration>,
 }
 
 impl Default for AllocPolicy {
@@ -197,6 +202,8 @@ pub struct Session {
     cores: usize,
     manifest: Arc<Manifest>,
     profiles: Arc<ProfileStore>,
+    /// adaptive mode: profiled core sizing + aging recalibration
+    adaptive: Option<Arc<AdaptivePolicy>>,
 }
 
 impl Session {
@@ -207,27 +214,53 @@ impl Session {
         Session::with_config(manifest, SchedConfig { cores, ..SchedConfig::default() }, workers)
     }
 
-    /// Full control over scheduler tuning (aging bound, backfill).
+    /// Full control over scheduler tuning (aging bound, backfill,
+    /// running deadline); static allocation policy.
     pub fn with_config(
         manifest: Arc<Manifest>,
         cfg: SchedConfig,
         workers: usize,
     ) -> Result<Session> {
+        Session::build(manifest, cfg, workers, None)
+    }
+
+    /// Adaptive mode (`--adaptive`): the session's latency profiles
+    /// feed back into scheduling — parts are sized by measured cost
+    /// whenever profiles exist (regardless of `PrunOptions::weights`),
+    /// and the dispatcher re-derives the aging bound from observed p95
+    /// part latency (see `engine::adaptive`).
+    pub fn with_adaptive(
+        manifest: Arc<Manifest>,
+        cfg: SchedConfig,
+        workers: usize,
+        acfg: AdaptiveConfig,
+    ) -> Result<Session> {
+        Session::build(manifest, cfg, workers, Some(acfg))
+    }
+
+    fn build(
+        manifest: Arc<Manifest>,
+        cfg: SchedConfig,
+        workers: usize,
+        acfg: Option<AdaptiveConfig>,
+    ) -> Result<Session> {
         let pool = Arc::new(ExecutorPool::new(Arc::clone(&manifest), workers)?);
         let runner: Arc<dyn TaskRunner> = Arc::clone(&pool) as Arc<dyn TaskRunner>;
-        let sched = Scheduler::start(cfg, runner);
-        Ok(Session {
-            sched,
-            pool,
-            cores: cfg.cores,
-            manifest,
-            profiles: Arc::new(ProfileStore::new()),
-        })
+        let profiles = Arc::new(ProfileStore::new());
+        let adaptive =
+            acfg.map(|a| Arc::new(AdaptivePolicy::new(Arc::clone(&profiles), a)));
+        let sched = Scheduler::start_with_policy(cfg, runner, adaptive.clone());
+        Ok(Session { sched, pool, cores: cfg.cores, manifest, profiles, adaptive })
     }
 
     /// Online latency profiles observed by this session.
     pub fn profiles(&self) -> &ProfileStore {
         &self.profiles
+    }
+
+    /// The adaptive policy, when the session runs in adaptive mode.
+    pub fn adaptive(&self) -> Option<&Arc<AdaptivePolicy>> {
+        self.adaptive.as_ref()
     }
 
     pub fn cores(&self) -> usize {
@@ -282,18 +315,35 @@ impl Session {
             };
         }
         let sizes = part_sizes(&parts);
-        let w = match opts.weights {
-            WeightSource::Size => weights(&sizes),
-            WeightSource::Profiled => {
-                let keyed: Vec<(&str, usize)> = parts
-                    .iter()
-                    .zip(sizes.iter())
-                    .map(|(p, &s)| (p.model.as_str(), s))
-                    .collect();
-                self.profiles.weights(&keyed)
-            }
+        // Adaptive mode sizes parts by measured cost whenever profiles
+        // exist — the paper's "cores according to expected computational
+        // cost" with the profiling phase done online. Otherwise the
+        // caller's weight source decides.
+        let profiled = self.adaptive.is_some() || opts.weights == WeightSource::Profiled;
+        let w = if profiled {
+            let keyed: Vec<(&str, usize)> = parts
+                .iter()
+                .zip(sizes.iter())
+                .map(|(p, &s)| (p.model.as_str(), s))
+                .collect();
+            self.profiles.weights(&keyed)
+        } else {
+            weights(&sizes)
         };
         let allocation = allocate_weighted(&w, self.cores, opts.policy);
+        // Observability: how many parts the profile feedback actually
+        // moved away from the size-proportional split. The shadow
+        // allocation is skipped while nothing is profiled yet (the
+        // weights are then identical by construction).
+        if self.adaptive.is_some() && !self.profiles.is_empty() {
+            let size_alloc = allocate_weighted(&weights(&sizes), self.cores, opts.policy);
+            let moved = allocation
+                .iter()
+                .zip(size_alloc.iter())
+                .filter(|(a, b)| a != b)
+                .count() as u64;
+            self.sched.note_adaptive_resizes(moved);
+        }
         let deadline = opts.deadline.map(|d| t0 + d);
         let models: Vec<String> = parts.iter().map(|p| p.model.clone()).collect();
         // Parts are *moved* into their tasks — the input tensors are
@@ -307,6 +357,7 @@ impl Session {
                 let mut task =
                     PartTask::new(model, inputs, threads).with_priority(opts.priority);
                 task.deadline = deadline;
+                task.running_deadline = opts.running_deadline;
                 if let Some(token) = cancel {
                     task = task.with_cancel(token);
                 }

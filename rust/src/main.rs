@@ -51,6 +51,7 @@ const HELP: &str = "dnc-serve — Divide-and-Conquer inference serving
 USAGE:
   dnc-serve serve   [--port P] [--cores C] [--workers W] [--policy POLICY]
                     [--max-batch N] [--max-wait-ms T] [--aging-ms T]
+                    [--adaptive] [--deadline-running-ms T]
                     [--request-timeout-ms T] [--drain-timeout-ms T]
                     [--config FILE]
   dnc-serve ocr     [--images N] [--variant base|prun-def|prun-1|prun-eq]
@@ -66,7 +67,16 @@ fn load_stack(cfg: &Config) -> Result<(Arc<Session>, OcrMeta)> {
         Manifest::load(&cfg.artifacts)
             .context("loading artifacts (run `make artifacts` first)")?,
     );
-    let session = Arc::new(Session::with_config(manifest, cfg.sched(), cfg.workers)?);
+    let session = if cfg.adaptive {
+        // Policy tuning (aging factor, clamps, recalibration period) is
+        // deliberately not a CLI surface yet: the defaults are derived
+        // from measurement, not workload-specific (engine::adaptive).
+        let acfg = dnc_serve::engine::AdaptiveConfig::default();
+        Session::with_adaptive(manifest, cfg.sched(), cfg.workers, acfg)?
+    } else {
+        Session::with_config(manifest, cfg.sched(), cfg.workers)?
+    };
+    let session = Arc::new(session);
     let meta = OcrMeta::load(&cfg.artifacts)?;
     Ok((session, meta))
 }
@@ -250,6 +260,14 @@ fn cmd_info(args: &Args) -> Result<()> {
         if sched.backfill { "on" } else { "off" },
         cfg.policy.name(),
         cfg.workers
+    );
+    println!(
+        "adaptive      : {}, running deadline {}",
+        if cfg.adaptive { "on (profiled core sizing + aging recalibration)" } else { "off" },
+        match sched.deadline_running {
+            Some(d) => format!("{} ms", d.as_millis()),
+            None => "none".to_string(),
+        }
     );
     if !manifest.models.is_empty() {
         bail_if_missing(&manifest, &cfg)?;

@@ -1,0 +1,120 @@
+//! End-to-end tests for the adaptive scheduling subsystem over the
+//! scaling-aware simulated runner (no PJRT artifacts needed — always
+//! runs). Pins the PR's acceptance criteria:
+//!
+//! - a running part exceeding `--deadline-running-ms` is **cancelled by
+//!   the dispatcher** and its cores reclaimed (proactive enforcement —
+//!   no caller involvement);
+//! - the dispatcher's effective aging bound **recalibrates** from
+//!   observed part latency when an adaptive policy is attached;
+//! - with adaptive (profiled) core sizing, the fig-8 long/short
+//!   misleading-size workload sees **>= 10% better p95** than the
+//!   static size-proportional split.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dnc_serve::bench::gate::{longshort_scenario, sim_model, SimRunner};
+use dnc_serve::engine::{
+    AdaptiveConfig, AdaptivePolicy, PartTask, ProfileStore, SchedConfig, SchedError,
+    Scheduler,
+};
+
+fn sim_sched(cfg: SchedConfig) -> Arc<Scheduler> {
+    Scheduler::start(cfg, Arc::new(SimRunner { workers: 2 }))
+}
+
+#[test]
+fn running_part_past_deadline_is_cancelled_and_cores_reclaimed() {
+    let sched = sim_sched(SchedConfig {
+        cores: 4,
+        deadline_running: Some(Duration::from_millis(50)),
+        ..Default::default()
+    });
+    // A part that would run ~500ms single-thread: the dispatcher must
+    // cancel it near the 50ms budget without anyone calling cancel().
+    let t0 = Instant::now();
+    let doomed = sched.submit(PartTask::new(sim_model(500.0), Vec::new(), 4));
+    let err = doomed.wait().unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<SchedError>(),
+        Some(&SchedError::Cancelled),
+        "running-deadline enforcement surfaces as Cancelled: {err:#}"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_millis(300),
+        "enforcement must interrupt execution: {:?}",
+        t0.elapsed()
+    );
+    // The reclaimed cores immediately serve new work.
+    let quick = sched.submit(PartTask::new(sim_model(2.0), Vec::new(), 4));
+    quick.wait().expect("reclaimed cores must serve the next task");
+    assert!(sched.drain(Duration::from_secs(5)));
+    let st = sched.stats();
+    assert_eq!(st.running_deadline_cancelled, 1, "{st:?}");
+    assert_eq!(st.cancelled, 1, "{st:?}");
+    assert_eq!(st.completed, 1, "{st:?}");
+    assert_eq!(st.cores_busy, 0, "cores must be reclaimed: {st:?}");
+    assert_eq!(st.inflight, 0, "{st:?}");
+    assert_eq!(
+        st.submitted,
+        st.completed + st.failed + st.deadline_rejected + st.cancelled,
+        "accounting must balance: {st:?}"
+    );
+}
+
+#[test]
+fn adaptive_aging_recalibrates_from_observed_latency() {
+    // Profiles observed at ~30ms; aging_factor 2 -> the dispatcher must
+    // derive an effective aging bound of ~60ms, replacing the 50ms
+    // static default (visible in stats as aging_effective_ms).
+    let profiles = Arc::new(ProfileStore::new());
+    for _ in 0..10 {
+        profiles.observe("m", Duration::from_millis(30));
+    }
+    let policy = Arc::new(AdaptivePolicy::new(
+        Arc::clone(&profiles),
+        AdaptiveConfig {
+            recalibrate_every: Duration::from_millis(1),
+            aging_factor: 2.0,
+            min_aging: Duration::from_millis(5),
+            max_aging: Duration::from_millis(1000),
+        },
+    ));
+    let sched = Scheduler::start_with_policy(
+        SchedConfig::default(),
+        Arc::new(SimRunner { workers: 2 }),
+        Some(policy),
+    );
+    assert!(
+        (sched.stats().aging_effective_ms - 50.0).abs() < 1.0,
+        "before any event the static bound holds: {:?}",
+        sched.stats().aging_effective_ms
+    );
+    // Any dispatcher activity past recalibrate_every re-derives it.
+    std::thread::sleep(Duration::from_millis(5));
+    sched
+        .submit(PartTask::new(sim_model(2.0), Vec::new(), 1))
+        .wait()
+        .unwrap();
+    assert!(sched.drain(Duration::from_secs(5)));
+    let eff = sched.stats().aging_effective_ms;
+    assert!(
+        (eff - 60.0).abs() < 5.0,
+        "aging bound must track 2 * observed p95 (~60ms), got {eff}"
+    );
+}
+
+#[test]
+fn adaptive_beats_static_p95_on_misleading_sizes() {
+    // Small-scale pin of the bench acceptance bar (the full-size run
+    // lives in benches/adaptive_vs_static.rs and the CI bench gate).
+    let stat = longshort_scenario(false, 8);
+    let adap = longshort_scenario(true, 8);
+    assert!(
+        adap.p95_ms <= 0.9 * stat.p95_ms,
+        "adaptive p95 {:.2} ms must be >=10% better than static {:.2} ms",
+        adap.p95_ms,
+        stat.p95_ms
+    );
+}

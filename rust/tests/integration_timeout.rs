@@ -35,6 +35,7 @@ impl TaskRunner for StallRunner {
         worker: usize,
         _model: &str,
         _inputs: Vec<Tensor>,
+        _threads: usize,
         cancel: CancelToken,
         reply: ReplyFn,
     ) {
@@ -68,7 +69,12 @@ fn stalling_embed_stack(
     threads_per_task: usize,
 ) -> (Arc<Scheduler>, Batcher<EmbedRequest, Result<Vec<f32>, String>>) {
     let sched = Scheduler::start(
-        SchedConfig { cores, aging: Duration::from_millis(10), backfill: true },
+        SchedConfig {
+            cores,
+            aging: Duration::from_millis(10),
+            backfill: true,
+            ..Default::default()
+        },
         Arc::new(StallRunner),
     );
     let s2 = Arc::clone(&sched);

@@ -11,24 +11,31 @@
 //!   of backfilled small parts;
 //! - a **cancelled-while-queued task never reaches an executor worker**
 //!   and a cancelled-while-running task releases its cores at the next
-//!   cooperative poll — cancellation never leaks ledger cores.
+//!   cooperative poll — cancellation never leaks ledger cores;
+//! - **adaptive core sizing never exceeds the Listing-1 budget** `C`,
+//!   for any profiled latency distribution;
+//! - the accounting invariant still balances when the dispatcher's
+//!   **running-deadline enforcer** cancels in-flight tasks;
+//! - the adaptive **aging bound monotonically tracks** injected latency
+//!   shifts (within its clamp).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dnc_serve::engine::{
-    PartTask, Priority, SchedConfig, SchedError, Scheduler, TaskRunner,
+    allocate_weighted, AdaptiveConfig, AdaptivePolicy, AllocPolicy, PartTask, Priority,
+    ProfileStore, SchedConfig, SchedError, Scheduler, TaskRunner,
 };
 use dnc_serve::runtime::{CancelToken, ExecResult, ReplyFn, TaskCancelled, Tensor};
 use dnc_serve::util::prop::check;
 
 /// Executes tasks on short sleeper threads while tracking virtual-core
-/// occupancy. The model name encodes `"t<threads>-s<sleep_ms>"`, where
-/// `<threads>` is the *clamped* allocation, so the tracker mirrors the
-/// ledger exactly. Cooperative: a task whose token is cancelled before
-/// it starts is skipped (never counted as a run), and the token is
-/// polled once per simulated millisecond while "executing".
+/// occupancy via the ledger-granted `threads` argument. The model name
+/// encodes the sleep as `"t<threads>-s<sleep_ms>"` (the `t` segment is
+/// kept for log readability). Cooperative: a task whose token is
+/// cancelled before it starts is skipped (never counted as a run), and
+/// the token is polled once per simulated millisecond while "executing".
 struct TrackingRunner {
     workers: usize,
     probe: Probe,
@@ -59,10 +66,9 @@ fn model_name(threads: usize, sleep_ms: u64) -> String {
     format!("t{threads}-s{sleep_ms}")
 }
 
-fn parse_model(model: &str) -> (usize, u64) {
-    let rest = model.strip_prefix('t').expect("mock model name");
-    let (t, s) = rest.split_once("-s").expect("mock model name");
-    (t.parse().unwrap(), s.parse().unwrap())
+fn parse_sleep(model: &str) -> u64 {
+    let (_, s) = model.split_once("-s").expect("mock model name");
+    s.parse().unwrap()
 }
 
 impl TaskRunner for TrackingRunner {
@@ -75,10 +81,11 @@ impl TaskRunner for TrackingRunner {
         worker: usize,
         model: &str,
         _inputs: Vec<Tensor>,
+        threads: usize,
         cancel: CancelToken,
         reply: ReplyFn,
     ) {
-        let (threads, sleep_ms) = parse_model(model);
+        let sleep_ms = parse_sleep(model);
         let probe = self.probe.clone();
         std::thread::spawn(move || {
             if cancel.is_cancelled() {
@@ -139,6 +146,7 @@ fn never_oversubscribes_and_everything_completes() {
             cores: capacity,
             aging: Duration::from_millis(10),
             backfill: true,
+            ..Default::default()
         });
         let k = g.usize_in(20, 40);
         // random thread asks, deliberately sometimes over capacity
@@ -205,6 +213,7 @@ fn large_part_never_starved_past_aging_bound() {
         cores: capacity,
         aging,
         backfill: true,
+        ..Default::default()
     });
 
     // Occupy one core for 60ms: the 4-core part cannot fit behind it.
@@ -247,6 +256,7 @@ fn deadline_rejection_is_typed_and_counted() {
         cores: capacity,
         aging: Duration::from_millis(25),
         backfill: true,
+        ..Default::default()
     });
     let blocker = sched.submit(PartTask::new(model_name(2, 40), Vec::new(), 2));
     std::thread::sleep(Duration::from_millis(5));
@@ -277,6 +287,7 @@ fn backfill_disabled_preserves_strict_fifo() {
         cores: capacity,
         aging: Duration::from_millis(25),
         backfill: false,
+        ..Default::default()
     });
     let occupier = sched.submit(PartTask::new(model_name(1, 30), Vec::new(), 1));
     std::thread::sleep(Duration::from_millis(5));
@@ -305,6 +316,7 @@ fn cancelled_while_queued_never_reaches_a_worker() {
         cores: capacity,
         aging: Duration::from_millis(10),
         backfill: true,
+        ..Default::default()
     });
     let blocker = sched.submit(PartTask::new(model_name(2, 40), Vec::new(), 2));
     std::thread::sleep(Duration::from_millis(5)); // blocker admitted
@@ -344,6 +356,7 @@ fn cancelled_while_running_releases_its_cores() {
         cores: capacity,
         aging: Duration::from_millis(10),
         backfill: true,
+        ..Default::default()
     });
     let h = sched.submit(PartTask::new(model_name(4, 300), Vec::new(), 4));
     std::thread::sleep(Duration::from_millis(10)); // admitted + running
@@ -374,6 +387,7 @@ fn accounting_invariant_under_random_cancellation() {
             cores: capacity,
             aging: Duration::from_millis(10),
             backfill: true,
+            ..Default::default()
         });
         let k = g.usize_in(15, 30);
         let mut handles = Vec::with_capacity(k);
@@ -425,4 +439,182 @@ fn accounting_invariant_under_random_cancellation() {
         );
         assert_eq!(ok + cancelled_seen, k as u64, "every handle settles");
     });
+}
+
+#[test]
+fn adaptive_sizing_never_exceeds_budget() {
+    // Property (adaptive core sizing): for ANY profiled latency
+    // distribution, the measured-cost weights fed through Listing 1
+    // produce an allocation where every part gets >= 1 core, no part
+    // exceeds the budget C, and (k <= C) the total is exactly C — so
+    // profile feedback can never oversubscribe the ledger. Verified
+    // both arithmetically and by running the allocation through the
+    // occupancy-tracking scheduler.
+    check(3, |g| {
+        let capacity = *g.choice(&[4usize, 8, 16]);
+        let profiles = Arc::new(ProfileStore::new());
+        let policy = AdaptivePolicy::new(Arc::clone(&profiles), AdaptiveConfig::default());
+        let n_models = g.usize_in(2, 5);
+        let models: Vec<String> = (0..n_models).map(|i| format!("m{i}")).collect();
+        for m in &models {
+            // wildly varying measured cost, some models sampled often
+            // enough for p95 weighting, some not, some never observed
+            let obs = g.usize_in(0, 12);
+            let ms = g.usize_in(1, 200) as u64;
+            for _ in 0..obs {
+                profiles.observe(m, Duration::from_millis(ms));
+            }
+        }
+        let k = g.usize_in(1, capacity + 4);
+        let parts: Vec<(String, usize)> = (0..k)
+            .map(|i| (models[i % n_models].clone(), g.usize_in(1, 4096)))
+            .collect();
+        let keyed: Vec<(&str, usize)> =
+            parts.iter().map(|(m, s)| (m.as_str(), *s)).collect();
+        let w = policy.part_weights(&keyed);
+        assert_eq!(w.len(), k);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9, "{w:?}");
+        let alloc = allocate_weighted(&w, capacity, AllocPolicy::PrunDef);
+        assert!(alloc.iter().all(|&c| c >= 1), "every part >= 1 core: {alloc:?}");
+        assert!(
+            alloc.iter().all(|&c| c <= capacity),
+            "no part may exceed the budget: {alloc:?}"
+        );
+        if k <= capacity {
+            assert_eq!(
+                alloc.iter().sum::<usize>(),
+                capacity,
+                "k <= C must allocate exactly C: {alloc:?}"
+            );
+        }
+        // and the ledger agrees: peak occupancy never exceeds C
+        let (sched, probe) = tracking_sched(SchedConfig {
+            cores: capacity,
+            aging: Duration::from_millis(10),
+            backfill: true,
+            ..Default::default()
+        });
+        let handles: Vec<_> = alloc
+            .iter()
+            .map(|&threads| {
+                sched.submit(PartTask::new(model_name(threads, 2), Vec::new(), threads))
+            })
+            .collect();
+        for h in handles {
+            h.wait().expect("task must complete");
+        }
+        assert!(
+            probe.peak.load(Ordering::SeqCst) <= capacity,
+            "adaptive allocation oversubscribed: peak {} > {capacity}",
+            probe.peak.load(Ordering::SeqCst)
+        );
+        assert_accounting_balanced(&sched);
+    });
+}
+
+#[test]
+fn accounting_holds_with_running_deadline_cancellations() {
+    // Property (running-deadline enforcer): with a scheduler-wide
+    // running deadline, long tasks are cancelled mid-flight by the
+    // dispatcher itself — and the accounting invariant still balances,
+    // with every enforcement visible in `running_deadline_cancelled`
+    // and no ledger core leaked.
+    check(3, |g| {
+        let capacity = *g.choice(&[2usize, 4]);
+        let (sched, probe) = tracking_sched(SchedConfig {
+            cores: capacity,
+            aging: Duration::from_millis(10),
+            backfill: true,
+            deadline_running: Some(Duration::from_millis(25)),
+        });
+        let k = g.usize_in(6, 12);
+        let mut expected_killed = 0u64;
+        let handles: Vec<_> = (0..k)
+            .map(|_| {
+                // short tasks finish inside the budget; long ones must
+                // be killed by the enforcer (25ms budget, 1ms polls)
+                let long = g.bool();
+                let ms = if long {
+                    expected_killed += 1;
+                    80
+                } else {
+                    2
+                };
+                let threads = g.usize_in(1, capacity);
+                sched.submit(PartTask::new(model_name(threads, ms), Vec::new(), threads))
+            })
+            .collect();
+        let (mut ok, mut cancelled) = (0u64, 0u64);
+        for h in handles {
+            match h.wait() {
+                Ok(_) => ok += 1,
+                Err(e) => {
+                    assert_eq!(
+                        e.downcast_ref::<SchedError>(),
+                        Some(&SchedError::Cancelled),
+                        "running-deadline kill must surface as Cancelled: {e:#}"
+                    );
+                    cancelled += 1;
+                }
+            }
+        }
+        assert_accounting_balanced(&sched);
+        assert_eq!(probe.active.load(Ordering::SeqCst), 0, "occupancy must drop");
+        let st = sched.stats();
+        assert_eq!(st.submitted, k as u64);
+        assert_eq!(st.completed, ok);
+        assert_eq!(st.cancelled, cancelled);
+        assert_eq!(
+            st.running_deadline_cancelled, expected_killed,
+            "every long task (and only those) is enforced: {st:?}"
+        );
+        assert_eq!(cancelled, expected_killed, "handle view agrees: {st:?}");
+    });
+}
+
+#[test]
+fn aging_bound_monotonically_tracks_latency_shifts() {
+    // Property (adaptive aging): as the injected part latency shifts
+    // upward, the derived aging bound never decreases; after the window
+    // refills at a lower latency it comes back down (staleness is the
+    // window cap here — samples are fresh, the *cap* evicts old ones).
+    let profiles = Arc::new(ProfileStore::new());
+    let policy = AdaptivePolicy::new(
+        Arc::clone(&profiles),
+        AdaptiveConfig {
+            aging_factor: 2.0,
+            min_aging: Duration::from_millis(1),
+            max_aging: Duration::from_millis(2000),
+            ..AdaptiveConfig::default()
+        },
+    );
+    let fallback = Duration::from_millis(50);
+    assert_eq!(policy.aging_bound(fallback), fallback, "unprofiled -> static");
+    let mut bounds = Vec::new();
+    for shift_ms in [5u64, 10, 20, 40, 80] {
+        // enough samples to dominate the 128-entry window's p95
+        for _ in 0..128 {
+            profiles.observe("m", Duration::from_millis(shift_ms));
+        }
+        bounds.push(policy.aging_bound(fallback));
+    }
+    for w in bounds.windows(2) {
+        assert!(
+            w[1] >= w[0],
+            "aging bound must not decrease under rising latency: {bounds:?}"
+        );
+    }
+    assert!(
+        bounds[4] >= 8 * bounds[0],
+        "16x latency shift must move the bound: {bounds:?}"
+    );
+    // and back down once the window is fully refreshed at low latency
+    for _ in 0..128 {
+        profiles.observe("m", Duration::from_millis(5));
+    }
+    let recovered = policy.aging_bound(fallback);
+    assert!(
+        recovered <= bounds[0] + Duration::from_millis(1),
+        "bound must recover after the shift clears: {recovered:?} vs {bounds:?}"
+    );
 }
