@@ -18,8 +18,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::engine::{
-    allocate_weighted, weights, AdaptiveConfig, AdaptivePolicy, AllocPolicy, PartTask,
-    ProfileStore, SchedConfig, Scheduler, TaskRunner,
+    allocate_weighted, weights, AdaptiveConfig, AdaptivePolicy, AllocPolicy, Budget,
+    PartTask, ProfileStore, SchedConfig, Scheduler, TaskRunner,
 };
 use crate::runtime::{CancelToken, ExecResult, ReplyFn, TaskCancelled, Tensor};
 use crate::simcpu::ScalProfile;
@@ -248,6 +248,42 @@ pub fn sched_smoke_scenario(jobs_per_submitter: usize) -> ScenarioResult {
     ScenarioResult::from_walls("sched_smoke", &walls, total_s)
 }
 
+/// The ROADMAP's "cancellation storm" (the serving edge giving up en
+/// masse): every job is one survivor part racing three doomed full-size
+/// hogs whose requesters cancel almost immediately. The survivor needs
+/// 8 of the 16 cores but the hogs hold 12, so it *must* wait for the
+/// cancellation machinery to reclaim cores. If cancellation stops being
+/// prompt — a queued sweep regression, a token poll that stopped
+/// interrupting, a ledger leak — the survivor queues behind ~1s of
+/// abandoned work per hog and p95 explodes past any tolerance. The
+/// survivor carries a generous request budget (never fires) so the
+/// dispatcher's armed-deadline sweep stays on the measured path.
+pub fn cancel_storm_scenario(jobs: usize) -> ScenarioResult {
+    let sched = start_sched(None);
+    let t0 = Instant::now();
+    let mut walls = Vec::with_capacity(jobs);
+    for _ in 0..jobs {
+        let tj = Instant::now();
+        let doomed: Vec<_> = (0..3)
+            .map(|_| sched.submit(PartTask::new(sim_model(1000.0), Vec::new(), 4)))
+            .collect();
+        let survivor = sched.submit(
+            PartTask::new(sim_model(8.0), Vec::new(), 8)
+                .with_budget(Budget::new(Duration::from_secs(5))),
+        );
+        std::thread::sleep(Duration::from_millis(2));
+        for h in &doomed {
+            h.cancel();
+        }
+        survivor.wait().expect("storm survivor must complete");
+        for h in doomed {
+            h.wait().expect_err("doomed storm parts must be cancelled");
+        }
+        walls.push(tj.elapsed().as_secs_f64() * 1e3);
+    }
+    ScenarioResult::from_walls("cancel_storm", &walls, t0.elapsed().as_secs_f64())
+}
+
 /// Run the gate's full scenario list. `quick` shrinks job counts for
 /// the per-PR smoke run; the recorded baseline uses the same counts, so
 /// quick and full runs are not comparable to each other.
@@ -257,6 +293,7 @@ pub fn run_all(quick: bool) -> Vec<ScenarioResult> {
         sched_smoke_scenario(jobs / 2),
         longshort_scenario(false, jobs),
         longshort_scenario(true, jobs),
+        cancel_storm_scenario(jobs),
     ]
 }
 
@@ -427,6 +464,20 @@ mod tests {
         let t12 = SIM_PROFILE.time_ms(40.0, 12);
         assert!((t1 - 40.0).abs() < 1e-9);
         assert!(t12 < 10.0, "{t12}");
+    }
+
+    #[test]
+    fn cancel_storm_reclaims_cores_promptly() {
+        // Three 1000ms hogs are cancelled ~2ms in; the 8-core survivor
+        // must then run, so each job's wall stays in the tens of
+        // milliseconds — three orders below the hogs' nominal runtime.
+        let r = cancel_storm_scenario(3);
+        assert_eq!(r.jobs, 3);
+        assert!(
+            r.p95_ms < 500.0,
+            "survivor waited on abandoned work: p95 {:.1}ms",
+            r.p95_ms
+        );
     }
 
     #[test]

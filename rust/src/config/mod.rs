@@ -35,8 +35,17 @@ pub struct Config {
     /// reclaim its cores (0 = never)
     pub deadline_running_ms: u64,
     /// router: max time a connection thread waits for a batched reply
-    /// (on expiry the request's scheduler tasks are cancelled)
+    /// (on expiry the request's scheduler tasks are cancelled). Also the
+    /// embed request's end-to-end budget: every layer (batcher wait,
+    /// scheduler queueing, execution) is charged against it.
     pub request_timeout_ms: u64,
+    /// router: the OCR op's end-to-end budget — the pipeline runs on a
+    /// worker thread under this deadline; on expiry the request's token
+    /// is cancelled and its scheduler tasks release their cores
+    /// (`ocr_timeouts` counter). Separate knob from
+    /// `request_timeout_ms` because one OCR page costs many model
+    /// invocations across three phases.
+    pub ocr_timeout_ms: u64,
     /// server shutdown: max time to wait for in-flight scheduler tasks
     pub drain_timeout_ms: u64,
     pub artifacts: PathBuf,
@@ -56,6 +65,7 @@ impl Default for Config {
             adaptive: false,
             deadline_running_ms: 0,
             request_timeout_ms: 30_000,
+            ocr_timeout_ms: 60_000,
             drain_timeout_ms: 10_000,
             artifacts: crate::runtime::artifacts_dir(),
         }
@@ -105,6 +115,9 @@ impl Config {
         if let Some(x) = v.get("request_timeout_ms") {
             self.request_timeout_ms = x.as_usize().context("request_timeout_ms")? as u64;
         }
+        if let Some(x) = v.get("ocr_timeout_ms") {
+            self.ocr_timeout_ms = x.as_usize().context("ocr_timeout_ms")? as u64;
+        }
         if let Some(x) = v.get("drain_timeout_ms") {
             self.drain_timeout_ms = x.as_usize().context("drain_timeout_ms")? as u64;
         }
@@ -137,6 +150,7 @@ impl Config {
         self.deadline_running_ms =
             args.u64_or("deadline-running-ms", self.deadline_running_ms);
         self.request_timeout_ms = args.u64_or("request-timeout-ms", self.request_timeout_ms);
+        self.ocr_timeout_ms = args.u64_or("ocr-timeout-ms", self.ocr_timeout_ms);
         self.drain_timeout_ms = args.u64_or("drain-timeout-ms", self.drain_timeout_ms);
         if let Some(a) = args.get("artifacts") {
             self.artifacts = PathBuf::from(a);
@@ -178,6 +192,7 @@ mod tests {
         assert!(!c.adaptive);
         assert_eq!(c.deadline_running_ms, 0);
         assert_eq!(c.request_timeout_ms, 30_000);
+        assert_eq!(c.ocr_timeout_ms, 60_000);
         assert_eq!(c.drain_timeout_ms, 10_000);
         let s = c.sched();
         assert_eq!(s.cores, 16);
@@ -213,21 +228,23 @@ mod tests {
         let p = dir.join("cfg.json");
         std::fs::write(
             &p,
-            r#"{"aging_ms": 20, "request_timeout_ms": 1000, "drain_timeout_ms": 2000}"#,
+            r#"{"aging_ms": 20, "request_timeout_ms": 1000, "ocr_timeout_ms": 4000, "drain_timeout_ms": 2000}"#,
         )
         .unwrap();
         let c = Config::from_file(&p).unwrap();
         assert_eq!(c.aging_ms, 20);
         assert_eq!(c.request_timeout_ms, 1000);
+        assert_eq!(c.ocr_timeout_ms, 4000);
         assert_eq!(c.drain_timeout_ms, 2000);
         let mut c = Config::default();
         c.apply_args(&args(&format!(
-            "serve --config {} --aging-ms 75 --request-timeout-ms 500 --drain-timeout-ms 1500",
+            "serve --config {} --aging-ms 75 --request-timeout-ms 500 --ocr-timeout-ms 2500 --drain-timeout-ms 1500",
             p.display()
         )))
         .unwrap();
         assert_eq!(c.aging_ms, 75);
         assert_eq!(c.request_timeout_ms, 500);
+        assert_eq!(c.ocr_timeout_ms, 2500);
         assert_eq!(c.drain_timeout_ms, 1500);
     }
 

@@ -16,6 +16,21 @@
 //!   free to accumulate the next batch, so batch N+1 forms and submits
 //!   while batch N executes — and a stalled batch never blocks
 //!   accumulation. Thread count stays fixed (flusher + completer).
+//!
+//! [`Batcher::start_pipelined_with_reaper`] adds flush-time admission
+//! control: a *reaper* closure inspects every item as its batch is
+//! drained and may settle it immediately (e.g. a request whose
+//! end-to-end budget died while accumulating gets a structured
+//! `deadline_rejected` reply) instead of submitting doomed work — time
+//! spent waiting in the batcher is charged against the request, not
+//! forgotten.
+//!
+//! Shutdown: [`Batcher::shutdown`] (also run by `Drop`) stops intake.
+//! A `submit` after shutdown — or after the flusher died (a panicking
+//! submitter) — returns an already-disconnected receiver instead of
+//! silently enqueuing into a queue nobody will ever flush, so callers
+//! see `RecvError`/`Disconnected` immediately rather than blocking out
+//! their whole `recv_timeout`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -62,6 +77,7 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
         let flusher = std::thread::Builder::new()
             .name("dnc-batcher".into())
             .spawn(move || {
+                let _drain = DrainOnExit(Arc::clone(&q2));
                 flusher_loop(q2, max_batch, max_wait, move |items, replies| {
                     let n = items.len();
                     inf2.fetch_add(n, Ordering::Relaxed);
@@ -88,6 +104,23 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
         max_wait: Duration,
         submitter: impl Fn(Vec<T>) -> Resolver<R> + Send + 'static,
     ) -> Batcher<T, R> {
+        Batcher::start_pipelined_with_reaper(max_batch, max_wait, |_| None, submitter)
+    }
+
+    /// [`start_pipelined`](Self::start_pipelined) with flush-time
+    /// admission control: as each batch is drained, `reaper` inspects
+    /// every item and may settle it on the spot by returning its reply
+    /// (the item is then never submitted and never counted in flight).
+    /// The serving edge uses this to drop requests whose end-to-end
+    /// budget died while accumulating — doomed work must not take
+    /// scheduler queue space, let alone cores. A batch reaped empty
+    /// skips the submitter entirely.
+    pub fn start_pipelined_with_reaper(
+        max_batch: usize,
+        max_wait: Duration,
+        reaper: impl Fn(&T) -> Option<R> + Send + 'static,
+        submitter: impl Fn(Vec<T>) -> Resolver<R> + Send + 'static,
+    ) -> Batcher<T, R> {
         let queue = new_queue(max_batch);
         let q2 = Arc::clone(&queue);
         let inflight = Arc::new(AtomicUsize::new(0));
@@ -100,10 +133,29 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
                 // `ctx` lives inside the flusher closure: when the
                 // flusher exits (shutdown), the channel disconnects and
                 // the completer drains whatever was submitted, then exits.
+                let _drain = DrainOnExit(Arc::clone(&q2));
                 flusher_loop(q2, max_batch, max_wait, move |items, replies| {
-                    inf_flush.fetch_add(items.len(), Ordering::Relaxed);
-                    let resolver = submitter(items);
-                    let _ = ctx.send((resolver, replies));
+                    let mut kept_items = Vec::with_capacity(items.len());
+                    let mut kept_replies = Vec::with_capacity(replies.len());
+                    for (item, reply) in items.into_iter().zip(replies) {
+                        match reaper(&item) {
+                            // settled at flush time: never submitted,
+                            // never in flight
+                            Some(r) => {
+                                let _ = reply.send(r);
+                            }
+                            None => {
+                                kept_items.push(item);
+                                kept_replies.push(reply);
+                            }
+                        }
+                    }
+                    if kept_items.is_empty() {
+                        return;
+                    }
+                    inf_flush.fetch_add(kept_items.len(), Ordering::Relaxed);
+                    let resolver = submitter(kept_items);
+                    let _ = ctx.send((resolver, kept_replies));
                 })
             })
             .expect("spawn batcher");
@@ -128,10 +180,25 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
     }
 
     /// Enqueue a request; returns the reply channel.
+    ///
+    /// After [`shutdown`](Self::shutdown) — or if the flusher thread
+    /// died (a panicking submitter) — the returned receiver is already
+    /// disconnected: the item can never be flushed, and enqueuing it
+    /// would strand the caller until its full `recv_timeout` on a queue
+    /// nobody drains. An immediate `Disconnected` is the structured
+    /// "shutting down" signal callers (e.g. the router) translate.
     pub fn submit(&self, item: T) -> Receiver<R> {
         let (reply, rx) = channel();
         let (lock, cv) = &*self.queue;
         let mut q = lock.lock().unwrap();
+        let flusher_dead = match &self.flusher {
+            Some(h) => h.is_finished(),
+            None => true,
+        };
+        if q.shutdown || flusher_dead {
+            let _ = item; // dropping `reply` disconnects `rx` immediately
+            return rx;
+        }
         q.items.push(Pending { item, reply, enqueued: Instant::now() });
         cv.notify_all();
         rx
@@ -152,13 +219,21 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
     }
 }
 
+impl<T, R> Batcher<T, R> {
+    /// Stop accepting new work and wake the flusher to drain what is
+    /// already queued. Idempotent; [`Drop`] runs it before joining the
+    /// worker threads. Subsequent [`submit`](Self::submit)s return an
+    /// already-disconnected receiver.
+    pub fn shutdown(&self) {
+        let (lock, cv) = &*self.queue;
+        lock.lock().unwrap().shutdown = true;
+        cv.notify_all();
+    }
+}
+
 impl<T, R> Drop for Batcher<T, R> {
     fn drop(&mut self) {
-        {
-            let (lock, cv) = &*self.queue;
-            lock.lock().unwrap().shutdown = true;
-            cv.notify_all();
-        }
+        self.shutdown();
         if let Some(h) = self.flusher.take() {
             let _ = h.join();
         }
@@ -173,6 +248,24 @@ impl<T, R> Drop for Batcher<T, R> {
 fn new_queue<T, R>(max_batch: usize) -> Arc<(Mutex<Queue<T, R>>, Condvar)> {
     assert!(max_batch >= 1);
     Arc::new((Mutex::new(Queue { items: Vec::new(), shutdown: false }), Condvar::new()))
+}
+
+/// Runs on the flusher thread's way out — normal return *or* a panic
+/// unwinding out of a handler/submitter closure: marks the queue shut
+/// down and drops any still-enqueued reply senders, so a `submit` that
+/// raced past the liveness check disconnects immediately instead of
+/// sitting in a queue nobody will ever flush (recovers the mutex from
+/// poison; the queue is a plain Vec, always consistent).
+struct DrainOnExit<T, R>(Arc<(Mutex<Queue<T, R>>, Condvar)>);
+
+impl<T, R> Drop for DrainOnExit<T, R> {
+    fn drop(&mut self) {
+        let (lock, cv) = &*self.0;
+        let mut q = lock.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        q.shutdown = true;
+        q.items.clear();
+        cv.notify_all();
+    }
 }
 
 fn deliver<R>(results: Vec<R>, replies: Vec<Sender<R>>) {
@@ -394,5 +487,94 @@ mod tests {
             b.submit(9)
         };
         assert_eq!(rx.recv().unwrap(), 9);
+    }
+
+    #[test]
+    fn reaper_settles_expired_items_at_flush() {
+        // Items > 100 are "expired": the reaper replies u32::MAX for
+        // them at flush time; survivors go through the submitter.
+        let b: Batcher<u32, u32> = Batcher::start_pipelined_with_reaper(
+            4,
+            Duration::from_millis(5),
+            |&x| (x > 100).then_some(u32::MAX),
+            |items| Box::new(move || items),
+        );
+        let keep = b.submit(7);
+        let dead = b.submit(200);
+        assert_eq!(dead.recv_timeout(Duration::from_secs(2)).unwrap(), u32::MAX);
+        assert_eq!(keep.recv_timeout(Duration::from_secs(2)).unwrap(), 7);
+        // reaped items never count in flight
+        assert_eq!(b.in_flight(), 0);
+    }
+
+    #[test]
+    fn fully_reaped_batch_skips_the_submitter() {
+        let submitted = Arc::new(AtomicUsize::new(0));
+        let s2 = Arc::clone(&submitted);
+        let b: Batcher<u32, u32> = Batcher::start_pipelined_with_reaper(
+            4,
+            Duration::from_millis(5),
+            |_| Some(0),
+            move |items| {
+                s2.fetch_add(items.len(), Ordering::SeqCst);
+                Box::new(move || items)
+            },
+        );
+        let rxs: Vec<_> = (0..3).map(|i| b.submit(i)).collect();
+        for rx in rxs {
+            assert_eq!(rx.recv_timeout(Duration::from_secs(2)).unwrap(), 0);
+        }
+        assert_eq!(
+            submitted.load(Ordering::SeqCst),
+            0,
+            "an all-reaped batch must never reach the submitter"
+        );
+    }
+
+    #[test]
+    fn submit_after_shutdown_disconnects_immediately() {
+        // Before the fix, a post-shutdown submit enqueued into a queue
+        // nobody drains and the caller blocked for its whole timeout.
+        let b: Batcher<u32, u32> = Batcher::start(4, Duration::from_secs(10), |items| items);
+        b.shutdown();
+        let t0 = Instant::now();
+        let rx = b.submit(1);
+        assert!(
+            matches!(
+                rx.recv_timeout(Duration::from_secs(2)),
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected)
+            ),
+            "post-shutdown submit must disconnect, not deliver or hang"
+        );
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "disconnect must be immediate, not a timeout: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn submit_after_flusher_panic_disconnects() {
+        // A panicking submitter kills the flusher thread; later submits
+        // must fail fast instead of stranding callers.
+        let b: Batcher<u32, u32> =
+            Batcher::start_pipelined(1, Duration::from_millis(1), |_items| {
+                panic!("submitter blew up")
+            });
+        let r1 = b.submit(1);
+        // the panic drops r1's reply sender: observe the flusher's death
+        assert!(r1.recv_timeout(Duration::from_secs(5)).is_err());
+        // the thread may take a moment to fully finish unwinding
+        let t0 = Instant::now();
+        loop {
+            let rx = b.submit(2);
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                _ if t0.elapsed() > Duration::from_secs(5) => {
+                    panic!("submit kept enqueuing into a dead batcher")
+                }
+                _ => continue,
+            }
+        }
     }
 }

@@ -23,14 +23,29 @@
 //! queue (cores never taken) or stopped at the executor's next poll —
 //! a timed-out client no longer leaves orphaned work burning the core
 //! budget.
+//!
+//! Every request also carries a [`Budget`] minted here, at the edge:
+//! one end-to-end deadline account (`--request-timeout-ms` for embed,
+//! `--ocr-timeout-ms` for OCR) charged by every layer below. The
+//! batcher's flusher reaps embed requests whose budget died while
+//! accumulating (structured `deadline_rejected` reply,
+//! `embed_budget_expired` counter, nothing submitted); the scheduler
+//! rejects still-queued parts of an out-of-time request
+//! (`sched.budget_expired`) and kills a part still running when the
+//! request's clock ends (`sched.running_deadline_cancelled_budget`).
+//! The OCR op gets the same treatment as embed: a worker thread runs
+//! the pipeline while the connection thread waits with a bounded
+//! timeout, and on expiry the request's token is cancelled
+//! (`ocr_timeouts` counter) so the pipeline's scheduler tasks release
+//! their cores instead of running unbounded for a client that gave up.
 
-use std::sync::mpsc::RecvTimeoutError;
+use std::sync::mpsc::{channel, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::Config;
 use crate::coordinator::batcher::Batcher;
-use crate::engine::CancelToken;
+use crate::engine::{Budget, CancelToken};
 use crate::metrics::Metrics;
 use crate::nlp::BertServer;
 use crate::ocr::{generate, GenOptions, OcrPipeline};
@@ -38,16 +53,19 @@ use crate::simcpu::ocr::OcrVariant;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::prng::Rng;
 
-/// One embed request travelling through the batcher: the token ids plus
-/// the requester's cancellation token (cancelled on router timeout).
+/// One embed request travelling through the batcher: the token ids, the
+/// requester's cancellation token (cancelled on router timeout), and
+/// the request's end-to-end deadline account (minted at arrival, so
+/// batcher accumulation time is charged against it).
 pub struct EmbedRequest {
     pub ids: Vec<i32>,
     pub cancel: CancelToken,
+    pub budget: Budget,
 }
 
 pub struct ServerState {
     pub bert: BertServer,
-    pub ocr: OcrPipeline,
+    pub ocr: Arc<OcrPipeline>,
     pub metrics: Arc<Metrics>,
     pub config: Config,
     /// cross-connection dynamic batcher for embed requests
@@ -65,18 +83,45 @@ impl ServerState {
         // is waited on by the batcher's completion thread. Batch N+1
         // accumulates and submits while batch N executes.
         let batch_server = BertServer::new(session);
+        let m_reap = Arc::clone(&metrics);
         let embed_batcher: Batcher<EmbedRequest, Result<Vec<f32>, String>> =
-            Batcher::start_pipelined(
+            Batcher::start_pipelined_with_reaper(
                 config.max_batch,
                 Duration::from_millis(config.max_wait_ms),
+                // Flush-time admission control: a request whose budget
+                // died (or whose client already gave up) while it was
+                // accumulating gets a structured reply now instead of
+                // becoming doomed scheduler work.
+                move |r: &EmbedRequest| {
+                    // Cancellation first: the router mints the budget
+                    // from the same duration it waits out, so by the
+                    // time a timed-out client's token is observed here
+                    // its budget has expired too — checking budget
+                    // first would misfile every abandoned request as a
+                    // deadline symptom.
+                    if r.cancel.is_cancelled() {
+                        m_reap.add("embed_cancelled_reaped", 1);
+                        Some(Err("cancelled: request abandoned before execution".to_string()))
+                    } else if r.budget.expired() {
+                        m_reap.add("embed_budget_expired", 1);
+                        Some(Err(
+                            "deadline_rejected: request budget exhausted before execution"
+                                .to_string(),
+                        ))
+                    } else {
+                        None
+                    }
+                },
                 move |requests: Vec<EmbedRequest>| {
                     let t0 = Instant::now();
                     let n = requests.len();
                     m2.add("batches", 1);
                     m2.add("batched_requests", n as u64);
-                    let tagged: Vec<(Vec<i32>, CancelToken)> =
-                        requests.into_iter().map(|r| (r.ids, r.cancel)).collect();
-                    match batch_server.serve_submit_cancellable(&tagged, policy) {
+                    let tagged: Vec<(Vec<i32>, CancelToken, Budget)> = requests
+                        .into_iter()
+                        .map(|r| (r.ids, r.cancel, r.budget))
+                        .collect();
+                    match batch_server.serve_submit_budgeted(&tagged, policy) {
                         Ok(sub) => {
                             let m3 = Arc::clone(&m2);
                             // Per-request settlement: one timed-out
@@ -95,7 +140,7 @@ impl ServerState {
                     }
                 },
             );
-        Arc::new(ServerState { bert, ocr, metrics, config, embed_batcher })
+        Arc::new(ServerState { bert, ocr: Arc::new(ocr), metrics, config, embed_batcher })
     }
 }
 
@@ -138,7 +183,7 @@ fn stats_json(state: &ServerState) -> Json {
     let st = session.scheduler().stats();
     let profiles = session.profiles();
     if let Json::Obj(pairs) = &mut snap {
-        let fields: [(&str, f64); 20] = [
+        let fields: [(&str, f64); 22] = [
             ("sched.capacity", st.capacity as f64),
             ("sched.cores_busy", st.cores_busy as f64),
             ("sched.cores_idle", st.cores_idle as f64),
@@ -153,9 +198,14 @@ fn stats_json(state: &ServerState) -> Json {
             ("sched.failed", st.failed as f64),
             ("sched.backfills", st.backfills as f64),
             ("sched.deadline_rejected", st.deadline_rejected as f64),
+            ("sched.budget_expired", st.budget_expired as f64),
             ("sched.cancelled", st.cancelled as f64),
             ("sched.adaptive_resizes", st.adaptive_resizes as f64),
             ("sched.running_deadline_cancelled", st.running_deadline_cancelled as f64),
+            (
+                "sched.running_deadline_cancelled_budget",
+                st.running_deadline_cancelled_budget as f64,
+            ),
             ("sched.aging_effective_ms", st.aging_effective_ms),
             ("profile.p95_ms", profiles.global_p95_ms().unwrap_or(0.0)),
             ("profile.models", profiles.len() as f64),
@@ -208,7 +258,10 @@ fn embed_ids(state: &ServerState, ids: Vec<i32>) -> Json {
 /// [`CancelToken`] is cancelled before returning the structured timeout
 /// error, so the request's scheduler task is rejected from the queue
 /// (cores never taken) or stopped at the executor's next poll instead
-/// of running on for a client that already gave up.
+/// of running on for a client that already gave up. The request's
+/// [`Budget`] is minted here — the full `timeout`, starting now — so
+/// every layer below charges against the clock this function is
+/// actually waiting on.
 ///
 /// Public so the timeout path is testable against a mock scheduler
 /// without PJRT artifacts (see `tests/integration_timeout.rs`).
@@ -219,7 +272,8 @@ pub fn embed_with_timeout(
     timeout: Duration,
 ) -> Json {
     let cancel = CancelToken::new();
-    let rx = batcher.submit(EmbedRequest { ids, cancel: cancel.clone() });
+    let budget = Budget::new(timeout);
+    let rx = batcher.submit(EmbedRequest { ids, cancel: cancel.clone(), budget });
     match rx.recv_timeout(timeout) {
         Ok(Ok(embedding)) => obj(vec![("embedding", embedding_json(&embedding))]),
         Ok(Err(e)) => err(e),
@@ -253,7 +307,15 @@ fn handle_ocr(state: &ServerState, req: &Json) -> Json {
             _ => return err("'seed' must be a non-negative integer".into()),
         },
     };
+    // Bound the synthetic page size structurally: `generate` cost
+    // scales with the box count and runs before any cancellation
+    // point, so an unbounded client value would let a single request
+    // burn a detached worker thread past any timeout.
+    const MAX_BOXES: usize = 64;
     let boxes = req.get("boxes").and_then(|v| v.as_usize()).unwrap_or(3);
+    if boxes > MAX_BOXES {
+        return err(format!("'boxes' must be <= {MAX_BOXES}"));
+    }
     let variant = match req.get("variant").and_then(|v| v.as_str()) {
         None => OcrVariant::Prun(state.config.policy),
         Some(name) => match crate::ocr::variant_from_name(name) {
@@ -261,10 +323,34 @@ fn handle_ocr(state: &ServerState, req: &Json) -> Json {
             None => return err(format!("unknown variant '{name}'")),
         },
     };
-    let mut rng = Rng::new(seed);
-    let img = generate(state.ocr.meta(), &mut rng, boxes, &GenOptions::default());
-    match state.ocr.process(&img, variant) {
-        Ok(res) => {
+    // Bounded wait, same contract as embed: the pipeline runs on a
+    // worker thread carrying the request's token and budget, while this
+    // connection thread waits out at most the OCR budget. Before this,
+    // a slow OCR request pinned the connection thread *and* the
+    // Listing-1 cores, unbounded, for a client that may be long gone.
+    let timeout = Duration::from_millis(state.config.ocr_timeout_ms);
+    let budget = Budget::new(timeout);
+    let cancel = CancelToken::new();
+    let pipeline = Arc::clone(&state.ocr);
+    let token = cancel.clone();
+    let (tx, rx) = channel();
+    let spawned = std::thread::Builder::new().name("dnc-ocr".into()).spawn(move || {
+        let mut rng = Rng::new(seed);
+        let img = generate(pipeline.meta(), &mut rng, boxes, &GenOptions::default());
+        // The request may have timed out while the page was being
+        // synthesized — don't start the pipeline for a client that is
+        // already gone (nobody reads the reply either way).
+        if token.is_cancelled() {
+            return;
+        }
+        let res = pipeline.process_budgeted(&img, variant, &token, Some(budget));
+        let _ = tx.send((img, res)); // connection thread may have given up
+    });
+    if let Err(e) = spawned {
+        return err(format!("spawning ocr worker failed: {e}"));
+    }
+    match rx.recv_timeout(timeout) {
+        Ok((img, Ok(res))) => {
             state.metrics.add("ocr_images", 1);
             state.metrics.add("ocr_boxes", res.boxes.len() as u64);
             let texts = arr(res.texts.iter().map(|t| match t {
@@ -281,6 +367,19 @@ fn handle_ocr(state: &ServerState, req: &Json) -> Json {
                 ("rec_ms", num(res.timing.rec.as_secs_f64() * 1e3)),
             ])
         }
-        Err(e) => err(format!("{e:#}")),
+        Ok((_, Err(e))) => err(format!("{e:#}")),
+        Err(RecvTimeoutError::Timeout) => {
+            // Cancel before replying: the pipeline's queued parts are
+            // rejected without taking cores and a running part stops at
+            // the executor's next poll — the worker thread then unwinds
+            // through its error path and exits.
+            cancel.cancel();
+            state.metrics.add("ocr_timeouts", 1);
+            err("request timed out".into())
+        }
+        Err(RecvTimeoutError::Disconnected) => {
+            cancel.cancel();
+            err("ocr worker failed".into())
+        }
     }
 }

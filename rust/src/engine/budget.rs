@@ -1,0 +1,140 @@
+//! Request budgets: one end-to-end deadline for a whole request.
+//!
+//! The paper's Listing 1 gives a job *cores* proportional to its
+//! expected cost — but a deadline is a resource too, and before this
+//! module each layer invented its own: the router waited
+//! `--request-timeout-ms`, the batcher waited `max_wait`, and the
+//! scheduler applied one global `--deadline-running-ms` that ignored how
+//! much of the client's clock the request had already burned upstream.
+//!
+//! A [`Budget`] is minted once, at the serving edge, when the request
+//! arrives (`issued_at`) with the client's total patience (`total`). It
+//! then travels *by value* with the request — through the batcher's
+//! accumulation queue, into every `PartTask` the request becomes — so
+//! every layer charges its wall-clock against the same account:
+//!
+//! - the batcher's flusher drops a request whose budget died while
+//!   accumulating (structured `deadline_rejected` reply, no scheduler
+//!   work submitted);
+//! - the scheduler's queue sweep rejects a task whose budget expires
+//!   while queued ([`SchedError::BudgetExpired`](super::SchedError),
+//!   counted as `sched.budget_expired`, cores never taken);
+//! - the dispatcher's running sweep arms the in-flight kill clock at
+//!   [`Budget::deadline`], so a part launched after `w` ms of upstream
+//!   waiting gets a running window of at most `total - w` — never the
+//!   full global deadline for a client that is already half out of
+//!   patience.
+//!
+//! `Budget` is a small `Copy` value (an `Instant` + a `Duration`), not a
+//! shared handle: layers read the clock, nobody mutates it.
+
+use std::time::{Duration, Instant};
+
+/// The end-to-end deadline account of one request: minted at the
+/// serving edge, consumed by every layer the request passes through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Budget {
+    issued_at: Instant,
+    total: Duration,
+}
+
+impl Budget {
+    /// Mint a budget starting now — call this where the request enters
+    /// the system, not where it happens to be scheduled.
+    pub fn new(total: Duration) -> Budget {
+        Budget { issued_at: Instant::now(), total }
+    }
+
+    /// Mint a budget whose clock started at an explicit instant (e.g. a
+    /// request timestamped at the socket before parsing).
+    pub fn starting_at(issued_at: Instant, total: Duration) -> Budget {
+        Budget { issued_at, total }
+    }
+
+    pub fn issued_at(&self) -> Instant {
+        self.issued_at
+    }
+
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+
+    /// The absolute instant the budget runs out. Saturates far into the
+    /// future for totals too large for the platform's `Instant` — a
+    /// budget that huge means "effectively no deadline", not a panic.
+    pub fn deadline(&self) -> Instant {
+        self.issued_at
+            .checked_add(self.total)
+            .unwrap_or_else(|| self.issued_at + Duration::from_secs(86_400 * 365))
+    }
+
+    /// Wall-clock the request has consumed since it was minted.
+    pub fn elapsed(&self) -> Duration {
+        self.issued_at.elapsed()
+    }
+
+    /// What is left of the client's patience (zero once expired).
+    pub fn remaining(&self) -> Duration {
+        self.total.saturating_sub(self.elapsed())
+    }
+
+    pub fn expired(&self) -> bool {
+        self.elapsed() >= self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_budget_has_full_remainder() {
+        let b = Budget::new(Duration::from_secs(10));
+        assert!(!b.expired());
+        assert!(b.remaining() > Duration::from_secs(9));
+        assert_eq!(b.total(), Duration::from_secs(10));
+        assert!(b.deadline() > Instant::now());
+    }
+
+    #[test]
+    fn zero_budget_is_born_expired() {
+        let b = Budget::new(Duration::ZERO);
+        assert!(b.expired());
+        assert_eq!(b.remaining(), Duration::ZERO);
+    }
+
+    #[test]
+    fn remaining_charges_upstream_wait() {
+        // A budget minted 30ms ago with 100ms total has at most 70ms
+        // left — the "T - w" the per-part running deadline derives from.
+        let b = Budget::starting_at(Instant::now(), Duration::from_millis(100));
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!b.expired());
+        assert!(b.remaining() <= Duration::from_millis(70));
+        assert!(b.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn expires_after_total() {
+        let b = Budget::new(Duration::from_millis(5));
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(b.expired());
+        assert_eq!(b.remaining(), Duration::ZERO);
+        assert!(b.deadline() <= Instant::now());
+    }
+
+    #[test]
+    fn huge_total_saturates_instead_of_panicking() {
+        let b = Budget::new(Duration::MAX);
+        assert!(!b.expired());
+        assert!(b.deadline() > Instant::now() + Duration::from_secs(86_400));
+    }
+
+    #[test]
+    fn copies_share_the_clock() {
+        let a = Budget::new(Duration::from_millis(50));
+        let b = a;
+        assert_eq!(a.deadline(), b.deadline());
+        assert_eq!(a.issued_at(), b.issued_at());
+    }
+}

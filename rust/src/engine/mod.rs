@@ -2,6 +2,8 @@
 //!
 //! - [`allocator`] — Listing 1 (`prun-def`) and the `prun-1` / `prun-eq`
 //!   baselines.
+//! - [`budget`] — end-to-end request budgets: one deadline account
+//!   minted at the serving edge and consumed by every layer below.
 //! - [`part`] — job parts and their size-based weights.
 //! - [`sched`] — the central core-aware scheduler: ledger admission
 //!   control, backfill + aging, priorities, deadlines (admission and
@@ -14,6 +16,7 @@
 
 pub mod adaptive;
 pub mod allocator;
+pub mod budget;
 pub mod optimizer;
 pub mod part;
 pub mod profile;
@@ -22,6 +25,7 @@ pub mod session;
 
 pub use adaptive::{AdaptiveConfig, AdaptivePolicy};
 pub use allocator::{allocate, allocate_weighted, weights, AllocPolicy};
+pub use budget::Budget;
 pub use optimizer::{allocate_optimal, OptPart};
 pub use part::{part_sizes, JobPart};
 pub use profile::{ModelStats, ProfileStore};

@@ -2,6 +2,8 @@
 
 use crate::runtime::{CancelToken, Tensor};
 
+use super::budget::Budget;
+
 /// One independent piece of an inference job (paper §3.1's `j_i`): a
 /// model to run and its inputs. The part's *size* — the total element
 /// count of its input tensors — is what prun-def weighs by.
@@ -12,16 +14,28 @@ pub struct JobPart {
     /// optional per-part cancellation token (e.g. the serving request
     /// this part answers); parts without one share the job's fate
     pub cancel: Option<CancelToken>,
+    /// optional per-part request budget (the serving request's end-to-end
+    /// deadline account); parts without one inherit the job's
+    /// `PrunOptions::budget`, if any
+    pub budget: Option<Budget>,
 }
 
 impl JobPart {
     pub fn new(model: impl Into<String>, inputs: Vec<Tensor>) -> JobPart {
-        JobPart { model: model.into(), inputs, cancel: None }
+        JobPart { model: model.into(), inputs, cancel: None, budget: None }
     }
 
     /// Attach the cancellation token of the request this part serves.
     pub fn with_cancel(mut self, token: CancelToken) -> JobPart {
         self.cancel = Some(token);
+        self
+    }
+
+    /// Attach the request budget of the request this part serves: the
+    /// scheduler derives both the part's admission rejection and its
+    /// running kill clock from what remains of it.
+    pub fn with_budget(mut self, budget: Budget) -> JobPart {
+        self.budget = Some(budget);
         self
     }
 

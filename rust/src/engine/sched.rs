@@ -55,6 +55,21 @@
 //!   proactive (scheduler enforces). Counted separately as
 //!   `running_deadline_cancelled` (each such task is also counted in
 //!   `cancelled` when its executor acknowledges the token).
+//! - **Request budgets**: a task may carry the end-to-end [`Budget`] of
+//!   the serving request it answers. The queue sweep rejects a task
+//!   whose budget dies while queued ([`SchedError::BudgetExpired`],
+//!   `budget_expired` counter, cores never taken), and launch arms the
+//!   running kill clock at the budget's absolute deadline — so a part
+//!   admitted after `w` ms of upstream waiting (batcher accumulation,
+//!   scheduler queueing) runs for at most `total - w`, never the full
+//!   global `deadline_running` on a client already half out of
+//!   patience. A budget-armed task ignores the scheduler-wide
+//!   `deadline_running` fallback (the budget is the request's own,
+//!   better-informed clock); an explicit per-task `running_deadline`
+//!   still applies, and the earlier of the two clocks wins. Budget
+//!   kills acknowledged by the executor are counted in `cancelled`,
+//!   `running_deadline_cancelled` *and* the by-source split
+//!   `running_deadline_cancelled_budget`.
 //! - **Adaptive recalibration**: started with an
 //!   [`AdaptivePolicy`](super::adaptive::AdaptivePolicy), the dispatcher
 //!   re-derives the *effective* aging bound from observed part-latency
@@ -79,6 +94,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::adaptive::AdaptivePolicy;
+use super::budget::Budget;
 use crate::runtime::{CancelToken, ExecResult, ExecutorPool, ReplyFn, TaskCancelled, Tensor};
 
 /// How often the dispatcher wakes to sweep queued tasks (deadline expiry
@@ -101,6 +117,13 @@ pub enum Priority {
 pub enum SchedError {
     /// The task's admission deadline passed while it was still queued.
     DeadlineExceeded,
+    /// The end-to-end request [`Budget`] attached to the task ran out
+    /// before the task was launched — the whole request is out of time,
+    /// so the task is rejected without ever taking cores. (A budget
+    /// that runs out *mid-execution* surfaces as [`Cancelled`](Self::Cancelled)
+    /// instead: the running sweep fires the token and the executor
+    /// acknowledges it like any other kill.)
+    BudgetExpired,
     /// The task's [`CancelToken`] fired before it finished: while it was
     /// queued (cores never taken) or while it was running (the executor
     /// stopped at its next token poll and the cores were released).
@@ -113,6 +136,7 @@ impl fmt::Display for SchedError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             SchedError::DeadlineExceeded => write!(f, "deadline exceeded before admission"),
+            SchedError::BudgetExpired => write!(f, "request budget exhausted"),
             SchedError::Cancelled => write!(f, "task cancelled"),
             SchedError::Shutdown => write!(f, "scheduler shut down"),
         }
@@ -135,6 +159,10 @@ pub struct PartTask {
     /// running deadline: once launched, cancel if still executing after
     /// this long (overrides the scheduler-wide `deadline_running`)
     pub running_deadline: Option<Duration>,
+    /// end-to-end budget of the serving request this task answers:
+    /// admission rejection and the running kill clock both derive from
+    /// what remains of it (see module docs)
+    pub budget: Option<Budget>,
     /// cooperative cancellation flag, shared with whoever may abandon
     /// this task (each task gets a private token unless one is attached)
     pub cancel: CancelToken,
@@ -149,6 +177,7 @@ impl PartTask {
             priority: Priority::Normal,
             deadline: None,
             running_deadline: None,
+            budget: None,
             cancel: CancelToken::new(),
         }
     }
@@ -175,6 +204,16 @@ impl PartTask {
     /// request this part belongs to).
     pub fn with_cancel(mut self, token: CancelToken) -> PartTask {
         self.cancel = token;
+        self
+    }
+
+    /// Attach the end-to-end request budget this task consumes. While
+    /// queued, the task is rejected ([`SchedError::BudgetExpired`]) the
+    /// moment the budget dies; once launched, the kill clock is armed at
+    /// the budget's absolute deadline, so the task's running window is
+    /// whatever the request has left — not a fresh global allowance.
+    pub fn with_budget(mut self, budget: Budget) -> PartTask {
+        self.budget = Some(budget);
         self
     }
 }
@@ -333,6 +372,10 @@ pub struct SchedStats {
     pub failed: u64,
     pub backfills: u64,
     pub deadline_rejected: u64,
+    /// queued tasks rejected because their attached request [`Budget`]
+    /// ran out before launch (cores never taken; disjoint from both
+    /// `deadline_rejected` and `cancelled`)
+    pub budget_expired: u64,
     pub cancelled: u64,
     /// parts whose core request the adaptive policy changed away from
     /// the size-proportional split (counted at submit by the session)
@@ -342,6 +385,10 @@ pub struct SchedStats {
     /// so every one of these is also in `cancelled`, and a task whose
     /// completion raced the sweep counts as completed instead
     pub running_deadline_cancelled: u64,
+    /// the by-source split of `running_deadline_cancelled`: kills whose
+    /// armed clock came from the request budget (the rest came from the
+    /// global `deadline_running` or a per-task running deadline)
+    pub running_deadline_cancelled_budget: u64,
     /// the aging bound currently in force (static `aging`, or the
     /// adaptive policy's latest derivation)
     pub aging_effective_ms: f64,
@@ -354,9 +401,11 @@ struct Counters {
     failed: AtomicU64,
     backfills: AtomicU64,
     deadline_rejected: AtomicU64,
+    budget_expired: AtomicU64,
     cancelled: AtomicU64,
     adaptive_resizes: AtomicU64,
     running_deadline_cancelled: AtomicU64,
+    running_deadline_cancelled_budget: AtomicU64,
     /// gauge, microseconds (set by the dispatcher each sync)
     aging_effective_us: AtomicU64,
     queue_depth: AtomicUsize,
@@ -400,6 +449,10 @@ struct Inflight {
     cancel: CancelToken,
     /// cancel if still executing at this instant (running deadline)
     kill_at: Option<Instant>,
+    /// `kill_at` came from the task's request budget, not the duration
+    /// sources (global `deadline_running` / per-task running deadline) —
+    /// decides which enforcement counter an acknowledged kill lands in
+    kill_from_budget: bool,
     /// the sweep cancelled this task's token; counted in
     /// `running_deadline_cancelled` only once the executor acknowledges
     /// (a completion may already be in flight when the sweep fires —
@@ -483,7 +536,8 @@ impl Scheduler {
         // dropped; counting sender-side would tally a task that never
         // reaches any terminal counter and permanently skew the invariant
         // `submitted == completed + failed + deadline_rejected +
-        // cancelled + queued + inflight`. Dispatcher-side counting makes
+        // budget_expired + cancelled + queued + inflight`.
+        // Dispatcher-side counting makes
         // "counted submitted" and "will be terminally counted" the same
         // event. An unreceived task's reply sender drops with the
         // channel, so its handle still resolves (Shutdown).
@@ -534,10 +588,14 @@ impl Scheduler {
             failed: c.failed.load(Ordering::Relaxed),
             backfills: c.backfills.load(Ordering::Relaxed),
             deadline_rejected: c.deadline_rejected.load(Ordering::Relaxed),
+            budget_expired: c.budget_expired.load(Ordering::Relaxed),
             cancelled: c.cancelled.load(Ordering::Relaxed),
             adaptive_resizes: c.adaptive_resizes.load(Ordering::Relaxed),
             running_deadline_cancelled: c
                 .running_deadline_cancelled
+                .load(Ordering::Relaxed),
+            running_deadline_cancelled_budget: c
+                .running_deadline_cancelled_budget
                 .load(Ordering::Relaxed),
             aging_effective_ms: c.aging_effective_us.load(Ordering::Relaxed) as f64 / 1e3,
         }
@@ -698,20 +756,27 @@ impl DispatchState {
         q
     }
 
-    /// Reject queued tasks whose admission deadline has passed or whose
-    /// cancel token fired; neither ever takes cores from the ledger.
+    /// Reject queued tasks whose admission deadline has passed, whose
+    /// request budget ran out, or whose cancel token fired; none of
+    /// these ever takes cores from the ledger.
     fn sweep_queue(&mut self) {
         let now = Instant::now();
         let mut i = 0;
         while i < self.pending.len() {
-            let cancelled = self.pending[i].task.cancel.is_cancelled();
+            let task = &self.pending[i].task;
+            let cancelled = task.cancel.is_cancelled();
+            let budget_gone =
+                !cancelled && task.budget.is_some_and(|b| now >= b.deadline());
             let expired =
-                !cancelled && self.pending[i].task.deadline.is_some_and(|d| now >= d);
-            if cancelled || expired {
+                !cancelled && !budget_gone && task.deadline.is_some_and(|d| now >= d);
+            if cancelled || budget_gone || expired {
                 if let Some(q) = self.take_queued(i) {
                     let e = if cancelled {
                         self.counters.cancelled.fetch_add(1, Ordering::Relaxed);
                         SchedError::Cancelled
+                    } else if budget_gone {
+                        self.counters.budget_expired.fetch_add(1, Ordering::Relaxed);
+                        SchedError::BudgetExpired
                     } else {
                         self.counters.deadline_rejected.fetch_add(1, Ordering::Relaxed);
                         SchedError::DeadlineExceeded
@@ -794,6 +859,14 @@ impl DispatchState {
             let _ = reply.send(Err(anyhow::Error::new(SchedError::Cancelled)));
             return;
         }
+        // Same contract for the request budget: an already-expired
+        // request must never take cores — the sweep usually catches it,
+        // this closes the sweep→launch race.
+        if task.budget.is_some_and(|b| b.expired()) {
+            self.counters.budget_expired.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(Err(anyhow::Error::new(SchedError::BudgetExpired)));
+            return;
+        }
         if backfilled {
             self.counters.backfills.fetch_add(1, Ordering::Relaxed);
         }
@@ -808,13 +881,26 @@ impl DispatchState {
             .map(|(i, _)| i)
             .unwrap_or(0);
         self.worker_load[worker] += 1;
-        // Running deadline: per-task override, else the scheduler-wide
-        // default. The clock starts at launch — queue time is already
-        // policed by the admission deadline.
-        let kill_at = task
+        // Running deadline. Duration sources (clock starts at launch —
+        // queue time is already policed by the admission sweep): the
+        // per-task override, else the scheduler-wide default — but the
+        // global fallback applies only to budget-less tasks; a request
+        // budget is the client's own, better-informed clock. The budget
+        // source is absolute: whatever remains of the request's total,
+        // so a part that waited upstream gets the remainder, not a
+        // fresh allowance. Earliest armed clock wins.
+        let now = Instant::now();
+        let duration_kill = task
             .running_deadline
-            .or(self.cfg.deadline_running)
-            .map(|d| Instant::now() + d);
+            .or(if task.budget.is_none() { self.cfg.deadline_running } else { None })
+            .map(|d| now + d);
+        let budget_kill = task.budget.map(|b| b.deadline());
+        let (kill_at, kill_from_budget) = match (duration_kill, budget_kill) {
+            (Some(d), Some(b)) => (Some(d.min(b)), b <= d),
+            (Some(d), None) => (Some(d), false),
+            (None, Some(b)) => (Some(b), true),
+            (None, None) => (None, false),
+        };
         if kill_at.is_some() {
             self.armed_deadlines += 1;
         }
@@ -828,6 +914,7 @@ impl DispatchState {
                 backfilled,
                 cancel: task.cancel.clone(),
                 kill_at,
+                kill_from_budget,
                 deadline_enforced: false,
             },
         );
@@ -930,6 +1017,11 @@ impl DispatchState {
                     self.counters
                         .running_deadline_cancelled
                         .fetch_add(1, Ordering::Relaxed);
+                    if inf.kill_from_budget {
+                        self.counters
+                            .running_deadline_cancelled_budget
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
                 }
                 let _ = inf.reply.send(Err(anyhow::Error::new(SchedError::Cancelled)));
             }
@@ -1235,6 +1327,127 @@ mod tests {
         assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::Shutdown));
         let st = s.stats();
         assert_eq!(st.submitted, 0, "rejected-at-submit must not count: {st:?}");
-        assert_eq!(st.completed + st.failed + st.deadline_rejected + st.cancelled, 0);
+        assert_eq!(
+            st.completed + st.failed + st.deadline_rejected + st.budget_expired + st.cancelled,
+            0
+        );
+    }
+
+    #[test]
+    fn budget_expiry_while_queued_is_typed_and_counted() {
+        // The request has 10ms left, but the queue is blocked for 60ms:
+        // the sweep must reject it with BudgetExpired (not a generic
+        // deadline rejection, not a cancellation) without taking cores.
+        let s = sched(1);
+        let blocker = s.submit(PartTask::new("sleep:60", Vec::new(), 1));
+        std::thread::sleep(Duration::from_millis(5));
+        let doomed = s.submit(
+            PartTask::new("sleep:1", Vec::new(), 1)
+                .with_budget(Budget::new(Duration::from_millis(10))),
+        );
+        let err = doomed.wait().unwrap_err();
+        assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::BudgetExpired));
+        blocker.wait().unwrap();
+        let st = s.stats();
+        assert_eq!(st.budget_expired, 1, "{st:?}");
+        assert_eq!(st.deadline_rejected, 0, "{st:?}");
+        assert_eq!(st.cancelled, 0, "{st:?}");
+        assert_eq!(st.completed, 1);
+    }
+
+    #[test]
+    fn born_expired_budget_never_takes_cores() {
+        // Zero budget: rejected at the admission sweep even with the
+        // whole ledger free — doomed work must not occupy cores.
+        let s = sched(2);
+        let h = s.submit(
+            PartTask::new("sleep:1", Vec::new(), 1).with_budget(Budget::new(Duration::ZERO)),
+        );
+        let err = h.wait().unwrap_err();
+        assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::BudgetExpired));
+        assert!(s.drain(Duration::from_secs(5)));
+        let st = s.stats();
+        assert_eq!(st.budget_expired, 1, "{st:?}");
+        assert_eq!(st.completed, 0, "{st:?}");
+        assert_eq!(st.cores_busy, 0, "{st:?}");
+    }
+
+    #[test]
+    fn budget_bounds_running_time_and_is_counted_by_source() {
+        // A 300ms task carrying a 20ms request budget must be killed
+        // near the budget's deadline by the running sweep, typed as
+        // Cancelled, and attributed to the budget source.
+        let s = sched(2);
+        let t0 = Instant::now();
+        let h = s.submit(
+            PartTask::new("sleep:300", Vec::new(), 1)
+                .with_budget(Budget::new(Duration::from_millis(20))),
+        );
+        let err = h.wait().unwrap_err();
+        assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::Cancelled));
+        assert!(
+            t0.elapsed() < Duration::from_millis(200),
+            "budget did not interrupt the run: {:?}",
+            t0.elapsed()
+        );
+        assert!(s.drain(Duration::from_secs(5)));
+        let st = s.stats();
+        assert_eq!(st.cancelled, 1, "{st:?}");
+        assert_eq!(st.running_deadline_cancelled, 1, "{st:?}");
+        assert_eq!(st.running_deadline_cancelled_budget, 1, "{st:?}");
+        assert_eq!(st.budget_expired, 0, "launched: not an admission rejection {st:?}");
+        assert_eq!(st.cores_busy, 0, "cores must return: {st:?}");
+    }
+
+    #[test]
+    fn budget_overrides_global_running_deadline() {
+        // The scheduler-wide 20ms kill clock must NOT apply to a task
+        // whose request still has 500ms of budget — the budget is the
+        // request's own clock, so a 60ms task completes.
+        let s = Scheduler::start(
+            SchedConfig {
+                cores: 2,
+                deadline_running: Some(Duration::from_millis(20)),
+                ..Default::default()
+            },
+            Arc::new(SleepRunner { workers: 2 }),
+        );
+        let h = s.submit(
+            PartTask::new("sleep:60", Vec::new(), 1)
+                .with_budget(Budget::new(Duration::from_millis(500))),
+        );
+        h.wait().expect("budgeted task outlives the global running deadline");
+        // a budget-less sibling still gets the global enforcement
+        let killed = s.submit(PartTask::new("sleep:300", Vec::new(), 1));
+        let err = killed.wait().unwrap_err();
+        assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::Cancelled));
+        assert!(s.drain(Duration::from_secs(5)));
+        let st = s.stats();
+        assert_eq!(st.running_deadline_cancelled, 1, "{st:?}");
+        assert_eq!(st.running_deadline_cancelled_budget, 0, "{st:?}");
+    }
+
+    #[test]
+    fn per_task_running_deadline_still_applies_with_budget() {
+        // An explicit per-task running deadline is an override, not a
+        // fallback: it must keep enforcing even when a (longer) budget
+        // is attached, and the earlier clock wins.
+        let s = sched(2);
+        let t0 = Instant::now();
+        let h = s.submit(
+            PartTask::new("sleep:300", Vec::new(), 1)
+                .with_running_deadline(Duration::from_millis(20))
+                .with_budget(Budget::new(Duration::from_secs(5))),
+        );
+        let err = h.wait().unwrap_err();
+        assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::Cancelled));
+        assert!(t0.elapsed() < Duration::from_millis(200), "{:?}", t0.elapsed());
+        assert!(s.drain(Duration::from_secs(5)));
+        let st = s.stats();
+        assert_eq!(st.running_deadline_cancelled, 1, "{st:?}");
+        assert_eq!(
+            st.running_deadline_cancelled_budget, 0,
+            "duration source fired first: {st:?}"
+        );
     }
 }

@@ -28,10 +28,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::runtime::{ExecutorPool, Manifest, Tensor};
+use crate::runtime::{CancelToken, ExecutorPool, Manifest, Tensor};
 
 use super::adaptive::{AdaptiveConfig, AdaptivePolicy};
 use super::allocator::{allocate_weighted, weights, AllocPolicy};
+use super::budget::Budget;
 use super::part::{part_sizes, JobPart};
 use super::profile::ProfileStore;
 use super::sched::{
@@ -60,6 +61,13 @@ pub struct PrunOptions {
     /// executing past it is cancelled by the dispatcher and its cores
     /// reclaimed (overrides the scheduler-wide `--deadline-running-ms`)
     pub running_deadline: Option<Duration>,
+    /// end-to-end request budget applied to every part that does not
+    /// carry its own (`JobPart::with_budget`): queued parts are rejected
+    /// the moment it dies, and each part's running kill clock is armed
+    /// at whatever remains of it — so time burned upstream (batcher
+    /// accumulation, scheduler queueing) is charged against the same
+    /// account the client is waiting on
+    pub budget: Option<Budget>,
 }
 
 impl Default for AllocPolicy {
@@ -135,9 +143,18 @@ impl PrunHandle {
         let mut reports: Vec<PartReport> = Vec::with_capacity(k);
         let mut first_err: Option<anyhow::Error> = None;
         for (i, h) in handles.into_iter().enumerate() {
+            let token = h.cancel_token();
             match h.wait() {
                 Ok(done) => {
-                    profiles.observe(&models[i], done.exec);
+                    // A part whose token fired must not feed the profile
+                    // window even when the executor still replied Ok (a
+                    // kill racing completion, or an engine returning
+                    // truncated timing after an abort): a storm of kills
+                    // would drag the windowed p95 down and make
+                    // engine::adaptive oversize the next parts.
+                    if !token.is_cancelled() {
+                        profiles.observe(&models[i], done.exec);
+                    }
                     reports.push(PartReport {
                         threads: done.threads,
                         queue: done.queue,
@@ -172,12 +189,19 @@ impl PrunHandle {
         handles
             .into_iter()
             .enumerate()
-            .map(|(i, h)| match h.wait() {
-                Ok(done) => {
-                    profiles.observe(&models[i], done.exec);
-                    Ok(done)
+            .map(|(i, h)| {
+                let token = h.cancel_token();
+                match h.wait() {
+                    Ok(done) => {
+                        // killed parts must not feed the profile window
+                        // (see `wait` above)
+                        if !token.is_cancelled() {
+                            profiles.observe(&models[i], done.exec);
+                        }
+                        Ok(done)
+                    }
+                    Err(e) => Err(e.context(format!("part {i} model {}", models[i]))),
                 }
-                Err(e) => Err(e.context(format!("part {i} model {}", models[i]))),
             })
             .collect()
     }
@@ -289,8 +313,32 @@ impl Session {
     /// paper compares against). Routed through the scheduler so it, too,
     /// respects the core ledger against concurrent `prun` jobs.
     pub fn run(&self, model: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
-        let done = self.sched.submit(PartTask::new(model, inputs, self.cores)).wait()?;
-        self.profiles.observe(model, done.exec);
+        self.run_cancellable(model, inputs, CancelToken::new(), None)
+    }
+
+    /// [`run`](Self::run) with a caller-owned [`CancelToken`] and an
+    /// optional request [`Budget`]: the serving edge (e.g. the OCR
+    /// handler) threads one request's token and deadline account through
+    /// every model invocation it makes, so a timed-out request stops at
+    /// the scheduler instead of running unbounded.
+    pub fn run_cancellable(
+        &self,
+        model: &str,
+        inputs: Vec<Tensor>,
+        cancel: CancelToken,
+        budget: Option<Budget>,
+    ) -> Result<Vec<Tensor>> {
+        let mut task =
+            PartTask::new(model, inputs, self.cores).with_cancel(cancel.clone());
+        if let Some(b) = budget {
+            task = task.with_budget(b);
+        }
+        let done = self.sched.submit(task).wait()?;
+        // A kill that raced completion must not feed the profile window
+        // (see PrunHandle::wait for the full rationale).
+        if !cancel.is_cancelled() {
+            self.profiles.observe(model, done.exec);
+        }
         Ok(done.outputs)
     }
 
@@ -353,11 +401,15 @@ impl Session {
             .into_iter()
             .zip(allocation.iter())
             .map(|(part, &threads)| {
-                let JobPart { model, inputs, cancel } = part;
+                let JobPart { model, inputs, cancel, budget } = part;
                 let mut task =
                     PartTask::new(model, inputs, threads).with_priority(opts.priority);
                 task.deadline = deadline;
                 task.running_deadline = opts.running_deadline;
+                // Per-part budget wins over the job-wide one: each part
+                // of a serving batch answers its own request, and its
+                // own clock is the one the client is watching.
+                task.budget = budget.or(opts.budget);
                 if let Some(token) = cancel {
                     task = task.with_cancel(token);
                 }
@@ -371,5 +423,101 @@ impl Session {
             t0,
             profiles: Arc::clone(&self.profiles),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::sched::{SchedConfig, Scheduler, TaskRunner};
+    use crate::runtime::{ExecResult, ReplyFn};
+
+    /// A runner that replies `Ok` with a *truncated* exec time when its
+    /// token fires mid-run — modelling an engine that aborts but still
+    /// reports partial timing. The profile guard must keep such samples
+    /// out of the window, where a storm of kills would drag the p95
+    /// down and make adaptive sizing oversize the next parts.
+    struct TruncatingRunner;
+
+    impl TaskRunner for TruncatingRunner {
+        fn workers(&self) -> usize {
+            1
+        }
+
+        fn run_on(
+            &self,
+            worker: usize,
+            _model: &str,
+            _inputs: Vec<Tensor>,
+            _threads: usize,
+            cancel: CancelToken,
+            reply: ReplyFn,
+        ) {
+            std::thread::spawn(move || {
+                let mut slices = 0u64;
+                for _ in 0..200 {
+                    if cancel.is_cancelled() {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                    slices += 1;
+                }
+                reply(Ok(ExecResult {
+                    outputs: Vec::new(),
+                    exec_time: Duration::from_millis(slices),
+                    worker,
+                }));
+            });
+        }
+    }
+
+    fn handle_over(
+        sched: &Scheduler,
+        token: CancelToken,
+        profiles: &Arc<ProfileStore>,
+    ) -> PrunHandle {
+        let h = sched.submit(PartTask::new("m", Vec::new(), 1).with_cancel(token));
+        PrunHandle {
+            handles: vec![h],
+            models: vec!["m".to_string()],
+            allocation: vec![1],
+            t0: Instant::now(),
+            profiles: Arc::clone(profiles),
+        }
+    }
+
+    #[test]
+    fn killed_parts_do_not_feed_the_profile_window() {
+        let sched = Scheduler::start(
+            SchedConfig { cores: 2, ..Default::default() },
+            Arc::new(TruncatingRunner),
+        );
+        let profiles = Arc::new(ProfileStore::new());
+        let token = CancelToken::new();
+        let handle = handle_over(&sched, token.clone(), &profiles);
+        std::thread::sleep(Duration::from_millis(15)); // admitted, running
+        token.cancel(); // the kill lands mid-run
+        let results = handle.wait_each();
+        assert_eq!(results.len(), 1);
+        // this runner replies Ok with truncated timing even when killed
+        assert!(results[0].is_ok(), "TruncatingRunner always replies Ok");
+        assert!(
+            profiles.is_empty(),
+            "killed part leaked its truncated latency into the profiles"
+        );
+    }
+
+    #[test]
+    fn surviving_parts_still_observe() {
+        let sched = Scheduler::start(
+            SchedConfig { cores: 2, ..Default::default() },
+            Arc::new(TruncatingRunner),
+        );
+        let profiles = Arc::new(ProfileStore::new());
+        let handle = handle_over(&sched, CancelToken::new(), &profiles);
+        let outcome = handle.wait().expect("uncancelled part completes");
+        assert_eq!(outcome.outputs.len(), 1);
+        assert_eq!(profiles.len(), 1, "surviving part must be profiled");
+        assert_eq!(profiles.stats("m").unwrap().samples_total, 1);
     }
 }

@@ -52,8 +52,8 @@ USAGE:
   dnc-serve serve   [--port P] [--cores C] [--workers W] [--policy POLICY]
                     [--max-batch N] [--max-wait-ms T] [--aging-ms T]
                     [--adaptive] [--deadline-running-ms T]
-                    [--request-timeout-ms T] [--drain-timeout-ms T]
-                    [--config FILE]
+                    [--request-timeout-ms T] [--ocr-timeout-ms T]
+                    [--drain-timeout-ms T] [--config FILE]
   dnc-serve ocr     [--images N] [--variant base|prun-def|prun-1|prun-eq]
                     [--seed S] [--boxes N] [--cores C]
   dnc-serve bert    [--batch X] [--strategy pad-batch|no-batch|prun-def]
@@ -268,6 +268,11 @@ fn cmd_info(args: &Args) -> Result<()> {
             Some(d) => format!("{} ms", d.as_millis()),
             None => "none".to_string(),
         }
+    );
+    println!(
+        "budgets       : embed {} ms, ocr {} ms (end-to-end request budgets; \
+         parts inherit the remainder)",
+        cfg.request_timeout_ms, cfg.ocr_timeout_ms
     );
     if !manifest.models.is_empty() {
         bail_if_missing(&manifest, &cfg)?;

@@ -12,7 +12,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::engine::{AllocPolicy, CancelToken, JobPart, PrunHandle, PrunOptions, Session};
+use crate::engine::{
+    AllocPolicy, Budget, CancelToken, JobPart, PrunHandle, PrunOptions, Session,
+};
 use crate::runtime::Tensor;
 
 use super::tokenizer::Tokenizer;
@@ -167,7 +169,7 @@ impl BertServer {
         requests: &[Vec<i32>],
         policy: AllocPolicy,
     ) -> Result<BatchSubmit> {
-        self.submit_parts(requests.iter().map(|r| (r.as_slice(), None)), policy)
+        self.submit_parts(requests.iter().map(|r| (r.as_slice(), None, None)), policy)
     }
 
     /// [`serve_submit`](Self::serve_submit) with one [`CancelToken`] per
@@ -180,17 +182,37 @@ impl BertServer {
         policy: AllocPolicy,
     ) -> Result<BatchSubmit> {
         self.submit_parts(
-            requests.iter().map(|(r, token)| (r.as_slice(), Some(token.clone()))),
+            requests.iter().map(|(r, token)| (r.as_slice(), Some(token.clone()), None)),
+            policy,
+        )
+    }
+
+    /// [`serve_submit_cancellable`](Self::serve_submit_cancellable) plus
+    /// one request [`Budget`] per sequence: each part carries its *own*
+    /// request's remaining deadline account (finer than deriving one
+    /// running deadline from the batch minimum — batchmates with
+    /// different arrival times get different remainders), so the
+    /// scheduler rejects a part whose request is already out of time and
+    /// kills a part still running when its request's clock ends.
+    pub fn serve_submit_budgeted(
+        &self,
+        requests: &[(Vec<i32>, CancelToken, Budget)],
+        policy: AllocPolicy,
+    ) -> Result<BatchSubmit> {
+        self.submit_parts(
+            requests
+                .iter()
+                .map(|(r, token, budget)| (r.as_slice(), Some(token.clone()), Some(*budget))),
             policy,
         )
     }
 
     /// Shared submit pipeline: one job part per sequence (carrying its
-    /// request's token, when there is one), handed to the scheduler via
-    /// [`Session::prun_submit`].
+    /// request's token and budget, when there are any), handed to the
+    /// scheduler via [`Session::prun_submit`].
     fn submit_parts<'a>(
         &self,
-        requests: impl ExactSizeIterator<Item = (&'a [i32], Option<CancelToken>)>,
+        requests: impl ExactSizeIterator<Item = (&'a [i32], Option<CancelToken>, Option<Budget>)>,
         policy: AllocPolicy,
     ) -> Result<BatchSubmit> {
         let n = requests.len();
@@ -199,13 +221,16 @@ impl BertServer {
         }
         let t0 = Instant::now();
         let parts = requests
-            .map(|(r, token)| {
+            .map(|(r, token, budget)| {
                 let (model, tensor) = self.single_part(r)?;
-                let part = JobPart::new(model, vec![tensor]);
-                Ok(match token {
-                    Some(t) => part.with_cancel(t),
-                    None => part,
-                })
+                let mut part = JobPart::new(model, vec![tensor]);
+                if let Some(t) = token {
+                    part = part.with_cancel(t);
+                }
+                if let Some(b) = budget {
+                    part = part.with_budget(b);
+                }
+                Ok(part)
             })
             .collect::<Result<Vec<_>>>()?;
         let handle =

@@ -6,13 +6,22 @@
 //! core budget — the unmodified pipeline) or via `prun` (all boxes
 //! submitted at once, threads allocated by size — the paper's Listings
 //! 2 -> 3 change).
+//!
+//! [`OcrPipeline::process_budgeted`] threads one serving request's
+//! [`CancelToken`] and [`Budget`] through every model invocation of all
+//! three phases: a cancelled or out-of-time request stops at the next
+//! phase boundary (CPU side) or at the scheduler/executor (model side)
+//! instead of running the remaining phases for a client that gave up.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::engine::{AllocPolicy, JobPart, PrunOptions, Session};
+use crate::engine::{
+    AllocPolicy, Budget, CancelToken, JobPart, PrunOptions, SchedError, Session,
+    TaskCancelled,
+};
 use crate::runtime::Tensor;
 use crate::simcpu::ocr::OcrVariant;
 
@@ -72,11 +81,28 @@ impl OcrPipeline {
 
     /// Run the full pipeline on one image.
     pub fn process(&self, img: &Image, variant: OcrVariant) -> Result<OcrResult> {
+        self.process_budgeted(img, variant, &CancelToken::new(), None)
+    }
+
+    /// [`process`](Self::process) under a serving request's control: the
+    /// request's `cancel` token and remaining `budget` travel into every
+    /// model invocation (detection, classification, recognition), so the
+    /// scheduler rejects still-queued parts of an out-of-time request
+    /// and kills a running part when the request's clock ends. The
+    /// CPU-side phase boundaries check both too — a request that died
+    /// during classification never pays for recognition crops.
+    pub fn process_budgeted(
+        &self,
+        img: &Image,
+        variant: OcrVariant,
+        cancel: &CancelToken,
+        budget: Option<Budget>,
+    ) -> Result<OcrResult> {
         // ---- Phase 1: detection (identical in all variants) ----
         let t0 = Instant::now();
         let score = self
             .session
-            .run("ocr_det", vec![img.to_tensor(&self.meta)])
+            .run_cancellable("ocr_det", vec![img.to_tensor(&self.meta)], cancel.clone(), budget)
             .context("detection")?;
         let boxes = detect::extract_boxes(img, &self.meta, score[0].as_f32()?);
         let det = t0.elapsed();
@@ -86,6 +112,7 @@ impl OcrPipeline {
         }
 
         // ---- Phase 2: orientation classification ----
+        check_request(cancel, budget).context("before classification")?;
         let t1 = Instant::now();
         let upright_crops: Vec<(Tensor, usize)> = boxes
             .iter()
@@ -97,6 +124,8 @@ impl OcrPipeline {
         let cls_logits = self.run_phase(
             upright_crops.iter().map(|(t, bucket)| (format!("ocr_cls_w{bucket}"), t.clone())),
             variant,
+            cancel,
+            budget,
         )?;
         let flipped: Vec<bool> = cls_logits
             .iter()
@@ -108,6 +137,7 @@ impl OcrPipeline {
         let cls = t1.elapsed();
 
         // ---- Phase 3: rectify + recognition ----
+        check_request(cancel, budget).context("before recognition")?;
         let t2 = Instant::now();
         let rec_inputs: Vec<(String, Tensor)> = boxes
             .iter()
@@ -118,7 +148,7 @@ impl OcrPipeline {
                 Ok((format!("ocr_rec_w{bucket}"), crop))
             })
             .collect::<Result<_>>()?;
-        let rec_out = self.run_phase(rec_inputs.into_iter(), variant)?;
+        let rec_out = self.run_phase(rec_inputs.into_iter(), variant, cancel, budget)?;
         let texts: Vec<Option<String>> = rec_out
             .iter()
             .map(|out| {
@@ -132,27 +162,49 @@ impl OcrPipeline {
         Ok(OcrResult { boxes, texts, flipped, timing: PhaseTiming { det, cls, rec } })
     }
 
-    /// Run one per-box phase under the chosen variant.
+    /// Run one per-box phase under the chosen variant, threading the
+    /// request's token and budget into every scheduler submission.
     fn run_phase(
         &self,
         inputs: impl Iterator<Item = (String, Tensor)>,
         variant: OcrVariant,
+        cancel: &CancelToken,
+        budget: Option<Budget>,
     ) -> Result<Vec<Vec<Tensor>>> {
-        let parts: Vec<JobPart> =
-            inputs.map(|(model, t)| JobPart::new(model, vec![t])).collect();
+        let parts: Vec<JobPart> = inputs
+            .map(|(model, t)| JobPart::new(model, vec![t]).with_cancel(cancel.clone()))
+            .collect();
         match variant {
             OcrVariant::Base => {
-                // unmodified pipeline: iterate, each run owns all cores
+                // unmodified pipeline: iterate, each run owns all cores —
+                // and a request that dies mid-loop stops at the next box
                 parts
                     .into_iter()
-                    .map(|p| self.session.run(&p.model, p.inputs))
+                    .map(|p| {
+                        check_request(cancel, budget)?;
+                        self.session.run_cancellable(&p.model, p.inputs, cancel.clone(), budget)
+                    })
                     .collect()
             }
-            OcrVariant::Prun(policy) => {
-                Ok(self.session.prun(parts, PrunOptions { policy, ..Default::default() })?.outputs)
-            }
+            OcrVariant::Prun(policy) => Ok(self
+                .session
+                .prun(parts, PrunOptions { policy, budget, ..Default::default() })?
+                .outputs),
         }
     }
+}
+
+/// CPU-side phase guard: fail fast with the same typed errors the
+/// scheduler uses, so a request cancelled or out of time between model
+/// invocations never pays for the next phase's crop/tensor work.
+fn check_request(cancel: &CancelToken, budget: Option<Budget>) -> Result<()> {
+    if cancel.is_cancelled() {
+        return Err(anyhow::Error::new(TaskCancelled));
+    }
+    if budget.is_some_and(|b| b.expired()) {
+        return Err(anyhow::Error::new(SchedError::BudgetExpired));
+    }
+    Ok(())
 }
 
 /// Exact-match accuracy of a result against ground truth.

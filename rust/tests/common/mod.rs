@@ -1,0 +1,102 @@
+//! Shared mock-scheduler fixtures for the integration-test crates
+//! (each test crate compiles its own copy via `mod common;` — the
+//! standard pattern for sharing across Cargo's per-file test crates).
+#![allow(dead_code)] // each test crate uses a subset of the fixtures
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dnc_serve::coordinator::{Batcher, EmbedRequest};
+use dnc_serve::engine::{PartTask, SchedConfig, Scheduler, TaskRunner};
+use dnc_serve::runtime::{CancelToken, ExecResult, ReplyFn, TaskCancelled, Tensor};
+
+/// "Executes" every task for 10 simulated seconds — far past any test
+/// timeout or budget — unless its cancel token fires first (polled
+/// every 1ms).
+pub struct StallRunner {
+    pub workers: usize,
+}
+
+impl TaskRunner for StallRunner {
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn run_on(
+        &self,
+        worker: usize,
+        _model: &str,
+        _inputs: Vec<Tensor>,
+        _threads: usize,
+        cancel: CancelToken,
+        reply: ReplyFn,
+    ) {
+        std::thread::spawn(move || {
+            for _ in 0..10_000 {
+                if cancel.is_cancelled() {
+                    reply(Err(anyhow::Error::new(TaskCancelled)));
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            reply(Ok(ExecResult {
+                outputs: Vec::new(),
+                exec_time: Duration::from_secs(10),
+                worker,
+            }));
+        });
+    }
+}
+
+/// The router's embed pipeline over a mock scheduler: a pipelined
+/// batcher whose submitter tags one stalling scheduler task per request
+/// with the request's cancel token *and* budget — what
+/// `ServerState::new` builds over `BertServer::serve_submit_budgeted`.
+/// With `reap_expired`, the flusher also runs the router's flush-time
+/// admission control: budget-dead requests get the structured
+/// `deadline_rejected` reply and are never submitted.
+pub fn embed_stack(
+    cores: usize,
+    threads_per_task: usize,
+    max_batch: usize,
+    max_wait: Duration,
+    reap_expired: bool,
+) -> (Arc<Scheduler>, Batcher<EmbedRequest, Result<Vec<f32>, String>>) {
+    let sched = Scheduler::start(
+        SchedConfig { cores, aging: Duration::from_millis(10), ..Default::default() },
+        Arc::new(StallRunner { workers: 2 }),
+    );
+    let s2 = Arc::clone(&sched);
+    let batcher = Batcher::start_pipelined_with_reaper(
+        max_batch,
+        max_wait,
+        move |r: &EmbedRequest| {
+            (reap_expired && r.budget.expired()).then(|| {
+                Err("deadline_rejected: request budget exhausted before execution"
+                    .to_string())
+            })
+        },
+        move |requests: Vec<EmbedRequest>| {
+            let handles: Vec<_> = requests
+                .into_iter()
+                .map(|r| {
+                    s2.submit(
+                        PartTask::new("stall", Vec::new(), threads_per_task)
+                            .with_cancel(r.cancel)
+                            .with_budget(r.budget),
+                    )
+                })
+                .collect();
+            Box::new(move || {
+                handles
+                    .into_iter()
+                    .map(|h| match h.wait() {
+                        Ok(_) => Ok(Vec::new()),
+                        Err(e) => Err(format!("{e:#}")),
+                    })
+                    .collect()
+            })
+        },
+    );
+    (sched, batcher)
+}

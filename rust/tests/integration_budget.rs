@@ -1,0 +1,130 @@
+//! End-to-end request-budget propagation over a mock scheduler — no
+//! PJRT artifacts needed, so these always run. They pin the PR's
+//! acceptance criteria:
+//!
+//! 1. a request whose budget expires *while queued in the batcher* is
+//!    reaped at flush time with a structured `deadline_rejected` reply
+//!    and **never reaches the scheduler** (`submitted` stays 0);
+//! 2. a request with total budget `T` that spends `w` ms accumulating
+//!    in the batcher gets a part running window of at most `T - w`: the
+//!    dispatcher kills the part at the budget's absolute deadline
+//!    (`T` from mint), not `w + deadline_running` — asserted against a
+//!    stall runner whose nominal execution is far longer than any
+//!    budget, with the kill attributed to the budget source.
+//!
+//! The stack mirrors `ServerState::new` exactly: a pipelined batcher
+//! with the router's reaper shape, a submitter tagging one scheduler
+//! task per request with the request's token *and* budget.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dnc_serve::coordinator::{Batcher, EmbedRequest};
+use dnc_serve::engine::{Budget, Scheduler};
+use dnc_serve::runtime::CancelToken;
+
+/// The router's embed pipeline with budgets over the shared stalling
+/// mock stack (`tests/common`): flush-time reaper plus a submitter that
+/// stamps each request's budget onto its scheduler task (what
+/// `ServerState::new` builds over `serve_submit_budgeted`).
+fn budgeted_embed_stack(
+    max_wait: Duration,
+) -> (Arc<Scheduler>, Batcher<EmbedRequest, Result<Vec<f32>, String>>) {
+    common::embed_stack(4, 2, 16, max_wait, true)
+}
+
+#[test]
+fn budget_dead_in_batcher_never_reaches_the_scheduler() {
+    // The batcher accumulates for 80ms; the request only has 10ms of
+    // budget. At flush time the reaper must settle it structurally —
+    // nothing is ever submitted to the scheduler.
+    let (sched, batcher) = budgeted_embed_stack(Duration::from_millis(80));
+    let rx = batcher.submit(EmbedRequest {
+        ids: vec![1, 2],
+        cancel: CancelToken::new(),
+        budget: Budget::new(Duration::from_millis(10)),
+    });
+    let reply = rx.recv_timeout(Duration::from_secs(5)).expect("reaper must reply");
+    let e = reply.expect_err("expired request must be rejected");
+    assert!(
+        e.contains("deadline_rejected"),
+        "want the structured deadline_rejected reply, got: {e}"
+    );
+    // give any (buggy) submission a moment to land, then check
+    std::thread::sleep(Duration::from_millis(20));
+    let st = sched.stats();
+    assert_eq!(st.submitted, 0, "expired request reached the scheduler: {st:?}");
+    assert_eq!(st.cores_busy, 0, "{st:?}");
+}
+
+#[test]
+fn fresh_requests_still_flow_through() {
+    // Sanity for the same stack: a request with plenty of budget is
+    // submitted (and, on this stall runner, killed at its own deadline
+    // rather than running the nominal 10s).
+    let (sched, batcher) = budgeted_embed_stack(Duration::from_millis(5));
+    let rx = batcher.submit(EmbedRequest {
+        ids: vec![1, 2],
+        cancel: CancelToken::new(),
+        budget: Budget::new(Duration::from_millis(150)),
+    });
+    let reply = rx.recv_timeout(Duration::from_secs(5)).expect("reply must arrive");
+    assert!(reply.is_err(), "stall runner can only end by budget kill");
+    let st = sched.stats();
+    assert_eq!(st.submitted, 1, "fresh request must be submitted: {st:?}");
+}
+
+#[test]
+fn part_running_window_is_the_remaining_budget() {
+    // Total budget T = 400ms, of which w ≈ 150ms is burned accumulating
+    // in the batcher. The part launches with ~250ms left and the
+    // dispatcher must kill it at T from mint — NOT at launch + 400ms,
+    // and certainly not never (the stall runner nominally runs 10s).
+    let total = Duration::from_millis(400);
+    let w = Duration::from_millis(150);
+    let (sched, batcher) = budgeted_embed_stack(w);
+    let t0 = Instant::now();
+    let rx = batcher.submit(EmbedRequest {
+        ids: vec![1, 2, 3],
+        cancel: CancelToken::new(),
+        budget: Budget::new(total),
+    });
+    let reply = rx.recv_timeout(Duration::from_secs(5)).expect("kill must reply");
+    let waited = t0.elapsed();
+    let e = reply.expect_err("budget kill must surface as an error");
+    assert!(e.contains("cancelled"), "want the typed kill, got: {e}");
+    // launched only after the batcher wait...
+    assert!(
+        waited >= w,
+        "reply before the batch even flushed: {waited:?} < {w:?}"
+    );
+    // ...and killed at the *request's* deadline: T from mint plus sweep
+    // and scheduling slack — which implies the part's running window
+    // was at most T - w (+ slack), i.e. the budget charged the batcher
+    // wait instead of granting a fresh allowance at launch.
+    assert!(
+        waited < total + Duration::from_millis(250),
+        "kill came later than the request's own deadline: {waited:?}"
+    );
+    // attribution: an enforcement kill, from the budget source
+    let t1 = Instant::now();
+    while sched.stats().running_deadline_cancelled_budget != 1
+        && t1.elapsed() < Duration::from_secs(5)
+    {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(sched.drain(Duration::from_secs(5)), "{:?}", sched.stats());
+    let st = sched.stats();
+    assert_eq!(st.running_deadline_cancelled_budget, 1, "{st:?}");
+    assert_eq!(st.running_deadline_cancelled, 1, "{st:?}");
+    assert_eq!(st.cancelled, 1, "{st:?}");
+    assert_eq!(st.budget_expired, 0, "the part launched in time: {st:?}");
+    assert_eq!(st.cores_busy, 0, "cores must return after the kill: {st:?}");
+    assert_eq!(
+        st.submitted,
+        st.completed + st.failed + st.deadline_rejected + st.budget_expired + st.cancelled,
+        "accounting invariant: {st:?}"
+    );
+}

@@ -18,6 +18,10 @@ type Running = (
 );
 
 fn start_server() -> Option<Running> {
+    start_server_with(|_| {})
+}
+
+fn start_server_with(tweak: impl FnOnce(&mut Config)) -> Option<Running> {
     let dir = artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built");
@@ -30,6 +34,7 @@ fn start_server() -> Option<Running> {
     let mut config = Config::default();
     config.port = 0; // pick a free port
     config.max_wait_ms = 2;
+    tweak(&mut config);
     let state = ServerState::new(bert, ocr, config);
     let server = Server::bind(Arc::clone(&state)).unwrap();
     let addr = server.local_addr().to_string();
@@ -227,6 +232,45 @@ fn concurrent_prun_jobs_share_the_scheduler() {
     assert_eq!(st.inflight, 0);
     assert_eq!(st.queue_depth, 0);
     assert_eq!(st.cores_busy, 0);
+}
+
+#[test]
+fn ocr_request_times_out_structurally() {
+    // A 1ms OCR budget cannot cover even detection: the op must return
+    // the structured timeout error promptly (instead of pinning the
+    // connection thread for the whole pipeline), count ocr_timeouts,
+    // and cancel its token so the pipeline's scheduler tasks release
+    // their cores — the server then still quiesces on stop.
+    let Some((stop, join, addr, state)) = start_server_with(|c| c.ocr_timeout_ms = 1)
+    else {
+        return;
+    };
+    let mut client = Client::connect(&addr).unwrap();
+    let resp = client
+        .call(&obj(vec![("op", s("ocr")), ("seed", num(3.0)), ("boxes", num(6.0))]))
+        .unwrap();
+    // Two correct refusal paths race at the 1ms mark: the connection
+    // thread's recv timeout ("request timed out", counted in
+    // ocr_timeouts), or the pipeline's own typed budget error arriving
+    // first ("request budget exhausted" from the scheduler sweep).
+    let msg = resp.get("error").expect("1ms OCR budget must trip").as_str().unwrap();
+    assert!(
+        msg.contains("timed out") || msg.contains("budget exhausted") || msg.contains("cancelled"),
+        "unexpected error: {msg}"
+    );
+    let timeouts = state
+        .metrics
+        .counter("ocr_timeouts")
+        .load(std::sync::atomic::Ordering::Relaxed);
+    if msg.contains("timed out") {
+        assert!(timeouts >= 1, "ocr_timeouts not counted: {timeouts}");
+    }
+
+    stop.stop();
+    join.join().unwrap();
+    let st = state.bert.session().scheduler().stats();
+    assert_eq!(st.inflight, 0, "cancelled OCR work must drain: {st:?}");
+    assert_eq!(st.cores_busy, 0, "{st:?}");
 }
 
 #[test]

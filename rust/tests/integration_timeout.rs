@@ -12,97 +12,26 @@
 //! [`CancelToken`], and `embed_with_timeout` (the function `embed` /
 //! `embed_tokens` route through) cancels that token on expiry.
 
+mod common;
+
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dnc_serve::coordinator::{embed_with_timeout, Batcher, EmbedRequest};
-use dnc_serve::engine::{PartTask, SchedConfig, Scheduler, TaskRunner};
+use dnc_serve::engine::{Budget, Scheduler};
 use dnc_serve::metrics::Metrics;
-use dnc_serve::runtime::{CancelToken, ExecResult, ReplyFn, TaskCancelled, Tensor};
+use dnc_serve::runtime::CancelToken;
 
-/// "Executes" every task for 10 simulated seconds — far past any test
-/// timeout — unless its cancel token fires first (polled every 1ms).
-struct StallRunner;
-
-impl TaskRunner for StallRunner {
-    fn workers(&self) -> usize {
-        2
-    }
-
-    fn run_on(
-        &self,
-        worker: usize,
-        _model: &str,
-        _inputs: Vec<Tensor>,
-        _threads: usize,
-        cancel: CancelToken,
-        reply: ReplyFn,
-    ) {
-        std::thread::spawn(move || {
-            if cancel.is_cancelled() {
-                reply(Err(anyhow::Error::new(TaskCancelled)));
-                return;
-            }
-            for _ in 0..10_000 {
-                std::thread::sleep(Duration::from_millis(1));
-                if cancel.is_cancelled() {
-                    reply(Err(anyhow::Error::new(TaskCancelled)));
-                    return;
-                }
-            }
-            reply(Ok(ExecResult {
-                outputs: Vec::new(),
-                exec_time: Duration::from_secs(10),
-                worker,
-            }));
-        });
-    }
-}
-
-/// The router's embed pipeline over a mock scheduler: a pipelined
-/// batcher whose submitter enqueues one task per request, carrying the
-/// request's cancel token (what `ServerState::new` builds over
-/// `BertServer::serve_submit_cancellable`).
+/// The router's embed pipeline over the shared stalling mock stack
+/// (`tests/common`): one scheduler task per request, carrying the
+/// request's cancel token *and* budget (what `ServerState::new` builds
+/// over `BertServer::serve_submit_budgeted`), no flush-time reaper.
 fn stalling_embed_stack(
     cores: usize,
     threads_per_task: usize,
 ) -> (Arc<Scheduler>, Batcher<EmbedRequest, Result<Vec<f32>, String>>) {
-    let sched = Scheduler::start(
-        SchedConfig {
-            cores,
-            aging: Duration::from_millis(10),
-            backfill: true,
-            ..Default::default()
-        },
-        Arc::new(StallRunner),
-    );
-    let s2 = Arc::clone(&sched);
-    let batcher = Batcher::start_pipelined(
-        4,
-        Duration::from_millis(1),
-        move |requests: Vec<EmbedRequest>| {
-            let handles: Vec<_> = requests
-                .into_iter()
-                .map(|r| {
-                    s2.submit(
-                        PartTask::new("stall", Vec::new(), threads_per_task)
-                            .with_cancel(r.cancel),
-                    )
-                })
-                .collect();
-            Box::new(move || {
-                handles
-                    .into_iter()
-                    .map(|h| match h.wait() {
-                        Ok(_) => Ok(Vec::new()),
-                        Err(e) => Err(format!("{e:#}")),
-                    })
-                    .collect()
-            })
-        },
-    );
-    (sched, batcher)
+    common::embed_stack(cores, threads_per_task, 4, Duration::from_millis(1), false)
 }
 
 #[test]
@@ -113,16 +42,29 @@ fn timed_out_embed_returns_structured_error_and_cancels_its_task() {
     let t0 = Instant::now();
     let resp =
         embed_with_timeout(&batcher, &metrics, vec![1, 2, 3], Duration::from_millis(50));
-    // 1. structured timeout error, promptly
+    // 1. structured error, promptly. Two correct mechanisms race at the
+    // 50ms mark: the router's recv timeout ("request timed out"), or
+    // the dispatcher's own enforcement of the request budget minted
+    // from the same 50ms — whose "task cancelled" reply can land just
+    // as the router wakes. Either is the request being refused in time.
     let msg = resp.get("error").expect("timeout must error").as_str().unwrap();
-    assert!(msg.contains("timed out"), "unexpected error: {msg}");
+    assert!(
+        msg.contains("timed out") || msg.contains("cancelled"),
+        "unexpected error: {msg}"
+    );
     assert!(
         t0.elapsed() < Duration::from_secs(5),
         "timeout path took {:?}",
         t0.elapsed()
     );
-    // 2. counted
-    assert_eq!(metrics.counter("request_timeouts").load(Ordering::Relaxed), 1);
+    // 2. counted — exactly once when the router's timeout fired; not at
+    // all when the budget enforcement replied first
+    let timeouts = metrics.counter("request_timeouts").load(Ordering::Relaxed);
+    if msg.contains("timed out") {
+        assert_eq!(timeouts, 1);
+    } else {
+        assert_eq!(timeouts, 0);
+    }
     // 3. the stalled task was cancelled: the scheduler must go fully
     // idle (10s nominal execution, 5s drain budget — only cancellation
     // makes this pass) and release every ledger core
@@ -142,7 +84,7 @@ fn timed_out_embed_returns_structured_error_and_cancels_its_task() {
     assert_eq!(st.completed, 0);
     assert_eq!(
         st.submitted,
-        st.completed + st.failed + st.deadline_rejected + st.cancelled,
+        st.completed + st.failed + st.deadline_rejected + st.budget_expired + st.cancelled,
         "accounting invariant: {st:?}"
     );
 }
@@ -155,10 +97,14 @@ fn timed_out_embed_cancelled_while_queued_takes_no_cores() {
     let (sched, batcher) = stalling_embed_stack(2, 2);
     let metrics = Metrics::new();
 
-    // occupy the budget with a request nobody times out (yet)
+    // occupy the core budget with a request nobody times out (yet): a
+    // generous request budget that never fires during the test
     let hog_cancel = CancelToken::new();
-    let hog_rx = batcher
-        .submit(EmbedRequest { ids: vec![9, 9], cancel: hog_cancel.clone() });
+    let hog_rx = batcher.submit(EmbedRequest {
+        ids: vec![9, 9],
+        cancel: hog_cancel.clone(),
+        budget: Budget::new(Duration::from_secs(600)),
+    });
     // wait until the hog's task actually holds the cores
     let t0 = Instant::now();
     while sched.stats().cores_busy != 2 && t0.elapsed() < Duration::from_secs(5) {
@@ -169,16 +115,26 @@ fn timed_out_embed_cancelled_while_queued_takes_no_cores() {
     let resp =
         embed_with_timeout(&batcher, &metrics, vec![1, 2, 3], Duration::from_millis(50));
     assert!(resp.get("error").is_some(), "queued request must time out: {resp:?}");
-    assert_eq!(metrics.counter("request_timeouts").load(Ordering::Relaxed), 1);
 
-    // the queued task must be swept without touching the ledger
+    // The queued task must be swept without touching the ledger. Two
+    // correct mechanisms race at the 50ms mark: the router's timeout
+    // cancels the token (request_timeouts + sched.cancelled), or the
+    // dispatcher's own sweep sees the request budget — minted from the
+    // same 50ms — die first (sched.budget_expired, the reply arriving
+    // before the router even times out). Either way: no cores, no queue.
     let t0 = Instant::now();
-    while sched.stats().cancelled != 1 && t0.elapsed() < Duration::from_secs(5) {
+    while sched.stats().cancelled + sched.stats().budget_expired != 1
+        && t0.elapsed() < Duration::from_secs(5)
+    {
         std::thread::sleep(Duration::from_millis(1));
     }
     let st = sched.stats();
-    assert_eq!(st.cancelled, 1, "cancelled task never swept: {st:?}");
-    assert_eq!(st.queue_depth, 0, "cancelled task stuck in queue: {st:?}");
+    assert_eq!(
+        st.cancelled + st.budget_expired,
+        1,
+        "doomed task never swept: {st:?}"
+    );
+    assert_eq!(st.queue_depth, 0, "doomed task stuck in queue: {st:?}");
     assert_eq!(st.cores_busy, 2, "only the hog may hold cores: {st:?}");
 
     // release the hog too; everything must drain

@@ -4,9 +4,10 @@
 //!
 //! - the core ledger **never oversubscribes** the budget, under random
 //!   part sizes/priorities and concurrent submitters;
-//! - **every** submitted task completes (or is deadline-rejected or
-//!   cancelled) and the accounting invariant `submitted == completed +
-//!   failed + deadline_rejected + cancelled` holds at quiescence;
+//! - **every** submitted task completes (or is deadline-rejected,
+//!   budget-expired or cancelled) and the accounting invariant
+//!   `submitted == completed + failed + deadline_rejected +
+//!   budget_expired + cancelled` holds at quiescence;
 //! - a large part is **never starved** past the aging bound by a stream
 //!   of backfilled small parts;
 //! - a **cancelled-while-queued task never reaches an executor worker**
@@ -17,15 +18,20 @@
 //! - the accounting invariant still balances when the dispatcher's
 //!   **running-deadline enforcer** cancels in-flight tasks;
 //! - the adaptive **aging bound monotonically tracks** injected latency
-//!   shifts (within its clamp).
+//!   shifts (within its clamp);
+//! - the invariant still balances with **request-budget expiry** in the
+//!   mix: born-expired budgets are rejected without ever reaching a
+//!   worker, queued-past-budget tasks land in `budget_expired`, and
+//!   mid-run budget kills land in `cancelled` (+ the
+//!   `running_deadline_cancelled_budget` split).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dnc_serve::engine::{
-    allocate_weighted, AdaptiveConfig, AdaptivePolicy, AllocPolicy, PartTask, Priority,
-    ProfileStore, SchedConfig, SchedError, Scheduler, TaskRunner,
+    allocate_weighted, AdaptiveConfig, AdaptivePolicy, AllocPolicy, Budget, PartTask,
+    Priority, ProfileStore, SchedConfig, SchedError, Scheduler, TaskRunner,
 };
 use dnc_serve::runtime::{CancelToken, ExecResult, ReplyFn, TaskCancelled, Tensor};
 use dnc_serve::util::prop::check;
@@ -133,7 +139,7 @@ fn assert_accounting_balanced(sched: &Scheduler) {
     assert_eq!(st.cores_busy, 0, "ledger must return to empty: {st:?}");
     assert_eq!(
         st.submitted,
-        st.completed + st.failed + st.deadline_rejected + st.cancelled,
+        st.completed + st.failed + st.deadline_rejected + st.budget_expired + st.cancelled,
         "accounting invariant violated: {st:?}"
     );
 }
@@ -617,4 +623,91 @@ fn aging_bound_monotonically_tracks_latency_shifts() {
         recovered <= bounds[0] + Duration::from_millis(1),
         "bound must recover after the shift clears: {recovered:?} vs {bounds:?}"
     );
+}
+
+#[test]
+fn accounting_holds_with_budget_expiry() {
+    // Property (request budgets): with a random mix of budget-less
+    // tasks, born-expired budgets, and tight budgets over long runs, at
+    // quiescence the extended invariant `submitted == completed +
+    // failed + deadline_rejected + budget_expired + cancelled` balances,
+    // the counters agree with the per-handle error types, born-expired
+    // tasks never reach a worker, and no ledger core stays occupied.
+    check(3, |g| {
+        let capacity = *g.choice(&[2usize, 4]);
+        let (sched, probe) = tracking_sched(SchedConfig {
+            cores: capacity,
+            aging: Duration::from_millis(10),
+            backfill: true,
+            ..Default::default()
+        });
+        let k = g.usize_in(10, 20);
+        #[derive(Clone, Copy, PartialEq)]
+        enum Kind {
+            Plain,
+            BornExpired,
+            TightBudget,
+        }
+        let mut born_expired = 0usize;
+        let handles: Vec<_> = (0..k)
+            .map(|_| {
+                let kind = *g.choice(&[Kind::Plain, Kind::BornExpired, Kind::TightBudget]);
+                let threads = g.usize_in(1, capacity);
+                let task = match kind {
+                    // short task, no budget: completes
+                    Kind::Plain => PartTask::new(model_name(threads, 2), Vec::new(), threads),
+                    // zero budget: must be rejected before any worker
+                    Kind::BornExpired => {
+                        born_expired += 1;
+                        PartTask::new(model_name(threads, 2), Vec::new(), threads)
+                            .with_budget(Budget::new(Duration::ZERO))
+                    }
+                    // long run, tight budget: expires queued (budget_
+                    // expired) or mid-run (cancelled), depending on
+                    // where the random queueing put it
+                    Kind::TightBudget => {
+                        PartTask::new(model_name(threads, 60), Vec::new(), threads)
+                            .with_budget(Budget::new(Duration::from_millis(15)))
+                    }
+                };
+                sched.submit(task)
+            })
+            .collect();
+        let (mut ok, mut cancelled_seen, mut budget_seen) = (0u64, 0u64, 0u64);
+        for h in handles {
+            match h.wait() {
+                Ok(_) => ok += 1,
+                Err(e) => match e.downcast_ref::<SchedError>() {
+                    Some(SchedError::Cancelled) => cancelled_seen += 1,
+                    Some(SchedError::BudgetExpired) => budget_seen += 1,
+                    other => panic!("unexpected error kind {other:?}: {e:#}"),
+                },
+            }
+        }
+        assert_accounting_balanced(&sched);
+        assert_eq!(probe.active.load(Ordering::SeqCst), 0);
+        let st = sched.stats();
+        assert_eq!(st.submitted, k as u64);
+        assert_eq!(st.completed, ok, "handle view and counters agree: {st:?}");
+        assert_eq!(st.cancelled, cancelled_seen, "{st:?}");
+        assert_eq!(st.budget_expired, budget_seen, "{st:?}");
+        assert_eq!(st.failed, 0, "{st:?}");
+        assert!(
+            budget_seen >= born_expired as u64,
+            "every born-expired budget must be rejected: {budget_seen} < {born_expired}"
+        );
+        // mid-run budget kills are enforcement kills, attributed to the
+        // budget source — never to the (unset) global running deadline
+        assert_eq!(st.running_deadline_cancelled, cancelled_seen, "{st:?}");
+        assert_eq!(st.running_deadline_cancelled_budget, cancelled_seen, "{st:?}");
+        // born-expired tasks must never have reached a worker: runs are
+        // at most the tasks that were not rejected at admission
+        assert!(
+            probe.runs.load(Ordering::SeqCst) as u64 <= k as u64 - budget_seen,
+            "budget-rejected tasks reached a worker: runs {} vs k {} - budget {}",
+            probe.runs.load(Ordering::SeqCst),
+            k,
+            budget_seen
+        );
+    });
 }
