@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use dnc_serve::engine::{JobPart, PrunOptions, Session};
+use dnc_serve::engine::{JobPart, PrunRequest, RequestCtx, Session};
 use dnc_serve::nlp::Tokenizer;
 use dnc_serve::runtime::{artifacts_dir, Manifest, Tensor};
 
@@ -43,8 +43,10 @@ fn main() -> anyhow::Result<()> {
             )
         })
         .collect();
+    // One RequestCtx per request — here the example itself is the
+    // ingress. A real serving edge would attach a budget/priority too.
     let t1 = std::time::Instant::now();
-    let outcome = session.prun(parts, PrunOptions::default())?;
+    let outcome = session.prun(PrunRequest::new(parts), &RequestCtx::new())?;
     println!(
         "prun: 3 parts, thread allocation {:?} (sizes 16/64/256 tokens), {:.1} ms",
         outcome.allocation,

@@ -9,7 +9,7 @@
 
 use std::sync::Arc;
 
-use dnc_serve::engine::Session;
+use dnc_serve::engine::{RequestCtx, Session};
 use dnc_serve::ocr::OcrMeta;
 use dnc_serve::runtime::{artifacts_dir, Manifest};
 use dnc_serve::simcpu::ocr::OcrVariant;
@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
         let (mut hits, mut total) = (0usize, 0usize);
         for t in 0..n_frames {
             let frame = render_frame(&sc, &meta, t);
-            let res = pipeline.next_frame(&frame, variant)?;
+            let res = pipeline.next_frame(&frame, variant, &RequestCtx::new())?;
             if t == 0 {
                 continue; // primes the differencer
             }

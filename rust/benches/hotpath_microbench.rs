@@ -143,7 +143,7 @@ fn main() {
     // This is the L3 cost of divide-and-conquer itself (scheduler submit,
     // ledger admission, channel round-trip, input handoff).
     {
-        use dnc_serve::engine::{JobPart, PrunOptions, Session};
+        use dnc_serve::engine::{JobPart, PrunRequest, RequestCtx, Session};
         let manifest = Arc::new(Manifest::load(&dir).unwrap());
         let session = Session::new(manifest, 16, 1).unwrap();
         session.warmup(&["ocr_rec_w64"]).unwrap();
@@ -153,13 +153,13 @@ fn main() {
         };
         // warmup
         for _ in 0..5 {
-            session.prun(parts(), PrunOptions::default()).unwrap();
+            session.prun(PrunRequest::new(parts()), &RequestCtx::new()).unwrap();
         }
         let iters = 100;
         let mut overhead_ns = 0u128;
         for _ in 0..iters {
             let t0 = Instant::now();
-            let outcome = session.prun(parts(), PrunOptions::default()).unwrap();
+            let outcome = session.prun(PrunRequest::new(parts()), &RequestCtx::new()).unwrap();
             let wall = t0.elapsed();
             let exec: std::time::Duration = outcome.reports.iter().map(|r| r.exec).sum();
             overhead_ns += wall.saturating_sub(exec).as_nanos() / 4;

@@ -12,7 +12,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use dnc_serve::engine::{JobPart, PrunOptions, SchedConfig, Session};
+use dnc_serve::engine::{JobPart, PrunRequest, RequestCtx, SchedConfig, Session};
 use dnc_serve::nlp::Tokenizer;
 use dnc_serve::runtime::{artifacts_dir, Manifest, Tensor};
 use dnc_serve::util::stats::mean;
@@ -64,7 +64,8 @@ fn main() {
                 for j in 0..3u64 {
                     parts.push(bert_part(&tok, short, seed * 31 + j));
                 }
-                let outcome = session.prun(parts, PrunOptions::default()).unwrap();
+                let outcome =
+                    session.prun(PrunRequest::new(parts), &RequestCtx::new()).unwrap();
                 assert_eq!(outcome.outputs.len(), 4);
                 walls.push(outcome.wall.as_secs_f64() * 1e3);
                 long_queues.push(outcome.reports[0].queue.as_secs_f64() * 1e3);

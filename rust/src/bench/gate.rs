@@ -19,7 +19,7 @@ use std::time::{Duration, Instant};
 
 use crate::engine::{
     allocate_weighted, weights, AdaptiveConfig, AdaptivePolicy, AllocPolicy, Budget,
-    PartTask, ProfileStore, SchedConfig, Scheduler, TaskRunner,
+    PartTask, Priority, ProfileStore, RequestCtx, SchedConfig, Scheduler, TaskRunner,
 };
 use crate::runtime::{CancelToken, ExecResult, ReplyFn, TaskCancelled, Tensor};
 use crate::simcpu::ScalProfile;
@@ -284,6 +284,42 @@ pub fn cancel_storm_scenario(jobs: usize) -> ScenarioResult {
     ScenarioResult::from_walls("cancel_storm", &walls, t0.elapsed().as_secs_f64())
 }
 
+/// The ROADMAP's priority-inversion scenario, exercising
+/// `RequestCtx::priority` end to end: eight Low-priority hog jobs are
+/// submitted at once — the first four saturate the 16-core ledger, the
+/// second four queue behind them — and then a High-priority
+/// latency-sensitive job arrives *last*. Its ctx priority must jump it
+/// ahead of the queued Low wave, so its wall time is one hog
+/// generation (~30ms) plus its own execution, not two. If priority
+/// admission regresses (ordering bug, a ctx priority dropped on the
+/// floor between layers), the high job waits out the entire second
+/// wave and p95 roughly doubles — past any tolerance.
+pub fn priority_inversion_scenario(jobs: usize) -> ScenarioResult {
+    let sched = start_sched(None);
+    let t0 = Instant::now();
+    let mut walls = Vec::with_capacity(jobs);
+    for _ in 0..jobs {
+        let low = RequestCtx::new().with_priority(Priority::Low);
+        let high = RequestCtx::new().with_priority(Priority::High);
+        let tj = Instant::now();
+        let hogs: Vec<_> = (0..8)
+            .map(|_| {
+                sched.submit(PartTask::new(sim_model(100.0), Vec::new(), 4).with_ctx(&low))
+            })
+            .collect();
+        // submitted last, admitted first among the queued work
+        let urgent =
+            sched.submit(PartTask::new(sim_model(10.0), Vec::new(), 4).with_ctx(&high));
+        urgent.wait().expect("high-priority job must complete");
+        walls.push(tj.elapsed().as_secs_f64() * 1e3);
+        // drain the hogs so iterations don't bleed into each other
+        for h in hogs {
+            h.wait().expect("hog job must complete");
+        }
+    }
+    ScenarioResult::from_walls("priority_inversion", &walls, t0.elapsed().as_secs_f64())
+}
+
 /// Run the gate's full scenario list. `quick` shrinks job counts for
 /// the per-PR smoke run; the recorded baseline uses the same counts, so
 /// quick and full runs are not comparable to each other.
@@ -294,6 +330,7 @@ pub fn run_all(quick: bool) -> Vec<ScenarioResult> {
         longshort_scenario(false, jobs),
         longshort_scenario(true, jobs),
         cancel_storm_scenario(jobs),
+        priority_inversion_scenario(jobs),
     ]
 }
 
@@ -476,6 +513,20 @@ mod tests {
         assert!(
             r.p95_ms < 500.0,
             "survivor waited on abandoned work: p95 {:.1}ms",
+            r.p95_ms
+        );
+    }
+
+    #[test]
+    fn priority_inversion_high_job_jumps_the_queued_wave() {
+        // One hog generation is ~30ms simulated; the high-priority job
+        // must finish well before the second Low wave would have let
+        // it run (~60ms+). Generous bound for slow CI boxes.
+        let r = priority_inversion_scenario(3);
+        assert_eq!(r.jobs, 3);
+        assert!(
+            r.p95_ms < 55.0,
+            "high-priority job waited out the low wave: p95 {:.1}ms",
             r.p95_ms
         );
     }

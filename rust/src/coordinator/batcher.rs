@@ -10,20 +10,22 @@
 //! - [`Batcher::start`]: the handler runs synchronously on the flusher
 //!   thread (simple; the flusher is busy while a batch executes).
 //! - [`Batcher::start_pipelined`]: the submitter only *enqueues* the
-//!   batch (e.g. into `engine::sched` via `Session::prun_submit`) and
-//!   returns a resolver closure; a dedicated completion thread waits on
+//!   batch (e.g. into `engine::sched` via `InferenceService::submit`)
+//!   and returns a resolver closure; a dedicated completion thread waits on
 //!   the resolver and distributes replies. The flusher is immediately
 //!   free to accumulate the next batch, so batch N+1 forms and submits
 //!   while batch N executes — and a stalled batch never blocks
 //!   accumulation. Thread count stays fixed (flusher + completer).
 //!
-//! [`Batcher::start_pipelined_with_reaper`] adds flush-time admission
-//! control: a *reaper* closure inspects every item as its batch is
-//! drained and may settle it immediately (e.g. a request whose
-//! end-to-end budget died while accumulating gets a structured
-//! `deadline_rejected` reply) instead of submitting doomed work — time
-//! spent waiting in the batcher is charged against the request, not
-//! forgotten.
+//! [`Batcher::start_service`] is the serving-edge constructor:
+//! pipelined execution plus flush-time admission control — an
+//! *admission* closure inspects every item as its batch is drained and
+//! may settle it immediately (e.g. a request whose `RequestCtx` budget
+//! died while accumulating gets a structured `deadline_rejected`
+//! reply) instead of submitting doomed work — time spent waiting in
+//! the batcher is charged against the request, not forgotten. (The old
+//! `start_pipelined_with_reaper` name survives as a `#[deprecated]`
+//! shim.)
 //!
 //! Shutdown: [`Batcher::shutdown`] (also run by `Drop`) stops intake.
 //! A `submit` after shutdown — or after the flusher died (a panicking
@@ -104,21 +106,34 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
         max_wait: Duration,
         submitter: impl Fn(Vec<T>) -> Resolver<R> + Send + 'static,
     ) -> Batcher<T, R> {
-        Batcher::start_pipelined_with_reaper(max_batch, max_wait, |_| None, submitter)
+        Batcher::start_service(max_batch, max_wait, |_| None, submitter)
     }
 
     /// [`start_pipelined`](Self::start_pipelined) with flush-time
-    /// admission control: as each batch is drained, `reaper` inspects
-    /// every item and may settle it on the spot by returning its reply
-    /// (the item is then never submitted and never counted in flight).
-    /// The serving edge uses this to drop requests whose end-to-end
-    /// budget died while accumulating — doomed work must not take
-    /// scheduler queue space, let alone cores. A batch reaped empty
-    /// skips the submitter entirely.
+    /// admission control.
+    #[deprecated(since = "0.4.0", note = "use `start_service` (same semantics)")]
     pub fn start_pipelined_with_reaper(
         max_batch: usize,
         max_wait: Duration,
         reaper: impl Fn(&T) -> Option<R> + Send + 'static,
+        submitter: impl Fn(Vec<T>) -> Resolver<R> + Send + 'static,
+    ) -> Batcher<T, R> {
+        Batcher::start_service(max_batch, max_wait, reaper, submitter)
+    }
+
+    /// The serving-edge constructor: [`start_pipelined`]
+    /// (`Self::start_pipelined`) plus flush-time admission control. As
+    /// each batch is drained, `admission` inspects every item and may
+    /// settle it on the spot by returning its reply (the item is then
+    /// never submitted and never counted in flight). The serving edge
+    /// uses this to drop requests whose `RequestCtx` says the client is
+    /// gone — cancelled, or out of budget — before they become doomed
+    /// scheduler work. A batch reaped empty skips the submitter
+    /// entirely.
+    pub fn start_service(
+        max_batch: usize,
+        max_wait: Duration,
+        admission: impl Fn(&T) -> Option<R> + Send + 'static,
         submitter: impl Fn(Vec<T>) -> Resolver<R> + Send + 'static,
     ) -> Batcher<T, R> {
         let queue = new_queue(max_batch);
@@ -138,7 +153,7 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
                     let mut kept_items = Vec::with_capacity(items.len());
                     let mut kept_replies = Vec::with_capacity(replies.len());
                     for (item, reply) in items.into_iter().zip(replies) {
-                        match reaper(&item) {
+                        match admission(&item) {
                             // settled at flush time: never submitted,
                             // never in flight
                             Some(r) => {
@@ -490,10 +505,10 @@ mod tests {
     }
 
     #[test]
-    fn reaper_settles_expired_items_at_flush() {
-        // Items > 100 are "expired": the reaper replies u32::MAX for
+    fn admission_settles_expired_items_at_flush() {
+        // Items > 100 are "expired": admission replies u32::MAX for
         // them at flush time; survivors go through the submitter.
-        let b: Batcher<u32, u32> = Batcher::start_pipelined_with_reaper(
+        let b: Batcher<u32, u32> = Batcher::start_service(
             4,
             Duration::from_millis(5),
             |&x| (x > 100).then_some(u32::MAX),
@@ -511,7 +526,7 @@ mod tests {
     fn fully_reaped_batch_skips_the_submitter() {
         let submitted = Arc::new(AtomicUsize::new(0));
         let s2 = Arc::clone(&submitted);
-        let b: Batcher<u32, u32> = Batcher::start_pipelined_with_reaper(
+        let b: Batcher<u32, u32> = Batcher::start_service(
             4,
             Duration::from_millis(5),
             |_| Some(0),

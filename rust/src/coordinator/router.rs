@@ -13,54 +13,50 @@
 //! Every request may carry an `id`, echoed back. Errors come back as
 //! `{"id":..,"error":"..."}`.
 //!
-//! Execution flows through `engine::sched`: embed batches are submitted
-//! via the pipelined batcher (`Session::prun_submit` under the hood), so
-//! a stalled model execution never pins the batcher's accumulation, and
-//! connection threads wait with a bounded timeout instead of a bare
-//! blocking `recv()`. Every embed request carries a [`CancelToken`]
-//! into its job part: when the bounded wait expires, the router cancels
-//! the token, so the request's scheduler task is rejected from the
-//! queue (cores never taken) or stopped at the executor's next poll —
-//! a timed-out client no longer leaves orphaned work burning the core
-//! budget.
+//! The router is the **ingress**: it mints one [`RequestCtx`] per
+//! arriving request — token, end-to-end [`Budget`]
+//! (`--request-timeout-ms` for embed, `--ocr-timeout-ms` for OCR),
+//! priority — and every layer below consumes that one context:
 //!
-//! Every request also carries a [`Budget`] minted here, at the edge:
-//! one end-to-end deadline account (`--request-timeout-ms` for embed,
-//! `--ocr-timeout-ms` for OCR) charged by every layer below. The
-//! batcher's flusher reaps embed requests whose budget died while
-//! accumulating (structured `deadline_rejected` reply,
-//! `embed_budget_expired` counter, nothing submitted); the scheduler
-//! rejects still-queued parts of an out-of-time request
-//! (`sched.budget_expired`) and kills a part still running when the
-//! request's clock ends (`sched.running_deadline_cancelled_budget`).
-//! The OCR op gets the same treatment as embed: a worker thread runs
-//! the pipeline while the connection thread waits with a bounded
-//! timeout, and on expiry the request's token is cancelled
-//! (`ocr_timeouts` counter) so the pipeline's scheduler tasks release
-//! their cores instead of running unbounded for a client that gave up.
+//! - the embed batcher's flush-time admission reads `ctx.is_cancelled()`
+//!   / `ctx.expired()` and settles doomed requests with typed
+//!   [`SubmitError`]s (`embed_cancelled_reaped`, `embed_budget_expired`)
+//!   before they become scheduler work;
+//! - the batch submitter packs each request's ctx into an
+//!   [`EmbedBatch`] and goes through `BertServer`'s
+//!   [`InferenceService::submit`] — one timed-out batchmate yields its
+//!   own typed error without clobbering its siblings;
+//! - the scheduler rejects still-queued parts of an out-of-time request
+//!   (`sched.budget_expired`), rejects up front a request whose
+//!   remaining budget cannot cover the profiled cost
+//!   (`sched.budget_infeasible`), and kills a part still running when
+//!   the request's clock ends (`sched.running_deadline_cancelled_budget`);
+//! - the OCR op submits an [`OcrJob`] through the pipeline's
+//!   [`InferenceService::submit`] (a worker thread runs the phases) and
+//!   bounded-waits the ticket; on expiry the ticket cancels the ctx
+//!   (`ocr_timeouts`), so the pipeline's scheduler tasks release their
+//!   cores instead of running unbounded for a client that gave up.
 
-use std::sync::mpsc::{channel, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::Config;
 use crate::coordinator::batcher::Batcher;
-use crate::engine::{Budget, CancelToken};
+use crate::engine::{Budget, InferenceService, RequestCtx, SubmitError};
 use crate::metrics::Metrics;
-use crate::nlp::BertServer;
-use crate::ocr::{generate, GenOptions, OcrPipeline};
+use crate::nlp::{BertServer, EmbedBatch};
+use crate::ocr::{generate, GenOptions, OcrJob, OcrPipeline};
 use crate::simcpu::ocr::OcrVariant;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::prng::Rng;
 
-/// One embed request travelling through the batcher: the token ids, the
-/// requester's cancellation token (cancelled on router timeout), and
-/// the request's end-to-end deadline account (minted at arrival, so
-/// batcher accumulation time is charged against it).
+/// One embed request travelling through the batcher: the token ids plus
+/// the request's [`RequestCtx`] — minted at arrival, so batcher
+/// accumulation time is charged against the same account every other
+/// layer reads.
 pub struct EmbedRequest {
     pub ids: Vec<i32>,
-    pub cancel: CancelToken,
-    pub budget: Budget,
+    pub ctx: RequestCtx,
 }
 
 pub struct ServerState {
@@ -69,7 +65,7 @@ pub struct ServerState {
     pub metrics: Arc<Metrics>,
     pub config: Config,
     /// cross-connection dynamic batcher for embed requests
-    pub embed_batcher: Batcher<EmbedRequest, Result<Vec<f32>, String>>,
+    pub embed_batcher: Batcher<EmbedRequest, Result<Vec<f32>, SubmitError>>,
 }
 
 impl ServerState {
@@ -84,13 +80,13 @@ impl ServerState {
         // accumulates and submits while batch N executes.
         let batch_server = BertServer::new(session);
         let m_reap = Arc::clone(&metrics);
-        let embed_batcher: Batcher<EmbedRequest, Result<Vec<f32>, String>> =
-            Batcher::start_pipelined_with_reaper(
+        let embed_batcher: Batcher<EmbedRequest, Result<Vec<f32>, SubmitError>> =
+            Batcher::start_service(
                 config.max_batch,
                 Duration::from_millis(config.max_wait_ms),
                 // Flush-time admission control: a request whose budget
                 // died (or whose client already gave up) while it was
-                // accumulating gets a structured reply now instead of
+                // accumulating gets a typed reply now instead of
                 // becoming doomed scheduler work.
                 move |r: &EmbedRequest| {
                     // Cancellation first: the router mints the budget
@@ -99,15 +95,12 @@ impl ServerState {
                     // its budget has expired too — checking budget
                     // first would misfile every abandoned request as a
                     // deadline symptom.
-                    if r.cancel.is_cancelled() {
+                    if r.ctx.is_cancelled() {
                         m_reap.add("embed_cancelled_reaped", 1);
-                        Some(Err("cancelled: request abandoned before execution".to_string()))
-                    } else if r.budget.expired() {
+                        Some(Err(SubmitError::Cancelled))
+                    } else if r.ctx.expired() {
                         m_reap.add("embed_budget_expired", 1);
-                        Some(Err(
-                            "deadline_rejected: request budget exhausted before execution"
-                                .to_string(),
-                        ))
+                        Some(Err(SubmitError::BudgetExpired))
                     } else {
                         None
                     }
@@ -117,27 +110,22 @@ impl ServerState {
                     let n = requests.len();
                     m2.add("batches", 1);
                     m2.add("batched_requests", n as u64);
-                    let tagged: Vec<(Vec<i32>, CancelToken, Budget)> = requests
-                        .into_iter()
-                        .map(|r| (r.ids, r.cancel, r.budget))
-                        .collect();
-                    match batch_server.serve_submit_budgeted(&tagged, policy) {
-                        Ok(sub) => {
-                            let m3 = Arc::clone(&m2);
-                            // Per-request settlement: one timed-out
-                            // (cancelled) request yields its own error
-                            // without clobbering its batchmates.
-                            Box::new(move || {
-                                let results = sub.wait_each();
-                                m3.record("bert_batch", t0.elapsed());
-                                results
-                            })
-                        }
-                        Err(e) => {
-                            let msg = format!("{e:#}");
-                            Box::new(move || (0..n).map(|_| Err(msg.clone())).collect())
-                        }
+                    let mut batch = EmbedBatch::new(policy);
+                    for r in requests {
+                        batch.push_with(r.ids, r.ctx);
                     }
+                    // The batch-level ctx is a fresh umbrella; every
+                    // sequence rides its own request's ctx.
+                    let ticket = batch_server.submit(batch, RequestCtx::new());
+                    let m3 = Arc::clone(&m2);
+                    // Per-request settlement: one timed-out (cancelled)
+                    // request yields its own typed error without
+                    // clobbering its batchmates.
+                    Box::new(move || {
+                        let results = ticket.wait_each();
+                        m3.record("bert_batch", t0.elapsed());
+                        results
+                    })
                 },
             );
         Arc::new(ServerState { bert, ocr: Arc::new(ocr), metrics, config, embed_batcher })
@@ -167,10 +155,11 @@ pub fn route(state: &ServerState, req: &Json) -> Json {
 
 /// Metrics snapshot plus live scheduler observability (`sched.*`):
 /// queue depth (total and per priority), core occupancy, backfill,
-/// deadline-rejection and cancellation counts, the adaptive feedback
-/// loop (`sched.adaptive_resizes`, `sched.running_deadline_cancelled`,
-/// `sched.aging_effective_ms`) and the profile store it feeds from
-/// (`profile.p95_ms`, worst per-model windowed p95; `profile.models`).
+/// deadline-rejection, budget (expired and infeasible) and cancellation
+/// counts, the adaptive feedback loop (`sched.adaptive_resizes`,
+/// `sched.running_deadline_cancelled`, `sched.aging_effective_ms`) and
+/// the profile store it feeds from (`profile.p95_ms`, worst per-model
+/// windowed p95; `profile.models`).
 fn stats_json(state: &ServerState) -> Json {
     // gauges: embed requests accumulated but not yet flushed to the
     // scheduler (the batcher's own queue, upstream of sched.queue_depth)
@@ -183,7 +172,7 @@ fn stats_json(state: &ServerState) -> Json {
     let st = session.scheduler().stats();
     let profiles = session.profiles();
     if let Json::Obj(pairs) = &mut snap {
-        let fields: [(&str, f64); 22] = [
+        let fields: [(&str, f64); 23] = [
             ("sched.capacity", st.capacity as f64),
             ("sched.cores_busy", st.cores_busy as f64),
             ("sched.cores_idle", st.cores_idle as f64),
@@ -199,6 +188,7 @@ fn stats_json(state: &ServerState) -> Json {
             ("sched.backfills", st.backfills as f64),
             ("sched.deadline_rejected", st.deadline_rejected as f64),
             ("sched.budget_expired", st.budget_expired as f64),
+            ("sched.budget_infeasible", st.budget_infeasible as f64),
             ("sched.cancelled", st.cancelled as f64),
             ("sched.adaptive_resizes", st.adaptive_resizes as f64),
             ("sched.running_deadline_cancelled", st.running_deadline_cancelled as f64),
@@ -254,31 +244,31 @@ fn embed_ids(state: &ServerState, ids: Vec<i32>) -> Json {
     embed_with_timeout(&state.embed_batcher, &state.metrics, ids, timeout)
 }
 
-/// Routed embed with a bounded wait. On expiry the requester's
-/// [`CancelToken`] is cancelled before returning the structured timeout
-/// error, so the request's scheduler task is rejected from the queue
-/// (cores never taken) or stopped at the executor's next poll instead
-/// of running on for a client that already gave up. The request's
-/// [`Budget`] is minted here — the full `timeout`, starting now — so
-/// every layer below charges against the clock this function is
-/// actually waiting on.
+/// Routed embed with a bounded wait. The request's [`RequestCtx`] is
+/// minted here — budget = the full `timeout`, starting now — so every
+/// layer below charges against the clock this function is actually
+/// waiting out. On expiry the ctx is cancelled before returning the
+/// structured timeout error, so the request's scheduler task is
+/// rejected from the queue (cores never taken) or stopped at the
+/// executor's next poll instead of running on for a client that
+/// already gave up.
 ///
 /// Public so the timeout path is testable against a mock scheduler
 /// without PJRT artifacts (see `tests/integration_timeout.rs`).
 pub fn embed_with_timeout(
-    batcher: &Batcher<EmbedRequest, Result<Vec<f32>, String>>,
+    batcher: &Batcher<EmbedRequest, Result<Vec<f32>, SubmitError>>,
     metrics: &Metrics,
     ids: Vec<i32>,
     timeout: Duration,
 ) -> Json {
-    let cancel = CancelToken::new();
-    let budget = Budget::new(timeout);
-    let rx = batcher.submit(EmbedRequest { ids, cancel: cancel.clone(), budget });
+    use std::sync::mpsc::RecvTimeoutError;
+    let ctx = RequestCtx::new().with_budget(Budget::new(timeout));
+    let rx = batcher.submit(EmbedRequest { ids, ctx: ctx.clone() });
     match rx.recv_timeout(timeout) {
         Ok(Ok(embedding)) => obj(vec![("embedding", embedding_json(&embedding))]),
-        Ok(Err(e)) => err(e),
+        Ok(Err(e)) => err(e.to_string()),
         Err(RecvTimeoutError::Timeout) => {
-            cancel.cancel();
+            ctx.cancel();
             metrics.add("request_timeouts", 1);
             err("request timed out".into())
         }
@@ -287,7 +277,7 @@ pub fn embed_with_timeout(
         // keep burning cores (and stall the shutdown drain) with no
         // one left to read it.
         Err(RecvTimeoutError::Disconnected) => {
-            cancel.cancel();
+            ctx.cancel();
             err("server shutting down".into())
         }
     }
@@ -310,7 +300,7 @@ fn handle_ocr(state: &ServerState, req: &Json) -> Json {
     // Bound the synthetic page size structurally: `generate` cost
     // scales with the box count and runs before any cancellation
     // point, so an unbounded client value would let a single request
-    // burn a detached worker thread past any timeout.
+    // burn the connection thread past any timeout.
     const MAX_BOXES: usize = 64;
     let boxes = req.get("boxes").and_then(|v| v.as_usize()).unwrap_or(3);
     if boxes > MAX_BOXES {
@@ -323,63 +313,50 @@ fn handle_ocr(state: &ServerState, req: &Json) -> Json {
             None => return err(format!("unknown variant '{name}'")),
         },
     };
-    // Bounded wait, same contract as embed: the pipeline runs on a
-    // worker thread carrying the request's token and budget, while this
-    // connection thread waits out at most the OCR budget. Before this,
-    // a slow OCR request pinned the connection thread *and* the
-    // Listing-1 cores, unbounded, for a client that may be long gone.
+    // The ctx is minted *before* the (bounded) page synthesis, so
+    // generation time is charged against the request's budget too.
     let timeout = Duration::from_millis(state.config.ocr_timeout_ms);
-    let budget = Budget::new(timeout);
-    let cancel = CancelToken::new();
-    let pipeline = Arc::clone(&state.ocr);
-    let token = cancel.clone();
-    let (tx, rx) = channel();
-    let spawned = std::thread::Builder::new().name("dnc-ocr".into()).spawn(move || {
-        let mut rng = Rng::new(seed);
-        let img = generate(pipeline.meta(), &mut rng, boxes, &GenOptions::default());
-        // The request may have timed out while the page was being
-        // synthesized — don't start the pipeline for a client that is
-        // already gone (nobody reads the reply either way).
-        if token.is_cancelled() {
-            return;
-        }
-        let res = pipeline.process_budgeted(&img, variant, &token, Some(budget));
-        let _ = tx.send((img, res)); // connection thread may have given up
-    });
-    if let Err(e) = spawned {
-        return err(format!("spawning ocr worker failed: {e}"));
-    }
-    match rx.recv_timeout(timeout) {
-        Ok((img, Ok(res))) => {
-            state.metrics.add("ocr_images", 1);
-            state.metrics.add("ocr_boxes", res.boxes.len() as u64);
-            let texts = arr(res.texts.iter().map(|t| match t {
-                Some(t) => s(t),
-                None => Json::Null,
-            }));
-            let truth = arr(img.boxes.iter().map(|b| s(&b.text)));
-            obj(vec![
-                ("texts", texts),
-                ("ground_truth", truth),
-                ("variant", s(variant.name())),
-                ("det_ms", num(res.timing.det.as_secs_f64() * 1e3)),
-                ("cls_ms", num(res.timing.cls.as_secs_f64() * 1e3)),
-                ("rec_ms", num(res.timing.rec.as_secs_f64() * 1e3)),
-            ])
-        }
-        Ok((_, Err(e))) => err(format!("{e:#}")),
-        Err(RecvTimeoutError::Timeout) => {
-            // Cancel before replying: the pipeline's queued parts are
-            // rejected without taking cores and a running part stops at
-            // the executor's next poll — the worker thread then unwinds
-            // through its error path and exits.
-            cancel.cancel();
+    let ctx = RequestCtx::new().with_budget(Budget::new(timeout));
+    let mut rng = Rng::new(seed);
+    let img = generate(state.ocr.meta(), &mut rng, boxes, &GenOptions::default());
+    // ground truth echoes back with the result; the image itself moves
+    // into the job
+    let truth: Vec<String> = img.boxes.iter().map(|b| b.text.clone()).collect();
+    // Bounded wait, same contract as embed: the pipeline runs on a
+    // worker thread under the request's ctx, while this connection
+    // thread waits out at most what remains of the OCR budget. On
+    // expiry the ticket cancels the ctx, so the pipeline's queued
+    // parts are rejected without taking cores and a running part stops
+    // at the executor's next poll — the worker thread then unwinds
+    // through its error path and exits.
+    let ticket = state.ocr.submit(OcrJob { image: img, variant }, ctx.clone());
+    let wait = ctx.remaining().unwrap_or(timeout);
+    match ticket.wait_each_timeout(wait) {
+        Some(mut results) => match results.pop() {
+            Some(Ok(res)) => {
+                state.metrics.add("ocr_images", 1);
+                state.metrics.add("ocr_boxes", res.boxes.len() as u64);
+                let texts = arr(res.texts.iter().map(|t| match t {
+                    Some(t) => s(t),
+                    None => Json::Null,
+                }));
+                let truth = arr(truth.iter().map(|t| s(t)));
+                obj(vec![
+                    ("texts", texts),
+                    ("ground_truth", truth),
+                    ("variant", s(variant.name())),
+                    ("det_ms", num(res.timing.det.as_secs_f64() * 1e3)),
+                    ("cls_ms", num(res.timing.cls.as_secs_f64() * 1e3)),
+                    ("rec_ms", num(res.timing.rec.as_secs_f64() * 1e3)),
+                ])
+            }
+            Some(Err(e)) => err(e.to_string()),
+            None => err("ocr worker returned nothing".into()),
+        },
+        None => {
+            // wait_each_timeout already cancelled the ctx
             state.metrics.add("ocr_timeouts", 1);
             err("request timed out".into())
-        }
-        Err(RecvTimeoutError::Disconnected) => {
-            cancel.cancel();
-            err("ocr worker failed".into())
         }
     }
 }

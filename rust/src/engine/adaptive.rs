@@ -10,7 +10,7 @@
 //!   each job part by its measured cost (windowed p95 once enough fresh
 //!   samples exist) instead of raw input size, so the Listing-1 split
 //!   gives "cores according to expected computational cost" even when
-//!   cost does not correlate with size. `Session::prun_submit` consults
+//!   cost does not correlate with size. `Session`'s submit path consults
 //!   it whenever the session runs in adaptive mode.
 //! - **Adaptive aging bound.** [`AdaptivePolicy::aging_bound`] derives
 //!   the backfill aging bound from the observed worst per-model p95

@@ -1,0 +1,617 @@
+//! `engine::api` — the one submission surface every workload uses.
+//!
+//! Before this module, each workload grew its own family of entry
+//! points as request state accumulated: `Session::run` /
+//! `run_cancellable`, `prun` / `prun_submit`, `BertServer::serve` /
+//! `serve_submit` / `serve_submit_cancellable` / `serve_submit_budgeted`,
+//! `OcrPipeline::process` / `process_budgeted`. Ten near-duplicate
+//! methods, all plumbing the same four values (budget, token, priority,
+//! weights) as parallel arguments.
+//!
+//! The replacement is one trait:
+//!
+//! - [`InferenceService::submit`] takes the workload's typed request
+//!   plus one [`RequestCtx`] (minted at the ingress) and returns a
+//!   [`SubmitTicket`] immediately;
+//! - [`SubmitTicket`] unifies the old `PrunHandle` / `BatchSubmit` /
+//!   reply-receiver shapes: `wait`, `wait_each`, `wait_each_timeout`,
+//!   `cancel`, `allocation` — with **typed** [`SubmitError`]s instead
+//!   of stringly `Result<_, String>`, so a caller can tell budget
+//!   expiry from cancellation from admission infeasibility;
+//! - [`PrunRequest`] absorbs the old `PrunOptions`: the *job-shaped*
+//!   tuning (parts, allocation policy, weight source, admission /
+//!   running deadlines) lives in the request, while the *request-shaped*
+//!   state (budget, token, priority, cost hint) lives in the ctx.
+//!
+//! Implementors: [`Session`](super::Session) (the paper's `prun`),
+//! [`BertServer`](crate::nlp::BertServer) (embed batches),
+//! [`OcrPipeline`](crate::ocr::OcrPipeline) (3-phase OCR) and
+//! [`VideoPipeline`](crate::video::VideoPipeline) (per-frame
+//! recognition). The old variant methods survive as `#[deprecated]`
+//! shims delegating here; CI builds with `RUSTFLAGS="-D deprecated"`
+//! so no in-tree caller can quietly reintroduce them.
+
+use std::fmt;
+use std::time::{Duration, Instant};
+
+use crate::runtime::{CancelToken, TaskCancelled};
+
+use super::allocator::AllocPolicy;
+use super::ctx::RequestCtx;
+use super::part::JobPart;
+use super::sched::SchedError;
+use super::session::WeightSource;
+
+/// Typed outcome of one submitted item, shared by every
+/// [`InferenceService`] implementor — the `BatchSubmit::wait_each` /
+/// `PrunHandle::wait_each` stringly-error split, unified.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The request's [`CancelToken`] fired: while queued (cores never
+    /// taken) or mid-run (stopped at the executor's next poll). Covers
+    /// both caller cancels and the dispatcher's budget/deadline kills
+    /// of *running* work.
+    Cancelled,
+    /// The request's [`Budget`](super::Budget) ran out before the work
+    /// was launched — rejected without ever taking cores.
+    BudgetExpired,
+    /// Budget-aware admission: the remaining budget could not cover the
+    /// profiled cost of the work, so it was rejected at *submit* —
+    /// before taking queue space, let alone cores.
+    BudgetInfeasible,
+    /// The admission deadline passed while the work was still queued.
+    DeadlineExceeded,
+    /// The scheduler shut down before the work was admitted.
+    Shutdown,
+    /// Model execution (or request construction) failed.
+    Failed(String),
+}
+
+impl SubmitError {
+    /// Classify an error surfaced by the scheduler/executor stack into
+    /// the typed submission vocabulary. Anything that is neither a
+    /// [`SubmitError`], a [`SchedError`] nor a [`TaskCancelled`] marker
+    /// is a real execution failure.
+    pub fn classify(e: &anyhow::Error) -> SubmitError {
+        // an already-typed error round-trips (e.g. a pipeline phase
+        // wrapping a lower submit's error in anyhow context)
+        if let Some(s) = e.downcast_ref::<SubmitError>() {
+            return s.clone();
+        }
+        if let Some(s) = e.downcast_ref::<SchedError>() {
+            return match s {
+                SchedError::Cancelled => SubmitError::Cancelled,
+                SchedError::BudgetExpired => SubmitError::BudgetExpired,
+                SchedError::BudgetInfeasible => SubmitError::BudgetInfeasible,
+                SchedError::DeadlineExceeded => SubmitError::DeadlineExceeded,
+                SchedError::Shutdown => SubmitError::Shutdown,
+            };
+        }
+        if e.downcast_ref::<TaskCancelled>().is_some() {
+            return SubmitError::Cancelled;
+        }
+        SubmitError::Failed(format!("{e:#}"))
+    }
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            // The strings keep the serving edge's reply vocabulary:
+            // "cancelled" / "deadline_rejected" prefixes are what the
+            // JSON clients (and the integration tests) key on.
+            SubmitError::Cancelled => write!(f, "cancelled: task cancelled"),
+            SubmitError::BudgetExpired => {
+                write!(f, "deadline_rejected: request budget exhausted")
+            }
+            SubmitError::BudgetInfeasible => write!(
+                f,
+                "deadline_rejected: remaining budget below the profiled cost"
+            ),
+            SubmitError::DeadlineExceeded => {
+                write!(f, "deadline_rejected: admission deadline exceeded")
+            }
+            SubmitError::Shutdown => write!(f, "scheduler shut down"),
+            SubmitError::Failed(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// The deferred settlement of a ticket: blocks until every item is
+/// done, or until the deadline (when one is given) — `None` means the
+/// deadline struck first and the remaining work was cancelled.
+pub type WaitFn<R> =
+    Box<dyn FnOnce(Option<Instant>) -> Option<Vec<Result<R, SubmitError>>> + Send>;
+
+enum TicketState<R> {
+    /// Work is in flight; the closure assembles the results.
+    Pending(WaitFn<R>),
+    /// The whole request was rejected before any work was submitted.
+    Rejected(SubmitError),
+}
+
+/// One in-flight submission: the unified handle every
+/// [`InferenceService`] returns.
+///
+/// - [`wait`](Self::wait) blocks for everything and returns the results
+///   (or the first error, after all items settle — no work left
+///   dangling);
+/// - [`wait_each`](Self::wait_each) yields one typed result per item,
+///   so one cancelled batchmate does not clobber its siblings;
+/// - [`wait_each_timeout`](Self::wait_each_timeout) bounds the wait —
+///   on expiry the request is cancelled (cores freed) and `None`
+///   returned, the serving edge's timeout shape;
+/// - [`cancel`](Self::cancel) gives up explicitly.
+///
+/// **Dropping an unconsumed ticket cancels the request** — abandoned
+/// work must not keep burning ledger cores (the `PrunHandle` contract,
+/// now uniform across workloads).
+pub struct SubmitTicket<R> {
+    ctx: RequestCtx,
+    /// Listing-1 thread allocation chosen for the request's parts,
+    /// input order (empty for services that do not pre-size, e.g. the
+    /// OCR pipeline, whose phases size themselves as they go).
+    allocation: Vec<usize>,
+    /// every cancellation token involved (the ctx's plus any per-item
+    /// tokens a batch carried) — `cancel` fires them all
+    tokens: Vec<CancelToken>,
+    /// item count (`wait_each` returns exactly this many results)
+    n: usize,
+    state: Option<TicketState<R>>,
+}
+
+impl<R> SubmitTicket<R> {
+    /// Build a ticket over in-flight work. `tokens` must cover every
+    /// token the work runs under; `wait` settles it (see [`WaitFn`]).
+    pub fn pending(
+        ctx: RequestCtx,
+        allocation: Vec<usize>,
+        tokens: Vec<CancelToken>,
+        n: usize,
+        wait: WaitFn<R>,
+    ) -> SubmitTicket<R> {
+        SubmitTicket { ctx, allocation, tokens, n, state: Some(TicketState::Pending(wait)) }
+    }
+
+    /// Build a ticket for a request rejected before submission (empty
+    /// batch, malformed part, failed worker spawn): `wait` returns the
+    /// error, `wait_each` returns it `n` times.
+    pub fn rejected(ctx: RequestCtx, n: usize, err: SubmitError) -> SubmitTicket<R> {
+        SubmitTicket {
+            ctx,
+            allocation: Vec::new(),
+            tokens: Vec::new(),
+            n,
+            state: Some(TicketState::Rejected(err)),
+        }
+    }
+
+    /// Number of items this ticket settles.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// The request context this work runs under.
+    pub fn ctx(&self) -> &RequestCtx {
+        &self.ctx
+    }
+
+    /// Listing-1 thread allocation chosen for the request's parts,
+    /// input order (empty when the service does not pre-size).
+    pub fn allocation(&self) -> &[usize] {
+        &self.allocation
+    }
+
+    /// `Some(err)` when the whole request was rejected before any work
+    /// was submitted (empty batch, malformed part, failed worker
+    /// spawn) — lets a caller fail eagerly without consuming the
+    /// ticket.
+    pub fn rejection(&self) -> Option<&SubmitError> {
+        match &self.state {
+            Some(TicketState::Rejected(err)) => Some(err),
+            _ => None,
+        }
+    }
+
+    /// Cancel the request: queued work is rejected without taking
+    /// cores, running work stops at the executor's next token poll.
+    /// Results (now typed [`SubmitError::Cancelled`]) still arrive
+    /// through the wait methods.
+    pub fn cancel(&self) {
+        self.ctx.cancel();
+        for t in &self.tokens {
+            t.cancel();
+        }
+    }
+
+    /// Take the state out, defusing the cancel-on-drop (consumed
+    /// tickets must not cancel tokens that may be shared with the
+    /// request's *next* phase).
+    fn consume(&mut self) -> TicketState<R> {
+        self.tokens.clear();
+        self.state.take().expect("ticket already consumed")
+    }
+
+    /// Block until every item settles; one typed result per item, input
+    /// order — what a batch of independent serving requests needs.
+    pub fn wait_each(mut self) -> Vec<Result<R, SubmitError>>
+    where
+        R: Send,
+    {
+        match self.consume() {
+            TicketState::Pending(f) => {
+                f(None).expect("deadline-free wait cannot time out")
+            }
+            TicketState::Rejected(err) => (0..self.n).map(|_| Err(err.clone())).collect(),
+        }
+    }
+
+    /// [`wait_each`](Self::wait_each) bounded by `timeout`: `None`
+    /// means the clock struck first — the request has been cancelled
+    /// (its cores come back through the scheduler's completion path)
+    /// and nothing more will arrive.
+    pub fn wait_each_timeout(mut self, timeout: Duration) -> Option<Vec<Result<R, SubmitError>>>
+    where
+        R: Send,
+    {
+        // Grab the tokens before consume() clears them: a timeout must
+        // still cancel the in-flight work.
+        let tokens = std::mem::take(&mut self.tokens);
+        let ctx = self.ctx.clone();
+        match self.consume() {
+            TicketState::Pending(f) => match f(Some(Instant::now() + timeout)) {
+                Some(results) => Some(results),
+                None => {
+                    ctx.cancel();
+                    for t in &tokens {
+                        t.cancel();
+                    }
+                    None
+                }
+            },
+            TicketState::Rejected(err) => {
+                Some((0..self.n).map(|_| Err(err.clone())).collect())
+            }
+        }
+    }
+
+    /// Block until every item completes; results in input order. If any
+    /// item failed, returns the first error — after all items have
+    /// settled, so no work is left dangling.
+    pub fn wait(self) -> Result<Vec<R>, SubmitError>
+    where
+        R: Send,
+    {
+        if let Some(TicketState::Rejected(err)) = &self.state {
+            // n may be 0 (e.g. an empty batch): the whole-request error
+            // must still surface.
+            return Err(err.clone());
+        }
+        let mut out = Vec::with_capacity(self.n);
+        let mut first_err = None;
+        for r in self.wait_each() {
+            match r {
+                Ok(v) => out.push(v),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+
+    /// Adapt the item type (e.g. `TaskDone` -> pooled embedding) while
+    /// keeping the ticket's ctx, allocation and cancellation wiring.
+    pub fn map<S, F>(mut self, f: F) -> SubmitTicket<S>
+    where
+        R: 'static,
+        F: Fn(R) -> Result<S, SubmitError> + Send + 'static,
+    {
+        let ctx = self.ctx.clone();
+        let allocation = std::mem::take(&mut self.allocation);
+        let tokens = std::mem::take(&mut self.tokens);
+        let n = self.n;
+        match self.consume() {
+            TicketState::Pending(inner) => SubmitTicket::pending(
+                ctx,
+                allocation,
+                tokens,
+                n,
+                Box::new(move |deadline| {
+                    inner(deadline)
+                        .map(|rs| rs.into_iter().map(|r| r.and_then(&f)).collect())
+                }),
+            ),
+            TicketState::Rejected(err) => SubmitTicket::rejected(ctx, n, err),
+        }
+    }
+}
+
+impl<R> SubmitTicket<R> {
+    /// Collapse a k-item ticket into a single-item one (e.g. k region
+    /// parts -> one frame result): all items must succeed, and the
+    /// first error — observed after every item settles, so no work is
+    /// left dangling — becomes the collapsed item's error.
+    pub fn collapse<S, F>(mut self, f: F) -> SubmitTicket<S>
+    where
+        R: 'static,
+        F: FnOnce(Vec<R>) -> S + Send + 'static,
+    {
+        let ctx = self.ctx.clone();
+        let allocation = std::mem::take(&mut self.allocation);
+        let tokens = std::mem::take(&mut self.tokens);
+        match self.consume() {
+            TicketState::Pending(inner) => SubmitTicket::pending(
+                ctx,
+                allocation,
+                tokens,
+                1,
+                Box::new(move |deadline| {
+                    inner(deadline).map(|rs| {
+                        let mut ok = Vec::with_capacity(rs.len());
+                        let mut first_err = None;
+                        for r in rs {
+                            match r {
+                                Ok(v) => ok.push(v),
+                                Err(e) => {
+                                    if first_err.is_none() {
+                                        first_err = Some(e);
+                                    }
+                                }
+                            }
+                        }
+                        vec![match first_err {
+                            Some(e) => Err(e),
+                            None => Ok(f(ok)),
+                        }]
+                    })
+                }),
+            ),
+            TicketState::Rejected(err) => SubmitTicket::rejected(ctx, 1, err),
+        }
+    }
+}
+
+impl<R> Drop for SubmitTicket<R> {
+    fn drop(&mut self) {
+        // An abandoned ticket must not leave orphaned work occupying
+        // the ledger. The wait methods consume the state (and clear the
+        // tokens) first, so a consumed ticket cancels nothing.
+        if self.state.is_some() {
+            self.cancel();
+        }
+    }
+}
+
+/// The unified submission API: every workload (prun jobs, embed
+/// batches, OCR pages, video frames) reaches the scheduler through
+/// `submit(request, ctx)` — the request describes *what* to run, the
+/// [`RequestCtx`] describes *on whose behalf* (budget, token, priority,
+/// cost hint).
+///
+/// ```
+/// use dnc_serve::engine::{InferenceService, RequestCtx, SubmitError, SubmitTicket};
+///
+/// /// A toy service: echoes each input length back.
+/// struct Echo;
+///
+/// impl InferenceService for Echo {
+///     type Request = Vec<String>;
+///     type Response = usize;
+///
+///     fn submit(&self, req: Vec<String>, ctx: RequestCtx) -> SubmitTicket<usize> {
+///         let n = req.len();
+///         let token = ctx.token();
+///         SubmitTicket::pending(
+///             ctx,
+///             vec![1; n],
+///             vec![token.clone()],
+///             n,
+///             Box::new(move |_deadline| {
+///                 Some(
+///                     req.into_iter()
+///                         .map(|s| {
+///                             if token.is_cancelled() {
+///                                 Err(SubmitError::Cancelled)
+///                             } else {
+///                                 Ok(s.len())
+///                             }
+///                         })
+///                         .collect(),
+///                 )
+///             }),
+///         )
+///     }
+/// }
+///
+/// let svc = Echo;
+/// let ticket = svc.submit(vec!["ab".into(), "cdef".into()], RequestCtx::new());
+/// assert_eq!(ticket.wait().unwrap(), vec![2, 4]);
+///
+/// let cancelled = RequestCtx::new();
+/// cancelled.cancel();
+/// let results = svc.submit(vec!["ab".into()], cancelled).wait_each();
+/// assert_eq!(results, vec![Err(SubmitError::Cancelled)]);
+/// ```
+pub trait InferenceService {
+    /// The workload-shaped request (a [`PrunRequest`], an embed batch,
+    /// an OCR page, a frame pair).
+    type Request;
+    /// One response per item of the request.
+    type Response;
+
+    /// Submit `req` on behalf of `ctx`. Returns immediately; the
+    /// returned ticket settles the results (and is the cancellation
+    /// handle for the whole request).
+    fn submit(&self, req: Self::Request, ctx: RequestCtx) -> SubmitTicket<Self::Response>;
+}
+
+/// A `prun` job for [`Session`](super::Session)'s [`InferenceService`]
+/// impl: the parts plus the *job-shaped* tuning that used to live in
+/// `PrunOptions`. Request-shaped state (budget, token, priority) comes
+/// from the [`RequestCtx`] at submit.
+#[derive(Debug, Clone, Default)]
+pub struct PrunRequest {
+    pub parts: Vec<JobPart>,
+    pub policy: AllocPolicy,
+    pub weights: WeightSource,
+    /// admission deadline (from submit) for every part; parts still
+    /// queued past it are rejected with `SchedError::DeadlineExceeded`
+    pub deadline: Option<Duration>,
+    /// running deadline (from launch) for every part (overrides the
+    /// scheduler-wide `--deadline-running-ms`)
+    pub running_deadline: Option<Duration>,
+}
+
+impl PrunRequest {
+    pub fn new(parts: Vec<JobPart>) -> PrunRequest {
+        PrunRequest { parts, ..PrunRequest::default() }
+    }
+
+    /// Single-part convenience: the classic "run one model with the
+    /// whole core budget" (the allocator hands a lone part everything).
+    pub fn single(part: JobPart) -> PrunRequest {
+        PrunRequest::new(vec![part])
+    }
+
+    pub fn with_policy(mut self, policy: AllocPolicy) -> PrunRequest {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_weights(mut self, weights: WeightSource) -> PrunRequest {
+        self.weights = weights;
+        self
+    }
+
+    pub fn with_deadline(mut self, d: Duration) -> PrunRequest {
+        self.deadline = Some(d);
+        self
+    }
+
+    pub fn with_running_deadline(mut self, d: Duration) -> PrunRequest {
+        self.running_deadline = Some(d);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_maps_the_scheduler_vocabulary() {
+        for (sched, want) in [
+            (SchedError::Cancelled, SubmitError::Cancelled),
+            (SchedError::BudgetExpired, SubmitError::BudgetExpired),
+            (SchedError::BudgetInfeasible, SubmitError::BudgetInfeasible),
+            (SchedError::DeadlineExceeded, SubmitError::DeadlineExceeded),
+            (SchedError::Shutdown, SubmitError::Shutdown),
+        ] {
+            assert_eq!(SubmitError::classify(&anyhow::Error::new(sched)), want);
+        }
+        assert_eq!(
+            SubmitError::classify(&anyhow::Error::new(TaskCancelled)),
+            SubmitError::Cancelled
+        );
+        let other = anyhow::anyhow!("compile blew up");
+        assert_eq!(
+            SubmitError::classify(&other),
+            SubmitError::Failed("compile blew up".to_string())
+        );
+        // an already-typed error round-trips, even under context
+        let wrapped = anyhow::Error::new(SubmitError::BudgetExpired).context("detection");
+        assert_eq!(SubmitError::classify(&wrapped), SubmitError::BudgetExpired);
+    }
+
+    #[test]
+    fn rejected_ticket_settles_n_errors_and_wait_surfaces_even_empty() {
+        let t: SubmitTicket<u32> =
+            SubmitTicket::rejected(RequestCtx::new(), 3, SubmitError::BudgetExpired);
+        let each = t.wait_each();
+        assert_eq!(each.len(), 3);
+        assert!(each.iter().all(|r| r == &Err(SubmitError::BudgetExpired)));
+        // an empty rejected request still errors through wait()
+        let t: SubmitTicket<u32> = SubmitTicket::rejected(
+            RequestCtx::new(),
+            0,
+            SubmitError::Failed("empty batch".into()),
+        );
+        assert_eq!(t.wait(), Err(SubmitError::Failed("empty batch".into())));
+    }
+
+    #[test]
+    fn dropping_an_unconsumed_ticket_cancels() {
+        let ctx = RequestCtx::new();
+        let extra = CancelToken::new();
+        let t: SubmitTicket<u32> = SubmitTicket::pending(
+            ctx.clone(),
+            vec![1],
+            vec![extra.clone()],
+            1,
+            Box::new(|_| Some(vec![Ok(1)])),
+        );
+        drop(t);
+        assert!(ctx.is_cancelled(), "abandoned ticket must cancel its request");
+        assert!(extra.is_cancelled());
+    }
+
+    #[test]
+    fn consumed_ticket_does_not_cancel_shared_tokens() {
+        // The same ctx may drive a later phase (OCR: det -> cls -> rec);
+        // a successfully consumed ticket must leave the token alone.
+        let ctx = RequestCtx::new();
+        let t: SubmitTicket<u32> = SubmitTicket::pending(
+            ctx.clone(),
+            vec![1],
+            vec![ctx.token()],
+            1,
+            Box::new(|_| Some(vec![Ok(7)])),
+        );
+        assert_eq!(t.wait().unwrap(), vec![7]);
+        assert!(!ctx.is_cancelled(), "consumed ticket must not cancel the ctx");
+    }
+
+    #[test]
+    fn timeout_cancels_and_returns_none() {
+        let ctx = RequestCtx::new();
+        let observed = ctx.token();
+        let t: SubmitTicket<u32> = SubmitTicket::pending(
+            ctx.clone(),
+            Vec::new(),
+            vec![ctx.token()],
+            1,
+            // models work that never finishes before the deadline
+            Box::new(|deadline| deadline.map(|_| None).unwrap_or(Some(vec![Ok(0)]))),
+        );
+        assert!(t.wait_each_timeout(Duration::from_millis(1)).is_none());
+        assert!(observed.is_cancelled(), "timeout must cancel the request");
+    }
+
+    #[test]
+    fn map_adapts_items_and_keeps_errors() {
+        let t: SubmitTicket<u32> = SubmitTicket::pending(
+            RequestCtx::new(),
+            vec![2, 2],
+            Vec::new(),
+            2,
+            Box::new(|_| Some(vec![Ok(21), Err(SubmitError::Cancelled)])),
+        );
+        let mapped = t.map(|v| Ok(v * 2));
+        assert_eq!(mapped.allocation(), &[2, 2]);
+        let each = mapped.wait_each();
+        assert_eq!(each[0], Ok(42));
+        assert_eq!(each[1], Err(SubmitError::Cancelled));
+    }
+}

@@ -1,0 +1,223 @@
+//! `RequestCtx` — the one per-request context every layer consumes.
+//!
+//! PRs 1–4 grew budgets, cancellation, priorities and profile feedback
+//! by adding a *new argument* (and usually a new method variant) at
+//! every layer, so the cross-cutting state of one serving request — how
+//! many cores it may take, for how long, at what priority, under whose
+//! cancellation flag — was smeared across parallel parameter lists:
+//! `(Vec<i32>, CancelToken, Budget)` tuples in the batcher,
+//! `PrunOptions { priority, budget, .. }` in the engine, bare
+//! `(&CancelToken, Option<Budget>)` pairs in the OCR pipeline.
+//!
+//! A [`RequestCtx`] collapses that into a single value **minted once at
+//! the ingress** (router, CLI, bench harness) and threaded *by value*
+//! through every layer: the batcher's flush-time admission reads
+//! `ctx.expired()` / `ctx.is_cancelled()`, the scheduler consumes the
+//! same fields via [`PartTask::with_ctx`](super::sched::PartTask::with_ctx),
+//! and the running kill clock arms off the same [`Budget`] the client's
+//! connection thread is waiting out. Cloning a ctx shares the token
+//! (and copies the budget), so *identity* is preserved across layers —
+//! cancelling at any one of them frees the request's cores exactly
+//! once, through the scheduler's normal completion accounting.
+//!
+//! The ctx also carries an optional **cost hint** (the profiled p95 of
+//! the work the request is about to do). When present alongside a
+//! budget, the scheduler rejects the request at *submit* if the budget
+//! cannot cover the hint (`SchedError::BudgetInfeasible`) — admission
+//! control before any queueing, the ROADMAP's "budget-aware admission"
+//! item. When the ingress has no hint, `Session` fills one per part
+//! from its online profile store.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::runtime::CancelToken;
+
+use super::budget::Budget;
+use super::sched::Priority;
+
+/// Monotonic request-id mint, shared by every ingress in the process.
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Per-request context: one identity (`id`, `CancelToken`), one
+/// deadline account ([`Budget`]), one queue [`Priority`] and an
+/// optional profiled cost hint — minted at the serving edge, consumed
+/// by every layer below. Cloning shares the cancellation flag, so all
+/// copies describe the *same* request.
+///
+/// ```
+/// use std::time::Duration;
+/// use dnc_serve::engine::{Budget, Priority, RequestCtx};
+///
+/// // The router mints one ctx per arriving request:
+/// let ctx = RequestCtx::new()
+///     .with_budget(Budget::new(Duration::from_millis(500)))
+///     .with_priority(Priority::High);
+/// assert!(!ctx.is_cancelled() && !ctx.expired());
+///
+/// // every layer sees the same token identity
+/// let downstream = ctx.clone();
+/// ctx.cancel();
+/// assert!(downstream.is_cancelled());
+/// ```
+#[derive(Debug, Clone)]
+pub struct RequestCtx {
+    id: u64,
+    cancel: CancelToken,
+    budget: Option<Budget>,
+    priority: Priority,
+    cost_hint: Option<Duration>,
+}
+
+impl RequestCtx {
+    /// Mint a fresh context: new id, new cancellation token, no budget,
+    /// [`Priority::Normal`]. Call this where a request *enters* the
+    /// system — router, CLI, bench harness — not where it happens to be
+    /// scheduled, so upstream wall-clock is charged to the right clock.
+    pub fn new() -> RequestCtx {
+        RequestCtx {
+            id: NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed),
+            cancel: CancelToken::new(),
+            budget: None,
+            priority: Priority::Normal,
+            cost_hint: None,
+        }
+    }
+
+    /// Attach the request's end-to-end deadline account.
+    pub fn with_budget(mut self, budget: Budget) -> RequestCtx {
+        self.budget = Some(budget);
+        self
+    }
+
+    /// Mint and attach a budget of `total` starting now — shorthand for
+    /// `with_budget(Budget::new(total))` at the ingress.
+    pub fn with_timeout(self, total: Duration) -> RequestCtx {
+        self.with_budget(Budget::new(total))
+    }
+
+    /// Replace the cancellation token (e.g. adopt one owned by an
+    /// enclosing request instead of this ctx's fresh one).
+    pub fn with_cancel(mut self, token: CancelToken) -> RequestCtx {
+        self.cancel = token;
+        self
+    }
+
+    /// Set the queue priority every part of this request submits at.
+    pub fn with_priority(mut self, priority: Priority) -> RequestCtx {
+        self.priority = priority;
+        self
+    }
+
+    /// Attach a profiled cost hint (expected p95 execution time of the
+    /// work this request is about to submit). With a budget attached,
+    /// the scheduler uses it for budget-aware admission: a request
+    /// whose remaining budget cannot cover the hint is rejected at
+    /// submit (`SchedError::BudgetInfeasible`) before taking queue
+    /// space, let alone cores.
+    pub fn with_cost_hint(mut self, hint: Duration) -> RequestCtx {
+        self.cost_hint = Some(hint);
+        self
+    }
+
+    /// The request id minted at ingress (diagnostics / log correlation).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// A clone of the request's cancellation token (shares the flag).
+    pub fn token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    pub fn budget(&self) -> Option<Budget> {
+        self.budget
+    }
+
+    pub fn priority(&self) -> Priority {
+        self.priority
+    }
+
+    pub fn cost_hint(&self) -> Option<Duration> {
+        self.cost_hint
+    }
+
+    /// Cancel the request: every layer holding a clone of this ctx (or
+    /// its token) observes the flag at its next poll.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    /// True once the attached budget has run out (false without one).
+    pub fn expired(&self) -> bool {
+        self.budget.is_some_and(|b| b.expired())
+    }
+
+    /// What remains of the attached budget (`None` = no budget, i.e.
+    /// unbounded patience).
+    pub fn remaining(&self) -> Option<Duration> {
+        self.budget.map(|b| b.remaining())
+    }
+}
+
+impl Default for RequestCtx {
+    fn default() -> Self {
+        RequestCtx::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_ctx_has_identity_and_no_budget() {
+        let a = RequestCtx::new();
+        let b = RequestCtx::new();
+        assert_ne!(a.id(), b.id(), "each mint gets its own id");
+        assert!(!a.token().same_flag(&b.token()), "each mint gets its own token");
+        assert!(a.budget().is_none());
+        assert!(!a.expired());
+        assert_eq!(a.remaining(), None);
+        assert_eq!(a.priority(), Priority::Normal);
+    }
+
+    #[test]
+    fn clones_share_the_request_identity() {
+        let ctx = RequestCtx::new().with_timeout(Duration::from_secs(5));
+        let layer_below = ctx.clone();
+        assert_eq!(ctx.id(), layer_below.id());
+        assert!(ctx.token().same_flag(&layer_below.token()));
+        assert_eq!(ctx.budget(), layer_below.budget(), "budget copies share the clock");
+        layer_below.cancel();
+        assert!(ctx.is_cancelled(), "cancel at any layer is cancel everywhere");
+    }
+
+    #[test]
+    fn expiry_follows_the_attached_budget() {
+        let ctx = RequestCtx::new().with_timeout(Duration::ZERO);
+        assert!(ctx.expired());
+        assert_eq!(ctx.remaining(), Some(Duration::ZERO));
+        let fresh = RequestCtx::new().with_timeout(Duration::from_secs(10));
+        assert!(!fresh.expired());
+        assert!(fresh.remaining().unwrap() > Duration::from_secs(9));
+    }
+
+    #[test]
+    fn builders_compose() {
+        let token = CancelToken::new();
+        let ctx = RequestCtx::new()
+            .with_cancel(token.clone())
+            .with_priority(Priority::High)
+            .with_cost_hint(Duration::from_millis(40))
+            .with_timeout(Duration::from_millis(100));
+        assert!(ctx.token().same_flag(&token));
+        assert_eq!(ctx.priority(), Priority::High);
+        assert_eq!(ctx.cost_hint(), Some(Duration::from_millis(40)));
+        assert!(ctx.budget().is_some());
+    }
+}

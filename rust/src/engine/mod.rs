@@ -12,11 +12,18 @@
 //!   windowed p50/p95) observed from real executions.
 //! - [`adaptive`] — the profile→scheduler feedback loop: measured-cost
 //!   core sizing, adaptive aging bound, running-deadline policy.
+//! - [`ctx`] — [`RequestCtx`]: the one per-request context (budget,
+//!   token, priority, cost hint) minted at the ingress and consumed by
+//!   every layer.
+//! - [`api`] — the unified submission surface: [`InferenceService`],
+//!   [`SubmitTicket`], typed [`SubmitError`]s, [`PrunRequest`].
 //! - [`session`] — `run` / `prun` as thin clients over the scheduler.
 
 pub mod adaptive;
 pub mod allocator;
+pub mod api;
 pub mod budget;
+pub mod ctx;
 pub mod optimizer;
 pub mod part;
 pub mod profile;
@@ -25,7 +32,9 @@ pub mod session;
 
 pub use adaptive::{AdaptiveConfig, AdaptivePolicy};
 pub use allocator::{allocate, allocate_weighted, weights, AllocPolicy};
+pub use api::{InferenceService, PrunRequest, SubmitError, SubmitTicket};
 pub use budget::Budget;
+pub use ctx::RequestCtx;
 pub use optimizer::{allocate_optimal, OptPart};
 pub use part::{part_sizes, JobPart};
 pub use profile::{ModelStats, ProfileStore};

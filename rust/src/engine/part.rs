@@ -3,6 +3,7 @@
 use crate::runtime::{CancelToken, Tensor};
 
 use super::budget::Budget;
+use super::ctx::RequestCtx;
 
 /// One independent piece of an inference job (paper §3.1's `j_i`): a
 /// model to run and its inputs. The part's *size* — the total element
@@ -11,31 +12,40 @@ use super::budget::Budget;
 pub struct JobPart {
     pub model: String,
     pub inputs: Vec<Tensor>,
-    /// optional per-part cancellation token (e.g. the serving request
-    /// this part answers); parts without one share the job's fate
-    pub cancel: Option<CancelToken>,
-    /// optional per-part request budget (the serving request's end-to-end
-    /// deadline account); parts without one inherit the job's
-    /// `PrunOptions::budget`, if any
-    pub budget: Option<Budget>,
+    /// optional per-part request context: when this part answers its
+    /// *own* serving request (one sequence of a dynamic batch), its
+    /// request's ctx rides here and wins over the job-wide ctx passed
+    /// to `submit` — batchmates with different arrival times get
+    /// different budgets, tokens and priorities
+    pub ctx: Option<RequestCtx>,
 }
 
 impl JobPart {
     pub fn new(model: impl Into<String>, inputs: Vec<Tensor>) -> JobPart {
-        JobPart { model: model.into(), inputs, cancel: None, budget: None }
+        JobPart { model: model.into(), inputs, ctx: None }
     }
 
-    /// Attach the cancellation token of the request this part serves.
-    pub fn with_cancel(mut self, token: CancelToken) -> JobPart {
-        self.cancel = Some(token);
+    /// Attach the [`RequestCtx`] of the request this part serves: the
+    /// scheduler derives the part's token, budget, priority and cost
+    /// hint from it, overriding the job-wide ctx.
+    pub fn with_ctx(mut self, ctx: RequestCtx) -> JobPart {
+        self.ctx = Some(ctx);
         self
     }
 
-    /// Attach the request budget of the request this part serves: the
-    /// scheduler derives both the part's admission rejection and its
-    /// running kill clock from what remains of it.
+    /// Attach the cancellation token of the request this part serves.
+    #[deprecated(since = "0.4.0", note = "attach a RequestCtx via `with_ctx` instead")]
+    pub fn with_cancel(mut self, token: CancelToken) -> JobPart {
+        let ctx = self.ctx.take().unwrap_or_default().with_cancel(token);
+        self.ctx = Some(ctx);
+        self
+    }
+
+    /// Attach the request budget of the request this part serves.
+    #[deprecated(since = "0.4.0", note = "attach a RequestCtx via `with_ctx` instead")]
     pub fn with_budget(mut self, budget: Budget) -> JobPart {
-        self.budget = Some(budget);
+        let ctx = self.ctx.take().unwrap_or_default().with_budget(budget);
+        self.ctx = Some(ctx);
         self
     }
 
@@ -71,5 +81,25 @@ mod tests {
             JobPart::new("b", vec![Tensor::zeros_f32(vec![1, 64])]),
         ];
         assert_eq!(part_sizes(&parts), vec![16, 64]);
+    }
+
+    #[test]
+    fn with_ctx_rides_on_the_part() {
+        let ctx = RequestCtx::new();
+        let p = JobPart::new("m", Vec::new()).with_ctx(ctx.clone());
+        assert!(p.ctx.unwrap().token().same_flag(&ctx.token()));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_builders_compose_into_one_ctx() {
+        use std::time::Duration;
+        let token = CancelToken::new();
+        let p = JobPart::new("m", Vec::new())
+            .with_cancel(token.clone())
+            .with_budget(Budget::new(Duration::from_millis(5)));
+        let ctx = p.ctx.expect("shims must build a ctx");
+        assert!(ctx.token().same_flag(&token), "second shim must keep the first's token");
+        assert!(ctx.budget().is_some());
     }
 }

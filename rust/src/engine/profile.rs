@@ -9,7 +9,7 @@
 //! sample counts) rather than a single point, which is what the adaptive
 //! policy layer (`engine::adaptive`) consumes: tail-aware part weights
 //! for the Listing-1 split, and an aging bound derived from observed p95
-//! part latency. `PrunOptions::weights = WeightSource::Profiled` weighs
+//! part latency. `PrunRequest::with_weights(WeightSource::Profiled)` weighs
 //! job parts by their *measured* cost instead of raw input size (the
 //! paper's §3.1 sketches exactly this: "assigning weight can be done
 //! with the help of a profiling phase ... which associates job parts of
@@ -187,6 +187,23 @@ impl ProfileStore {
             p.prune_stale(now);
             p.stats()
         })
+    }
+
+    /// Profiled cost the scheduler may trust for budget-aware
+    /// admission: the windowed p95 of `model`, but only once the fresh
+    /// window holds [`MIN_DISTRIBUTION_SAMPLES`] — rejecting requests
+    /// up front on a 1-sample "p95" (or the cold EWMA) would refuse
+    /// serveable traffic on noise. `None` means "no trusted estimate:
+    /// admit and let the budget sweep police it".
+    pub fn trusted_cost(&self, model: &str) -> Option<Duration> {
+        let mut map = self.guard();
+        let now = Instant::now();
+        let p = map.get_mut(model)?;
+        p.prune_stale(now);
+        if p.window.len() < MIN_DISTRIBUTION_SAMPLES {
+            return None;
+        }
+        Some(Duration::from_secs_f64(p.stats().p95_ms.max(0.0) / 1e3))
     }
 
     /// Worst per-model windowed p95 across the models with *fresh*
@@ -409,5 +426,25 @@ mod tests {
         assert!(p.p95_ms("m").is_some());
         assert_eq!(p.stats("m").unwrap().samples_total, 2);
         let _ = p.weights(&[("m", 10)]);
+    }
+
+    #[test]
+    fn trusted_cost_requires_a_full_distribution() {
+        let p = ProfileStore::new();
+        assert_eq!(p.trusted_cost("m"), None, "unprofiled -> no estimate");
+        for _ in 0..MIN_DISTRIBUTION_SAMPLES - 1 {
+            p.observe("m", Duration::from_millis(40));
+        }
+        assert_eq!(
+            p.trusted_cost("m"),
+            None,
+            "a thin window must not drive admission rejections"
+        );
+        p.observe("m", Duration::from_millis(40));
+        let cost = p.trusted_cost("m").expect("full window -> trusted p95");
+        assert!(
+            (cost.as_secs_f64() * 1e3 - 40.0).abs() < 1.0,
+            "p95 of a constant stream is that constant: {cost:?}"
+        );
     }
 }

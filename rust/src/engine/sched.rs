@@ -70,6 +70,13 @@
 //!   kills acknowledged by the executor are counted in `cancelled`,
 //!   `running_deadline_cancelled` *and* the by-source split
 //!   `running_deadline_cancelled_budget`.
+//! - **Budget-aware admission**: a task carrying both a [`Budget`] and
+//!   a profiled *cost hint* (stamped from the request's
+//!   [`RequestCtx`](super::ctx::RequestCtx) or the session's profile
+//!   store) is rejected at submit when the remaining budget cannot
+//!   cover the hint ([`SchedError::BudgetInfeasible`],
+//!   `budget_infeasible` counter) — a request that provably cannot
+//!   finish in time never takes queue space, let alone cores.
 //! - **Adaptive recalibration**: started with an
 //!   [`AdaptivePolicy`](super::adaptive::AdaptivePolicy), the dispatcher
 //!   re-derives the *effective* aging bound from observed part-latency
@@ -124,6 +131,10 @@ pub enum SchedError {
     /// instead: the running sweep fires the token and the executor
     /// acknowledges it like any other kill.)
     BudgetExpired,
+    /// Budget-aware admission: the task's remaining [`Budget`] was
+    /// already smaller than its profiled cost hint at submit, so it was
+    /// rejected up front — it never entered the queue.
+    BudgetInfeasible,
     /// The task's [`CancelToken`] fired before it finished: while it was
     /// queued (cores never taken) or while it was running (the executor
     /// stopped at its next token poll and the cores were released).
@@ -137,6 +148,9 @@ impl fmt::Display for SchedError {
         match self {
             SchedError::DeadlineExceeded => write!(f, "deadline exceeded before admission"),
             SchedError::BudgetExpired => write!(f, "request budget exhausted"),
+            SchedError::BudgetInfeasible => {
+                write!(f, "remaining budget below the profiled cost")
+            }
             SchedError::Cancelled => write!(f, "task cancelled"),
             SchedError::Shutdown => write!(f, "scheduler shut down"),
         }
@@ -163,6 +177,10 @@ pub struct PartTask {
     /// admission rejection and the running kill clock both derive from
     /// what remains of it (see module docs)
     pub budget: Option<Budget>,
+    /// profiled cost estimate (p95) for this task's model: with a
+    /// budget attached, admission rejects the task up front when
+    /// `budget.remaining() < cost_hint` (see module docs)
+    pub cost_hint: Option<Duration>,
     /// cooperative cancellation flag, shared with whoever may abandon
     /// this task (each task gets a private token unless one is attached)
     pub cancel: CancelToken,
@@ -178,8 +196,26 @@ impl PartTask {
             deadline: None,
             running_deadline: None,
             budget: None,
+            cost_hint: None,
             cancel: CancelToken::new(),
         }
+    }
+
+    /// Consume a request's [`RequestCtx`](super::ctx::RequestCtx): one
+    /// call stamps the task with the request's token, priority, budget
+    /// and cost hint — the scheduler-facing end of the "one context,
+    /// every layer" contract (fields the ctx does not carry are left
+    /// untouched).
+    pub fn with_ctx(mut self, ctx: &super::ctx::RequestCtx) -> PartTask {
+        self.cancel = ctx.token();
+        self.priority = ctx.priority();
+        if let Some(b) = ctx.budget() {
+            self.budget = Some(b);
+        }
+        if let Some(h) = ctx.cost_hint() {
+            self.cost_hint = Some(h);
+        }
+        self
     }
 
     pub fn with_priority(mut self, p: Priority) -> PartTask {
@@ -215,6 +251,35 @@ impl PartTask {
     pub fn with_budget(mut self, budget: Budget) -> PartTask {
         self.budget = Some(budget);
         self
+    }
+
+    /// Attach a profiled cost estimate for this task. Paired with a
+    /// budget, admission becomes budget-aware: a task whose remaining
+    /// budget is already below the hint is rejected at submit with
+    /// [`SchedError::BudgetInfeasible`] instead of queueing toward a
+    /// certain deadline death.
+    pub fn with_cost_hint(mut self, hint: Duration) -> PartTask {
+        self.cost_hint = Some(hint);
+        self
+    }
+
+    /// Budget-aware admission check (see module docs): true when the
+    /// task carries both a budget and a cost hint and the remainder
+    /// cannot cover the hint. A task that is already cancelled — or
+    /// whose budget has already *expired* — is deliberately not
+    /// "infeasible": those flow to the queue sweep's richer
+    /// classification (`Cancelled` / `BudgetExpired`), keeping the
+    /// terminal counters disjoint and the cancellation-first rule the
+    /// serving edge depends on (an abandoned client is not a deadline
+    /// symptom).
+    fn infeasible(&self) -> bool {
+        if self.cancel.is_cancelled() {
+            return false;
+        }
+        match (self.budget, self.cost_hint) {
+            (Some(b), Some(h)) => !b.expired() && b.remaining() < h,
+            _ => false,
+        }
     }
 }
 
@@ -376,6 +441,10 @@ pub struct SchedStats {
     /// ran out before launch (cores never taken; disjoint from both
     /// `deadline_rejected` and `cancelled`)
     pub budget_expired: u64,
+    /// tasks rejected by budget-aware admission at submit: remaining
+    /// budget below the profiled cost hint — never queued, never a
+    /// core taken (disjoint from every other terminal counter)
+    pub budget_infeasible: u64,
     pub cancelled: u64,
     /// parts whose core request the adaptive policy changed away from
     /// the size-proportional split (counted at submit by the session)
@@ -402,6 +471,7 @@ struct Counters {
     backfills: AtomicU64,
     deadline_rejected: AtomicU64,
     budget_expired: AtomicU64,
+    budget_infeasible: AtomicU64,
     cancelled: AtomicU64,
     adaptive_resizes: AtomicU64,
     running_deadline_cancelled: AtomicU64,
@@ -536,7 +606,8 @@ impl Scheduler {
         // dropped; counting sender-side would tally a task that never
         // reaches any terminal counter and permanently skew the invariant
         // `submitted == completed + failed + deadline_rejected +
-        // budget_expired + cancelled + queued + inflight`.
+        // budget_expired + budget_infeasible + cancelled + queued +
+        // inflight`.
         // Dispatcher-side counting makes
         // "counted submitted" and "will be terminally counted" the same
         // event. An unreceived task's reply sender drops with the
@@ -562,8 +633,8 @@ impl Scheduler {
     }
 
     /// Count parts whose core request the adaptive policy changed away
-    /// from the size-proportional split (called by `Session::prun_submit`
-    /// when it sizes a job adaptively).
+    /// from the size-proportional split (called by `Session`'s submit
+    /// path when it sizes a job adaptively).
     pub(crate) fn note_adaptive_resizes(&self, n: u64) {
         if n > 0 {
             self.counters.adaptive_resizes.fetch_add(n, Ordering::Relaxed);
@@ -589,6 +660,7 @@ impl Scheduler {
             backfills: c.backfills.load(Ordering::Relaxed),
             deadline_rejected: c.deadline_rejected.load(Ordering::Relaxed),
             budget_expired: c.budget_expired.load(Ordering::Relaxed),
+            budget_infeasible: c.budget_infeasible.load(Ordering::Relaxed),
             cancelled: c.cancelled.load(Ordering::Relaxed),
             adaptive_resizes: c.adaptive_resizes.load(Ordering::Relaxed),
             running_deadline_cancelled: c
@@ -690,6 +762,17 @@ fn dispatcher_loop(rx: Receiver<Event>, mut st: DispatchState) {
                 st.counters.submitted.fetch_add(1, Ordering::Relaxed);
                 if shutting_down {
                     st.reject_shutdown(q);
+                } else if q.task.infeasible() {
+                    // Budget-aware admission: the remaining budget
+                    // provably cannot cover the profiled cost, so the
+                    // task is rejected before it ever enters the queue.
+                    // (A cancelled or merely-expired task without a
+                    // hint still goes through the sweep's richer
+                    // classification below.)
+                    st.counters.budget_infeasible.fetch_add(1, Ordering::Relaxed);
+                    let _ = q
+                        .reply
+                        .send(Err(anyhow::Error::new(SchedError::BudgetInfeasible)));
                 } else {
                     st.enqueue(q);
                     st.admit();
@@ -1328,9 +1411,111 @@ mod tests {
         let st = s.stats();
         assert_eq!(st.submitted, 0, "rejected-at-submit must not count: {st:?}");
         assert_eq!(
-            st.completed + st.failed + st.deadline_rejected + st.budget_expired + st.cancelled,
+            st.completed
+                + st.failed
+                + st.deadline_rejected
+                + st.budget_expired
+                + st.budget_infeasible
+                + st.cancelled,
             0
         );
+    }
+
+    #[test]
+    fn infeasible_budget_is_rejected_at_submit() {
+        // 10ms of budget cannot cover a 50ms profiled cost: the task
+        // must be rejected up front with the typed BudgetInfeasible —
+        // never queued, never a core taken — and the counter must be
+        // disjoint from budget_expired/deadline_rejected/cancelled.
+        let s = sched(2);
+        let h = s.submit(
+            PartTask::new("sleep:1", Vec::new(), 1)
+                .with_budget(Budget::new(Duration::from_millis(10)))
+                .with_cost_hint(Duration::from_millis(50)),
+        );
+        let err = h.wait().unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SchedError>(),
+            Some(&SchedError::BudgetInfeasible)
+        );
+        assert!(s.drain(Duration::from_secs(5)));
+        let st = s.stats();
+        assert_eq!(st.budget_infeasible, 1, "{st:?}");
+        assert_eq!(st.budget_expired, 0, "{st:?}");
+        assert_eq!(st.deadline_rejected, 0, "{st:?}");
+        assert_eq!(st.cancelled, 0, "{st:?}");
+        assert_eq!(st.completed, 0, "{st:?}");
+        assert_eq!(st.cores_busy, 0, "{st:?}");
+        assert_eq!(st.submitted, 1, "counted submitted, then terminal: {st:?}");
+    }
+
+    #[test]
+    fn expired_budget_with_hint_is_budget_expired_not_infeasible() {
+        // Classification priority: a budget that already *expired*
+        // must land in budget_expired even when a cost hint is present
+        // (infeasibility is a prediction about the future; expiry is a
+        // fact) — and a cancelled task must land in cancelled, not be
+        // misfiled as infeasible just because its remainder is small.
+        let s = sched(2);
+        let h = s.submit(
+            PartTask::new("sleep:1", Vec::new(), 1)
+                .with_budget(Budget::new(Duration::ZERO))
+                .with_cost_hint(Duration::from_millis(50)),
+        );
+        let err = h.wait().unwrap_err();
+        assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::BudgetExpired));
+        let token = CancelToken::new();
+        token.cancel();
+        let h = s.submit(
+            PartTask::new("sleep:1", Vec::new(), 1)
+                .with_cancel(token)
+                .with_budget(Budget::new(Duration::from_millis(10)))
+                .with_cost_hint(Duration::from_millis(50)),
+        );
+        let err = h.wait().unwrap_err();
+        assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::Cancelled));
+        assert!(s.drain(Duration::from_secs(5)));
+        let st = s.stats();
+        assert_eq!(st.budget_infeasible, 0, "misfiled classification: {st:?}");
+        assert_eq!(st.budget_expired, 1, "{st:?}");
+        assert_eq!(st.cancelled, 1, "{st:?}");
+    }
+
+    #[test]
+    fn feasible_hint_does_not_reject() {
+        // Plenty of budget for the hint: the hint alone must never
+        // reject, and a hint without a budget is inert.
+        let s = sched(2);
+        s.submit(
+            PartTask::new("sleep:1", Vec::new(), 1)
+                .with_budget(Budget::new(Duration::from_secs(5)))
+                .with_cost_hint(Duration::from_millis(2)),
+        )
+        .wait()
+        .expect("feasible task must run");
+        s.submit(
+            PartTask::new("sleep:1", Vec::new(), 1)
+                .with_cost_hint(Duration::from_secs(600)),
+        )
+        .wait()
+        .expect("hint without budget must be inert");
+        let st = s.stats();
+        assert_eq!(st.budget_infeasible, 0, "{st:?}");
+        assert_eq!(st.completed, 2, "{st:?}");
+    }
+
+    #[test]
+    fn with_ctx_stamps_request_state_onto_the_task() {
+        use crate::engine::ctx::RequestCtx;
+        let ctx = RequestCtx::new()
+            .with_priority(Priority::High)
+            .with_timeout(Duration::from_secs(5))
+            .with_cost_hint(Duration::from_millis(3));
+        let task = PartTask::new("sleep:1", Vec::new(), 1).with_ctx(&ctx);
+        assert!(task.cancel.same_flag(&ctx.token()));
+        assert_eq!(task.priority, Priority::High);
+        assert_eq!(task.budget, ctx.budget());
+        assert_eq!(task.cost_hint, Some(Duration::from_millis(3)));
     }
 
     #[test]

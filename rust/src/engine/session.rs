@@ -1,16 +1,22 @@
 //! The `prun` inference session — the paper's extended API (§3.2).
 //!
 //! `Session::run` mirrors OnnxRuntime's `InferenceSession.run`;
-//! `Session::prun` accepts a *list* of job parts, sizes a private worker
-//! allocation for each via [`allocator`](super::allocator), and executes
-//! them through the central [`scheduler`](super::sched). The session is a
-//! thin client: `prun` submits one [`PartTask`] per part and waits on the
-//! returned handles; no OS threads are spawned per call (the seed's
-//! thread-per-part + blocking-lease topology is gone). `prun_submit`
-//! exposes the non-blocking half so callers (e.g. the coordinator's
-//! batcher) can overlap submission with other work; the returned
-//! [`PrunHandle`] can cancel the job's parts, and cancels whatever is
-//! still outstanding if it is dropped unconsumed.
+//! `Session::prun` accepts a [`PrunRequest`] — a *list* of job parts
+//! plus allocation tuning — sizes a private worker allocation for each
+//! part via [`allocator`](super::allocator), and executes them through
+//! the central [`scheduler`](super::sched). The session is a thin
+//! client: one [`PartTask`] per part, waited through channel handles;
+//! no OS threads are spawned per call (the seed's thread-per-part +
+//! blocking-lease topology is gone).
+//!
+//! The non-blocking half is the unified submission API: `Session`
+//! implements [`InferenceService`] (`submit(PrunRequest, RequestCtx) ->
+//! SubmitTicket<TaskDone>`), and every request-shaped value — budget,
+//! cancellation token, priority, profiled cost hint — arrives through
+//! the one [`RequestCtx`] minted at the ingress (or a per-part ctx
+//! riding on a [`JobPart`], for batches whose parts answer different
+//! requests). The pre-redesign variants (`prun_submit` over
+//! `PrunOptions`, `run_cancellable`) survive as `#[deprecated]` shims.
 //!
 //! Core accounting: a part allocated `c_i` threads occupies `c_i` entries
 //! of the scheduler's core ledger while it executes, so concurrent parts
@@ -32,7 +38,9 @@ use crate::runtime::{CancelToken, ExecutorPool, Manifest, Tensor};
 
 use super::adaptive::{AdaptiveConfig, AdaptivePolicy};
 use super::allocator::{allocate_weighted, weights, AllocPolicy};
+use super::api::{InferenceService, PrunRequest, SubmitError, SubmitTicket};
 use super::budget::Budget;
+use super::ctx::RequestCtx;
 use super::part::{part_sizes, JobPart};
 use super::profile::ProfileStore;
 use super::sched::{
@@ -48,6 +56,9 @@ pub enum WeightSource {
     Profiled,
 }
 
+/// Pre-redesign job tuning, superseded by [`PrunRequest`] (job-shaped
+/// knobs) + [`RequestCtx`] (request-shaped state). Kept only as the
+/// argument type of the `#[deprecated]` shims.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PrunOptions {
     pub policy: AllocPolicy,
@@ -182,28 +193,74 @@ impl PrunHandle {
     /// input order. Unlike [`wait`](Self::wait), a failed or cancelled
     /// part yields its own error without discarding sibling outputs —
     /// what a batch of independent serving requests needs.
-    pub fn wait_each(mut self) -> Vec<Result<TaskDone>> {
+    pub fn wait_each(self) -> Vec<Result<TaskDone>> {
+        self.wait_each_deadline(None)
+            .expect("deadline-free wait cannot time out")
+    }
+
+    /// [`wait_each`](Self::wait_each) bounded by an absolute deadline:
+    /// `None` means the clock struck first — every part still
+    /// outstanding (including the one being waited on) has been
+    /// cancelled, so its cores return through the scheduler's normal
+    /// completion path. The backing store of `SubmitTicket`'s bounded
+    /// wait.
+    pub(crate) fn wait_each_deadline(
+        mut self,
+        deadline: Option<Instant>,
+    ) -> Option<Vec<Result<TaskDone>>> {
         let handles = std::mem::take(&mut self.handles);
         let models = std::mem::take(&mut self.models);
         let profiles = Arc::clone(&self.profiles);
-        handles
-            .into_iter()
-            .enumerate()
-            .map(|(i, h)| {
-                let token = h.cancel_token();
-                match h.wait() {
-                    Ok(done) => {
-                        // killed parts must not feed the profile window
-                        // (see `wait` above)
-                        if !token.is_cancelled() {
-                            profiles.observe(&models[i], done.exec);
+        let mut out = Vec::with_capacity(handles.len());
+        let mut it = handles.into_iter().enumerate();
+        while let Some((i, h)) = it.next() {
+            let token = h.cancel_token();
+            let res = match deadline {
+                None => h.wait(),
+                Some(d) => {
+                    match h.wait_timeout(d.saturating_duration_since(Instant::now())) {
+                        Some(r) => r,
+                        None => {
+                            // out of time: give up on this part and all
+                            // its unfinished siblings
+                            h.cancel();
+                            for (_, rest) in it.by_ref() {
+                                rest.cancel();
+                            }
+                            return None;
                         }
-                        Ok(done)
                     }
-                    Err(e) => Err(e.context(format!("part {i} model {}", models[i]))),
                 }
-            })
-            .collect()
+            };
+            match res {
+                Ok(done) => {
+                    // killed parts must not feed the profile window
+                    // (see `wait` above)
+                    if !token.is_cancelled() {
+                        profiles.observe(&models[i], done.exec);
+                    }
+                    out.push(Ok(done));
+                }
+                Err(e) => {
+                    out.push(Err(e.context(format!("part {i} model {}", models[i]))));
+                }
+            }
+        }
+        Some(out)
+    }
+
+    /// Number of parts in this job.
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// The cancellation token of every part, input order.
+    pub(crate) fn tokens(&self) -> Vec<CancelToken> {
+        self.handles.iter().map(|h| h.cancel_token()).collect()
     }
 }
 
@@ -250,7 +307,7 @@ impl Session {
 
     /// Adaptive mode (`--adaptive`): the session's latency profiles
     /// feed back into scheduling — parts are sized by measured cost
-    /// whenever profiles exist (regardless of `PrunOptions::weights`),
+    /// whenever profiles exist (regardless of `PrunRequest::weights`),
     /// and the dispatcher re-derives the aging bound from observed p95
     /// part latency (see `engine::adaptive`).
     pub fn with_adaptive(
@@ -313,14 +370,36 @@ impl Session {
     /// paper compares against). Routed through the scheduler so it, too,
     /// respects the core ledger against concurrent `prun` jobs.
     pub fn run(&self, model: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
-        self.run_cancellable(model, inputs, CancelToken::new(), None)
+        self.run_with(model, inputs, &RequestCtx::new())
+    }
+
+    /// [`run`](Self::run) on behalf of a serving request: the ctx's
+    /// token, budget, priority and cost hint travel into the model
+    /// invocation, so a timed-out or cancelled request stops at the
+    /// scheduler instead of running unbounded. (Equivalent to
+    /// `submit(PrunRequest::single(..), ctx).wait()` — a lone part is
+    /// allocated the whole core budget.)
+    pub fn run_with(
+        &self,
+        model: &str,
+        inputs: Vec<Tensor>,
+        ctx: &RequestCtx,
+    ) -> Result<Vec<Tensor>> {
+        let mut outputs = self
+            .submit(PrunRequest::single(JobPart::new(model, inputs)), ctx.clone())
+            .wait()
+            .map_err(anyhow::Error::new)?;
+        // single part in, single result out
+        Ok(outputs.pop().map(|done| done.outputs).unwrap_or_default())
     }
 
     /// [`run`](Self::run) with a caller-owned [`CancelToken`] and an
-    /// optional request [`Budget`]: the serving edge (e.g. the OCR
-    /// handler) threads one request's token and deadline account through
-    /// every model invocation it makes, so a timed-out request stops at
-    /// the scheduler instead of running unbounded.
+    /// optional request [`Budget`].
+    #[deprecated(
+        since = "0.4.0",
+        note = "mint a RequestCtx at the ingress and use `run_with` (or \
+                `InferenceService::submit`) instead"
+    )]
     pub fn run_cancellable(
         &self,
         model: &str,
@@ -328,31 +407,48 @@ impl Session {
         cancel: CancelToken,
         budget: Option<Budget>,
     ) -> Result<Vec<Tensor>> {
-        let mut task =
-            PartTask::new(model, inputs, self.cores).with_cancel(cancel.clone());
+        let mut ctx = RequestCtx::new().with_cancel(cancel);
         if let Some(b) = budget {
-            task = task.with_budget(b);
+            ctx = ctx.with_budget(b);
         }
-        let done = self.sched.submit(task).wait()?;
-        // A kill that raced completion must not feed the profile window
-        // (see PrunHandle::wait for the full rationale).
-        if !cancel.is_cancelled() {
-            self.profiles.observe(model, done.exec);
-        }
-        Ok(done.outputs)
+        self.run_with(model, inputs, &ctx)
     }
 
     /// Parallel inference over independent job parts (the paper's
-    /// `prun`). Blocking convenience over [`Session::prun_submit`].
-    pub fn prun(&self, parts: Vec<JobPart>, opts: PrunOptions) -> Result<PrunOutcome> {
-        self.prun_submit(parts, opts).wait()
+    /// `prun`). Blocking convenience over [`InferenceService::submit`]:
+    /// assembles the classic [`PrunOutcome`] with per-part reports and
+    /// the Listing-1 allocation.
+    pub fn prun(&self, req: PrunRequest, ctx: &RequestCtx) -> Result<PrunOutcome> {
+        self.submit_job(req, ctx).wait()
     }
 
-    /// Submit a `prun` job without blocking: sizes each part's core
-    /// allocation (Listing 1), hands every part to the scheduler, and
-    /// returns a handle over the per-part completion futures.
+    /// Submit a `prun` job without blocking.
+    #[deprecated(
+        since = "0.4.0",
+        note = "build a PrunRequest, mint a RequestCtx and use \
+                `InferenceService::submit` instead"
+    )]
     pub fn prun_submit(&self, parts: Vec<JobPart>, opts: PrunOptions) -> PrunHandle {
+        let mut ctx = RequestCtx::new().with_priority(opts.priority);
+        if let Some(b) = opts.budget {
+            ctx = ctx.with_budget(b);
+        }
+        let mut req = PrunRequest::new(parts)
+            .with_policy(opts.policy)
+            .with_weights(opts.weights);
+        req.deadline = opts.deadline;
+        req.running_deadline = opts.running_deadline;
+        self.submit_job(req, &ctx)
+    }
+
+    /// The one submission path every entry point funnels into: sizes
+    /// each part's core allocation (Listing 1, adaptive when profiles
+    /// exist), stamps every part's task from its ctx (per-part ctx wins
+    /// over the job-wide one), fills budget-admission cost hints from
+    /// the profile store, and hands everything to the scheduler.
+    fn submit_job(&self, req: PrunRequest, ctx: &RequestCtx) -> PrunHandle {
         let t0 = Instant::now();
+        let PrunRequest { parts, policy, weights: wsrc, deadline, running_deadline } = req;
         if parts.is_empty() {
             return PrunHandle {
                 handles: Vec::new(),
@@ -367,7 +463,7 @@ impl Session {
         // exist — the paper's "cores according to expected computational
         // cost" with the profiling phase done online. Otherwise the
         // caller's weight source decides.
-        let profiled = self.adaptive.is_some() || opts.weights == WeightSource::Profiled;
+        let profiled = self.adaptive.is_some() || wsrc == WeightSource::Profiled;
         let w = if profiled {
             let keyed: Vec<(&str, usize)> = parts
                 .iter()
@@ -378,13 +474,13 @@ impl Session {
         } else {
             weights(&sizes)
         };
-        let allocation = allocate_weighted(&w, self.cores, opts.policy);
+        let allocation = allocate_weighted(&w, self.cores, policy);
         // Observability: how many parts the profile feedback actually
         // moved away from the size-proportional split. The shadow
         // allocation is skipped while nothing is profiled yet (the
         // weights are then identical by construction).
         if self.adaptive.is_some() && !self.profiles.is_empty() {
-            let size_alloc = allocate_weighted(&weights(&sizes), self.cores, opts.policy);
+            let size_alloc = allocate_weighted(&weights(&sizes), self.cores, policy);
             let moved = allocation
                 .iter()
                 .zip(size_alloc.iter())
@@ -392,7 +488,7 @@ impl Session {
                 .count() as u64;
             self.sched.note_adaptive_resizes(moved);
         }
-        let deadline = opts.deadline.map(|d| t0 + d);
+        let deadline = deadline.map(|d| t0 + d);
         let models: Vec<String> = parts.iter().map(|p| p.model.clone()).collect();
         // Parts are *moved* into their tasks — the input tensors are
         // handed to the executor without copying (§Perf: an OCR crop is
@@ -401,17 +497,21 @@ impl Session {
             .into_iter()
             .zip(allocation.iter())
             .map(|(part, &threads)| {
-                let JobPart { model, inputs, cancel, budget } = part;
-                let mut task =
-                    PartTask::new(model, inputs, threads).with_priority(opts.priority);
+                let JobPart { model, inputs, ctx: part_ctx } = part;
+                // Per-part ctx wins over the job-wide one: each part of
+                // a serving batch answers its own request, and its own
+                // clock/token/priority is the one the client is
+                // watching.
+                let mut task = PartTask::new(model, inputs, threads)
+                    .with_ctx(part_ctx.as_ref().unwrap_or(ctx));
                 task.deadline = deadline;
-                task.running_deadline = opts.running_deadline;
-                // Per-part budget wins over the job-wide one: each part
-                // of a serving batch answers its own request, and its
-                // own clock is the one the client is watching.
-                task.budget = budget.or(opts.budget);
-                if let Some(token) = cancel {
-                    task = task.with_cancel(token);
+                task.running_deadline = running_deadline;
+                // Budget-aware admission: when the request is budgeted
+                // but its ingress supplied no cost hint, consult the
+                // online profiles — a model whose trusted p95 already
+                // exceeds the remaining budget is rejected at submit.
+                if task.budget.is_some() && task.cost_hint.is_none() {
+                    task.cost_hint = self.profiles.trusted_cost(&task.model);
                 }
                 self.sched.submit(task)
             })
@@ -423,6 +523,34 @@ impl Session {
             t0,
             profiles: Arc::clone(&self.profiles),
         }
+    }
+}
+
+impl InferenceService for Session {
+    type Request = PrunRequest;
+    type Response = TaskDone;
+
+    /// Submit a `prun` job on behalf of `ctx`; the ticket settles one
+    /// [`TaskDone`] per part, input order, with typed [`SubmitError`]s.
+    fn submit(&self, req: PrunRequest, ctx: RequestCtx) -> SubmitTicket<TaskDone> {
+        let handle = self.submit_job(req, &ctx);
+        let allocation = handle.allocation().to_vec();
+        let n = handle.len();
+        let mut tokens = handle.tokens();
+        tokens.push(ctx.token());
+        SubmitTicket::pending(
+            ctx,
+            allocation,
+            tokens,
+            n,
+            Box::new(move |deadline| {
+                handle.wait_each_deadline(deadline).map(|rs| {
+                    rs.into_iter()
+                        .map(|r| r.map_err(|e| SubmitError::classify(&e)))
+                        .collect()
+                })
+            }),
+        )
     }
 }
 

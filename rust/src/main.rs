@@ -16,7 +16,7 @@ use anyhow::{bail, Context, Result};
 use dnc_serve::bench::figures;
 use dnc_serve::config::Config;
 use dnc_serve::coordinator::{Server, ServerState};
-use dnc_serve::engine::Session;
+use dnc_serve::engine::{RequestCtx, Session};
 use dnc_serve::nlp::{BertServer, Strategy, Tokenizer};
 use dnc_serve::ocr::{exact_match, generate, GenOptions, OcrMeta, OcrPipeline};
 use dnc_serve::runtime::Manifest;
@@ -122,7 +122,8 @@ fn cmd_ocr(args: &Args) -> Result<()> {
             dnc_serve::workload::boxes::sample_box_count(&mut rng)
         };
         let img = generate(pipeline.meta(), &mut rng, count, &GenOptions::default());
-        let res = pipeline.process(&img, variant)?;
+        // one request context per page — the CLI is this path's ingress
+        let res = pipeline.process(&img, variant, &RequestCtx::new())?;
         let (h, n) = exact_match(&res, &img);
         hits += h;
         boxes_total += n;
@@ -176,7 +177,8 @@ fn cmd_bert(args: &Args) -> Result<()> {
             .enumerate()
             .map(|(i, &l)| tok.synthetic(l, seed + (rep * 64 + i) as u64))
             .collect();
-        let res = server.serve(&reqs, strategy)?;
+        // one request context per batch — the CLI is this path's ingress
+        let res = server.serve(&reqs, strategy, &RequestCtx::new())?;
         lat.push(res.wall.as_secs_f64() * 1e3);
         served += x;
     }

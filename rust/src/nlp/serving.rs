@@ -6,6 +6,14 @@
 //! length bucket. Shape bucketing (DESIGN.md §4) stands in for the
 //! paper's exact-length runs: a sequence of length L runs in the smallest
 //! artifact bucket >= L, padded with PAD only to the bucket edge.
+//!
+//! Submission goes through the unified API: `BertServer` implements
+//! [`InferenceService`] over an [`EmbedBatch`] — each sequence may carry
+//! its *own* [`RequestCtx`] (the coordinator's dynamic batcher packs
+//! sequences from different clients into one scheduler job), and
+//! sequences without one inherit the batch-level ctx. The pre-redesign
+//! `serve_submit` / `serve_submit_cancellable` / `serve_submit_budgeted`
+//! variants survive as `#[deprecated]` shims over the same path.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -13,7 +21,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::engine::{
-    AllocPolicy, Budget, CancelToken, JobPart, PrunHandle, PrunOptions, Session,
+    AllocPolicy, Budget, CancelToken, InferenceService, JobPart, PrunRequest, RequestCtx,
+    Session, SubmitError, SubmitTicket,
 };
 use crate::runtime::Tensor;
 
@@ -55,11 +64,55 @@ pub struct BatchResult {
     pub invocations: usize,
 }
 
-/// A batch submitted to the scheduler but not yet waited on: the
-/// non-blocking half of [`BertServer::serve`] for the prun strategy,
-/// used by the coordinator's pipelined batcher.
+/// A batch of token-id sequences for [`BertServer`]'s
+/// [`InferenceService`] impl. Each sequence may ride with the
+/// [`RequestCtx`] of the client request it answers (the coordinator's
+/// batcher packs many clients into one scheduler job); sequences
+/// without one inherit the batch-level ctx passed to `submit`.
+#[derive(Debug, Clone, Default)]
+pub struct EmbedBatch {
+    sequences: Vec<(Vec<i32>, Option<RequestCtx>)>,
+    policy: AllocPolicy,
+}
+
+impl EmbedBatch {
+    pub fn new(policy: AllocPolicy) -> EmbedBatch {
+        EmbedBatch { sequences: Vec::new(), policy }
+    }
+
+    /// All sequences share the batch-level ctx given to `submit`.
+    pub fn from_requests(requests: &[Vec<i32>], policy: AllocPolicy) -> EmbedBatch {
+        EmbedBatch {
+            sequences: requests.iter().map(|r| (r.clone(), None)).collect(),
+            policy,
+        }
+    }
+
+    /// Append a sequence inheriting the batch-level ctx.
+    pub fn push(&mut self, ids: Vec<i32>) {
+        self.sequences.push((ids, None));
+    }
+
+    /// Append a sequence answering its own request: `ctx` (token,
+    /// budget, priority) travels into exactly this sequence's part.
+    pub fn push_with(&mut self, ids: Vec<i32>, ctx: RequestCtx) {
+        self.sequences.push((ids, Some(ctx)));
+    }
+
+    pub fn len(&self) -> usize {
+        self.sequences.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sequences.is_empty()
+    }
+}
+
+/// A batch submitted to the scheduler but not yet waited on — the
+/// legacy handle shape returned by the `#[deprecated]` `serve_submit*`
+/// shims, now a thin wrapper over [`SubmitTicket`].
 pub struct BatchSubmit {
-    handle: PrunHandle,
+    ticket: SubmitTicket<Vec<f32>>,
     t0: Instant,
     n: usize,
 }
@@ -67,37 +120,24 @@ pub struct BatchSubmit {
 impl BatchSubmit {
     /// Block until every sequence's part completes.
     pub fn wait(self) -> Result<BatchResult> {
-        let outcome = self.handle.wait()?;
-        let outputs = outcome
-            .outputs
-            .iter()
-            .map(|out| Ok(out[0].as_f32()?.to_vec()))
-            .collect::<Result<Vec<_>>>()?;
+        let outputs = self.ticket.wait().map_err(anyhow::Error::new)?;
         Ok(BatchResult { outputs, wall: self.t0.elapsed(), invocations: self.n })
     }
 
     /// Block until every part settles and return one result per request,
-    /// input order. A cancelled or failed request carries its own error
-    /// without discarding its batchmates' embeddings — the per-request
-    /// isolation the coordinator's batcher needs once requests can time
-    /// out (and be cancelled) individually.
+    /// input order, with stringified errors (the legacy shape; the
+    /// typed form is `SubmitTicket::wait_each`).
     pub fn wait_each(self) -> Vec<Result<Vec<f32>, String>> {
-        self.handle
+        self.ticket
             .wait_each()
             .into_iter()
-            .map(|r| match r {
-                Ok(done) => match done.outputs.first() {
-                    Some(t) => t.as_f32().map(|v| v.to_vec()).map_err(|e| format!("{e:#}")),
-                    None => Err("part returned no outputs".to_string()),
-                },
-                Err(e) => Err(format!("{e:#}")),
-            })
+            .map(|r| r.map_err(|e| e.to_string()))
             .collect()
     }
 
     /// Cancel every request of this batch still outstanding.
     pub fn cancel(&self) {
-        self.handle.cancel();
+        self.ticket.cancel();
     }
 }
 
@@ -118,8 +158,15 @@ impl BertServer {
         Tokenizer::new(self.session.manifest().bert.vocab)
     }
 
-    /// Serve a batch of token-id sequences (unpadded, variable length).
-    pub fn serve(&self, requests: &[Vec<i32>], strategy: Strategy) -> Result<BatchResult> {
+    /// Serve a batch of token-id sequences (unpadded, variable length)
+    /// on behalf of `ctx` — blocking convenience over
+    /// [`InferenceService::submit`].
+    pub fn serve(
+        &self,
+        requests: &[Vec<i32>],
+        strategy: Strategy,
+        ctx: &RequestCtx,
+    ) -> Result<BatchResult> {
         if requests.is_empty() {
             bail!("empty batch");
         }
@@ -137,7 +184,11 @@ impl BertServer {
                 // dummy rows fill the batch bucket
                 data.resize(batch * seq, super::tokenizer::PAD_ID);
                 let model = m.bert_model_name(batch, seq);
-                let out = self.session.run(&model, vec![Tensor::i32(vec![batch, seq], data)])?;
+                let out = self.session.run_with(
+                    &model,
+                    vec![Tensor::i32(vec![batch, seq], data)],
+                    ctx,
+                )?;
                 let pooled = out[0].as_f32()?;
                 let hidden = out[0].shape[1];
                 let outputs = requests
@@ -151,91 +202,89 @@ impl BertServer {
                 let mut outputs = Vec::with_capacity(requests.len());
                 for r in requests {
                     let (model, tensor) = self.single_part(r)?;
-                    let out = self.session.run(&model, vec![tensor])?;
+                    let out = self.session.run_with(&model, vec![tensor], ctx)?;
                     outputs.push(out[0].as_f32()?.to_vec());
                 }
                 Ok(BatchResult { outputs, wall: t0.elapsed(), invocations: requests.len() })
             }
-            Strategy::Prun(policy) => self.serve_submit(requests, policy)?.wait(),
+            Strategy::Prun(policy) => {
+                let n = requests.len();
+                let outputs = self
+                    .submit(EmbedBatch::from_requests(requests, policy), ctx.clone())
+                    .wait()
+                    .map_err(anyhow::Error::new)?;
+                Ok(BatchResult { outputs, wall: t0.elapsed(), invocations: n })
+            }
         }
     }
 
-    /// Submit a batch under the prun strategy without blocking: one job
-    /// part per sequence, handed to `engine::sched` via
-    /// [`Session::prun_submit`]. Returns immediately with a completion
-    /// handle.
+    /// Submit a batch under the prun strategy without blocking.
+    #[deprecated(
+        since = "0.4.0",
+        note = "build an EmbedBatch, mint a RequestCtx and use \
+                `InferenceService::submit` instead"
+    )]
     pub fn serve_submit(
         &self,
         requests: &[Vec<i32>],
         policy: AllocPolicy,
     ) -> Result<BatchSubmit> {
-        self.submit_parts(requests.iter().map(|r| (r.as_slice(), None, None)), policy)
+        self.legacy_submit(EmbedBatch::from_requests(requests, policy))
     }
 
-    /// [`serve_submit`](Self::serve_submit) with one [`CancelToken`] per
-    /// request: each sequence's job part carries its requester's token,
-    /// so a single timed-out request cancels exactly its own part — the
-    /// rest of the batch is untouched.
+    /// [`serve_submit`] with one [`CancelToken`] per request.
+    #[deprecated(
+        since = "0.4.0",
+        note = "push sequences with per-request RequestCtxs into an EmbedBatch and \
+                use `InferenceService::submit` instead"
+    )]
     pub fn serve_submit_cancellable(
         &self,
         requests: &[(Vec<i32>, CancelToken)],
         policy: AllocPolicy,
     ) -> Result<BatchSubmit> {
-        self.submit_parts(
-            requests.iter().map(|(r, token)| (r.as_slice(), Some(token.clone()), None)),
-            policy,
-        )
+        let mut batch = EmbedBatch::new(policy);
+        for (ids, token) in requests {
+            batch.push_with(ids.clone(), RequestCtx::new().with_cancel(token.clone()));
+        }
+        self.legacy_submit(batch)
     }
 
-    /// [`serve_submit_cancellable`](Self::serve_submit_cancellable) plus
-    /// one request [`Budget`] per sequence: each part carries its *own*
-    /// request's remaining deadline account (finer than deriving one
-    /// running deadline from the batch minimum — batchmates with
-    /// different arrival times get different remainders), so the
-    /// scheduler rejects a part whose request is already out of time and
-    /// kills a part still running when its request's clock ends.
+    /// [`serve_submit_cancellable`] plus one request [`Budget`] per
+    /// sequence.
+    #[deprecated(
+        since = "0.4.0",
+        note = "push sequences with per-request RequestCtxs into an EmbedBatch and \
+                use `InferenceService::submit` instead"
+    )]
     pub fn serve_submit_budgeted(
         &self,
         requests: &[(Vec<i32>, CancelToken, Budget)],
         policy: AllocPolicy,
     ) -> Result<BatchSubmit> {
-        self.submit_parts(
-            requests
-                .iter()
-                .map(|(r, token, budget)| (r.as_slice(), Some(token.clone()), Some(*budget))),
-            policy,
-        )
+        let mut batch = EmbedBatch::new(policy);
+        for (ids, token, budget) in requests {
+            batch.push_with(
+                ids.clone(),
+                RequestCtx::new().with_cancel(token.clone()).with_budget(*budget),
+            );
+        }
+        self.legacy_submit(batch)
     }
 
-    /// Shared submit pipeline: one job part per sequence (carrying its
-    /// request's token and budget, when there are any), handed to the
-    /// scheduler via [`Session::prun_submit`].
-    fn submit_parts<'a>(
-        &self,
-        requests: impl ExactSizeIterator<Item = (&'a [i32], Option<CancelToken>, Option<Budget>)>,
-        policy: AllocPolicy,
-    ) -> Result<BatchSubmit> {
-        let n = requests.len();
-        if n == 0 {
+    /// Shared body of the deprecated shims: the new submission path,
+    /// wrapped back into the legacy [`BatchSubmit`] shape.
+    fn legacy_submit(&self, batch: EmbedBatch) -> Result<BatchSubmit> {
+        if batch.is_empty() {
             bail!("empty batch");
         }
+        let n = batch.len();
         let t0 = Instant::now();
-        let parts = requests
-            .map(|(r, token, budget)| {
-                let (model, tensor) = self.single_part(r)?;
-                let mut part = JobPart::new(model, vec![tensor]);
-                if let Some(t) = token {
-                    part = part.with_cancel(t);
-                }
-                if let Some(b) = budget {
-                    part = part.with_budget(b);
-                }
-                Ok(part)
-            })
-            .collect::<Result<Vec<_>>>()?;
-        let handle =
-            self.session.prun_submit(parts, PrunOptions { policy, ..Default::default() });
-        Ok(BatchSubmit { handle, t0, n })
+        let ticket = self.submit(batch, RequestCtx::new());
+        if let Some(err) = ticket.rejection() {
+            bail!("{err}");
+        }
+        Ok(BatchSubmit { ticket, t0, n })
     }
 
     /// (model name, [1, bucket] tensor) for a single request.
@@ -244,6 +293,53 @@ impl BertServer {
         let seq = m.seq_bucket(ids.len())?;
         let data = Tokenizer::pad(ids, seq);
         Ok((m.bert_model_name(1, seq), Tensor::i32(vec![1, seq], data)))
+    }
+}
+
+impl InferenceService for BertServer {
+    type Request = EmbedBatch;
+    type Response = Vec<f32>;
+
+    /// Submit an embed batch: one scheduler part per sequence, each
+    /// carrying its own [`RequestCtx`] (or inheriting `ctx`); the
+    /// ticket settles one pooled embedding per sequence, input order,
+    /// with typed [`SubmitError`]s — a cancelled or out-of-budget
+    /// batchmate never clobbers its siblings.
+    fn submit(&self, req: EmbedBatch, ctx: RequestCtx) -> SubmitTicket<Vec<f32>> {
+        let EmbedBatch { sequences, policy } = req;
+        let n = sequences.len();
+        if n == 0 {
+            return SubmitTicket::rejected(ctx, 0, SubmitError::Failed("empty batch".into()));
+        }
+        let mut parts = Vec::with_capacity(n);
+        for (ids, seq_ctx) in sequences {
+            let (model, tensor) = match self.single_part(&ids) {
+                Ok(p) => p,
+                // A malformed sequence (e.g. longer than every bucket)
+                // rejects the whole batch, the legacy contract.
+                Err(e) => {
+                    return SubmitTicket::rejected(
+                        ctx,
+                        n,
+                        SubmitError::Failed(format!("{e:#}")),
+                    )
+                }
+            };
+            let mut part = JobPart::new(model, vec![tensor]);
+            if let Some(c) = seq_ctx {
+                part = part.with_ctx(c);
+            }
+            parts.push(part);
+        }
+        self.session
+            .submit(PrunRequest::new(parts).with_policy(policy), ctx)
+            .map(|done| match done.outputs.first() {
+                Some(t) => t
+                    .as_f32()
+                    .map(|v| v.to_vec())
+                    .map_err(|e| SubmitError::Failed(format!("{e:#}"))),
+                None => Err(SubmitError::Failed("part returned no outputs".to_string())),
+            })
     }
 }
 
@@ -261,5 +357,16 @@ mod tests {
         );
         assert_eq!(Strategy::parse("bogus"), None);
         assert_eq!(Strategy::Prun(AllocPolicy::PrunEq).name(), "prun-eq");
+    }
+
+    #[test]
+    fn embed_batch_builders() {
+        let mut b = EmbedBatch::new(AllocPolicy::PrunDef);
+        assert!(b.is_empty());
+        b.push(vec![1, 2]);
+        b.push_with(vec![3, 4], RequestCtx::new());
+        assert_eq!(b.len(), 2);
+        let from = EmbedBatch::from_requests(&[vec![1], vec![2]], AllocPolicy::PrunEq);
+        assert_eq!(from.len(), 2);
     }
 }

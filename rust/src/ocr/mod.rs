@@ -11,4 +11,6 @@ pub mod pipeline;
 pub use detect::DetBox;
 pub use imagegen::{generate, GenOptions, GtBox, Image};
 pub use meta::OcrMeta;
-pub use pipeline::{exact_match, variant_from_name, OcrPipeline, OcrResult, PhaseTiming};
+pub use pipeline::{
+    exact_match, variant_from_name, OcrJob, OcrPipeline, OcrResult, PhaseTiming,
+};

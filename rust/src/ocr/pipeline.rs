@@ -2,25 +2,30 @@
 //!
 //! detection -> per-box orientation classification -> rectification ->
 //! per-box recognition -> decode. The classification and recognition
-//! phases run either `base` (loop over boxes, each `run` with the whole
-//! core budget — the unmodified pipeline) or via `prun` (all boxes
-//! submitted at once, threads allocated by size — the paper's Listings
-//! 2 -> 3 change).
+//! phases run either `base` (loop over boxes, each invocation with the
+//! whole core budget — the unmodified pipeline) or via `prun` (all
+//! boxes submitted at once, threads allocated by size — the paper's
+//! Listings 2 -> 3 change).
 //!
-//! [`OcrPipeline::process_budgeted`] threads one serving request's
-//! [`CancelToken`] and [`Budget`] through every model invocation of all
+//! One [`RequestCtx`] threads through every model invocation of all
 //! three phases: a cancelled or out-of-time request stops at the next
 //! phase boundary (CPU side) or at the scheduler/executor (model side)
 //! instead of running the remaining phases for a client that gave up.
+//! [`OcrPipeline`] also implements [`InferenceService`] over an
+//! [`OcrJob`]: `submit` runs the pipeline on a named worker thread and
+//! returns a [`SubmitTicket`] — which is how the router serves the
+//! `ocr` op with a bounded wait instead of pinning its connection
+//! thread.
 
+use std::sync::mpsc::{channel, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::engine::{
-    AllocPolicy, Budget, CancelToken, JobPart, PrunOptions, SchedError, Session,
-    TaskCancelled,
+    AllocPolicy, Budget, CancelToken, InferenceService, JobPart, PrunRequest, RequestCtx,
+    SchedError, Session, SubmitError, SubmitTicket, TaskCancelled,
 };
 use crate::runtime::Tensor;
 use crate::simcpu::ocr::OcrVariant;
@@ -54,14 +59,22 @@ pub struct OcrResult {
     pub timing: PhaseTiming,
 }
 
+/// One OCR request for [`OcrPipeline`]'s [`InferenceService`] impl: a
+/// page plus the execution variant.
+#[derive(Debug)]
+pub struct OcrJob {
+    pub image: Image,
+    pub variant: OcrVariant,
+}
+
 pub struct OcrPipeline {
     session: Arc<Session>,
-    meta: OcrMeta,
+    meta: Arc<OcrMeta>,
 }
 
 impl OcrPipeline {
     pub fn new(session: Arc<Session>, meta: OcrMeta) -> OcrPipeline {
-        OcrPipeline { session, meta }
+        OcrPipeline { session, meta: Arc::new(meta) }
     }
 
     pub fn meta(&self) -> &OcrMeta {
@@ -79,18 +92,23 @@ impl OcrPipeline {
         self.session.warmup(&refs)
     }
 
-    /// Run the full pipeline on one image.
-    pub fn process(&self, img: &Image, variant: OcrVariant) -> Result<OcrResult> {
-        self.process_budgeted(img, variant, &CancelToken::new(), None)
-    }
-
-    /// [`process`](Self::process) under a serving request's control: the
-    /// request's `cancel` token and remaining `budget` travel into every
-    /// model invocation (detection, classification, recognition), so the
+    /// Run the full pipeline on one image, synchronously, on behalf of
+    /// `ctx`: the request's token and budget travel into every model
+    /// invocation (detection, classification, recognition), so the
     /// scheduler rejects still-queued parts of an out-of-time request
     /// and kills a running part when the request's clock ends. The
     /// CPU-side phase boundaries check both too — a request that died
     /// during classification never pays for recognition crops.
+    pub fn process(&self, img: &Image, variant: OcrVariant, ctx: &RequestCtx) -> Result<OcrResult> {
+        run_pipeline(&self.session, &self.meta, img, variant, ctx)
+    }
+
+    /// [`process`](Self::process) with bare token/budget plumbing.
+    #[deprecated(
+        since = "0.4.0",
+        note = "mint a RequestCtx at the ingress and use `process` (or \
+                `InferenceService::submit`) instead"
+    )]
     pub fn process_budgeted(
         &self,
         img: &Image,
@@ -98,110 +116,177 @@ impl OcrPipeline {
         cancel: &CancelToken,
         budget: Option<Budget>,
     ) -> Result<OcrResult> {
-        // ---- Phase 1: detection (identical in all variants) ----
-        let t0 = Instant::now();
-        let score = self
-            .session
-            .run_cancellable("ocr_det", vec![img.to_tensor(&self.meta)], cancel.clone(), budget)
-            .context("detection")?;
-        let boxes = detect::extract_boxes(img, &self.meta, score[0].as_f32()?);
-        let det = t0.elapsed();
-
-        if boxes.is_empty() {
-            return Ok(OcrResult { boxes, texts: vec![], flipped: vec![], timing: PhaseTiming { det, ..Default::default() } });
+        let mut ctx = RequestCtx::new().with_cancel(cancel.clone());
+        if let Some(b) = budget {
+            ctx = ctx.with_budget(b);
         }
+        self.process(img, variant, &ctx)
+    }
+}
 
-        // ---- Phase 2: orientation classification ----
-        check_request(cancel, budget).context("before classification")?;
-        let t1 = Instant::now();
-        let upright_crops: Vec<(Tensor, usize)> = boxes
-            .iter()
-            .map(|b| {
-                let bucket = self.meta.width_bucket(b.width)?;
-                Ok((crop_tensor(img, &self.meta, b.x, b.y, b.width, bucket, false), bucket))
-            })
-            .collect::<Result<_>>()?;
-        let cls_logits = self.run_phase(
-            upright_crops.iter().map(|(t, bucket)| (format!("ocr_cls_w{bucket}"), t.clone())),
-            variant,
-            cancel,
-            budget,
-        )?;
-        let flipped: Vec<bool> = cls_logits
-            .iter()
-            .map(|out| {
-                let l = out[0].as_f32().unwrap();
-                l[1] > l[0]
-            })
-            .collect();
-        let cls = t1.elapsed();
+impl InferenceService for OcrPipeline {
+    type Request = OcrJob;
+    type Response = OcrResult;
 
-        // ---- Phase 3: rectify + recognition ----
-        check_request(cancel, budget).context("before recognition")?;
-        let t2 = Instant::now();
-        let rec_inputs: Vec<(String, Tensor)> = boxes
-            .iter()
-            .zip(flipped.iter())
-            .map(|(b, &fl)| {
-                let bucket = self.meta.width_bucket(b.width)?;
-                let crop = crop_tensor(img, &self.meta, b.x, b.y, b.width, bucket, fl);
-                Ok((format!("ocr_rec_w{bucket}"), crop))
-            })
-            .collect::<Result<_>>()?;
-        let rec_out = self.run_phase(rec_inputs.into_iter(), variant, cancel, budget)?;
-        let texts: Vec<Option<String>> = rec_out
-            .iter()
-            .map(|out| {
-                let logp = out[0].as_f32().ok()?;
-                let n_classes = out[0].shape[1];
-                decode::decode(logp, n_classes, &self.meta).ok()
-            })
-            .collect();
-        let rec = t2.elapsed();
+    /// Run the pipeline on a named worker thread under `ctx`; the
+    /// single-item ticket settles the page's [`OcrResult`]. The serving
+    /// edge pairs this with [`SubmitTicket::wait_each_timeout`]: on
+    /// expiry the request is cancelled, so the pipeline's scheduler
+    /// tasks release their cores and the worker thread unwinds through
+    /// its error path instead of running unbounded for a client that
+    /// gave up.
+    fn submit(&self, job: OcrJob, ctx: RequestCtx) -> SubmitTicket<OcrResult> {
+        let session = Arc::clone(&self.session);
+        let meta = Arc::clone(&self.meta);
+        let worker_ctx = ctx.clone();
+        let (tx, rx) = channel();
+        let spawned = std::thread::Builder::new().name("dnc-ocr".into()).spawn(move || {
+            let res = run_pipeline(&session, &meta, &job.image, job.variant, &worker_ctx)
+                .map_err(|e| SubmitError::classify(&e));
+            let _ = tx.send(vec![res]); // the waiter may have given up
+        });
+        if let Err(e) = spawned {
+            return SubmitTicket::rejected(
+                ctx,
+                1,
+                SubmitError::Failed(format!("spawning ocr worker failed: {e}")),
+            );
+        }
+        let token = ctx.token();
+        SubmitTicket::pending(
+            ctx,
+            Vec::new(), // phases size themselves as they go
+            vec![token],
+            1,
+            Box::new(move |deadline| {
+                let res = match deadline {
+                    None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+                    Some(d) => rx.recv_timeout(d.saturating_duration_since(Instant::now())),
+                };
+                match res {
+                    Ok(results) => Some(results),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => Some(vec![Err(
+                        SubmitError::Failed("ocr worker died".to_string()),
+                    )]),
+                }
+            }),
+        )
+    }
+}
 
-        Ok(OcrResult { boxes, texts, flipped, timing: PhaseTiming { det, cls, rec } })
+/// The 3-phase pipeline body, free of `&self` so the worker thread of
+/// [`OcrPipeline::submit`] can own its captures.
+fn run_pipeline(
+    session: &Session,
+    meta: &OcrMeta,
+    img: &Image,
+    variant: OcrVariant,
+    ctx: &RequestCtx,
+) -> Result<OcrResult> {
+    // ---- Phase 1: detection (identical in all variants) ----
+    let t0 = Instant::now();
+    let score = session
+        .run_with("ocr_det", vec![img.to_tensor(meta)], ctx)
+        .context("detection")?;
+    let boxes = detect::extract_boxes(img, meta, score[0].as_f32()?);
+    let det = t0.elapsed();
+
+    if boxes.is_empty() {
+        return Ok(OcrResult {
+            boxes,
+            texts: vec![],
+            flipped: vec![],
+            timing: PhaseTiming { det, ..Default::default() },
+        });
     }
 
-    /// Run one per-box phase under the chosen variant, threading the
-    /// request's token and budget into every scheduler submission.
-    fn run_phase(
-        &self,
-        inputs: impl Iterator<Item = (String, Tensor)>,
-        variant: OcrVariant,
-        cancel: &CancelToken,
-        budget: Option<Budget>,
-    ) -> Result<Vec<Vec<Tensor>>> {
-        let parts: Vec<JobPart> = inputs
-            .map(|(model, t)| JobPart::new(model, vec![t]).with_cancel(cancel.clone()))
-            .collect();
-        match variant {
-            OcrVariant::Base => {
-                // unmodified pipeline: iterate, each run owns all cores —
-                // and a request that dies mid-loop stops at the next box
-                parts
-                    .into_iter()
-                    .map(|p| {
-                        check_request(cancel, budget)?;
-                        self.session.run_cancellable(&p.model, p.inputs, cancel.clone(), budget)
-                    })
-                    .collect()
-            }
-            OcrVariant::Prun(policy) => Ok(self
-                .session
-                .prun(parts, PrunOptions { policy, budget, ..Default::default() })?
-                .outputs),
+    // ---- Phase 2: orientation classification ----
+    check_request(ctx).context("before classification")?;
+    let t1 = Instant::now();
+    let upright_crops: Vec<(Tensor, usize)> = boxes
+        .iter()
+        .map(|b| {
+            let bucket = meta.width_bucket(b.width)?;
+            Ok((crop_tensor(img, meta, b.x, b.y, b.width, bucket, false), bucket))
+        })
+        .collect::<Result<_>>()?;
+    let cls_logits = run_phase(
+        session,
+        upright_crops.iter().map(|(t, bucket)| (format!("ocr_cls_w{bucket}"), t.clone())),
+        variant,
+        ctx,
+    )?;
+    let flipped: Vec<bool> = cls_logits
+        .iter()
+        .map(|out| {
+            let l = out[0].as_f32().unwrap();
+            l[1] > l[0]
+        })
+        .collect();
+    let cls = t1.elapsed();
+
+    // ---- Phase 3: rectify + recognition ----
+    check_request(ctx).context("before recognition")?;
+    let t2 = Instant::now();
+    let rec_inputs: Vec<(String, Tensor)> = boxes
+        .iter()
+        .zip(flipped.iter())
+        .map(|(b, &fl)| {
+            let bucket = meta.width_bucket(b.width)?;
+            let crop = crop_tensor(img, meta, b.x, b.y, b.width, bucket, fl);
+            Ok((format!("ocr_rec_w{bucket}"), crop))
+        })
+        .collect::<Result<_>>()?;
+    let rec_out = run_phase(session, rec_inputs.into_iter(), variant, ctx)?;
+    let texts: Vec<Option<String>> = rec_out
+        .iter()
+        .map(|out| {
+            let logp = out[0].as_f32().ok()?;
+            let n_classes = out[0].shape[1];
+            decode::decode(logp, n_classes, meta).ok()
+        })
+        .collect();
+    let rec = t2.elapsed();
+
+    Ok(OcrResult { boxes, texts, flipped, timing: PhaseTiming { det, cls, rec } })
+}
+
+/// Run one per-box phase under the chosen variant; every scheduler
+/// submission inherits the request's ctx.
+fn run_phase(
+    session: &Session,
+    inputs: impl Iterator<Item = (String, Tensor)>,
+    variant: OcrVariant,
+    ctx: &RequestCtx,
+) -> Result<Vec<Vec<Tensor>>> {
+    let parts: Vec<JobPart> = inputs.map(|(model, t)| JobPart::new(model, vec![t])).collect();
+    match variant {
+        OcrVariant::Base => {
+            // unmodified pipeline: iterate, each run owns all cores —
+            // and a request that dies mid-loop stops at the next box
+            parts
+                .into_iter()
+                .map(|p| {
+                    check_request(ctx)?;
+                    session.run_with(&p.model, p.inputs, ctx)
+                })
+                .collect()
         }
+        OcrVariant::Prun(policy) => Ok(session
+            .prun(PrunRequest::new(parts).with_policy(policy), ctx)?
+            .outputs),
     }
 }
 
 /// CPU-side phase guard: fail fast with the same typed errors the
 /// scheduler uses, so a request cancelled or out of time between model
 /// invocations never pays for the next phase's crop/tensor work.
-fn check_request(cancel: &CancelToken, budget: Option<Budget>) -> Result<()> {
-    if cancel.is_cancelled() {
+fn check_request(ctx: &RequestCtx) -> Result<()> {
+    if ctx.is_cancelled() {
         return Err(anyhow::Error::new(TaskCancelled));
     }
-    if budget.is_some_and(|b| b.expired()) {
+    if ctx.expired() {
         return Err(anyhow::Error::new(SchedError::BudgetExpired));
     }
     Ok(())

@@ -45,6 +45,14 @@ impl CancelToken {
     pub fn is_cancelled(&self) -> bool {
         self.flag.load(Ordering::SeqCst)
     }
+
+    /// True if `other` is a clone of this token (they share one flag).
+    /// This is *identity*, not state equality — the ctx-propagation
+    /// tests use it to prove every layer observes the token minted at
+    /// the serving edge rather than a lookalike.
+    pub fn same_flag(&self, other: &CancelToken) -> bool {
+        Arc::ptr_eq(&self.flag, &other.flag)
+    }
 }
 
 /// Typed error an executor returns when it skipped or aborted a task

@@ -9,4 +9,4 @@ pub mod pipeline;
 
 pub use framegen::{frame_tensor, render_frame, scene, ObjectTrack, Scene};
 pub use motion::moving_regions;
-pub use pipeline::{FrameResult, VideoPipeline};
+pub use pipeline::{FrameJob, FrameResult, VideoPipeline};

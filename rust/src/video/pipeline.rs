@@ -3,13 +3,23 @@
 //! (the OCR recognizer artifacts) with `base` or `prun` execution —
 //! structurally the OCR pipeline minus detection-by-model, plus state
 //! (previous frame) carried across the stream.
+//!
+//! The pipeline reaches the scheduler through the unified submission
+//! API: [`VideoPipeline`] implements [`InferenceService`] over a
+//! [`FrameJob`] (a stateless prev/next frame pair — the stream state
+//! stays in [`VideoPipeline::next_frame`], which is a blocking
+//! convenience over `submit`), so a frame's recognition runs under one
+//! [`RequestCtx`] like every other workload: cancel it or let its
+//! budget die and the region parts stop at the scheduler.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::engine::{JobPart, PrunOptions, Session};
+use crate::engine::{
+    InferenceService, JobPart, PrunRequest, RequestCtx, Session, SubmitError, SubmitTicket,
+};
 use crate::ocr::decode;
 use crate::ocr::imagegen::{crop_tensor, Image};
 use crate::ocr::meta::OcrMeta;
@@ -25,15 +35,26 @@ pub struct FrameResult {
     pub recognize_time: Duration,
 }
 
+/// One frame's work for [`VideoPipeline`]'s [`InferenceService`] impl:
+/// the previous frame (differencing reference) and the frame to
+/// analyse. Stateless by design — the streaming state lives in
+/// [`VideoPipeline::next_frame`].
+#[derive(Debug)]
+pub struct FrameJob {
+    pub prev: Vec<f32>,
+    pub frame: Vec<f32>,
+    pub variant: OcrVariant,
+}
+
 pub struct VideoPipeline {
     session: Arc<Session>,
-    meta: OcrMeta,
+    meta: Arc<OcrMeta>,
     prev: Option<Vec<f32>>,
 }
 
 impl VideoPipeline {
     pub fn new(session: Arc<Session>, meta: OcrMeta) -> VideoPipeline {
-        VideoPipeline { session, meta, prev: None }
+        VideoPipeline { session, meta: Arc::new(meta), prev: None }
     }
 
     pub fn meta(&self) -> &OcrMeta {
@@ -45,9 +66,15 @@ impl VideoPipeline {
         self.prev = None;
     }
 
-    /// Process the next frame. The first frame only primes the
-    /// differencer and reports no objects.
-    pub fn next_frame(&mut self, pixels: &[f32], variant: OcrVariant) -> Result<FrameResult> {
+    /// Process the next frame on behalf of `ctx`. The first frame only
+    /// primes the differencer and reports no objects. Blocking
+    /// convenience over [`InferenceService::submit`].
+    pub fn next_frame(
+        &mut self,
+        pixels: &[f32],
+        variant: OcrVariant,
+        ctx: &RequestCtx,
+    ) -> Result<FrameResult> {
         let Some(prev) = self.prev.replace(pixels.to_vec()) else {
             return Ok(FrameResult {
                 objects: vec![],
@@ -55,43 +82,120 @@ impl VideoPipeline {
                 recognize_time: Duration::ZERO,
             });
         };
+        let job = FrameJob { prev, frame: pixels.to_vec(), variant };
+        let mut results = self
+            .submit(job, ctx.clone())
+            .wait()
+            .map_err(anyhow::Error::new)?;
+        Ok(results.pop().expect("one result per frame"))
+    }
+}
 
+impl InferenceService for VideoPipeline {
+    type Request = FrameJob;
+    type Response = FrameResult;
+
+    /// Motion-detect now (cheap CPU work), then hand every moving
+    /// region's recognition to the scheduler under `ctx`. The
+    /// single-item ticket settles the frame's [`FrameResult`]. The
+    /// `base` variant executes lazily inside the wait (it is a
+    /// sequential loop of full-budget runs by definition); `prun`
+    /// submits all regions before returning.
+    fn submit(&self, job: FrameJob, ctx: RequestCtx) -> SubmitTicket<FrameResult> {
         let t0 = Instant::now();
-        let regions = motion::moving_regions(&prev, pixels, &self.meta);
+        let regions = motion::moving_regions(&job.prev, &job.frame, &self.meta);
         let motion_time = t0.elapsed();
 
         let t1 = Instant::now();
-        let img = Image { pixels: pixels.to_vec(), boxes: vec![] };
-        let parts: Vec<JobPart> = regions
+        let img = Image { pixels: job.frame, boxes: vec![] };
+        let parts: Vec<JobPart> = match regions
             .iter()
             .map(|b| {
                 let bucket = self.meta.width_bucket(b.width)?;
                 let crop = crop_tensor(&img, &self.meta, b.x, b.y, b.width, bucket, false);
                 Ok(JobPart::new(format!("ocr_rec_w{bucket}"), vec![crop]))
             })
-            .collect::<Result<_>>()?;
-        let outputs = match variant {
-            OcrVariant::Base => parts
-                .into_iter()
-                .map(|p| self.session.run(&p.model, p.inputs))
-                .collect::<Result<Vec<_>>>()?,
-            OcrVariant::Prun(policy) => {
-                self.session
-                    .prun(parts, PrunOptions { policy, ..Default::default() })?
-                    .outputs
+            .collect::<Result<_>>()
+        {
+            Ok(parts) => parts,
+            Err(e) => {
+                return SubmitTicket::rejected(ctx, 1, SubmitError::Failed(format!("{e:#}")))
             }
         };
-        let objects = regions
-            .iter()
-            .zip(outputs.iter())
-            .map(|(b, out)| {
-                let label = out[0]
-                    .as_f32()
-                    .ok()
-                    .and_then(|logp| decode::decode(logp, out[0].shape[1], &self.meta).ok());
-                (b.x, b.y, label)
-            })
-            .collect();
-        Ok(FrameResult { objects, motion_time, recognize_time: t1.elapsed() })
+        let meta = Arc::clone(&self.meta);
+        let positions: Vec<(usize, usize)> = regions.iter().map(|b| (b.x, b.y)).collect();
+        let assemble = move |outputs: Vec<Vec<crate::runtime::Tensor>>| {
+            let objects = positions
+                .iter()
+                .zip(outputs.iter())
+                .map(|(&(x, y), out)| {
+                    let label = out[0]
+                        .as_f32()
+                        .ok()
+                        .and_then(|logp| decode::decode(logp, out[0].shape[1], &meta).ok());
+                    (x, y, label)
+                })
+                .collect();
+            FrameResult { objects, motion_time, recognize_time: t1.elapsed() }
+        };
+
+        match job.variant {
+            OcrVariant::Base => {
+                // Sequential full-budget runs: executed lazily when the
+                // ticket is waited (each region still flows through the
+                // scheduler under the request's ctx), honouring the
+                // wait deadline between and *during* regions — a
+                // deadline that strikes cancels the request and yields
+                // `None`, the same contract as every other implementor.
+                let session = Arc::clone(&self.session);
+                let token = ctx.token();
+                let lazy_ctx = ctx.clone();
+                SubmitTicket::pending(
+                    ctx,
+                    Vec::new(),
+                    vec![token],
+                    1,
+                    Box::new(move |deadline| {
+                        let mut outs = Vec::with_capacity(parts.len());
+                        for p in parts {
+                            if lazy_ctx.is_cancelled() {
+                                return Some(vec![Err(SubmitError::Cancelled)]);
+                            }
+                            let t = session
+                                .submit(PrunRequest::single(p), lazy_ctx.clone());
+                            let results = match deadline {
+                                None => t.wait_each(),
+                                Some(d) => match t.wait_each_timeout(
+                                    d.saturating_duration_since(Instant::now()),
+                                ) {
+                                    Some(r) => r,
+                                    None => {
+                                        // the region's ticket already
+                                        // cancelled lazy_ctx's token
+                                        return None;
+                                    }
+                                },
+                            };
+                            match results.into_iter().next() {
+                                Some(Ok(done)) => outs.push(done.outputs),
+                                Some(Err(e)) => return Some(vec![Err(e)]),
+                                None => {
+                                    return Some(vec![Err(SubmitError::Failed(
+                                        "region part returned no result".to_string(),
+                                    ))])
+                                }
+                            }
+                        }
+                        Some(vec![Ok(assemble(outs))])
+                    }),
+                )
+            }
+            OcrVariant::Prun(policy) => self
+                .session
+                .submit(PrunRequest::new(parts).with_policy(policy), ctx)
+                .collapse(move |dones| {
+                    assemble(dones.into_iter().map(|d| d.outputs).collect())
+                }),
+        }
     }
 }

@@ -3,18 +3,30 @@
 //! standard pattern for sharing across Cargo's per-file test crates).
 #![allow(dead_code)] // each test crate uses a subset of the fixtures
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use dnc_serve::coordinator::{Batcher, EmbedRequest};
-use dnc_serve::engine::{PartTask, SchedConfig, Scheduler, TaskRunner};
+use dnc_serve::engine::{
+    Budget, PartTask, RequestCtx, SchedConfig, Scheduler, SubmitError, TaskRunner,
+};
 use dnc_serve::runtime::{CancelToken, ExecResult, ReplyFn, TaskCancelled, Tensor};
 
 /// "Executes" every task for 10 simulated seconds — far past any test
 /// timeout or budget — unless its cancel token fires first (polled
-/// every 1ms).
+/// every 1ms). Records every token it is handed, so the ctx-propagation
+/// tests can prove the executor saw the *ingress* token, not a copy
+/// with a different flag.
 pub struct StallRunner {
     pub workers: usize,
+    /// tokens observed by run_on, submission order
+    pub seen_tokens: Arc<Mutex<Vec<CancelToken>>>,
+}
+
+impl StallRunner {
+    pub fn new(workers: usize) -> StallRunner {
+        StallRunner { workers, seen_tokens: Arc::new(Mutex::new(Vec::new())) }
+    }
 }
 
 impl TaskRunner for StallRunner {
@@ -31,6 +43,7 @@ impl TaskRunner for StallRunner {
         cancel: CancelToken,
         reply: ReplyFn,
     ) {
+        self.seen_tokens.lock().unwrap().push(cancel.clone());
         std::thread::spawn(move || {
             for _ in 0..10_000 {
                 if cancel.is_cancelled() {
@@ -48,43 +61,93 @@ impl TaskRunner for StallRunner {
     }
 }
 
+/// Per-layer observations of one request's context as it travels the
+/// embed pipeline: what the batcher's flush-time admission saw, and
+/// what the submitter stamped onto the scheduler task. Together with
+/// `StallRunner::seen_tokens` (the executor layer) these let a test
+/// assert that every layer observed the *same* token identity and
+/// budget minted at the ingress.
+#[derive(Clone, Default)]
+pub struct LayerProbe {
+    /// (token, budget) seen by the flush-time admission closure
+    pub admission: Arc<Mutex<Vec<(CancelToken, Option<Budget>)>>>,
+    /// (token, budget) stamped onto each submitted scheduler task
+    pub submitted: Arc<Mutex<Vec<(CancelToken, Option<Budget>)>>>,
+}
+
 /// The router's embed pipeline over a mock scheduler: a pipelined
 /// batcher whose submitter tags one stalling scheduler task per request
-/// with the request's cancel token *and* budget — what
-/// `ServerState::new` builds over `BertServer::serve_submit_budgeted`.
-/// With `reap_expired`, the flusher also runs the router's flush-time
-/// admission control: budget-dead requests get the structured
-/// `deadline_rejected` reply and are never submitted.
+/// with the request's [`RequestCtx`] — what `ServerState::new` builds
+/// over `BertServer`'s `InferenceService::submit`. With `reap_expired`,
+/// the flusher also runs the router's flush-time admission control:
+/// budget-dead requests get the typed `BudgetExpired` reply and are
+/// never submitted.
 pub fn embed_stack(
     cores: usize,
     threads_per_task: usize,
     max_batch: usize,
     max_wait: Duration,
     reap_expired: bool,
-) -> (Arc<Scheduler>, Batcher<EmbedRequest, Result<Vec<f32>, String>>) {
+) -> (Arc<Scheduler>, Batcher<EmbedRequest, Result<Vec<f32>, SubmitError>>) {
+    let (sched, batcher, _, _) =
+        embed_stack_probed(cores, threads_per_task, max_batch, max_wait, reap_expired);
+    (sched, batcher)
+}
+
+/// [`embed_stack`] plus the per-layer probes (admission, submit,
+/// executor) used by the ctx-propagation tests.
+#[allow(clippy::type_complexity)]
+pub fn embed_stack_probed(
+    cores: usize,
+    threads_per_task: usize,
+    max_batch: usize,
+    max_wait: Duration,
+    reap_expired: bool,
+) -> (
+    Arc<Scheduler>,
+    Batcher<EmbedRequest, Result<Vec<f32>, SubmitError>>,
+    LayerProbe,
+    Arc<Mutex<Vec<CancelToken>>>,
+) {
+    let runner = StallRunner::new(2);
+    let seen_tokens = Arc::clone(&runner.seen_tokens);
     let sched = Scheduler::start(
         SchedConfig { cores, aging: Duration::from_millis(10), ..Default::default() },
-        Arc::new(StallRunner { workers: 2 }),
+        Arc::new(runner),
     );
+    let probe = LayerProbe::default();
+    let p_admit = probe.clone();
+    let p_submit = probe.clone();
     let s2 = Arc::clone(&sched);
-    let batcher = Batcher::start_pipelined_with_reaper(
+    let batcher = Batcher::start_service(
         max_batch,
         max_wait,
         move |r: &EmbedRequest| {
-            (reap_expired && r.budget.expired()).then(|| {
-                Err("deadline_rejected: request budget exhausted before execution"
-                    .to_string())
-            })
+            p_admit
+                .admission
+                .lock()
+                .unwrap()
+                .push((r.ctx.token(), r.ctx.budget()));
+            if r.ctx.is_cancelled() {
+                Some(Err(SubmitError::Cancelled))
+            } else if reap_expired && r.ctx.expired() {
+                Some(Err(SubmitError::BudgetExpired))
+            } else {
+                None
+            }
         },
         move |requests: Vec<EmbedRequest>| {
             let handles: Vec<_> = requests
                 .into_iter()
                 .map(|r| {
-                    s2.submit(
-                        PartTask::new("stall", Vec::new(), threads_per_task)
-                            .with_cancel(r.cancel)
-                            .with_budget(r.budget),
-                    )
+                    let task =
+                        PartTask::new("stall", Vec::new(), threads_per_task).with_ctx(&r.ctx);
+                    p_submit
+                        .submitted
+                        .lock()
+                        .unwrap()
+                        .push((task.cancel.clone(), task.budget));
+                    s2.submit(task)
                 })
                 .collect();
             Box::new(move || {
@@ -92,11 +155,17 @@ pub fn embed_stack(
                     .into_iter()
                     .map(|h| match h.wait() {
                         Ok(_) => Ok(Vec::new()),
-                        Err(e) => Err(format!("{e:#}")),
+                        Err(e) => Err(SubmitError::classify(&e)),
                     })
                     .collect()
             })
         },
     );
-    (sched, batcher)
+    (sched, batcher, probe, seen_tokens)
+}
+
+/// Convenience: an [`EmbedRequest`] with a ctx minted from a budget.
+pub fn embed_request(ids: Vec<i32>, total: Duration) -> (EmbedRequest, RequestCtx) {
+    let ctx = RequestCtx::new().with_budget(Budget::new(total));
+    (EmbedRequest { ids, ctx: ctx.clone() }, ctx)
 }

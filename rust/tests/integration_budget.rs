@@ -1,20 +1,27 @@
-//! End-to-end request-budget propagation over a mock scheduler — no
-//! PJRT artifacts needed, so these always run. They pin the PR's
-//! acceptance criteria:
+//! End-to-end request-budget and ctx propagation over a mock scheduler
+//! — no PJRT artifacts needed, so these always run. They pin:
 //!
 //! 1. a request whose budget expires *while queued in the batcher* is
-//!    reaped at flush time with a structured `deadline_rejected` reply
-//!    and **never reaches the scheduler** (`submitted` stays 0);
+//!    reaped at flush time with the typed `BudgetExpired` reply and
+//!    **never reaches the scheduler** (`submitted` stays 0);
 //! 2. a request with total budget `T` that spends `w` ms accumulating
 //!    in the batcher gets a part running window of at most `T - w`: the
 //!    dispatcher kills the part at the budget's absolute deadline
 //!    (`T` from mint), not `w + deadline_running` — asserted against a
 //!    stall runner whose nominal execution is far longer than any
-//!    budget, with the kill attributed to the budget source.
+//!    budget, with the kill attributed to the budget source;
+//! 3. **ctx propagation**: every layer (batcher flush-time admission,
+//!    scheduler task, executor worker) observes the *same*
+//!    `CancelToken` identity and `Budget` value minted at the ingress
+//!    — not lookalikes;
+//! 4. **cancel-at-any-layer frees cores exactly once**: whichever layer
+//!    the cancel lands in (before flush, while queued, while running),
+//!    the request reaches exactly one terminal counter and the ledger
+//!    returns to empty.
 //!
 //! The stack mirrors `ServerState::new` exactly: a pipelined batcher
-//! with the router's reaper shape, a submitter tagging one scheduler
-//! task per request with the request's token *and* budget.
+//! with the router's admission shape, a submitter stamping one
+//! scheduler task per request from the request's `RequestCtx`.
 
 mod common;
 
@@ -22,36 +29,32 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dnc_serve::coordinator::{Batcher, EmbedRequest};
-use dnc_serve::engine::{Budget, Scheduler};
-use dnc_serve::runtime::CancelToken;
+use dnc_serve::engine::{Scheduler, SubmitError};
+use dnc_serve::util::prop::check;
 
 /// The router's embed pipeline with budgets over the shared stalling
-/// mock stack (`tests/common`): flush-time reaper plus a submitter that
-/// stamps each request's budget onto its scheduler task (what
-/// `ServerState::new` builds over `serve_submit_budgeted`).
+/// mock stack (`tests/common`): flush-time admission plus a submitter
+/// that stamps each request's ctx onto its scheduler task (what
+/// `ServerState::new` builds over `InferenceService::submit`).
 fn budgeted_embed_stack(
     max_wait: Duration,
-) -> (Arc<Scheduler>, Batcher<EmbedRequest, Result<Vec<f32>, String>>) {
+) -> (Arc<Scheduler>, Batcher<EmbedRequest, Result<Vec<f32>, SubmitError>>) {
     common::embed_stack(4, 2, 16, max_wait, true)
 }
 
 #[test]
 fn budget_dead_in_batcher_never_reaches_the_scheduler() {
     // The batcher accumulates for 80ms; the request only has 10ms of
-    // budget. At flush time the reaper must settle it structurally —
-    // nothing is ever submitted to the scheduler.
+    // budget. At flush time the admission closure must settle it with
+    // the typed error — nothing is ever submitted to the scheduler.
     let (sched, batcher) = budgeted_embed_stack(Duration::from_millis(80));
-    let rx = batcher.submit(EmbedRequest {
-        ids: vec![1, 2],
-        cancel: CancelToken::new(),
-        budget: Budget::new(Duration::from_millis(10)),
-    });
-    let reply = rx.recv_timeout(Duration::from_secs(5)).expect("reaper must reply");
+    let (req, _ctx) = common::embed_request(vec![1, 2], Duration::from_millis(10));
+    let rx = batcher.submit(req);
+    let reply = rx.recv_timeout(Duration::from_secs(5)).expect("admission must reply");
     let e = reply.expect_err("expired request must be rejected");
-    assert!(
-        e.contains("deadline_rejected"),
-        "want the structured deadline_rejected reply, got: {e}"
-    );
+    assert_eq!(e, SubmitError::BudgetExpired, "want the typed rejection, got: {e}");
+    // the Display form keeps the wire vocabulary the clients key on
+    assert!(e.to_string().contains("deadline_rejected"), "{e}");
     // give any (buggy) submission a moment to land, then check
     std::thread::sleep(Duration::from_millis(20));
     let st = sched.stats();
@@ -65,11 +68,8 @@ fn fresh_requests_still_flow_through() {
     // submitted (and, on this stall runner, killed at its own deadline
     // rather than running the nominal 10s).
     let (sched, batcher) = budgeted_embed_stack(Duration::from_millis(5));
-    let rx = batcher.submit(EmbedRequest {
-        ids: vec![1, 2],
-        cancel: CancelToken::new(),
-        budget: Budget::new(Duration::from_millis(150)),
-    });
+    let (req, _ctx) = common::embed_request(vec![1, 2], Duration::from_millis(150));
+    let rx = batcher.submit(req);
     let reply = rx.recv_timeout(Duration::from_secs(5)).expect("reply must arrive");
     assert!(reply.is_err(), "stall runner can only end by budget kill");
     let st = sched.stats();
@@ -86,15 +86,12 @@ fn part_running_window_is_the_remaining_budget() {
     let w = Duration::from_millis(150);
     let (sched, batcher) = budgeted_embed_stack(w);
     let t0 = Instant::now();
-    let rx = batcher.submit(EmbedRequest {
-        ids: vec![1, 2, 3],
-        cancel: CancelToken::new(),
-        budget: Budget::new(total),
-    });
+    let (req, _ctx) = common::embed_request(vec![1, 2, 3], total);
+    let rx = batcher.submit(req);
     let reply = rx.recv_timeout(Duration::from_secs(5)).expect("kill must reply");
     let waited = t0.elapsed();
     let e = reply.expect_err("budget kill must surface as an error");
-    assert!(e.contains("cancelled"), "want the typed kill, got: {e}");
+    assert_eq!(e, SubmitError::Cancelled, "want the typed kill, got: {e}");
     // launched only after the batcher wait...
     assert!(
         waited >= w,
@@ -124,7 +121,158 @@ fn part_running_window_is_the_remaining_budget() {
     assert_eq!(st.cores_busy, 0, "cores must return after the kill: {st:?}");
     assert_eq!(
         st.submitted,
-        st.completed + st.failed + st.deadline_rejected + st.budget_expired + st.cancelled,
+        st.completed
+            + st.failed
+            + st.deadline_rejected
+            + st.budget_expired
+            + st.budget_infeasible
+            + st.cancelled,
         "accounting invariant: {st:?}"
     );
+}
+
+#[test]
+fn every_layer_observes_the_ingress_ctx_identity() {
+    // Satellite criterion (ctx propagation): the token the batcher's
+    // admission sees, the token stamped onto the scheduler task, and
+    // the token handed to the executor worker must all share the flag
+    // minted at the ingress — and the Budget value must be the same
+    // account (same issued_at, same total), not one re-minted downstream.
+    let (sched, batcher, probe, seen_tokens) =
+        common::embed_stack_probed(4, 2, 16, Duration::from_millis(5), true);
+    let (req, ctx) = common::embed_request(vec![1, 2], Duration::from_millis(200));
+    let minted_token = ctx.token();
+    let minted_budget = ctx.budget();
+    let rx = batcher.submit(req);
+    let reply = rx.recv_timeout(Duration::from_secs(5)).expect("reply must arrive");
+    assert!(reply.is_err(), "stall runner ends by budget kill");
+
+    let admitted = probe.admission.lock().unwrap();
+    assert_eq!(admitted.len(), 1, "one flush-time admission check");
+    assert!(
+        admitted[0].0.same_flag(&minted_token),
+        "batcher admission must see the ingress token, not a copy"
+    );
+    assert_eq!(admitted[0].1, minted_budget, "batcher must see the ingress budget");
+
+    let submitted = probe.submitted.lock().unwrap();
+    assert_eq!(submitted.len(), 1, "one scheduler task");
+    assert!(
+        submitted[0].0.same_flag(&minted_token),
+        "the PartTask must carry the ingress token"
+    );
+    assert_eq!(submitted[0].1, minted_budget, "the PartTask must carry the ingress budget");
+
+    let seen = seen_tokens.lock().unwrap();
+    assert_eq!(seen.len(), 1, "one executor dispatch");
+    assert!(
+        seen[0].same_flag(&minted_token),
+        "the executor must poll the ingress token"
+    );
+    drop(seen);
+    assert!(sched.drain(Duration::from_secs(5)), "{:?}", sched.stats());
+}
+
+#[test]
+fn cancel_at_any_layer_frees_cores_exactly_once() {
+    // Satellite criterion: wherever the cancel lands — before the
+    // batcher flush, while the task queues behind a hog, or mid-run on
+    // the executor — the request must settle exactly one terminal
+    // counter, its handle must resolve, and the ledger must return to
+    // empty. No double-count, no leak.
+    check(3, |g| {
+        #[derive(Clone, Copy, PartialEq, Debug)]
+        enum Layer {
+            BeforeFlush,
+            WhileQueued,
+            WhileRunning,
+        }
+        let layer = *g.choice(&[Layer::BeforeFlush, Layer::WhileQueued, Layer::WhileRunning]);
+        // capacity 2, 2 threads/task: a hog saturates the ledger, so a
+        // second task queues behind it
+        let (sched, batcher) = common::embed_stack(2, 2, 16, Duration::from_millis(1), true);
+
+        // For WhileQueued: first occupy the cores with a long-budget hog.
+        let hog = if layer == Layer::WhileQueued {
+            let (req, hog_ctx) = common::embed_request(vec![9], Duration::from_secs(600));
+            let rx = batcher.submit(req);
+            let t0 = Instant::now();
+            while sched.stats().cores_busy != 2 && t0.elapsed() < Duration::from_secs(5) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            assert_eq!(sched.stats().cores_busy, 2, "hog never started");
+            Some((rx, hog_ctx))
+        } else {
+            None
+        };
+
+        let (req, ctx) = common::embed_request(vec![1, 2], Duration::from_secs(600));
+        match layer {
+            // cancelled before the batcher even flushes (but the flush
+            // interval is 1ms, so this races flush-vs-cancel — both
+            // outcomes are valid, which is exactly the point: exactly
+            // one terminal accounting either way)
+            Layer::BeforeFlush => ctx.cancel(),
+            _ => {}
+        }
+        let rx = batcher.submit(req);
+        match layer {
+            Layer::BeforeFlush => {}
+            Layer::WhileQueued => {
+                // flushed + submitted, but stuck behind the hog: give
+                // the flusher a moment, then cancel the queued task
+                let t0 = Instant::now();
+                while sched.stats().queue_depth != 1 && t0.elapsed() < Duration::from_secs(5)
+                {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                ctx.cancel();
+            }
+            Layer::WhileRunning => {
+                let t0 = Instant::now();
+                while sched.stats().inflight != 1 && t0.elapsed() < Duration::from_secs(5) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                assert_eq!(sched.stats().inflight, 1, "task never launched");
+                ctx.cancel();
+            }
+        }
+        let reply = rx.recv_timeout(Duration::from_secs(5)).expect("handle must settle");
+        let e = reply.expect_err("cancelled request must error");
+        assert_eq!(e, SubmitError::Cancelled, "layer {layer:?}: {e}");
+
+        // release the hog (if any) and require full quiescence
+        if let Some((hog_rx, hog_ctx)) = hog {
+            hog_ctx.cancel();
+            let _ = hog_rx.recv_timeout(Duration::from_secs(5));
+        }
+        assert!(sched.drain(Duration::from_secs(5)), "{:?}", sched.stats());
+        let st = sched.stats();
+        assert_eq!(st.cores_busy, 0, "layer {layer:?} leaked cores: {st:?}");
+        assert_eq!(st.inflight, 0, "{st:?}");
+        assert_eq!(st.queue_depth, 0, "{st:?}");
+        // exactly-once: every submitted task reaches exactly one
+        // terminal counter (cancel before flush may mean 0 submitted)
+        assert_eq!(
+            st.submitted,
+            st.completed
+                + st.failed
+                + st.deadline_rejected
+                + st.budget_expired
+                + st.budget_infeasible
+                + st.cancelled,
+            "layer {layer:?} broke the accounting invariant: {st:?}"
+        );
+        match layer {
+            Layer::BeforeFlush => {
+                // reaped at flush (0 submitted) or cancelled in the
+                // scheduler (1 submitted, 1 cancelled) — never both
+                assert!(st.submitted <= 1, "{st:?}");
+                assert_eq!(st.cancelled, st.submitted, "{st:?}");
+            }
+            Layer::WhileQueued | Layer::WhileRunning => {
+                assert_eq!(st.cancelled, 2 - u64::from(layer == Layer::WhileRunning), "{st:?}");
+            }
+        }
+    });
 }

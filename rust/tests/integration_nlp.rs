@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use dnc_serve::engine::{AllocPolicy, Session};
+use dnc_serve::engine::{AllocPolicy, RequestCtx, Session};
 use dnc_serve::nlp::{BertServer, Strategy, Tokenizer};
 use dnc_serve::runtime::{artifacts_dir, Manifest};
 use dnc_serve::workload::seqlen;
@@ -34,9 +34,9 @@ fn no_batch_and_prun_agree_exactly() {
     // both run each sequence in its own bucket: identical numerics
     let Some(srv) = server() else { return };
     let reqs = requests(&[16, 30, 64], 1);
-    let solo = srv.serve(&reqs, Strategy::NoBatch).unwrap();
+    let solo = srv.serve(&reqs, Strategy::NoBatch, &RequestCtx::new()).unwrap();
     for policy in [AllocPolicy::PrunDef, AllocPolicy::PrunOne, AllocPolicy::PrunEq] {
-        let prun = srv.serve(&reqs, Strategy::Prun(policy)).unwrap();
+        let prun = srv.serve(&reqs, Strategy::Prun(policy), &RequestCtx::new()).unwrap();
         assert_eq!(prun.outputs, solo.outputs, "{policy:?}");
         assert_eq!(prun.invocations, 3);
     }
@@ -46,7 +46,7 @@ fn no_batch_and_prun_agree_exactly() {
 fn pad_batch_returns_per_request_outputs() {
     let Some(srv) = server() else { return };
     let reqs = requests(&[16, 16], 2);
-    let res = srv.serve(&reqs, Strategy::PadBatch).unwrap();
+    let res = srv.serve(&reqs, Strategy::PadBatch, &RequestCtx::new()).unwrap();
     assert_eq!(res.outputs.len(), 2);
     assert_eq!(res.invocations, 1);
     let hidden = srv.session().manifest().bert.hidden;
@@ -61,8 +61,8 @@ fn identical_requests_same_output_across_strategies() {
     // row i must equal the no-batch output for request i.
     let Some(srv) = server() else { return };
     let reqs = requests(&[32, 32], 3);
-    let nb = srv.serve(&reqs, Strategy::NoBatch).unwrap();
-    let pb = srv.serve(&reqs, Strategy::PadBatch).unwrap();
+    let nb = srv.serve(&reqs, Strategy::NoBatch, &RequestCtx::new()).unwrap();
+    let pb = srv.serve(&reqs, Strategy::PadBatch, &RequestCtx::new()).unwrap();
     for (i, (a, b)) in nb.outputs.iter().zip(pb.outputs.iter()).enumerate() {
         for (x, y) in a.iter().zip(b.iter()) {
             assert!((x - y).abs() < 1e-4, "request {i}: {x} vs {y}");
@@ -82,7 +82,7 @@ fn random_length_batches_all_strategies_complete() {
             Strategy::NoBatch,
             Strategy::Prun(AllocPolicy::PrunDef),
         ] {
-            let res = srv.serve(&reqs, strat).unwrap();
+            let res = srv.serve(&reqs, strat, &RequestCtx::new()).unwrap();
             assert_eq!(res.outputs.len(), x, "{strat:?} x={x}");
             assert!(res.outputs.iter().flatten().all(|v| v.is_finite()));
         }
@@ -93,9 +93,9 @@ fn random_length_batches_all_strategies_complete() {
 fn batch_too_large_is_an_error() {
     let Some(srv) = server() else { return };
     let reqs = requests(&vec![16; 9], 5); // largest batch bucket is 8
-    assert!(srv.serve(&reqs, Strategy::PadBatch).is_err());
+    assert!(srv.serve(&reqs, Strategy::PadBatch, &RequestCtx::new()).is_err());
     // but prun handles any k (one part per request)
-    assert!(srv.serve(&reqs, Strategy::Prun(AllocPolicy::PrunDef)).is_ok());
+    assert!(srv.serve(&reqs, Strategy::Prun(AllocPolicy::PrunDef), &RequestCtx::new()).is_ok());
 }
 
 #[test]
@@ -103,13 +103,13 @@ fn sequence_too_long_is_an_error() {
     let Some(srv) = server() else { return };
     let tok = Tokenizer::new(8192);
     let reqs = vec![tok.synthetic(600, 6)];
-    assert!(srv.serve(&reqs, Strategy::NoBatch).is_err());
+    assert!(srv.serve(&reqs, Strategy::NoBatch, &RequestCtx::new()).is_err());
 }
 
 #[test]
 fn empty_batch_rejected() {
     let Some(srv) = server() else { return };
-    assert!(srv.serve(&[], Strategy::PadBatch).is_err());
+    assert!(srv.serve(&[], Strategy::PadBatch, &RequestCtx::new()).is_err());
 }
 
 #[test]
@@ -120,7 +120,7 @@ fn tokenizer_end_to_end_text_path() {
         tok.encode("the quick brown fox jumps over the lazy dog", 64),
         tok.encode("hello", 64),
     ];
-    let res = srv.serve(&reqs, Strategy::Prun(AllocPolicy::PrunDef)).unwrap();
+    let res = srv.serve(&reqs, Strategy::Prun(AllocPolicy::PrunDef), &RequestCtx::new()).unwrap();
     assert_eq!(res.outputs.len(), 2);
     assert_ne!(res.outputs[0], res.outputs[1]);
 }
@@ -130,7 +130,7 @@ fn profiled_weights_prun_after_warm_observations() {
     // paper §6 future work: weight by measured latency instead of size.
     // After observing each bucket, Profiled weights must produce valid
     // allocations and identical outputs.
-    use dnc_serve::engine::{JobPart, PrunOptions, WeightSource};
+    use dnc_serve::engine::{JobPart, PrunRequest, WeightSource};
     use dnc_serve::runtime::Tensor;
     let Some(srv) = server() else { return };
     let sess = srv.session();
@@ -155,12 +155,10 @@ fn profiled_weights_prun_after_warm_observations() {
         .iter()
         .map(|p| sess.run(&p.model, p.inputs.clone()).unwrap())
         .collect();
-    let opts = PrunOptions {
-        policy: AllocPolicy::PrunDef,
-        weights: WeightSource::Profiled,
-        ..Default::default()
-    };
-    let outcome = sess.prun(parts, opts).unwrap();
+    let req = PrunRequest::new(parts)
+        .with_policy(AllocPolicy::PrunDef)
+        .with_weights(WeightSource::Profiled);
+    let outcome = sess.prun(req, &RequestCtx::new()).unwrap();
     assert_eq!(outcome.outputs, solo);
     // allocation sums to the core budget and respects ordering (the
     // longer sequence measured slower, so it gets more threads)

@@ -5,7 +5,7 @@
 
 use std::sync::Arc;
 
-use dnc_serve::engine::{AllocPolicy, Session};
+use dnc_serve::engine::{AllocPolicy, RequestCtx, Session};
 use dnc_serve::ocr::{exact_match, generate, GenOptions, OcrMeta, OcrPipeline};
 use dnc_serve::runtime::{artifacts_dir, Manifest};
 use dnc_serve::simcpu::ocr::OcrVariant;
@@ -31,7 +31,7 @@ fn base_pipeline_exact_match_on_clean_images() {
     let mut total = (0usize, 0usize);
     for _ in 0..3 {
         let img = generate(p.meta(), &mut rng, 3, &opts);
-        let result = p.process(&img, OcrVariant::Base).unwrap();
+        let result = p.process(&img, OcrVariant::Base, &RequestCtx::new()).unwrap();
         assert_eq!(result.boxes.len(), img.boxes.len(), "all boxes detected");
         let (hits, n) = exact_match(&result, &img);
         total.0 += hits;
@@ -45,8 +45,8 @@ fn prun_def_pipeline_matches_base_outputs() {
     let Some(p) = pipeline() else { return };
     let mut rng = Rng::new(200);
     let img = generate(p.meta(), &mut rng, 4, &GenOptions::default());
-    let base = p.process(&img, OcrVariant::Base).unwrap();
-    let prun = p.process(&img, OcrVariant::Prun(AllocPolicy::PrunDef)).unwrap();
+    let base = p.process(&img, OcrVariant::Base, &RequestCtx::new()).unwrap();
+    let prun = p.process(&img, OcrVariant::Prun(AllocPolicy::PrunDef), &RequestCtx::new()).unwrap();
     assert_eq!(base.boxes, prun.boxes);
     assert_eq!(base.texts, prun.texts);
     assert_eq!(base.flipped, prun.flipped);
@@ -62,7 +62,7 @@ fn all_prun_variants_exact_match_with_noise_and_flips() {
     {
         let mut rng = Rng::new(300 + i as u64);
         let img = generate(p.meta(), &mut rng, 4, &opts);
-        let result = p.process(&img, OcrVariant::Prun(policy)).unwrap();
+        let result = p.process(&img, OcrVariant::Prun(policy), &RequestCtx::new()).unwrap();
         let (hits, n) = exact_match(&result, &img);
         assert_eq!(hits, n, "{policy:?}: {hits}/{n}");
         // flips detected correctly
@@ -82,7 +82,7 @@ fn empty_page_detects_nothing() {
     let Some(p) = pipeline() else { return };
     let mut rng = Rng::new(400);
     let img = generate(p.meta(), &mut rng, 0, &GenOptions::default());
-    let result = p.process(&img, OcrVariant::Base).unwrap();
+    let result = p.process(&img, OcrVariant::Base, &RequestCtx::new()).unwrap();
     assert!(result.boxes.is_empty());
     assert!(result.texts.is_empty());
 }
@@ -94,7 +94,7 @@ fn single_box_page_prun_no_failure() {
     let mut rng = Rng::new(500);
     let opts = GenOptions { noise: 0.0, flip_prob: 0.0, ..Default::default() };
     let img = generate(p.meta(), &mut rng, 1, &opts);
-    let result = p.process(&img, OcrVariant::Prun(AllocPolicy::PrunDef)).unwrap();
+    let result = p.process(&img, OcrVariant::Prun(AllocPolicy::PrunDef), &RequestCtx::new()).unwrap();
     let (hits, n) = exact_match(&result, &img);
     assert_eq!((hits, n), (1, 1));
 }
@@ -106,7 +106,7 @@ fn many_boxes_page_all_recognized() {
     let opts = GenOptions { noise: 0.02, flip_prob: 0.3, min_len: 3, max_len: 8 };
     let img = generate(p.meta(), &mut rng, 10, &opts);
     assert!(img.boxes.len() >= 8, "placed {} boxes", img.boxes.len());
-    let result = p.process(&img, OcrVariant::Prun(AllocPolicy::PrunDef)).unwrap();
+    let result = p.process(&img, OcrVariant::Prun(AllocPolicy::PrunDef), &RequestCtx::new()).unwrap();
     let (hits, n) = exact_match(&result, &img);
     assert_eq!(hits, n, "{hits}/{n}");
 }
@@ -116,7 +116,7 @@ fn timing_breakdown_populated() {
     let Some(p) = pipeline() else { return };
     let mut rng = Rng::new(700);
     let img = generate(p.meta(), &mut rng, 3, &GenOptions::default());
-    let r = p.process(&img, OcrVariant::Base).unwrap();
+    let r = p.process(&img, OcrVariant::Base, &RequestCtx::new()).unwrap();
     assert!(r.timing.det.as_nanos() > 0);
     assert!(r.timing.cls.as_nanos() > 0);
     assert!(r.timing.rec.as_nanos() > 0);

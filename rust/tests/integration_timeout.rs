@@ -8,9 +8,10 @@
 //!    full (stalled) execution.
 //!
 //! This mirrors `ServerState::new`'s pipelined embed batcher exactly:
-//! the submitter tags one scheduler task per request with the request's
-//! [`CancelToken`], and `embed_with_timeout` (the function `embed` /
-//! `embed_tokens` route through) cancels that token on expiry.
+//! the submitter stamps one scheduler task per request from the
+//! request's [`RequestCtx`], and `embed_with_timeout` (the function
+//! `embed` / `embed_tokens` route through) mints that ctx and cancels
+//! it on expiry.
 
 mod common;
 
@@ -19,18 +20,17 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dnc_serve::coordinator::{embed_with_timeout, Batcher, EmbedRequest};
-use dnc_serve::engine::{Budget, Scheduler};
+use dnc_serve::engine::{Budget, RequestCtx, Scheduler, SubmitError};
 use dnc_serve::metrics::Metrics;
-use dnc_serve::runtime::CancelToken;
 
 /// The router's embed pipeline over the shared stalling mock stack
-/// (`tests/common`): one scheduler task per request, carrying the
-/// request's cancel token *and* budget (what `ServerState::new` builds
-/// over `BertServer::serve_submit_budgeted`), no flush-time reaper.
+/// (`tests/common`): one scheduler task per request, stamped from the
+/// request's ctx (what `ServerState::new` builds over `BertServer`'s
+/// `InferenceService::submit`), no flush-time budget reaping.
 fn stalling_embed_stack(
     cores: usize,
     threads_per_task: usize,
-) -> (Arc<Scheduler>, Batcher<EmbedRequest, Result<Vec<f32>, String>>) {
+) -> (Arc<Scheduler>, Batcher<EmbedRequest, Result<Vec<f32>, SubmitError>>) {
     common::embed_stack(cores, threads_per_task, 4, Duration::from_millis(1), false)
 }
 
@@ -45,7 +45,7 @@ fn timed_out_embed_returns_structured_error_and_cancels_its_task() {
     // 1. structured error, promptly. Two correct mechanisms race at the
     // 50ms mark: the router's recv timeout ("request timed out"), or
     // the dispatcher's own enforcement of the request budget minted
-    // from the same 50ms — whose "task cancelled" reply can land just
+    // from the same 50ms — whose typed "cancelled" reply can land just
     // as the router wakes. Either is the request being refused in time.
     let msg = resp.get("error").expect("timeout must error").as_str().unwrap();
     assert!(
@@ -84,7 +84,12 @@ fn timed_out_embed_returns_structured_error_and_cancels_its_task() {
     assert_eq!(st.completed, 0);
     assert_eq!(
         st.submitted,
-        st.completed + st.failed + st.deadline_rejected + st.budget_expired + st.cancelled,
+        st.completed
+            + st.failed
+            + st.deadline_rejected
+            + st.budget_expired
+            + st.budget_infeasible
+            + st.cancelled,
         "accounting invariant: {st:?}"
     );
 }
@@ -99,12 +104,8 @@ fn timed_out_embed_cancelled_while_queued_takes_no_cores() {
 
     // occupy the core budget with a request nobody times out (yet): a
     // generous request budget that never fires during the test
-    let hog_cancel = CancelToken::new();
-    let hog_rx = batcher.submit(EmbedRequest {
-        ids: vec![9, 9],
-        cancel: hog_cancel.clone(),
-        budget: Budget::new(Duration::from_secs(600)),
-    });
+    let hog_ctx = RequestCtx::new().with_budget(Budget::new(Duration::from_secs(600)));
+    let hog_rx = batcher.submit(EmbedRequest { ids: vec![9, 9], ctx: hog_ctx.clone() });
     // wait until the hog's task actually holds the cores
     let t0 = Instant::now();
     while sched.stats().cores_busy != 2 && t0.elapsed() < Duration::from_secs(5) {
@@ -118,7 +119,7 @@ fn timed_out_embed_cancelled_while_queued_takes_no_cores() {
 
     // The queued task must be swept without touching the ledger. Two
     // correct mechanisms race at the 50ms mark: the router's timeout
-    // cancels the token (request_timeouts + sched.cancelled), or the
+    // cancels the ctx (request_timeouts + sched.cancelled), or the
     // dispatcher's own sweep sees the request budget — minted from the
     // same 50ms — die first (sched.budget_expired, the reply arriving
     // before the router even times out). Either way: no cores, no queue.
@@ -138,7 +139,7 @@ fn timed_out_embed_cancelled_while_queued_takes_no_cores() {
     assert_eq!(st.cores_busy, 2, "only the hog may hold cores: {st:?}");
 
     // release the hog too; everything must drain
-    hog_cancel.cancel();
+    hog_ctx.cancel();
     assert!(sched.drain(Duration::from_secs(5)), "{:?}", sched.stats());
     assert_eq!(sched.stats().cores_busy, 0);
     drop(hog_rx);

@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use dnc_serve::engine::{AllocPolicy, JobPart, PrunOptions, Session};
+use dnc_serve::engine::{AllocPolicy, JobPart, PrunRequest, RequestCtx, Session};
 use dnc_serve::runtime::{artifacts_dir, Manifest, Tensor};
 use dnc_serve::util::prop::check;
 
@@ -45,7 +45,9 @@ fn prun_outputs_in_input_order_and_match_run() {
             .map(|p| sess.run(&p.model, p.inputs.clone()).unwrap())
             .collect();
         let policy = *g.choice(&[AllocPolicy::PrunDef, AllocPolicy::PrunOne, AllocPolicy::PrunEq]);
-        let outcome = sess.prun(parts, PrunOptions { policy, ..Default::default() }).unwrap();
+        let outcome = sess
+            .prun(PrunRequest::new(parts).with_policy(policy), &RequestCtx::new())
+            .unwrap();
         assert_eq!(outcome.outputs.len(), k);
         for (i, (got, want)) in outcome.outputs.iter().zip(solo.iter()).enumerate() {
             assert_eq!(got, want, "part {i} differs from solo run");
@@ -64,7 +66,7 @@ fn prun_allocation_matches_allocator() {
             .collect();
         let sizes: Vec<usize> = parts.iter().map(|p| p.size()).collect();
         let expect = dnc_serve::engine::allocate(&sizes, 16, AllocPolicy::PrunDef);
-        let outcome = sess.prun(parts, PrunOptions::default()).unwrap();
+        let outcome = sess.prun(PrunRequest::new(parts), &RequestCtx::new()).unwrap();
         assert_eq!(outcome.allocation, expect);
         // every report carries its allocation
         for (r, &e) in outcome.reports.iter().zip(expect.iter()) {
@@ -76,7 +78,7 @@ fn prun_allocation_matches_allocator() {
 #[test]
 fn prun_empty_is_noop() {
     let Some(sess) = session(16) else { return };
-    let outcome = sess.prun(Vec::new(), PrunOptions::default()).unwrap();
+    let outcome = sess.prun(PrunRequest::default(), &RequestCtx::new()).unwrap();
     assert!(outcome.outputs.is_empty());
     assert!(outcome.reports.is_empty());
 }
@@ -89,7 +91,7 @@ fn prun_single_part_equals_run() {
     sess.warmup(&["bert_b1_s16"]).unwrap();
     let part = bert_part(16, 7);
     let solo = sess.run(&part.model, part.inputs.clone()).unwrap();
-    let outcome = sess.prun(vec![part], PrunOptions::default()).unwrap();
+    let outcome = sess.prun(PrunRequest::single(part), &RequestCtx::new()).unwrap();
     assert_eq!(outcome.outputs[0], solo);
     assert_eq!(outcome.allocation, vec![16]);
 }
@@ -98,5 +100,5 @@ fn prun_single_part_equals_run() {
 fn prun_bad_model_reports_error() {
     let Some(sess) = session(16) else { return };
     let parts = vec![JobPart::new("no_such_model", vec![Tensor::zeros_f32(vec![1, 4])])];
-    assert!(sess.prun(parts, PrunOptions::default()).is_err());
+    assert!(sess.prun(PrunRequest::new(parts), &RequestCtx::new()).is_err());
 }

@@ -23,7 +23,12 @@
 //!   mix: born-expired budgets are rejected without ever reaching a
 //!   worker, queued-past-budget tasks land in `budget_expired`, and
 //!   mid-run budget kills land in `cancelled` (+ the
-//!   `running_deadline_cancelled_budget` split).
+//!   `running_deadline_cancelled_budget` split);
+//! - **budget-aware admission** (`RequestCtx` cost hints) lands
+//!   infeasible tasks in `budget_infeasible` — never a queue slot,
+//!   never a worker — and the invariant, now `submitted == completed +
+//!   failed + deadline_rejected + budget_expired + budget_infeasible +
+//!   cancelled`, still balances.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -139,7 +144,12 @@ fn assert_accounting_balanced(sched: &Scheduler) {
     assert_eq!(st.cores_busy, 0, "ledger must return to empty: {st:?}");
     assert_eq!(
         st.submitted,
-        st.completed + st.failed + st.deadline_rejected + st.budget_expired + st.cancelled,
+        st.completed
+            + st.failed
+            + st.deadline_rejected
+            + st.budget_expired
+            + st.budget_infeasible
+            + st.cancelled,
         "accounting invariant violated: {st:?}"
     );
 }
@@ -627,12 +637,14 @@ fn aging_bound_monotonically_tracks_latency_shifts() {
 
 #[test]
 fn accounting_holds_with_budget_expiry() {
-    // Property (request budgets): with a random mix of budget-less
-    // tasks, born-expired budgets, and tight budgets over long runs, at
-    // quiescence the extended invariant `submitted == completed +
-    // failed + deadline_rejected + budget_expired + cancelled` balances,
-    // the counters agree with the per-handle error types, born-expired
-    // tasks never reach a worker, and no ledger core stays occupied.
+    // Property (request budgets + budget-aware admission): with a
+    // random mix of budget-less tasks, born-expired budgets, tight
+    // budgets over long runs, and infeasible cost hints, at quiescence
+    // the extended invariant `submitted == completed + failed +
+    // deadline_rejected + budget_expired + budget_infeasible +
+    // cancelled` balances, the counters agree with the per-handle error
+    // types, rejected tasks never reach a worker, and no ledger core
+    // stays occupied.
     check(3, |g| {
         let capacity = *g.choice(&[2usize, 4]);
         let (sched, probe) = tracking_sched(SchedConfig {
@@ -647,11 +659,18 @@ fn accounting_holds_with_budget_expiry() {
             Plain,
             BornExpired,
             TightBudget,
+            Infeasible,
         }
         let mut born_expired = 0usize;
+        let mut infeasible = 0usize;
         let handles: Vec<_> = (0..k)
             .map(|_| {
-                let kind = *g.choice(&[Kind::Plain, Kind::BornExpired, Kind::TightBudget]);
+                let kind = *g.choice(&[
+                    Kind::Plain,
+                    Kind::BornExpired,
+                    Kind::TightBudget,
+                    Kind::Infeasible,
+                ]);
                 let threads = g.usize_in(1, capacity);
                 let task = match kind {
                     // short task, no budget: completes
@@ -669,17 +688,28 @@ fn accounting_holds_with_budget_expiry() {
                         PartTask::new(model_name(threads, 60), Vec::new(), threads)
                             .with_budget(Budget::new(Duration::from_millis(15)))
                     }
+                    // ample budget, but a profiled cost the budget can
+                    // never cover: budget-aware admission must reject
+                    // it at submit, before any queueing
+                    Kind::Infeasible => {
+                        infeasible += 1;
+                        PartTask::new(model_name(threads, 2), Vec::new(), threads)
+                            .with_budget(Budget::new(Duration::from_millis(200)))
+                            .with_cost_hint(Duration::from_secs(30))
+                    }
                 };
                 sched.submit(task)
             })
             .collect();
-        let (mut ok, mut cancelled_seen, mut budget_seen) = (0u64, 0u64, 0u64);
+        let (mut ok, mut cancelled_seen, mut budget_seen, mut infeasible_seen) =
+            (0u64, 0u64, 0u64, 0u64);
         for h in handles {
             match h.wait() {
                 Ok(_) => ok += 1,
                 Err(e) => match e.downcast_ref::<SchedError>() {
                     Some(SchedError::Cancelled) => cancelled_seen += 1,
                     Some(SchedError::BudgetExpired) => budget_seen += 1,
+                    Some(SchedError::BudgetInfeasible) => infeasible_seen += 1,
                     other => panic!("unexpected error kind {other:?}: {e:#}"),
                 },
             }
@@ -691,23 +721,59 @@ fn accounting_holds_with_budget_expiry() {
         assert_eq!(st.completed, ok, "handle view and counters agree: {st:?}");
         assert_eq!(st.cancelled, cancelled_seen, "{st:?}");
         assert_eq!(st.budget_expired, budget_seen, "{st:?}");
+        assert_eq!(st.budget_infeasible, infeasible_seen, "{st:?}");
         assert_eq!(st.failed, 0, "{st:?}");
         assert!(
             budget_seen >= born_expired as u64,
             "every born-expired budget must be rejected: {budget_seen} < {born_expired}"
         );
+        assert_eq!(
+            infeasible_seen, infeasible as u64,
+            "every infeasible hint (and only those) must be rejected at submit: {st:?}"
+        );
         // mid-run budget kills are enforcement kills, attributed to the
         // budget source — never to the (unset) global running deadline
         assert_eq!(st.running_deadline_cancelled, cancelled_seen, "{st:?}");
         assert_eq!(st.running_deadline_cancelled_budget, cancelled_seen, "{st:?}");
-        // born-expired tasks must never have reached a worker: runs are
-        // at most the tasks that were not rejected at admission
+        // rejected tasks must never have reached a worker: runs are at
+        // most the tasks that were not rejected at admission
         assert!(
-            probe.runs.load(Ordering::SeqCst) as u64 <= k as u64 - budget_seen,
-            "budget-rejected tasks reached a worker: runs {} vs k {} - budget {}",
+            probe.runs.load(Ordering::SeqCst) as u64 <= k as u64 - budget_seen - infeasible_seen,
+            "admission-rejected tasks reached a worker: runs {} vs k {} - budget {} - infeasible {}",
             probe.runs.load(Ordering::SeqCst),
             k,
-            budget_seen
+            budget_seen,
+            infeasible_seen
         );
     });
+}
+
+#[test]
+fn ingress_ctx_token_reaches_the_executor() {
+    // Ctx propagation at the scheduler layer: a PartTask stamped via
+    // with_ctx must hand the *ingress* token (same flag, not a copy) to
+    // the executor worker, and a cancel through the ctx must be the
+    // cancel the worker observes.
+    use dnc_serve::engine::RequestCtx;
+    let capacity = 2;
+    let (sched, probe) = tracking_sched(SchedConfig {
+        cores: capacity,
+        aging: Duration::from_millis(10),
+        backfill: true,
+        ..Default::default()
+    });
+    let ctx = RequestCtx::new();
+    let h = sched
+        .submit(PartTask::new(model_name(1, 300), Vec::new(), 1).with_ctx(&ctx));
+    // wait (bounded) until the task is actually executing on a worker
+    let t0 = Instant::now();
+    while probe.runs.load(Ordering::SeqCst) != 1 && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(probe.runs.load(Ordering::SeqCst), 1, "task never launched");
+    ctx.cancel(); // cancel at the ingress, not through the handle
+    let err = h.wait().unwrap_err();
+    assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::Cancelled));
+    assert_accounting_balanced(&sched);
+    assert_eq!(probe.active.load(Ordering::SeqCst), 0, "cores must return");
 }
