@@ -94,6 +94,35 @@ fn main() {
         );
     });
 
+    // Open-loop submit throughput (ops/sec): how fast a producer can
+    // push tasks into the dispatcher *without* waiting on completions —
+    // id assignment, shard routing, counter bump, channel send. Printed
+    // for 1 and 2 shards so the bench-smoke artifact carries the
+    // sharding delta next to the round-trip figure above; consecutive
+    // request ids spread the flood round-robin across the shards.
+    for shards in [1usize, 2] {
+        let sched = Scheduler::start(
+            SchedConfig { shards, ..SchedConfig::default() },
+            Arc::new(InlineRunner),
+        );
+        let n = 40_000u64;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                sched.submit(PartTask::new("noop", Vec::new(), 1).with_request_id(i))
+            })
+            .collect();
+        let ops = n as f64 / t0.elapsed().as_secs_f64();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        println!(
+            "{:44} {ops:10.0} ops/s    ({n} submits, {shards} shard{})",
+            "sched submit throughput (open loop)",
+            if shards == 1 { "" } else { "s" }
+        );
+    }
+
     let dir = artifacts_dir();
     if !dir.join("ocr_meta.json").exists() {
         println!("\n(artifacts not built; skipping imagegen/detect/PJRT benches)");

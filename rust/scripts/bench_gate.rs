@@ -114,6 +114,32 @@ fn main() {
         }
     }
 
+    // Second self-relative bar: on the many-producer submit flood, the
+    // sharded dispatcher (N >= 2 scheduler shards) must strictly beat
+    // the single-shard configuration on submit throughput — the whole
+    // point of splitting the event channel and the ledger. As above,
+    // --record only warns so a stale baseline can always be refreshed.
+    if let (Some(sh), Some(si)) = (find("submit_storm"), find("submit_storm_single")) {
+        if sh.throughput_jobs_s <= si.throughput_jobs_s {
+            eprintln!(
+                "{}: sharded submit throughput {:.0} ops/s not above single-shard {:.0} ops/s",
+                if record { "WARN" } else { "FAIL" },
+                sh.throughput_jobs_s,
+                si.throughput_jobs_s
+            );
+            if !record {
+                exit(1);
+            }
+        } else {
+            println!(
+                "sharding lifts submit throughput {:.0} -> {:.0} ops/s (+{:.0}%)",
+                si.throughput_jobs_s,
+                sh.throughput_jobs_s,
+                100.0 * (sh.throughput_jobs_s / si.throughput_jobs_s - 1.0)
+            );
+        }
+    }
+
     if record {
         // Preserve the hand-set per-scenario tolerance_pct overrides
         // from the previous baseline — re-recording refreshes the

@@ -145,9 +145,17 @@ const HONEST_MIX: [SimPart; 4] = [
 ];
 
 fn start_sched(deadline_running: Option<Duration>) -> Arc<Scheduler> {
+    start_sched_sharded(0, deadline_running)
+}
+
+/// Like [`start_sched`] but with an explicit shard count. `0` = auto,
+/// which at [`SIM_CORES`] = 16 derives a single shard, so every legacy
+/// scenario keeps measuring the one-dispatcher configuration.
+fn start_sched_sharded(shards: usize, deadline_running: Option<Duration>) -> Arc<Scheduler> {
     Scheduler::start(
         SchedConfig {
             cores: SIM_CORES,
+            shards,
             aging: Duration::from_millis(50),
             backfill: true,
             deadline_running,
@@ -320,6 +328,65 @@ pub fn priority_inversion_scenario(jobs: usize) -> ScenarioResult {
     ScenarioResult::from_walls("priority_inversion", &walls, t0.elapsed().as_secs_f64())
 }
 
+/// The sharded-dispatcher scenario: a many-producer *open-loop* submit
+/// flood. Four producer threads each push `per_producer` one-core 1ms
+/// jobs into the scheduler as fast as `submit` returns — no pacing, no
+/// waiting on completions — so the measured phase is pure submission
+/// cost under 4-way producer contention: id assignment, shard routing,
+/// the shard-side counter bump, and the event-channel send (with the
+/// dispatcher draining that same channel concurrently).
+///
+/// `throughput_jobs_s` is therefore *submit ops/sec* — the figure
+/// sharding is meant to lift, since with one shard every producer and
+/// the lone dispatcher contend on a single channel — while p50/p95 are
+/// per-task completion walls (submit -> done) from the drain that
+/// follows, keeping the usual latency regression net. Tasks carry
+/// consecutive request ids so the flood spreads round-robin across all
+/// shards. `shards <= 1` records the single-shard reference point
+/// (`submit_storm_single`) that the gate's self-relative sharding bar
+/// compares against.
+pub fn submit_storm_scenario(shards: usize, per_producer: usize) -> ScenarioResult {
+    const PRODUCERS: usize = 4;
+    let sched = start_sched_sharded(shards, None);
+    let barrier = Arc::new(std::sync::Barrier::new(PRODUCERS + 1));
+    let mut joins = Vec::new();
+    for p in 0..PRODUCERS {
+        let sched = Arc::clone(&sched);
+        let barrier = Arc::clone(&barrier);
+        joins.push(std::thread::spawn(move || {
+            barrier.wait();
+            let mut pending = Vec::with_capacity(per_producer);
+            for i in 0..per_producer {
+                let rid = (p * per_producer + i) as u64;
+                let h = sched.submit(
+                    PartTask::new(sim_model(1.0), Vec::new(), 1).with_request_id(rid),
+                );
+                pending.push((Instant::now(), h));
+            }
+            let submits_done = Instant::now();
+            let walls: Vec<f64> = pending
+                .into_iter()
+                .map(|(t, h)| {
+                    h.wait().expect("storm part must complete");
+                    t.elapsed().as_secs_f64() * 1e3
+                })
+                .collect();
+            (submits_done, walls)
+        }));
+    }
+    let t0 = Instant::now();
+    barrier.wait();
+    let mut walls = Vec::new();
+    let mut submit_phase = Duration::ZERO;
+    for j in joins {
+        let (done, w) = j.join().expect("producer thread");
+        submit_phase = submit_phase.max(done.duration_since(t0));
+        walls.extend(w);
+    }
+    let name = if shards <= 1 { "submit_storm_single" } else { "submit_storm" };
+    ScenarioResult::from_walls(name, &walls, submit_phase.as_secs_f64())
+}
+
 /// Run the gate's full scenario list. `quick` shrinks job counts for
 /// the per-PR smoke run; the recorded baseline uses the same counts, so
 /// quick and full runs are not comparable to each other.
@@ -331,6 +398,9 @@ pub fn run_all(quick: bool) -> Vec<ScenarioResult> {
         longshort_scenario(true, jobs),
         cancel_storm_scenario(jobs),
         priority_inversion_scenario(jobs),
+        // 4 producers x (jobs * 5) tasks: 400 submits quick, 1200 full.
+        submit_storm_scenario(2, jobs * 5),
+        submit_storm_scenario(1, jobs * 5),
     ]
 }
 
@@ -529,6 +599,21 @@ mod tests {
             "high-priority job waited out the low wave: p95 {:.1}ms",
             r.p95_ms
         );
+    }
+
+    #[test]
+    fn submit_storm_floods_and_drains() {
+        // 2 shards over the 16 sim cores: 4 producers x 10 one-core
+        // tasks flood in, everything must drain, and the recorded
+        // throughput is the (positive) submit-phase rate.
+        let r = submit_storm_scenario(2, 10);
+        assert_eq!(r.name, "submit_storm");
+        assert_eq!(r.jobs, 40);
+        assert!(r.throughput_jobs_s > 0.0);
+        assert!(r.p95_ms < 2_000.0, "storm drain stalled: p95 {:.1}ms", r.p95_ms);
+        let r = submit_storm_scenario(1, 5);
+        assert_eq!(r.name, "submit_storm_single");
+        assert_eq!(r.jobs, 20);
     }
 
     #[test]

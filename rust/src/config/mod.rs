@@ -28,6 +28,9 @@ pub struct Config {
     pub max_wait_ms: u64,
     /// scheduler: max time the queue head may be bypassed by backfill
     pub aging_ms: u64,
+    /// scheduler shards (dispatcher threads, each owning a disjoint
+    /// slice of the core ledger); 0 = auto, one shard per 16 cores
+    pub sched_shards: usize,
     /// adaptive mode: size parts by measured cost and re-derive the
     /// aging bound from observed p95 part latency (engine::adaptive)
     pub adaptive: bool,
@@ -62,6 +65,7 @@ impl Default for Config {
             max_batch: 8,
             max_wait_ms: 5,
             aging_ms: 50,
+            sched_shards: 0,
             adaptive: false,
             deadline_running_ms: 0,
             request_timeout_ms: 30_000,
@@ -106,6 +110,9 @@ impl Config {
         if let Some(x) = v.get("aging_ms") {
             self.aging_ms = x.as_usize().context("aging_ms")? as u64;
         }
+        if let Some(x) = v.get("sched_shards") {
+            self.sched_shards = x.as_usize().context("sched_shards")?;
+        }
         if let Some(x) = v.get("adaptive") {
             self.adaptive = x.as_bool().context("adaptive")?;
         }
@@ -146,6 +153,7 @@ impl Config {
         self.max_batch = args.usize_or("max-batch", self.max_batch);
         self.max_wait_ms = args.u64_or("max-wait-ms", self.max_wait_ms);
         self.aging_ms = args.u64_or("aging-ms", self.aging_ms);
+        self.sched_shards = args.usize_or("sched-shards", self.sched_shards);
         self.adaptive = self.adaptive || args.flag("adaptive");
         self.deadline_running_ms =
             args.u64_or("deadline-running-ms", self.deadline_running_ms);
@@ -166,6 +174,7 @@ impl Config {
     pub fn sched(&self) -> crate::engine::SchedConfig {
         crate::engine::SchedConfig {
             cores: self.cores,
+            shards: self.sched_shards,
             aging: std::time::Duration::from_millis(self.aging_ms),
             backfill: true,
             deadline_running: (self.deadline_running_ms > 0)
@@ -194,8 +203,10 @@ mod tests {
         assert_eq!(c.request_timeout_ms, 30_000);
         assert_eq!(c.ocr_timeout_ms, 60_000);
         assert_eq!(c.drain_timeout_ms, 10_000);
+        assert_eq!(c.sched_shards, 0);
         let s = c.sched();
         assert_eq!(s.cores, 16);
+        assert_eq!(s.shards, 0, "0 = auto: one shard per 16 ledger cores");
         assert_eq!(s.aging, std::time::Duration::from_millis(50));
         assert!(s.backfill);
         assert_eq!(s.deadline_running, None);
@@ -228,21 +239,23 @@ mod tests {
         let p = dir.join("cfg.json");
         std::fs::write(
             &p,
-            r#"{"aging_ms": 20, "request_timeout_ms": 1000, "ocr_timeout_ms": 4000, "drain_timeout_ms": 2000}"#,
+            r#"{"aging_ms": 20, "sched_shards": 3, "request_timeout_ms": 1000, "ocr_timeout_ms": 4000, "drain_timeout_ms": 2000}"#,
         )
         .unwrap();
         let c = Config::from_file(&p).unwrap();
         assert_eq!(c.aging_ms, 20);
+        assert_eq!(c.sched_shards, 3);
         assert_eq!(c.request_timeout_ms, 1000);
         assert_eq!(c.ocr_timeout_ms, 4000);
         assert_eq!(c.drain_timeout_ms, 2000);
         let mut c = Config::default();
         c.apply_args(&args(&format!(
-            "serve --config {} --aging-ms 75 --request-timeout-ms 500 --ocr-timeout-ms 2500 --drain-timeout-ms 1500",
+            "serve --config {} --aging-ms 75 --sched-shards 2 --request-timeout-ms 500 --ocr-timeout-ms 2500 --drain-timeout-ms 1500",
             p.display()
         )))
         .unwrap();
         assert_eq!(c.aging_ms, 75);
+        assert_eq!(c.sched_shards, 2, "CLI flag overrides the file value");
         assert_eq!(c.request_timeout_ms, 500);
         assert_eq!(c.ocr_timeout_ms, 2500);
         assert_eq!(c.drain_timeout_ms, 1500);

@@ -80,7 +80,7 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
             .name("dnc-batcher".into())
             .spawn(move || {
                 let _drain = DrainOnExit(Arc::clone(&q2));
-                flusher_loop(q2, max_batch, max_wait, move |items, replies| {
+                flusher_loop(q2, max_batch, max_wait, |_| None, move |items, replies| {
                     let n = items.len();
                     inf2.fetch_add(n, Ordering::Relaxed);
                     deliver(handler(items), replies);
@@ -136,6 +136,30 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
         admission: impl Fn(&T) -> Option<R> + Send + 'static,
         submitter: impl Fn(Vec<T>) -> Resolver<R> + Send + 'static,
     ) -> Batcher<T, R> {
+        Batcher::start_service_with_cap(max_batch, max_wait, |_| None, admission, submitter)
+    }
+
+    /// [`start_service`](Self::start_service) with cost-aware flush
+    /// sizing. At every flush, `flush_cap` inspects the *oldest*
+    /// batchmate — the one nearest its budget's edge — and may return a
+    /// smaller batch bound for this flush: the number of items the
+    /// oldest item's remaining budget can afford at the profiled
+    /// per-item cost (the serving edge wires this to `ProfileStore`
+    /// trusted cost). A larger batch amortizes better but runs longer,
+    /// and the oldest batchmate pays that latency from whatever budget
+    /// it has left; capping the flush keeps a nearly-expired request
+    /// from being scheduled into a batch it provably cannot survive.
+    /// `None` means no opinion (full `max_batch`); the cap is clamped to
+    /// at least 1 so a flush always makes progress — a request that
+    /// cannot even afford a batch of one is the admission closure's
+    /// problem, not the sizer's.
+    pub fn start_service_with_cap(
+        max_batch: usize,
+        max_wait: Duration,
+        flush_cap: impl Fn(&T) -> Option<usize> + Send + 'static,
+        admission: impl Fn(&T) -> Option<R> + Send + 'static,
+        submitter: impl Fn(Vec<T>) -> Resolver<R> + Send + 'static,
+    ) -> Batcher<T, R> {
         let queue = new_queue(max_batch);
         let q2 = Arc::clone(&queue);
         let inflight = Arc::new(AtomicUsize::new(0));
@@ -149,7 +173,7 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
                 // flusher exits (shutdown), the channel disconnects and
                 // the completer drains whatever was submitted, then exits.
                 let _drain = DrainOnExit(Arc::clone(&q2));
-                flusher_loop(q2, max_batch, max_wait, move |items, replies| {
+                flusher_loop(q2, max_batch, max_wait, flush_cap, move |items, replies| {
                     let mut kept_items = Vec::with_capacity(items.len());
                     let mut kept_replies = Vec::with_capacity(replies.len());
                     for (item, reply) in items.into_iter().zip(replies) {
@@ -294,6 +318,7 @@ fn flusher_loop<T, R>(
     queue: Arc<(Mutex<Queue<T, R>>, Condvar)>,
     max_batch: usize,
     max_wait: Duration,
+    flush_cap: impl Fn(&T) -> Option<usize>,
     mut sink: impl FnMut(Vec<T>, Vec<Sender<R>>),
 ) {
     let (lock, cv) = &*queue;
@@ -318,7 +343,13 @@ fn flusher_loop<T, R>(
                     q = cv.wait(q).unwrap();
                 }
             }
-            let take = q.items.len().min(max_batch);
+            // Cost-aware sizing: the oldest batchmate (nearest its
+            // budget's edge) may cap this flush below max_batch — see
+            // `start_service_with_cap`. Clamped to 1: always progress.
+            let mut take = q.items.len().min(max_batch);
+            if let Some(cap) = q.items.first().and_then(|p| flush_cap(&p.item)) {
+                take = take.min(cap.max(1));
+            }
             q.items.drain(..take).collect()
         };
         if batch.is_empty() {
@@ -544,6 +575,73 @@ mod tests {
             0,
             "an all-reaped batch must never reach the submitter"
         );
+    }
+
+    #[test]
+    fn flush_cap_limits_batch_size() {
+        // Each item carries "how many batchmates my budget affords".
+        // Four items are queued before the flusher can flush (10ms
+        // wait); the oldest affords only 2, so the flush must split
+        // into batches of at most 2 instead of one batch of 4.
+        let sizes = Arc::new(Mutex::new(Vec::new()));
+        let s2 = Arc::clone(&sizes);
+        let b: Batcher<usize, usize> = Batcher::start_service_with_cap(
+            8,
+            Duration::from_millis(10),
+            |&afford| Some(afford),
+            |_| None,
+            move |items| {
+                s2.lock().unwrap().push(items.len());
+                Box::new(move || items)
+            },
+        );
+        let rxs: Vec<_> = (0..4).map(|_| b.submit(2)).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        }
+        let sizes = sizes.lock().unwrap();
+        assert!(!sizes.is_empty());
+        assert!(
+            sizes.iter().all(|&n| n <= 2),
+            "flush exceeded the oldest batchmate's affordable size: {sizes:?}"
+        );
+    }
+
+    #[test]
+    fn flush_cap_zero_still_makes_progress() {
+        // A cap of 0 (the oldest cannot afford even itself) clamps to
+        // 1: the flusher must not spin on an undrainable queue — the
+        // doomed item flushes alone and the admission layer settles it.
+        let b: Batcher<u32, u32> = Batcher::start_service_with_cap(
+            8,
+            Duration::from_millis(5),
+            |_| Some(0),
+            |_| None,
+            |items| Box::new(move || items),
+        );
+        let rx = b.submit(11);
+        assert_eq!(rx.recv_timeout(Duration::from_secs(2)).unwrap(), 11);
+    }
+
+    #[test]
+    fn no_cap_keeps_full_batches() {
+        let sizes = Arc::new(Mutex::new(Vec::new()));
+        let s2 = Arc::clone(&sizes);
+        let b: Batcher<u32, u32> = Batcher::start_service_with_cap(
+            4,
+            Duration::from_millis(20),
+            |_| None,
+            |_| None,
+            move |items| {
+                s2.lock().unwrap().push(items.len());
+                Box::new(move || items)
+            },
+        );
+        let rxs: Vec<_> = (0..4).map(|i| b.submit(i)).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        }
+        assert_eq!(*sizes.lock().unwrap(), vec![4], "capless flush takes max_batch");
     }
 
     #[test]

@@ -80,10 +80,25 @@ impl ServerState {
         // accumulates and submits while batch N executes.
         let batch_server = BertServer::new(session);
         let m_reap = Arc::clone(&metrics);
+        let cap_session = Arc::clone(bert.session());
         let embed_batcher: Batcher<EmbedRequest, Result<Vec<f32>, SubmitError>> =
-            Batcher::start_service(
+            Batcher::start_service_with_cap(
                 config.max_batch,
                 Duration::from_millis(config.max_wait_ms),
+                // Cost-aware flush sizing: cap each flush at the number
+                // of sequences the *oldest* batchmate's remaining budget
+                // can afford at the profile store's trusted per-sequence
+                // cost for its bucket. Until a model has a trusted
+                // profile (or when the request carries no budget) the
+                // sizer has no opinion and the flush takes max_batch.
+                move |r: &EmbedRequest| {
+                    let remaining = r.ctx.remaining()?;
+                    let m = cap_session.manifest();
+                    let seq = m.seq_bucket(r.ids.len()).ok()?;
+                    let cost =
+                        cap_session.profiles().trusted_cost(&m.bert_model_name(1, seq))?;
+                    Some((remaining.as_micros() / cost.as_micros().max(1)) as usize)
+                },
                 // Flush-time admission control: a request whose budget
                 // died (or whose client already gave up) while it was
                 // accumulating gets a typed reply now instead of
@@ -157,7 +172,10 @@ pub fn route(state: &ServerState, req: &Json) -> Json {
 /// queue depth (total and per priority), core occupancy, backfill,
 /// deadline-rejection, budget (expired and infeasible) and cancellation
 /// counts, the adaptive feedback loop (`sched.adaptive_resizes`,
-/// `sched.running_deadline_cancelled`, `sched.aging_effective_ms`) and
+/// `sched.running_deadline_cancelled`, `sched.aging_effective_ms`), the
+/// sharded dispatcher (`sched.shards`, `sched.steals`,
+/// `sched.timer_wakeups`, plus a `sched.shard.<i>.*` block per shard —
+/// each shard's slice capacity, occupancy, queue and counter set) and
 /// the profile store it feeds from (`profile.p95_ms`, worst per-model
 /// windowed p95; `profile.models`).
 fn stats_json(state: &ServerState) -> Json {
@@ -172,7 +190,10 @@ fn stats_json(state: &ServerState) -> Json {
     let st = session.scheduler().stats();
     let profiles = session.profiles();
     if let Json::Obj(pairs) = &mut snap {
-        let fields: [(&str, f64); 23] = [
+        let fields: [(&str, f64); 26] = [
+            ("sched.shards", st.shards as f64),
+            ("sched.steals", st.steals as f64),
+            ("sched.timer_wakeups", st.timer_wakeups as f64),
             ("sched.capacity", st.capacity as f64),
             ("sched.cores_busy", st.cores_busy as f64),
             ("sched.cores_idle", st.cores_idle as f64),
@@ -202,6 +223,26 @@ fn stats_json(state: &ServerState) -> Json {
         ];
         for (k, v) in fields {
             pairs.push((k.to_string(), num(v)));
+        }
+        // Per-shard view (`sched.shard.<i>.*`): capacity is the shard's
+        // ledger slice; the counter set mirrors the aggregate so the
+        // per-shard accounting invariant is checkable from the wire.
+        for (i, sh) in session.scheduler().shard_stats().iter().enumerate() {
+            let shard_fields: [(&str, f64); 10] = [
+                ("capacity", sh.capacity as f64),
+                ("cores_busy", sh.cores_busy as f64),
+                ("queue_depth", sh.queue_depth as f64),
+                ("inflight", sh.inflight as f64),
+                ("submitted", sh.submitted as f64),
+                ("completed", sh.completed as f64),
+                ("failed", sh.failed as f64),
+                ("cancelled", sh.cancelled as f64),
+                ("steals", sh.steals as f64),
+                ("timer_wakeups", sh.timer_wakeups as f64),
+            ];
+            for (k, v) in shard_fields {
+                pairs.push((format!("sched.shard.{i}.{k}"), num(v)));
+            }
         }
     }
     snap

@@ -1,94 +1,99 @@
-//! `engine::sched` — the central, core-aware async scheduler.
+//! `engine::sched` — the sharded, core-aware async scheduler.
 //!
 //! The seed implementation of `prun` spawned one OS thread per job part
-//! per call, each blocking on a FIFO core-lease semaphore. That topology
-//! (thread-per-part) cannot express deadlines, starves no one but idles
-//! cores (strict FIFO: a queued large part blocks small parts that would
-//! fit in the spare cores), and churns threads under serving load. This
-//! module replaces it end to end:
+//! per call, each blocking on a FIFO core-lease semaphore. PR 1 replaced
+//! that with a single dispatcher thread owning the whole core ledger —
+//! which in turn became the scalability ceiling: every submit, cancel,
+//! completion and drain from every ingress funnelled through one mpsc
+//! consumer and a fixed 5ms sweep tick. This revision shards it:
 //!
-//! - **One dispatcher thread** owns the *core ledger* (the virtual budget
-//!   `C` the paper's Listing 1 divides) and admits queued [`PartTask`]s
-//!   as cores free up. No locks on the hot state: the ledger, queue and
-//!   in-flight table live on the dispatcher's stack; everyone else talks
-//!   to it over an event channel.
+//! - **N scheduler shards**, one per core group (`SchedConfig::shards`;
+//!   `0` derives one shard per 16 ledger cores). Each shard is its own
+//!   dispatcher thread owning a *disjoint slice* of the core ledger, its
+//!   own pending queue and its own in-flight table — no locks and no
+//!   shared consumer on the hot path. With 16 or fewer cores the derived
+//!   count is 1 and the scheduler behaves exactly like the
+//!   single-dispatcher design it replaces.
+//! - **Routing**: a submission lands on shard `request_id % N` (task id
+//!   when no request id is stamped, spreading ctx-less tasks evenly).
+//!   Routing by request id keeps one job's parts co-located on a single
+//!   ledger slice, so a job's parts contend only with their own shard's
+//!   queue and sibling parts are admitted against one coherent ledger.
+//! - **Work stealing**: a shard with idle cores and an empty queue asks
+//!   the deepest-queued peer for work (`StealRequest`); the victim hands
+//!   over the oldest feasible queued task — highest priority first,
+//!   skipping tasks whose budget provably cannot finish, and only tasks
+//!   whose allocation fits the thief's free cores, so a steal can never
+//!   oversubscribe the thief's slice. The `submitted` count transfers
+//!   with the task, keeping the accounting invariant balanced per shard
+//!   as well as globally. Loaded shards nudge idle peers
+//!   (`StealNudge`) whenever a submit or completion leaves a backlog, so
+//!   a sleeping shard learns about rebalancing opportunities without
+//!   polling; a thief whose request came back empty parks until the next
+//!   nudge or local completion instead of spinning.
+//! - **Event-driven wakeups** replace the 5ms sweep tick. Each shard
+//!   computes the earliest armed clock it owns — queued admission
+//!   deadlines, queued request-budget deadlines, and in-flight running
+//!   kill clocks — and sleeps in `recv_timeout` until exactly then; with
+//!   nothing armed it blocks in `recv` indefinitely. An idle shard (or
+//!   one blocked on an infeasible queue head with no deadlines) performs
+//!   *zero* wakeups: `timer_wakeups` in the stats counts real timer
+//!   expirations and stays at 0, where the old tick burned 200 wakeups a
+//!   second. Cancel/submit nudges arrive through the event channel as
+//!   before. One semantic consequence: a token cancelled *without* a
+//!   nudge (the serving edge may hold only the token) is reaped at the
+//!   shard's next event or armed timer, not within a fixed 5ms — the
+//!   serving edge always nudges, so this only defers cleanup of
+//!   already-abandoned work.
+//!
+//! Everything below survives sharding unchanged, now per shard:
+//!
 //! - **Submission is async**: [`Scheduler::submit`] returns a
 //!   [`SubmitHandle`] (a channel-based future) immediately; callers wait
-//!   where they choose, with or without a timeout. `Session::prun` is a
-//!   thin client that submits k tasks and waits for k handles.
+//!   where they choose, with or without a timeout.
 //! - **Backfill + aging** preserve the paper's §3.1 oversubscription
 //!   semantics ("some job parts will be run after other job parts have
 //!   finished") without strict FIFO's idle cores: when the queue head
-//!   does not fit in the free cores, a *later* task that does fit may be
-//!   admitted — but only while the head has been bypassed for less than
-//!   the aging bound (the clock starts when the head is first bypassed,
-//!   so sustained queueing cannot silently disable backfill). Once the
-//!   bound passes, backfill stops, the running tasks drain, and the head
-//!   is guaranteed to run next. A large part is therefore never starved
-//!   past `aging` + the drain of already-running work.
+//!   does not fit in the shard's free cores, a *later* task that does
+//!   fit may be admitted — but only while the head has been bypassed for
+//!   less than the aging bound (the clock starts when the head is first
+//!   bypassed, so sustained queueing cannot silently disable backfill).
 //! - **Priorities and deadlines**: tasks queue in (priority, arrival)
 //!   order; a task whose admission deadline passes while queued is
-//!   rejected with [`SchedError::DeadlineExceeded`] instead of occupying
-//!   the queue forever (the admission-control step the serving
-//!   literature credits for taking inference servers from per-request
-//!   threads to production scale).
-//! - **Worker targeting**: admitted tasks are placed on the least-loaded
-//!   executor worker through the [`TaskRunner`] seam (implemented by
-//!   `runtime::ExecutorPool`'s per-worker queues; mocked in tests so the
-//!   scheduler is property-testable without PJRT artifacts).
+//!   rejected with [`SchedError::DeadlineExceeded`] — the timer that
+//!   enforces this is armed at the earliest such deadline, not polled.
+//! - **Worker targeting**: admitted tasks are placed on the worker the
+//!   [`TaskRunner`] prefers (`preferred_worker`, e.g. the executor
+//!   pool's observed-service-time tracker); runners without a placement
+//!   opinion fall back to the shard's least-loaded count.
 //! - **Cancellation**: every task carries a [`CancelToken`]. Cancelling
-//!   a queued task removes it from the queue and rejects it with
-//!   [`SchedError::Cancelled`] — its cores are never taken. Cancelling a
-//!   running task is cooperative: the token travels into the executor,
-//!   which skips a not-yet-started task entirely and polls the token
-//!   between expensive steps; either way the task's cores return to the
-//!   ledger through the normal completion path. This is what lets the
-//!   serving edge (router timeouts, dropped `PrunHandle`s) stop paying
-//!   for work nobody will read, instead of abandoning it.
-//! - **Running-task deadlines**: with `deadline_running` set (globally
-//!   via `--deadline-running-ms` or per task), the dispatcher enforces a
-//!   wall-clock budget over the *in-flight* table too — a thin sweep
-//!   over each running task's [`CancelToken`]. A part still executing
-//!   past its budget (measured from launch) is cancelled cooperatively
-//!   and its cores reclaimed through the normal completion path: the
-//!   cancellation machinery turned from reactive (caller cancels) to
-//!   proactive (scheduler enforces). Counted separately as
-//!   `running_deadline_cancelled` (each such task is also counted in
-//!   `cancelled` when its executor acknowledges the token).
-//! - **Request budgets**: a task may carry the end-to-end [`Budget`] of
-//!   the serving request it answers. The queue sweep rejects a task
-//!   whose budget dies while queued ([`SchedError::BudgetExpired`],
-//!   `budget_expired` counter, cores never taken), and launch arms the
-//!   running kill clock at the budget's absolute deadline — so a part
-//!   admitted after `w` ms of upstream waiting (batcher accumulation,
-//!   scheduler queueing) runs for at most `total - w`, never the full
-//!   global `deadline_running` on a client already half out of
-//!   patience. A budget-armed task ignores the scheduler-wide
-//!   `deadline_running` fallback (the budget is the request's own,
-//!   better-informed clock); an explicit per-task `running_deadline`
-//!   still applies, and the earlier of the two clocks wins. Budget
-//!   kills acknowledged by the executor are counted in `cancelled`,
-//!   `running_deadline_cancelled` *and* the by-source split
-//!   `running_deadline_cancelled_budget`.
-//! - **Budget-aware admission**: a task carrying both a [`Budget`] and
-//!   a profiled *cost hint* (stamped from the request's
-//!   [`RequestCtx`](super::ctx::RequestCtx) or the session's profile
-//!   store) is rejected at submit when the remaining budget cannot
-//!   cover the hint ([`SchedError::BudgetInfeasible`],
-//!   `budget_infeasible` counter) — a request that provably cannot
-//!   finish in time never takes queue space, let alone cores.
-//! - **Adaptive recalibration**: started with an
-//!   [`AdaptivePolicy`](super::adaptive::AdaptivePolicy), the dispatcher
-//!   re-derives the *effective* aging bound from observed part-latency
-//!   profiles on a periodic tick, replacing the static `--aging-ms`
-//!   (`engine::adaptive` documents the derivation). The live value is
-//!   exported as `aging_effective_ms`.
+//!   a queued task removes it and rejects it with
+//!   [`SchedError::Cancelled`] — its cores are never taken (the handle's
+//!   nudge broadcasts to every shard, so a stolen task is still found).
+//!   Cancelling a running task is cooperative via the executor's token
+//!   polls; cores return through the normal completion path.
+//! - **Running-task deadlines** and **request budgets**: the per-shard
+//!   sweep enforces `deadline_running`/per-task running deadlines and
+//!   budget-armed kill clocks over its own in-flight table, waking only
+//!   when the earliest armed clock fires. Queue-side budget expiry
+//!   ([`SchedError::BudgetExpired`]) and budget-aware admission
+//!   ([`SchedError::BudgetInfeasible`]) are unchanged.
+//! - **Adaptive recalibration**: each shard re-derives its *effective*
+//!   aging bound from the shared [`AdaptivePolicy`](super::adaptive::AdaptivePolicy)
+//!   profiles on its own event stream — per-shard p95-derived aging.
+//!
+//! The accounting invariant `submitted == completed + failed +
+//! deadline_rejected + budget_expired + budget_infeasible + cancelled
+//! (+ queued + inflight)` holds for every shard in isolation (steals
+//! transfer the `submitted` count with the task) and therefore globally;
+//! `stats()` aggregates the shard counters and `shard_stats()` exposes
+//! the per-shard view (`sched.shard.*` in the server's stats op).
 //!
 //! Core accounting is unchanged in spirit from the old lease: a task
-//! allocated `c_i` threads occupies `c_i` entries of the ledger while it
-//! executes, so concurrent tasks never oversubscribe the budget. On this
-//! testbed the PJRT CPU executable is single-threaded, so `c_i` models
-//! occupancy, not real intra-op speedup (DESIGN.md §4).
+//! allocated `c_i` threads occupies `c_i` entries of its shard's ledger
+//! slice while it executes, so concurrent tasks never oversubscribe the
+//! budget. On this testbed the PJRT CPU executable is single-threaded,
+//! so `c_i` models occupancy, not real intra-op speedup (DESIGN.md §4).
 
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
@@ -104,10 +109,10 @@ use super::adaptive::AdaptivePolicy;
 use super::budget::Budget;
 use crate::runtime::{CancelToken, ExecResult, ExecutorPool, ReplyFn, TaskCancelled, Tensor};
 
-/// How often the dispatcher wakes to sweep queued tasks (deadline expiry
-/// and externally-cancelled tokens) when no submit/complete event
-/// arrives.
-const SWEEP_TICK: Duration = Duration::from_millis(5);
+/// Ledger cores per derived shard when `SchedConfig::shards == 0`: one
+/// shard per paper-sized core group, so every configuration at or below
+/// the paper's C=16 keeps the original single-dispatcher behavior.
+const CORES_PER_SHARD: usize = 16;
 
 /// Queue priority; higher admits first, FIFO within a level.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
@@ -165,7 +170,7 @@ impl std::error::Error for SchedError {}
 pub struct PartTask {
     pub model: String,
     pub inputs: Vec<Tensor>,
-    /// virtual cores to occupy; clamped to `[1, capacity]` at submit
+    /// virtual cores to occupy; clamped to `[1, shard slice]` at submit
     pub threads: usize,
     pub priority: Priority,
     /// admission deadline: reject if still queued at this instant
@@ -181,6 +186,11 @@ pub struct PartTask {
     /// budget attached, admission rejects the task up front when
     /// `budget.remaining() < cost_hint` (see module docs)
     pub cost_hint: Option<Duration>,
+    /// the serving request this part belongs to: the shard routing key,
+    /// so all of one job's parts land on (and are admitted against) the
+    /// same ledger slice. `None` routes by task id instead, spreading
+    /// unrelated tasks evenly across shards.
+    pub request_id: Option<u64>,
     /// cooperative cancellation flag, shared with whoever may abandon
     /// this task (each task gets a private token unless one is attached)
     pub cancel: CancelToken,
@@ -197,18 +207,20 @@ impl PartTask {
             running_deadline: None,
             budget: None,
             cost_hint: None,
+            request_id: None,
             cancel: CancelToken::new(),
         }
     }
 
     /// Consume a request's [`RequestCtx`](super::ctx::RequestCtx): one
-    /// call stamps the task with the request's token, priority, budget
-    /// and cost hint — the scheduler-facing end of the "one context,
-    /// every layer" contract (fields the ctx does not carry are left
-    /// untouched).
+    /// call stamps the task with the request's token, priority, budget,
+    /// cost hint and request id (the shard routing key) — the
+    /// scheduler-facing end of the "one context, every layer" contract
+    /// (fields the ctx does not carry are left untouched).
     pub fn with_ctx(mut self, ctx: &super::ctx::RequestCtx) -> PartTask {
         self.cancel = ctx.token();
         self.priority = ctx.priority();
+        self.request_id = Some(ctx.id());
         if let Some(b) = ctx.budget() {
             self.budget = Some(b);
         }
@@ -240,6 +252,15 @@ impl PartTask {
     /// request this part belongs to).
     pub fn with_cancel(mut self, token: CancelToken) -> PartTask {
         self.cancel = token;
+        self
+    }
+
+    /// Pin this task to the shard `id % N` without going through a
+    /// [`RequestCtx`](super::ctx::RequestCtx) (`with_ctx` stamps the
+    /// ctx's id automatically). Parts sharing an id share a ledger
+    /// slice.
+    pub fn with_request_id(mut self, id: u64) -> PartTask {
+        self.request_id = Some(id);
         self
     }
 
@@ -302,8 +323,9 @@ pub struct SubmitHandle {
     rx: Receiver<Result<TaskDone>>,
     id: u64,
     cancel: CancelToken,
-    /// dispatcher event channel, used to nudge a prompt queue removal
-    tx: Sender<Event>,
+    /// every shard's event channel: a cancel nudge broadcasts, because
+    /// work stealing may have moved the task off its home shard
+    txs: Arc<Vec<Sender<Event>>>,
 }
 
 impl SubmitHandle {
@@ -323,10 +345,13 @@ impl SubmitHandle {
     /// result (or rejection) still arrives through `wait`.
     pub fn cancel(&self) {
         self.cancel.cancel();
-        // Nudge the dispatcher so a queued task is removed promptly
-        // instead of at the next sweep tick. Ignore send failure: a
-        // gone dispatcher has already rejected everything.
-        let _ = self.tx.send(Event::Cancel(self.id));
+        // Nudge every shard so a queued task is removed promptly — the
+        // task may have been stolen off its home shard, and cancels are
+        // rare enough that a broadcast beats tracking the move. Ignore
+        // send failures: a gone shard has already rejected everything.
+        for tx in self.txs.iter() {
+            let _ = tx.send(Event::Cancel(self.id));
+        }
     }
 
     /// Block until the task completes or is rejected.
@@ -352,8 +377,14 @@ impl SubmitHandle {
 /// Scheduler tuning knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct SchedConfig {
-    /// virtual core budget C (paper: 16)
+    /// virtual core budget C (paper: 16), split across the shards
     pub cores: usize,
+    /// scheduler shards (dispatcher threads, each owning a disjoint
+    /// ledger slice). `0` derives one shard per 16 cores (min 1), so
+    /// paper-sized configurations keep the single-dispatcher behavior;
+    /// explicit values are capped at `cores` so every shard owns at
+    /// least one ledger core.
+    pub shards: usize,
     /// max time the queue head may be bypassed by backfill, measured
     /// from the first bypass (the *static* bound; an adaptive policy
     /// re-derives the effective bound from observed part latencies)
@@ -369,10 +400,29 @@ impl Default for SchedConfig {
     fn default() -> Self {
         SchedConfig {
             cores: 16,
+            shards: 0,
             aging: Duration::from_millis(50),
             backfill: true,
             deadline_running: None,
         }
+    }
+}
+
+impl SchedConfig {
+    /// Number of shards this config resolves to.
+    fn shard_count(&self) -> usize {
+        if self.shards > 0 {
+            self.shards.min(self.cores)
+        } else {
+            (self.cores / CORES_PER_SHARD).max(1)
+        }
+    }
+
+    /// Disjoint ledger slices, one per shard; sums to `cores`.
+    fn ledger_slices(&self) -> Vec<usize> {
+        let n = self.shard_count();
+        let (base, rem) = (self.cores / n, self.cores % n);
+        (0..n).map(|i| base + usize::from(i < rem)).collect()
     }
 }
 
@@ -382,6 +432,16 @@ impl Default for SchedConfig {
 pub trait TaskRunner: Send + Sync + 'static {
     /// Number of independently-addressable workers.
     fn workers(&self) -> usize;
+
+    /// The worker the runner would place the next task on, when it has
+    /// a better-informed view than the scheduler (the executor pool's
+    /// per-worker observed-service-time tracker). `None` — the default —
+    /// lets the dispatcher fall back to its own per-shard least-loaded
+    /// count.
+    fn preferred_worker(&self) -> Option<usize> {
+        None
+    }
+
     /// Run `model` on `worker`; must invoke `reply` exactly once.
     /// `threads` is the ledger allocation the task occupies — the PJRT
     /// CPU executable ignores it (single-threaded; occupancy only), but
@@ -405,6 +465,10 @@ impl TaskRunner for ExecutorPool {
         self.size
     }
 
+    fn preferred_worker(&self) -> Option<usize> {
+        Some(self.load().pick())
+    }
+
     fn run_on(
         &self,
         worker: usize,
@@ -419,10 +483,15 @@ impl TaskRunner for ExecutorPool {
 }
 
 /// Point-in-time scheduler observability snapshot (surfaced by the
-/// server's `stats` op as `sched.*` fields).
+/// server's `stats` op as `sched.*` fields). `Scheduler::stats`
+/// aggregates across shards (counters summed; `peak_queue_depth` and
+/// `aging_effective_ms` are the worst shard); `Scheduler::shard_stats`
+/// returns one per shard with `capacity` = that shard's ledger slice.
 #[derive(Debug, Clone, Copy)]
 pub struct SchedStats {
     pub capacity: usize,
+    /// scheduler shards behind this snapshot (1 per-shard)
+    pub shards: usize,
     pub cores_busy: usize,
     pub cores_idle: usize,
     pub queue_depth: usize,
@@ -458,6 +527,14 @@ pub struct SchedStats {
     /// armed clock came from the request budget (the rest came from the
     /// global `deadline_running` or a per-task running deadline)
     pub running_deadline_cancelled_budget: u64,
+    /// queued tasks pulled over from a loaded peer shard (counted by
+    /// the thief; the `submitted` count moves with the task)
+    pub steals: u64,
+    /// armed-deadline timer expirations — the *only* clock-driven
+    /// wakeups left. An idle shard, or one blocked on an infeasible
+    /// queue with no deadlines armed, contributes zero (the old design
+    /// polled at 200Hz in that state).
+    pub timer_wakeups: u64,
     /// the aging bound currently in force (static `aging`, or the
     /// adaptive policy's latest derivation)
     pub aging_effective_ms: f64,
@@ -476,6 +553,8 @@ struct Counters {
     adaptive_resizes: AtomicU64,
     running_deadline_cancelled: AtomicU64,
     running_deadline_cancelled_budget: AtomicU64,
+    steals: AtomicU64,
+    timer_wakeups: AtomicU64,
     /// gauge, microseconds (set by the dispatcher each sync)
     aging_effective_us: AtomicU64,
     queue_depth: AtomicUsize,
@@ -487,6 +566,39 @@ struct Counters {
     inflight: AtomicUsize,
 }
 
+/// Snapshot one shard's counters into a [`SchedStats`].
+fn stats_from(c: &Counters, capacity: usize, shards: usize) -> SchedStats {
+    let busy = c.cores_busy.load(Ordering::Relaxed);
+    SchedStats {
+        capacity,
+        shards,
+        cores_busy: busy,
+        cores_idle: capacity.saturating_sub(busy),
+        queue_depth: c.queue_depth.load(Ordering::Relaxed),
+        queue_depth_high: c.queue_depth_high.load(Ordering::Relaxed),
+        queue_depth_normal: c.queue_depth_normal.load(Ordering::Relaxed),
+        queue_depth_low: c.queue_depth_low.load(Ordering::Relaxed),
+        peak_queue_depth: c.peak_queue_depth.load(Ordering::Relaxed),
+        inflight: c.inflight.load(Ordering::Relaxed),
+        submitted: c.submitted.load(Ordering::Relaxed),
+        completed: c.completed.load(Ordering::Relaxed),
+        failed: c.failed.load(Ordering::Relaxed),
+        backfills: c.backfills.load(Ordering::Relaxed),
+        deadline_rejected: c.deadline_rejected.load(Ordering::Relaxed),
+        budget_expired: c.budget_expired.load(Ordering::Relaxed),
+        budget_infeasible: c.budget_infeasible.load(Ordering::Relaxed),
+        cancelled: c.cancelled.load(Ordering::Relaxed),
+        adaptive_resizes: c.adaptive_resizes.load(Ordering::Relaxed),
+        running_deadline_cancelled: c.running_deadline_cancelled.load(Ordering::Relaxed),
+        running_deadline_cancelled_budget: c
+            .running_deadline_cancelled_budget
+            .load(Ordering::Relaxed),
+        steals: c.steals.load(Ordering::Relaxed),
+        timer_wakeups: c.timer_wakeups.load(Ordering::Relaxed),
+        aging_effective_ms: c.aging_effective_us.load(Ordering::Relaxed) as f64 / 1e3,
+    }
+}
+
 enum Event {
     Submit(Queued),
     Done { id: u64, result: Result<ExecResult> },
@@ -494,6 +606,15 @@ enum Event {
     /// the source of truth; the sweep also catches tokens cancelled
     /// without a nudge, e.g. by the serving edge)
     Cancel(u64),
+    /// a loaded shard telling an idle peer that stealable work exists —
+    /// the wake-up that lets a blocked-forever shard initiate a steal
+    StealNudge,
+    /// an idle shard asking this shard for one feasible queued task
+    /// (`free` = the thief's idle cores, the feasibility bound)
+    StealRequest { thief: usize, free: usize },
+    /// the victim's answer: a task whose `submitted` count travelled
+    /// with it, or `None` (nothing feasible — the thief parks)
+    Stolen(Option<Queued>),
     Drain(Sender<()>),
     Shutdown,
 }
@@ -531,153 +652,221 @@ struct Inflight {
 }
 
 pub struct Scheduler {
-    tx: Sender<Event>,
-    counters: Arc<Counters>,
+    /// one event channel per shard, in shard order
+    txs: Arc<Vec<Sender<Event>>>,
+    /// per-shard counters, same order (aggregated by `stats`)
+    shard_counters: Vec<Arc<Counters>>,
+    /// per-shard ledger slices (sum == `capacity`)
+    shard_caps: Vec<usize>,
     capacity: usize,
     next_id: AtomicU64,
-    dispatcher: Mutex<Option<JoinHandle<()>>>,
+    shards: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Scheduler {
-    /// Start the dispatcher thread over `runner`'s workers.
+    /// Start the dispatcher shards over `runner`'s workers.
     pub fn start(cfg: SchedConfig, runner: Arc<dyn TaskRunner>) -> Arc<Scheduler> {
         Scheduler::start_with_policy(cfg, runner, None)
     }
 
-    /// Start with an adaptive policy: the dispatcher periodically
-    /// re-derives the effective aging bound from the policy's latency
-    /// profiles (see `engine::adaptive`). `None` keeps the static
-    /// `cfg.aging` for the scheduler's lifetime.
+    /// Start with an adaptive policy: each shard periodically re-derives
+    /// its effective aging bound from the policy's latency profiles (see
+    /// `engine::adaptive`). `None` keeps the static `cfg.aging` for the
+    /// scheduler's lifetime.
     pub fn start_with_policy(
         cfg: SchedConfig,
         runner: Arc<dyn TaskRunner>,
         policy: Option<Arc<AdaptivePolicy>>,
     ) -> Arc<Scheduler> {
         assert!(cfg.cores >= 1, "scheduler needs at least one core");
-        let (tx, rx) = channel::<Event>();
-        let counters = Arc::new(Counters::default());
-        counters
-            .aging_effective_us
-            .store(cfg.aging.as_micros() as u64, Ordering::Relaxed);
-        let state = DispatchState {
-            cfg,
-            counters: Arc::clone(&counters),
-            free: cfg.cores,
-            pending: VecDeque::new(),
-            queue_by_prio: [0; 3],
-            inflight: HashMap::new(),
-            worker_load: vec![0; runner.workers().max(1)],
-            runner,
-            drain_waiters: Vec::new(),
-            tx: tx.clone(),
-            policy,
-            effective_aging: cfg.aging,
-            last_recalibration: Instant::now(),
-            armed_deadlines: 0,
-        };
-        let join = std::thread::Builder::new()
-            .name("dnc-sched".into())
-            .spawn(move || dispatcher_loop(rx, state))
-            .expect("spawn scheduler dispatcher");
+        let caps = cfg.ledger_slices();
+        let n = caps.len();
+        let mut txs = Vec::with_capacity(n);
+        let mut rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel::<Event>();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let txs = Arc::new(txs);
+        let shard_counters: Vec<Arc<Counters>> =
+            (0..n).map(|_| Arc::new(Counters::default())).collect();
+        for c in &shard_counters {
+            c.aging_effective_us.store(cfg.aging.as_micros() as u64, Ordering::Relaxed);
+        }
+        let peer_counters = Arc::new(shard_counters.clone());
+        let peer_caps = Arc::new(caps.clone());
+        let mut joins = Vec::with_capacity(n);
+        for (shard, rx) in rxs.into_iter().enumerate() {
+            let state = DispatchState {
+                cfg,
+                shard,
+                capacity: caps[shard],
+                counters: Arc::clone(&shard_counters[shard]),
+                free: caps[shard],
+                pending: VecDeque::new(),
+                queue_by_prio: [0; 3],
+                queued_with_deadline: 0,
+                inflight: HashMap::new(),
+                worker_load: vec![0; runner.workers().max(1)],
+                runner: Arc::clone(&runner),
+                drain_waiters: Vec::new(),
+                tx: txs[shard].clone(),
+                peers: Arc::clone(&txs),
+                peer_counters: Arc::clone(&peer_counters),
+                peer_caps: Arc::clone(&peer_caps),
+                steal_outstanding: false,
+                steal_parked: false,
+                policy: policy.clone(),
+                effective_aging: cfg.aging,
+                last_recalibration: Instant::now(),
+                armed_deadlines: 0,
+            };
+            let join = std::thread::Builder::new()
+                .name(format!("dnc-sched-{shard}"))
+                .spawn(move || dispatcher_loop(rx, state))
+                .expect("spawn scheduler dispatcher shard");
+            joins.push(join);
+        }
         Arc::new(Scheduler {
-            tx,
-            counters,
+            txs,
+            shard_counters,
+            shard_caps: caps,
             capacity: cfg.cores,
             next_id: AtomicU64::new(0),
-            dispatcher: Mutex::new(Some(join)),
+            shards: Mutex::new(joins),
         })
     }
 
+    /// Total ledger capacity across all shards.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
-    /// Submit a task; returns immediately with a completion handle.
+    /// Number of scheduler shards (dispatcher threads).
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Submit a task; returns immediately with a completion handle. The
+    /// task lands on shard `request_id % shards` (task id when no
+    /// request id is stamped) and its thread ask is clamped to that
+    /// shard's ledger slice.
     pub fn submit(&self, mut task: PartTask) -> SubmitHandle {
-        task.threads = task.threads.clamp(1, self.capacity);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let shard = (task.request_id.unwrap_or(id) % self.txs.len() as u64) as usize;
+        task.threads = task.threads.clamp(1, self.shard_caps[shard]);
         let cancel = task.cancel.clone();
         let (reply, rx) = channel();
         let queued =
             Queued { id, task, reply, submitted: Instant::now(), bypassed_since: None };
-        // `submitted` is counted by the *dispatcher* when it receives the
+        // `submitted` is counted by the *shard* when it receives the
         // event — not here. A send can succeed in the narrow window where
-        // the dispatcher has decided to exit but its receiver is not yet
+        // the shard has decided to exit but its receiver is not yet
         // dropped; counting sender-side would tally a task that never
         // reaches any terminal counter and permanently skew the invariant
         // `submitted == completed + failed + deadline_rejected +
         // budget_expired + budget_infeasible + cancelled + queued +
         // inflight`.
-        // Dispatcher-side counting makes
-        // "counted submitted" and "will be terminally counted" the same
-        // event. An unreceived task's reply sender drops with the
-        // channel, so its handle still resolves (Shutdown).
-        if let Err(e) = self.tx.send(Event::Submit(queued)) {
-            // dispatcher already gone: reject through the handle
+        // Shard-side counting makes "counted submitted" and "will be
+        // terminally counted" the same event. An unreceived task's reply
+        // sender drops with the channel, so its handle still resolves
+        // (Shutdown).
+        if let Err(e) = self.txs[shard].send(Event::Submit(queued)) {
+            // shard already gone: reject through the handle
             if let Event::Submit(q) = e.0 {
                 let _ = q.reply.send(Err(anyhow::Error::new(SchedError::Shutdown)));
             }
         }
-        SubmitHandle { rx, id, cancel, tx: self.tx.clone() }
+        SubmitHandle { rx, id, cancel, txs: Arc::clone(&self.txs) }
     }
 
-    /// Wait (up to `timeout`) until no task is queued or in flight.
-    /// Returns true if the scheduler went idle in time. Used by graceful
-    /// server shutdown to let in-flight work finish.
+    /// Wait (up to `timeout`) until no task is queued or in flight on
+    /// any shard. Returns true if every shard went idle in time. Used by
+    /// graceful server shutdown to let in-flight work finish.
     pub fn drain(&self, timeout: Duration) -> bool {
-        let (tx, rx) = channel();
-        if self.tx.send(Event::Drain(tx)).is_err() {
-            return true; // dispatcher exited -> nothing in flight
+        let deadline = Instant::now() + timeout;
+        let mut waits = Vec::with_capacity(self.txs.len());
+        for tx in self.txs.iter() {
+            let (dtx, drx) = channel();
+            // a shard whose dispatcher exited has nothing in flight
+            if tx.send(Event::Drain(dtx)).is_ok() {
+                waits.push(drx);
+            }
         }
-        rx.recv_timeout(timeout).is_ok()
+        for rx in waits {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if rx.recv_timeout(left).is_err() {
+                return false;
+            }
+        }
+        true
     }
 
     /// Count parts whose core request the adaptive policy changed away
     /// from the size-proportional split (called by `Session`'s submit
-    /// path when it sizes a job adaptively).
+    /// path when it sizes a job adaptively). Attributed to shard 0 —
+    /// resizing happens before routing, and `stats` sums shards anyway.
     pub(crate) fn note_adaptive_resizes(&self, n: u64) {
         if n > 0 {
-            self.counters.adaptive_resizes.fetch_add(n, Ordering::Relaxed);
+            self.shard_counters[0].adaptive_resizes.fetch_add(n, Ordering::Relaxed);
         }
     }
 
+    /// Aggregated view across every shard: counters summed,
+    /// `peak_queue_depth` / `aging_effective_ms` the worst shard.
     pub fn stats(&self) -> SchedStats {
-        let c = &self.counters;
-        let busy = c.cores_busy.load(Ordering::Relaxed);
-        SchedStats {
-            capacity: self.capacity,
-            cores_busy: busy,
-            cores_idle: self.capacity.saturating_sub(busy),
-            queue_depth: c.queue_depth.load(Ordering::Relaxed),
-            queue_depth_high: c.queue_depth_high.load(Ordering::Relaxed),
-            queue_depth_normal: c.queue_depth_normal.load(Ordering::Relaxed),
-            queue_depth_low: c.queue_depth_low.load(Ordering::Relaxed),
-            peak_queue_depth: c.peak_queue_depth.load(Ordering::Relaxed),
-            inflight: c.inflight.load(Ordering::Relaxed),
-            submitted: c.submitted.load(Ordering::Relaxed),
-            completed: c.completed.load(Ordering::Relaxed),
-            failed: c.failed.load(Ordering::Relaxed),
-            backfills: c.backfills.load(Ordering::Relaxed),
-            deadline_rejected: c.deadline_rejected.load(Ordering::Relaxed),
-            budget_expired: c.budget_expired.load(Ordering::Relaxed),
-            budget_infeasible: c.budget_infeasible.load(Ordering::Relaxed),
-            cancelled: c.cancelled.load(Ordering::Relaxed),
-            adaptive_resizes: c.adaptive_resizes.load(Ordering::Relaxed),
-            running_deadline_cancelled: c
-                .running_deadline_cancelled
-                .load(Ordering::Relaxed),
-            running_deadline_cancelled_budget: c
-                .running_deadline_cancelled_budget
-                .load(Ordering::Relaxed),
-            aging_effective_ms: c.aging_effective_us.load(Ordering::Relaxed) as f64 / 1e3,
+        let shards = self.txs.len();
+        let mut agg = stats_from(&self.shard_counters[0], self.shard_caps[0], shards);
+        for (i, c) in self.shard_counters.iter().enumerate().skip(1) {
+            let s = stats_from(c, self.shard_caps[i], shards);
+            agg.capacity += s.capacity;
+            agg.cores_busy += s.cores_busy;
+            agg.queue_depth += s.queue_depth;
+            agg.queue_depth_high += s.queue_depth_high;
+            agg.queue_depth_normal += s.queue_depth_normal;
+            agg.queue_depth_low += s.queue_depth_low;
+            agg.peak_queue_depth = agg.peak_queue_depth.max(s.peak_queue_depth);
+            agg.inflight += s.inflight;
+            agg.submitted += s.submitted;
+            agg.completed += s.completed;
+            agg.failed += s.failed;
+            agg.backfills += s.backfills;
+            agg.deadline_rejected += s.deadline_rejected;
+            agg.budget_expired += s.budget_expired;
+            agg.budget_infeasible += s.budget_infeasible;
+            agg.cancelled += s.cancelled;
+            agg.adaptive_resizes += s.adaptive_resizes;
+            agg.running_deadline_cancelled += s.running_deadline_cancelled;
+            agg.running_deadline_cancelled_budget += s.running_deadline_cancelled_budget;
+            agg.steals += s.steals;
+            agg.timer_wakeups += s.timer_wakeups;
+            agg.aging_effective_ms = agg.aging_effective_ms.max(s.aging_effective_ms);
         }
+        agg.cores_idle = agg.capacity.saturating_sub(agg.cores_busy);
+        agg
+    }
+
+    /// Per-shard snapshots, in shard order; `capacity` is each shard's
+    /// ledger slice. Surfaced by the server's stats op as
+    /// `sched.shard.<i>.*` gauges and used by the property tests to
+    /// check the accounting invariant *per shard*.
+    pub fn shard_stats(&self) -> Vec<SchedStats> {
+        let shards = self.txs.len();
+        self.shard_counters
+            .iter()
+            .enumerate()
+            .map(|(i, c)| stats_from(c, self.shard_caps[i], shards))
+            .collect()
     }
 }
 
 impl Drop for Scheduler {
     fn drop(&mut self) {
-        let _ = self.tx.send(Event::Shutdown);
-        if let Some(join) = self.dispatcher.lock().unwrap().take() {
+        for tx in self.txs.iter() {
+            let _ = tx.send(Event::Shutdown);
+        }
+        for join in self.shards.lock().unwrap().drain(..) {
             let _ = join.join();
         }
     }
@@ -692,24 +881,50 @@ fn prio_idx(p: Priority) -> usize {
     }
 }
 
-/// All mutable scheduling state, owned by the dispatcher thread.
+/// Does this queued task carry a clock the shard must wake up for?
+fn has_queue_clock(q: &Queued) -> bool {
+    q.task.deadline.is_some() || q.task.budget.is_some()
+}
+
+/// One shard's mutable scheduling state, owned by its dispatcher thread.
 struct DispatchState {
     cfg: SchedConfig,
+    /// this shard's index (== position in `peers`)
+    shard: usize,
+    /// this shard's ledger slice (the slices partition `cfg.cores`)
+    capacity: usize,
     counters: Arc<Counters>,
-    /// the core ledger: free entries of the virtual budget
+    /// the shard's core ledger: free entries of its slice
     free: usize,
     /// queued tasks, (priority desc, arrival) order
     pending: VecDeque<Queued>,
     /// queued-task tally by priority (kept incrementally: a full scan
     /// per event would make gauge upkeep O(queue) on the hot path)
     queue_by_prio: [usize; 3],
+    /// queued tasks carrying an admission deadline or budget — lets
+    /// `next_wakeup` skip the queue scan entirely in the (hot) case
+    /// where nothing queued needs a clock
+    queued_with_deadline: usize,
     inflight: HashMap<u64, Inflight>,
-    /// tasks currently placed on each worker
+    /// tasks this shard placed on each worker (fallback placement when
+    /// the runner has no `preferred_worker` opinion)
     worker_load: Vec<usize>,
     runner: Arc<dyn TaskRunner>,
     drain_waiters: Vec<Sender<()>>,
-    /// clone handed to completion callbacks
+    /// clone of this shard's own sender, handed to completion callbacks
     tx: Sender<Event>,
+    /// every shard's sender, indexed by shard (steal protocol)
+    peers: Arc<Vec<Sender<Event>>>,
+    /// every shard's counters — gauge reads pick steal victims/targets
+    peer_counters: Arc<Vec<Arc<Counters>>>,
+    /// every shard's ledger slice (idle-peer detection for nudges)
+    peer_caps: Arc<Vec<usize>>,
+    /// a StealRequest is in flight; don't send another until answered
+    steal_outstanding: bool,
+    /// the last steal came back empty — wait for a nudge or a local
+    /// completion before asking again (prevents request ping-pong
+    /// against a victim whose queued tasks don't fit our slice)
+    steal_parked: bool,
     /// adaptive policy: recalibrates `effective_aging` from profiles
     policy: Option<Arc<AdaptivePolicy>>,
     /// the aging bound currently in force (== cfg.aging without a policy)
@@ -727,33 +942,38 @@ fn dispatcher_loop(rx: Receiver<Event>, mut st: DispatchState) {
         if shutting_down && st.inflight.is_empty() {
             break;
         }
-        // Queued tasks need a clock even when no event arrives: deadlines
-        // expire on their own, and the serving edge can cancel a token
-        // without sending a nudge (it may only hold the token). Running
-        // deadlines need the same clock over the in-flight table — even
-        // during shutdown, so a hung task cannot stall the drain past
-        // its budget.
-        let needs_tick =
-            (!shutting_down && !st.pending.is_empty()) || st.wants_running_sweep();
-        let ev = if needs_tick {
-            match rx.recv_timeout(SWEEP_TICK) {
-                Ok(ev) => ev,
-                Err(RecvTimeoutError::Timeout) => {
-                    // A swept head may have been blocking admission:
-                    // admit() sweeps first, then re-admits.
-                    st.tick();
-                    st.admit();
-                    st.sync_gauges();
-                    st.notify_if_idle();
-                    continue;
+        if !shutting_down {
+            st.maybe_request_steal();
+        }
+        // Event-driven wait: sleep until the earliest armed clock this
+        // shard owns (queued admission/budget deadlines, in-flight kill
+        // clocks — the latter matter even during shutdown, so a hung
+        // task cannot stall the drain past its budget). With nothing
+        // armed, block indefinitely: an idle shard costs zero wakeups.
+        let ev = match st.next_wakeup() {
+            Some(at) => {
+                match rx.recv_timeout(at.saturating_duration_since(Instant::now())) {
+                    Ok(ev) => ev,
+                    Err(RecvTimeoutError::Timeout) => {
+                        // A real timer expiry: some armed clock fired.
+                        // admit() sweeps first, then re-admits (a swept
+                        // head may have been blocking admission).
+                        st.counters.timer_wakeups.fetch_add(1, Ordering::Relaxed);
+                        st.tick();
+                        if !shutting_down {
+                            st.admit();
+                        }
+                        st.sync_gauges();
+                        st.notify_if_idle();
+                        continue;
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break,
                 }
-                Err(RecvTimeoutError::Disconnected) => break,
             }
-        } else {
-            match rx.recv() {
+            None => match rx.recv() {
                 Ok(ev) => ev,
                 Err(_) => break, // all senders gone
-            }
+            },
         };
         match ev {
             Event::Submit(q) => {
@@ -776,12 +996,17 @@ fn dispatcher_loop(rx: Receiver<Event>, mut st: DispatchState) {
                 } else {
                     st.enqueue(q);
                     st.admit();
+                    st.nudge_idle_peer();
                 }
             }
             Event::Done { id, result } => {
                 st.complete(id, result);
+                // A completion frees cores: a previously-unfit steal may
+                // now fit, so un-park before the loop-top steal check.
+                st.steal_parked = false;
                 if !shutting_down {
                     st.admit();
+                    st.nudge_idle_peer();
                 }
             }
             Event::Cancel(id) => {
@@ -789,6 +1014,36 @@ fn dispatcher_loop(rx: Receiver<Event>, mut st: DispatchState) {
                 if !shutting_down {
                     // removing a stuck head can unblock admission
                     st.admit();
+                }
+            }
+            Event::StealNudge => {
+                // Just a wake-up: the loop top re-evaluates whether this
+                // shard should ask a peer for work.
+                st.steal_parked = false;
+            }
+            Event::StealRequest { thief, free } => {
+                st.answer_steal(thief, free, shutting_down);
+            }
+            Event::Stolen(taken) => {
+                st.steal_outstanding = false;
+                match taken {
+                    Some(q) => {
+                        // The task arrives with its `submitted` count
+                        // (the victim released it) — re-count it here so
+                        // this shard's invariant covers its terminal
+                        // state. A successful steal also clears parking:
+                        // the victim may have more.
+                        st.counters.submitted.fetch_add(1, Ordering::Relaxed);
+                        st.counters.steals.fetch_add(1, Ordering::Relaxed);
+                        st.steal_parked = false;
+                        if shutting_down {
+                            st.reject_shutdown(q);
+                        } else {
+                            st.enqueue(q);
+                            st.admit();
+                        }
+                    }
+                    None => st.steal_parked = true,
                 }
             }
             Event::Drain(done) => st.drain_waiters.push(done),
@@ -807,7 +1062,7 @@ fn dispatcher_loop(rx: Receiver<Event>, mut st: DispatchState) {
         st.sync_gauges();
         st.notify_if_idle();
     }
-    // Dispatcher exiting: nothing queued may survive.
+    // Shard exiting: nothing queued may survive.
     while let Some(q) = st.take_queued(0) {
         st.reject_shutdown(q);
     }
@@ -824,19 +1079,153 @@ impl DispatchState {
             .position(|e| e.task.priority < q.task.priority)
             .unwrap_or(self.pending.len());
         self.queue_by_prio[prio_idx(q.task.priority)] += 1;
+        if has_queue_clock(&q) {
+            self.queued_with_deadline += 1;
+        }
         self.pending.insert(at, q);
         let depth = self.pending.len();
         self.counters.peak_queue_depth.fetch_max(depth, Ordering::Relaxed);
     }
 
     /// The only way out of the queue: removes the task at `i` and keeps
-    /// the per-priority tally in step.
+    /// the per-priority and armed-clock tallies in step.
     fn take_queued(&mut self, i: usize) -> Option<Queued> {
         let q = self.pending.remove(i);
         if let Some(q) = &q {
             self.queue_by_prio[prio_idx(q.task.priority)] -= 1;
+            if has_queue_clock(q) {
+                self.queued_with_deadline -= 1;
+            }
         }
         q
+    }
+
+    /// The earliest instant this shard must act without an event:
+    /// a queued admission deadline, a queued budget death, or an
+    /// in-flight running kill clock. `None` — nothing armed — lets the
+    /// dispatcher block indefinitely (zero idle wakeups). In-flight
+    /// entries already enforced (or externally cancelled, which the
+    /// executor will acknowledge on its own) no longer need a clock —
+    /// excluding them is what keeps a fired clock from busy-waking the
+    /// loop until the acknowledgement arrives.
+    fn next_wakeup(&self) -> Option<Instant> {
+        let mut next: Option<Instant> = None;
+        let mut fold = |t: Instant| match next {
+            Some(n) if n <= t => {}
+            _ => next = Some(t),
+        };
+        if self.queued_with_deadline > 0 {
+            for q in &self.pending {
+                if let Some(d) = q.task.deadline {
+                    fold(d);
+                }
+                if let Some(b) = q.task.budget {
+                    fold(b.deadline());
+                }
+            }
+        }
+        if self.armed_deadlines > 0 {
+            for inf in self.inflight.values() {
+                if inf.deadline_enforced || inf.cancel.is_cancelled() {
+                    continue;
+                }
+                if let Some(k) = inf.kill_at {
+                    fold(k);
+                }
+            }
+        }
+        next
+    }
+
+    /// Idle-shard side of work stealing: with an empty queue, free
+    /// cores and no outstanding or parked request, ask the
+    /// deepest-queued peer for one task. Runs at the loop top so any
+    /// wake-up (nudge, completion, cancel) re-evaluates it.
+    fn maybe_request_steal(&mut self) {
+        if self.peers.len() <= 1
+            || self.steal_outstanding
+            || self.steal_parked
+            || self.free == 0
+            || !self.pending.is_empty()
+            || !self.drain_waiters.is_empty()
+        {
+            return;
+        }
+        let mut victim: Option<(usize, usize)> = None;
+        for (i, c) in self.peer_counters.iter().enumerate() {
+            if i == self.shard {
+                continue;
+            }
+            let depth = c.queue_depth.load(Ordering::Relaxed);
+            if depth > 0 && victim.map_or(true, |(_, d)| depth > d) {
+                victim = Some((i, depth));
+            }
+        }
+        if let Some((v, _)) = victim {
+            let req = Event::StealRequest { thief: self.shard, free: self.free };
+            if self.peers[v].send(req).is_ok() {
+                self.steal_outstanding = true;
+            }
+        }
+    }
+
+    /// Loaded-shard side: after a submit or completion leaves a
+    /// backlog, wake one idle peer (empty queue, spare cores) so it can
+    /// come steal. Idle shards block forever otherwise — this is their
+    /// only external wake-up for rebalancing.
+    fn nudge_idle_peer(&self) {
+        if self.pending.is_empty() || self.peers.len() <= 1 {
+            return;
+        }
+        for (i, c) in self.peer_counters.iter().enumerate() {
+            if i == self.shard {
+                continue;
+            }
+            if c.queue_depth.load(Ordering::Relaxed) == 0
+                && c.cores_busy.load(Ordering::Relaxed) < self.peer_caps[i]
+            {
+                let _ = self.peers[i].send(Event::StealNudge);
+                return;
+            }
+        }
+    }
+
+    /// Victim side of a steal: hand over the oldest feasible queued
+    /// task — highest priority first (queue order), allocation within
+    /// the thief's free cores, not provably budget-infeasible. The
+    /// `submitted` count travels with the task: this shard releases it,
+    /// the thief re-counts it, so both invariants stay balanced.
+    fn answer_steal(&mut self, thief: usize, free: usize, shutting_down: bool) {
+        self.sweep_queue();
+        let picked = self
+            .pending
+            .iter()
+            .position(|q| q.task.threads <= free && !q.task.infeasible())
+            .and_then(|i| self.take_queued(i));
+        match picked {
+            Some(q) => {
+                self.counters.submitted.fetch_sub(1, Ordering::Relaxed);
+                if let Err(lost) = self.peers[thief].send(Event::Stolen(Some(q))) {
+                    // Thief exited before the handover: the task never
+                    // left — re-count and re-queue it (or reject it, if
+                    // this shard is itself shutting down).
+                    if let Event::Stolen(Some(q)) = lost.0 {
+                        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+                        if shutting_down {
+                            self.reject_shutdown(q);
+                        } else {
+                            self.enqueue(q);
+                        }
+                    }
+                }
+            }
+            None => {
+                let _ = self.peers[thief].send(Event::Stolen(None));
+            }
+        }
+        if !shutting_down {
+            self.admit();
+        }
     }
 
     /// Reject queued tasks whose admission deadline has passed, whose
@@ -873,7 +1262,8 @@ impl DispatchState {
     }
 
     /// Remove one queued task by id after a `SubmitHandle::cancel`
-    /// nudge. In-flight tasks are not touched here: the executor polls
+    /// nudge (broadcast to every shard; the ones not holding the task
+    /// no-op). In-flight tasks are not touched here: the executor polls
     /// the token and the cores come back through the completion path.
     fn cancel_queued(&mut self, id: u64) {
         if let Some(i) = self.pending.iter().position(|q| q.id == id) {
@@ -930,8 +1320,11 @@ impl DispatchState {
         }
     }
 
-    /// Take cores from the ledger and hand the task to the least-loaded
-    /// worker. Completion comes back as an [`Event::Done`].
+    /// Take cores from the shard's ledger slice and hand the task to a
+    /// worker — the runner's preferred one (observed-service-time
+    /// placement in the executor pool) or, for runners without an
+    /// opinion, this shard's least-loaded count. Completion comes back
+    /// as an [`Event::Done`].
     fn launch(&mut self, q: Queued, backfilled: bool) {
         // `bypassed_since` is queue-side bookkeeping; it ends here.
         let Queued { id, task, reply, submitted, .. } = q;
@@ -954,15 +1347,18 @@ impl DispatchState {
             self.counters.backfills.fetch_add(1, Ordering::Relaxed);
         }
         let threads = task.threads;
-        debug_assert!(threads <= self.free, "ledger oversubscription");
+        debug_assert!(threads <= self.free, "ledger slice oversubscription");
         self.free -= threads;
-        let worker = self
-            .worker_load
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, &load)| load)
-            .map(|(i, _)| i)
-            .unwrap_or(0);
+        let worker = match self.runner.preferred_worker() {
+            Some(w) => w % self.worker_load.len(),
+            None => self
+                .worker_load
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &load)| load)
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        };
         self.worker_load[worker] += 1;
         // Running deadline. Duration sources (clock starts at launch —
         // queue time is already policed by the admission sweep): the
@@ -1014,12 +1410,6 @@ impl DispatchState {
         );
     }
 
-    /// True if any in-flight task carries a running deadline — the
-    /// dispatcher then keeps a clock running even with an empty queue.
-    fn wants_running_sweep(&self) -> bool {
-        self.armed_deadlines > 0
-    }
-
     /// Clock-driven work: enforce running deadlines over the in-flight
     /// table and let the adaptive policy recalibrate the aging bound.
     /// O(1) when no deadline is armed and no policy is attached — the
@@ -1031,19 +1421,19 @@ impl DispatchState {
         self.recalibrate();
     }
 
-    /// The ROADMAP's deadline-enforcer for *running* tasks: a thin loop
-    /// over the in-flight tasks' [`CancelToken`]s. A task executing past
-    /// its `kill_at` gets its token cancelled; the executor stops at its
-    /// next cooperative poll and the cores come back through the normal
-    /// completion path. The kill is *counted* there, in `complete` —
-    /// only when the executor acknowledges with `TaskCancelled` — so a
-    /// task whose completion was already in flight when the sweep fired
-    /// counts as completed, never as a deadline kill, and every
-    /// `running_deadline_cancelled` is also a `cancelled` by
-    /// construction. (With a shared request token, enforcement cancels
-    /// the whole request — a part overrunning its budget abandons work
-    /// its siblings were doing for the same caller, matching the
-    /// serving edge's timeout semantics.)
+    /// The deadline-enforcer for *running* tasks: a thin loop over the
+    /// in-flight tasks' [`CancelToken`]s, woken by the armed-deadline
+    /// timer (not a poll). A task executing past its `kill_at` gets its
+    /// token cancelled; the executor stops at its next cooperative poll
+    /// and the cores come back through the normal completion path. The
+    /// kill is *counted* there, in `complete` — only when the executor
+    /// acknowledges with `TaskCancelled` — so a task whose completion
+    /// was already in flight when the sweep fired counts as completed,
+    /// never as a deadline kill, and every `running_deadline_cancelled`
+    /// is also a `cancelled` by construction. (With a shared request
+    /// token, enforcement cancels the whole request — a part overrunning
+    /// its budget abandons work its siblings were doing for the same
+    /// caller, matching the serving edge's timeout semantics.)
     fn sweep_running(&mut self) {
         let now = Instant::now();
         for inf in self.inflight.values_mut() {
@@ -1068,14 +1458,15 @@ impl DispatchState {
         self.last_recalibration = Instant::now();
     }
 
-    /// Return cores to the ledger and forward the result to the handle.
+    /// Return cores to the shard's ledger slice and forward the result
+    /// to the handle.
     fn complete(&mut self, id: u64, result: Result<ExecResult>) {
         let Some(inf) = self.inflight.remove(&id) else { return };
         if inf.kill_at.is_some() {
             self.armed_deadlines -= 1;
         }
         self.free += inf.threads;
-        debug_assert!(self.free <= self.cfg.cores, "ledger over-release");
+        debug_assert!(self.free <= self.capacity, "ledger slice over-release");
         self.worker_load[inf.worker] = self.worker_load[inf.worker].saturating_sub(1);
         match result {
             Ok(res) => {
@@ -1124,7 +1515,7 @@ impl DispatchState {
         self.counters.queue_depth_low.store(low, Ordering::Relaxed);
         self.counters
             .cores_busy
-            .store(self.cfg.cores - self.free, Ordering::Relaxed);
+            .store(self.capacity - self.free, Ordering::Relaxed);
         self.counters.inflight.store(self.inflight.len(), Ordering::Relaxed);
         self.counters
             .aging_effective_us
@@ -1199,6 +1590,14 @@ mod tests {
         )
     }
 
+    /// Explicitly sharded scheduler for the multi-shard tests.
+    fn sharded(cores: usize, shards: usize) -> Arc<Scheduler> {
+        Scheduler::start(
+            SchedConfig { cores, shards, ..Default::default() },
+            Arc::new(SleepRunner { workers: 2 }),
+        )
+    }
+
     #[test]
     fn submit_completes() {
         let s = sched(4);
@@ -1208,6 +1607,7 @@ mod tests {
         let st = s.stats();
         assert_eq!(st.completed, 1);
         assert_eq!(st.submitted, 1);
+        assert_eq!(st.shards, 1, "auto-sharding keeps small ledgers single-shard");
     }
 
     #[test]
@@ -1374,7 +1774,8 @@ mod tests {
     #[test]
     fn shared_token_cancels_without_a_handle_nudge() {
         // The serving edge may hold only the token (no SubmitHandle):
-        // the dispatcher's sweep tick must still reject the queued task.
+        // the queued task must still be rejected once the dispatcher
+        // next wakes (here: the blocker's completion event).
         let s = sched(1);
         let blocker = s.submit(PartTask::new("sleep:40", Vec::new(), 1));
         std::thread::sleep(Duration::from_millis(5));
@@ -1390,21 +1791,23 @@ mod tests {
 
     #[test]
     fn submit_after_dispatcher_exit_is_not_counted() {
-        // Drive the dispatcher down while the Scheduler value is still
+        // Drive every shard down while the Scheduler value is still
         // alive, then submit: the task must be rejected with Shutdown
         // and must NOT bump `submitted` (the accounting invariant).
         let s = sched(1);
-        s.tx.send(Event::Shutdown).unwrap();
-        // wait for the dispatcher to exit (its receiver disconnects)
+        for tx in s.txs.iter() {
+            tx.send(Event::Shutdown).unwrap();
+        }
+        // wait for the dispatchers to exit (receivers disconnect)
         let mut exited = false;
         for _ in 0..500 {
-            if s.tx.send(Event::Cancel(u64::MAX)).is_err() {
+            if s.txs.iter().all(|tx| tx.send(Event::Cancel(u64::MAX)).is_err()) {
                 exited = true;
                 break;
             }
             std::thread::sleep(Duration::from_millis(1));
         }
-        assert!(exited, "dispatcher did not exit after Shutdown");
+        assert!(exited, "dispatchers did not exit after Shutdown");
         let h = s.submit(PartTask::new("sleep:1", Vec::new(), 1));
         let err = h.wait().unwrap_err();
         assert_eq!(err.downcast_ref::<SchedError>(), Some(&SchedError::Shutdown));
@@ -1516,6 +1919,7 @@ mod tests {
         assert_eq!(task.priority, Priority::High);
         assert_eq!(task.budget, ctx.budget());
         assert_eq!(task.cost_hint, Some(Duration::from_millis(3)));
+        assert_eq!(task.request_id, Some(ctx.id()), "routing key must follow the ctx");
     }
 
     #[test]
@@ -1634,5 +2038,196 @@ mod tests {
             st.running_deadline_cancelled_budget, 0,
             "duration source fired first: {st:?}"
         );
+    }
+
+    // ---- sharding ----------------------------------------------------
+
+    #[test]
+    fn request_id_routes_a_jobs_parts_to_one_shard() {
+        // Four parts of one request (same request_id) must land on the
+        // same shard even across many submits with different task ids.
+        let s = sharded(8, 2);
+        assert_eq!(s.shards(), 2);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                s.submit(PartTask::new("sleep:1", Vec::new(), 1).with_request_id(42))
+            })
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        assert!(s.drain(Duration::from_secs(5)));
+        let per = s.shard_stats();
+        let home = (42u64 % 2) as usize;
+        assert_eq!(per[home].submitted, 4, "parts scattered: {per:?}");
+        assert_eq!(per[1 - home].submitted, 0, "parts scattered: {per:?}");
+        // instant admission on a free slice — nothing for a thief to
+        // steal, so co-location is exact here
+        assert_eq!(s.stats().steals, 0, "{per:?}");
+    }
+
+    #[test]
+    fn multi_shard_accounting_aggregates_and_balances() {
+        // Mixed outcomes across 2 shards: the invariant must hold on
+        // the aggregate AND per shard (steals move `submitted` with the
+        // task, so each shard's books stay closed).
+        let s = sharded(8, 2);
+        let oks: Vec<_> = (0..20)
+            .map(|i| s.submit(PartTask::new("sleep:2", Vec::new(), 1 + (i % 3))))
+            .collect();
+        let doomed = s.submit(
+            PartTask::new("sleep:1", Vec::new(), 1).with_budget(Budget::new(Duration::ZERO)),
+        );
+        assert!(doomed.wait().is_err());
+        for h in oks {
+            h.wait().unwrap();
+        }
+        assert!(s.drain(Duration::from_secs(5)));
+        let st = s.stats();
+        assert_eq!(st.submitted, 21);
+        assert_eq!(
+            st.submitted,
+            st.completed
+                + st.failed
+                + st.deadline_rejected
+                + st.budget_expired
+                + st.budget_infeasible
+                + st.cancelled,
+            "global invariant: {st:?}"
+        );
+        for (i, sh) in s.shard_stats().iter().enumerate() {
+            assert_eq!(
+                sh.submitted,
+                sh.completed
+                    + sh.failed
+                    + sh.deadline_rejected
+                    + sh.budget_expired
+                    + sh.budget_infeasible
+                    + sh.cancelled,
+                "shard {i} invariant: {sh:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn idle_shard_steals_pinned_backlog() {
+        // All work pinned to shard 0 (request_id 0) and sized so each
+        // task fills a whole 4-core slice: shard 1 sits idle with an
+        // empty queue and must steal from shard 0's backlog.
+        let s = sharded(8, 2);
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                s.submit(PartTask::new("sleep:20", Vec::new(), 4).with_request_id(0))
+            })
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        assert!(s.drain(Duration::from_secs(5)));
+        let st = s.stats();
+        assert_eq!(st.completed, 6, "{st:?}");
+        assert!(st.steals >= 1, "idle shard never stole: {st:?}");
+        for (i, sh) in s.shard_stats().iter().enumerate() {
+            assert_eq!(
+                sh.submitted,
+                sh.completed + sh.failed + sh.cancelled,
+                "shard {i} books must close after steals: {sh:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_infeasible_queue_does_not_busy_wake() {
+        // Regression (the 200Hz spin): capacity 2 fully held by a
+        // blocker while a 2-thread task waits with NO deadline and NO
+        // budget — nothing needs a clock, so the dispatcher must block
+        // on its channel (zero timer wakeups), not poll a sweep tick.
+        let s = sched(2);
+        let blocker = s.submit(PartTask::new("sleep:80", Vec::new(), 2));
+        std::thread::sleep(Duration::from_millis(5));
+        let waiting = s.submit(PartTask::new("sleep:1", Vec::new(), 2));
+        std::thread::sleep(Duration::from_millis(50)); // would be ~10 ticks at 200Hz
+        assert_eq!(
+            s.stats().timer_wakeups, 0,
+            "clockless blocked queue must not wake the dispatcher"
+        );
+        blocker.wait().unwrap();
+        waiting.wait().unwrap();
+        assert!(s.drain(Duration::from_secs(5)));
+        assert_eq!(s.stats().timer_wakeups, 0, "{:?}", s.stats());
+    }
+
+    #[test]
+    fn armed_deadline_fires_without_events() {
+        // The inverse of the no-busy-wake test: when a clock IS armed
+        // (a queued admission deadline on an otherwise silent shard),
+        // the timer must fire on its own and reject the task — no
+        // submit/cancel/completion event to ride on.
+        let s = sched(1);
+        let blocker = s.submit(PartTask::new("sleep:100", Vec::new(), 1));
+        std::thread::sleep(Duration::from_millis(5));
+        let doomed = s.submit(
+            PartTask::new("sleep:1", Vec::new(), 1)
+                .with_deadline(Instant::now() + Duration::from_millis(10)),
+        );
+        let t0 = Instant::now();
+        let err = doomed.wait().unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SchedError>(),
+            Some(&SchedError::DeadlineExceeded)
+        );
+        assert!(
+            t0.elapsed() < Duration::from_millis(60),
+            "rejection waited for the blocker instead of the timer: {:?}",
+            t0.elapsed()
+        );
+        blocker.wait().unwrap();
+        assert!(s.stats().timer_wakeups >= 1, "{:?}", s.stats());
+    }
+
+    #[test]
+    fn runner_preferred_worker_is_honored() {
+        // A runner with a placement opinion (the executor pool's
+        // observed-service-time tracker) must receive its tasks on the
+        // worker it asked for.
+        use std::sync::Mutex as StdMutex;
+        struct PinningRunner {
+            seen: Arc<StdMutex<Vec<usize>>>,
+        }
+        impl TaskRunner for PinningRunner {
+            fn workers(&self) -> usize {
+                3
+            }
+            fn preferred_worker(&self) -> Option<usize> {
+                Some(2)
+            }
+            fn run_on(
+                &self,
+                worker: usize,
+                _model: &str,
+                _inputs: Vec<Tensor>,
+                _threads: usize,
+                _cancel: CancelToken,
+                reply: ReplyFn,
+            ) {
+                self.seen.lock().unwrap().push(worker);
+                reply(Ok(ExecResult {
+                    outputs: Vec::new(),
+                    exec_time: Duration::from_micros(10),
+                    worker,
+                }));
+            }
+        }
+        let seen = Arc::new(StdMutex::new(Vec::new()));
+        let s = Scheduler::start(
+            SchedConfig { cores: 4, ..Default::default() },
+            Arc::new(PinningRunner { seen: Arc::clone(&seen) }),
+        );
+        for _ in 0..5 {
+            s.submit(PartTask::new("m", Vec::new(), 1)).wait().unwrap();
+        }
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), 5);
+        assert!(seen.iter().all(|&w| w == 2), "placement ignored: {seen:?}");
     }
 }

@@ -21,7 +21,7 @@ pub mod tensor;
 pub use cancel::{CancelToken, TaskCancelled};
 pub use local::LocalEngine;
 pub use manifest::{Manifest, ModelEntry};
-pub use pool::{ExecResult, ExecutorPool, ReplyFn};
+pub use pool::{ExecResult, ExecutorPool, ReplyFn, WorkerLoadTracker};
 pub use tensor::{Tensor, TensorData};
 
 use std::path::PathBuf;

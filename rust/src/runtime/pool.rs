@@ -34,6 +34,100 @@ use super::tensor::Tensor;
 /// Completion callback, invoked exactly once on the worker thread.
 pub type ReplyFn = Box<dyn FnOnce(Result<ExecResult>) + Send + 'static>;
 
+/// Per-worker load model for placement by *observed service time*.
+///
+/// Queue-depth-only placement treats every worker as equally fast, but a
+/// worker can be durably slower than its siblings — a noisy neighbour on
+/// its pinned core, a cold executable cache, asymmetric hardware. The
+/// tracker keeps, per worker, the jobs currently dispatched-but-not-done
+/// and an EWMA of *measured* execution latency (the engine's own
+/// `exec_time`, which excludes queueing). [`WorkerLoadTracker::pick`]
+/// scores each worker by `inflight x ewma` — the expected time a new job
+/// would wait behind that worker's current backlog — so a slow worker
+/// naturally receives fewer placements instead of an equal share it
+/// cannot keep up with.
+///
+/// All state is atomic: the scheduler shards read `pick()` concurrently
+/// with worker threads reporting completions, no locks on either path.
+pub struct WorkerLoadTracker {
+    workers: Vec<WorkerLoad>,
+}
+
+#[derive(Default)]
+struct WorkerLoad {
+    /// dispatched but not yet completed (includes queued-at-worker)
+    inflight: AtomicUsize,
+    /// EWMA of measured execution latency, microseconds; 0 = no sample
+    /// yet (scored as 1µs so an unprofiled worker looks cheap and gets
+    /// sampled early)
+    ewma_us: AtomicU64,
+}
+
+/// EWMA smoothing: new = (old * 4 + sample) / 5 (alpha = 0.2) — heavy
+/// enough to ride out one outlier, light enough to track a worker that
+/// genuinely degrades within a few tens of jobs.
+const EWMA_KEEP: u64 = 4;
+
+impl WorkerLoadTracker {
+    pub fn new(workers: usize) -> WorkerLoadTracker {
+        WorkerLoadTracker {
+            workers: (0..workers.max(1)).map(|_| WorkerLoad::default()).collect(),
+        }
+    }
+
+    fn slot(&self, worker: usize) -> &WorkerLoad {
+        &self.workers[worker % self.workers.len()]
+    }
+
+    /// A job was handed to `worker`.
+    pub fn note_dispatch(&self, worker: usize) {
+        self.slot(worker).inflight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job on `worker` finished. `exec` is its measured execution
+    /// latency when it actually ran — `None` for jobs that were skipped
+    /// (cancelled before start) or failed, which still release the
+    /// in-flight slot but must not pollute the latency estimate.
+    pub fn note_done(&self, worker: usize, exec: Option<Duration>) {
+        let slot = self.slot(worker);
+        // saturating decrement: a racing double-report must never wrap
+        // the count into "infinitely loaded"
+        let _ = slot
+            .inflight
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+        if let Some(exec) = exec {
+            let us = (exec.as_micros() as u64).max(1);
+            let _ = slot.ewma_us.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |old| {
+                Some(if old == 0 { us } else { (old * EWMA_KEEP + us) / (EWMA_KEEP + 1) })
+            });
+        }
+    }
+
+    /// The worker a new job should land on: minimal expected wait,
+    /// `inflight x max(ewma, 1µs)`. Ties break toward the lowest index
+    /// (deterministic, and idle workers always beat busy ones).
+    pub fn pick(&self) -> usize {
+        self.workers
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, w)| {
+                let inflight = w.inflight.load(Ordering::Relaxed) as u128;
+                let ewma = w.ewma_us.load(Ordering::Relaxed).max(1) as u128;
+                inflight * ewma
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Current EWMA estimate for `worker`, if it has any sample.
+    pub fn ewma(&self, worker: usize) -> Option<Duration> {
+        match self.slot(worker).ewma_us.load(Ordering::Relaxed) {
+            0 => None,
+            us => Some(Duration::from_micros(us)),
+        }
+    }
+}
+
 pub struct ExecJob {
     pub model: String,
     pub inputs: Vec<Tensor>,
@@ -67,6 +161,7 @@ pub struct ExecutorPool {
     pub size: usize,
     submitted: AtomicU64,
     rr: AtomicUsize,
+    load: Arc<WorkerLoadTracker>,
 }
 
 impl ExecutorPool {
@@ -83,7 +178,20 @@ impl ExecutorPool {
                 .context("spawning executor thread")?;
             workers.push(Worker { tx, join: Some(join) });
         }
-        Ok(ExecutorPool { workers, size, submitted: AtomicU64::new(0), rr: AtomicUsize::new(0) })
+        Ok(ExecutorPool {
+            workers,
+            size,
+            submitted: AtomicU64::new(0),
+            rr: AtomicUsize::new(0),
+            load: Arc::new(WorkerLoadTracker::new(size)),
+        })
+    }
+
+    /// The pool's observed-service-time load model. The scheduler reads
+    /// `pick()` from here for placement; external monitors may read the
+    /// per-worker EWMAs.
+    pub fn load(&self) -> &Arc<WorkerLoadTracker> {
+        &self.load
     }
 
     /// Queue a job on a specific worker; `reply` fires on completion.
@@ -101,6 +209,15 @@ impl ExecutorPool {
     ) {
         let wid = worker % self.size;
         self.submitted.fetch_add(1, Ordering::Relaxed);
+        // Load model: count the dispatch now, settle it (and feed the
+        // measured exec latency into the worker's EWMA) when the reply
+        // fires. Skipped/failed jobs release the slot with no sample.
+        let load = Arc::clone(&self.load);
+        load.note_dispatch(wid);
+        let reply: ReplyFn = Box::new(move |result: Result<ExecResult>| {
+            load.note_done(wid, result.as_ref().ok().map(|r| r.exec_time));
+            reply(result);
+        });
         let job = ExecJob { model: model.to_string(), inputs, cancel, reply };
         if let Err(e) = self.workers[wid].tx.send(Msg::Run(job)) {
             if let Msg::Run(job) = e.0 {
@@ -220,5 +337,78 @@ fn worker_loop(wid: usize, manifest: Arc<Manifest>, rx: Receiver<Msg>) {
                 (job.reply)(result);
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slow_worker_receives_fewer_placements() {
+        // Worker 0 is profiled 100x slower than its siblings. Nine
+        // successive placements (dispatched, none completing — the
+        // backlog builds) must concentrate on the fast workers: the
+        // slow one may get at most its cheap first pick, never an
+        // equal share.
+        let t = WorkerLoadTracker::new(3);
+        t.note_dispatch(0);
+        t.note_done(0, Some(Duration::from_millis(100)));
+        for w in [1, 2] {
+            t.note_dispatch(w);
+            t.note_done(w, Some(Duration::from_millis(1)));
+        }
+        let mut placements = [0usize; 3];
+        for _ in 0..9 {
+            let w = t.pick();
+            placements[w] += 1;
+            t.note_dispatch(w); // backlog builds; nothing completes
+        }
+        assert!(
+            placements[0] <= 2,
+            "slow worker got an equal share: {placements:?}"
+        );
+        assert!(
+            placements[1] + placements[2] >= 7,
+            "fast workers starved: {placements:?}"
+        );
+    }
+
+    #[test]
+    fn ewma_tracks_latest_samples() {
+        let t = WorkerLoadTracker::new(1);
+        t.note_dispatch(0);
+        t.note_done(0, Some(Duration::from_micros(1000)));
+        assert_eq!(t.ewma(0), Some(Duration::from_micros(1000)), "first sample seeds");
+        for _ in 0..40 {
+            t.note_dispatch(0);
+            t.note_done(0, Some(Duration::from_micros(5000)));
+        }
+        let ewma = t.ewma(0).unwrap();
+        assert!(
+            ewma > Duration::from_micros(4000),
+            "EWMA did not converge toward the new regime: {ewma:?}"
+        );
+    }
+
+    #[test]
+    fn skipped_jobs_release_slot_without_skewing_latency() {
+        // A cancelled-before-start job reports no exec time: the
+        // in-flight slot must free (the worker is pickable again) and
+        // the latency estimate must stay untouched.
+        let t = WorkerLoadTracker::new(2);
+        t.note_dispatch(0);
+        t.note_done(0, Some(Duration::from_micros(500)));
+        t.note_dispatch(0);
+        t.note_done(0, None); // skipped
+        assert_eq!(t.ewma(0), Some(Duration::from_micros(500)));
+        // double-report must not wrap the count
+        t.note_done(0, None);
+        t.note_done(0, None);
+        // worker 0 idle with a profile, worker 1 idle without: both
+        // score 0 in-flight; tie breaks to worker 0
+        assert_eq!(t.pick(), 0);
+        t.note_dispatch(0);
+        assert_eq!(t.pick(), 1, "loaded worker must lose to an idle one");
     }
 }
