@@ -23,9 +23,7 @@
 //! may settle it immediately (e.g. a request whose `RequestCtx` budget
 //! died while accumulating gets a structured `deadline_rejected`
 //! reply) instead of submitting doomed work — time spent waiting in
-//! the batcher is charged against the request, not forgotten. (The old
-//! `start_pipelined_with_reaper` name survives as a `#[deprecated]`
-//! shim.)
+//! the batcher is charged against the request, not forgotten.
 //!
 //! Shutdown: [`Batcher::shutdown`] (also run by `Drop`) stops intake.
 //! A `submit` after shutdown — or after the flusher died (a panicking
@@ -38,6 +36,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::util::sync::lock_recover;
 
 /// Deferred completion of one submitted batch: blocks until the batch
 /// finishes and yields one result per item, in order.
@@ -107,18 +107,6 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
         submitter: impl Fn(Vec<T>) -> Resolver<R> + Send + 'static,
     ) -> Batcher<T, R> {
         Batcher::start_service(max_batch, max_wait, |_| None, submitter)
-    }
-
-    /// [`start_pipelined`](Self::start_pipelined) with flush-time
-    /// admission control.
-    #[deprecated(since = "0.4.0", note = "use `start_service` (same semantics)")]
-    pub fn start_pipelined_with_reaper(
-        max_batch: usize,
-        max_wait: Duration,
-        reaper: impl Fn(&T) -> Option<R> + Send + 'static,
-        submitter: impl Fn(Vec<T>) -> Resolver<R> + Send + 'static,
-    ) -> Batcher<T, R> {
-        Batcher::start_service(max_batch, max_wait, reaper, submitter)
     }
 
     /// The serving-edge constructor: [`start_pipelined`]
@@ -229,7 +217,7 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
     pub fn submit(&self, item: T) -> Receiver<R> {
         let (reply, rx) = channel();
         let (lock, cv) = &*self.queue;
-        let mut q = lock.lock().unwrap();
+        let mut q = lock_recover(lock);
         let flusher_dead = match &self.flusher {
             Some(h) => h.is_finished(),
             None => true,
@@ -248,7 +236,7 @@ impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
     /// here — see [`in_flight`](Self::in_flight); a queue-depth gauge
     /// that ignored them under-reported sustained load.
     pub fn pending(&self) -> usize {
-        self.queue.0.lock().unwrap().items.len()
+        lock_recover(&self.queue.0).items.len()
     }
 
     /// Number of requests in flushed batches that have not yet been
@@ -265,7 +253,7 @@ impl<T, R> Batcher<T, R> {
     /// already-disconnected receiver.
     pub fn shutdown(&self) {
         let (lock, cv) = &*self.queue;
-        lock.lock().unwrap().shutdown = true;
+        lock_recover(lock).shutdown = true;
         cv.notify_all();
     }
 }
@@ -300,7 +288,7 @@ struct DrainOnExit<T, R>(Arc<(Mutex<Queue<T, R>>, Condvar)>);
 impl<T, R> Drop for DrainOnExit<T, R> {
     fn drop(&mut self) {
         let (lock, cv) = &*self.0;
-        let mut q = lock.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        let mut q = lock_recover(lock);
         q.shutdown = true;
         q.items.clear();
         cv.notify_all();
@@ -324,7 +312,7 @@ fn flusher_loop<T, R>(
     let (lock, cv) = &*queue;
     loop {
         let batch: Vec<Pending<T, R>> = {
-            let mut q = lock.lock().unwrap();
+            let mut q = lock_recover(lock);
             loop {
                 if q.shutdown && q.items.is_empty() {
                     return;

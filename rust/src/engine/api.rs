@@ -27,9 +27,9 @@
 //! [`BertServer`](crate::nlp::BertServer) (embed batches),
 //! [`OcrPipeline`](crate::ocr::OcrPipeline) (3-phase OCR) and
 //! [`VideoPipeline`](crate::video::VideoPipeline) (per-frame
-//! recognition). The old variant methods survive as `#[deprecated]`
-//! shims delegating here; CI builds with `RUSTFLAGS="-D deprecated"`
-//! so no in-tree caller can quietly reintroduce them.
+//! recognition). The old variant methods are gone — deleted after one
+//! deprecation cycle — and `pallas-lint` rule PL005 keeps their names
+//! from coming back.
 
 use std::fmt;
 use std::time::{Duration, Instant};

@@ -45,6 +45,4 @@ pub use sched::{
 // Cancellation primitives live in `runtime` (the executor polls them)
 // but are part of the scheduler's public vocabulary.
 pub use crate::runtime::{CancelToken, TaskCancelled};
-pub use session::{
-    PartReport, PrunHandle, PrunOptions, PrunOutcome, Session, WeightSource,
-};
+pub use session::{PartReport, PrunHandle, PrunOutcome, Session, WeightSource};

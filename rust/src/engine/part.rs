@@ -1,8 +1,7 @@
 //! Job parts: the unit `prun` divides work into.
 
-use crate::runtime::{CancelToken, Tensor};
+use crate::runtime::Tensor;
 
-use super::budget::Budget;
 use super::ctx::RequestCtx;
 
 /// One independent piece of an inference job (paper §3.1's `j_i`): a
@@ -29,22 +28,6 @@ impl JobPart {
     /// scheduler derives the part's token, budget, priority and cost
     /// hint from it, overriding the job-wide ctx.
     pub fn with_ctx(mut self, ctx: RequestCtx) -> JobPart {
-        self.ctx = Some(ctx);
-        self
-    }
-
-    /// Attach the cancellation token of the request this part serves.
-    #[deprecated(since = "0.4.0", note = "attach a RequestCtx via `with_ctx` instead")]
-    pub fn with_cancel(mut self, token: CancelToken) -> JobPart {
-        let ctx = self.ctx.take().unwrap_or_default().with_cancel(token);
-        self.ctx = Some(ctx);
-        self
-    }
-
-    /// Attach the request budget of the request this part serves.
-    #[deprecated(since = "0.4.0", note = "attach a RequestCtx via `with_ctx` instead")]
-    pub fn with_budget(mut self, budget: Budget) -> JobPart {
-        let ctx = self.ctx.take().unwrap_or_default().with_budget(budget);
         self.ctx = Some(ctx);
         self
     }
@@ -88,18 +71,5 @@ mod tests {
         let ctx = RequestCtx::new();
         let p = JobPart::new("m", Vec::new()).with_ctx(ctx.clone());
         assert!(p.ctx.unwrap().token().same_flag(&ctx.token()));
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_builders_compose_into_one_ctx() {
-        use std::time::Duration;
-        let token = CancelToken::new();
-        let p = JobPart::new("m", Vec::new())
-            .with_cancel(token.clone())
-            .with_budget(Budget::new(Duration::from_millis(5)));
-        let ctx = p.ctx.expect("shims must build a ctx");
-        assert!(ctx.token().same_flag(&token), "second shim must keep the first's token");
-        assert!(ctx.budget().is_some());
     }
 }

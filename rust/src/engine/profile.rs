@@ -32,6 +32,7 @@ use std::sync::{Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::util::stats::percentile_sorted;
+use crate::util::sync::lock_recover;
 
 /// EWMA smoothing factor: new = alpha*obs + (1-alpha)*old.
 const ALPHA: f64 = 0.3;
@@ -144,7 +145,7 @@ impl ProfileStore {
     /// through this store. Each mutation is a single insert/update, so
     /// the map is consistent even if a holder panicked mid-`observe`.
     fn guard(&self) -> MutexGuard<'_, HashMap<String, ModelProfile>> {
-        self.models.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+        lock_recover(&self.models)
     }
 
     /// Record an observed execution of `model`.

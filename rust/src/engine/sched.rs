@@ -108,6 +108,8 @@ use anyhow::Result;
 use super::adaptive::AdaptivePolicy;
 use super::budget::Budget;
 use crate::runtime::{CancelToken, ExecResult, ExecutorPool, ReplyFn, TaskCancelled, Tensor};
+use crate::util::clock;
+use crate::util::sync::lock_recover;
 
 /// Ledger cores per derived shard when `SchedConfig::shards == 0`: one
 /// shard per paper-sized core group, so every configuration at or below
@@ -719,7 +721,7 @@ impl Scheduler {
                 steal_parked: false,
                 policy: policy.clone(),
                 effective_aging: cfg.aging,
-                last_recalibration: Instant::now(),
+                last_recalibration: clock::now(),
                 armed_deadlines: 0,
             };
             let join = std::thread::Builder::new()
@@ -759,7 +761,7 @@ impl Scheduler {
         let cancel = task.cancel.clone();
         let (reply, rx) = channel();
         let queued =
-            Queued { id, task, reply, submitted: Instant::now(), bypassed_since: None };
+            Queued { id, task, reply, submitted: clock::now(), bypassed_since: None };
         // `submitted` is counted by the *shard* when it receives the
         // event — not here. A send can succeed in the narrow window where
         // the shard has decided to exit but its receiver is not yet
@@ -785,7 +787,7 @@ impl Scheduler {
     /// any shard. Returns true if every shard went idle in time. Used by
     /// graceful server shutdown to let in-flight work finish.
     pub fn drain(&self, timeout: Duration) -> bool {
-        let deadline = Instant::now() + timeout;
+        let deadline = clock::now() + timeout;
         let mut waits = Vec::with_capacity(self.txs.len());
         for tx in self.txs.iter() {
             let (dtx, drx) = channel();
@@ -795,7 +797,7 @@ impl Scheduler {
             }
         }
         for rx in waits {
-            let left = deadline.saturating_duration_since(Instant::now());
+            let left = deadline.saturating_duration_since(clock::now());
             if rx.recv_timeout(left).is_err() {
                 return false;
             }
@@ -866,7 +868,7 @@ impl Drop for Scheduler {
         for tx in self.txs.iter() {
             let _ = tx.send(Event::Shutdown);
         }
-        for join in self.shards.lock().unwrap().drain(..) {
+        for join in lock_recover(&self.shards).drain(..) {
             let _ = join.join();
         }
     }
@@ -952,7 +954,7 @@ fn dispatcher_loop(rx: Receiver<Event>, mut st: DispatchState) {
         // armed, block indefinitely: an idle shard costs zero wakeups.
         let ev = match st.next_wakeup() {
             Some(at) => {
-                match rx.recv_timeout(at.saturating_duration_since(Instant::now())) {
+                match rx.recv_timeout(at.saturating_duration_since(clock::now())) {
                     Ok(ev) => ev,
                     Err(RecvTimeoutError::Timeout) => {
                         // A real timer expiry: some armed clock fired.
@@ -1232,7 +1234,7 @@ impl DispatchState {
     /// request budget ran out, or whose cancel token fired; none of
     /// these ever takes cores from the ledger.
     fn sweep_queue(&mut self) {
-        let now = Instant::now();
+        let now = clock::now();
         let mut i = 0;
         while i < self.pending.len() {
             let task = &self.pending[i].task;
@@ -1301,7 +1303,7 @@ impl DispatchState {
             if !self.cfg.backfill {
                 break;
             }
-            let since = *head.bypassed_since.get_or_insert_with(Instant::now);
+            let since = *head.bypassed_since.get_or_insert_with(clock::now);
             if since.elapsed() >= self.effective_aging {
                 break;
             }
@@ -1368,7 +1370,7 @@ impl DispatchState {
         // source is absolute: whatever remains of the request's total,
         // so a part that waited upstream gets the remainder, not a
         // fresh allowance. Earliest armed clock wins.
-        let now = Instant::now();
+        let now = clock::now();
         let duration_kill = task
             .running_deadline
             .or(if task.budget.is_none() { self.cfg.deadline_running } else { None })
@@ -1435,7 +1437,7 @@ impl DispatchState {
     /// its budget abandons work its siblings were doing for the same
     /// caller, matching the serving edge's timeout semantics.)
     fn sweep_running(&mut self) {
-        let now = Instant::now();
+        let now = clock::now();
         for inf in self.inflight.values_mut() {
             if let Some(kill_at) = inf.kill_at {
                 if now >= kill_at && !inf.deadline_enforced && !inf.cancel.is_cancelled()
@@ -1455,7 +1457,7 @@ impl DispatchState {
             return;
         }
         self.effective_aging = policy.aging_bound(self.cfg.aging);
-        self.last_recalibration = Instant::now();
+        self.last_recalibration = clock::now();
     }
 
     /// Return cores to the shard's ledger slice and forward the result

@@ -15,8 +15,7 @@
 //! cancellation token, priority, profiled cost hint — arrives through
 //! the one [`RequestCtx`] minted at the ingress (or a per-part ctx
 //! riding on a [`JobPart`], for batches whose parts answer different
-//! requests). The pre-redesign variants (`prun_submit` over
-//! `PrunOptions`, `run_cancellable`) survive as `#[deprecated]` shims.
+//! requests).
 //!
 //! Core accounting: a part allocated `c_i` threads occupies `c_i` entries
 //! of the scheduler's core ledger while it executes, so concurrent parts
@@ -39,13 +38,10 @@ use crate::runtime::{CancelToken, ExecutorPool, Manifest, Tensor};
 use super::adaptive::{AdaptiveConfig, AdaptivePolicy};
 use super::allocator::{allocate_weighted, weights, AllocPolicy};
 use super::api::{InferenceService, PrunRequest, SubmitError, SubmitTicket};
-use super::budget::Budget;
 use super::ctx::RequestCtx;
 use super::part::{part_sizes, JobPart};
 use super::profile::ProfileStore;
-use super::sched::{
-    PartTask, Priority, SchedConfig, Scheduler, SubmitHandle, TaskDone, TaskRunner,
-};
+use super::sched::{PartTask, SchedConfig, Scheduler, SubmitHandle, TaskDone, TaskRunner};
 
 /// Where part weights come from (paper §3.1: size by default; §6 future
 /// work: measured-latency profiles — implemented in engine::profile).
@@ -54,31 +50,6 @@ pub enum WeightSource {
     #[default]
     Size,
     Profiled,
-}
-
-/// Pre-redesign job tuning, superseded by [`PrunRequest`] (job-shaped
-/// knobs) + [`RequestCtx`] (request-shaped state). Kept only as the
-/// argument type of the `#[deprecated]` shims.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct PrunOptions {
-    pub policy: AllocPolicy,
-    pub weights: WeightSource,
-    /// queue priority for every part of this job
-    pub priority: Priority,
-    /// admission deadline (from submit) for every part; parts still
-    /// queued past it are rejected with `SchedError::DeadlineExceeded`
-    pub deadline: Option<Duration>,
-    /// running deadline (from launch) for every part; a part still
-    /// executing past it is cancelled by the dispatcher and its cores
-    /// reclaimed (overrides the scheduler-wide `--deadline-running-ms`)
-    pub running_deadline: Option<Duration>,
-    /// end-to-end request budget applied to every part that does not
-    /// carry its own (`JobPart::with_budget`): queued parts are rejected
-    /// the moment it dies, and each part's running kill clock is armed
-    /// at whatever remains of it — so time burned upstream (batcher
-    /// accumulation, scheduler queueing) is charged against the same
-    /// account the client is waiting on
-    pub budget: Option<Budget>,
 }
 
 impl Default for AllocPolicy {
@@ -393,52 +364,12 @@ impl Session {
         Ok(outputs.pop().map(|done| done.outputs).unwrap_or_default())
     }
 
-    /// [`run`](Self::run) with a caller-owned [`CancelToken`] and an
-    /// optional request [`Budget`].
-    #[deprecated(
-        since = "0.4.0",
-        note = "mint a RequestCtx at the ingress and use `run_with` (or \
-                `InferenceService::submit`) instead"
-    )]
-    pub fn run_cancellable(
-        &self,
-        model: &str,
-        inputs: Vec<Tensor>,
-        cancel: CancelToken,
-        budget: Option<Budget>,
-    ) -> Result<Vec<Tensor>> {
-        let mut ctx = RequestCtx::new().with_cancel(cancel);
-        if let Some(b) = budget {
-            ctx = ctx.with_budget(b);
-        }
-        self.run_with(model, inputs, &ctx)
-    }
-
     /// Parallel inference over independent job parts (the paper's
     /// `prun`). Blocking convenience over [`InferenceService::submit`]:
     /// assembles the classic [`PrunOutcome`] with per-part reports and
     /// the Listing-1 allocation.
     pub fn prun(&self, req: PrunRequest, ctx: &RequestCtx) -> Result<PrunOutcome> {
         self.submit_job(req, ctx).wait()
-    }
-
-    /// Submit a `prun` job without blocking.
-    #[deprecated(
-        since = "0.4.0",
-        note = "build a PrunRequest, mint a RequestCtx and use \
-                `InferenceService::submit` instead"
-    )]
-    pub fn prun_submit(&self, parts: Vec<JobPart>, opts: PrunOptions) -> PrunHandle {
-        let mut ctx = RequestCtx::new().with_priority(opts.priority);
-        if let Some(b) = opts.budget {
-            ctx = ctx.with_budget(b);
-        }
-        let mut req = PrunRequest::new(parts)
-            .with_policy(opts.policy)
-            .with_weights(opts.weights);
-        req.deadline = opts.deadline;
-        req.running_deadline = opts.running_deadline;
-        self.submit_job(req, &ctx)
     }
 
     /// The one submission path every entry point funnels into: sizes

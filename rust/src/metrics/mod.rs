@@ -9,6 +9,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::util::json::{num, Json};
+use crate::util::sync::lock_recover;
 
 /// Named counters and histograms shared across the serving stack.
 #[derive(Default)]
@@ -23,7 +24,7 @@ impl Metrics {
     }
 
     pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
-        let mut map = self.counters.lock().unwrap();
+        let mut map = lock_recover(&self.counters);
         Arc::clone(map.entry(name.to_string()).or_default())
     }
 
@@ -38,7 +39,7 @@ impl Metrics {
     }
 
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
-        let mut map = self.histograms.lock().unwrap();
+        let mut map = lock_recover(&self.histograms);
         Arc::clone(
             map.entry(name.to_string())
                 .or_insert_with(|| Arc::new(Histogram::new())),
@@ -53,7 +54,7 @@ impl Metrics {
     pub fn snapshot_json(&self) -> Json {
         let mut pairs: Vec<(String, Json)> = Vec::new();
         {
-            let counters = self.counters.lock().unwrap();
+            let counters = lock_recover(&self.counters);
             let mut names: Vec<_> = counters.keys().cloned().collect();
             names.sort();
             for name in names {
@@ -64,7 +65,7 @@ impl Metrics {
             }
         }
         {
-            let hists = self.histograms.lock().unwrap();
+            let hists = lock_recover(&self.histograms);
             let mut names: Vec<_> = hists.keys().cloned().collect();
             names.sort();
             for name in names {

@@ -5,5 +5,5 @@
 pub mod serving;
 pub mod tokenizer;
 
-pub use serving::{BatchResult, BatchSubmit, BertServer, EmbedBatch, Strategy};
+pub use serving::{BatchResult, BertServer, EmbedBatch, Strategy};
 pub use tokenizer::Tokenizer;

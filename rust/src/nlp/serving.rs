@@ -11,9 +11,7 @@
 //! [`InferenceService`] over an [`EmbedBatch`] — each sequence may carry
 //! its *own* [`RequestCtx`] (the coordinator's dynamic batcher packs
 //! sequences from different clients into one scheduler job), and
-//! sequences without one inherit the batch-level ctx. The pre-redesign
-//! `serve_submit` / `serve_submit_cancellable` / `serve_submit_budgeted`
-//! variants survive as `#[deprecated]` shims over the same path.
+//! sequences without one inherit the batch-level ctx.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -21,8 +19,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::engine::{
-    AllocPolicy, Budget, CancelToken, InferenceService, JobPart, PrunRequest, RequestCtx,
-    Session, SubmitError, SubmitTicket,
+    AllocPolicy, InferenceService, JobPart, PrunRequest, RequestCtx, Session, SubmitError,
+    SubmitTicket,
 };
 use crate::runtime::Tensor;
 
@@ -108,39 +106,6 @@ impl EmbedBatch {
     }
 }
 
-/// A batch submitted to the scheduler but not yet waited on — the
-/// legacy handle shape returned by the `#[deprecated]` `serve_submit*`
-/// shims, now a thin wrapper over [`SubmitTicket`].
-pub struct BatchSubmit {
-    ticket: SubmitTicket<Vec<f32>>,
-    t0: Instant,
-    n: usize,
-}
-
-impl BatchSubmit {
-    /// Block until every sequence's part completes.
-    pub fn wait(self) -> Result<BatchResult> {
-        let outputs = self.ticket.wait().map_err(anyhow::Error::new)?;
-        Ok(BatchResult { outputs, wall: self.t0.elapsed(), invocations: self.n })
-    }
-
-    /// Block until every part settles and return one result per request,
-    /// input order, with stringified errors (the legacy shape; the
-    /// typed form is `SubmitTicket::wait_each`).
-    pub fn wait_each(self) -> Vec<Result<Vec<f32>, String>> {
-        self.ticket
-            .wait_each()
-            .into_iter()
-            .map(|r| r.map_err(|e| e.to_string()))
-            .collect()
-    }
-
-    /// Cancel every request of this batch still outstanding.
-    pub fn cancel(&self) {
-        self.ticket.cancel();
-    }
-}
-
 pub struct BertServer {
     session: Arc<Session>,
 }
@@ -216,75 +181,6 @@ impl BertServer {
                 Ok(BatchResult { outputs, wall: t0.elapsed(), invocations: n })
             }
         }
-    }
-
-    /// Submit a batch under the prun strategy without blocking.
-    #[deprecated(
-        since = "0.4.0",
-        note = "build an EmbedBatch, mint a RequestCtx and use \
-                `InferenceService::submit` instead"
-    )]
-    pub fn serve_submit(
-        &self,
-        requests: &[Vec<i32>],
-        policy: AllocPolicy,
-    ) -> Result<BatchSubmit> {
-        self.legacy_submit(EmbedBatch::from_requests(requests, policy))
-    }
-
-    /// [`serve_submit`] with one [`CancelToken`] per request.
-    #[deprecated(
-        since = "0.4.0",
-        note = "push sequences with per-request RequestCtxs into an EmbedBatch and \
-                use `InferenceService::submit` instead"
-    )]
-    pub fn serve_submit_cancellable(
-        &self,
-        requests: &[(Vec<i32>, CancelToken)],
-        policy: AllocPolicy,
-    ) -> Result<BatchSubmit> {
-        let mut batch = EmbedBatch::new(policy);
-        for (ids, token) in requests {
-            batch.push_with(ids.clone(), RequestCtx::new().with_cancel(token.clone()));
-        }
-        self.legacy_submit(batch)
-    }
-
-    /// [`serve_submit_cancellable`] plus one request [`Budget`] per
-    /// sequence.
-    #[deprecated(
-        since = "0.4.0",
-        note = "push sequences with per-request RequestCtxs into an EmbedBatch and \
-                use `InferenceService::submit` instead"
-    )]
-    pub fn serve_submit_budgeted(
-        &self,
-        requests: &[(Vec<i32>, CancelToken, Budget)],
-        policy: AllocPolicy,
-    ) -> Result<BatchSubmit> {
-        let mut batch = EmbedBatch::new(policy);
-        for (ids, token, budget) in requests {
-            batch.push_with(
-                ids.clone(),
-                RequestCtx::new().with_cancel(token.clone()).with_budget(*budget),
-            );
-        }
-        self.legacy_submit(batch)
-    }
-
-    /// Shared body of the deprecated shims: the new submission path,
-    /// wrapped back into the legacy [`BatchSubmit`] shape.
-    fn legacy_submit(&self, batch: EmbedBatch) -> Result<BatchSubmit> {
-        if batch.is_empty() {
-            bail!("empty batch");
-        }
-        let n = batch.len();
-        let t0 = Instant::now();
-        let ticket = self.submit(batch, RequestCtx::new());
-        if let Some(err) = ticket.rejection() {
-            bail!("{err}");
-        }
-        Ok(BatchSubmit { ticket, t0, n })
     }
 
     /// (model name, [1, bucket] tensor) for a single request.

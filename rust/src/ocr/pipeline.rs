@@ -24,8 +24,8 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::engine::{
-    AllocPolicy, Budget, CancelToken, InferenceService, JobPart, PrunRequest, RequestCtx,
-    SchedError, Session, SubmitError, SubmitTicket, TaskCancelled,
+    AllocPolicy, InferenceService, JobPart, PrunRequest, RequestCtx, SchedError, Session,
+    SubmitError, SubmitTicket, TaskCancelled,
 };
 use crate::runtime::Tensor;
 use crate::simcpu::ocr::OcrVariant;
@@ -103,25 +103,6 @@ impl OcrPipeline {
         run_pipeline(&self.session, &self.meta, img, variant, ctx)
     }
 
-    /// [`process`](Self::process) with bare token/budget plumbing.
-    #[deprecated(
-        since = "0.4.0",
-        note = "mint a RequestCtx at the ingress and use `process` (or \
-                `InferenceService::submit`) instead"
-    )]
-    pub fn process_budgeted(
-        &self,
-        img: &Image,
-        variant: OcrVariant,
-        cancel: &CancelToken,
-        budget: Option<Budget>,
-    ) -> Result<OcrResult> {
-        let mut ctx = RequestCtx::new().with_cancel(cancel.clone());
-        if let Some(b) = budget {
-            ctx = ctx.with_budget(b);
-        }
-        self.process(img, variant, &ctx)
-    }
 }
 
 impl InferenceService for OcrPipeline {

@@ -22,7 +22,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -30,6 +30,7 @@ use super::cancel::{CancelToken, TaskCancelled};
 use super::local::LocalEngine;
 use super::manifest::Manifest;
 use super::tensor::Tensor;
+use crate::util::clock;
 
 /// Completion callback, invoked exactly once on the worker thread.
 pub type ReplyFn = Box<dyn FnOnce(Result<ExecResult>) + Send + 'static>;
@@ -316,7 +317,7 @@ fn worker_loop(wid: usize, manifest: Arc<Manifest>, rx: Receiver<Msg>) {
                     (job.reply)(Err(anyhow::Error::new(TaskCancelled)));
                     continue;
                 }
-                let t0 = Instant::now();
+                let t0 = clock::now();
                 // A panic inside execute must still produce a reply:
                 // the scheduler's core ledger frees on completion, so a
                 // dropped reply would leak cores forever.

@@ -1,0 +1,99 @@
+//! Hot-path clock shim.
+//!
+//! The scheduler's event-driven wakeups, EWMA worker placement, and
+//! budget arithmetic all read wall time on hot paths. Reading
+//! `Instant::now()` directly at every one of those sites makes the
+//! timing untestable — a test that wants to prove "a blocked queue
+//! takes zero wakeups for an hour" has to actually sleep. Routing the
+//! reads through [`now`] keeps every hot-path time observation behind
+//! one seam that tests can override; `pallas-lint` rule **PL003**
+//! enforces that `engine/sched.rs` and `runtime/pool.rs` use it.
+//!
+//! In non-test builds [`now`] compiles down to `Instant::now()` — the
+//! override hook only exists under `cfg(test)`.
+
+use std::time::Instant;
+
+/// The crate's hot-path time source. Equivalent to `Instant::now()`
+/// unless a test on the *current thread* installed an override via
+/// [`mock::freeze`].
+pub fn now() -> Instant {
+    #[cfg(test)]
+    if let Some(t) = mock::frozen() {
+        return t;
+    }
+    Instant::now()
+}
+
+/// Test-only clock control. The override is thread-local: it affects
+/// `clock::now()` calls made by the test's own thread (unit tests that
+/// drive scheduler state machines directly), not worker threads — those
+/// keep real time, which is what the integration tests measure.
+#[cfg(test)]
+pub mod mock {
+    use std::cell::Cell;
+    use std::time::{Duration, Instant};
+
+    thread_local! {
+        static FROZEN: Cell<Option<Instant>> = const { Cell::new(None) };
+    }
+
+    pub(super) fn frozen() -> Option<Instant> {
+        FROZEN.with(|f| f.get())
+    }
+
+    /// Freeze this thread's `clock::now()` at `t` until [`thaw`].
+    pub fn freeze(t: Instant) {
+        FROZEN.with(|f| f.set(Some(t)));
+    }
+
+    /// Advance a frozen clock by `d` (no-op when not frozen).
+    pub fn advance(d: Duration) {
+        FROZEN.with(|f| {
+            if let Some(t) = f.get() {
+                f.set(Some(t + d));
+            }
+        });
+    }
+
+    /// Return this thread's `clock::now()` to real time.
+    pub fn thaw() {
+        FROZEN.with(|f| f.set(None));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn real_time_by_default() {
+        let a = now();
+        let b = now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn freeze_advance_thaw() {
+        let t0 = Instant::now();
+        mock::freeze(t0);
+        assert_eq!(now(), t0);
+        assert_eq!(now(), t0, "frozen clock does not tick");
+        mock::advance(Duration::from_secs(5));
+        assert_eq!(now(), t0 + Duration::from_secs(5));
+        mock::thaw();
+        assert!(now() >= t0, "thawed clock is real time again");
+    }
+
+    #[test]
+    fn override_is_thread_local() {
+        let t0 = Instant::now();
+        mock::freeze(t0);
+        let other = std::thread::spawn(move || now()).join().unwrap();
+        // The spawned thread saw real time, strictly after our freeze
+        // point was minted.
+        assert!(other >= t0);
+        mock::thaw();
+    }
+}

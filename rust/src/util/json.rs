@@ -36,7 +36,7 @@ impl Json {
     // ---------------------------------------------------------------- parse
 
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -224,14 +224,32 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Nesting bound for untrusted input. The parser recurses per `[`/`{`,
+/// so a request body of a few KB of open brackets would otherwise
+/// overflow the connection thread's stack — an *abort*, not a
+/// catchable error. 128 is far beyond any manifest or request this
+/// crate produces (their depth is < 10).
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError { msg: msg.to_string(), pos: self.i }
+    }
+
+    /// Guard one level of `[`/`{` recursion; the matching `depth -= 1`
+    /// sits at each container's return points.
+    fn descend(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
     }
 
     fn skip_ws(&mut self) {
@@ -287,7 +305,8 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
-        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| self.err("invalid number"))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("invalid number"))
@@ -335,7 +354,7 @@ impl<'a> Parser<'a> {
                     // consume one UTF-8 scalar
                     let rest = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = rest.chars().next().unwrap();
+                    let c = rest.chars().next().ok_or_else(|| self.err("invalid utf-8"))?;
                     out.push(c);
                     self.i += c.len_utf8();
                 }
@@ -345,10 +364,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.descend()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -359,6 +380,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -368,10 +390,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.descend()?;
         let mut pairs = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(pairs));
         }
         loop {
@@ -387,6 +411,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(pairs));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -432,6 +457,40 @@ mod tests {
         assert!(Json::parse("\"unterminated").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("{'single': 1}").is_err());
+    }
+
+    #[test]
+    fn malformed_request_bodies_error_instead_of_panicking() {
+        // Truncated / garbage shapes a client can actually send the
+        // router; every one must come back as Err, never a panic.
+        for body in [
+            "",
+            "{\"op\": \"embed\", \"texts\": [\"a\",", // truncated mid-array
+            "{\"op\":",                               // truncated mid-object
+            "\u{0}\u{1}\u{2}",                        // binary garbage
+            "{\"n\": 1e}",                            // malformed number
+            "nul",                                    // truncated literal
+            "[1, 2",                                  // unterminated array
+            "{\"a\" 1}",                              // missing colon
+            "\"\\u12\"",                              // truncated \u escape
+            "-",                                      // sign with no digits
+        ] {
+            assert!(Json::parse(body).is_err(), "must reject: {body:?}");
+        }
+    }
+
+    #[test]
+    fn deep_nesting_is_an_error_not_a_stack_overflow() {
+        // A few KB of '[' used to abort the process by exhausting the
+        // connection thread's stack before the parser ever saw EOF.
+        let bomb = "[".repeat(100_000);
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(err.msg.contains("nesting too deep"), "got: {err}");
+        let obj_bomb = "{\"k\":".repeat(100_000);
+        assert!(Json::parse(&obj_bomb).is_err());
+        // ...while anything a real manifest/request produces stays fine.
+        let deep_ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&deep_ok).is_ok());
     }
 
     #[test]

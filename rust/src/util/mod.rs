@@ -1,9 +1,13 @@
 //! Infrastructure the offline environment requires us to own: JSON,
-//! PRNG, CLI parsing, logging, stats, and a mini property-testing kit.
+//! PRNG, CLI parsing, logging, stats, a mini property-testing kit, and
+//! the crate-wide concurrency shims (poison-recovering locks, the
+//! hot-path clock) that `pallas-lint` holds the rest of the tree to.
 
 pub mod args;
+pub mod clock;
 pub mod json;
 pub mod logging;
 pub mod prng;
 pub mod prop;
 pub mod stats;
+pub mod sync;

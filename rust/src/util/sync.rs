@@ -1,0 +1,79 @@
+//! Poison-recovering lock helpers — the one way this crate takes a
+//! `Mutex`/`RwLock` guard outside `#[cfg(test)]` code.
+//!
+//! A panicking holder poisons a std lock, and every later
+//! `.lock().unwrap()` then propagates that panic into threads that had
+//! nothing to do with the original failure — a single crashed executor
+//! taking down the dispatcher, the metrics snapshot, and every serving
+//! connection. Each lock in this crate guards a structurally consistent
+//! value (plain maps/vecs mutated by single inserts or drains), so the
+//! right response to poison is to keep going with the data as it is,
+//! not to spread the panic. `pallas-lint` rule **PL002** enforces the
+//! contract: guard acquisition goes through these helpers, never
+//! through `.unwrap()`/`.expect()` on the `LockResult`.
+
+use std::sync::{
+    Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Read-lock `l`, recovering the guard if a previous holder panicked.
+pub fn read_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Write-lock `l`, recovering the guard if a previous holder panicked.
+pub fn write_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        // Poison the mutex: panic while holding the guard.
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        assert_eq!(*lock_recover(&m), 7, "recovered guard sees the data");
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_recover_survives_poison() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(l.read().is_err(), "rwlock must actually be poisoned");
+        assert_eq!(read_recover(&l).len(), 3);
+        write_recover(&l).push(4);
+        assert_eq!(read_recover(&l).len(), 4);
+    }
+
+    #[test]
+    fn helpers_are_plain_locks_when_healthy() {
+        let m = Mutex::new(String::from("ok"));
+        lock_recover(&m).push('!');
+        assert_eq!(*lock_recover(&m), "ok!");
+        let l = RwLock::new(0u8);
+        *write_recover(&l) = 9;
+        assert_eq!(*read_recover(&l), 9);
+    }
+}

@@ -1,0 +1,23 @@
+//! PL001 must-not-fire fixture: `.spawn()` on a non-thread receiver is
+//! someone's domain API, and test helpers may use real threads.
+
+pub struct Job;
+
+pub struct Pool;
+
+impl Pool {
+    pub fn spawn(&self, _job: Job) {}
+}
+
+pub fn uses_the_pool(pool: &Pool) {
+    pool.spawn(Job);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn helper_threads_are_fine_in_tests() {
+        let h = std::thread::spawn(|| 1 + 1);
+        assert_eq!(h.join().unwrap(), 2);
+    }
+}

@@ -1,0 +1,14 @@
+//! PL001 must-fire fixture: raw thread creation outside the pool.
+//! Checked under a non-exempt virtual path (e.g. `coordinator/evil.rs`)
+//! this yields exactly two findings — one per spawn form. Checked under
+//! `runtime/evil.rs` it yields none (the pool may create threads).
+
+pub fn sneaky_parallelism() {
+    let a = std::thread::spawn(|| 40 + 2);
+    let b = std::thread::Builder::new()
+        .name("rogue".into())
+        .spawn(|| ())
+        .unwrap();
+    let _ = a.join();
+    let _ = b.join();
+}

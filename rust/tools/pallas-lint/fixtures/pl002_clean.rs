@@ -1,0 +1,32 @@
+//! PL002 must-not-fire fixture: poison-recovering helpers, non-lock
+//! unwraps, argumentful `.read(..)` calls, and test-gated guard unwraps.
+
+use std::sync::mpsc::Receiver;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+pub fn recovered(m: &Mutex<u32>) -> u32 {
+    *lock_recover(m)
+}
+
+pub fn non_lock_unwraps(rx: &Receiver<u32>, buf: &mut Vec<u8>) -> u32 {
+    use std::io::Read;
+    let mut f = std::fs::File::open("/dev/null").unwrap();
+    // `.read(buf)` takes an argument — io::Read, not RwLock::read.
+    f.read(buf).unwrap();
+    rx.recv().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tests_may_unwrap_guards() {
+        let m = Mutex::new(7);
+        assert_eq!(*m.lock().unwrap(), 7);
+    }
+}

@@ -1,0 +1,12 @@
+//! PL002 must-fire fixture: guard acquisition via unwrap/expect.
+//! Exactly three findings: lock().unwrap, read().expect, write().unwrap.
+
+use std::sync::{Mutex, RwLock};
+
+pub fn poison_propagators(m: &Mutex<u32>, l: &RwLock<u32>) -> u32 {
+    let a = *m.lock().unwrap();
+    let b = *l.read().expect("poisoned");
+    let mut g = l.write().unwrap();
+    *g += a + b;
+    *g
+}

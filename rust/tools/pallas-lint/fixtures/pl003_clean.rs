@@ -1,0 +1,23 @@
+//! PL003 must-not-fire fixture: hot-path time through the clock shim,
+//! and real time in tests. Clean even under `engine/sched.rs`.
+
+use std::time::Instant;
+
+use crate::util::clock;
+
+pub fn stamps() -> Instant {
+    clock::now()
+}
+
+pub fn lazy_stamp(slot: &mut Option<Instant>) -> Instant {
+    *slot.get_or_insert_with(clock::now)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_read_real_time() {
+        let t = std::time::Instant::now();
+        assert!(t.elapsed().as_secs() < 1);
+    }
+}

@@ -1,0 +1,14 @@
+//! PL003 must-fire fixture: raw time reads on a hot path. Checked under
+//! `engine/sched.rs` this yields exactly two findings — the direct call
+//! and the fn-pointer form. Checked under a file outside the rule's
+//! scope (e.g. `nlp/serving.rs`) it yields none.
+
+use std::time::Instant;
+
+pub fn stamps() -> Instant {
+    Instant::now()
+}
+
+pub fn lazy_stamp(slot: &mut Option<Instant>) -> Instant {
+    *slot.get_or_insert_with(Instant::now)
+}

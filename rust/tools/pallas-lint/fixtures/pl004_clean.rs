@@ -1,0 +1,19 @@
+//! PL004 must-not-fire fixture: deriving from an existing ctx (clone,
+//! builder methods) is threading, not minting — and tests may mint.
+
+use crate::engine::{Priority, RequestCtx};
+
+pub fn threads_the_one_ctx(ctx: &RequestCtx) -> RequestCtx {
+    ctx.clone().with_priority(Priority::High)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tests_may_mint() {
+        let ctx = RequestCtx::new();
+        let _ = threads_the_one_ctx(&ctx);
+    }
+}

@@ -1,0 +1,16 @@
+//! PL004 must-fire fixture: minting request state mid-stack. Checked
+//! under a non-mint path (e.g. `coordinator/batcher.rs`) this yields
+//! exactly three findings. Checked under an ingress path
+//! (`coordinator/router.rs`) it yields none.
+
+use std::time::Duration;
+
+use crate::engine::{Budget, RequestCtx};
+use crate::runtime::CancelToken;
+
+pub fn reminted_mid_stack() -> (Budget, CancelToken, RequestCtx) {
+    let b = Budget::new(Duration::from_millis(5));
+    let t = CancelToken::new();
+    let c = RequestCtx::default();
+    (b, t, c)
+}

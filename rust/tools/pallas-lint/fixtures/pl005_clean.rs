@@ -1,0 +1,33 @@
+//! PL005 must-not-fire fixture: `with_cancel` / `with_budget` live on
+//! legitimately on `PartTask` and `RequestCtx` — only the `JobPart`
+//! builders were deleted. And prose may discuss history: this doc
+//! comment mentions `run_cancellable`, `PrunOptions` and `BatchSubmit`
+//! without tripping anything, because doc text is not an identifier.
+
+pub struct PartTask;
+
+pub struct RequestCtx;
+
+pub struct CancelToken;
+
+pub struct Budget;
+
+impl PartTask {
+    pub fn with_cancel(self, _token: CancelToken) -> PartTask {
+        self
+    }
+
+    pub fn with_budget(self, _budget: Budget) -> PartTask {
+        self
+    }
+}
+
+impl RequestCtx {
+    pub fn with_cancel(self, _token: CancelToken) -> RequestCtx {
+        self
+    }
+
+    pub fn with_budget(self, _budget: Budget) -> RequestCtx {
+        self
+    }
+}

@@ -1,0 +1,28 @@
+//! PL005 must-fire fixture: resurrecting deleted PR-5 shim names.
+//! Exactly four findings: the `impl JobPart` builder, the banned fn
+//! name at its definition, the banned name at a call site, and a banned
+//! name inside `#[cfg(test)]` — PL005 applies to tests too.
+
+pub struct JobPart;
+
+pub struct CancelToken;
+
+impl JobPart {
+    pub fn with_cancel(self, _token: CancelToken) -> JobPart {
+        self
+    }
+}
+
+pub fn run_cancellable() {}
+
+pub fn old_call_site() {
+    run_cancellable();
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn shims_are_banned_even_here() {
+        super::run_cancellable();
+    }
+}

@@ -1,0 +1,726 @@
+//! `pallas-lint` — the serving crate's concurrency and budget contracts
+//! as named, machine-checked rules.
+//!
+//! Six PRs of scheduler growth piled up invariants that lived only in
+//! prose ("all parallelism flows through the pool", "mint the budget
+//! once at ingress", "never `unwrap()` a lock guard in the
+//! dispatcher"), and each had already been violated and re-fixed at
+//! least once. This crate parses `rust/src/**` with `syn` and enforces
+//! them:
+//!
+//! - **PL001** — no `std::thread::spawn` (or `thread::Builder` spawns)
+//!   outside `runtime/` and `engine/sched.rs`. The divide-and-conquer
+//!   design routes all parallelism through the executor pool and the
+//!   scheduler's shards; a rogue thread is invisible to the core
+//!   ledger, so it oversubscribes exactly the resource the paper's
+//!   allocation math is managing.
+//! - **PL002** — no `.unwrap()` / `.expect()` on `Mutex`/`RwLock`
+//!   guard acquisition outside `#[cfg(test)]`. A panicking holder
+//!   poisons the lock and every later unwrap re-panics in innocent
+//!   threads; non-test code must use `util::sync::{lock_recover,
+//!   read_recover, write_recover}`.
+//! - **PL003** — no raw `Instant::now()` in `engine/sched.rs` /
+//!   `runtime/pool.rs` outside `#[cfg(test)]`: hot-path time reads go
+//!   through `util::clock::now()` so event-driven wakeups and EWMA
+//!   placement stay mockable.
+//! - **PL004** — `Budget` / `CancelToken` / `RequestCtx` are
+//!   constructed only in their defining modules (`engine/ctx.rs`,
+//!   `engine/budget.rs`, `runtime/cancel.rs`) and the ingress modules
+//!   (`coordinator/router.rs`, `main.rs`, `bench/gate.rs`). This is the
+//!   one-mint invariant: request state is minted once at the edge and
+//!   *threaded*, never re-minted mid-stack (a fresh token mid-stack is
+//!   a request the client can no longer cancel).
+//! - **PL005** — no references to the deleted PR-5 shim names
+//!   (`run_cancellable`, `prun_submit`, `serve_submit*`,
+//!   `process_budgeted`, `start_pipelined_with_reaper`, `PrunOptions`,
+//!   `BatchSubmit`) and no `with_cancel`/`with_budget` methods on
+//!   `JobPart`. Applies *everywhere*, tests included — dead API must
+//!   stay dead. Prose (doc comments) is exempt: names are matched as
+//!   code identifiers, not text.
+//!
+//! Rules PL001–PL004 skip `#[cfg(test)]`-gated subtrees and `#[test]`
+//! functions; PL005 does not. Findings not covered by a
+//! `lint-allow.toml` entry (each with a written justification and a
+//! `max` budget) make the binary exit nonzero; so do allowlist entries
+//! that no longer match anything — exceptions must not outlive their
+//! reason.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use proc_macro2::TokenTree;
+use syn::visit::Visit;
+
+/// Rule catalog: (id, one-line summary) — the JSON report embeds it so
+/// downstream tooling doesn't need this crate's docs.
+pub const RULES: &[(&str, &str)] = &[
+    ("PL001", "no raw thread creation outside runtime/ and engine/sched.rs"),
+    ("PL002", "no unwrap/expect on Mutex/RwLock guards outside tests"),
+    ("PL003", "no raw Instant::now() on scheduler/pool hot paths"),
+    ("PL004", "Budget/CancelToken/RequestCtx minted only at defining modules and ingress"),
+    ("PL005", "deleted PR-5 shim names must stay dead (tests included)"),
+];
+
+/// One rule violation at a source location. `file` is the path relative
+/// to the scanned source root, with `/` separators on every platform.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} {} {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+// ---------------------------------------------------------------- scope
+
+fn pl001_exempt(file: &str) -> bool {
+    file.starts_with("runtime/") || file == "engine/sched.rs"
+}
+
+fn pl003_applies(file: &str) -> bool {
+    matches!(file, "engine/sched.rs" | "runtime/pool.rs")
+}
+
+fn pl004_exempt(file: &str) -> bool {
+    matches!(
+        file,
+        // defining modules: the constructors themselves live here
+        "engine/ctx.rs" | "engine/budget.rs" | "runtime/cancel.rs"
+        // ingress modules: where the one mint per request happens
+        | "coordinator/router.rs" | "main.rs" | "bench/gate.rs"
+    )
+}
+
+/// Idents banned everywhere by PL005 — the PR-5 shim surface deleted
+/// after one deprecation cycle. (`with_cancel`/`with_budget` are *not*
+/// here: they live on legitimately on `PartTask` and `RequestCtx`; the
+/// `JobPart` builders are caught structurally via `impl JobPart`.)
+const PL005_BANNED: &[&str] = &[
+    "run_cancellable",
+    "prun_submit",
+    "serve_submit",
+    "serve_submit_cancellable",
+    "serve_submit_budgeted",
+    "process_budgeted",
+    "start_pipelined_with_reaper",
+    "PrunOptions",
+    "BatchSubmit",
+];
+
+// -------------------------------------------------------------- checking
+
+/// Run every rule over one file's source. `rel_path` scopes the
+/// path-sensitive rules (PL001/PL003/PL004) — pass the path relative to
+/// the crate's `src/`, `/`-separated. Returns `Err` if the file does
+/// not parse as Rust.
+pub fn check_source(rel_path: &str, src: &str) -> Result<Vec<Finding>, String> {
+    let ast = syn::parse_file(src).map_err(|e| format!("{rel_path}: parse error: {e}"))?;
+    let mut v = Rules { file: rel_path, test_depth: 0, findings: Vec::new() };
+    v.visit_file(&ast);
+    Ok(v.findings)
+}
+
+/// Recursively check every `*.rs` under `root` (deterministic order).
+pub fn check_tree(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .map_err(|_| format!("{}: not under source root", path.display()))?
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        findings.extend(check_source(&rel, &src)?);
+    }
+    Ok(findings)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- visitor
+
+struct Rules<'a> {
+    file: &'a str,
+    /// > 0 while inside a `#[cfg(test)]` / `#[test]` subtree; rules
+    /// PL001–PL004 are inert there, PL005 is not.
+    test_depth: usize,
+    findings: Vec<Finding>,
+}
+
+impl Rules<'_> {
+    fn push(&mut self, rule: &'static str, line: usize, message: String) {
+        self.findings.push(Finding { rule, file: self.file.to_string(), line, message });
+    }
+}
+
+/// Does any attribute gate this node to test builds? Catches `#[test]`
+/// and any `#[cfg(...)]` whose argument tokens mention the ident `test`
+/// (so `#[cfg(any(test, feature = "x"))]` counts — conservative in the
+/// safe direction for PL001–PL004's *exemption*).
+fn is_test_gated(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        if a.path().is_ident("test") {
+            return true;
+        }
+        if !a.path().is_ident("cfg") {
+            return false;
+        }
+        match &a.meta {
+            syn::Meta::List(list) => tokens_mention_test(list.tokens.clone()),
+            _ => false,
+        }
+    })
+}
+
+fn tokens_mention_test(ts: proc_macro2::TokenStream) -> bool {
+    ts.into_iter().any(|tt| match tt {
+        TokenTree::Ident(id) => id == "test",
+        TokenTree::Group(g) => tokens_mention_test(g.stream()),
+        _ => false,
+    })
+}
+
+fn item_attrs(item: &syn::Item) -> &[syn::Attribute] {
+    match item {
+        syn::Item::Const(i) => &i.attrs,
+        syn::Item::Enum(i) => &i.attrs,
+        syn::Item::ExternCrate(i) => &i.attrs,
+        syn::Item::Fn(i) => &i.attrs,
+        syn::Item::ForeignMod(i) => &i.attrs,
+        syn::Item::Impl(i) => &i.attrs,
+        syn::Item::Macro(i) => &i.attrs,
+        syn::Item::Mod(i) => &i.attrs,
+        syn::Item::Static(i) => &i.attrs,
+        syn::Item::Struct(i) => &i.attrs,
+        syn::Item::Trait(i) => &i.attrs,
+        syn::Item::TraitAlias(i) => &i.attrs,
+        syn::Item::Type(i) => &i.attrs,
+        syn::Item::Union(i) => &i.attrs,
+        syn::Item::Use(i) => &i.attrs,
+        _ => &[],
+    }
+}
+
+fn impl_item_attrs(item: &syn::ImplItem) -> &[syn::Attribute] {
+    match item {
+        syn::ImplItem::Const(i) => &i.attrs,
+        syn::ImplItem::Fn(i) => &i.attrs,
+        syn::ImplItem::Type(i) => &i.attrs,
+        syn::ImplItem::Macro(i) => &i.attrs,
+        _ => &[],
+    }
+}
+
+fn seg_names(path: &syn::Path) -> Vec<String> {
+    path.segments.iter().map(|s| s.ident.to_string()).collect()
+}
+
+fn ends_with(segs: &[String], suffix: &[&str]) -> bool {
+    segs.len() >= suffix.len()
+        && segs[segs.len() - suffix.len()..]
+            .iter()
+            .zip(suffix)
+            .all(|(a, b)| a == b)
+}
+
+/// Structural "does this receiver look like a thread builder": any path
+/// inside the expression mentioning `thread` or `Builder`. Keeps
+/// `.spawn()` on pools/processes from false-firing while catching
+/// `std::thread::Builder::new().name(..).spawn(..)` chains.
+fn expr_mentions(e: &syn::Expr, names: &[&str]) -> bool {
+    match e {
+        syn::Expr::Path(p) => p
+            .path
+            .segments
+            .iter()
+            .any(|s| names.iter().any(|n| s.ident == *n)),
+        syn::Expr::Call(c) => {
+            expr_mentions(&c.func, names) || c.args.iter().any(|a| expr_mentions(a, names))
+        }
+        syn::Expr::MethodCall(mc) => {
+            expr_mentions(&mc.receiver, names)
+                || mc.args.iter().any(|a| expr_mentions(a, names))
+        }
+        syn::Expr::Paren(p) => expr_mentions(&p.expr, names),
+        syn::Expr::Reference(r) => expr_mentions(&r.expr, names),
+        syn::Expr::Field(f) => expr_mentions(&f.base, names),
+        _ => false,
+    }
+}
+
+impl<'ast> Visit<'ast> for Rules<'_> {
+    fn visit_item(&mut self, node: &'ast syn::Item) {
+        if is_test_gated(item_attrs(node)) {
+            self.test_depth += 1;
+            syn::visit::visit_item(self, node);
+            self.test_depth -= 1;
+        } else {
+            syn::visit::visit_item(self, node);
+        }
+    }
+
+    fn visit_impl_item(&mut self, node: &'ast syn::ImplItem) {
+        if is_test_gated(impl_item_attrs(node)) {
+            self.test_depth += 1;
+            syn::visit::visit_impl_item(self, node);
+            self.test_depth -= 1;
+        } else {
+            syn::visit::visit_impl_item(self, node);
+        }
+    }
+
+    fn visit_expr_path(&mut self, node: &'ast syn::ExprPath) {
+        // An ExprPath covers both call position (`Instant::now()`) and
+        // value position (`get_or_insert_with(Instant::now)`), so the
+        // path rules hook here rather than at ExprCall.
+        if self.test_depth == 0 {
+            let segs = seg_names(&node.path);
+            let line = node
+                .path
+                .segments
+                .last()
+                .map(|s| s.ident.span().start().line)
+                .unwrap_or(0);
+            if !pl001_exempt(self.file) && ends_with(&segs, &["thread", "spawn"]) {
+                self.push(
+                    "PL001",
+                    line,
+                    "raw std::thread::spawn — all parallelism flows through the \
+                     executor pool / scheduler shards"
+                        .to_string(),
+                );
+            }
+            if pl003_applies(self.file) && ends_with(&segs, &["Instant", "now"]) {
+                self.push(
+                    "PL003",
+                    line,
+                    "raw Instant::now() on a hot path — use crate::util::clock::now()"
+                        .to_string(),
+                );
+            }
+            if !pl004_exempt(self.file) && segs.len() >= 2 {
+                let ty = &segs[segs.len() - 2];
+                let ctor = &segs[segs.len() - 1];
+                if matches!(ty.as_str(), "Budget" | "CancelToken" | "RequestCtx")
+                    && matches!(ctor.as_str(), "new" | "default")
+                {
+                    self.push(
+                        "PL004",
+                        line,
+                        format!(
+                            "{ty}::{ctor}() outside the mint modules — request state \
+                             is minted once at the ingress and threaded through"
+                        ),
+                    );
+                }
+            }
+        }
+        syn::visit::visit_expr_path(self, node);
+    }
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        if self.test_depth == 0 {
+            let method = node.method.to_string();
+            let line = node.method.span().start().line;
+            if method == "unwrap" || method == "expect" {
+                if let syn::Expr::MethodCall(inner) = &*node.receiver {
+                    let acquire = inner.method.to_string();
+                    if matches!(acquire.as_str(), "lock" | "read" | "write")
+                        && inner.args.is_empty()
+                    {
+                        let helper = match acquire.as_str() {
+                            "lock" => "lock_recover",
+                            "read" => "read_recover",
+                            _ => "write_recover",
+                        };
+                        self.push(
+                            "PL002",
+                            line,
+                            format!(
+                                ".{acquire}().{method}() on a lock guard — use \
+                                 util::sync::{helper} so one panicking holder \
+                                 cannot cascade"
+                            ),
+                        );
+                    }
+                }
+            }
+            if method == "spawn"
+                && !pl001_exempt(self.file)
+                && expr_mentions(&node.receiver, &["thread", "Builder"])
+            {
+                self.push(
+                    "PL001",
+                    line,
+                    "thread::Builder spawn — all parallelism flows through the \
+                     executor pool / scheduler shards"
+                        .to_string(),
+                );
+            }
+        }
+        syn::visit::visit_expr_method_call(self, node);
+    }
+
+    fn visit_item_impl(&mut self, node: &'ast syn::ItemImpl) {
+        // PL005 structural half: the deleted JobPart builder methods
+        // must not be re-added (the bare names stay legal on PartTask
+        // and RequestCtx).
+        if let syn::Type::Path(tp) = &*node.self_ty {
+            let is_jobpart = tp
+                .path
+                .segments
+                .last()
+                .map(|s| s.ident == "JobPart")
+                .unwrap_or(false);
+            if is_jobpart {
+                for item in &node.items {
+                    if let syn::ImplItem::Fn(f) = item {
+                        let name = f.sig.ident.to_string();
+                        if name == "with_cancel" || name == "with_budget" {
+                            self.push(
+                                "PL005",
+                                f.sig.ident.span().start().line,
+                                format!(
+                                    "JobPart::{name} was deleted in the RequestCtx \
+                                     redesign — attach a ctx via with_ctx"
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        syn::visit::visit_item_impl(self, node);
+    }
+
+    fn visit_ident(&mut self, node: &'ast proc_macro2::Ident) {
+        // PL005 ident half: fires in tests too. Doc comments are
+        // attribute string literals, not idents, so prose never trips it.
+        if PL005_BANNED.iter().any(|b| node == b) {
+            self.push(
+                "PL005",
+                node.span().start().line,
+                format!("`{node}` is a deleted PR-5 shim name — use the RequestCtx / InferenceService API"),
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------- allowlist
+
+/// One documented exception: suppresses up to `max` findings of `rule`
+/// in `file`. `reason` is mandatory — an exception without a written
+/// justification is a parse error, and an entry matching nothing is a
+/// lint failure (stale exceptions must be deleted).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub file: String,
+    pub max: usize,
+    pub reason: String,
+}
+
+/// Parse the `lint-allow.toml` subset: `#` comments, `[[allow]]`
+/// blocks, `key = "value"` / `max = N` pairs. Hand-rolled on purpose —
+/// the tool must not grow a dependency for 40 lines of config.
+pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, String> {
+    #[derive(Default)]
+    struct Partial {
+        rule: Option<String>,
+        file: Option<String>,
+        max: Option<usize>,
+        reason: Option<String>,
+        start_line: usize,
+    }
+    fn finish(p: Partial) -> Result<AllowEntry, String> {
+        let at = format!("[[allow]] block at line {}", p.start_line);
+        let rule = p.rule.ok_or_else(|| format!("{at}: missing `rule`"))?;
+        let file = p.file.ok_or_else(|| format!("{at}: missing `file`"))?;
+        let reason = p.reason.ok_or_else(|| format!("{at}: missing `reason`"))?;
+        if reason.trim().is_empty() {
+            return Err(format!("{at}: empty `reason` — every exception needs a justification"));
+        }
+        if !RULES.iter().any(|(id, _)| *id == rule) {
+            return Err(format!("{at}: unknown rule `{rule}`"));
+        }
+        Ok(AllowEntry { rule, file, max: p.max.unwrap_or(1), reason })
+    }
+    fn unquote(v: &str, line_no: usize) -> Result<String, String> {
+        let v = v.trim();
+        if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+            Ok(v[1..v.len() - 1].to_string())
+        } else {
+            Err(format!("line {line_no}: expected a double-quoted string, got `{v}`"))
+        }
+    }
+
+    let mut entries = Vec::new();
+    let mut cur: Option<Partial> = None;
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[allow]]" {
+            if let Some(p) = cur.take() {
+                entries.push(finish(p)?);
+            }
+            cur = Some(Partial { start_line: line_no, ..Partial::default() });
+            continue;
+        }
+        let p = cur
+            .as_mut()
+            .ok_or_else(|| format!("line {line_no}: key outside an [[allow]] block"))?;
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {line_no}: expected `key = value`"))?;
+        match key.trim() {
+            "rule" => p.rule = Some(unquote(value, line_no)?),
+            "file" => p.file = Some(unquote(value, line_no)?),
+            "reason" => p.reason = Some(unquote(value, line_no)?),
+            "max" => {
+                p.max = Some(
+                    value
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("line {line_no}: `max` must be an integer"))?,
+                )
+            }
+            other => return Err(format!("line {line_no}: unknown key `{other}`")),
+        }
+    }
+    if let Some(p) = cur.take() {
+        entries.push(finish(p)?);
+    }
+    Ok(entries)
+}
+
+/// Result of matching findings against the allowlist. Exit-zero
+/// requires `active` *and* `unused` to be empty.
+#[derive(Debug, Default)]
+pub struct AllowReport {
+    /// findings not covered by any entry — including every finding of
+    /// an entry whose `max` budget was exceeded (an over-budget
+    /// exception suppresses nothing: all its findings surface)
+    pub active: Vec<Finding>,
+    /// findings suppressed by in-budget entries
+    pub suppressed: usize,
+    /// entries that matched nothing — stale, must be deleted
+    pub unused: Vec<AllowEntry>,
+    /// human-readable notes for entries over their `max`
+    pub over_budget: Vec<String>,
+}
+
+pub fn apply_allowlist(findings: &[Finding], allow: &[AllowEntry]) -> AllowReport {
+    let mut matched: BTreeMap<usize, Vec<&Finding>> = BTreeMap::new();
+    let mut report = AllowReport::default();
+    for f in findings {
+        match allow
+            .iter()
+            .position(|e| e.rule == f.rule && e.file == f.file)
+        {
+            Some(i) => matched.entry(i).or_default().push(f),
+            None => report.active.push(f.clone()),
+        }
+    }
+    for (i, entry) in allow.iter().enumerate() {
+        match matched.get(&i) {
+            None => report.unused.push(entry.clone()),
+            Some(hits) if hits.len() > entry.max => {
+                report.over_budget.push(format!(
+                    "{} in {}: {} findings exceed the allowed max of {}",
+                    entry.rule,
+                    entry.file,
+                    hits.len(),
+                    entry.max
+                ));
+                report.active.extend(hits.iter().map(|f| (*f).clone()));
+            }
+            Some(hits) => report.suppressed += hits.len(),
+        }
+    }
+    report
+}
+
+// ------------------------------------------------------------------ json
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Machine-readable report (rule catalog + active findings + allowlist
+/// accounting). Hand-rolled writer — same no-new-deps rule as the
+/// config parser.
+pub fn json_report(report: &AllowReport) -> String {
+    let mut out = String::from("{\n  \"rules\": {");
+    for (i, (id, desc)) in RULES.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\n    \"{id}\": \"{}\"", json_escape(desc)));
+    }
+    out.push_str("\n  },\n  \"findings\": [");
+    for (i, f) in report.active.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\"}}",
+            f.rule,
+            json_escape(&f.file),
+            f.line,
+            json_escape(&f.message)
+        ));
+    }
+    out.push_str("\n  ],");
+    out.push_str(&format!("\n  \"suppressed\": {},", report.suppressed));
+    out.push_str("\n  \"unused_allow_entries\": [");
+    for (i, e) in report.unused.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"rule\": \"{}\", \"file\": \"{}\"}}",
+            json_escape(&e.rule),
+            json_escape(&e.file)
+        ));
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allowlist_round_trip() {
+        let text = r#"
+# documented exceptions
+[[allow]]
+rule = "PL001"
+file = "coordinator/server.rs"
+max = 2
+reason = "connection threads are I/O-bound, not compute"
+"#;
+        let entries = parse_allowlist(text).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].rule, "PL001");
+        assert_eq!(entries[0].max, 2);
+    }
+
+    #[test]
+    fn allowlist_requires_reason_and_known_rule() {
+        assert!(parse_allowlist("[[allow]]\nrule = \"PL001\"\nfile = \"a.rs\"").is_err());
+        assert!(parse_allowlist(
+            "[[allow]]\nrule = \"PL999\"\nfile = \"a.rs\"\nreason = \"x\""
+        )
+        .is_err());
+        assert!(parse_allowlist(
+            "[[allow]]\nrule = \"PL001\"\nfile = \"a.rs\"\nreason = \"  \""
+        )
+        .is_err());
+        assert!(parse_allowlist("rule = \"PL001\"").is_err(), "key outside a block");
+    }
+
+    #[test]
+    fn allowlist_budgets_and_staleness() {
+        let findings = vec![
+            Finding { rule: "PL001", file: "a.rs".into(), line: 1, message: "x".into() },
+            Finding { rule: "PL001", file: "a.rs".into(), line: 2, message: "x".into() },
+        ];
+        let within = vec![AllowEntry {
+            rule: "PL001".into(),
+            file: "a.rs".into(),
+            max: 2,
+            reason: "ok".into(),
+        }];
+        let r = apply_allowlist(&findings, &within);
+        assert!(r.active.is_empty());
+        assert_eq!(r.suppressed, 2);
+
+        let over = vec![AllowEntry {
+            rule: "PL001".into(),
+            file: "a.rs".into(),
+            max: 1,
+            reason: "ok".into(),
+        }];
+        let r = apply_allowlist(&findings, &over);
+        assert_eq!(r.active.len(), 2, "an over-budget entry suppresses nothing");
+        assert_eq!(r.over_budget.len(), 1);
+
+        let stale = vec![AllowEntry {
+            rule: "PL002".into(),
+            file: "b.rs".into(),
+            max: 1,
+            reason: "gone".into(),
+        }];
+        let r = apply_allowlist(&findings, &stale);
+        assert_eq!(r.unused.len(), 1, "stale entries are reported");
+        assert_eq!(r.active.len(), 2);
+    }
+
+    #[test]
+    fn parse_errors_carry_the_file() {
+        let err = check_source("engine/broken.rs", "fn oops( {").unwrap_err();
+        assert!(err.contains("engine/broken.rs"), "got: {err}");
+    }
+
+    #[test]
+    fn json_report_is_parseable_shape() {
+        let report = AllowReport {
+            active: vec![Finding {
+                rule: "PL002",
+                file: "x.rs".into(),
+                line: 3,
+                message: "quote \" and\nnewline".into(),
+            }],
+            suppressed: 4,
+            unused: vec![],
+            over_budget: vec![],
+        };
+        let j = json_report(&report);
+        assert!(j.contains("\"PL002\""));
+        assert!(j.contains("\\\" and\\nnewline"));
+        assert!(j.contains("\"suppressed\": 4"));
+    }
+}

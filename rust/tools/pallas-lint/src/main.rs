@@ -1,0 +1,118 @@
+//! `pallas-lint` CLI.
+//!
+//! ```text
+//! pallas-lint [--allow lint-allow.toml] [--json report.json] SRC_ROOT
+//! ```
+//!
+//! Prints findings as `file:line RULE message`, one per line, plus an
+//! allowlist accounting summary. Optionally writes a JSON report.
+//!
+//! Exit codes:
+//! - `0` — no active findings, no stale allowlist entries
+//! - `1` — findings survive the allowlist, an entry is over its `max`
+//!   budget, or an entry matches nothing (stale)
+//! - `2` — usage, I/O, config-parse, or Rust-parse error
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use pallas_lint::{apply_allowlist, check_tree, json_report, parse_allowlist, AllowEntry};
+
+fn usage() -> ExitCode {
+    eprintln!("usage: pallas-lint [--allow FILE] [--json FILE] SRC_ROOT");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let mut allow_path: Option<PathBuf> = None;
+    let mut json_path: Option<PathBuf> = None;
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--allow" => match args.next() {
+                Some(v) => allow_path = Some(PathBuf::from(v)),
+                None => return usage(),
+            },
+            "--json" => match args.next() {
+                Some(v) => json_path = Some(PathBuf::from(v)),
+                None => return usage(),
+            },
+            "--help" | "-h" => {
+                println!("pallas-lint: dnc_serve concurrency/budget contract checker");
+                for (id, desc) in pallas_lint::RULES {
+                    println!("  {id}  {desc}");
+                }
+                println!("\nusage: pallas-lint [--allow FILE] [--json FILE] SRC_ROOT");
+                return ExitCode::SUCCESS;
+            }
+            _ if root.is_none() && !arg.starts_with('-') => root = Some(PathBuf::from(arg)),
+            _ => return usage(),
+        }
+    }
+    let Some(root) = root else { return usage() };
+
+    let findings = match check_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let allow: Vec<AllowEntry> = match &allow_path {
+        None => Vec::new(),
+        Some(path) => {
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("pallas-lint: {}: {e}", path.display());
+                    return ExitCode::from(2);
+                }
+            };
+            match parse_allowlist(&text) {
+                Ok(a) => a,
+                Err(e) => {
+                    eprintln!("pallas-lint: {}: {e}", path.display());
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    };
+
+    let report = apply_allowlist(&findings, &allow);
+
+    for f in &report.active {
+        println!("{f}");
+    }
+    for note in &report.over_budget {
+        println!("over-budget allowlist entry: {note}");
+    }
+    for e in &report.unused {
+        println!(
+            "stale allowlist entry: {} in {} matches nothing — delete it",
+            e.rule, e.file
+        );
+    }
+
+    if let Some(path) = &json_path {
+        if let Err(e) = std::fs::write(path, json_report(&report)) {
+            eprintln!("pallas-lint: writing {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+
+    let clean = report.active.is_empty() && report.unused.is_empty();
+    eprintln!(
+        "pallas-lint: {} active finding(s), {} suppressed by allowlist, {} stale entr{}",
+        report.active.len(),
+        report.suppressed,
+        report.unused.len(),
+        if report.unused.len() == 1 { "y" } else { "ies" },
+    );
+    if clean {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

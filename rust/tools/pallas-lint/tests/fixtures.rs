@@ -1,0 +1,153 @@
+//! Pins every rule's behaviour against the fixture corpus: each rule
+//! has a must-fire and a must-not-fire case, and the path-scoped rules
+//! additionally prove their scoping by re-checking the same source
+//! under an exempt virtual path.
+
+use pallas_lint::{check_source, Finding};
+
+fn check(virtual_path: &str, src: &str) -> Vec<Finding> {
+    check_source(virtual_path, src).expect("fixture must parse")
+}
+
+fn rules(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ------------------------------------------------------------------ PL001
+
+#[test]
+fn pl001_fires_on_both_spawn_forms_outside_runtime() {
+    let f = check("coordinator/evil.rs", include_str!("../fixtures/pl001_fire.rs"));
+    assert_eq!(rules(&f), vec!["PL001", "PL001"], "findings: {f:#?}");
+    // one per spawn form, on the right lines
+    assert_eq!(f[0].line, 7, "std::thread::spawn call");
+    assert_eq!(f[1].line, 10, "Builder .spawn call");
+}
+
+#[test]
+fn pl001_exempts_runtime_and_the_scheduler() {
+    let src = include_str!("../fixtures/pl001_fire.rs");
+    assert!(check("runtime/evil.rs", src).is_empty(), "runtime/ may spawn");
+    assert!(check("runtime/pool.rs", src).is_empty());
+    assert!(check("engine/sched.rs", src).is_empty(), "the shards may spawn");
+}
+
+#[test]
+fn pl001_ignores_domain_spawn_methods_and_test_threads() {
+    let f = check("coordinator/ok.rs", include_str!("../fixtures/pl001_clean.rs"));
+    assert!(f.is_empty(), "findings: {f:#?}");
+}
+
+// ------------------------------------------------------------------ PL002
+
+#[test]
+fn pl002_fires_on_guard_unwrap_and_expect() {
+    let f = check("engine/anywhere.rs", include_str!("../fixtures/pl002_fire.rs"));
+    assert_eq!(rules(&f), vec!["PL002", "PL002", "PL002"], "findings: {f:#?}");
+    assert!(f[0].message.contains("lock_recover"));
+    assert!(f[1].message.contains("read_recover"));
+    assert!(f[2].message.contains("write_recover"));
+}
+
+#[test]
+fn pl002_applies_in_every_file() {
+    // No path exemption: even the scheduler may not unwrap guards.
+    let f = check("engine/sched.rs", include_str!("../fixtures/pl002_fire.rs"));
+    assert_eq!(f.len(), 3);
+}
+
+#[test]
+fn pl002_ignores_recovering_helpers_io_reads_and_tests() {
+    let f = check("util/ok.rs", include_str!("../fixtures/pl002_clean.rs"));
+    assert!(f.is_empty(), "findings: {f:#?}");
+}
+
+// ------------------------------------------------------------------ PL003
+
+#[test]
+fn pl003_fires_on_raw_instant_in_hot_path_files() {
+    let src = include_str!("../fixtures/pl003_fire.rs");
+    let sched = check("engine/sched.rs", src);
+    assert_eq!(rules(&sched), vec!["PL003", "PL003"], "findings: {sched:#?}");
+    let pool = check("runtime/pool.rs", src);
+    assert_eq!(pool.len(), 2, "pool.rs is in scope too");
+}
+
+#[test]
+fn pl003_only_scopes_the_hot_path_files() {
+    let src = include_str!("../fixtures/pl003_fire.rs");
+    assert!(check("nlp/serving.rs", src).is_empty(), "serving edge reads real time");
+    assert!(check("engine/profile.rs", src).is_empty());
+}
+
+#[test]
+fn pl003_accepts_the_clock_shim_and_test_time() {
+    let f = check("engine/sched.rs", include_str!("../fixtures/pl003_clean.rs"));
+    assert!(f.is_empty(), "findings: {f:#?}");
+}
+
+// ------------------------------------------------------------------ PL004
+
+#[test]
+fn pl004_fires_on_mid_stack_minting() {
+    let f = check("coordinator/batcher.rs", include_str!("../fixtures/pl004_fire.rs"));
+    assert_eq!(rules(&f), vec!["PL004", "PL004", "PL004"], "findings: {f:#?}");
+    assert!(f[0].message.contains("Budget::new"));
+    assert!(f[1].message.contains("CancelToken::new"));
+    assert!(f[2].message.contains("RequestCtx::default"));
+}
+
+#[test]
+fn pl004_exempts_defining_and_ingress_modules() {
+    let src = include_str!("../fixtures/pl004_fire.rs");
+    for path in [
+        "engine/ctx.rs",
+        "engine/budget.rs",
+        "runtime/cancel.rs",
+        "coordinator/router.rs",
+        "main.rs",
+        "bench/gate.rs",
+    ] {
+        assert!(check(path, src).is_empty(), "{path} may mint request state");
+    }
+}
+
+#[test]
+fn pl004_ignores_ctx_threading_and_test_mints() {
+    let f = check("coordinator/batcher.rs", include_str!("../fixtures/pl004_clean.rs"));
+    assert!(f.is_empty(), "findings: {f:#?}");
+}
+
+// ------------------------------------------------------------------ PL005
+
+#[test]
+fn pl005_fires_on_shim_names_even_in_tests() {
+    let f = check("engine/session.rs", include_str!("../fixtures/pl005_fire.rs"));
+    assert_eq!(
+        rules(&f),
+        vec!["PL005", "PL005", "PL005", "PL005"],
+        "impl JobPart builder + definition + call site + test-mod use; findings: {f:#?}"
+    );
+    assert!(
+        f.iter().any(|x| x.message.contains("JobPart::with_cancel")),
+        "the structural JobPart check must fire"
+    );
+}
+
+#[test]
+fn pl005_spares_the_live_builder_names_and_prose() {
+    let f = check("engine/part.rs", include_str!("../fixtures/pl005_clean.rs"));
+    assert!(f.is_empty(), "findings: {f:#?}");
+}
+
+// --------------------------------------------------------------- ordering
+
+#[test]
+fn findings_carry_one_indexed_lines_and_render_grep_style() {
+    let f = check("coordinator/evil.rs", include_str!("../fixtures/pl001_fire.rs"));
+    let rendered = f[0].to_string();
+    assert!(
+        rendered.starts_with("coordinator/evil.rs:7 PL001 "),
+        "got: {rendered}"
+    );
+}

@@ -1,0 +1,74 @@
+//! Runs pallas-lint against the real `rust/src/` tree as part of
+//! `cargo test`, with the checked-in allowlist applied. This is the
+//! same check CI's `lint-invariants` job runs via the binary — keeping
+//! it in the test suite means a plain `cargo test` in `rust/` cannot
+//! pass while the tree violates a concurrency contract, and that the
+//! allowlist cannot rot (a stale entry fails this test too).
+
+use std::path::Path;
+
+use pallas_lint::{apply_allowlist, check_tree, parse_allowlist};
+
+fn crate_root() -> &'static Path {
+    // tools/pallas-lint -> tools -> rust
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .and_then(Path::parent)
+        .expect("pallas-lint lives two levels under the rust crate root")
+}
+
+#[test]
+fn real_source_tree_is_lint_clean_under_the_checked_in_allowlist() {
+    let src = crate_root().join("src");
+    let allow_path = crate_root().join("lint-allow.toml");
+
+    let findings = check_tree(&src).expect("rust/src must parse");
+    let allow_text =
+        std::fs::read_to_string(&allow_path).expect("rust/lint-allow.toml must exist");
+    let allow = parse_allowlist(&allow_text).expect("lint-allow.toml must parse");
+
+    let report = apply_allowlist(&findings, &allow);
+
+    assert!(
+        report.over_budget.is_empty(),
+        "allowlist entries over budget:\n{}",
+        report.over_budget.join("\n")
+    );
+    assert!(
+        report.active.is_empty(),
+        "invariant violations in rust/src (fix the code or justify an \
+         allowlist entry in rust/lint-allow.toml):\n{}",
+        report
+            .active
+            .iter()
+            .map(ToString::to_string)
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(
+        report.unused.is_empty(),
+        "stale lint-allow.toml entries (delete them):\n{}",
+        report
+            .unused
+            .iter()
+            .map(|e| format!("{} in {} ({})", e.rule, e.file, e.reason))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn the_allowlist_suppresses_something() {
+    // Guards against the allowlist and tree drifting apart silently in
+    // the other direction: if every entry stopped matching at once the
+    // `unused` check above would catch it, but this pins the intent —
+    // the tree currently *needs* exceptions (ingress spawns, default
+    // kill-switch tokens), and `suppressed` counts them.
+    let src = crate_root().join("src");
+    let allow_text =
+        std::fs::read_to_string(crate_root().join("lint-allow.toml")).unwrap();
+    let findings = check_tree(&src).expect("rust/src must parse");
+    let allow = parse_allowlist(&allow_text).expect("lint-allow.toml must parse");
+    let report = apply_allowlist(&findings, &allow);
+    assert!(report.suppressed > 0, "expected the justified exceptions to match");
+}
