@@ -4,7 +4,8 @@
 //! paper's three policies, on both workload families @16 cores.
 
 use dnc_serve::bench::table::{ms, Table};
-use dnc_serve::engine::allocator::{allocate, AllocPolicy};
+use dnc_serve::engine::allocator::{allocate, AllocPolicy, PartWeights};
+use dnc_serve::engine::ledger::CoreMap;
 use dnc_serve::engine::optimizer::{allocate_optimal, OptPart};
 use dnc_serve::simcpu::calib;
 use dnc_serve::simcpu::des::{simulate, SimPart};
@@ -17,7 +18,9 @@ fn run_case(t1s: &[f64], profile: dnc_serve::simcpu::ScalProfile) -> Vec<(String
     let sizes: Vec<usize> = t1s.iter().map(|&t| (t * 10.0) as usize).collect();
     let mut rows = Vec::new();
     for policy in [AllocPolicy::PrunDef, AllocPolicy::PrunOne, AllocPolicy::PrunEq] {
-        let alloc = allocate(&sizes, C, policy);
+        let alloc =
+            allocate(PartWeights::Sizes(&sizes), &CoreMap::homogeneous(C), policy)
+                .into_threads();
         rows.push((
             policy.name().to_string(),
             simulate(&parts, &alloc, C).makespan_ms,

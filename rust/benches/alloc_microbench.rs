@@ -6,7 +6,8 @@
 use std::hint::black_box;
 use std::time::Instant;
 
-use dnc_serve::engine::allocator::{allocate, AllocPolicy};
+use dnc_serve::engine::allocator::{allocate, AllocPolicy, PartWeights};
+use dnc_serve::engine::ledger::CoreMap;
 use dnc_serve::simcpu::{simulate, ScalProfile, SimPart};
 use dnc_serve::util::prng::Rng;
 
@@ -27,16 +28,21 @@ fn main() {
     println!("# allocator + DES microbenchmarks\n");
     let mut rng = Rng::new(42);
 
+    let map = CoreMap::homogeneous(16);
     for &k in &[2usize, 8, 64] {
         let sizes: Vec<usize> = (0..k).map(|_| rng.usize_in(16, 512)).collect();
         bench(&format!("allocate prun-def k={k} C=16"), 2_000_000 / k as u64, || {
-            black_box(allocate(black_box(&sizes), 16, AllocPolicy::PrunDef));
+            black_box(allocate(
+                PartWeights::Sizes(black_box(&sizes)),
+                &map,
+                AllocPolicy::PrunDef,
+            ));
         });
     }
     let sizes: Vec<usize> = (0..8).map(|_| rng.usize_in(16, 512)).collect();
     for policy in [AllocPolicy::PrunOne, AllocPolicy::PrunEq] {
         bench(&format!("allocate {} k=8 C=16", policy.name()), 500_000, || {
-            black_box(allocate(black_box(&sizes), 16, policy));
+            black_box(allocate(PartWeights::Sizes(black_box(&sizes)), &map, policy));
         });
     }
 
@@ -45,10 +51,11 @@ fn main() {
         let parts: Vec<SimPart> =
             (0..k).map(|_| SimPart::new(rng.f64_in(1.0, 300.0), prof)).collect();
         let alloc = allocate(
-            &parts.iter().map(|p| p.t1_ms as usize).collect::<Vec<_>>(),
-            16,
+            PartWeights::Sizes(&parts.iter().map(|p| p.t1_ms as usize).collect::<Vec<_>>()),
+            &map,
             AllocPolicy::PrunDef,
-        );
+        )
+        .into_threads();
         bench(&format!("des simulate k={k} C=16"), 200_000 / k as u64, || {
             black_box(simulate(black_box(&parts), &alloc, 16));
         });

@@ -1,0 +1,52 @@
+//! E13: class-blind vs class-aware placement on a heterogeneous core
+//! map — the fig-style demo of the typed ledger. The machine is
+//! [`HETERO_SPEC`] (4 full-speed cores + 12 at 0.5x, the big.LITTLE
+//! shape of "Deep Learning Inference on Heterogeneous Mobile
+//! Processors"); each round submits three 4-thread hog jobs and one
+//! 4-thread latency-sensitive job back to back.
+//!
+//! Class-blind placement (plain `RequestCtx`, affinity `Any`) lets the
+//! first hog squat the fast quartet, so the latency job runs on slow
+//! silicon and its p95 roughly doubles — *heterogeneity inversion*.
+//! Class-aware placement expresses intent through the same ctx plumbing
+//! the serving edge uses (hogs Low -> prefer Slow, latency job High ->
+//! prefer Fast) and restores it. The acceptance bar — class-aware at
+//! least 10% better p95 — is asserted here and enforced per-PR by the
+//! `bench-gate` binary over the same scenario pair
+//! (`hetero_inversion` / `hetero_inversion_blind`).
+//!
+//! Runs on the scaling-aware simulated runner (no PJRT artifacts
+//! needed), so it exercises the real dispatcher on any machine.
+
+use dnc_serve::bench::gate::{hetero_bar, hetero_inversion_scenario, ScenarioResult, HETERO_SPEC};
+
+fn print_row(r: &ScenarioResult) {
+    println!(
+        "{:<24} {:>6} {:>14.1} {:>9.2} {:>9.2}",
+        r.name, r.jobs, r.throughput_jobs_s, r.p50_ms, r.p95_ms
+    );
+}
+
+fn main() {
+    const JOBS: usize = 60;
+    println!("# hetero_placement — cores {HETERO_SPEC}, 3 hogs + 1 latency job, {JOBS} jobs each");
+    println!(
+        "{:<24} {:>6} {:>14} {:>9} {:>9}",
+        "variant", "jobs", "throughput/s", "p50 ms", "p95 ms"
+    );
+    let blind = hetero_inversion_scenario(false, JOBS);
+    print_row(&blind);
+    let aware = hetero_inversion_scenario(true, JOBS);
+    print_row(&aware);
+
+    let gain = 100.0 * (1.0 - aware.p95_ms / blind.p95_ms);
+    println!(
+        "\nclass-aware placement: {gain:.0}% better p95 ({:.2} -> {:.2} ms), {:.1}x throughput",
+        blind.p95_ms,
+        aware.p95_ms,
+        aware.throughput_jobs_s / blind.throughput_jobs_s
+    );
+    if let Some(msg) = hetero_bar(&aware, &blind) {
+        panic!("{msg}");
+    }
+}

@@ -73,7 +73,7 @@ fn main() {
             worker: usize,
             _model: &str,
             _inputs: Vec<dnc_serve::runtime::Tensor>,
-            _threads: usize,
+            _grant: dnc_serve::engine::CoreGrant,
             _cancel: dnc_serve::runtime::CancelToken,
             reply: ReplyFn,
         ) {

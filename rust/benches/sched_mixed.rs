@@ -12,7 +12,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use dnc_serve::engine::{JobPart, PrunRequest, RequestCtx, SchedConfig, Session};
+use dnc_serve::engine::{CoreMap, JobPart, PrunRequest, RequestCtx, SchedConfig, Session};
 use dnc_serve::nlp::Tokenizer;
 use dnc_serve::runtime::{artifacts_dir, Manifest, Tensor};
 use dnc_serve::util::stats::mean;
@@ -31,7 +31,7 @@ fn main() {
     }
     let manifest = Arc::new(Manifest::load(&dir).unwrap());
     let cfg = SchedConfig {
-        cores: 16,
+        cores: CoreMap::homogeneous(16),
         aging: Duration::from_millis(50),
         backfill: true,
         ..Default::default()

@@ -140,6 +140,30 @@ fn main() {
         }
     }
 
+    // Third self-relative bar: on the heterogeneous core map (fast +
+    // half-speed slow classes), class-aware placement must beat
+    // class-blind placement by >= 10% p95 — otherwise the core ledger's
+    // classes are decorative. The bar itself lives in the gate
+    // (`gate::hetero_bar`) so its threshold is unit-tested.
+    if let (Some(aw), Some(bl)) =
+        (find("hetero_inversion"), find("hetero_inversion_blind"))
+    {
+        match gate::hetero_bar(aw, bl) {
+            Some(msg) => {
+                eprintln!("{}: {msg}", if record { "WARN" } else { "FAIL" });
+                if !record {
+                    exit(1);
+                }
+            }
+            None => println!(
+                "class-aware placement beats blind by {:.0}% p95 ({:.2} -> {:.2} ms)",
+                100.0 * (1.0 - aw.p95_ms / bl.p95_ms),
+                bl.p95_ms,
+                aw.p95_ms
+            ),
+        }
+    }
+
     if record {
         // Preserve the hand-set per-scenario tolerance_pct overrides
         // from the previous baseline — re-recording refreshes the

@@ -18,8 +18,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::engine::{
-    allocate_weighted, weights, AdaptiveConfig, AdaptivePolicy, AllocPolicy, Budget,
-    PartTask, Priority, ProfileStore, RequestCtx, SchedConfig, Scheduler, TaskRunner,
+    allocate, AdaptiveConfig, AdaptivePolicy, AllocPolicy, Budget, CoreGrant, CoreMap,
+    PartTask, PartWeights, Priority, ProfileStore, RequestCtx, SchedConfig, Scheduler,
+    TaskRunner,
 };
 use crate::runtime::{CancelToken, ExecResult, ReplyFn, TaskCancelled, Tensor};
 use crate::simcpu::ScalProfile;
@@ -36,9 +37,11 @@ pub const SIM_PROFILE: ScalProfile = ScalProfile::new(0.05, 0.2);
 pub const SIM_CORES: usize = 16;
 
 /// Scaling-aware mock runner: a model named `"sim:<base_ms>"` executes
-/// for `SIM_PROFILE.time_ms(base_ms, threads)` wall-clock milliseconds
-/// (deadline-based sleep, so slice jitter does not accumulate), polling
-/// its cancel token about once per millisecond.
+/// for `SIM_PROFILE.time_ms_at(base_ms, threads, speed)` wall-clock
+/// milliseconds — the granted core class's relative speed stretches the
+/// whole cost, so slow cores are visibly slow — as a deadline-based
+/// sleep (slice jitter does not accumulate), polling its cancel token
+/// about once per millisecond.
 pub struct SimRunner {
     pub workers: usize,
 }
@@ -65,11 +68,13 @@ impl TaskRunner for SimRunner {
         worker: usize,
         model: &str,
         _inputs: Vec<Tensor>,
-        threads: usize,
+        grant: CoreGrant,
         cancel: CancelToken,
         reply: ReplyFn,
     ) {
-        let ms = SIM_PROFILE.time_ms(sim_base_ms(model), threads.max(1)).max(0.0);
+        let ms = SIM_PROFILE
+            .time_ms_at(sim_base_ms(model), grant.threads.max(1), grant.speed)
+            .max(0.0);
         std::thread::spawn(move || {
             let deadline = Instant::now() + Duration::from_secs_f64(ms / 1e3);
             loop {
@@ -154,11 +159,31 @@ fn start_sched(deadline_running: Option<Duration>) -> Arc<Scheduler> {
 fn start_sched_sharded(shards: usize, deadline_running: Option<Duration>) -> Arc<Scheduler> {
     Scheduler::start(
         SchedConfig {
-            cores: SIM_CORES,
+            cores: CoreMap::homogeneous(SIM_CORES),
             shards,
             aging: Duration::from_millis(50),
             backfill: true,
             deadline_running,
+            ..SchedConfig::default()
+        },
+        Arc::new(SimRunner { workers: 4 }),
+    )
+}
+
+/// Core map for the heterogeneity scenarios: 4 full-speed cores plus 12
+/// half-speed ones — the big.LITTLE-style machine where class-blind
+/// placement leaves latency-sensitive work on slow silicon.
+pub const HETERO_SPEC: &str = "fast=4,slow=12@0.5";
+
+fn start_sched_hetero() -> Arc<Scheduler> {
+    Scheduler::start(
+        SchedConfig {
+            cores: CoreMap::parse(HETERO_SPEC).expect("valid hetero spec"),
+            shards: 1,
+            aging: Duration::from_millis(50),
+            backfill: true,
+            deadline_running: None,
+            ..SchedConfig::default()
         },
         Arc::new(SimRunner { workers: 4 }),
     )
@@ -216,9 +241,19 @@ pub fn longshort_scenario(adaptive: bool, jobs: usize) -> ScenarioResult {
             .zip(sizes.iter())
             .map(|(m, &s)| (m.as_str(), s))
             .collect();
-        allocate_weighted(&policy.part_weights(&keyed), SIM_CORES, AllocPolicy::PrunDef)
+        allocate(
+            PartWeights::Measured(&policy.part_weights(&keyed)),
+            &CoreMap::homogeneous(SIM_CORES),
+            AllocPolicy::PrunDef,
+        )
+        .into_threads()
     } else {
-        allocate_weighted(&weights(&sizes), SIM_CORES, AllocPolicy::PrunDef)
+        allocate(
+            PartWeights::Sizes(&sizes),
+            &CoreMap::homogeneous(SIM_CORES),
+            AllocPolicy::PrunDef,
+        )
+        .into_threads()
     };
 
     let t0 = Instant::now();
@@ -235,7 +270,12 @@ pub fn sched_smoke_scenario(jobs_per_submitter: usize) -> ScenarioResult {
     let sched = start_sched(None);
     let parts = HONEST_MIX;
     let sizes: Vec<usize> = parts.iter().map(|p| p.size).collect();
-    let alloc = allocate_weighted(&weights(&sizes), SIM_CORES, AllocPolicy::PrunDef);
+    let alloc = allocate(
+        PartWeights::Sizes(&sizes),
+        &CoreMap::homogeneous(SIM_CORES),
+        AllocPolicy::PrunDef,
+    )
+    .into_threads();
 
     let t0 = Instant::now();
     let mut joins = Vec::new();
@@ -328,6 +368,75 @@ pub fn priority_inversion_scenario(jobs: usize) -> ScenarioResult {
     ScenarioResult::from_walls("priority_inversion", &walls, t0.elapsed().as_secs_f64())
 }
 
+/// The heterogeneity-inversion scenario (fig-style demo of the core
+/// ledger's classes): on the [`HETERO_SPEC`] machine — 4 fast cores, 12
+/// half-speed slow ones — three 4-thread hog jobs and then one
+/// 4-thread latency-sensitive job arrive back to back.
+///
+/// `class_aware = false` submits everything with a plain
+/// [`RequestCtx`], so every task's affinity is `Any` and placement is
+/// class-blind: the first hog grabs the fast quartet and the latency
+/// job lands on slow silicon, where its whole cost stretches by the
+/// class's 0.5 relative speed — *heterogeneity inversion*, the
+/// throughput-optimal-but-latency-hostile outcome.
+///
+/// `class_aware = true` expresses the deployment intent through the
+/// same ctx plumbing the serving edge uses: hogs are
+/// [`Priority::Low`] (derived affinity `Prefer(Slow)`), the latency job
+/// [`Priority::High`] (derived `Prefer(Fast)`). The hogs soak the slow
+/// pool, the fast quartet stays free for the job that feels every
+/// millisecond, and its p95 roughly halves. The gate's self-relative
+/// bar ([`hetero_bar`]) pins that gap at >= 10%.
+pub fn hetero_inversion_scenario(class_aware: bool, jobs: usize) -> ScenarioResult {
+    let sched = start_sched_hetero();
+    let (hog_ctx, latency_ctx) = if class_aware {
+        (
+            RequestCtx::new().with_priority(Priority::Low),
+            RequestCtx::new().with_priority(Priority::High),
+        )
+    } else {
+        (RequestCtx::new(), RequestCtx::new())
+    };
+    let t0 = Instant::now();
+    let mut walls = Vec::with_capacity(jobs);
+    for _ in 0..jobs {
+        let tj = Instant::now();
+        let hogs: Vec<_> = (0..3)
+            .map(|_| {
+                sched.submit(
+                    PartTask::new(sim_model(60.0), Vec::new(), 4).with_ctx(&hog_ctx),
+                )
+            })
+            .collect();
+        let latency = sched
+            .submit(PartTask::new(sim_model(10.0), Vec::new(), 4).with_ctx(&latency_ctx));
+        latency.wait().expect("latency-sensitive job must complete");
+        walls.push(tj.elapsed().as_secs_f64() * 1e3);
+        // drain the hogs so iterations don't bleed into each other
+        for h in hogs {
+            h.wait().expect("hog job must complete");
+        }
+    }
+    let name = if class_aware { "hetero_inversion" } else { "hetero_inversion_blind" };
+    ScenarioResult::from_walls(name, &walls, t0.elapsed().as_secs_f64())
+}
+
+/// Self-relative acceptance bar for the heterogeneity demo: class-aware
+/// placement must beat class-blind placement by >= 10% p95 on the same
+/// workload and the same machine. Returns the failure line, or `None`
+/// when the bar holds.
+pub fn hetero_bar(aware: &ScenarioResult, blind: &ScenarioResult) -> Option<String> {
+    if aware.p95_ms > 0.9 * blind.p95_ms {
+        Some(format!(
+            "hetero_inversion: class-aware p95 {:.2} ms not >=10% better than \
+             class-blind {:.2} ms",
+            aware.p95_ms, blind.p95_ms
+        ))
+    } else {
+        None
+    }
+}
+
 /// The sharded-dispatcher scenario: a many-producer *open-loop* submit
 /// flood. Four producer threads each push `per_producer` one-core 1ms
 /// jobs into the scheduler as fast as `submit` returns — no pacing, no
@@ -398,6 +507,8 @@ pub fn run_all(quick: bool) -> Vec<ScenarioResult> {
         longshort_scenario(true, jobs),
         cancel_storm_scenario(jobs),
         priority_inversion_scenario(jobs),
+        hetero_inversion_scenario(true, jobs),
+        hetero_inversion_scenario(false, jobs),
         // 4 producers x (jobs * 5) tasks: 400 submits quick, 1200 full.
         submit_storm_scenario(2, jobs * 5),
         submit_storm_scenario(1, jobs * 5),
@@ -620,8 +731,40 @@ mod tests {
     fn longshort_static_starves_the_heavy_part() {
         // the declared sizes hand the heavy part a single core
         let sizes: Vec<usize> = LONGSHORT.iter().map(|p| p.size).collect();
-        let alloc = allocate_weighted(&weights(&sizes), SIM_CORES, AllocPolicy::PrunDef);
+        let alloc = allocate(
+            PartWeights::Sizes(&sizes),
+            &CoreMap::homogeneous(SIM_CORES),
+            AllocPolicy::PrunDef,
+        )
+        .into_threads();
         assert_eq!(alloc[0], 1, "{alloc:?}");
         assert_eq!(alloc.iter().sum::<usize>(), SIM_CORES);
+    }
+
+    #[test]
+    fn hetero_class_awareness_beats_blind_placement() {
+        // Class-blind: a hog grabs the fast quartet, the latency job
+        // runs on half-speed cores (~7ms). Class-aware: hogs soak the
+        // slow pool, the latency job keeps the fast cores (~3.5ms).
+        let aware = hetero_inversion_scenario(true, 4);
+        let blind = hetero_inversion_scenario(false, 4);
+        assert_eq!(aware.name, "hetero_inversion");
+        assert_eq!(blind.name, "hetero_inversion_blind");
+        assert!(
+            hetero_bar(&aware, &blind).is_none(),
+            "inversion not demonstrated: aware p95 {:.2}ms vs blind p95 {:.2}ms",
+            aware.p95_ms,
+            blind.p95_ms
+        );
+    }
+
+    #[test]
+    fn hetero_bar_flags_a_closed_gap() {
+        let aware = result("hetero_inversion", 30.0, 7.5);
+        let blind = result("hetero_inversion_blind", 30.0, 8.0);
+        let fail = hetero_bar(&aware, &blind).expect("bar must flag a <10% gap");
+        assert!(fail.contains("p95"), "{fail}");
+        let aware = result("hetero_inversion", 30.0, 4.5);
+        assert!(hetero_bar(&aware, &blind).is_none());
     }
 }

@@ -8,14 +8,16 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::engine::AllocPolicy;
+use crate::engine::{AllocPolicy, CoreMap};
 use crate::util::args::Args;
 use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct Config {
-    /// virtual core budget C the allocator divides (paper: 16)
-    pub cores: usize,
+    /// the core inventory the allocator divides (paper: 16, one class).
+    /// JSON/CLI accept either a plain count (`16`, homogeneous) or the
+    /// class syntax `fast=4,slow=12` / `fast=4,slow=12@0.5`.
+    pub cores: CoreMap,
     /// real executor threads (PJRT clients); default = machine cores
     pub workers: usize,
     /// default allocation policy for prun
@@ -57,7 +59,7 @@ pub struct Config {
 impl Default for Config {
     fn default() -> Self {
         Config {
-            cores: 16,
+            cores: CoreMap::homogeneous(16),
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             policy: AllocPolicy::PrunDef,
             host: "127.0.0.1".to_string(),
@@ -85,7 +87,13 @@ impl Config {
 
     fn apply_json(&mut self, v: &Json) -> Result<()> {
         if let Some(x) = v.get("cores") {
-            self.cores = x.as_usize().context("cores")?;
+            // number = homogeneous count; string = class syntax
+            let spec = match x.as_usize() {
+                Some(n) => n.to_string(),
+                None => x.as_str().context("cores")?.to_string(),
+            };
+            self.cores = CoreMap::parse(&spec)
+                .map_err(|e| anyhow::anyhow!("cores: {e}"))?;
         }
         if let Some(x) = v.get("workers") {
             self.workers = x.as_usize().context("workers")?;
@@ -140,7 +148,10 @@ impl Config {
             let file = Config::from_file(Path::new(path))?;
             *self = file;
         }
-        self.cores = args.usize_or("cores", self.cores);
+        if let Some(c) = args.get("cores") {
+            self.cores = CoreMap::parse(c)
+                .map_err(|e| anyhow::anyhow!("--cores {c}: {e}"))?;
+        }
         self.workers = args.usize_or("workers", self.workers);
         if let Some(p) = args.get("policy") {
             self.policy =
@@ -179,6 +190,7 @@ impl Config {
             backfill: true,
             deadline_running: (self.deadline_running_ms > 0)
                 .then(|| std::time::Duration::from_millis(self.deadline_running_ms)),
+            ..Default::default()
         }
     }
 }
@@ -194,7 +206,8 @@ mod tests {
     #[test]
     fn defaults_sane() {
         let c = Config::default();
-        assert_eq!(c.cores, 16);
+        assert_eq!(c.cores, CoreMap::homogeneous(16));
+        assert!(c.cores.is_homogeneous(), "default stays class-free");
         assert!(c.workers >= 1);
         assert_eq!(c.policy, AllocPolicy::PrunDef);
         assert_eq!(c.aging_ms, 50);
@@ -205,7 +218,7 @@ mod tests {
         assert_eq!(c.drain_timeout_ms, 10_000);
         assert_eq!(c.sched_shards, 0);
         let s = c.sched();
-        assert_eq!(s.cores, 16);
+        assert_eq!(s.cores.total(), 16);
         assert_eq!(s.shards, 0, "0 = auto: one shard per 16 ledger cores");
         assert_eq!(s.aging, std::time::Duration::from_millis(50));
         assert!(s.backfill);
@@ -268,7 +281,7 @@ mod tests {
         let p = dir.join("cfg.json");
         std::fs::write(&p, r#"{"cores": 8, "policy": "prun-eq", "port": 9999}"#).unwrap();
         let c = Config::from_file(&p).unwrap();
-        assert_eq!(c.cores, 8);
+        assert_eq!(c.cores, CoreMap::homogeneous(8));
         assert_eq!(c.policy, AllocPolicy::PrunEq);
         assert_eq!(c.port, 9999);
         assert_eq!(c.max_batch, 8); // untouched default
@@ -283,8 +296,32 @@ mod tests {
         let mut c = Config::default();
         c.apply_args(&args(&format!("serve --config {} --cores 4 --policy one", p.display())))
             .unwrap();
-        assert_eq!(c.cores, 4);
+        assert_eq!(c.cores, CoreMap::homogeneous(4));
         assert_eq!(c.policy, AllocPolicy::PrunOne);
+    }
+
+    #[test]
+    fn heterogeneous_cores_from_file_and_cli() {
+        use crate::engine::CoreClass;
+        let dir = std::env::temp_dir().join(format!("dnc_cfg5_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"cores": "fast=4,slow=12@0.5"}"#).unwrap();
+        let c = Config::from_file(&p).unwrap();
+        assert_eq!(c.cores.count(CoreClass::Fast), 4);
+        assert_eq!(c.cores.count(CoreClass::Slow), 12);
+        assert_eq!(c.cores.speed(CoreClass::Slow), 0.5);
+        assert!(!c.cores.is_homogeneous());
+        // CLI wins over the file, and rejects nonsense
+        let mut c = Config::default();
+        c.apply_args(&args(&format!(
+            "serve --config {} --cores fast=2,slow=6",
+            p.display()
+        )))
+        .unwrap();
+        assert_eq!(c.cores, CoreMap::heterogeneous(2, 6));
+        let mut c = Config::default();
+        assert!(c.apply_args(&args("serve --cores turbo=4")).is_err());
     }
 
     #[test]

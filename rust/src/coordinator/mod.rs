@@ -4,7 +4,9 @@
 pub mod batcher;
 pub mod router;
 pub mod server;
+pub mod stats;
 
 pub use batcher::{Batcher, Resolver};
 pub use router::{embed_with_timeout, route, EmbedRequest, ServerState};
+pub use stats::SchedSnapshot;
 pub use server::{Client, Server, StopHandle};

@@ -169,15 +169,12 @@ pub fn route(state: &ServerState, req: &Json) -> Json {
 }
 
 /// Metrics snapshot plus live scheduler observability (`sched.*`):
-/// queue depth (total and per priority), core occupancy, backfill,
-/// deadline-rejection, budget (expired and infeasible) and cancellation
-/// counts, the adaptive feedback loop (`sched.adaptive_resizes`,
-/// `sched.running_deadline_cancelled`, `sched.aging_effective_ms`), the
-/// sharded dispatcher (`sched.shards`, `sched.steals`,
-/// `sched.timer_wakeups`, plus a `sched.shard.<i>.*` block per shard —
-/// each shard's slice capacity, occupancy, queue and counter set) and
-/// the profile store it feeds from (`profile.p95_ms`, worst per-model
-/// windowed p95; `profile.models`).
+/// everything the typed [`SchedSnapshot`](super::stats::SchedSnapshot)
+/// carries — queue depth (total and per priority), core occupancy per
+/// class, backfill, deadline/budget/cancellation counts, the adaptive
+/// feedback loop, the sharded dispatcher (plus a `sched.shard.<i>.*`
+/// block per shard) and the profile store it feeds from. The wire names
+/// are pinned by the golden test in `coordinator::stats`.
 fn stats_json(state: &ServerState) -> Json {
     // gauges: embed requests accumulated but not yet flushed to the
     // scheduler (the batcher's own queue, upstream of sched.queue_depth)
@@ -187,63 +184,10 @@ fn stats_json(state: &ServerState) -> Json {
     state.metrics.set("embed_inflight", state.embed_batcher.in_flight() as u64);
     let mut snap = state.metrics.snapshot_json();
     let session = state.bert.session();
-    let st = session.scheduler().stats();
-    let profiles = session.profiles();
+    let sched =
+        super::stats::SchedSnapshot::capture(session.scheduler(), session.profiles());
     if let Json::Obj(pairs) = &mut snap {
-        let fields: [(&str, f64); 26] = [
-            ("sched.shards", st.shards as f64),
-            ("sched.steals", st.steals as f64),
-            ("sched.timer_wakeups", st.timer_wakeups as f64),
-            ("sched.capacity", st.capacity as f64),
-            ("sched.cores_busy", st.cores_busy as f64),
-            ("sched.cores_idle", st.cores_idle as f64),
-            ("sched.queue_depth", st.queue_depth as f64),
-            ("sched.queue_depth_high", st.queue_depth_high as f64),
-            ("sched.queue_depth_normal", st.queue_depth_normal as f64),
-            ("sched.queue_depth_low", st.queue_depth_low as f64),
-            ("sched.peak_queue_depth", st.peak_queue_depth as f64),
-            ("sched.inflight", st.inflight as f64),
-            ("sched.submitted", st.submitted as f64),
-            ("sched.completed", st.completed as f64),
-            ("sched.failed", st.failed as f64),
-            ("sched.backfills", st.backfills as f64),
-            ("sched.deadline_rejected", st.deadline_rejected as f64),
-            ("sched.budget_expired", st.budget_expired as f64),
-            ("sched.budget_infeasible", st.budget_infeasible as f64),
-            ("sched.cancelled", st.cancelled as f64),
-            ("sched.adaptive_resizes", st.adaptive_resizes as f64),
-            ("sched.running_deadline_cancelled", st.running_deadline_cancelled as f64),
-            (
-                "sched.running_deadline_cancelled_budget",
-                st.running_deadline_cancelled_budget as f64,
-            ),
-            ("sched.aging_effective_ms", st.aging_effective_ms),
-            ("profile.p95_ms", profiles.global_p95_ms().unwrap_or(0.0)),
-            ("profile.models", profiles.len() as f64),
-        ];
-        for (k, v) in fields {
-            pairs.push((k.to_string(), num(v)));
-        }
-        // Per-shard view (`sched.shard.<i>.*`): capacity is the shard's
-        // ledger slice; the counter set mirrors the aggregate so the
-        // per-shard accounting invariant is checkable from the wire.
-        for (i, sh) in session.scheduler().shard_stats().iter().enumerate() {
-            let shard_fields: [(&str, f64); 10] = [
-                ("capacity", sh.capacity as f64),
-                ("cores_busy", sh.cores_busy as f64),
-                ("queue_depth", sh.queue_depth as f64),
-                ("inflight", sh.inflight as f64),
-                ("submitted", sh.submitted as f64),
-                ("completed", sh.completed as f64),
-                ("failed", sh.failed as f64),
-                ("cancelled", sh.cancelled as f64),
-                ("steals", sh.steals as f64),
-                ("timer_wakeups", sh.timer_wakeups as f64),
-            ];
-            for (k, v) in shard_fields {
-                pairs.push((format!("sched.shard.{i}.{k}"), num(v)));
-            }
-        }
+        pairs.extend(sched.gauges());
     }
     snap
 }

@@ -1,0 +1,214 @@
+//! Typed scheduler-stats snapshot for the `stats` op.
+//!
+//! The router used to hand-format every `sched.*` gauge (and the
+//! per-shard `sched.shard.<i>.<field>` block) inline, so the wire names
+//! dashboards scrape lived as string literals scattered through
+//! `stats_json`. This module is now the single authority: a
+//! [`SchedSnapshot`] is captured from the live scheduler + profile
+//! store, and [`SchedSnapshot::gauges`] serializes it through
+//! `util::json` in one place. The golden test at the bottom pins every
+//! wire name — renaming a field here without updating a dashboard
+//! breaks the test first.
+
+use crate::engine::{ProfileStore, SchedStats, Scheduler};
+use crate::util::json::{num, Json};
+
+/// Point-in-time typed view of everything the `stats` op reports about
+/// the scheduler: the aggregate gauges, one [`SchedStats`] per shard,
+/// and the profile store the adaptive loop feeds from.
+pub struct SchedSnapshot {
+    pub aggregate: SchedStats,
+    pub shards: Vec<SchedStats>,
+    /// worst per-model windowed p95 across freshly-profiled models
+    pub profile_p95_ms: f64,
+    /// models ever observed by the profile store
+    pub profile_models: usize,
+}
+
+/// The per-shard gauge set (`sched.shard.<i>.<field>`): the field names
+/// and the typed accessor live together, so the wire contract cannot
+/// drift from the struct. Order is the wire order.
+const SHARD_FIELDS: [(&str, fn(&SchedStats) -> f64); 15] = [
+    ("capacity", |s| s.capacity as f64),
+    ("cores_busy", |s| s.cores_busy as f64),
+    ("queue_depth", |s| s.queue_depth as f64),
+    ("inflight", |s| s.inflight as f64),
+    ("submitted", |s| s.submitted as f64),
+    ("completed", |s| s.completed as f64),
+    ("failed", |s| s.failed as f64),
+    ("cancelled", |s| s.cancelled as f64),
+    ("steals", |s| s.steals as f64),
+    ("timer_wakeups", |s| s.timer_wakeups as f64),
+    // core-class split of the shard's ledger slice (new in 0.5.0,
+    // appended after the legacy block so scrapers by-position survive)
+    ("capacity_fast", |s| s.capacity_fast as f64),
+    ("capacity_slow", |s| s.capacity_slow as f64),
+    ("busy_fast", |s| s.busy_fast as f64),
+    ("busy_slow", |s| s.busy_slow as f64),
+    ("class_degraded", |s| s.class_degraded as f64),
+];
+
+impl SchedSnapshot {
+    /// Capture the current scheduler + profile state.
+    pub fn capture(sched: &Scheduler, profiles: &ProfileStore) -> SchedSnapshot {
+        SchedSnapshot {
+            aggregate: sched.stats(),
+            shards: sched.shard_stats(),
+            profile_p95_ms: profiles.global_p95_ms().unwrap_or(0.0),
+            profile_models: profiles.len(),
+        }
+    }
+
+    /// Serialize to the flat gauge list the `stats` op appends to the
+    /// metrics snapshot, wire order. These names are the dashboard
+    /// contract — see `stats_wire_names_are_pinned` below.
+    pub fn gauges(&self) -> Vec<(String, Json)> {
+        let st = &self.aggregate;
+        let flat: [(&str, f64); 31] = [
+            ("sched.shards", st.shards as f64),
+            ("sched.steals", st.steals as f64),
+            ("sched.timer_wakeups", st.timer_wakeups as f64),
+            ("sched.capacity", st.capacity as f64),
+            ("sched.cores_busy", st.cores_busy as f64),
+            ("sched.cores_idle", st.cores_idle as f64),
+            ("sched.queue_depth", st.queue_depth as f64),
+            ("sched.queue_depth_high", st.queue_depth_high as f64),
+            ("sched.queue_depth_normal", st.queue_depth_normal as f64),
+            ("sched.queue_depth_low", st.queue_depth_low as f64),
+            ("sched.peak_queue_depth", st.peak_queue_depth as f64),
+            ("sched.inflight", st.inflight as f64),
+            ("sched.submitted", st.submitted as f64),
+            ("sched.completed", st.completed as f64),
+            ("sched.failed", st.failed as f64),
+            ("sched.backfills", st.backfills as f64),
+            ("sched.deadline_rejected", st.deadline_rejected as f64),
+            ("sched.budget_expired", st.budget_expired as f64),
+            ("sched.budget_infeasible", st.budget_infeasible as f64),
+            ("sched.cancelled", st.cancelled as f64),
+            ("sched.adaptive_resizes", st.adaptive_resizes as f64),
+            ("sched.running_deadline_cancelled", st.running_deadline_cancelled as f64),
+            (
+                "sched.running_deadline_cancelled_budget",
+                st.running_deadline_cancelled_budget as f64,
+            ),
+            ("sched.aging_effective_ms", st.aging_effective_ms),
+            ("profile.p95_ms", self.profile_p95_ms),
+            ("profile.models", self.profile_models as f64),
+            // core-class gauges (new in 0.5.0): the by-class split of
+            // capacity/occupancy plus affinity-degradation launches —
+            // appended after the legacy block, never interleaved
+            ("sched.capacity_fast", st.capacity_fast as f64),
+            ("sched.capacity_slow", st.capacity_slow as f64),
+            ("sched.busy_fast", st.busy_fast as f64),
+            ("sched.busy_slow", st.busy_slow as f64),
+            ("sched.class_degraded", st.class_degraded as f64),
+        ];
+        let mut out: Vec<(String, Json)> =
+            flat.iter().map(|&(k, v)| (k.to_string(), num(v))).collect();
+        // Per-shard view: capacity is the shard's ledger slice; the
+        // counter set mirrors the aggregate so the per-shard accounting
+        // invariant is checkable from the wire.
+        for (i, sh) in self.shards.iter().enumerate() {
+            for (k, get) in SHARD_FIELDS {
+                out.push((format!("sched.shard.{i}.{k}"), num(get(sh))));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snapshot(shards: usize) -> SchedSnapshot {
+        SchedSnapshot {
+            aggregate: SchedStats::default(),
+            shards: vec![SchedStats::default(); shards],
+            profile_p95_ms: 0.0,
+            profile_models: 0,
+        }
+    }
+
+    /// GOLDEN: the wire names dashboards scrape. A failure here means a
+    /// breaking stats-protocol change — add new gauges to the tail of
+    /// the new-in-0.5.0 blocks instead of renaming or reordering these.
+    #[test]
+    fn stats_wire_names_are_pinned() {
+        let names: Vec<String> =
+            snapshot(2).gauges().into_iter().map(|(k, _)| k).collect();
+        let legacy_flat = [
+            "sched.shards",
+            "sched.steals",
+            "sched.timer_wakeups",
+            "sched.capacity",
+            "sched.cores_busy",
+            "sched.cores_idle",
+            "sched.queue_depth",
+            "sched.queue_depth_high",
+            "sched.queue_depth_normal",
+            "sched.queue_depth_low",
+            "sched.peak_queue_depth",
+            "sched.inflight",
+            "sched.submitted",
+            "sched.completed",
+            "sched.failed",
+            "sched.backfills",
+            "sched.deadline_rejected",
+            "sched.budget_expired",
+            "sched.budget_infeasible",
+            "sched.cancelled",
+            "sched.adaptive_resizes",
+            "sched.running_deadline_cancelled",
+            "sched.running_deadline_cancelled_budget",
+            "sched.aging_effective_ms",
+            "profile.p95_ms",
+            "profile.models",
+        ];
+        // every legacy flat gauge survives, in its original order
+        let positions: Vec<usize> = legacy_flat
+            .iter()
+            .map(|want| {
+                names
+                    .iter()
+                    .position(|n| n == want)
+                    .unwrap_or_else(|| panic!("gauge '{want}' missing from the wire"))
+            })
+            .collect();
+        assert!(
+            positions.windows(2).all(|w| w[0] < w[1]),
+            "legacy gauges reordered: {positions:?}"
+        );
+        // every legacy per-shard gauge survives for every shard
+        let legacy_shard = [
+            "capacity",
+            "cores_busy",
+            "queue_depth",
+            "inflight",
+            "submitted",
+            "completed",
+            "failed",
+            "cancelled",
+            "steals",
+            "timer_wakeups",
+        ];
+        for i in 0..2 {
+            for f in legacy_shard {
+                let want = format!("sched.shard.{i}.{f}");
+                assert!(names.contains(&want), "gauge '{want}' missing from the wire");
+            }
+        }
+        // the 0.5.0 class gauges ride alongside, never replacing
+        for f in ["sched.capacity_fast", "sched.capacity_slow", "sched.busy_fast", "sched.busy_slow", "sched.class_degraded"] {
+            assert!(names.contains(&f.to_string()), "missing class gauge '{f}'");
+        }
+        assert!(names.contains(&"sched.shard.1.class_degraded".to_string()));
+    }
+
+    #[test]
+    fn shard_blocks_scale_with_shard_count() {
+        let g1 = snapshot(1).gauges().len();
+        let g3 = snapshot(3).gauges().len();
+        assert_eq!(g3 - g1, 2 * SHARD_FIELDS.len());
+    }
+}

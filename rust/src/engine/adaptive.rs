@@ -89,7 +89,8 @@ impl AdaptivePolicy {
     /// Measured-cost relative weights for `(model, size)` parts: the
     /// profiled latency distribution where known (p95 once the window
     /// has enough fresh samples), size-proportional fallback otherwise.
-    /// Feed the result to `allocate_weighted` — the Listing-1 budget
+    /// Feed the result to `allocate` via `PartWeights::Measured` — the
+    /// Listing-1 budget
     /// invariants (every part >= 1 core, total == C when k <= C) hold
     /// for any weight vector, so adaptive sizing can never oversubscribe.
     pub fn part_weights(&self, parts: &[(&str, usize)]) -> Vec<f64> {

@@ -1,17 +1,26 @@
 //! The paper's thread-allocation algorithm (Listing 1) and the two
 //! baseline policies it is evaluated against (§4.1).
 //!
-//! Given `k` job parts with sizes `s_i` and `C` cores, `prun-def` assigns
-//! relative weight `w_i = s_i / Σs` and `c_i = max(1, floor(w_i * C))`
-//! cores, then distributes any cores left by the flooring one-by-one to
-//! the parts with the largest unallocated remainder `w_i*C - c_i`
-//! (round-robin in descending-remainder order, exactly as the paper's
-//! C++ listing does).
+//! Given `k` job parts with sizes `s_i` and a [`CoreMap`] with `C`
+//! total cores, `prun-def` assigns relative weight `w_i = s_i / Σs` and
+//! `c_i = max(1, floor(w_i * C))` cores, then distributes any cores
+//! left by the flooring one-by-one to the parts with the largest
+//! unallocated remainder `w_i*C - c_i` (round-robin in
+//! descending-remainder order, exactly as the paper's C++ listing
+//! does).
 //!
 //! `prun-1` gives every part one thread; `prun-eq` gives every part an
 //! equal share `max(1, floor(C/k))`. (The paper's §4.1 prose writes
 //! `⌊k/C⌋` for prun-eq — an obvious transposition; equal *cores per
 //! input* is `⌊C/k⌋`, which is what we implement.)
+//!
+//! The single entry point is [`allocate`], which takes the part
+//! demand as [`PartWeights`] (raw sizes, the paper's default, or
+//! measured-latency weights from `engine::profile`) and returns a
+//! typed [`Allocation`] — per-part thread counts plus the per-class
+//! footprint of the plan on the machine's [`CoreMap`].
+
+use super::ledger::{CoreClass, CoreMap};
 
 /// Thread-allocation policy for `prun`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -43,35 +52,119 @@ impl AllocPolicy {
     }
 }
 
-/// Allocate worker threads to job parts of the given `sizes`.
+/// The per-part demand [`allocate`] divides the core budget by.
 ///
-/// Faithful port of the paper's Listing 1 for [`AllocPolicy::PrunDef`].
-/// Returns one thread count per part (same order as `sizes`).
+/// `Sizes` is the paper's default — weights are derived from input
+/// sizes (`w_i = s_i / Σs`). `Measured` feeds profiled-latency weights
+/// (paper §6 future work, `engine::profile::ProfileStore::weights`)
+/// through the identical Listing-1 code path; they must sum to ~1.
+#[derive(Debug, Clone, Copy)]
+pub enum PartWeights<'a> {
+    Sizes(&'a [usize]),
+    Measured(&'a [f64]),
+}
+
+impl PartWeights<'_> {
+    fn resolve(&self) -> Vec<f64> {
+        match self {
+            PartWeights::Sizes(sizes) => weights(sizes),
+            PartWeights::Measured(w) => w.to_vec(),
+        }
+    }
+}
+
+/// A typed thread-allocation plan: one thread count per part, plus the
+/// plan's first-wave footprint on each core class of the machine.
+///
+/// `per_class` summarizes what running the first concurrent wave of
+/// this plan costs each class under class-blind fast-first packing: the
+/// first `min(total_threads, map.total())` threads are charged to Fast
+/// until it is full, then to Slow. It is a *capacity* summary (parts
+/// may straddle classes in it), not a placement — actual placement is
+/// per-task and whole-class, decided by the scheduler's ledger.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Allocation {
+    threads: Vec<usize>,
+    per_class: [usize; CoreClass::COUNT],
+}
+
+impl Allocation {
+    /// Build an allocation from explicit per-part thread counts,
+    /// computing the per-class footprint against `map`.
+    pub fn of(threads: Vec<usize>, map: &CoreMap) -> Allocation {
+        let total: usize = threads.iter().sum();
+        let mut remaining = total.min(map.total());
+        let mut per_class = [0usize; CoreClass::COUNT];
+        for class in CoreClass::ALL {
+            let take = remaining.min(map.count(class));
+            per_class[class.index()] = take;
+            remaining -= take;
+        }
+        Allocation { threads, per_class }
+    }
+
+    /// Per-part thread counts, same order as the input parts.
+    pub fn threads(&self) -> &[usize] {
+        &self.threads
+    }
+
+    /// Consume the plan, keeping only the per-part thread counts.
+    pub fn into_threads(self) -> Vec<usize> {
+        self.threads
+    }
+
+    /// First-wave cores charged to `class` (see type docs).
+    pub fn class_count(&self, class: CoreClass) -> usize {
+        self.per_class[class.index()]
+    }
+
+    /// First-wave footprint per class, indexed by [`CoreClass::index`].
+    pub fn per_class(&self) -> [usize; CoreClass::COUNT] {
+        self.per_class
+    }
+
+    /// Total threads across all parts (may exceed the map's core count;
+    /// excess waves queue).
+    pub fn total_threads(&self) -> usize {
+        self.threads.iter().sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.threads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.threads.is_empty()
+    }
+}
+
+/// Allocate worker threads to job parts.
+///
+/// Faithful port of the paper's Listing 1 for [`AllocPolicy::PrunDef`],
+/// dividing `map.total()` cores across the parts described by `parts`.
 ///
 /// Invariants (property-tested in `tests/prop_allocator.rs`):
 /// - every part gets >= 1 thread;
 /// - when `k <= C`, prun-def allocates exactly `C` threads in total;
 /// - when `k > C`, every part gets exactly 1 thread;
-/// - a part never gets fewer threads than a smaller part.
-pub fn allocate(sizes: &[usize], num_cores: usize, policy: AllocPolicy) -> Vec<usize> {
-    allocate_weighted(&weights(sizes), num_cores, policy)
-}
-
-/// Listing-1 allocation from explicit relative weights (must sum to ~1).
-/// `allocate` derives weights from input sizes (the paper's default);
-/// the profiled strategy (engine::profile, paper §6 future work) feeds
-/// measured-latency weights through this same code path.
-pub fn allocate_weighted(w: &[f64], num_cores: usize, policy: AllocPolicy) -> Vec<usize> {
+/// - a part never gets fewer threads than a smaller part;
+/// - the per-class footprint never exceeds any class's core count and
+///   sums to `min(total_threads, C)`.
+pub fn allocate(parts: PartWeights<'_>, map: &CoreMap, policy: AllocPolicy) -> Allocation {
+    let num_cores = map.total();
     assert!(num_cores >= 1, "need at least one core");
+    let w = parts.resolve();
     let k = w.len();
-    if k == 0 {
-        return Vec::new();
-    }
-    match policy {
-        AllocPolicy::PrunOne => vec![1; k],
-        AllocPolicy::PrunEq => vec![std::cmp::max(1, num_cores / k); k],
-        AllocPolicy::PrunDef => allocate_listing1(w, num_cores),
-    }
+    let threads = if k == 0 {
+        Vec::new()
+    } else {
+        match policy {
+            AllocPolicy::PrunOne => vec![1; k],
+            AllocPolicy::PrunEq => vec![std::cmp::max(1, num_cores / k); k],
+            AllocPolicy::PrunDef => allocate_listing1(&w, num_cores),
+        }
+    };
+    Allocation::of(threads, map)
 }
 
 fn allocate_listing1(w: &[f64], num_cores: usize) -> Vec<usize> {
@@ -112,9 +205,11 @@ fn allocate_listing1(w: &[f64], num_cores: usize) -> Vec<usize> {
     thread_allocation
 }
 
-/// The relative weights `w_i` used by prun-def (exported for reporting —
-/// paper Fig. 8 plots the threads given to the long sequence).
-pub fn weights(sizes: &[usize]) -> Vec<f64> {
+/// The relative weights `w_i` used by prun-def. Internal: callers pass
+/// sizes via [`PartWeights::Sizes`]; reporting paths inside the crate
+/// (paper Fig. 8 plots the threads given to the long sequence) may
+/// still inspect the raw weights.
+pub(crate) fn weights(sizes: &[usize]) -> Vec<f64> {
     let total: usize = sizes.iter().sum();
     if total == 0 {
         return vec![1.0 / sizes.len().max(1) as f64; sizes.len()];
@@ -126,30 +221,36 @@ pub fn weights(sizes: &[usize]) -> Vec<f64> {
 mod tests {
     use super::*;
 
+    /// Thread counts for `sizes` on a homogeneous `c`-core map — the
+    /// pre-0.5 call shape, used by tests that only care about counts.
+    fn alloc(sizes: &[usize], c: usize, policy: AllocPolicy) -> Vec<usize> {
+        allocate(PartWeights::Sizes(sizes), &CoreMap::homogeneous(c), policy).into_threads()
+    }
+
     #[test]
     fn single_part_gets_all_cores() {
-        assert_eq!(allocate(&[100], 16, AllocPolicy::PrunDef), vec![16]);
+        assert_eq!(alloc(&[100], 16, AllocPolicy::PrunDef), vec![16]);
     }
 
     #[test]
     fn equal_sizes_split_evenly() {
-        assert_eq!(allocate(&[50, 50], 16, AllocPolicy::PrunDef), vec![8, 8]);
-        assert_eq!(allocate(&[10, 10, 10, 10], 16, AllocPolicy::PrunDef), vec![4, 4, 4, 4]);
+        assert_eq!(alloc(&[50, 50], 16, AllocPolicy::PrunDef), vec![8, 8]);
+        assert_eq!(alloc(&[10, 10, 10, 10], 16, AllocPolicy::PrunDef), vec![4, 4, 4, 4]);
     }
 
     #[test]
     fn proportional_split() {
         // w = [0.75, 0.25], C=16 -> floor: [12, 4], no remainder
-        assert_eq!(allocate(&[300, 100], 16, AllocPolicy::PrunDef), vec![12, 4]);
+        assert_eq!(alloc(&[300, 100], 16, AllocPolicy::PrunDef), vec![12, 4]);
     }
 
     #[test]
     fn remainder_goes_to_largest_fraction() {
         // w = [0.5, 0.3, 0.2] * 10 -> floor [5, 3, 2] -> exact
-        assert_eq!(allocate(&[5, 3, 2], 10, AllocPolicy::PrunDef), vec![5, 3, 2]);
+        assert_eq!(alloc(&[5, 3, 2], 10, AllocPolicy::PrunDef), vec![5, 3, 2]);
         // w*16 = [8.533, 4.266, 3.2] -> floor [8, 4, 3] = 15, remainder
         // fractions [0.533, 0.266, 0.2] -> part 0 gets the spare core.
-        assert_eq!(allocate(&[8, 4, 3], 16, AllocPolicy::PrunDef), vec![9, 4, 3]);
+        assert_eq!(alloc(&[8, 4, 3], 16, AllocPolicy::PrunDef), vec![9, 4, 3]);
     }
 
     #[test]
@@ -157,10 +258,10 @@ mod tests {
         // 1 long (256 tokens) + X short (16 tokens): the long sequence's
         // thread count decreases as shorts join (paper Fig. 8 curve).
         let c = 16;
-        let t0 = allocate(&[256], c, AllocPolicy::PrunDef)[0];
+        let t0 = alloc(&[256], c, AllocPolicy::PrunDef)[0];
         assert_eq!(t0, 16);
-        let t3 = allocate(&[256, 16, 16, 16], c, AllocPolicy::PrunDef)[0];
-        let t8 = allocate(&[256, 16, 16, 16, 16, 16, 16, 16, 16], c, AllocPolicy::PrunDef)[0];
+        let t3 = alloc(&[256, 16, 16, 16], c, AllocPolicy::PrunDef)[0];
+        let t8 = alloc(&[256, 16, 16, 16, 16, 16, 16, 16, 16], c, AllocPolicy::PrunDef)[0];
         assert!(t0 > t3 && t3 > t8, "{t0} {t3} {t8}");
         // with 3 shorts: w_long = 256/304, floor(0.842*16)=13
         assert_eq!(t3, 13);
@@ -169,39 +270,41 @@ mod tests {
     #[test]
     fn more_parts_than_cores_gives_one_each() {
         let sizes: Vec<usize> = (1..=20).collect();
-        let alloc = allocate(&sizes, 16, AllocPolicy::PrunDef);
+        let alloc = alloc(&sizes, 16, AllocPolicy::PrunDef);
         assert!(alloc.iter().all(|&c| c == 1));
     }
 
     #[test]
     fn tiny_parts_clamped_to_one() {
         // w*16 < 1 for the small parts
-        let alloc = allocate(&[1000, 1, 1, 1], 16, AllocPolicy::PrunDef);
+        let alloc = alloc(&[1000, 1, 1, 1], 16, AllocPolicy::PrunDef);
         assert!(alloc[1] >= 1 && alloc[2] >= 1 && alloc[3] >= 1);
         assert!(alloc[0] >= 12);
     }
 
     #[test]
     fn prun_one_policy() {
-        assert_eq!(allocate(&[5, 10, 20], 16, AllocPolicy::PrunOne), vec![1, 1, 1]);
+        assert_eq!(alloc(&[5, 10, 20], 16, AllocPolicy::PrunOne), vec![1, 1, 1]);
     }
 
     #[test]
     fn prun_eq_policy() {
-        assert_eq!(allocate(&[5, 10, 20], 16, AllocPolicy::PrunEq), vec![5, 5, 5]);
+        assert_eq!(alloc(&[5, 10, 20], 16, AllocPolicy::PrunEq), vec![5, 5, 5]);
         // k > C: still at least one each
-        let alloc = allocate(&[1; 20], 16, AllocPolicy::PrunEq);
+        let alloc = alloc(&[1; 20], 16, AllocPolicy::PrunEq);
         assert!(alloc.iter().all(|&c| c == 1));
     }
 
     #[test]
     fn zero_sizes_degenerate_to_equal() {
-        assert_eq!(allocate(&[0, 0], 8, AllocPolicy::PrunDef), vec![4, 4]);
+        assert_eq!(alloc(&[0, 0], 8, AllocPolicy::PrunDef), vec![4, 4]);
     }
 
     #[test]
     fn empty_input() {
-        assert!(allocate(&[], 16, AllocPolicy::PrunDef).is_empty());
+        let a = allocate(PartWeights::Sizes(&[]), &CoreMap::homogeneous(16), AllocPolicy::PrunDef);
+        assert!(a.is_empty());
+        assert_eq!(a.per_class(), [0, 0]);
     }
 
     #[test]
@@ -221,19 +324,50 @@ mod tests {
     }
 
     #[test]
-    fn allocate_weighted_matches_size_path() {
+    fn measured_weights_match_size_path() {
         let sizes = [300usize, 100, 50];
-        let via_sizes = allocate(&sizes, 16, AllocPolicy::PrunDef);
-        let via_weights = allocate_weighted(&weights(&sizes), 16, AllocPolicy::PrunDef);
+        let map = CoreMap::homogeneous(16);
+        let w = weights(&sizes);
+        let via_sizes = allocate(PartWeights::Sizes(&sizes), &map, AllocPolicy::PrunDef);
+        let via_weights = allocate(PartWeights::Measured(&w), &map, AllocPolicy::PrunDef);
         assert_eq!(via_sizes, via_weights);
     }
 
     #[test]
-    fn allocate_weighted_profiled_weights() {
+    fn measured_profiled_weights() {
         // profiled weights can diverge from sizes: 90/10 split on 16
         // floors [14, 1]; the leftover core goes to the larger remainder
         // (0.6 for part 1 vs 0.4 for part 0) per Listing 1.
-        let alloc = allocate_weighted(&[0.9, 0.1], 16, AllocPolicy::PrunDef);
-        assert_eq!(alloc, vec![14, 2]);
+        let a = allocate(
+            PartWeights::Measured(&[0.9, 0.1]),
+            &CoreMap::homogeneous(16),
+            AllocPolicy::PrunDef,
+        );
+        assert_eq!(a.threads(), &[14, 2]);
+    }
+
+    #[test]
+    fn per_class_footprint_fast_first() {
+        // 16 threads on fast=4,slow=12: the first wave charges 4 to
+        // Fast and 12 to Slow.
+        let map = CoreMap::heterogeneous(4, 12);
+        let a = allocate(PartWeights::Sizes(&[100]), &map, AllocPolicy::PrunDef);
+        assert_eq!(a.threads(), &[16]);
+        assert_eq!(a.per_class(), [4, 12]);
+        // Homogeneous: everything lands on Fast.
+        let h = allocate(PartWeights::Sizes(&[100]), &CoreMap::homogeneous(16), AllocPolicy::PrunDef);
+        assert_eq!(h.per_class(), [16, 0]);
+    }
+
+    #[test]
+    fn per_class_footprint_caps_at_map_total() {
+        // 20 parts x 1 thread on an 8-core map: first wave is 8 cores,
+        // the rest queue. Footprint sums to min(total_threads, C).
+        let map = CoreMap::heterogeneous(2, 6);
+        let a = allocate(PartWeights::Sizes(&[1; 20]), &map, AllocPolicy::PrunOne);
+        assert_eq!(a.total_threads(), 20);
+        assert_eq!(a.per_class(), [2, 6]);
+        assert_eq!(a.class_count(CoreClass::Fast), 2);
+        assert_eq!(a.class_count(CoreClass::Slow), 6);
     }
 }

@@ -36,7 +36,7 @@ use std::time::{Duration, Instant};
 
 use crate::runtime::{CancelToken, TaskCancelled};
 
-use super::allocator::AllocPolicy;
+use super::allocator::{AllocPolicy, Allocation};
 use super::ctx::RequestCtx;
 use super::part::JobPart;
 use super::sched::SchedError;
@@ -150,10 +150,10 @@ enum TicketState<R> {
 /// now uniform across workloads).
 pub struct SubmitTicket<R> {
     ctx: RequestCtx,
-    /// Listing-1 thread allocation chosen for the request's parts,
+    /// Listing-1 allocation plan chosen for the request's parts,
     /// input order (empty for services that do not pre-size, e.g. the
     /// OCR pipeline, whose phases size themselves as they go).
-    allocation: Vec<usize>,
+    allocation: Allocation,
     /// every cancellation token involved (the ctx's plus any per-item
     /// tokens a batch carried) — `cancel` fires them all
     tokens: Vec<CancelToken>,
@@ -167,7 +167,7 @@ impl<R> SubmitTicket<R> {
     /// token the work runs under; `wait` settles it (see [`WaitFn`]).
     pub fn pending(
         ctx: RequestCtx,
-        allocation: Vec<usize>,
+        allocation: Allocation,
         tokens: Vec<CancelToken>,
         n: usize,
         wait: WaitFn<R>,
@@ -181,7 +181,7 @@ impl<R> SubmitTicket<R> {
     pub fn rejected(ctx: RequestCtx, n: usize, err: SubmitError) -> SubmitTicket<R> {
         SubmitTicket {
             ctx,
-            allocation: Vec::new(),
+            allocation: Allocation::default(),
             tokens: Vec::new(),
             n,
             state: Some(TicketState::Rejected(err)),
@@ -202,9 +202,9 @@ impl<R> SubmitTicket<R> {
         &self.ctx
     }
 
-    /// Listing-1 thread allocation chosen for the request's parts,
+    /// Listing-1 allocation plan chosen for the request's parts,
     /// input order (empty when the service does not pre-size).
-    pub fn allocation(&self) -> &[usize] {
+    pub fn allocation(&self) -> &Allocation {
         &self.allocation
     }
 
@@ -401,7 +401,9 @@ impl<R> Drop for SubmitTicket<R> {
 /// cost hint).
 ///
 /// ```
-/// use dnc_serve::engine::{InferenceService, RequestCtx, SubmitError, SubmitTicket};
+/// use dnc_serve::engine::{
+///     Allocation, CoreMap, InferenceService, RequestCtx, SubmitError, SubmitTicket,
+/// };
 ///
 /// /// A toy service: echoes each input length back.
 /// struct Echo;
@@ -415,7 +417,7 @@ impl<R> Drop for SubmitTicket<R> {
 ///         let token = ctx.token();
 ///         SubmitTicket::pending(
 ///             ctx,
-///             vec![1; n],
+///             Allocation::of(vec![1; n], &CoreMap::homogeneous(n.max(1))),
 ///             vec![token.clone()],
 ///             n,
 ///             Box::new(move |_deadline| {
@@ -509,6 +511,7 @@ impl PrunRequest {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::ledger::CoreMap;
 
     #[test]
     fn classify_maps_the_scheduler_vocabulary() {
@@ -557,7 +560,7 @@ mod tests {
         let extra = CancelToken::new();
         let t: SubmitTicket<u32> = SubmitTicket::pending(
             ctx.clone(),
-            vec![1],
+            Allocation::of(vec![1], &CoreMap::homogeneous(1)),
             vec![extra.clone()],
             1,
             Box::new(|_| Some(vec![Ok(1)])),
@@ -574,7 +577,7 @@ mod tests {
         let ctx = RequestCtx::new();
         let t: SubmitTicket<u32> = SubmitTicket::pending(
             ctx.clone(),
-            vec![1],
+            Allocation::of(vec![1], &CoreMap::homogeneous(1)),
             vec![ctx.token()],
             1,
             Box::new(|_| Some(vec![Ok(7)])),
@@ -589,7 +592,7 @@ mod tests {
         let observed = ctx.token();
         let t: SubmitTicket<u32> = SubmitTicket::pending(
             ctx.clone(),
-            Vec::new(),
+            Allocation::default(),
             vec![ctx.token()],
             1,
             // models work that never finishes before the deadline
@@ -603,13 +606,13 @@ mod tests {
     fn map_adapts_items_and_keeps_errors() {
         let t: SubmitTicket<u32> = SubmitTicket::pending(
             RequestCtx::new(),
-            vec![2, 2],
+            Allocation::of(vec![2, 2], &CoreMap::homogeneous(4)),
             Vec::new(),
             2,
             Box::new(|_| Some(vec![Ok(21), Err(SubmitError::Cancelled)])),
         );
         let mapped = t.map(|v| Ok(v * 2));
-        assert_eq!(mapped.allocation(), &[2, 2]);
+        assert_eq!(mapped.allocation().threads(), &[2, 2]);
         let each = mapped.wait_each();
         assert_eq!(each[0], Ok(42));
         assert_eq!(each[1], Err(SubmitError::Cancelled));

@@ -34,6 +34,7 @@ use std::time::Duration;
 use crate::runtime::CancelToken;
 
 use super::budget::Budget;
+use super::ledger::ClassAffinity;
 use super::sched::Priority;
 
 /// Monotonic request-id mint, shared by every ingress in the process.
@@ -67,6 +68,9 @@ pub struct RequestCtx {
     budget: Option<Budget>,
     priority: Priority,
     cost_hint: Option<Duration>,
+    /// explicit class affinity; `None` derives from `priority` (see
+    /// [`affinity`](Self::affinity))
+    affinity: Option<ClassAffinity>,
 }
 
 impl RequestCtx {
@@ -81,6 +85,7 @@ impl RequestCtx {
             budget: None,
             priority: Priority::Normal,
             cost_hint: None,
+            affinity: None,
         }
     }
 
@@ -118,6 +123,25 @@ impl RequestCtx {
     pub fn with_cost_hint(mut self, hint: Duration) -> RequestCtx {
         self.cost_hint = Some(hint);
         self
+    }
+
+    /// Pin this request's work to a core-class preference on a
+    /// heterogeneous machine (see `engine::ledger`), overriding the
+    /// priority-derived default: latency-critical ingresses ask for
+    /// `Prefer(Fast)`, bulk/backfill ones for `Prefer(Slow)`.
+    pub fn with_affinity(mut self, affinity: ClassAffinity) -> RequestCtx {
+        self.affinity = Some(affinity);
+        self
+    }
+
+    /// The class affinity this request's parts submit with: the
+    /// explicit [`with_affinity`](Self::with_affinity) choice, or the
+    /// one the priority implies — High is latency-critical and prefers
+    /// Fast cores, Low is throughput work that prefers Slow ones,
+    /// Normal is class-blind ([`ClassAffinity::from_priority`]). On a
+    /// homogeneous map this is inert either way.
+    pub fn affinity(&self) -> ClassAffinity {
+        self.affinity.unwrap_or_else(|| ClassAffinity::from_priority(self.priority))
     }
 
     /// The request id minted at ingress (diagnostics / log correlation).
@@ -219,5 +243,20 @@ mod tests {
         assert_eq!(ctx.priority(), Priority::High);
         assert_eq!(ctx.cost_hint(), Some(Duration::from_millis(40)));
         assert!(ctx.budget().is_some());
+    }
+
+    #[test]
+    fn affinity_derives_from_priority_until_set_explicitly() {
+        use crate::engine::ledger::CoreClass;
+        let hi = RequestCtx::new().with_priority(Priority::High);
+        assert_eq!(hi.affinity(), ClassAffinity::Prefer(CoreClass::Fast));
+        let lo = RequestCtx::new().with_priority(Priority::Low);
+        assert_eq!(lo.affinity(), ClassAffinity::Prefer(CoreClass::Slow));
+        assert_eq!(RequestCtx::new().affinity(), ClassAffinity::Any);
+        // an explicit choice overrides the derivation
+        let pinned = RequestCtx::new()
+            .with_priority(Priority::High)
+            .with_affinity(ClassAffinity::Prefer(CoreClass::Slow));
+        assert_eq!(pinned.affinity(), ClassAffinity::Prefer(CoreClass::Slow));
     }
 }

@@ -1,0 +1,360 @@
+//! `engine::ledger` — core classes for a heterogeneous machine.
+//!
+//! The paper's Listing-1 allocator and the sharded scheduler both used
+//! to treat the virtual core budget C as C *identical* cores. Real
+//! serving fleets are not identical: big/little mobile parts, mixed
+//! instance generations, SMT siblings. Class-blind placement on such a
+//! machine *inverts* latency — a small latency-critical part lands on
+//! whatever core is free, which under load is a slow one, while batch
+//! hogs squat on the fast ones (the mobile-processors measurement in
+//! PAPERS.md, arxiv 2405.01851).
+//!
+//! This module is the vocabulary the rest of the engine schedules with:
+//!
+//! - [`CoreClass`] — the class of a core (`Fast` / `Slow`).
+//! - [`CoreMap`] — how many cores of each class the machine has and
+//!   their relative speed (`--cores fast=4,slow=12` on the CLI;
+//!   [`CoreMap::homogeneous`] reproduces the old all-identical ledger
+//!   and is the default everywhere, so existing baselines are
+//!   unchanged).
+//! - [`ClassAffinity`] — where a task *wants* to run. `Any` is
+//!   deliberately class-blind (classes are tried in declaration order,
+//!   fast first — exactly the inversion-prone behavior the bench gate's
+//!   `hetero_inversion` scenario measures); `Prefer` tries its class
+//!   first and *degrades* to the other instead of queueing forever —
+//!   affinity is a preference, never a feasibility constraint.
+//! - [`CoreGrant`] — what the scheduler actually hands a
+//!   [`TaskRunner`](super::sched::TaskRunner): the thread count plus
+//!   the class (and speed factor) those threads live on, so
+//!   scaling-aware runners (simcpu, the bench mocks) can model the
+//!   slowdown of a degraded placement.
+
+use std::fmt;
+
+use super::sched::Priority;
+
+/// The class of a ledger core. Declaration order is the class-blind
+/// placement order: [`ClassAffinity::Any`] fills `Fast` first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CoreClass {
+    Fast,
+    Slow,
+}
+
+impl CoreClass {
+    /// Number of core classes (array dimension for per-class state).
+    pub const COUNT: usize = 2;
+
+    /// Every class, in declaration (= class-blind placement) order.
+    pub const ALL: [CoreClass; CoreClass::COUNT] = [CoreClass::Fast, CoreClass::Slow];
+
+    /// Index into per-class arrays (`[usize; CoreClass::COUNT]`).
+    pub fn index(self) -> usize {
+        match self {
+            CoreClass::Fast => 0,
+            CoreClass::Slow => 1,
+        }
+    }
+
+    /// The other class — the degradation target of a `Prefer`.
+    pub fn other(self) -> CoreClass {
+        match self {
+            CoreClass::Fast => CoreClass::Slow,
+            CoreClass::Slow => CoreClass::Fast,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CoreClass::Fast => "fast",
+            CoreClass::Slow => "slow",
+        }
+    }
+}
+
+impl fmt::Display for CoreClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Relative speed a `slow` core defaults to when the spec gives none
+/// (`--cores fast=4,slow=12` means the 12 run at half speed).
+const DEFAULT_SLOW_SPEED: f64 = 0.5;
+
+/// The machine description the ledger schedules against: how many
+/// cores of each class, and each class's relative speed (1.0 = the
+/// fast reference; a 0.5-speed core takes twice the wall-clock for the
+/// same work — `simcpu::ScalProfile::time_ms_at` models exactly that).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoreMap {
+    counts: [usize; CoreClass::COUNT],
+    speeds: [f64; CoreClass::COUNT],
+}
+
+impl CoreMap {
+    /// The classic all-identical ledger: `n` Fast cores at speed 1.0.
+    /// This is the default everywhere, so a plain `--cores 16` keeps
+    /// today's behavior and baselines bit-for-bit.
+    pub fn homogeneous(n: usize) -> CoreMap {
+        CoreMap { counts: [n, 0], speeds: [1.0, DEFAULT_SLOW_SPEED] }
+    }
+
+    /// A mixed machine: `fast` cores at speed 1.0 plus `slow` cores at
+    /// the default half speed (override with [`with_speed`](Self::with_speed)).
+    pub fn heterogeneous(fast: usize, slow: usize) -> CoreMap {
+        CoreMap { counts: [fast, slow], speeds: [1.0, DEFAULT_SLOW_SPEED] }
+    }
+
+    /// Override one class's relative speed (must be > 0).
+    pub fn with_speed(mut self, class: CoreClass, speed: f64) -> CoreMap {
+        assert!(speed > 0.0, "class speed must be positive");
+        self.speeds[class.index()] = speed;
+        self
+    }
+
+    /// Parse the CLI/config syntax:
+    ///
+    /// - `"16"` — homogeneous, 16 fast cores (the old `--cores C`);
+    /// - `"fast=4,slow=12"` — 4 fast + 12 half-speed slow cores;
+    /// - `"fast=4,slow=12@0.25"` — an explicit relative speed after `@`.
+    pub fn parse(s: &str) -> Result<CoreMap, String> {
+        let s = s.trim();
+        if let Ok(n) = s.parse::<usize>() {
+            if n == 0 {
+                return Err("core budget must be >= 1".to_string());
+            }
+            return Ok(CoreMap::homogeneous(n));
+        }
+        let mut map = CoreMap { counts: [0, 0], speeds: [1.0, DEFAULT_SLOW_SPEED] };
+        for entry in s.split(',') {
+            let entry = entry.trim();
+            let (name, rest) = entry
+                .split_once('=')
+                .ok_or_else(|| format!("bad core-class entry '{entry}' (want class=count)"))?;
+            let class = match name.trim() {
+                "fast" => CoreClass::Fast,
+                "slow" => CoreClass::Slow,
+                other => return Err(format!("unknown core class '{other}'")),
+            };
+            let (count_s, speed_s) = match rest.split_once('@') {
+                Some((c, sp)) => (c, Some(sp)),
+                None => (rest, None),
+            };
+            let count: usize = count_s
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad core count '{count_s}' for class '{name}'"))?;
+            map.counts[class.index()] = count;
+            if let Some(sp) = speed_s {
+                let speed: f64 = sp
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad speed '{sp}' for class '{name}'"))?;
+                if speed <= 0.0 {
+                    return Err(format!("speed for class '{name}' must be > 0"));
+                }
+                map.speeds[class.index()] = speed;
+            }
+        }
+        if map.total() == 0 {
+            return Err("core map has zero cores".to_string());
+        }
+        Ok(map)
+    }
+
+    /// Total ledger cores across every class (the budget C the
+    /// Listing-1 allocator divides).
+    pub fn total(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    pub fn count(&self, class: CoreClass) -> usize {
+        self.counts[class.index()]
+    }
+
+    /// Per-class counts, indexed by [`CoreClass::index`].
+    pub fn counts(&self) -> [usize; CoreClass::COUNT] {
+        self.counts
+    }
+
+    /// Relative speed of `class` (1.0 = fast reference).
+    pub fn speed(&self, class: CoreClass) -> f64 {
+        self.speeds[class.index()]
+    }
+
+    /// True when every core is in one class (the classic ledger; class
+    /// affinity is then a no-op and placement is identical to PR 6).
+    pub fn is_homogeneous(&self) -> bool {
+        self.counts.iter().filter(|&&c| c > 0).count() <= 1
+    }
+}
+
+impl Default for CoreMap {
+    fn default() -> Self {
+        CoreMap::homogeneous(16)
+    }
+}
+
+impl fmt::Display for CoreMap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_homogeneous() && self.count(CoreClass::Slow) == 0 {
+            return write!(f, "{}", self.total());
+        }
+        let mut first = true;
+        for class in CoreClass::ALL {
+            if self.count(class) == 0 {
+                continue;
+            }
+            if !first {
+                write!(f, ",")?;
+            }
+            first = false;
+            write!(f, "{}={}", class.name(), self.count(class))?;
+            if (self.speed(class) - 1.0).abs() > f64::EPSILON {
+                write!(f, "@{}", self.speed(class))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Where a task wants to run.
+///
+/// `Any` is class-*blind*: classes are tried in declaration order
+/// (fast first), modelling a scheduler that doesn't know the machine is
+/// mixed. `Prefer(c)` tries `c` first and **degrades** to the other
+/// class when `c` has no room — a preference, never a hard constraint,
+/// so affine work is delayed or slowed but never deadlocked or
+/// rejected (property-tested in `tests/prop_sched.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ClassAffinity {
+    #[default]
+    Any,
+    Prefer(CoreClass),
+}
+
+impl ClassAffinity {
+    /// The default affinity a request's priority implies: High work is
+    /// latency-critical (prefer fast cores), Low work is throughput /
+    /// backfill (prefer slow cores, keeping fast ones free), Normal
+    /// work takes whatever is next — the class-blind order.
+    pub fn from_priority(p: Priority) -> ClassAffinity {
+        match p {
+            Priority::High => ClassAffinity::Prefer(CoreClass::Fast),
+            Priority::Low => ClassAffinity::Prefer(CoreClass::Slow),
+            Priority::Normal => ClassAffinity::Any,
+        }
+    }
+
+    /// The class order placement tries, most-preferred first.
+    pub fn try_order(self) -> [CoreClass; CoreClass::COUNT] {
+        match self {
+            ClassAffinity::Any => CoreClass::ALL,
+            ClassAffinity::Prefer(c) => [c, c.other()],
+        }
+    }
+}
+
+/// What an admitted task is actually granted: `threads` ledger entries,
+/// all of one `class`, running at that class's relative `speed`.
+/// Handed to [`TaskRunner::run_on`](super::sched::TaskRunner::run_on);
+/// the PJRT executor ignores everything but the worker, while
+/// scaling-aware runners divide their simulated execution time by
+/// `speed` so a degraded placement is *measurably* slower.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoreGrant {
+    pub threads: usize,
+    pub class: CoreClass,
+    pub speed: f64,
+}
+
+impl CoreGrant {
+    /// A grant on the homogeneous reference class (tests, mocks).
+    pub fn fast(threads: usize) -> CoreGrant {
+        CoreGrant { threads, class: CoreClass::Fast, speed: 1.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_map_is_all_fast() {
+        let m = CoreMap::homogeneous(16);
+        assert_eq!(m.total(), 16);
+        assert_eq!(m.count(CoreClass::Fast), 16);
+        assert_eq!(m.count(CoreClass::Slow), 0);
+        assert!(m.is_homogeneous());
+        assert_eq!(m.speed(CoreClass::Fast), 1.0);
+        assert_eq!(m.to_string(), "16");
+    }
+
+    #[test]
+    fn parse_plain_number_is_homogeneous() {
+        assert_eq!(CoreMap::parse("16").unwrap(), CoreMap::homogeneous(16));
+        assert_eq!(CoreMap::parse(" 4 ").unwrap(), CoreMap::homogeneous(4));
+        assert!(CoreMap::parse("0").is_err());
+    }
+
+    #[test]
+    fn parse_class_syntax() {
+        let m = CoreMap::parse("fast=4,slow=12").unwrap();
+        assert_eq!(m.count(CoreClass::Fast), 4);
+        assert_eq!(m.count(CoreClass::Slow), 12);
+        assert_eq!(m.total(), 16);
+        assert!(!m.is_homogeneous());
+        assert_eq!(m.speed(CoreClass::Slow), 0.5, "slow defaults to half speed");
+        let m = CoreMap::parse("fast=2,slow=6@0.25").unwrap();
+        assert_eq!(m.speed(CoreClass::Slow), 0.25);
+        assert_eq!(m.to_string(), "fast=2,slow=6@0.25");
+    }
+
+    #[test]
+    fn parse_rejects_nonsense() {
+        assert!(CoreMap::parse("medium=4").is_err());
+        assert!(CoreMap::parse("fast=x").is_err());
+        assert!(CoreMap::parse("fast=0,slow=0").is_err());
+        assert!(CoreMap::parse("fast=4,slow=2@-1").is_err());
+        assert!(CoreMap::parse("fast4").is_err());
+    }
+
+    #[test]
+    fn display_round_trips_through_parse() {
+        for s in ["16", "fast=4,slow=12", "fast=2,slow=6@0.25"] {
+            let m = CoreMap::parse(s).unwrap();
+            assert_eq!(CoreMap::parse(&m.to_string()).unwrap(), m, "{s}");
+        }
+    }
+
+    #[test]
+    fn affinity_try_order() {
+        assert_eq!(ClassAffinity::Any.try_order(), [CoreClass::Fast, CoreClass::Slow]);
+        assert_eq!(
+            ClassAffinity::Prefer(CoreClass::Slow).try_order(),
+            [CoreClass::Slow, CoreClass::Fast]
+        );
+    }
+
+    #[test]
+    fn affinity_from_priority() {
+        assert_eq!(
+            ClassAffinity::from_priority(Priority::High),
+            ClassAffinity::Prefer(CoreClass::Fast)
+        );
+        assert_eq!(
+            ClassAffinity::from_priority(Priority::Low),
+            ClassAffinity::Prefer(CoreClass::Slow)
+        );
+        assert_eq!(ClassAffinity::from_priority(Priority::Normal), ClassAffinity::Any);
+    }
+
+    #[test]
+    fn grant_fast_reference() {
+        let g = CoreGrant::fast(4);
+        assert_eq!(g.threads, 4);
+        assert_eq!(g.class, CoreClass::Fast);
+        assert_eq!(g.speed, 1.0);
+    }
+}

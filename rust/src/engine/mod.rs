@@ -1,7 +1,10 @@
 //! L3 inference engine — the paper's contribution.
 //!
 //! - [`allocator`] — Listing 1 (`prun-def`) and the `prun-1` / `prun-eq`
-//!   baselines.
+//!   baselines, returning a typed [`Allocation`].
+//! - [`ledger`] — core classes: [`CoreMap`] (the machine's fast/slow
+//!   inventory), [`ClassAffinity`] (where a request wants to run) and
+//!   [`CoreGrant`] (what the scheduler actually handed a task).
 //! - [`budget`] — end-to-end request budgets: one deadline account
 //!   minted at the serving edge and consumed by every layer below.
 //! - [`part`] — job parts and their size-based weights.
@@ -24,6 +27,7 @@ pub mod allocator;
 pub mod api;
 pub mod budget;
 pub mod ctx;
+pub mod ledger;
 pub mod optimizer;
 pub mod part;
 pub mod profile;
@@ -31,10 +35,11 @@ pub mod sched;
 pub mod session;
 
 pub use adaptive::{AdaptiveConfig, AdaptivePolicy};
-pub use allocator::{allocate, allocate_weighted, weights, AllocPolicy};
+pub use allocator::{allocate, AllocPolicy, Allocation, PartWeights};
 pub use api::{InferenceService, PrunRequest, SubmitError, SubmitTicket};
 pub use budget::Budget;
 pub use ctx::RequestCtx;
+pub use ledger::{ClassAffinity, CoreClass, CoreGrant, CoreMap};
 pub use optimizer::{allocate_optimal, OptPart};
 pub use part::{part_sizes, JobPart};
 pub use profile::{ModelStats, ProfileStore};

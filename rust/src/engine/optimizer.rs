@@ -69,7 +69,8 @@ pub fn expected_makespan_ms(parts: &[OptPart], alloc: &[usize]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::allocator::{allocate, AllocPolicy};
+    use crate::engine::allocator::{allocate, AllocPolicy, PartWeights};
+    use crate::engine::ledger::CoreMap;
     use crate::simcpu::des::{simulate, SimPart};
 
     fn part(t1: f64, serial: f64, ovh: f64) -> OptPart {
@@ -134,7 +135,9 @@ mod tests {
                 t1s.iter().map(|&t| OptPart { t1_ms: t, profile: prof }).collect();
 
             let sizes: Vec<usize> = t1s.iter().map(|&t| t as usize).collect();
-            let def = allocate(&sizes, 16, AllocPolicy::PrunDef);
+            let def =
+                allocate(PartWeights::Sizes(&sizes), &CoreMap::homogeneous(16), AllocPolicy::PrunDef)
+                    .into_threads();
             let opt = allocate_optimal(&opt_parts, 16);
 
             let m_def = simulate(&parts, &def, 16).makespan_ms;

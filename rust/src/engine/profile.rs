@@ -34,6 +34,8 @@ use std::time::{Duration, Instant};
 use crate::util::stats::percentile_sorted;
 use crate::util::sync::lock_recover;
 
+use super::ledger::{ClassAffinity, CoreClass};
+
 /// EWMA smoothing factor: new = alpha*obs + (1-alpha)*old.
 const ALPHA: f64 = 0.3;
 
@@ -47,6 +49,15 @@ pub const STALE_AFTER: Duration = Duration::from_secs(60);
 /// Minimum window samples before quantiles are trusted over the EWMA
 /// (a 1-sample "p95" is just that sample, and a noisy one at that).
 pub const MIN_DISTRIBUTION_SAMPLES: usize = 5;
+
+/// A model must measure at most this fraction of the worst profiled
+/// model's p95 before [`ProfileStore::suggest_affinity`] steers it at
+/// Fast cores — the gap has to be real, not sampling noise.
+pub const FAST_AFFINITY_RATIO: f64 = 0.5;
+
+/// ...and at least this fraction of the worst p95 to be steered at
+/// Slow cores (the hogs that would otherwise squat on the Fast class).
+pub const SLOW_AFFINITY_RATIO: f64 = 0.9;
 
 /// Per-model profile: long-memory EWMA + recent-sample window.
 struct ModelProfile {
@@ -227,6 +238,44 @@ impl ProfileStore {
                 }
             })
             .fold(None, |acc, x| Some(acc.map_or(x, |a: f64| a.max(x))))
+    }
+
+    /// Where should `model`'s parts run on a heterogeneous machine?
+    /// Profile-derived class affinity (the `engine::ledger` counterpart
+    /// of the cost weights above): a model measuring well below the
+    /// worst profiled p95 is the latency-critical kind that belongs on
+    /// Fast cores; one at (or near) the worst p95 is a hog that should
+    /// keep off them. Needs a *trusted* distribution for `model` and at
+    /// least one other freshly-profiled model to compare against —
+    /// anything less is [`ClassAffinity::Any`], never a hard steer.
+    pub fn suggest_affinity(&self, model: &str) -> ClassAffinity {
+        let Some(cost) = self.trusted_cost(model) else {
+            return ClassAffinity::Any;
+        };
+        let mut map = self.guard();
+        let now = Instant::now();
+        let fresh: Vec<f64> = map
+            .values_mut()
+            .filter_map(|p| {
+                p.prune_stale(now);
+                if p.window.is_empty() { None } else { Some(p.stats().p95_ms) }
+            })
+            .collect();
+        if fresh.len() < 2 {
+            // a lone profiled model has nothing to be fast or slow
+            // *relative to* — steering on absolutes would misplace
+            // every single-model workload
+            return ClassAffinity::Any;
+        }
+        let worst = fresh.iter().fold(0.0f64, |a, &x| a.max(x));
+        let ms = cost.as_secs_f64() * 1e3;
+        if ms <= FAST_AFFINITY_RATIO * worst {
+            ClassAffinity::Prefer(CoreClass::Fast)
+        } else if ms >= SLOW_AFFINITY_RATIO * worst {
+            ClassAffinity::Prefer(CoreClass::Slow)
+        } else {
+            ClassAffinity::Any
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -427,6 +476,27 @@ mod tests {
         assert!(p.p95_ms("m").is_some());
         assert_eq!(p.stats("m").unwrap().samples_total, 2);
         let _ = p.weights(&[("m", 10)]);
+    }
+
+    #[test]
+    fn affinity_suggestion_separates_hogs_from_latency_work() {
+        let p = ProfileStore::new();
+        assert_eq!(p.suggest_affinity("nope"), ClassAffinity::Any);
+        for _ in 0..MIN_DISTRIBUTION_SAMPLES {
+            p.observe("tiny", Duration::from_millis(5));
+        }
+        assert_eq!(
+            p.suggest_affinity("tiny"),
+            ClassAffinity::Any,
+            "a lone profiled model has no relative standing"
+        );
+        for _ in 0..MIN_DISTRIBUTION_SAMPLES {
+            p.observe("hog", Duration::from_millis(80));
+            p.observe("mid", Duration::from_millis(50));
+        }
+        assert_eq!(p.suggest_affinity("tiny"), ClassAffinity::Prefer(CoreClass::Fast));
+        assert_eq!(p.suggest_affinity("hog"), ClassAffinity::Prefer(CoreClass::Slow));
+        assert_eq!(p.suggest_affinity("mid"), ClassAffinity::Any, "middle of the pack stays class-blind");
     }
 
     #[test]

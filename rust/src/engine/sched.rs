@@ -45,6 +45,23 @@
 //!   shard's next event or armed timer, not within a fixed 5ms — the
 //!   serving edge always nudges, so this only defers cleanup of
 //!   already-abandoned work.
+//! - **Core classes**: the ledger is typed by
+//!   [`CoreClass`](super::ledger::CoreClass) — a
+//!   [`CoreMap`](super::ledger::CoreMap) (`SchedConfig::cores`)
+//!   describes how many fast and slow cores the machine has and their
+//!   relative speeds. Each shard's slice is *per class*
+//!   (`ledger_slices` splits every class across the shards, rotating
+//!   the remainders so no shard is left coreless), placement walks the
+//!   task's [`ClassAffinity`](super::ledger::ClassAffinity) try-order —
+//!   preferred class first, **degrading** to the other class instead of
+//!   waiting for the preferred one (`class_degraded` counts those; a
+//!   task runs wholly on one class, never split) — steals hand over
+//!   only tasks that fit some class of the thief's free cores, and the
+//!   runner receives a [`CoreGrant`](super::ledger::CoreGrant) naming
+//!   the granted class and its speed so scaling-aware runners (simcpu,
+//!   the bench mocks) model the slowdown of a degraded placement. A
+//!   homogeneous map — the default — makes all of this a no-op: one
+//!   class, placement identical to the previous revision.
 //!
 //! Everything below survives sharding unchanged, now per shard:
 //!
@@ -107,6 +124,7 @@ use anyhow::Result;
 
 use super::adaptive::AdaptivePolicy;
 use super::budget::Budget;
+use super::ledger::{ClassAffinity, CoreClass, CoreGrant, CoreMap};
 use crate::runtime::{CancelToken, ExecResult, ExecutorPool, ReplyFn, TaskCancelled, Tensor};
 use crate::util::clock;
 use crate::util::sync::lock_recover;
@@ -193,6 +211,11 @@ pub struct PartTask {
     /// same ledger slice. `None` routes by task id instead, spreading
     /// unrelated tasks evenly across shards.
     pub request_id: Option<u64>,
+    /// which core class this task wants (see `engine::ledger`): the
+    /// preferred class is tried first at every placement decision, the
+    /// other class is the fallback — affinity shapes placement, never
+    /// feasibility
+    pub affinity: ClassAffinity,
     /// cooperative cancellation flag, shared with whoever may abandon
     /// this task (each task gets a private token unless one is attached)
     pub cancel: CancelToken,
@@ -210,18 +233,21 @@ impl PartTask {
             budget: None,
             cost_hint: None,
             request_id: None,
+            affinity: ClassAffinity::Any,
             cancel: CancelToken::new(),
         }
     }
 
     /// Consume a request's [`RequestCtx`](super::ctx::RequestCtx): one
-    /// call stamps the task with the request's token, priority, budget,
-    /// cost hint and request id (the shard routing key) — the
-    /// scheduler-facing end of the "one context, every layer" contract
-    /// (fields the ctx does not carry are left untouched).
+    /// call stamps the task with the request's token, priority, class
+    /// affinity, budget, cost hint and request id (the shard routing
+    /// key) — the scheduler-facing end of the "one context, every
+    /// layer" contract (fields the ctx does not carry are left
+    /// untouched).
     pub fn with_ctx(mut self, ctx: &super::ctx::RequestCtx) -> PartTask {
         self.cancel = ctx.token();
         self.priority = ctx.priority();
+        self.affinity = ctx.affinity();
         self.request_id = Some(ctx.id());
         if let Some(b) = ctx.budget() {
             self.budget = Some(b);
@@ -254,6 +280,18 @@ impl PartTask {
     /// request this part belongs to).
     pub fn with_cancel(mut self, token: CancelToken) -> PartTask {
         self.cancel = token;
+        self
+    }
+
+    /// Express where this task wants to run on a heterogeneous
+    /// [`CoreMap`](super::ledger::CoreMap): `Prefer(Fast)` for small
+    /// latency-critical parts, `Prefer(Slow)` for throughput/backfill
+    /// work, `Any` (the default) for class-blind placement — classes
+    /// tried in declaration order, fast first. A preference *degrades*
+    /// to the other class rather than queueing behind its preferred one
+    /// (`with_ctx` derives this from the ctx instead).
+    pub fn with_affinity(mut self, a: ClassAffinity) -> PartTask {
+        self.affinity = a;
         self
     }
 
@@ -316,6 +354,9 @@ pub struct TaskDone {
     pub queue: Duration,
     pub threads: usize,
     pub worker: usize,
+    /// the core class the task actually ran on (compare with the task's
+    /// affinity to observe degraded placements)
+    pub class: CoreClass,
     /// true if this task bypassed a waiting larger task via backfill
     pub backfilled: bool,
 }
@@ -376,16 +417,22 @@ impl SubmitHandle {
     }
 }
 
-/// Scheduler tuning knobs.
-#[derive(Debug, Clone, Copy)]
+/// Scheduler tuning knobs. Everything the scheduler needs to start
+/// lives here — including the machine's [`CoreMap`] and the optional
+/// adaptive policy (the old `start_with_policy` constructor variant is
+/// gone; its name is banned by pallas-lint PL005 like every deleted
+/// shim).
+#[derive(Clone)]
 pub struct SchedConfig {
-    /// virtual core budget C (paper: 16), split across the shards
-    pub cores: usize,
+    /// the machine: how many cores of each class and their relative
+    /// speeds (paper: 16 identical). `CoreMap::homogeneous(16)` — the
+    /// default — reproduces the untyped C=16 budget exactly.
+    pub cores: CoreMap,
     /// scheduler shards (dispatcher threads, each owning a disjoint
-    /// ledger slice). `0` derives one shard per 16 cores (min 1), so
-    /// paper-sized configurations keep the single-dispatcher behavior;
-    /// explicit values are capped at `cores` so every shard owns at
-    /// least one ledger core.
+    /// per-class ledger slice). `0` derives one shard per 16 cores
+    /// (min 1), so paper-sized configurations keep the
+    /// single-dispatcher behavior; explicit values are capped at the
+    /// total core count so every shard owns at least one ledger core.
     pub shards: usize,
     /// max time the queue head may be bypassed by backfill, measured
     /// from the first bypass (the *static* bound; an adaptive policy
@@ -396,16 +443,35 @@ pub struct SchedConfig {
     /// cancel any task still *executing* after this long (per-task
     /// [`PartTask::running_deadline`] overrides; `None` = never)
     pub deadline_running: Option<Duration>,
+    /// adaptive policy: each shard periodically re-derives its
+    /// effective aging bound from the policy's latency profiles (see
+    /// `engine::adaptive`). `None` keeps the static `aging` for the
+    /// scheduler's lifetime.
+    pub adaptive: Option<Arc<AdaptivePolicy>>,
+}
+
+impl fmt::Debug for SchedConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SchedConfig")
+            .field("cores", &self.cores)
+            .field("shards", &self.shards)
+            .field("aging", &self.aging)
+            .field("backfill", &self.backfill)
+            .field("deadline_running", &self.deadline_running)
+            .field("adaptive", &self.adaptive.is_some())
+            .finish()
+    }
 }
 
 impl Default for SchedConfig {
     fn default() -> Self {
         SchedConfig {
-            cores: 16,
+            cores: CoreMap::homogeneous(16),
             shards: 0,
             aging: Duration::from_millis(50),
             backfill: true,
             deadline_running: None,
+            adaptive: None,
         }
     }
 }
@@ -414,17 +480,35 @@ impl SchedConfig {
     /// Number of shards this config resolves to.
     fn shard_count(&self) -> usize {
         if self.shards > 0 {
-            self.shards.min(self.cores)
+            self.shards.min(self.cores.total())
         } else {
-            (self.cores / CORES_PER_SHARD).max(1)
+            (self.cores.total() / CORES_PER_SHARD).max(1)
         }
     }
 
-    /// Disjoint ledger slices, one per shard; sums to `cores`.
-    fn ledger_slices(&self) -> Vec<usize> {
+    /// Disjoint per-class ledger slices, one per shard; each class's
+    /// column sums to that class's core count. Every class is split
+    /// `base + remainder` across the shards, and the remainder start
+    /// offset *rotates* between classes — so the spare fast cores and
+    /// the spare slow cores land on different shards and (because the
+    /// slices partition `cores.total() >= shard_count` cores over
+    /// consecutive positions) no shard is left with an all-zero slice.
+    fn ledger_slices(&self) -> Vec<[usize; CoreClass::COUNT]> {
         let n = self.shard_count();
-        let (base, rem) = (self.cores / n, self.cores % n);
-        (0..n).map(|i| base + usize::from(i < rem)).collect()
+        let mut slices = vec![[0usize; CoreClass::COUNT]; n];
+        let mut offset = 0usize;
+        for class in CoreClass::ALL {
+            let count = self.cores.count(class);
+            let (base, rem) = (count / n, count % n);
+            for s in slices.iter_mut() {
+                s[class.index()] = base;
+            }
+            for j in 0..rem {
+                slices[(offset + j) % n][class.index()] += 1;
+            }
+            offset = (offset + rem) % n;
+        }
+        slices
     }
 }
 
@@ -445,18 +529,21 @@ pub trait TaskRunner: Send + Sync + 'static {
     }
 
     /// Run `model` on `worker`; must invoke `reply` exactly once.
-    /// `threads` is the ledger allocation the task occupies — the PJRT
-    /// CPU executable ignores it (single-threaded; occupancy only), but
-    /// scaling-aware runners (the simulated benches, mocks) use it to
-    /// model intra-op speedup. A cooperative runner polls `cancel` at
-    /// its safe points and replies with [`TaskCancelled`] instead of
-    /// executing (or finishing) a cancelled task.
+    /// `grant` is the ledger allocation the task occupies — thread
+    /// count plus the core class (and relative speed) those threads
+    /// live on. The PJRT CPU executable ignores it (single-threaded;
+    /// occupancy only), but scaling-aware runners (the simulated
+    /// benches, mocks) use the thread count to model intra-op speedup
+    /// and divide by `grant.speed` to model a slow-class placement. A
+    /// cooperative runner polls `cancel` at its safe points and replies
+    /// with [`TaskCancelled`] instead of executing (or finishing) a
+    /// cancelled task.
     fn run_on(
         &self,
         worker: usize,
         model: &str,
         inputs: Vec<Tensor>,
-        threads: usize,
+        grant: CoreGrant,
         cancel: CancelToken,
         reply: ReplyFn,
     );
@@ -476,7 +563,7 @@ impl TaskRunner for ExecutorPool {
         worker: usize,
         model: &str,
         inputs: Vec<Tensor>,
-        _threads: usize,
+        _grant: CoreGrant,
         cancel: CancelToken,
         reply: ReplyFn,
     ) {
@@ -489,12 +576,20 @@ impl TaskRunner for ExecutorPool {
 /// aggregates across shards (counters summed; `peak_queue_depth` and
 /// `aging_effective_ms` are the worst shard); `Scheduler::shard_stats`
 /// returns one per shard with `capacity` = that shard's ledger slice.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct SchedStats {
     pub capacity: usize,
+    /// ledger cores of each class behind `capacity`
+    /// (`capacity_fast + capacity_slow == capacity`; a homogeneous map
+    /// reports everything as fast)
+    pub capacity_fast: usize,
+    pub capacity_slow: usize,
     /// scheduler shards behind this snapshot (1 per-shard)
     pub shards: usize,
     pub cores_busy: usize,
+    /// the by-class split of `cores_busy`
+    pub busy_fast: usize,
+    pub busy_slow: usize,
     pub cores_idle: usize,
     pub queue_depth: usize,
     /// queued tasks by priority level (gauges, sum = `queue_depth`)
@@ -532,6 +627,11 @@ pub struct SchedStats {
     /// queued tasks pulled over from a loaded peer shard (counted by
     /// the thief; the `submitted` count moves with the task)
     pub steals: u64,
+    /// tasks launched on a class other than their preferred one
+    /// (affinity degradation: the preferred class had no room, so the
+    /// task ran slower instead of waiting — zero on a homogeneous map
+    /// and for `Any`-affinity tasks, which have no preference to miss)
+    pub class_degraded: u64,
     /// armed-deadline timer expirations — the *only* clock-driven
     /// wakeups left. An idle shard, or one blocked on an infeasible
     /// queue with no deadlines armed, contributes zero (the old design
@@ -556,6 +656,7 @@ struct Counters {
     running_deadline_cancelled: AtomicU64,
     running_deadline_cancelled_budget: AtomicU64,
     steals: AtomicU64,
+    class_degraded: AtomicU64,
     timer_wakeups: AtomicU64,
     /// gauge, microseconds (set by the dispatcher each sync)
     aging_effective_us: AtomicU64,
@@ -565,17 +666,29 @@ struct Counters {
     queue_depth_low: AtomicUsize,
     peak_queue_depth: AtomicUsize,
     cores_busy: AtomicUsize,
+    busy_fast: AtomicUsize,
+    busy_slow: AtomicUsize,
     inflight: AtomicUsize,
 }
 
-/// Snapshot one shard's counters into a [`SchedStats`].
-fn stats_from(c: &Counters, capacity: usize, shards: usize) -> SchedStats {
+/// Snapshot one shard's counters into a [`SchedStats`]; `capacity` is
+/// the shard's per-class ledger slice.
+fn stats_from(
+    c: &Counters,
+    capacity: [usize; CoreClass::COUNT],
+    shards: usize,
+) -> SchedStats {
+    let total = capacity.iter().sum::<usize>();
     let busy = c.cores_busy.load(Ordering::Relaxed);
     SchedStats {
-        capacity,
+        capacity: total,
+        capacity_fast: capacity[CoreClass::Fast.index()],
+        capacity_slow: capacity[CoreClass::Slow.index()],
         shards,
         cores_busy: busy,
-        cores_idle: capacity.saturating_sub(busy),
+        busy_fast: c.busy_fast.load(Ordering::Relaxed),
+        busy_slow: c.busy_slow.load(Ordering::Relaxed),
+        cores_idle: total.saturating_sub(busy),
         queue_depth: c.queue_depth.load(Ordering::Relaxed),
         queue_depth_high: c.queue_depth_high.load(Ordering::Relaxed),
         queue_depth_normal: c.queue_depth_normal.load(Ordering::Relaxed),
@@ -596,6 +709,7 @@ fn stats_from(c: &Counters, capacity: usize, shards: usize) -> SchedStats {
             .running_deadline_cancelled_budget
             .load(Ordering::Relaxed),
         steals: c.steals.load(Ordering::Relaxed),
+        class_degraded: c.class_degraded.load(Ordering::Relaxed),
         timer_wakeups: c.timer_wakeups.load(Ordering::Relaxed),
         aging_effective_ms: c.aging_effective_us.load(Ordering::Relaxed) as f64 / 1e3,
     }
@@ -612,8 +726,9 @@ enum Event {
     /// the wake-up that lets a blocked-forever shard initiate a steal
     StealNudge,
     /// an idle shard asking this shard for one feasible queued task
-    /// (`free` = the thief's idle cores, the feasibility bound)
-    StealRequest { thief: usize, free: usize },
+    /// (`free` = the thief's idle cores *per class*, the feasibility
+    /// bound: the handover must fit some class in the task's try-order)
+    StealRequest { thief: usize, free: [usize; CoreClass::COUNT] },
     /// the victim's answer: a task whose `submitted` count travelled
     /// with it, or `None` (nothing feasible — the thief parks)
     Stolen(Option<Queued>),
@@ -635,6 +750,9 @@ struct Queued {
 struct Inflight {
     reply: Sender<Result<TaskDone>>,
     threads: usize,
+    /// the class whose ledger column the threads were taken from —
+    /// completion must return them to the same column
+    class: CoreClass,
     worker: usize,
     queue: Duration,
     backfilled: bool,
@@ -658,29 +776,21 @@ pub struct Scheduler {
     txs: Arc<Vec<Sender<Event>>>,
     /// per-shard counters, same order (aggregated by `stats`)
     shard_counters: Vec<Arc<Counters>>,
-    /// per-shard ledger slices (sum == `capacity`)
-    shard_caps: Vec<usize>,
+    /// per-shard per-class ledger slices (each class's column sums to
+    /// that class's core count)
+    shard_caps: Vec<[usize; CoreClass::COUNT]>,
     capacity: usize,
     next_id: AtomicU64,
     shards: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Scheduler {
-    /// Start the dispatcher shards over `runner`'s workers.
+    /// Start the dispatcher shards over `runner`'s workers. This is the
+    /// only constructor: the machine's [`CoreMap`] and the optional
+    /// adaptive policy both live in [`SchedConfig`].
     pub fn start(cfg: SchedConfig, runner: Arc<dyn TaskRunner>) -> Arc<Scheduler> {
-        Scheduler::start_with_policy(cfg, runner, None)
-    }
-
-    /// Start with an adaptive policy: each shard periodically re-derives
-    /// its effective aging bound from the policy's latency profiles (see
-    /// `engine::adaptive`). `None` keeps the static `cfg.aging` for the
-    /// scheduler's lifetime.
-    pub fn start_with_policy(
-        cfg: SchedConfig,
-        runner: Arc<dyn TaskRunner>,
-        policy: Option<Arc<AdaptivePolicy>>,
-    ) -> Arc<Scheduler> {
-        assert!(cfg.cores >= 1, "scheduler needs at least one core");
+        assert!(cfg.cores.total() >= 1, "scheduler needs at least one core");
+        let policy = cfg.adaptive.clone();
         let caps = cfg.ledger_slices();
         let n = caps.len();
         let mut txs = Vec::with_capacity(n);
@@ -697,11 +807,14 @@ impl Scheduler {
             c.aging_effective_us.store(cfg.aging.as_micros() as u64, Ordering::Relaxed);
         }
         let peer_counters = Arc::new(shard_counters.clone());
-        let peer_caps = Arc::new(caps.clone());
+        // totals per shard: peers only need the coarse "has spare cores"
+        // view for nudging; class fit is checked by the shards involved
+        let peer_caps =
+            Arc::new(caps.iter().map(|s| s.iter().sum::<usize>()).collect::<Vec<_>>());
         let mut joins = Vec::with_capacity(n);
         for (shard, rx) in rxs.into_iter().enumerate() {
             let state = DispatchState {
-                cfg,
+                cfg: cfg.clone(),
                 shard,
                 capacity: caps[shard],
                 counters: Arc::clone(&shard_counters[shard]),
@@ -734,7 +847,7 @@ impl Scheduler {
             txs,
             shard_counters,
             shard_caps: caps,
-            capacity: cfg.cores,
+            capacity: cfg.cores.total(),
             next_id: AtomicU64::new(0),
             shards: Mutex::new(joins),
         })
@@ -752,12 +865,15 @@ impl Scheduler {
 
     /// Submit a task; returns immediately with a completion handle. The
     /// task lands on shard `request_id % shards` (task id when no
-    /// request id is stamped) and its thread ask is clamped to that
-    /// shard's ledger slice.
+    /// request id is stamped) and its thread ask is clamped to the
+    /// *largest class column* of that shard's ledger slice — a task runs
+    /// wholly on one class, so that is the widest grant any placement
+    /// there can ever make.
     pub fn submit(&self, mut task: PartTask) -> SubmitHandle {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let shard = (task.request_id.unwrap_or(id) % self.txs.len() as u64) as usize;
-        task.threads = task.threads.clamp(1, self.shard_caps[shard]);
+        let widest = self.shard_caps[shard].iter().copied().max().unwrap_or(1);
+        task.threads = task.threads.clamp(1, widest);
         let cancel = task.cancel.clone();
         let (reply, rx) = channel();
         let queued =
@@ -823,7 +939,11 @@ impl Scheduler {
         for (i, c) in self.shard_counters.iter().enumerate().skip(1) {
             let s = stats_from(c, self.shard_caps[i], shards);
             agg.capacity += s.capacity;
+            agg.capacity_fast += s.capacity_fast;
+            agg.capacity_slow += s.capacity_slow;
             agg.cores_busy += s.cores_busy;
+            agg.busy_fast += s.busy_fast;
+            agg.busy_slow += s.busy_slow;
             agg.queue_depth += s.queue_depth;
             agg.queue_depth_high += s.queue_depth_high;
             agg.queue_depth_normal += s.queue_depth_normal;
@@ -842,6 +962,7 @@ impl Scheduler {
             agg.running_deadline_cancelled += s.running_deadline_cancelled;
             agg.running_deadline_cancelled_budget += s.running_deadline_cancelled_budget;
             agg.steals += s.steals;
+            agg.class_degraded += s.class_degraded;
             agg.timer_wakeups += s.timer_wakeups;
             agg.aging_effective_ms = agg.aging_effective_ms.max(s.aging_effective_ms);
         }
@@ -888,16 +1009,30 @@ fn has_queue_clock(q: &Queued) -> bool {
     q.task.deadline.is_some() || q.task.budget.is_some()
 }
 
+/// The class this task would be placed on given per-class `free` cores:
+/// the first class in its affinity try-order with room for its
+/// allocation. `None` means no class currently fits (the task waits —
+/// every placement decision, including backfill and steals, uses this
+/// same check, so affinity can delay or degrade a task but never
+/// strand it).
+fn fits_class(
+    task: &PartTask,
+    free: &[usize; CoreClass::COUNT],
+) -> Option<CoreClass> {
+    task.affinity.try_order().into_iter().find(|c| task.threads <= free[c.index()])
+}
+
 /// One shard's mutable scheduling state, owned by its dispatcher thread.
 struct DispatchState {
     cfg: SchedConfig,
     /// this shard's index (== position in `peers`)
     shard: usize,
-    /// this shard's ledger slice (the slices partition `cfg.cores`)
-    capacity: usize,
+    /// this shard's per-class ledger slice (the slices partition the
+    /// core map, class by class)
+    capacity: [usize; CoreClass::COUNT],
     counters: Arc<Counters>,
-    /// the shard's core ledger: free entries of its slice
-    free: usize,
+    /// the shard's core ledger: free entries of its slice, per class
+    free: [usize; CoreClass::COUNT],
     /// queued tasks, (priority desc, arrival) order
     pending: VecDeque<Queued>,
     /// queued-task tally by priority (kept incrementally: a full scan
@@ -1147,7 +1282,7 @@ impl DispatchState {
         if self.peers.len() <= 1
             || self.steal_outstanding
             || self.steal_parked
-            || self.free == 0
+            || self.free.iter().sum::<usize>() == 0
             || !self.pending.is_empty()
             || !self.drain_waiters.is_empty()
         {
@@ -1193,16 +1328,23 @@ impl DispatchState {
     }
 
     /// Victim side of a steal: hand over the oldest feasible queued
-    /// task — highest priority first (queue order), allocation within
-    /// the thief's free cores, not provably budget-infeasible. The
-    /// `submitted` count travels with the task: this shard releases it,
-    /// the thief re-counts it, so both invariants stay balanced.
-    fn answer_steal(&mut self, thief: usize, free: usize, shutting_down: bool) {
+    /// task — highest priority first (queue order), allocation fitting
+    /// *some class* of the thief's free cores (the task's own affinity
+    /// try-order decides which — stealing respects class feasibility),
+    /// not provably budget-infeasible. The `submitted` count travels
+    /// with the task: this shard releases it, the thief re-counts it,
+    /// so both invariants stay balanced.
+    fn answer_steal(
+        &mut self,
+        thief: usize,
+        free: [usize; CoreClass::COUNT],
+        shutting_down: bool,
+    ) {
         self.sweep_queue();
         let picked = self
             .pending
             .iter()
-            .position(|q| q.task.threads <= free && !q.task.infeasible())
+            .position(|q| fits_class(&q.task, &free).is_some() && !q.task.infeasible())
             .and_then(|i| self.take_queued(i));
         match picked {
             Some(q) => {
@@ -1289,17 +1431,19 @@ impl DispatchState {
     fn admit(&mut self) {
         self.sweep_queue();
         loop {
+            let free = self.free;
             let Some(head) = self.pending.front_mut() else { break };
-            if head.task.threads <= self.free {
+            if let Some(class) = fits_class(&head.task, &free) {
                 let q = self.take_queued(0).unwrap();
-                self.launch(q, false);
+                self.launch(q, false, class);
                 continue;
             }
-            // Head does not fit. Backfill a later task into the idle
-            // cores — but only while the head has been bypassed for
-            // less than the aging bound (clock starts the first time
-            // the head is considered for bypass, not at submission);
-            // past it, let the cores drain so the head runs next.
+            // Head does not fit any class it would accept. Backfill a
+            // later task into the idle cores — but only while the head
+            // has been bypassed for less than the aging bound (clock
+            // starts the first time the head is considered for bypass,
+            // not at submission); past it, let the cores drain so the
+            // head runs next.
             if !self.cfg.backfill {
                 break;
             }
@@ -1307,27 +1451,30 @@ impl DispatchState {
             if since.elapsed() >= self.effective_aging {
                 break;
             }
-            let fit = (1..self.pending.len())
-                .find(|&i| self.pending[i].task.threads <= self.free);
+            let fit = (1..self.pending.len()).find_map(|i| {
+                fits_class(&self.pending[i].task, &self.free).map(|c| (i, c))
+            });
             match fit {
                 // `backfills` is counted inside launch(), after its
                 // cancel check — a picked candidate whose token fired
                 // in the meantime is no bypass at all.
-                Some(i) => {
+                Some((i, class)) => {
                     let q = self.take_queued(i).unwrap();
-                    self.launch(q, true);
+                    self.launch(q, true, class);
                 }
                 None => break,
             }
         }
     }
 
-    /// Take cores from the shard's ledger slice and hand the task to a
-    /// worker — the runner's preferred one (observed-service-time
-    /// placement in the executor pool) or, for runners without an
-    /// opinion, this shard's least-loaded count. Completion comes back
-    /// as an [`Event::Done`].
-    fn launch(&mut self, q: Queued, backfilled: bool) {
+    /// Take cores from `class`'s column of the shard's ledger slice and
+    /// hand the task to a worker — the runner's preferred one
+    /// (observed-service-time placement in the executor pool) or, for
+    /// runners without an opinion, this shard's least-loaded count.
+    /// `class` is the placement `fits_class` decided; a launch on a
+    /// class other than the task's preferred one counts as a
+    /// degradation. Completion comes back as an [`Event::Done`].
+    fn launch(&mut self, q: Queued, backfilled: bool, class: CoreClass) {
         // `bypassed_since` is queue-side bookkeeping; it ends here.
         let Queued { id, task, reply, submitted, .. } = q;
         // Last-instant check: the token may have fired between the sweep
@@ -1348,9 +1495,15 @@ impl DispatchState {
         if backfilled {
             self.counters.backfills.fetch_add(1, Ordering::Relaxed);
         }
+        if matches!(task.affinity, ClassAffinity::Prefer(p) if p != class) {
+            self.counters.class_degraded.fetch_add(1, Ordering::Relaxed);
+        }
         let threads = task.threads;
-        debug_assert!(threads <= self.free, "ledger slice oversubscription");
-        self.free -= threads;
+        debug_assert!(
+            threads <= self.free[class.index()],
+            "ledger slice oversubscription ({class})"
+        );
+        self.free[class.index()] -= threads;
         let worker = match self.runner.preferred_worker() {
             Some(w) => w % self.worker_load.len(),
             None => self
@@ -1390,6 +1543,7 @@ impl DispatchState {
             Inflight {
                 reply,
                 threads,
+                class,
                 worker,
                 queue: submitted.elapsed(),
                 backfilled,
@@ -1400,11 +1554,13 @@ impl DispatchState {
             },
         );
         let tx = self.tx.clone();
+        let grant =
+            CoreGrant { threads, class, speed: self.cfg.cores.speed(class) };
         self.runner.run_on(
             worker,
             &task.model,
             task.inputs,
-            threads,
+            grant,
             task.cancel,
             Box::new(move |result| {
                 let _ = tx.send(Event::Done { id, result });
@@ -1467,8 +1623,13 @@ impl DispatchState {
         if inf.kill_at.is_some() {
             self.armed_deadlines -= 1;
         }
-        self.free += inf.threads;
-        debug_assert!(self.free <= self.capacity, "ledger slice over-release");
+        let ci = inf.class.index();
+        self.free[ci] += inf.threads;
+        debug_assert!(
+            self.free[ci] <= self.capacity[ci],
+            "ledger slice over-release ({})",
+            inf.class
+        );
         self.worker_load[inf.worker] = self.worker_load[inf.worker].saturating_sub(1);
         match result {
             Ok(res) => {
@@ -1479,6 +1640,7 @@ impl DispatchState {
                     queue: inf.queue,
                     threads: inf.threads,
                     worker: res.worker,
+                    class: inf.class,
                     backfilled: inf.backfilled,
                 }));
             }
@@ -1515,9 +1677,13 @@ impl DispatchState {
         self.counters.queue_depth_high.store(high, Ordering::Relaxed);
         self.counters.queue_depth_normal.store(normal, Ordering::Relaxed);
         self.counters.queue_depth_low.store(low, Ordering::Relaxed);
-        self.counters
-            .cores_busy
-            .store(self.capacity - self.free, Ordering::Relaxed);
+        let busy_fast = self.capacity[CoreClass::Fast.index()]
+            - self.free[CoreClass::Fast.index()];
+        let busy_slow = self.capacity[CoreClass::Slow.index()]
+            - self.free[CoreClass::Slow.index()];
+        self.counters.cores_busy.store(busy_fast + busy_slow, Ordering::Relaxed);
+        self.counters.busy_fast.store(busy_fast, Ordering::Relaxed);
+        self.counters.busy_slow.store(busy_slow, Ordering::Relaxed);
         self.counters.inflight.store(self.inflight.len(), Ordering::Relaxed);
         self.counters
             .aging_effective_us
@@ -1557,7 +1723,7 @@ mod tests {
             worker: usize,
             model: &str,
             _inputs: Vec<Tensor>,
-            _threads: usize,
+            _grant: CoreGrant,
             cancel: CancelToken,
             reply: ReplyFn,
         ) {
@@ -1587,7 +1753,7 @@ mod tests {
 
     fn sched(cores: usize) -> Arc<Scheduler> {
         Scheduler::start(
-            SchedConfig { cores, ..Default::default() },
+            SchedConfig { cores: CoreMap::homogeneous(cores), ..Default::default() },
             Arc::new(SleepRunner { workers: 2 }),
         )
     }
@@ -1595,7 +1761,19 @@ mod tests {
     /// Explicitly sharded scheduler for the multi-shard tests.
     fn sharded(cores: usize, shards: usize) -> Arc<Scheduler> {
         Scheduler::start(
-            SchedConfig { cores, shards, ..Default::default() },
+            SchedConfig {
+                cores: CoreMap::homogeneous(cores),
+                shards,
+                ..Default::default()
+            },
+            Arc::new(SleepRunner { workers: 2 }),
+        )
+    }
+
+    /// Single-shard scheduler on an explicit heterogeneous map.
+    fn hetero(map: CoreMap) -> Arc<Scheduler> {
+        Scheduler::start(
+            SchedConfig { cores: map, shards: 1, ..Default::default() },
             Arc::new(SleepRunner { workers: 2 }),
         )
     }
@@ -1732,7 +1910,7 @@ mod tests {
         // running_deadline_cancelled, and its cores returned.
         let s = Scheduler::start(
             SchedConfig {
-                cores: 2,
+                cores: CoreMap::homogeneous(2),
                 deadline_running: Some(Duration::from_millis(20)),
                 ..Default::default()
             },
@@ -1997,7 +2175,7 @@ mod tests {
         // request's own clock, so a 60ms task completes.
         let s = Scheduler::start(
             SchedConfig {
-                cores: 2,
+                cores: CoreMap::homogeneous(2),
                 deadline_running: Some(Duration::from_millis(20)),
                 ..Default::default()
             },
@@ -2208,7 +2386,7 @@ mod tests {
                 worker: usize,
                 _model: &str,
                 _inputs: Vec<Tensor>,
-                _threads: usize,
+                _grant: CoreGrant,
                 _cancel: CancelToken,
                 reply: ReplyFn,
             ) {
@@ -2222,7 +2400,7 @@ mod tests {
         }
         let seen = Arc::new(StdMutex::new(Vec::new()));
         let s = Scheduler::start(
-            SchedConfig { cores: 4, ..Default::default() },
+            SchedConfig { cores: CoreMap::homogeneous(4), ..Default::default() },
             Arc::new(PinningRunner { seen: Arc::clone(&seen) }),
         );
         for _ in 0..5 {
@@ -2231,5 +2409,169 @@ mod tests {
         let seen = seen.lock().unwrap();
         assert_eq!(seen.len(), 5);
         assert!(seen.iter().all(|&w| w == 2), "placement ignored: {seen:?}");
+    }
+
+    // ---- core classes ------------------------------------------------
+
+    #[test]
+    fn ledger_slices_are_per_class_and_cover_every_shard() {
+        // fast=2,slow=2 over 3 shards: both classes have remainder-only
+        // splits, and the rotating offset must keep them from piling
+        // onto the same shards — no shard may end up with [0, 0].
+        let cfg = SchedConfig {
+            cores: CoreMap::heterogeneous(2, 2),
+            shards: 3,
+            ..Default::default()
+        };
+        let slices = cfg.ledger_slices();
+        assert_eq!(slices.len(), 3);
+        let fast: usize = slices.iter().map(|s| s[0]).sum();
+        let slow: usize = slices.iter().map(|s| s[1]).sum();
+        assert_eq!(fast, 2, "{slices:?}");
+        assert_eq!(slow, 2, "{slices:?}");
+        assert!(
+            slices.iter().all(|s| s[0] + s[1] > 0),
+            "coreless shard: {slices:?}"
+        );
+        // homogeneous maps keep the old base+remainder split, all fast
+        let cfg = SchedConfig {
+            cores: CoreMap::homogeneous(10),
+            shards: 3,
+            ..Default::default()
+        };
+        assert_eq!(cfg.ledger_slices(), vec![[4, 0], [3, 0], [3, 0]]);
+    }
+
+    #[test]
+    fn affinity_places_on_its_class() {
+        // Both classes free: a Prefer task must land on its class and
+        // an Any task on the first declared class (fast) — and the
+        // grant's class must be reported back through TaskDone.
+        let s = hetero(CoreMap::heterogeneous(2, 2));
+        let done = s
+            .submit(
+                PartTask::new("sleep:1", Vec::new(), 1)
+                    .with_affinity(ClassAffinity::Prefer(CoreClass::Slow)),
+            )
+            .wait()
+            .unwrap();
+        assert_eq!(done.class, CoreClass::Slow);
+        let done = s
+            .submit(
+                PartTask::new("sleep:1", Vec::new(), 1)
+                    .with_affinity(ClassAffinity::Prefer(CoreClass::Fast)),
+            )
+            .wait()
+            .unwrap();
+        assert_eq!(done.class, CoreClass::Fast);
+        let done = s.submit(PartTask::new("sleep:1", Vec::new(), 1)).wait().unwrap();
+        assert_eq!(done.class, CoreClass::Fast, "Any is class-blind: fast first");
+        assert!(s.drain(Duration::from_secs(5)));
+        let st = s.stats();
+        assert_eq!(st.class_degraded, 0, "every task got its preference: {st:?}");
+        assert_eq!(st.busy_fast + st.busy_slow, 0, "{st:?}");
+        assert_eq!(st.capacity_fast, 2);
+        assert_eq!(st.capacity_slow, 2);
+    }
+
+    #[test]
+    fn exhausted_fast_class_degrades_to_slow() {
+        // One fast core held by a blocker: a Prefer(Fast) task must run
+        // on the slow class immediately (degrade, not wait), and the
+        // degradation must be counted.
+        let s = hetero(CoreMap::heterogeneous(1, 1));
+        let blocker = s.submit(
+            PartTask::new("sleep:40", Vec::new(), 1)
+                .with_affinity(ClassAffinity::Prefer(CoreClass::Fast)),
+        );
+        std::thread::sleep(Duration::from_millis(5)); // blocker on fast
+        let t0 = Instant::now();
+        let done = s
+            .submit(
+                PartTask::new("sleep:1", Vec::new(), 1)
+                    .with_affinity(ClassAffinity::Prefer(CoreClass::Fast)),
+            )
+            .wait()
+            .unwrap();
+        assert_eq!(done.class, CoreClass::Slow, "must degrade, not deadlock");
+        assert!(
+            t0.elapsed() < Duration::from_millis(30),
+            "degradation waited for the fast core: {:?}",
+            t0.elapsed()
+        );
+        blocker.wait().unwrap();
+        assert!(s.drain(Duration::from_secs(5)));
+        let st = s.stats();
+        assert_eq!(st.class_degraded, 1, "{st:?}");
+        assert_eq!(st.completed, 2, "{st:?}");
+    }
+
+    #[test]
+    fn grant_carries_class_speed_to_the_runner() {
+        use std::sync::Mutex as StdMutex;
+        struct GrantRecorder {
+            seen: Arc<StdMutex<Vec<CoreGrant>>>,
+        }
+        impl TaskRunner for GrantRecorder {
+            fn workers(&self) -> usize {
+                1
+            }
+            fn run_on(
+                &self,
+                worker: usize,
+                _model: &str,
+                _inputs: Vec<Tensor>,
+                grant: CoreGrant,
+                _cancel: CancelToken,
+                reply: ReplyFn,
+            ) {
+                self.seen.lock().unwrap().push(grant);
+                reply(Ok(ExecResult {
+                    outputs: Vec::new(),
+                    exec_time: Duration::from_micros(10),
+                    worker,
+                }));
+            }
+        }
+        let seen = Arc::new(StdMutex::new(Vec::new()));
+        let s = Scheduler::start(
+            SchedConfig {
+                cores: CoreMap::heterogeneous(2, 2).with_speed(CoreClass::Slow, 0.25),
+                shards: 1,
+                ..Default::default()
+            },
+            Arc::new(GrantRecorder { seen: Arc::clone(&seen) }),
+        );
+        s.submit(
+            PartTask::new("m", Vec::new(), 2)
+                .with_affinity(ClassAffinity::Prefer(CoreClass::Slow)),
+        )
+        .wait()
+        .unwrap();
+        s.submit(PartTask::new("m", Vec::new(), 2)).wait().unwrap();
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), 2);
+        assert_eq!(seen[0], CoreGrant { threads: 2, class: CoreClass::Slow, speed: 0.25 });
+        assert_eq!(seen[1], CoreGrant { threads: 2, class: CoreClass::Fast, speed: 1.0 });
+    }
+
+    #[test]
+    fn ctx_priority_derives_affinity_end_to_end() {
+        // A High-priority ctx implies Prefer(Fast); Low implies
+        // Prefer(Slow). Both free, so each lands on its derived class.
+        use crate::engine::ctx::RequestCtx;
+        let s = hetero(CoreMap::heterogeneous(2, 2));
+        let hi = RequestCtx::new().with_priority(Priority::High);
+        let done = s
+            .submit(PartTask::new("sleep:1", Vec::new(), 1).with_ctx(&hi))
+            .wait()
+            .unwrap();
+        assert_eq!(done.class, CoreClass::Fast);
+        let lo = RequestCtx::new().with_priority(Priority::Low);
+        let done = s
+            .submit(PartTask::new("sleep:1", Vec::new(), 1).with_ctx(&lo))
+            .wait()
+            .unwrap();
+        assert_eq!(done.class, CoreClass::Slow);
     }
 }

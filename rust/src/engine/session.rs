@@ -36,9 +36,10 @@ use anyhow::Result;
 use crate::runtime::{CancelToken, ExecutorPool, Manifest, Tensor};
 
 use super::adaptive::{AdaptiveConfig, AdaptivePolicy};
-use super::allocator::{allocate_weighted, weights, AllocPolicy};
+use super::allocator::{allocate, AllocPolicy, Allocation, PartWeights};
 use super::api::{InferenceService, PrunRequest, SubmitError, SubmitTicket};
 use super::ctx::RequestCtx;
+use super::ledger::{ClassAffinity, CoreMap};
 use super::part::{part_sizes, JobPart};
 use super::profile::ProfileStore;
 use super::sched::{PartTask, SchedConfig, Scheduler, SubmitHandle, TaskDone, TaskRunner};
@@ -79,7 +80,7 @@ pub struct PrunOutcome {
     /// per-part model outputs, input order
     pub outputs: Vec<Vec<Tensor>>,
     pub reports: Vec<PartReport>,
-    pub allocation: Vec<usize>,
+    pub allocation: Allocation,
     pub wall: Duration,
 }
 
@@ -92,14 +93,15 @@ pub struct PrunOutcome {
 pub struct PrunHandle {
     handles: Vec<SubmitHandle>,
     models: Vec<String>,
-    allocation: Vec<usize>,
+    allocation: Allocation,
     t0: Instant,
     profiles: Arc<ProfileStore>,
 }
 
 impl PrunHandle {
-    /// Listing-1 thread allocation chosen for the parts, input order.
-    pub fn allocation(&self) -> &[usize] {
+    /// Listing-1 thread allocation chosen for the parts (typed: per-part
+    /// counts in input order plus the per-class footprint).
+    pub fn allocation(&self) -> &Allocation {
         &self.allocation
     }
 
@@ -251,7 +253,7 @@ pub struct Session {
     // draining in-flight completions) before the executor pool goes away.
     sched: Arc<Scheduler>,
     pool: Arc<ExecutorPool>,
-    cores: usize,
+    cores: CoreMap,
     manifest: Arc<Manifest>,
     profiles: Arc<ProfileStore>,
     /// adaptive mode: profiled core sizing + aging recalibration
@@ -259,11 +261,17 @@ pub struct Session {
 }
 
 impl Session {
-    /// `cores` is the virtual core budget C the allocator divides;
-    /// `workers` is the number of real executor threads (usually = the
-    /// machine's available parallelism).
+    /// `cores` is the virtual core budget C the allocator divides
+    /// (a homogeneous all-Fast map — use [`with_config`](Self::with_config)
+    /// with a [`CoreMap`] for heterogeneous machines); `workers` is the
+    /// number of real executor threads (usually = the machine's
+    /// available parallelism).
     pub fn new(manifest: Arc<Manifest>, cores: usize, workers: usize) -> Result<Session> {
-        Session::with_config(manifest, SchedConfig { cores, ..SchedConfig::default() }, workers)
+        Session::with_config(
+            manifest,
+            SchedConfig { cores: CoreMap::homogeneous(cores), ..SchedConfig::default() },
+            workers,
+        )
     }
 
     /// Full control over scheduler tuning (aging bound, backfill,
@@ -299,10 +307,16 @@ impl Session {
         let pool = Arc::new(ExecutorPool::new(Arc::clone(&manifest), workers)?);
         let runner: Arc<dyn TaskRunner> = Arc::clone(&pool) as Arc<dyn TaskRunner>;
         let profiles = Arc::new(ProfileStore::new());
-        let adaptive =
-            acfg.map(|a| Arc::new(AdaptivePolicy::new(Arc::clone(&profiles), a)));
-        let sched = Scheduler::start_with_policy(cfg, runner, adaptive.clone());
-        Ok(Session { sched, pool, cores: cfg.cores, manifest, profiles, adaptive })
+        // An explicitly requested adaptive config wins; otherwise honor
+        // a policy the caller pre-wired into the SchedConfig itself.
+        let adaptive = match acfg {
+            Some(a) => Some(Arc::new(AdaptivePolicy::new(Arc::clone(&profiles), a))),
+            None => cfg.adaptive.clone(),
+        };
+        let cores = cfg.cores;
+        let sched =
+            Scheduler::start(SchedConfig { adaptive: adaptive.clone(), ..cfg }, runner);
+        Ok(Session { sched, pool, cores, manifest, profiles, adaptive })
     }
 
     /// Online latency profiles observed by this session.
@@ -315,7 +329,13 @@ impl Session {
         self.adaptive.as_ref()
     }
 
+    /// Total virtual core budget C (all classes).
     pub fn cores(&self) -> usize {
+        self.cores.total()
+    }
+
+    /// The machine's core-class inventory this session schedules over.
+    pub fn core_map(&self) -> CoreMap {
         self.cores
     }
 
@@ -384,7 +404,7 @@ impl Session {
             return PrunHandle {
                 handles: Vec::new(),
                 models: Vec::new(),
-                allocation: Vec::new(),
+                allocation: Allocation::default(),
                 t0,
                 profiles: Arc::clone(&self.profiles),
             };
@@ -395,26 +415,27 @@ impl Session {
         // cost" with the profiling phase done online. Otherwise the
         // caller's weight source decides.
         let profiled = self.adaptive.is_some() || wsrc == WeightSource::Profiled;
-        let w = if profiled {
+        let allocation = if profiled {
             let keyed: Vec<(&str, usize)> = parts
                 .iter()
                 .zip(sizes.iter())
                 .map(|(p, &s)| (p.model.as_str(), s))
                 .collect();
-            self.profiles.weights(&keyed)
+            let w = self.profiles.weights(&keyed);
+            allocate(PartWeights::Measured(&w), &self.cores, policy)
         } else {
-            weights(&sizes)
+            allocate(PartWeights::Sizes(&sizes), &self.cores, policy)
         };
-        let allocation = allocate_weighted(&w, self.cores, policy);
         // Observability: how many parts the profile feedback actually
         // moved away from the size-proportional split. The shadow
         // allocation is skipped while nothing is profiled yet (the
         // weights are then identical by construction).
         if self.adaptive.is_some() && !self.profiles.is_empty() {
-            let size_alloc = allocate_weighted(&weights(&sizes), self.cores, policy);
+            let size_alloc = allocate(PartWeights::Sizes(&sizes), &self.cores, policy);
             let moved = allocation
+                .threads()
                 .iter()
-                .zip(size_alloc.iter())
+                .zip(size_alloc.threads().iter())
                 .filter(|(a, b)| a != b)
                 .count() as u64;
             self.sched.note_adaptive_resizes(moved);
@@ -426,8 +447,8 @@ impl Session {
         // ~120 KiB; cloning per part dominated dispatch overhead).
         let handles: Vec<SubmitHandle> = parts
             .into_iter()
-            .zip(allocation.iter())
-            .map(|(part, &threads)| {
+            .zip(allocation.threads().to_vec())
+            .map(|(part, threads)| {
                 let JobPart { model, inputs, ctx: part_ctx } = part;
                 // Per-part ctx wins over the job-wide one: each part of
                 // a serving batch answers its own request, and its own
@@ -437,6 +458,13 @@ impl Session {
                     .with_ctx(part_ctx.as_ref().unwrap_or(ctx));
                 task.deadline = deadline;
                 task.running_deadline = running_deadline;
+                // Class placement: a ctx that stayed class-blind defers
+                // to the online profiles — measured hogs keep off the
+                // Fast cores, measured latency-critical models get them
+                // (inert on a homogeneous CoreMap).
+                if task.affinity == ClassAffinity::Any {
+                    task.affinity = self.profiles.suggest_affinity(&task.model);
+                }
                 // Budget-aware admission: when the request is budgeted
                 // but its ingress supplied no cost hint, consult the
                 // online profiles — a model whose trusted p95 already
@@ -465,7 +493,7 @@ impl InferenceService for Session {
     /// [`TaskDone`] per part, input order, with typed [`SubmitError`]s.
     fn submit(&self, req: PrunRequest, ctx: RequestCtx) -> SubmitTicket<TaskDone> {
         let handle = self.submit_job(req, &ctx);
-        let allocation = handle.allocation().to_vec();
+        let allocation = handle.allocation().clone();
         let n = handle.len();
         let mut tokens = handle.tokens();
         tokens.push(ctx.token());
@@ -488,6 +516,7 @@ impl InferenceService for Session {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::ledger::CoreGrant;
     use crate::engine::sched::{SchedConfig, Scheduler, TaskRunner};
     use crate::runtime::{ExecResult, ReplyFn};
 
@@ -508,7 +537,7 @@ mod tests {
             worker: usize,
             _model: &str,
             _inputs: Vec<Tensor>,
-            _threads: usize,
+            _grant: CoreGrant,
             cancel: CancelToken,
             reply: ReplyFn,
         ) {
@@ -539,7 +568,7 @@ mod tests {
         PrunHandle {
             handles: vec![h],
             models: vec!["m".to_string()],
-            allocation: vec![1],
+            allocation: Allocation::of(vec![1], &CoreMap::homogeneous(2)),
             t0: Instant::now(),
             profiles: Arc::clone(profiles),
         }
@@ -548,7 +577,7 @@ mod tests {
     #[test]
     fn killed_parts_do_not_feed_the_profile_window() {
         let sched = Scheduler::start(
-            SchedConfig { cores: 2, ..Default::default() },
+            SchedConfig { cores: CoreMap::homogeneous(2), ..Default::default() },
             Arc::new(TruncatingRunner),
         );
         let profiles = Arc::new(ProfileStore::new());
@@ -569,7 +598,7 @@ mod tests {
     #[test]
     fn surviving_parts_still_observe() {
         let sched = Scheduler::start(
-            SchedConfig { cores: 2, ..Default::default() },
+            SchedConfig { cores: CoreMap::homogeneous(2), ..Default::default() },
             Arc::new(TruncatingRunner),
         );
         let profiles = Arc::new(ProfileStore::new());

@@ -49,7 +49,7 @@ fn main() {
 const HELP: &str = "dnc-serve — Divide-and-Conquer inference serving
 
 USAGE:
-  dnc-serve serve   [--port P] [--cores C] [--workers W] [--policy POLICY]
+  dnc-serve serve   [--port P] [--cores SPEC] [--workers W] [--policy POLICY]
                     [--max-batch N] [--max-wait-ms T] [--aging-ms T]
                     [--adaptive] [--deadline-running-ms T]
                     [--request-timeout-ms T] [--ocr-timeout-ms T]
@@ -60,6 +60,11 @@ USAGE:
                     [--reps N] [--seed S] [--cores C]
   dnc-serve figures [--only LIST] [--reps N]   regenerate the paper's figures
   dnc-serve info                               artifact + machine + sched summary
+
+CORES SPEC:
+  --cores 16                   homogeneous core budget (the default)
+  --cores fast=4,slow=12       heterogeneous classes; slow runs at 0.5x
+  --cores fast=4,slow=12@0.3   ...with an explicit relative speed per class
 ";
 
 fn load_stack(cfg: &Config) -> Result<(Arc<Session>, OcrMeta)> {

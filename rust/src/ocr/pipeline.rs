@@ -24,8 +24,8 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::engine::{
-    AllocPolicy, InferenceService, JobPart, PrunRequest, RequestCtx, SchedError, Session,
-    SubmitError, SubmitTicket, TaskCancelled,
+    AllocPolicy, Allocation, InferenceService, JobPart, PrunRequest, RequestCtx, SchedError,
+    Session, SubmitError, SubmitTicket, TaskCancelled,
 };
 use crate::runtime::Tensor;
 use crate::simcpu::ocr::OcrVariant;
@@ -136,7 +136,7 @@ impl InferenceService for OcrPipeline {
         let token = ctx.token();
         SubmitTicket::pending(
             ctx,
-            Vec::new(), // phases size themselves as they go
+            Allocation::default(), // phases size themselves as they go
             vec![token],
             1,
             Box::new(move |deadline| {

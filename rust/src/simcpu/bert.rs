@@ -11,7 +11,8 @@
 //!   *exact* length, threads allocated by `engine::allocator`, parts
 //!   co-scheduled by the DES.
 
-use crate::engine::allocator::{allocate, AllocPolicy};
+use crate::engine::allocator::{allocate, AllocPolicy, PartWeights};
+use crate::engine::ledger::CoreMap;
 
 use super::calib;
 use super::des::{simulate, simulate_sequential, SimPart, SimReport};
@@ -38,7 +39,9 @@ pub fn sim_no_batch(lens: &[usize], cores: usize) -> f64 {
 /// threads given to the long sequence).
 pub fn sim_prun_report(lens: &[usize], cores: usize, policy: AllocPolicy) -> (SimReport, Vec<usize>) {
     let sizes: Vec<usize> = lens.to_vec(); // weight proxy = token count
-    let allocation = allocate(&sizes, cores, policy);
+    let allocation =
+        allocate(PartWeights::Sizes(&sizes), &CoreMap::homogeneous(cores), policy)
+            .into_threads();
     let parts: Vec<SimPart> = lens.iter().map(|&l| bert_part(1, l)).collect();
     let report = simulate(&parts, &allocation, cores);
     (report, allocation)

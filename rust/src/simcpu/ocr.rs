@@ -7,7 +7,8 @@
 //! batch a `run` with all cores — the paper's Listing 2) or via `prun`
 //! (one part per box at exact width, threads from the allocator).
 
-use crate::engine::allocator::{allocate, AllocPolicy};
+use crate::engine::allocator::{allocate, AllocPolicy, PartWeights};
+use crate::engine::ledger::CoreMap;
 
 use super::calib;
 use super::des::{simulate, simulate_sequential, SimPart};
@@ -82,7 +83,9 @@ fn phase_ms(
         }
         OcrVariant::Prun(policy) => {
             let prof = calib::prun_profile(profile);
-            let allocation = allocate(widths, cores, policy);
+            let allocation =
+                allocate(PartWeights::Sizes(widths), &CoreMap::homogeneous(cores), policy)
+                    .into_threads();
             let parts: Vec<SimPart> =
                 widths.iter().map(|&w| SimPart::new(t1_per_px(w), prof)).collect();
             simulate(&parts, &allocation, cores).makespan_ms
@@ -109,7 +112,9 @@ pub fn sim_image_pool_reuse(
             // prun path with base-style (dispatch-only) profile: pools
             // are warm, creation cost gone.
             let prof = calib::base_profile(profile);
-            let allocation = allocate(box_widths, cores, policy);
+            let allocation =
+                allocate(PartWeights::Sizes(box_widths), &CoreMap::homogeneous(cores), policy)
+                    .into_threads();
             let parts: Vec<SimPart> = box_widths
                 .iter()
                 .map(|&w| SimPart::new(t1_per_px(w), prof))

@@ -50,6 +50,17 @@ impl ScalProfile {
             + self.pool_per_thread_ms * c_f
     }
 
+    /// [`time_ms`](Self::time_ms) on cores of relative speed `speed`
+    /// (1.0 = the baseline class). The whole three-term cost divides by
+    /// the speed: on a half-speed core the compute, the coordination
+    /// *and* the pool setup all take twice the wall-clock — which is
+    /// what makes class-blind placement invert latency on mixed
+    /// fast/slow machines (`engine::ledger`).
+    pub fn time_ms_at(&self, t1_ms: f64, c: usize, speed: f64) -> f64 {
+        assert!(speed > 0.0, "relative core speed must be positive");
+        self.time_ms(t1_ms, c) / speed
+    }
+
     /// Speedup over 1 thread (can be < 1: negative scaling).
     pub fn speedup(&self, t1_ms: f64, c: usize) -> f64 {
         self.time_ms(t1_ms, 1) / self.time_ms(t1_ms, c)
@@ -120,5 +131,14 @@ mod tests {
     fn time_monotone_in_t1() {
         let p = ScalProfile::new(0.2, 1.0);
         assert!(p.time_ms(200.0, 8) > p.time_ms(100.0, 8));
+    }
+
+    #[test]
+    fn slow_cores_stretch_the_whole_cost() {
+        let p = ScalProfile::new(0.3, 1.0).with_pool_cost(2.0, 0.5);
+        let fast = p.time_ms_at(100.0, 4, 1.0);
+        assert!((fast - p.time_ms(100.0, 4)).abs() < 1e-12, "speed 1.0 is the identity");
+        let slow = p.time_ms_at(100.0, 4, 0.5);
+        assert!((slow - 2.0 * fast).abs() < 1e-9, "half speed doubles wall-clock");
     }
 }

@@ -18,7 +18,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::engine::{
-    InferenceService, JobPart, PrunRequest, RequestCtx, Session, SubmitError, SubmitTicket,
+    Allocation, InferenceService, JobPart, PrunRequest, RequestCtx, Session, SubmitError,
+    SubmitTicket,
 };
 use crate::ocr::decode;
 use crate::ocr::imagegen::{crop_tensor, Image};
@@ -152,7 +153,7 @@ impl InferenceService for VideoPipeline {
                 let lazy_ctx = ctx.clone();
                 SubmitTicket::pending(
                     ctx,
-                    Vec::new(),
+                    Allocation::default(),
                     vec![token],
                     1,
                     Box::new(move |deadline| {

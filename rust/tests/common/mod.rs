@@ -8,7 +8,8 @@ use std::time::Duration;
 
 use dnc_serve::coordinator::{Batcher, EmbedRequest};
 use dnc_serve::engine::{
-    Budget, PartTask, RequestCtx, SchedConfig, Scheduler, SubmitError, TaskRunner,
+    Budget, CoreGrant, CoreMap, PartTask, RequestCtx, SchedConfig, Scheduler,
+    SubmitError, TaskRunner,
 };
 use dnc_serve::runtime::{CancelToken, ExecResult, ReplyFn, TaskCancelled, Tensor};
 
@@ -39,7 +40,7 @@ impl TaskRunner for StallRunner {
         worker: usize,
         _model: &str,
         _inputs: Vec<Tensor>,
-        _threads: usize,
+        _grant: CoreGrant,
         cancel: CancelToken,
         reply: ReplyFn,
     ) {
@@ -112,7 +113,11 @@ pub fn embed_stack_probed(
     let runner = StallRunner::new(2);
     let seen_tokens = Arc::clone(&runner.seen_tokens);
     let sched = Scheduler::start(
-        SchedConfig { cores, aging: Duration::from_millis(10), ..Default::default() },
+        SchedConfig {
+            cores: CoreMap::homogeneous(cores),
+            aging: Duration::from_millis(10),
+            ..Default::default()
+        },
         Arc::new(runner),
     );
     let probe = LayerProbe::default();

@@ -16,8 +16,8 @@ use std::time::{Duration, Instant};
 
 use dnc_serve::bench::gate::{longshort_scenario, sim_model, SimRunner};
 use dnc_serve::engine::{
-    AdaptiveConfig, AdaptivePolicy, PartTask, ProfileStore, SchedConfig, SchedError,
-    Scheduler,
+    AdaptiveConfig, AdaptivePolicy, CoreMap, PartTask, ProfileStore, SchedConfig,
+    SchedError, Scheduler,
 };
 
 fn sim_sched(cfg: SchedConfig) -> Arc<Scheduler> {
@@ -27,7 +27,7 @@ fn sim_sched(cfg: SchedConfig) -> Arc<Scheduler> {
 #[test]
 fn running_part_past_deadline_is_cancelled_and_cores_reclaimed() {
     let sched = sim_sched(SchedConfig {
-        cores: 4,
+        cores: CoreMap::homogeneous(4),
         deadline_running: Some(Duration::from_millis(50)),
         ..Default::default()
     });
@@ -81,10 +81,9 @@ fn adaptive_aging_recalibrates_from_observed_latency() {
             max_aging: Duration::from_millis(1000),
         },
     ));
-    let sched = Scheduler::start_with_policy(
-        SchedConfig::default(),
+    let sched = Scheduler::start(
+        SchedConfig { adaptive: Some(policy), ..SchedConfig::default() },
         Arc::new(SimRunner { workers: 2 }),
-        Some(policy),
     );
     assert!(
         (sched.stats().aging_effective_ms - 50.0).abs() < 1.0,

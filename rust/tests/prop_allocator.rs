@@ -1,6 +1,9 @@
-//! Property tests for the paper's Listing-1 allocator (DESIGN.md §8).
+//! Property tests for the paper's Listing-1 allocator (DESIGN.md §8),
+//! against the 0.5 typed entry point: `allocate(PartWeights, &CoreMap,
+//! policy) -> Allocation`.
 
-use dnc_serve::engine::allocator::{allocate, weights, AllocPolicy};
+use dnc_serve::engine::allocator::{allocate, AllocPolicy, Allocation, PartWeights};
+use dnc_serve::engine::ledger::{CoreClass, CoreMap};
 use dnc_serve::util::prop::check;
 
 const CASES: u64 = 500;
@@ -10,15 +13,35 @@ fn gen_sizes(g: &mut dnc_serve::util::prop::Gen) -> Vec<usize> {
     g.vec(k, |g| g.usize_in(1, 10_000))
 }
 
+/// A random machine: homogeneous, or a fast/slow split of the same
+/// total — the allocator's thread counts must only depend on the total.
+fn gen_map(g: &mut dnc_serve::util::prop::Gen, cores: usize) -> CoreMap {
+    if cores >= 2 && g.bool() {
+        let fast = g.usize_in(1, cores - 1);
+        CoreMap::heterogeneous(fast, cores - fast)
+    } else {
+        CoreMap::homogeneous(cores)
+    }
+}
+
+/// The size-proportional weights prun-def derives (`w_i = s_i / Σs`),
+/// recomputed here so properties can reason about clamping pressure
+/// without reaching into the crate-private helper.
+fn size_weights(sizes: &[usize]) -> Vec<f64> {
+    let total: usize = sizes.iter().sum();
+    sizes.iter().map(|&s| s as f64 / total as f64).collect()
+}
+
 #[test]
 fn every_part_gets_at_least_one_thread() {
     check(CASES, |g| {
         let sizes = gen_sizes(g);
         let cores = g.usize_in(1, 64);
+        let map = gen_map(g, cores);
         for policy in [AllocPolicy::PrunDef, AllocPolicy::PrunOne, AllocPolicy::PrunEq] {
-            let alloc = allocate(&sizes, cores, policy);
+            let alloc = allocate(PartWeights::Sizes(&sizes), &map, policy);
             assert_eq!(alloc.len(), sizes.len());
-            assert!(alloc.iter().all(|&c| c >= 1), "{policy:?} {alloc:?}");
+            assert!(alloc.threads().iter().all(|&c| c >= 1), "{policy:?} {alloc:?}");
         }
     });
 }
@@ -31,12 +54,13 @@ fn prun_def_exactly_fills_cores_when_parts_fit() {
         let cores = g.usize_in(1, 64);
         let k = g.usize_in(1, cores);
         let sizes: Vec<usize> = g.vec(k, |g| g.usize_in(1, 10_000));
-        let alloc = allocate(&sizes, cores, AllocPolicy::PrunDef);
-        let total: usize = alloc.iter().sum();
+        let map = gen_map(g, cores);
+        let alloc = allocate(PartWeights::Sizes(&sizes), &map, AllocPolicy::PrunDef);
+        let total = alloc.total_threads();
         // clamping to >=1 can push the total above C, never below
         assert!(total >= cores, "sizes={sizes:?} cores={cores} alloc={alloc:?}");
         // without clamping pressure (every floor >= 1), total == C
-        let w = weights(&sizes);
+        let w = size_weights(&sizes);
         if w.iter().all(|&wi| wi * cores as f64 >= 1.0) {
             assert_eq!(total, cores, "sizes={sizes:?} alloc={alloc:?}");
         }
@@ -49,8 +73,9 @@ fn more_parts_than_cores_means_one_thread_each() {
         let cores = g.usize_in(1, 32);
         let k = cores + g.usize_in(1, 64);
         let sizes: Vec<usize> = g.vec(k, |g| g.usize_in(1, 10_000));
-        let alloc = allocate(&sizes, cores, AllocPolicy::PrunDef);
-        assert!(alloc.iter().all(|&c| c == 1), "k={k} cores={cores}");
+        let map = gen_map(g, cores);
+        let alloc = allocate(PartWeights::Sizes(&sizes), &map, AllocPolicy::PrunDef);
+        assert!(alloc.threads().iter().all(|&c| c == 1), "k={k} cores={cores}");
     });
 }
 
@@ -60,7 +85,12 @@ fn allocation_monotone_in_size() {
     check(CASES, |g| {
         let sizes = gen_sizes(g);
         let cores = g.usize_in(1, 64);
-        let alloc = allocate(&sizes, cores, AllocPolicy::PrunDef);
+        let alloc = allocate(
+            PartWeights::Sizes(&sizes),
+            &gen_map(g, cores),
+            AllocPolicy::PrunDef,
+        )
+        .into_threads();
         for i in 0..sizes.len() {
             for j in 0..sizes.len() {
                 if sizes[i] > sizes[j] {
@@ -81,7 +111,12 @@ fn equal_sizes_get_near_equal_threads() {
         let cores = g.usize_in(1, 64);
         let k = g.usize_in(1, 64);
         let size = g.usize_in(1, 10_000);
-        let alloc = allocate(&vec![size; k], cores, AllocPolicy::PrunDef);
+        let alloc = allocate(
+            PartWeights::Sizes(&vec![size; k]),
+            &gen_map(g, cores),
+            AllocPolicy::PrunDef,
+        )
+        .into_threads();
         let min = *alloc.iter().min().unwrap();
         let max = *alloc.iter().max().unwrap();
         assert!(max - min <= 1, "equal parts differ by >1: {alloc:?}");
@@ -94,13 +129,16 @@ fn permutation_equivariant() {
     check(CASES, |g| {
         let sizes = gen_sizes(g);
         let cores = g.usize_in(1, 64);
-        let alloc = allocate(&sizes, cores, AllocPolicy::PrunDef);
+        let map = gen_map(g, cores);
+        let alloc =
+            allocate(PartWeights::Sizes(&sizes), &map, AllocPolicy::PrunDef).into_threads();
         let mut idx: Vec<usize> = (0..sizes.len()).collect();
         // deterministic rotation as the permutation
         let rot = g.usize_in(0, sizes.len() - 1);
         idx.rotate_left(rot);
         let permuted: Vec<usize> = idx.iter().map(|&i| sizes[i]).collect();
-        let alloc_p = allocate(&permuted, cores, AllocPolicy::PrunDef);
+        let alloc_p =
+            allocate(PartWeights::Sizes(&permuted), &map, AllocPolicy::PrunDef).into_threads();
         // sizes can repeat: compare as multisets keyed by size
         let mut a: Vec<(usize, usize)> = sizes.iter().cloned().zip(alloc.iter().cloned()).collect();
         let mut b: Vec<(usize, usize)> =
@@ -116,22 +154,70 @@ fn allocation_bounded_by_cores() {
     check(CASES, |g| {
         let sizes = gen_sizes(g);
         let cores = g.usize_in(1, 64);
-        let alloc = allocate(&sizes, cores, AllocPolicy::PrunDef);
-        assert!(alloc.iter().all(|&c| c <= cores), "{alloc:?}");
+        let alloc = allocate(
+            PartWeights::Sizes(&sizes),
+            &gen_map(g, cores),
+            AllocPolicy::PrunDef,
+        );
+        assert!(alloc.threads().iter().all(|&c| c <= cores), "{alloc:?}");
     });
 }
 
 #[test]
-fn weights_normalized_and_proportional() {
+fn measured_weights_reproduce_the_size_path() {
+    // Feeding the size-derived weights back through
+    // `PartWeights::Measured` is the identity: the two entry shapes
+    // share the Listing-1 code path bit for bit.
     check(CASES, |g| {
         let sizes = gen_sizes(g);
-        let w = weights(&sizes);
-        let sum: f64 = w.iter().sum();
-        assert!((sum - 1.0).abs() < 1e-9);
-        let total: usize = sizes.iter().sum();
-        for (wi, &si) in w.iter().zip(sizes.iter()) {
-            assert!((wi - si as f64 / total as f64).abs() < 1e-12);
+        let cores = g.usize_in(1, 64);
+        let map = gen_map(g, cores);
+        let w = size_weights(&sizes);
+        let via_sizes = allocate(PartWeights::Sizes(&sizes), &map, AllocPolicy::PrunDef);
+        let via_weights =
+            allocate(PartWeights::Measured(&w), &map, AllocPolicy::PrunDef);
+        assert_eq!(via_sizes, via_weights);
+    });
+}
+
+#[test]
+fn thread_counts_ignore_the_class_split() {
+    // The machine's class composition must not change *how many*
+    // threads each part gets — only the footprint summary. (Placement
+    // is the scheduler's job, not the allocator's.)
+    check(CASES, |g| {
+        let sizes = gen_sizes(g);
+        let cores = g.usize_in(2, 64);
+        let fast = g.usize_in(1, cores - 1);
+        let split = CoreMap::heterogeneous(fast, cores - fast);
+        let flat = CoreMap::homogeneous(cores);
+        for policy in [AllocPolicy::PrunDef, AllocPolicy::PrunOne, AllocPolicy::PrunEq] {
+            let a = allocate(PartWeights::Sizes(&sizes), &split, policy);
+            let b = allocate(PartWeights::Sizes(&sizes), &flat, policy);
+            assert_eq!(a.threads(), b.threads(), "{policy:?}");
         }
+    });
+}
+
+#[test]
+fn per_class_footprint_is_fast_first_and_bounded() {
+    // The first-wave footprint charges Fast before Slow, never exceeds
+    // a class's core count, and sums to min(total_threads, C).
+    check(CASES, |g| {
+        let sizes = gen_sizes(g);
+        let cores = g.usize_in(1, 64);
+        let map = gen_map(g, cores);
+        let a = allocate(PartWeights::Sizes(&sizes), &map, AllocPolicy::PrunDef);
+        let [fast, slow] = a.per_class();
+        assert!(fast <= map.count(CoreClass::Fast), "{a:?}");
+        assert!(slow <= map.count(CoreClass::Slow), "{a:?}");
+        assert_eq!(fast + slow, a.total_threads().min(cores), "{a:?}");
+        // fast-first: Slow is only charged once Fast is saturated
+        if slow > 0 {
+            assert_eq!(fast, map.count(CoreClass::Fast), "{a:?}");
+        }
+        // `Allocation::of` round-trips the same plan
+        assert_eq!(a, Allocation::of(a.threads().to_vec(), &map));
     });
 }
 
@@ -140,8 +226,12 @@ fn prun_eq_uniform() {
     check(CASES, |g| {
         let sizes = gen_sizes(g);
         let cores = g.usize_in(1, 64);
-        let alloc = allocate(&sizes, cores, AllocPolicy::PrunEq);
+        let alloc = allocate(
+            PartWeights::Sizes(&sizes),
+            &gen_map(g, cores),
+            AllocPolicy::PrunEq,
+        );
         let expect = std::cmp::max(1, cores / sizes.len());
-        assert!(alloc.iter().all(|&c| c == expect));
+        assert!(alloc.threads().iter().all(|&c| c == expect));
     });
 }

@@ -65,11 +65,15 @@ fn prun_allocation_matches_allocator() {
             .map(|i| bert_part(*g.choice(&[16usize, 64]), i as i32))
             .collect();
         let sizes: Vec<usize> = parts.iter().map(|p| p.size()).collect();
-        let expect = dnc_serve::engine::allocate(&sizes, 16, AllocPolicy::PrunDef);
+        let expect = dnc_serve::engine::allocate(
+            dnc_serve::engine::PartWeights::Sizes(&sizes),
+            &dnc_serve::engine::CoreMap::homogeneous(16),
+            AllocPolicy::PrunDef,
+        );
         let outcome = sess.prun(PrunRequest::new(parts), &RequestCtx::new()).unwrap();
         assert_eq!(outcome.allocation, expect);
         // every report carries its allocation
-        for (r, &e) in outcome.reports.iter().zip(expect.iter()) {
+        for (r, &e) in outcome.reports.iter().zip(expect.threads().iter()) {
             assert_eq!(r.threads, e);
         }
     });
@@ -93,7 +97,7 @@ fn prun_single_part_equals_run() {
     let solo = sess.run(&part.model, part.inputs.clone()).unwrap();
     let outcome = sess.prun(PrunRequest::single(part), &RequestCtx::new()).unwrap();
     assert_eq!(outcome.outputs[0], solo);
-    assert_eq!(outcome.allocation, vec![16]);
+    assert_eq!(outcome.allocation.threads(), &[16]);
 }
 
 #[test]

@@ -28,15 +28,22 @@
 //!   infeasible tasks in `budget_infeasible` — never a queue slot,
 //!   never a worker — and the invariant, now `submitted == completed +
 //!   failed + deadline_rejected + budget_expired + budget_infeasible +
-//!   cancelled`, still balances.
+//!   cancelled`, still balances;
+//! - on a heterogeneous [`CoreMap`], **no shard's per-class ledger
+//!   slice is ever oversubscribed** — even with work stealing active
+//!   under mixed-affinity load;
+//! - when the Fast class is exhausted, `Prefer(Fast)` work **degrades
+//!   to Slow** (counted in `class_degraded`) instead of deadlocking or
+//!   being rejected.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dnc_serve::engine::{
-    allocate_weighted, AdaptiveConfig, AdaptivePolicy, AllocPolicy, Budget, PartTask,
-    Priority, ProfileStore, SchedConfig, SchedError, Scheduler, TaskRunner,
+    allocate, AdaptiveConfig, AdaptivePolicy, AllocPolicy, Budget, ClassAffinity,
+    CoreClass, CoreGrant, CoreMap, PartTask, PartWeights, Priority, ProfileStore,
+    SchedConfig, SchedError, Scheduler, TaskRunner,
 };
 use dnc_serve::runtime::{CancelToken, ExecResult, ReplyFn, TaskCancelled, Tensor};
 use dnc_serve::util::prop::check;
@@ -92,11 +99,12 @@ impl TaskRunner for TrackingRunner {
         worker: usize,
         model: &str,
         _inputs: Vec<Tensor>,
-        threads: usize,
+        grant: CoreGrant,
         cancel: CancelToken,
         reply: ReplyFn,
     ) {
         let sleep_ms = parse_sleep(model);
+        let threads = grant.threads;
         let probe = self.probe.clone();
         std::thread::spawn(move || {
             if cancel.is_cancelled() {
@@ -159,7 +167,7 @@ fn never_oversubscribes_and_everything_completes() {
     check(3, |g| {
         let capacity = *g.choice(&[4usize, 8, 16]);
         let (sched, probe) = tracking_sched(SchedConfig {
-            cores: capacity,
+            cores: CoreMap::homogeneous(capacity),
             aging: Duration::from_millis(10),
             backfill: true,
             ..Default::default()
@@ -226,7 +234,7 @@ fn large_part_never_starved_past_aging_bound() {
     let capacity = 4;
     let aging = Duration::from_millis(25);
     let (sched, probe) = tracking_sched(SchedConfig {
-        cores: capacity,
+        cores: CoreMap::homogeneous(capacity),
         aging,
         backfill: true,
         ..Default::default()
@@ -269,7 +277,7 @@ fn large_part_never_starved_past_aging_bound() {
 fn deadline_rejection_is_typed_and_counted() {
     let capacity = 2;
     let (sched, _probe) = tracking_sched(SchedConfig {
-        cores: capacity,
+        cores: CoreMap::homogeneous(capacity),
         aging: Duration::from_millis(25),
         backfill: true,
         ..Default::default()
@@ -300,7 +308,7 @@ fn backfill_disabled_preserves_strict_fifo() {
     // waits even though it would fit.
     let capacity = 4;
     let (sched, _probe) = tracking_sched(SchedConfig {
-        cores: capacity,
+        cores: CoreMap::homogeneous(capacity),
         aging: Duration::from_millis(25),
         backfill: false,
         ..Default::default()
@@ -329,7 +337,7 @@ fn cancelled_while_queued_never_reaches_a_worker() {
     // clean — the acceptance criterion for admission-side cancellation.
     let capacity = 2;
     let (sched, probe) = tracking_sched(SchedConfig {
-        cores: capacity,
+        cores: CoreMap::homogeneous(capacity),
         aging: Duration::from_millis(10),
         backfill: true,
         ..Default::default()
@@ -369,7 +377,7 @@ fn cancelled_while_running_releases_its_cores() {
     // long before the task's nominal 300ms duration.
     let capacity = 4;
     let (sched, probe) = tracking_sched(SchedConfig {
-        cores: capacity,
+        cores: CoreMap::homogeneous(capacity),
         aging: Duration::from_millis(10),
         backfill: true,
         ..Default::default()
@@ -400,7 +408,7 @@ fn accounting_invariant_under_random_cancellation() {
     check(3, |g| {
         let capacity = *g.choice(&[2usize, 4, 8]);
         let (sched, probe) = tracking_sched(SchedConfig {
-            cores: capacity,
+            cores: CoreMap::homogeneous(capacity),
             aging: Duration::from_millis(10),
             backfill: true,
             ..Default::default()
@@ -490,7 +498,12 @@ fn adaptive_sizing_never_exceeds_budget() {
         let w = policy.part_weights(&keyed);
         assert_eq!(w.len(), k);
         assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9, "{w:?}");
-        let alloc = allocate_weighted(&w, capacity, AllocPolicy::PrunDef);
+        let alloc = allocate(
+            PartWeights::Measured(&w),
+            &CoreMap::homogeneous(capacity),
+            AllocPolicy::PrunDef,
+        )
+        .into_threads();
         assert!(alloc.iter().all(|&c| c >= 1), "every part >= 1 core: {alloc:?}");
         assert!(
             alloc.iter().all(|&c| c <= capacity),
@@ -505,7 +518,7 @@ fn adaptive_sizing_never_exceeds_budget() {
         }
         // and the ledger agrees: peak occupancy never exceeds C
         let (sched, probe) = tracking_sched(SchedConfig {
-            cores: capacity,
+            cores: CoreMap::homogeneous(capacity),
             aging: Duration::from_millis(10),
             backfill: true,
             ..Default::default()
@@ -538,7 +551,7 @@ fn accounting_holds_with_running_deadline_cancellations() {
     check(3, |g| {
         let capacity = *g.choice(&[2usize, 4]);
         let (sched, probe) = tracking_sched(SchedConfig {
-            cores: capacity,
+            cores: CoreMap::homogeneous(capacity),
             aging: Duration::from_millis(10),
             backfill: true,
             deadline_running: Some(Duration::from_millis(25)),
@@ -649,7 +662,7 @@ fn accounting_holds_with_budget_expiry() {
     check(3, |g| {
         let capacity = *g.choice(&[2usize, 4]);
         let (sched, probe) = tracking_sched(SchedConfig {
-            cores: capacity,
+            cores: CoreMap::homogeneous(capacity),
             aging: Duration::from_millis(10),
             backfill: true,
             ..Default::default()
@@ -758,7 +771,7 @@ fn ingress_ctx_token_reaches_the_executor() {
     use dnc_serve::engine::RequestCtx;
     let capacity = 2;
     let (sched, probe) = tracking_sched(SchedConfig {
-        cores: capacity,
+        cores: CoreMap::homogeneous(capacity),
         aging: Duration::from_millis(10),
         backfill: true,
         ..Default::default()
@@ -796,6 +809,18 @@ fn assert_shard_accounting_balanced(sched: &Scheduler) {
         assert_eq!(sh.queue_depth, 0, "shard {i} queue: {sh:?}");
         assert_eq!(sh.inflight, 0, "shard {i} inflight: {sh:?}");
         assert_eq!(sh.cores_busy, 0, "shard {i} slice must empty: {sh:?}");
+        // the per-class books must close too: class occupancy returns
+        // to zero and the class columns partition the shard's slice
+        assert_eq!(
+            sh.busy_fast + sh.busy_slow,
+            0,
+            "shard {i} class occupancy must empty: {sh:?}"
+        );
+        assert_eq!(
+            sh.capacity_fast + sh.capacity_slow,
+            sh.capacity,
+            "shard {i} class split must partition the slice: {sh:?}"
+        );
         assert_eq!(
             sh.submitted,
             sh.completed
@@ -819,7 +844,7 @@ fn sharded_accounting_invariant_under_mixed_load() {
         let shards = *g.choice(&[2usize, 3, 4]);
         let capacity = shards * *g.choice(&[2usize, 4]);
         let (sched, probe) = tracking_sched(SchedConfig {
-            cores: capacity,
+            cores: CoreMap::homogeneous(capacity),
             shards,
             aging: Duration::from_millis(10),
             backfill: true,
@@ -874,7 +899,7 @@ fn shard_slices_never_oversubscribe() {
     let shards = 2;
     let capacity = 8; // two 4-core slices
     let (sched, probe) = tracking_sched(SchedConfig {
-        cores: capacity,
+        cores: CoreMap::homogeneous(capacity),
         shards,
         aging: Duration::from_millis(10),
         backfill: true,
@@ -922,7 +947,7 @@ fn steal_never_oversubscribes() {
     let shards = 2;
     let capacity = 8; // two 4-core slices
     let (sched, probe) = tracking_sched(SchedConfig {
-        cores: capacity,
+        cores: CoreMap::homogeneous(capacity),
         shards,
         aging: Duration::from_millis(10),
         backfill: true,
@@ -949,6 +974,114 @@ fn steal_never_oversubscribes() {
         "stealing oversubscribed the ledger: peak {} > {capacity}",
         probe.peak.load(Ordering::SeqCst)
     );
+    assert_eq!(probe.active.load(Ordering::SeqCst), 0);
+    assert_shard_accounting_balanced(&sched);
+    assert_accounting_balanced(&sched);
+}
+
+// ---- heterogeneous core classes ------------------------------------
+
+#[test]
+fn per_class_slices_never_oversubscribed_with_stealing() {
+    // Property: on a heterogeneous map split across shards, every
+    // polled snapshot keeps each shard's per-class occupancy within its
+    // slice's per-class capacity — even with all load pinned to one
+    // shard (one request id), so the other shard must steal, and with
+    // every affinity kind in the mix.
+    let map = CoreMap::parse("fast=4,slow=4@0.5").expect("valid spec");
+    let capacity = map.total();
+    let (sched, probe) = tracking_sched(SchedConfig {
+        cores: map,
+        shards: 2,
+        aging: Duration::from_millis(10),
+        backfill: true,
+        ..Default::default()
+    });
+    let handles: Vec<_> = (0..12)
+        .map(|i| {
+            let affinity = match i % 3 {
+                0 => ClassAffinity::Prefer(CoreClass::Fast),
+                1 => ClassAffinity::Prefer(CoreClass::Slow),
+                _ => ClassAffinity::Any,
+            };
+            sched.submit(
+                PartTask::new(model_name(2, 10), Vec::new(), 2)
+                    .with_request_id(0)
+                    .with_affinity(affinity),
+            )
+        })
+        .collect();
+    // poll the per-class gauges while the load runs
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_millis(50) {
+        for (i, sh) in sched.shard_stats().iter().enumerate() {
+            assert!(
+                sh.busy_fast <= sh.capacity_fast,
+                "shard {i} Fast slice oversubscribed: {sh:?}"
+            );
+            assert!(
+                sh.busy_slow <= sh.capacity_slow,
+                "shard {i} Slow slice oversubscribed: {sh:?}"
+            );
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    for h in handles {
+        h.wait().expect("task must complete");
+    }
+    assert!(sched.drain(Duration::from_secs(5)));
+    let st = sched.stats();
+    assert!(st.steals >= 1, "pinned backlog never rebalanced: {st:?}");
+    assert!(
+        probe.peak.load(Ordering::SeqCst) <= capacity,
+        "global ledger oversubscribed: peak {} > {capacity}",
+        probe.peak.load(Ordering::SeqCst)
+    );
+    assert_shard_accounting_balanced(&sched);
+    assert_accounting_balanced(&sched);
+}
+
+#[test]
+fn fast_exhaustion_degrades_to_slow_without_rejection() {
+    // Property: Prefer(Fast) work arriving while the Fast class is
+    // fully held falls back to Slow — it completes promptly on the
+    // other class (no deadlock, no rejection, no waiting out the hog)
+    // and every such placement is counted in `class_degraded`.
+    let map = CoreMap::parse("fast=2,slow=4@0.5").expect("valid spec");
+    let (sched, probe) = tracking_sched(SchedConfig {
+        cores: map,
+        shards: 1,
+        aging: Duration::from_millis(10),
+        backfill: true,
+        ..Default::default()
+    });
+    // hold the whole Fast class
+    let hog = sched.submit(
+        PartTask::new(model_name(2, 80), Vec::new(), 2)
+            .with_affinity(ClassAffinity::Prefer(CoreClass::Fast)),
+    );
+    std::thread::sleep(Duration::from_millis(5)); // hog admitted
+    let t0 = Instant::now();
+    let degraded: Vec<_> = (0..2)
+        .map(|_| {
+            sched.submit(
+                PartTask::new(model_name(2, 5), Vec::new(), 2)
+                    .with_affinity(ClassAffinity::Prefer(CoreClass::Fast)),
+            )
+        })
+        .collect();
+    for h in degraded {
+        let done = h.wait().expect("degraded task must complete, not deadlock");
+        assert_eq!(done.class, CoreClass::Slow, "must fall back to the Slow class");
+    }
+    assert!(
+        t0.elapsed() < Duration::from_millis(60),
+        "degraded work waited for Fast instead of falling back: {:?}",
+        t0.elapsed()
+    );
+    hog.wait().expect("hog must complete");
+    let st = sched.stats();
+    assert_eq!(st.class_degraded, 2, "{st:?}");
     assert_eq!(probe.active.load(Ordering::SeqCst), 0);
     assert_shard_accounting_balanced(&sched);
     assert_accounting_balanced(&sched);

@@ -1,6 +1,7 @@
 //! Property tests for the discrete-event simulator (DESIGN.md §8).
 
-use dnc_serve::engine::allocator::{allocate, AllocPolicy};
+use dnc_serve::engine::allocator::{allocate, AllocPolicy, PartWeights};
+use dnc_serve::engine::ledger::CoreMap;
 use dnc_serve::simcpu::{simulate, simulate_sequential, ScalProfile, SimPart};
 use dnc_serve::util::prop::{check, Gen};
 
@@ -42,10 +43,11 @@ fn makespan_is_max_end_and_bounds_hold() {
         let parts = gen_parts(g);
         let cores = g.usize_in(1, 32);
         let alloc = allocate(
-            &parts.iter().map(|p| p.t1_ms as usize + 1).collect::<Vec<_>>(),
-            cores,
+            PartWeights::Sizes(&parts.iter().map(|p| p.t1_ms as usize + 1).collect::<Vec<_>>()),
+            &CoreMap::homogeneous(cores),
             AllocPolicy::PrunDef,
-        );
+        )
+        .into_threads();
         let r = simulate(&parts, &alloc, cores);
         let max_end = r.end_ms.iter().cloned().fold(0.0, f64::max);
         assert!((r.makespan_ms - max_end).abs() < 1e-9);

@@ -1,7 +1,9 @@
-//! PL005 must-fire fixture: resurrecting deleted PR-5 shim names.
-//! Exactly four findings: the `impl JobPart` builder, the banned fn
-//! name at its definition, the banned name at a call site, and a banned
-//! name inside `#[cfg(test)]` — PL005 applies to tests too.
+//! PL005 must-fire fixture: resurrecting deleted shim names.
+//! Exactly six findings: the `impl JobPart` builder, the banned fn
+//! name at its definition, the banned name at a call site, a banned
+//! name inside `#[cfg(test)]` — PL005 applies to tests too — and the
+//! two PR-8 names (the collapsed scheduler constructor variant and the
+//! untyped allocator entry point).
 
 pub struct JobPart;
 
@@ -18,6 +20,10 @@ pub fn run_cancellable() {}
 pub fn old_call_site() {
     run_cancellable();
 }
+
+pub fn start_with_policy() {}
+
+pub fn allocate_weighted() {}
 
 #[cfg(test)]
 mod tests {

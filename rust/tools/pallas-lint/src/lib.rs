@@ -30,11 +30,12 @@
 //!   one-mint invariant: request state is minted once at the edge and
 //!   *threaded*, never re-minted mid-stack (a fresh token mid-stack is
 //!   a request the client can no longer cancel).
-//! - **PL005** — no references to the deleted PR-5 shim names
+//! - **PL005** — no references to deleted shim names: the PR-5 set
 //!   (`run_cancellable`, `prun_submit`, `serve_submit*`,
 //!   `process_budgeted`, `start_pipelined_with_reaper`, `PrunOptions`,
-//!   `BatchSubmit`) and no `with_cancel`/`with_budget` methods on
-//!   `JobPart`. Applies *everywhere*, tests included — dead API must
+//!   `BatchSubmit`), the PR-8 collapsed variants (`start_with_policy`,
+//!   `allocate_weighted`), and no `with_cancel`/`with_budget` methods
+//!   on `JobPart`. Applies *everywhere*, tests included — dead API must
 //!   stay dead. Prose (doc comments) is exempt: names are matched as
 //!   code identifiers, not text.
 //!
@@ -59,7 +60,7 @@ pub const RULES: &[(&str, &str)] = &[
     ("PL002", "no unwrap/expect on Mutex/RwLock guards outside tests"),
     ("PL003", "no raw Instant::now() on scheduler/pool hot paths"),
     ("PL004", "Budget/CancelToken/RequestCtx minted only at defining modules and ingress"),
-    ("PL005", "deleted PR-5 shim names must stay dead (tests included)"),
+    ("PL005", "deleted shim names must stay dead (tests included)"),
 ];
 
 /// One rule violation at a source location. `file` is the path relative
@@ -99,9 +100,12 @@ fn pl004_exempt(file: &str) -> bool {
 }
 
 /// Idents banned everywhere by PL005 — the PR-5 shim surface deleted
-/// after one deprecation cycle. (`with_cancel`/`with_budget` are *not*
-/// here: they live on legitimately on `PartTask` and `RequestCtx`; the
-/// `JobPart` builders are caught structurally via `impl JobPart`.)
+/// after one deprecation cycle, plus the PR-8 constructor/allocator
+/// variants collapsed into `Scheduler::start(SchedConfig { adaptive,
+/// cores: CoreMap, .. })` and `allocate(PartWeights, &CoreMap, policy)`.
+/// (`with_cancel`/`with_budget` are *not* here: they live on
+/// legitimately on `PartTask` and `RequestCtx`; the `JobPart` builders
+/// are caught structurally via `impl JobPart`.)
 const PL005_BANNED: &[&str] = &[
     "run_cancellable",
     "prun_submit",
@@ -112,6 +116,8 @@ const PL005_BANNED: &[&str] = &[
     "start_pipelined_with_reaper",
     "PrunOptions",
     "BatchSubmit",
+    "start_with_policy",
+    "allocate_weighted",
 ];
 
 // -------------------------------------------------------------- checking
