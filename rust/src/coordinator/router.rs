@@ -40,6 +40,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::stats::names;
 use crate::config::Config;
 use crate::coordinator::batcher::Batcher;
 use crate::engine::{Budget, InferenceService, RequestCtx, SubmitError};
@@ -111,10 +112,10 @@ impl ServerState {
                     // first would misfile every abandoned request as a
                     // deadline symptom.
                     if r.ctx.is_cancelled() {
-                        m_reap.add("embed_cancelled_reaped", 1);
+                        m_reap.add(names::EMBED_CANCELLED_REAPED, 1);
                         Some(Err(SubmitError::Cancelled))
                     } else if r.ctx.expired() {
-                        m_reap.add("embed_budget_expired", 1);
+                        m_reap.add(names::EMBED_BUDGET_EXPIRED, 1);
                         Some(Err(SubmitError::BudgetExpired))
                     } else {
                         None
@@ -123,8 +124,8 @@ impl ServerState {
                 move |requests: Vec<EmbedRequest>| {
                     let t0 = Instant::now();
                     let n = requests.len();
-                    m2.add("batches", 1);
-                    m2.add("batched_requests", n as u64);
+                    m2.add(names::BATCHES, 1);
+                    m2.add(names::BATCHED_REQUESTS, n as u64);
                     let mut batch = EmbedBatch::new(policy);
                     for r in requests {
                         batch.push_with(r.ids, r.ctx);
@@ -138,7 +139,7 @@ impl ServerState {
                     // clobbering its batchmates.
                     Box::new(move || {
                         let results = ticket.wait_each();
-                        m3.record("bert_batch", t0.elapsed());
+                        m3.record(names::BERT_BATCH, t0.elapsed());
                         results
                     })
                 },
@@ -160,8 +161,8 @@ pub fn route(state: &ServerState, req: &Json) -> Json {
         Some(other) => err(format!("unknown op '{other}'")),
         None => err("missing 'op'".to_string()),
     };
-    state.metrics.add("requests", 1);
-    state.metrics.record("request", t0.elapsed());
+    state.metrics.add(names::REQUESTS, 1);
+    state.metrics.record(names::REQUEST, t0.elapsed());
     if let Json::Obj(pairs) = &mut resp {
         pairs.insert(0, ("id".to_string(), id));
     }
@@ -180,8 +181,8 @@ fn stats_json(state: &ServerState) -> Json {
     // scheduler (the batcher's own queue, upstream of sched.queue_depth)
     // and requests in flushed-but-unresolved batches — both are needed,
     // or requests "vanish" from stats while their batch executes
-    state.metrics.set("embed_pending", state.embed_batcher.pending() as u64);
-    state.metrics.set("embed_inflight", state.embed_batcher.in_flight() as u64);
+    state.metrics.set(names::EMBED_PENDING, state.embed_batcher.pending() as u64);
+    state.metrics.set(names::EMBED_INFLIGHT, state.embed_batcher.in_flight() as u64);
     let mut snap = state.metrics.snapshot_json();
     let session = state.bert.session();
     let sched =
@@ -254,7 +255,7 @@ pub fn embed_with_timeout(
         Ok(Err(e)) => err(e.to_string()),
         Err(RecvTimeoutError::Timeout) => {
             ctx.cancel();
-            metrics.add("request_timeouts", 1);
+            metrics.add(names::REQUEST_TIMEOUTS, 1);
             err("request timed out".into())
         }
         // A dead batcher abandons this request just as surely as a
@@ -319,8 +320,8 @@ fn handle_ocr(state: &ServerState, req: &Json) -> Json {
     match ticket.wait_each_timeout(wait) {
         Some(mut results) => match results.pop() {
             Some(Ok(res)) => {
-                state.metrics.add("ocr_images", 1);
-                state.metrics.add("ocr_boxes", res.boxes.len() as u64);
+                state.metrics.add(names::OCR_IMAGES, 1);
+                state.metrics.add(names::OCR_BOXES, res.boxes.len() as u64);
                 let texts = arr(res.texts.iter().map(|t| match t {
                     Some(t) => s(t),
                     None => Json::Null,
@@ -340,7 +341,7 @@ fn handle_ocr(state: &ServerState, req: &Json) -> Json {
         },
         None => {
             // wait_each_timeout already cancelled the ctx
-            state.metrics.add("ocr_timeouts", 1);
+            state.metrics.add(names::OCR_TIMEOUTS, 1);
             err("request timed out".into())
         }
     }

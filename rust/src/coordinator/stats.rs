@@ -1,17 +1,113 @@
-//! Typed scheduler-stats snapshot for the `stats` op.
+//! Typed scheduler-stats snapshot for the `stats` op, and the
+//! crate-wide metrics wire-name registry.
 //!
 //! The router used to hand-format every `sched.*` gauge (and the
 //! per-shard `sched.shard.<i>.<field>` block) inline, so the wire names
 //! dashboards scrape lived as string literals scattered through
-//! `stats_json`. This module is now the single authority: a
-//! [`SchedSnapshot`] is captured from the live scheduler + profile
-//! store, and [`SchedSnapshot::gauges`] serializes it through
-//! `util::json` in one place. The golden test at the bottom pins every
-//! wire name — renaming a field here without updating a dashboard
+//! `stats_json`. This module is now the single authority twice over:
+//! a [`SchedSnapshot`] is captured from the live scheduler + profile
+//! store and serialized through `util::json` in one place, and *every*
+//! metrics wire name in the crate — counters, histograms, gauges —
+//! lives as a `pub const` in [`names`]. Emission sites reference the
+//! constants; pallas-lint rule PL008 rejects raw string literals at
+//! any `.add`/`.set`/`.record` call and any `names::X` path that does
+//! not resolve here. The golden test at the bottom pins every
+//! constant's wire value — renaming one without updating a dashboard
 //! breaks the test first.
 
 use crate::engine::{ProfileStore, SchedStats, Scheduler};
 use crate::util::json::{num, Json};
+
+/// Every metrics wire name the crate emits, as constants. This is the
+/// registry pallas-lint rule PL008 checks emission sites against: a
+/// gauge/counter name that is not declared here cannot be emitted
+/// (outside tests) without failing the lint. Grouped by emitter.
+pub mod names {
+    // --- router request-path counters & histograms (metrics registry)
+    /// total requests admitted by the router
+    pub const REQUESTS: &str = "requests";
+    /// end-to-end request latency histogram
+    pub const REQUEST: &str = "request";
+    /// requests that hit the router-level timeout
+    pub const REQUEST_TIMEOUTS: &str = "request_timeouts";
+    /// embed batches flushed by the batcher
+    pub const BATCHES: &str = "batches";
+    /// requests carried inside those flushed batches
+    pub const BATCHED_REQUESTS: &str = "batched_requests";
+    /// BERT batch execution latency histogram
+    pub const BERT_BATCH: &str = "bert_batch";
+    /// embed requests waiting in the batcher queue (gauge)
+    pub const EMBED_PENDING: &str = "embed_pending";
+    /// embed requests currently executing (gauge)
+    pub const EMBED_INFLIGHT: &str = "embed_inflight";
+    /// embed requests reaped at flush time because their ctx was
+    /// already cancelled
+    pub const EMBED_CANCELLED_REAPED: &str = "embed_cancelled_reaped";
+    /// embed requests reaped at flush time because their budget was
+    /// already spent
+    pub const EMBED_BUDGET_EXPIRED: &str = "embed_budget_expired";
+    /// OCR images processed
+    pub const OCR_IMAGES: &str = "ocr_images";
+    /// OCR text boxes produced
+    pub const OCR_BOXES: &str = "ocr_boxes";
+    /// OCR jobs that ran out of budget
+    pub const OCR_TIMEOUTS: &str = "ocr_timeouts";
+
+    // --- aggregate scheduler gauges (stats op, wire order)
+    pub const SCHED_SHARDS: &str = "sched.shards";
+    pub const SCHED_STEALS: &str = "sched.steals";
+    pub const SCHED_TIMER_WAKEUPS: &str = "sched.timer_wakeups";
+    pub const SCHED_CAPACITY: &str = "sched.capacity";
+    pub const SCHED_CORES_BUSY: &str = "sched.cores_busy";
+    pub const SCHED_CORES_IDLE: &str = "sched.cores_idle";
+    pub const SCHED_QUEUE_DEPTH: &str = "sched.queue_depth";
+    pub const SCHED_QUEUE_DEPTH_HIGH: &str = "sched.queue_depth_high";
+    pub const SCHED_QUEUE_DEPTH_NORMAL: &str = "sched.queue_depth_normal";
+    pub const SCHED_QUEUE_DEPTH_LOW: &str = "sched.queue_depth_low";
+    pub const SCHED_PEAK_QUEUE_DEPTH: &str = "sched.peak_queue_depth";
+    pub const SCHED_INFLIGHT: &str = "sched.inflight";
+    pub const SCHED_SUBMITTED: &str = "sched.submitted";
+    pub const SCHED_COMPLETED: &str = "sched.completed";
+    pub const SCHED_FAILED: &str = "sched.failed";
+    pub const SCHED_BACKFILLS: &str = "sched.backfills";
+    pub const SCHED_DEADLINE_REJECTED: &str = "sched.deadline_rejected";
+    pub const SCHED_BUDGET_EXPIRED: &str = "sched.budget_expired";
+    pub const SCHED_BUDGET_INFEASIBLE: &str = "sched.budget_infeasible";
+    pub const SCHED_CANCELLED: &str = "sched.cancelled";
+    pub const SCHED_ADAPTIVE_RESIZES: &str = "sched.adaptive_resizes";
+    pub const SCHED_RUNNING_DEADLINE_CANCELLED: &str = "sched.running_deadline_cancelled";
+    pub const SCHED_RUNNING_DEADLINE_CANCELLED_BUDGET: &str =
+        "sched.running_deadline_cancelled_budget";
+    pub const SCHED_AGING_EFFECTIVE_MS: &str = "sched.aging_effective_ms";
+    pub const PROFILE_P95_MS: &str = "profile.p95_ms";
+    pub const PROFILE_MODELS: &str = "profile.models";
+    // core-class gauges (0.5.0): appended after the legacy block
+    pub const SCHED_CAPACITY_FAST: &str = "sched.capacity_fast";
+    pub const SCHED_CAPACITY_SLOW: &str = "sched.capacity_slow";
+    pub const SCHED_BUSY_FAST: &str = "sched.busy_fast";
+    pub const SCHED_BUSY_SLOW: &str = "sched.busy_slow";
+    pub const SCHED_CLASS_DEGRADED: &str = "sched.class_degraded";
+
+    // --- per-shard gauge block: `sched.shard.<i>.<field>`
+    /// prefix of every per-shard gauge; the full name is
+    /// `{SHARD_PREFIX}{i}.{field}`
+    pub const SHARD_PREFIX: &str = "sched.shard.";
+    pub const SHARD_CAPACITY: &str = "capacity";
+    pub const SHARD_CORES_BUSY: &str = "cores_busy";
+    pub const SHARD_QUEUE_DEPTH: &str = "queue_depth";
+    pub const SHARD_INFLIGHT: &str = "inflight";
+    pub const SHARD_SUBMITTED: &str = "submitted";
+    pub const SHARD_COMPLETED: &str = "completed";
+    pub const SHARD_FAILED: &str = "failed";
+    pub const SHARD_CANCELLED: &str = "cancelled";
+    pub const SHARD_STEALS: &str = "steals";
+    pub const SHARD_TIMER_WAKEUPS: &str = "timer_wakeups";
+    pub const SHARD_CAPACITY_FAST: &str = "capacity_fast";
+    pub const SHARD_CAPACITY_SLOW: &str = "capacity_slow";
+    pub const SHARD_BUSY_FAST: &str = "busy_fast";
+    pub const SHARD_BUSY_SLOW: &str = "busy_slow";
+    pub const SHARD_CLASS_DEGRADED: &str = "class_degraded";
+}
 
 /// Point-in-time typed view of everything the `stats` op reports about
 /// the scheduler: the aggregate gauges, one [`SchedStats`] per shard,
@@ -29,23 +125,23 @@ pub struct SchedSnapshot {
 /// and the typed accessor live together, so the wire contract cannot
 /// drift from the struct. Order is the wire order.
 const SHARD_FIELDS: [(&str, fn(&SchedStats) -> f64); 15] = [
-    ("capacity", |s| s.capacity as f64),
-    ("cores_busy", |s| s.cores_busy as f64),
-    ("queue_depth", |s| s.queue_depth as f64),
-    ("inflight", |s| s.inflight as f64),
-    ("submitted", |s| s.submitted as f64),
-    ("completed", |s| s.completed as f64),
-    ("failed", |s| s.failed as f64),
-    ("cancelled", |s| s.cancelled as f64),
-    ("steals", |s| s.steals as f64),
-    ("timer_wakeups", |s| s.timer_wakeups as f64),
+    (names::SHARD_CAPACITY, |s| s.capacity as f64),
+    (names::SHARD_CORES_BUSY, |s| s.cores_busy as f64),
+    (names::SHARD_QUEUE_DEPTH, |s| s.queue_depth as f64),
+    (names::SHARD_INFLIGHT, |s| s.inflight as f64),
+    (names::SHARD_SUBMITTED, |s| s.submitted as f64),
+    (names::SHARD_COMPLETED, |s| s.completed as f64),
+    (names::SHARD_FAILED, |s| s.failed as f64),
+    (names::SHARD_CANCELLED, |s| s.cancelled as f64),
+    (names::SHARD_STEALS, |s| s.steals as f64),
+    (names::SHARD_TIMER_WAKEUPS, |s| s.timer_wakeups as f64),
     // core-class split of the shard's ledger slice (new in 0.5.0,
     // appended after the legacy block so scrapers by-position survive)
-    ("capacity_fast", |s| s.capacity_fast as f64),
-    ("capacity_slow", |s| s.capacity_slow as f64),
-    ("busy_fast", |s| s.busy_fast as f64),
-    ("busy_slow", |s| s.busy_slow as f64),
-    ("class_degraded", |s| s.class_degraded as f64),
+    (names::SHARD_CAPACITY_FAST, |s| s.capacity_fast as f64),
+    (names::SHARD_CAPACITY_SLOW, |s| s.capacity_slow as f64),
+    (names::SHARD_BUSY_FAST, |s| s.busy_fast as f64),
+    (names::SHARD_BUSY_SLOW, |s| s.busy_slow as f64),
+    (names::SHARD_CLASS_DEGRADED, |s| s.class_degraded as f64),
 ];
 
 impl SchedSnapshot {
@@ -65,43 +161,46 @@ impl SchedSnapshot {
     pub fn gauges(&self) -> Vec<(String, Json)> {
         let st = &self.aggregate;
         let flat: [(&str, f64); 31] = [
-            ("sched.shards", st.shards as f64),
-            ("sched.steals", st.steals as f64),
-            ("sched.timer_wakeups", st.timer_wakeups as f64),
-            ("sched.capacity", st.capacity as f64),
-            ("sched.cores_busy", st.cores_busy as f64),
-            ("sched.cores_idle", st.cores_idle as f64),
-            ("sched.queue_depth", st.queue_depth as f64),
-            ("sched.queue_depth_high", st.queue_depth_high as f64),
-            ("sched.queue_depth_normal", st.queue_depth_normal as f64),
-            ("sched.queue_depth_low", st.queue_depth_low as f64),
-            ("sched.peak_queue_depth", st.peak_queue_depth as f64),
-            ("sched.inflight", st.inflight as f64),
-            ("sched.submitted", st.submitted as f64),
-            ("sched.completed", st.completed as f64),
-            ("sched.failed", st.failed as f64),
-            ("sched.backfills", st.backfills as f64),
-            ("sched.deadline_rejected", st.deadline_rejected as f64),
-            ("sched.budget_expired", st.budget_expired as f64),
-            ("sched.budget_infeasible", st.budget_infeasible as f64),
-            ("sched.cancelled", st.cancelled as f64),
-            ("sched.adaptive_resizes", st.adaptive_resizes as f64),
-            ("sched.running_deadline_cancelled", st.running_deadline_cancelled as f64),
+            (names::SCHED_SHARDS, st.shards as f64),
+            (names::SCHED_STEALS, st.steals as f64),
+            (names::SCHED_TIMER_WAKEUPS, st.timer_wakeups as f64),
+            (names::SCHED_CAPACITY, st.capacity as f64),
+            (names::SCHED_CORES_BUSY, st.cores_busy as f64),
+            (names::SCHED_CORES_IDLE, st.cores_idle as f64),
+            (names::SCHED_QUEUE_DEPTH, st.queue_depth as f64),
+            (names::SCHED_QUEUE_DEPTH_HIGH, st.queue_depth_high as f64),
+            (names::SCHED_QUEUE_DEPTH_NORMAL, st.queue_depth_normal as f64),
+            (names::SCHED_QUEUE_DEPTH_LOW, st.queue_depth_low as f64),
+            (names::SCHED_PEAK_QUEUE_DEPTH, st.peak_queue_depth as f64),
+            (names::SCHED_INFLIGHT, st.inflight as f64),
+            (names::SCHED_SUBMITTED, st.submitted as f64),
+            (names::SCHED_COMPLETED, st.completed as f64),
+            (names::SCHED_FAILED, st.failed as f64),
+            (names::SCHED_BACKFILLS, st.backfills as f64),
+            (names::SCHED_DEADLINE_REJECTED, st.deadline_rejected as f64),
+            (names::SCHED_BUDGET_EXPIRED, st.budget_expired as f64),
+            (names::SCHED_BUDGET_INFEASIBLE, st.budget_infeasible as f64),
+            (names::SCHED_CANCELLED, st.cancelled as f64),
+            (names::SCHED_ADAPTIVE_RESIZES, st.adaptive_resizes as f64),
             (
-                "sched.running_deadline_cancelled_budget",
+                names::SCHED_RUNNING_DEADLINE_CANCELLED,
+                st.running_deadline_cancelled as f64,
+            ),
+            (
+                names::SCHED_RUNNING_DEADLINE_CANCELLED_BUDGET,
                 st.running_deadline_cancelled_budget as f64,
             ),
-            ("sched.aging_effective_ms", st.aging_effective_ms),
-            ("profile.p95_ms", self.profile_p95_ms),
-            ("profile.models", self.profile_models as f64),
+            (names::SCHED_AGING_EFFECTIVE_MS, st.aging_effective_ms),
+            (names::PROFILE_P95_MS, self.profile_p95_ms),
+            (names::PROFILE_MODELS, self.profile_models as f64),
             // core-class gauges (new in 0.5.0): the by-class split of
             // capacity/occupancy plus affinity-degradation launches —
             // appended after the legacy block, never interleaved
-            ("sched.capacity_fast", st.capacity_fast as f64),
-            ("sched.capacity_slow", st.capacity_slow as f64),
-            ("sched.busy_fast", st.busy_fast as f64),
-            ("sched.busy_slow", st.busy_slow as f64),
-            ("sched.class_degraded", st.class_degraded as f64),
+            (names::SCHED_CAPACITY_FAST, st.capacity_fast as f64),
+            (names::SCHED_CAPACITY_SLOW, st.capacity_slow as f64),
+            (names::SCHED_BUSY_FAST, st.busy_fast as f64),
+            (names::SCHED_BUSY_SLOW, st.busy_slow as f64),
+            (names::SCHED_CLASS_DEGRADED, st.class_degraded as f64),
         ];
         let mut out: Vec<(String, Json)> =
             flat.iter().map(|&(k, v)| (k.to_string(), num(v))).collect();
@@ -110,7 +209,7 @@ impl SchedSnapshot {
         // invariant is checkable from the wire.
         for (i, sh) in self.shards.iter().enumerate() {
             for (k, get) in SHARD_FIELDS {
-                out.push((format!("sched.shard.{i}.{k}"), num(get(sh))));
+                out.push((format!("{}{i}.{k}", names::SHARD_PREFIX), num(get(sh))));
             }
         }
         out
@@ -130,46 +229,59 @@ mod tests {
         }
     }
 
-    /// GOLDEN: the wire names dashboards scrape. A failure here means a
-    /// breaking stats-protocol change — add new gauges to the tail of
-    /// the new-in-0.5.0 blocks instead of renaming or reordering these.
+    /// GOLDEN: the wire names dashboards scrape, pinned as (registry
+    /// constant, expected literal) pairs. The emitters consume the
+    /// constants (PL008 enforces that), so the constant and the
+    /// emission site can never disagree — this test pins the remaining
+    /// degree of freedom, the constant's *value*. A failure here means
+    /// a breaking stats-protocol change — add new gauges to the tail
+    /// of the new-in-0.5.0 blocks instead of renaming or reordering.
     #[test]
     fn stats_wire_names_are_pinned() {
-        let names: Vec<String> =
+        let gauge_names: Vec<String> =
             snapshot(2).gauges().into_iter().map(|(k, _)| k).collect();
-        let legacy_flat = [
-            "sched.shards",
-            "sched.steals",
-            "sched.timer_wakeups",
-            "sched.capacity",
-            "sched.cores_busy",
-            "sched.cores_idle",
-            "sched.queue_depth",
-            "sched.queue_depth_high",
-            "sched.queue_depth_normal",
-            "sched.queue_depth_low",
-            "sched.peak_queue_depth",
-            "sched.inflight",
-            "sched.submitted",
-            "sched.completed",
-            "sched.failed",
-            "sched.backfills",
-            "sched.deadline_rejected",
-            "sched.budget_expired",
-            "sched.budget_infeasible",
-            "sched.cancelled",
-            "sched.adaptive_resizes",
-            "sched.running_deadline_cancelled",
-            "sched.running_deadline_cancelled_budget",
-            "sched.aging_effective_ms",
-            "profile.p95_ms",
-            "profile.models",
+        let legacy_flat: [(&str, &str); 26] = [
+            (names::SCHED_SHARDS, "sched.shards"),
+            (names::SCHED_STEALS, "sched.steals"),
+            (names::SCHED_TIMER_WAKEUPS, "sched.timer_wakeups"),
+            (names::SCHED_CAPACITY, "sched.capacity"),
+            (names::SCHED_CORES_BUSY, "sched.cores_busy"),
+            (names::SCHED_CORES_IDLE, "sched.cores_idle"),
+            (names::SCHED_QUEUE_DEPTH, "sched.queue_depth"),
+            (names::SCHED_QUEUE_DEPTH_HIGH, "sched.queue_depth_high"),
+            (names::SCHED_QUEUE_DEPTH_NORMAL, "sched.queue_depth_normal"),
+            (names::SCHED_QUEUE_DEPTH_LOW, "sched.queue_depth_low"),
+            (names::SCHED_PEAK_QUEUE_DEPTH, "sched.peak_queue_depth"),
+            (names::SCHED_INFLIGHT, "sched.inflight"),
+            (names::SCHED_SUBMITTED, "sched.submitted"),
+            (names::SCHED_COMPLETED, "sched.completed"),
+            (names::SCHED_FAILED, "sched.failed"),
+            (names::SCHED_BACKFILLS, "sched.backfills"),
+            (names::SCHED_DEADLINE_REJECTED, "sched.deadline_rejected"),
+            (names::SCHED_BUDGET_EXPIRED, "sched.budget_expired"),
+            (names::SCHED_BUDGET_INFEASIBLE, "sched.budget_infeasible"),
+            (names::SCHED_CANCELLED, "sched.cancelled"),
+            (names::SCHED_ADAPTIVE_RESIZES, "sched.adaptive_resizes"),
+            (
+                names::SCHED_RUNNING_DEADLINE_CANCELLED,
+                "sched.running_deadline_cancelled",
+            ),
+            (
+                names::SCHED_RUNNING_DEADLINE_CANCELLED_BUDGET,
+                "sched.running_deadline_cancelled_budget",
+            ),
+            (names::SCHED_AGING_EFFECTIVE_MS, "sched.aging_effective_ms"),
+            (names::PROFILE_P95_MS, "profile.p95_ms"),
+            (names::PROFILE_MODELS, "profile.models"),
         ];
+        for (konst, wire) in legacy_flat {
+            assert_eq!(konst, wire, "registry constant drifted from the wire value");
+        }
         // every legacy flat gauge survives, in its original order
         let positions: Vec<usize> = legacy_flat
             .iter()
-            .map(|want| {
-                names
+            .map(|(want, _)| {
+                gauge_names
                     .iter()
                     .position(|n| n == want)
                     .unwrap_or_else(|| panic!("gauge '{want}' missing from the wire"))
@@ -180,29 +292,79 @@ mod tests {
             "legacy gauges reordered: {positions:?}"
         );
         // every legacy per-shard gauge survives for every shard
-        let legacy_shard = [
-            "capacity",
-            "cores_busy",
-            "queue_depth",
-            "inflight",
-            "submitted",
-            "completed",
-            "failed",
-            "cancelled",
-            "steals",
-            "timer_wakeups",
+        let legacy_shard: [(&str, &str); 10] = [
+            (names::SHARD_CAPACITY, "capacity"),
+            (names::SHARD_CORES_BUSY, "cores_busy"),
+            (names::SHARD_QUEUE_DEPTH, "queue_depth"),
+            (names::SHARD_INFLIGHT, "inflight"),
+            (names::SHARD_SUBMITTED, "submitted"),
+            (names::SHARD_COMPLETED, "completed"),
+            (names::SHARD_FAILED, "failed"),
+            (names::SHARD_CANCELLED, "cancelled"),
+            (names::SHARD_STEALS, "steals"),
+            (names::SHARD_TIMER_WAKEUPS, "timer_wakeups"),
         ];
+        assert_eq!(names::SHARD_PREFIX, "sched.shard.");
         for i in 0..2 {
-            for f in legacy_shard {
-                let want = format!("sched.shard.{i}.{f}");
-                assert!(names.contains(&want), "gauge '{want}' missing from the wire");
+            for (konst, wire) in legacy_shard {
+                assert_eq!(konst, wire, "shard-field constant drifted");
+                let want = format!("sched.shard.{i}.{konst}");
+                assert!(
+                    gauge_names.contains(&want),
+                    "gauge '{want}' missing from the wire"
+                );
             }
         }
         // the 0.5.0 class gauges ride alongside, never replacing
-        for f in ["sched.capacity_fast", "sched.capacity_slow", "sched.busy_fast", "sched.busy_slow", "sched.class_degraded"] {
-            assert!(names.contains(&f.to_string()), "missing class gauge '{f}'");
+        let class: [(&str, &str); 5] = [
+            (names::SCHED_CAPACITY_FAST, "sched.capacity_fast"),
+            (names::SCHED_CAPACITY_SLOW, "sched.capacity_slow"),
+            (names::SCHED_BUSY_FAST, "sched.busy_fast"),
+            (names::SCHED_BUSY_SLOW, "sched.busy_slow"),
+            (names::SCHED_CLASS_DEGRADED, "sched.class_degraded"),
+        ];
+        for (konst, wire) in class {
+            assert_eq!(konst, wire, "class-gauge constant drifted");
+            assert!(
+                gauge_names.contains(&konst.to_string()),
+                "missing class gauge '{konst}'"
+            );
         }
-        assert!(names.contains(&"sched.shard.1.class_degraded".to_string()));
+        assert!(gauge_names.contains(&"sched.shard.1.class_degraded".to_string()));
+    }
+
+    /// GOLDEN: the request-path counter/histogram names the router
+    /// emits through the metrics registry (scraped via the `stats`
+    /// op's snapshot JSON). Same contract as above: emitters use the
+    /// constants, this pins the values.
+    #[test]
+    fn request_path_wire_names_are_pinned() {
+        let pairs: [(&str, &str); 13] = [
+            (names::REQUESTS, "requests"),
+            (names::REQUEST, "request"),
+            (names::REQUEST_TIMEOUTS, "request_timeouts"),
+            (names::BATCHES, "batches"),
+            (names::BATCHED_REQUESTS, "batched_requests"),
+            (names::BERT_BATCH, "bert_batch"),
+            (names::EMBED_PENDING, "embed_pending"),
+            (names::EMBED_INFLIGHT, "embed_inflight"),
+            (names::EMBED_CANCELLED_REAPED, "embed_cancelled_reaped"),
+            (names::EMBED_BUDGET_EXPIRED, "embed_budget_expired"),
+            (names::OCR_IMAGES, "ocr_images"),
+            (names::OCR_BOXES, "ocr_boxes"),
+            (names::OCR_TIMEOUTS, "ocr_timeouts"),
+        ];
+        for (konst, wire) in pairs {
+            assert_eq!(konst, wire, "registry constant drifted from the wire value");
+        }
+        // no two registry names may collide: a shared wire name would
+        // silently merge two metrics
+        let mut all: Vec<&str> = pairs.iter().map(|(k, _)| *k).collect();
+        all.extend(SHARD_FIELDS.iter().map(|(k, _)| *k));
+        all.sort_unstable();
+        let before = all.len();
+        all.dedup();
+        assert_eq!(before, all.len(), "duplicate wire name in the registry");
     }
 
     #[test]

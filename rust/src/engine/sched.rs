@@ -989,7 +989,12 @@ impl Drop for Scheduler {
         for tx in self.txs.iter() {
             let _ = tx.send(Event::Shutdown);
         }
-        for join in lock_recover(&self.shards).drain(..) {
+        // Take the handles out under the lock, join outside it: joining
+        // while holding `shards` pins the guard for the full shard
+        // drain time (PL007), and anything a shard thread does on its
+        // way out that touches `shards` would deadlock here.
+        let joins: Vec<_> = lock_recover(&self.shards).drain(..).collect();
+        for join in joins {
             let _ = join.join();
         }
     }

@@ -1,0 +1,54 @@
+//! PL006 must-not-fire fixture: the same two-lock hierarchy as the
+//! fire fixture (`locks.alpha < locks.beta`), used correctly. The
+//! expected finding count is zero: in-order nesting, drop-then-
+//! acquire, a tail-returned guard helper, and a test-gated inversion
+//! (crate-wide rules skip `#[cfg(test)]` subtrees).
+
+use crate::util::sync::lock_recover;
+use std::sync::Mutex;
+
+pub struct Work {
+    alpha: Mutex<Vec<u32>>,
+    beta: Mutex<Vec<u32>>,
+}
+
+impl Work {
+    fn alpha_guard(&self) -> std::sync::MutexGuard<'_, Vec<u32>> {
+        lock_recover(&self.alpha)
+    }
+
+    pub fn in_order(&self) {
+        let a = lock_recover(&self.alpha);
+        let b = lock_recover(&self.beta);
+        b.len();
+        a.len();
+    }
+
+    pub fn drop_then_acquire(&self) {
+        let b = lock_recover(&self.beta);
+        drop(b);
+        let a = lock_recover(&self.alpha);
+        a.len();
+    }
+
+    pub fn via_tail_guard(&self) {
+        let a = self.alpha_guard();
+        let b = lock_recover(&self.beta);
+        b.len();
+        a.len();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inverted_is_fine_in_tests() {
+        let w = Work { alpha: Mutex::new(vec![]), beta: Mutex::new(vec![]) };
+        let b = lock_recover(&w.beta);
+        let a = lock_recover(&w.alpha);
+        drop(a);
+        drop(b);
+    }
+}

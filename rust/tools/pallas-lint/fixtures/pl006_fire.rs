@@ -1,0 +1,43 @@
+//! PL006 must-fire fixture: inverted and undeclared lock acquisitions.
+//!
+//! Checked by `tests/fixtures.rs` with a two-lock hierarchy declaring
+//! `locks.alpha < locks.beta` and nothing else. Expected findings:
+//!
+//! - line 24: acquiring `locks.alpha` while holding `locks.beta` — a
+//!   direct inversion of the declared order
+//! - line 31: the same inversion one call level deep, via
+//!   `Work::grab_alpha`
+//! - line 41: `gamma` matches no `[[lock]]` declaration
+
+use crate::util::sync::lock_recover;
+use std::sync::Mutex;
+
+pub struct Work {
+    alpha: Mutex<Vec<u32>>,
+    beta: Mutex<Vec<u32>>,
+    gamma: Mutex<u32>,
+}
+
+impl Work {
+    pub fn inverted_inline(&self) {
+        let b = lock_recover(&self.beta);
+        let a = lock_recover(&self.alpha);
+        a.len();
+        b.len();
+    }
+
+    pub fn inverted_via_call(&self) {
+        let b = lock_recover(&self.beta);
+        self.grab_alpha();
+        b.len();
+    }
+
+    fn grab_alpha(&self) -> usize {
+        let a = lock_recover(&self.alpha);
+        a.len()
+    }
+
+    pub fn undeclared(&self) -> u32 {
+        *lock_recover(&self.gamma)
+    }
+}

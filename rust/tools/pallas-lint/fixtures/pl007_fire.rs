@@ -1,0 +1,54 @@
+//! PL007 must-fire fixture: blocking while holding a guard on a hot
+//! path (checked under the virtual path `engine/sched.rs`; the same
+//! source under `engine/profile.rs` must yield zero findings — the
+//! rule is scoped to the three hot-path files). Expected findings:
+//!
+//! - line 25: zero-arg `.join()` while the for-head guard temporary
+//!   is live
+//! - line 31: `.recv()` while `q` is held
+//! - line 38: `.recv_timeout(..)` while `q` is held
+//! - line 45: `thread::sleep(..)` while `q` is held
+//! - line 51: nested `lock_recover` while `outer` is held
+
+use crate::util::sync::lock_recover;
+use std::sync::mpsc::Receiver;
+
+pub struct Shards {
+    handles: std::sync::Mutex<Vec<std::thread::JoinHandle<()>>>,
+    queue: std::sync::Mutex<Vec<u64>>,
+    inner: std::sync::Mutex<u64>,
+}
+
+impl Shards {
+    pub fn join_under_guard(&self) {
+        for h in lock_recover(&self.handles).drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    pub fn recv_under_guard(&self, rx: &Receiver<u64>) {
+        let mut q = lock_recover(&self.queue);
+        if let Ok(v) = rx.recv() {
+            q.push(v);
+        }
+    }
+
+    pub fn recv_timeout_under_guard(&self, rx: &Receiver<u64>) {
+        let mut q = lock_recover(&self.queue);
+        if let Ok(v) = rx.recv_timeout(std::time::Duration::from_millis(5)) {
+            q.push(v);
+        }
+    }
+
+    pub fn sleep_under_guard(&self) {
+        let q = lock_recover(&self.queue);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        q.len();
+    }
+
+    pub fn nested_under_guard(&self) -> u64 {
+        let outer = lock_recover(&self.queue);
+        let v = *lock_recover(&self.inner);
+        outer.len() as u64 + v
+    }
+}

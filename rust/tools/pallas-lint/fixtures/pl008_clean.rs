@@ -1,0 +1,36 @@
+//! PL008 must-not-fire fixture: every emission site goes through the
+//! registry. Expected finding count: zero — `names::` paths resolve,
+//! a direct `use`-imported constant ident is accepted, non-string
+//! first arguments (`Cell::set(5)`) are not wire names, and
+//! `#[cfg(test)]` literals are exempt.
+
+pub mod names {
+    pub const REQUESTS: &str = "requests";
+    pub const BATCHES: &str = "batches";
+}
+
+use names::BATCHES;
+
+pub struct Metrics;
+
+impl Metrics {
+    pub fn add(&self, _name: &str, _v: u64) {}
+    pub fn set(&self, _name: &str, _v: u64) {}
+}
+
+pub fn emit(m: &Metrics, cell: &std::cell::Cell<u64>) {
+    m.add(names::REQUESTS, 1);
+    m.add(BATCHES, 1);
+    m.set(names::REQUESTS, 7);
+    cell.set(5);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_are_fine_in_tests() {
+        Metrics.add("test_metric", 1);
+    }
+}

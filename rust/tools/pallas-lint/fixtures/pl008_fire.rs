@@ -1,0 +1,27 @@
+//! PL008 must-fire fixture (virtual path `coordinator/router.rs`):
+//! metrics emission sites that bypass the wire-name registry. The
+//! fixture carries its own miniature `names` module — the analyzer
+//! collects any `mod names` in the file set. Expected findings:
+//!
+//! - line 23: `.add("requests_raw", ..)` — raw string literal
+//! - line 24: `.record("latency", ..)` — raw string literal
+//! - line 25: `names::QUEUE_DEPTH` — not a registry constant
+
+pub mod names {
+    pub const REQUESTS: &str = "requests";
+}
+
+pub struct Metrics;
+
+impl Metrics {
+    pub fn add(&self, _name: &str, _v: u64) {}
+    pub fn record(&self, _name: &str, _ms: f64) {}
+    pub fn set(&self, _name: &str, _v: u64) {}
+}
+
+pub fn emit(m: &Metrics) {
+    m.add("requests_raw", 1);
+    m.record("latency", 3.5);
+    m.set(names::QUEUE_DEPTH, 4);
+    m.add(names::REQUESTS, 1);
+}

@@ -1,0 +1,1207 @@
+//! Crate-wide analysis: the two-pass half of pallas-lint.
+//!
+//! The per-file rules in `lib.rs` (PL001–PL005) are syntactic — each
+//! file is judged alone. The rules here need the *crate*: which
+//! function acquires which lock, who calls whom, and which metrics
+//! names exist in the registry. Pass 1 builds that model; pass 2 walks
+//! every function body with a live-guard stack and enforces:
+//!
+//! - **PL006** — lock acquisitions must follow the hierarchy declared
+//!   in `rust/lint-order.toml`. Every `util::sync::{lock,read,write}_
+//!   recover` call site must resolve (by the field/binding ident of its
+//!   argument) to a declared lock, and an acquisition made while
+//!   another guard is live must go *down* the declared order — an
+//!   inversion, an unordered pair, or a re-acquisition is a finding.
+//!   Edges are tracked intra-procedurally and one call level deep.
+//! - **PL007** — on the hot-path files (`engine/sched.rs`,
+//!   `runtime/pool.rs`, `coordinator/batcher.rs`), no blocking call
+//!   (`recv`, `recv_timeout`, `recv_deadline`, zero-arg `join`,
+//!   `thread::sleep`, `thread::park[_timeout]`) and no nested
+//!   `*_recover` acquisition while a guard binding is live. Condvar
+//!   `wait`/`wait_timeout` are deliberately *not* blocking here: they
+//!   take the guard by value and release it while parked.
+//! - **PL008** — metrics emission sites (`.add(..)` / `.set(..)` /
+//!   `.record(..)`) must name their gauge/counter via a constant from
+//!   the `coordinator/stats.rs` `names` registry module, never a raw
+//!   string literal — and a `names::X` path must actually exist there.
+//!
+//! The guard-liveness model is deliberately simple and documented:
+//! a `let g = <acquire>;` guard lives to the end of its enclosing
+//! block (or an explicit `drop(g)`); an acquire embedded in a larger
+//! expression (a method-chain receiver, a `for` head, a `match`
+//! scrutinee) lives as a temporary to the end of the enclosing
+//! *statement*, including any blocks that statement owns. `let _ =
+//! <acquire>` drops immediately, matching Rust. Closure bodies are
+//! analyzed with a fresh (empty) guard stack — a closure's body does
+//! not run at its definition site — and a closure's acquisitions do
+//! not count as its defining function's for call-edge purposes.
+//!
+//! Call resolution is heuristic on purpose (no type inference): a
+//! `self.m(..)` call resolves against the enclosing impl's type, a
+//! `Type::f(..)` path call against `Type`, and a bare `f(..)` call by
+//! unique name (same file first). Anything ambiguous resolves to
+//! nothing — the analysis under-approximates calls rather than invent
+//! edges. A function whose body *tail-returns* an acquisition (e.g.
+//! `ProfileStore::guard`) is treated as an acquire at its call sites,
+//! so returned guards stay tracked.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use syn::visit::Visit;
+
+use crate::{is_test_gated, Finding};
+
+/// Acquire helpers from `util::sync` — the only lock anchors the
+/// analysis recognizes (the per-file rule PL002 already forces all
+/// non-test guard acquisition through them).
+const ACQUIRE_FNS: &[&str] = &["lock_recover", "read_recover", "write_recover"];
+
+/// Method names that block the calling thread. `join` counts only with
+/// zero args (`JoinHandle::join`), so `Vec::join(", ")` never fires.
+const BLOCKING_METHODS: &[&str] = &["recv", "recv_timeout", "recv_deadline"];
+
+/// `thread::`-qualified free functions that block.
+const BLOCKING_THREAD_FNS: &[&str] = &["sleep", "park", "park_timeout"];
+
+/// Metrics emission methods whose first argument is a wire name.
+const EMIT_METHODS: &[&str] = &["add", "set", "record"];
+
+/// PL007's scope: the files where a stalled guard stalls the paper's
+/// core-allocation machinery itself.
+fn hot_path(file: &str) -> bool {
+    matches!(file, "engine/sched.rs" | "runtime/pool.rs" | "coordinator/batcher.rs")
+}
+
+// ------------------------------------------------------------ lock order
+
+/// One declared lock: a wire name plus the source idents (struct fields
+/// or local bindings) its acquisition sites use.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LockDecl {
+    pub name: String,
+    pub fields: Vec<String>,
+}
+
+/// The declared acquisition hierarchy from `rust/lint-order.toml`:
+/// named locks plus `a < b` ordering chains. Construction validates
+/// the declaration itself — duplicate names/fields, unknown names in a
+/// chain, and cycles are all errors.
+#[derive(Debug, Clone)]
+pub struct LockOrder {
+    locks: Vec<LockDecl>,
+    /// direct declared edges (before, after), for the DOT rendering
+    declared: Vec<(usize, usize)>,
+    /// transitive closure: `reach[a]` contains `b` iff `a < b`
+    reach: Vec<BTreeSet<usize>>,
+}
+
+impl LockOrder {
+    pub fn lock_names(&self) -> Vec<&str> {
+        self.locks.iter().map(|l| l.name.as_str()).collect()
+    }
+
+    fn by_field(&self, ident: &str) -> Option<usize> {
+        self.locks.iter().position(|l| l.fields.iter().any(|f| f == ident))
+    }
+
+    fn name(&self, i: usize) -> &str {
+        &self.locks[i].name
+    }
+
+    fn before(&self, a: usize, b: usize) -> bool {
+        self.reach[a].contains(&b)
+    }
+}
+
+/// Parse the `lint-order.toml` subset: `#` comments, `[[lock]]` blocks
+/// with a `name` and one or more `field` aliases, and top-level
+/// `order = "a < b < c"` chains (repeatable; the union must be
+/// acyclic). Hand-rolled like the allowlist parser — same no-new-deps
+/// rule.
+pub fn parse_lock_order(text: &str) -> Result<LockOrder, String> {
+    let mut locks: Vec<LockDecl> = Vec::new();
+    let mut chains: Vec<(usize, String)> = Vec::new();
+    let mut cur: Option<LockDecl> = None;
+
+    fn finish(locks: &mut Vec<LockDecl>, cur: Option<LockDecl>) -> Result<(), String> {
+        if let Some(l) = cur {
+            if l.name.is_empty() {
+                return Err("[[lock]] block missing `name`".into());
+            }
+            if l.fields.is_empty() {
+                return Err(format!("[[lock]] `{}` declares no `field`", l.name));
+            }
+            locks.push(l);
+        }
+        Ok(())
+    }
+    fn unquote(v: &str, line_no: usize) -> Result<String, String> {
+        let v = v.trim();
+        if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+            Ok(v[1..v.len() - 1].to_string())
+        } else {
+            Err(format!("line {line_no}: expected a double-quoted string, got `{v}`"))
+        }
+    }
+
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[lock]]" {
+            finish(&mut locks, cur.take())?;
+            cur = Some(LockDecl { name: String::new(), fields: Vec::new() });
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {line_no}: expected `key = value`"))?;
+        match key.trim() {
+            // `order` is global: chains may appear between or after
+            // [[lock]] blocks.
+            "order" => chains.push((line_no, unquote(value, line_no)?)),
+            "name" => match cur.as_mut() {
+                Some(l) if l.name.is_empty() => l.name = unquote(value, line_no)?,
+                Some(l) => {
+                    return Err(format!("line {line_no}: `{}` already has a name", l.name))
+                }
+                None => return Err(format!("line {line_no}: `name` outside [[lock]]")),
+            },
+            "field" => match cur.as_mut() {
+                Some(l) => l.fields.push(unquote(value, line_no)?),
+                None => return Err(format!("line {line_no}: `field` outside [[lock]]")),
+            },
+            other => return Err(format!("line {line_no}: unknown key `{other}`")),
+        }
+    }
+    finish(&mut locks, cur.take())?;
+
+    // Validate declarations: names and field aliases must be unique
+    // crate-wide (an alias names exactly one lock).
+    for (i, l) in locks.iter().enumerate() {
+        for other in &locks[i + 1..] {
+            if l.name == other.name {
+                return Err(format!("duplicate lock name `{}`", l.name));
+            }
+            if let Some(f) = l.fields.iter().find(|f| other.fields.contains(f)) {
+                return Err(format!(
+                    "field `{f}` is claimed by both `{}` and `{}`",
+                    l.name, other.name
+                ));
+            }
+        }
+    }
+
+    // Chains -> direct edges.
+    let mut declared: Vec<(usize, usize)> = Vec::new();
+    for (line_no, chain) in &chains {
+        let parts: Vec<&str> = chain.split('<').map(str::trim).collect();
+        if parts.len() < 2 {
+            return Err(format!("line {line_no}: order chain needs at least `a < b`"));
+        }
+        let mut prev: Option<usize> = None;
+        for p in parts {
+            let idx = locks
+                .iter()
+                .position(|l| l.name == p)
+                .ok_or_else(|| format!("line {line_no}: order names unknown lock `{p}`"))?;
+            if let Some(a) = prev {
+                if a == idx {
+                    return Err(format!("line {line_no}: `{p}` ordered against itself"));
+                }
+                if !declared.contains(&(a, idx)) {
+                    declared.push((a, idx));
+                }
+            }
+            prev = Some(idx);
+        }
+    }
+
+    // Transitive closure + cycle check.
+    let n = locks.len();
+    let mut reach: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n];
+    for &(a, b) in &declared {
+        reach[a].insert(b);
+    }
+    // Floyd–Warshall-style saturation; the lock count is single-digit.
+    loop {
+        let mut grew = false;
+        for a in 0..n {
+            let via: Vec<usize> = reach[a].iter().copied().collect();
+            for m in via {
+                let add: Vec<usize> = reach[m].difference(&reach[a]).copied().collect();
+                for b in add {
+                    reach[a].insert(b);
+                    grew = true;
+                }
+            }
+        }
+        if !grew {
+            break;
+        }
+    }
+    for (a, r) in reach.iter().enumerate() {
+        if r.contains(&a) {
+            return Err(format!(
+                "declared order contains a cycle through `{}`",
+                locks[a].name
+            ));
+        }
+    }
+
+    Ok(LockOrder { locks, declared, reach })
+}
+
+/// One observed held→acquired pair, by declared lock name. `ok` is
+/// whether the declared order permits it — a clean tree only ships
+/// `ok` edges (the finding for a bad one fails the lint).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct LockEdge {
+    pub from: String,
+    pub to: String,
+    pub ok: bool,
+}
+
+/// Render the declared hierarchy plus the observed acquisition edges
+/// as Graphviz DOT (CI uploads this next to `lint-report.json`).
+/// Declared edges are solid; observed ones dashed (red if illegal).
+pub fn lock_order_dot(order: &LockOrder, observed: &[LockEdge]) -> String {
+    let mut out = String::from("digraph lock_order {\n");
+    out.push_str("  rankdir=LR;\n  node [shape=box, fontname=\"monospace\"];\n");
+    for l in &order.locks {
+        out.push_str(&format!("  \"{}\";\n", l.name));
+    }
+    for &(a, b) in &order.declared {
+        out.push_str(&format!(
+            "  \"{}\" -> \"{}\" [label=\"declared\"];\n",
+            order.name(a),
+            order.name(b)
+        ));
+    }
+    for e in observed {
+        let color = if e.ok { "blue" } else { "red" };
+        out.push_str(&format!(
+            "  \"{}\" -> \"{}\" [style=dashed, color={color}, label=\"observed\"];\n",
+            e.from, e.to
+        ));
+    }
+    out.push_str("}\n");
+    out
+}
+
+// ------------------------------------------------------------ pass 1
+
+/// What pass 2 needs to know about a function without re-reading it:
+/// the locks it acquires directly, whether it blocks directly, and
+/// whether its body tail-returns a guard.
+struct FnSummary {
+    file: String,
+    self_ty: Option<String>,
+    name: String,
+    /// idents of locks acquired directly in the body (closures excluded)
+    acquires: Vec<String>,
+    /// first directly-blocking call, if any: (what, line)
+    blocking: Option<(String, usize)>,
+    /// the body's tail expression is an acquire of this ident — call
+    /// sites treat the call itself as an acquisition
+    tail_acquire: Option<String>,
+}
+
+struct SymbolTable {
+    fns: Vec<FnSummary>,
+}
+
+impl SymbolTable {
+    fn resolve_method(&self, ty: &str, name: &str) -> Option<&FnSummary> {
+        let mut hits = self
+            .fns
+            .iter()
+            .filter(|f| f.name == name && f.self_ty.as_deref() == Some(ty));
+        match (hits.next(), hits.next()) {
+            (Some(f), None) => Some(f),
+            _ => None,
+        }
+    }
+
+    fn resolve_free(&self, file: &str, name: &str) -> Option<&FnSummary> {
+        let all: Vec<&FnSummary> = self.fns.iter().filter(|f| f.name == name).collect();
+        match all.len() {
+            1 => Some(all[0]),
+            0 => None,
+            _ => {
+                let mut local = all.into_iter().filter(|f| f.file == file);
+                match (local.next(), local.next()) {
+                    (Some(f), None) => Some(f),
+                    _ => None,
+                }
+            }
+        }
+    }
+}
+
+/// The `coordinator/stats.rs` `names` module contents: const ident ->
+/// wire-name value. Collected from any `mod names` in the file set so
+/// fixtures can carry their own miniature registry.
+#[derive(Default)]
+struct Registry {
+    consts: BTreeMap<String, String>,
+}
+
+/// The ident a `*_recover(..)` argument names its lock by: the last
+/// *named* field or path segment, skipping `&`, `*`, parens, and tuple
+/// indices — `&self.queue.0` -> `queue`, a local `lock` -> `lock`.
+fn lock_ident(e: &syn::Expr) -> Option<String> {
+    match e {
+        syn::Expr::Reference(r) => lock_ident(&r.expr),
+        syn::Expr::Paren(p) => lock_ident(&p.expr),
+        syn::Expr::Group(g) => lock_ident(&g.expr),
+        syn::Expr::Unary(u) => lock_ident(&u.expr),
+        syn::Expr::Index(i) => lock_ident(&i.expr),
+        syn::Expr::MethodCall(m) => lock_ident(&m.receiver),
+        syn::Expr::Field(f) => match &f.member {
+            syn::Member::Named(id) => Some(id.to_string()),
+            syn::Member::Unnamed(_) => lock_ident(&f.base),
+        },
+        syn::Expr::Path(p) => p.path.segments.last().map(|s| s.ident.to_string()),
+        _ => None,
+    }
+}
+
+/// `lock_recover(&x)` and friends: Some((acquire-fn, lock ident, line)).
+fn as_acquire(call: &syn::ExprCall) -> Option<(String, Option<String>, usize)> {
+    let syn::Expr::Path(p) = &*call.func else { return None };
+    let last = p.path.segments.last()?;
+    let name = last.ident.to_string();
+    if !ACQUIRE_FNS.contains(&name.as_str()) {
+        return None;
+    }
+    let line = last.ident.span().start().line;
+    Some((name, call.args.first().and_then(lock_ident), line))
+}
+
+/// Collects a function's direct acquires and blocking calls, skipping
+/// closure bodies (they do not run at the definition site).
+struct SummaryCollector {
+    acquires: Vec<String>,
+    blocking: Option<(String, usize)>,
+}
+
+impl<'ast> Visit<'ast> for SummaryCollector {
+    fn visit_expr_closure(&mut self, _node: &'ast syn::ExprClosure) {}
+
+    fn visit_expr_call(&mut self, node: &'ast syn::ExprCall) {
+        if let Some((_, ident, _)) = as_acquire(node) {
+            self.acquires.push(ident.unwrap_or_else(|| "<expr>".into()));
+        } else if let Some((what, line)) = blocking_path_call(node) {
+            self.blocking.get_or_insert((what, line));
+        }
+        syn::visit::visit_expr_call(self, node);
+    }
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        if let Some(what) = blocking_method(node) {
+            self.blocking
+                .get_or_insert((what, node.method.span().start().line));
+        }
+        syn::visit::visit_expr_method_call(self, node);
+    }
+}
+
+fn blocking_method(node: &syn::ExprMethodCall) -> Option<String> {
+    let name = node.method.to_string();
+    if BLOCKING_METHODS.contains(&name.as_str())
+        || (name == "join" && node.args.is_empty())
+    {
+        Some(format!(".{name}()"))
+    } else {
+        None
+    }
+}
+
+fn blocking_path_call(node: &syn::ExprCall) -> Option<(String, usize)> {
+    let syn::Expr::Path(p) = &*node.func else { return None };
+    let segs: Vec<String> = p.path.segments.iter().map(|s| s.ident.to_string()).collect();
+    let last = segs.last()?;
+    if BLOCKING_THREAD_FNS.contains(&last.as_str())
+        && segs.len() >= 2
+        && segs[segs.len() - 2] == "thread"
+    {
+        let line = p.path.segments.last().map(|s| s.ident.span().start().line)?;
+        Some((format!("thread::{last}()"), line))
+    } else {
+        None
+    }
+}
+
+/// Does this block's tail expression acquire a lock (through parens)?
+fn tail_acquire(block: &syn::Block) -> Option<String> {
+    fn of_expr(e: &syn::Expr) -> Option<String> {
+        match e {
+            syn::Expr::Paren(p) => of_expr(&p.expr),
+            syn::Expr::Group(g) => of_expr(&g.expr),
+            syn::Expr::Call(c) => as_acquire(c).map(|(_, id, _)| id.unwrap_or_default()),
+            _ => None,
+        }
+    }
+    match block.stmts.last()? {
+        syn::Stmt::Expr(e, None) => of_expr(e),
+        _ => None,
+    }
+}
+
+/// Walk a file's items, yielding every non-test fn (with its impl type)
+/// and every `mod names` const into the tables.
+fn collect_file(
+    file: &str,
+    items: &[syn::Item],
+    self_ty: Option<&str>,
+    table: &mut SymbolTable,
+    registry: &mut Registry,
+) {
+    for item in items {
+        match item {
+            syn::Item::Fn(f) => {
+                if is_test_gated(&f.attrs) {
+                    continue;
+                }
+                table.fns.push(summarize(file, self_ty, &f.sig.ident, &f.block));
+            }
+            syn::Item::Impl(imp) => {
+                if is_test_gated(&imp.attrs) {
+                    continue;
+                }
+                let ty = impl_type_name(imp);
+                for ii in &imp.items {
+                    if let syn::ImplItem::Fn(f) = ii {
+                        if is_test_gated(&f.attrs) {
+                            continue;
+                        }
+                        table.fns.push(summarize(
+                            file,
+                            ty.as_deref(),
+                            &f.sig.ident,
+                            &f.block,
+                        ));
+                    }
+                }
+            }
+            syn::Item::Mod(m) => {
+                if is_test_gated(&m.attrs) {
+                    continue;
+                }
+                if let Some((_, inner)) = &m.content {
+                    if m.ident == "names" {
+                        for it in inner {
+                            if let syn::Item::Const(c) = it {
+                                if let syn::Expr::Lit(l) = &*c.expr {
+                                    if let syn::Lit::Str(s) = &l.lit {
+                                        registry
+                                            .consts
+                                            .insert(c.ident.to_string(), s.value());
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    collect_file(file, inner, self_ty, table, registry);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn impl_type_name(imp: &syn::ItemImpl) -> Option<String> {
+    if let syn::Type::Path(tp) = &*imp.self_ty {
+        tp.path.segments.last().map(|s| s.ident.to_string())
+    } else {
+        None
+    }
+}
+
+fn summarize(
+    file: &str,
+    self_ty: Option<&str>,
+    ident: &proc_macro2::Ident,
+    block: &syn::Block,
+) -> FnSummary {
+    let mut c = SummaryCollector { acquires: Vec::new(), blocking: None };
+    c.visit_block(block);
+    FnSummary {
+        file: file.to_string(),
+        self_ty: self_ty.map(str::to_string),
+        name: ident.to_string(),
+        acquires: c.acquires,
+        blocking: c.blocking,
+        tail_acquire: tail_acquire(block),
+    }
+}
+
+// ------------------------------------------------------------ pass 2
+
+/// A guard currently live at some program point: the lock ident its
+/// acquisition named, the declared lock it resolved to (if any), the
+/// binding that owns it (None for statement temporaries), and where it
+/// was acquired.
+#[derive(Clone)]
+struct LiveGuard {
+    ident: String,
+    lock: Option<usize>,
+    binding: Option<String>,
+    line: usize,
+}
+
+struct Walker<'a> {
+    file: &'a str,
+    self_ty: Option<&'a str>,
+    hot: bool,
+    order: Option<&'a LockOrder>,
+    table: &'a SymbolTable,
+    registry: &'a Registry,
+    live: Vec<LiveGuard>,
+    findings: &'a mut Vec<Finding>,
+    edges: &'a mut BTreeSet<LockEdge>,
+}
+
+impl Walker<'_> {
+    fn push_finding(&mut self, rule: &'static str, line: usize, message: String) {
+        self.findings.push(Finding {
+            rule,
+            file: self.file.to_string(),
+            line,
+            message,
+        });
+    }
+
+    /// PL006 edge check for "acquiring `to` while holding `held`",
+    /// intra-procedural or via the named call.
+    fn check_edge(&mut self, held: &LiveGuard, to_ident: &str, line: usize, via: Option<&str>) {
+        let Some(order) = self.order else { return };
+        let (Some(from), Some(to)) = (held.lock, order.by_field(to_ident)) else {
+            // Undeclared locks are reported at their own acquire site;
+            // an edge against one cannot be order-checked.
+            return;
+        };
+        let via = via.map(|v| format!(" via call to `{v}`")).unwrap_or_default();
+        if from == to {
+            self.push_finding(
+                "PL006",
+                line,
+                format!(
+                    "re-acquiring `{}`{via} while already holding it (acquired line {}) \
+                     — self-deadlock",
+                    order.name(from),
+                    held.line
+                ),
+            );
+            return;
+        }
+        let ok = order.before(from, to);
+        self.edges.insert(LockEdge {
+            from: order.name(from).to_string(),
+            to: order.name(to).to_string(),
+            ok,
+        });
+        if ok {
+            return;
+        }
+        if order.before(to, from) {
+            self.push_finding(
+                "PL006",
+                line,
+                format!(
+                    "acquiring `{}`{via} while holding `{}` inverts the declared order \
+                     `{}` < `{}` (lint-order.toml)",
+                    order.name(to),
+                    order.name(from),
+                    order.name(to),
+                    order.name(from),
+                ),
+            );
+        } else {
+            self.push_finding(
+                "PL006",
+                line,
+                format!(
+                    "no declared order between `{}` (held) and `{}`{via} — extend an \
+                     `order` chain in lint-order.toml",
+                    order.name(from),
+                    order.name(to),
+                ),
+            );
+        }
+    }
+
+    /// Everything that happens at an acquisition site: undeclared-lock
+    /// check, PL006 edges against every live guard, PL007 nested-guard
+    /// check on hot paths. Returns the guard value.
+    fn on_acquire(&mut self, ident: Option<String>, line: usize) -> LiveGuard {
+        let ident = ident.unwrap_or_else(|| "<expr>".into());
+        let lock = self.order.and_then(|o| o.by_field(&ident));
+        if self.order.is_some() && lock.is_none() {
+            self.push_finding(
+                "PL006",
+                line,
+                format!(
+                    "lock acquisition `{ident}` matches no [[lock]] entry in \
+                     lint-order.toml — declare it and place it in the order"
+                ),
+            );
+        }
+        if self.hot {
+            if let Some(held) = self.live.last() {
+                let holder = held
+                    .binding
+                    .clone()
+                    .unwrap_or_else(|| format!("`{}` (temporary)", held.ident));
+                self.push_finding(
+                    "PL007",
+                    line,
+                    format!(
+                        "acquiring `{ident}` while guard {holder} (line {}) is live — \
+                         nested lock acquisition on a hot path",
+                        held.line
+                    ),
+                );
+            }
+        }
+        let helds: Vec<LiveGuard> = self.live.clone();
+        for held in &helds {
+            self.check_edge(held, &ident, line, None);
+        }
+        LiveGuard { ident, lock, binding: None, line }
+    }
+
+    /// Everything that happens at a blocking call site (PL007).
+    fn on_blocking(&mut self, what: &str, line: usize) {
+        if !self.hot {
+            return;
+        }
+        if let Some(held) = self.live.last() {
+            let holder = held
+                .binding
+                .clone()
+                .unwrap_or_else(|| format!("`{}` (temporary)", held.ident));
+            self.push_finding(
+                "PL007",
+                line,
+                format!(
+                    "{what} while guard {holder} (acquired line {}) is live — shrink \
+                     the critical section or collect-then-drop before blocking",
+                    held.line
+                ),
+            );
+        }
+    }
+
+    /// A resolved call to a crate function while guards may be held:
+    /// one-call-deep PL006 edges and PL007 blocking propagation.
+    fn on_resolved_call(&mut self, callee: &FnSummary, line: usize) -> Option<LiveGuard> {
+        let label = match &callee.self_ty {
+            Some(t) => format!("{t}::{}", callee.name),
+            None => callee.name.clone(),
+        };
+        if self.hot && !self.live.is_empty() {
+            if let Some((what, at)) = &callee.blocking {
+                let held = self.live.last().expect("checked non-empty");
+                let holder = held
+                    .binding
+                    .clone()
+                    .unwrap_or_else(|| format!("`{}` (temporary)", held.ident));
+                self.push_finding(
+                    "PL007",
+                    line,
+                    format!(
+                        "call to `{label}` (blocks: {what} at {}:{at}) while guard \
+                         {holder} is live",
+                        callee.file
+                    ),
+                );
+            }
+        }
+        let helds: Vec<LiveGuard> = self.live.clone();
+        for acq in &callee.acquires {
+            if callee.tail_acquire.as_deref() == Some(acq.as_str()) {
+                // the tail acquire is handled below as a real acquire at
+                // this site — do not double-report its edges
+                continue;
+            }
+            for held in &helds {
+                self.check_edge(held, acq, line, Some(&label));
+            }
+        }
+        callee
+            .tail_acquire
+            .clone()
+            .map(|ident| self.on_acquire(Some(ident), line))
+    }
+
+    /// PL008: emission sites name their metric from the registry.
+    fn check_emission(&mut self, node: &syn::ExprMethodCall) {
+        let method = node.method.to_string();
+        if !EMIT_METHODS.contains(&method.as_str()) {
+            return;
+        }
+        let Some(arg0) = node.args.first() else { return };
+        let line = node.method.span().start().line;
+        match arg0 {
+            syn::Expr::Lit(l) => {
+                if let syn::Lit::Str(s) = &l.lit {
+                    self.push_finding(
+                        "PL008",
+                        line,
+                        format!(
+                            ".{method}(\"{}\", ..) names its metric with a raw string \
+                             literal — hoist it into coordinator/stats.rs `names` and \
+                             reference the constant",
+                            s.value()
+                        ),
+                    );
+                }
+            }
+            syn::Expr::Path(p) => {
+                let segs: Vec<String> =
+                    p.path.segments.iter().map(|s| s.ident.to_string()).collect();
+                let Some(last) = segs.last() else { return };
+                let via_names = segs.iter().any(|s| s == "names");
+                if via_names && !self.registry.consts.contains_key(last) {
+                    self.push_finding(
+                        "PL008",
+                        line,
+                        format!(
+                            "`names::{last}` is not a constant in the stats wire-name \
+                             registry — add it to coordinator/stats.rs `names`"
+                        ),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn walk_block(&mut self, b: &syn::Block) {
+        let base = self.live.len();
+        for stmt in &b.stmts {
+            self.walk_stmt(stmt);
+        }
+        self.live.truncate(base);
+    }
+
+    fn walk_stmt(&mut self, s: &syn::Stmt) {
+        match s {
+            syn::Stmt::Local(l) => {
+                let base = self.live.len();
+                let guard = l.init.as_ref().and_then(|init| self.walk_expr(&init.expr));
+                // statement temporaries die here; a guard bound by the
+                // `let` survives to the end of the enclosing block
+                self.live.truncate(base);
+                if let Some(g) = guard {
+                    if let Some(name) = pat_binding(&l.pat) {
+                        self.live.push(LiveGuard { binding: Some(name), ..g });
+                    }
+                    // `let _ = <acquire>` drops the guard immediately
+                }
+            }
+            syn::Stmt::Expr(e, _) => {
+                let base = self.live.len();
+                let _ = self.walk_expr(e);
+                self.live.truncate(base);
+            }
+            syn::Stmt::Item(_) | syn::Stmt::Macro(_) => {}
+        }
+    }
+
+    /// Walk a sub-expression whose value is *consumed* here: if it
+    /// evaluates to a guard, that guard becomes a live temporary for
+    /// the rest of the enclosing statement.
+    fn walk_child(&mut self, e: &syn::Expr) {
+        if let Some(g) = self.walk_expr(e) {
+            self.live.push(g);
+        }
+    }
+
+    /// Returns Some when this expression's value *is* a guard (a direct
+    /// acquire, a call to a guard-returning fn, or one of those behind
+    /// parens) — the caller decides whether it becomes a named binding
+    /// or a statement temporary.
+    fn walk_expr(&mut self, e: &syn::Expr) -> Option<LiveGuard> {
+        match e {
+            syn::Expr::Call(c) => self.walk_call(c),
+            syn::Expr::MethodCall(m) => {
+                self.walk_child(&m.receiver);
+                if let Some(what) = blocking_method(m) {
+                    self.on_blocking(&what, m.method.span().start().line);
+                }
+                self.check_emission(m);
+                // copy the table reference out so the resolved summary
+                // is not borrow-tied to `self`
+                let table = self.table;
+                let guard = if is_self_path(&m.receiver) {
+                    match self
+                        .self_ty
+                        .and_then(|ty| table.resolve_method(ty, &m.method.to_string()))
+                    {
+                        Some(callee) => {
+                            self.on_resolved_call(callee, m.method.span().start().line)
+                        }
+                        None => None,
+                    }
+                } else {
+                    None
+                };
+                for a in &m.args {
+                    self.walk_child(a);
+                }
+                guard
+            }
+            syn::Expr::Paren(p) => self.walk_expr(&p.expr),
+            syn::Expr::Group(g) => self.walk_expr(&g.expr),
+            syn::Expr::Reference(r) => self.walk_expr(&r.expr),
+            syn::Expr::ForLoop(f) => {
+                self.walk_child(&f.expr);
+                self.walk_block(&f.body);
+                None
+            }
+            syn::Expr::While(w) => {
+                self.walk_child(&w.cond);
+                self.walk_block(&w.body);
+                None
+            }
+            syn::Expr::Loop(l) => {
+                self.walk_block(&l.body);
+                None
+            }
+            syn::Expr::If(i) => {
+                self.walk_child(&i.cond);
+                self.walk_block(&i.then_branch);
+                if let Some((_, else_e)) = &i.else_branch {
+                    self.walk_child(else_e);
+                }
+                None
+            }
+            syn::Expr::Match(m) => {
+                self.walk_child(&m.expr);
+                for arm in &m.arms {
+                    if let Some((_, g)) = &arm.guard {
+                        self.walk_child(g);
+                    }
+                    self.walk_child(&arm.body);
+                }
+                None
+            }
+            syn::Expr::Let(l) => {
+                // `if let <pat> = <expr>`: a guard in the scrutinee
+                // stays live through the bound arm (statement scope).
+                self.walk_child(&l.expr);
+                None
+            }
+            syn::Expr::Block(b) => {
+                self.walk_block(&b.block);
+                None
+            }
+            syn::Expr::Unsafe(u) => {
+                self.walk_block(&u.block);
+                None
+            }
+            syn::Expr::Async(a) => {
+                self.walk_block(&a.block);
+                None
+            }
+            syn::Expr::TryBlock(t) => {
+                self.walk_block(&t.block);
+                None
+            }
+            syn::Expr::Closure(c) => {
+                // The body runs later, with whatever is live *then* —
+                // analyze it against an empty guard stack.
+                let saved = std::mem::take(&mut self.live);
+                let _ = self.walk_expr(&c.body);
+                self.live = saved;
+                None
+            }
+            syn::Expr::Assign(a) => {
+                self.walk_child(&a.right);
+                self.walk_child(&a.left);
+                None
+            }
+            syn::Expr::Binary(b) => {
+                self.walk_child(&b.left);
+                self.walk_child(&b.right);
+                None
+            }
+            syn::Expr::Unary(u) => {
+                self.walk_child(&u.expr);
+                None
+            }
+            syn::Expr::Field(f) => {
+                self.walk_child(&f.base);
+                None
+            }
+            syn::Expr::Index(i) => {
+                self.walk_child(&i.expr);
+                self.walk_child(&i.index);
+                None
+            }
+            syn::Expr::Await(a) => {
+                self.walk_child(&a.base);
+                None
+            }
+            syn::Expr::Try(t) => {
+                self.walk_child(&t.expr);
+                None
+            }
+            syn::Expr::Cast(c) => {
+                self.walk_child(&c.expr);
+                None
+            }
+            syn::Expr::Return(r) => {
+                if let Some(e) = &r.expr {
+                    self.walk_child(e);
+                }
+                None
+            }
+            syn::Expr::Break(b) => {
+                if let Some(e) = &b.expr {
+                    self.walk_child(e);
+                }
+                None
+            }
+            syn::Expr::Tuple(t) => {
+                for e in &t.elems {
+                    self.walk_child(e);
+                }
+                None
+            }
+            syn::Expr::Array(a) => {
+                for e in &a.elems {
+                    self.walk_child(e);
+                }
+                None
+            }
+            syn::Expr::Struct(s) => {
+                for f in &s.fields {
+                    self.walk_child(&f.expr);
+                }
+                if let Some(rest) = &s.rest {
+                    self.walk_child(rest);
+                }
+                None
+            }
+            syn::Expr::Range(r) => {
+                if let Some(s) = &r.start {
+                    self.walk_child(s);
+                }
+                if let Some(e) = &r.end {
+                    self.walk_child(e);
+                }
+                None
+            }
+            syn::Expr::Repeat(r) => {
+                self.walk_child(&r.expr);
+                self.walk_child(&r.len);
+                None
+            }
+            // paths, literals, macros (unparsed tokens), and the rest
+            // carry no guard flow
+            _ => None,
+        }
+    }
+
+    fn walk_call(&mut self, c: &syn::ExprCall) -> Option<LiveGuard> {
+        // Acquire?
+        if let Some((_, ident, line)) = as_acquire(c) {
+            for a in &c.args {
+                self.walk_child(a);
+            }
+            return Some(self.on_acquire(ident, line));
+        }
+        // drop(g) ends a named guard early.
+        if let syn::Expr::Path(p) = &*c.func {
+            let segs: Vec<String> =
+                p.path.segments.iter().map(|s| s.ident.to_string()).collect();
+            if segs.last().is_some_and(|s| s == "drop") && c.args.len() == 1 {
+                if let syn::Expr::Path(arg) = &c.args[0] {
+                    if let Some(name) = arg.path.get_ident().map(|i| i.to_string()) {
+                        if let Some(pos) = self
+                            .live
+                            .iter()
+                            .rposition(|g| g.binding.as_deref() == Some(&name))
+                        {
+                            self.live.remove(pos);
+                            return None;
+                        }
+                    }
+                }
+            }
+            if let Some((what, line)) = blocking_path_call(c) {
+                self.on_blocking(&what, line);
+            }
+            // Resolve `Type::f(..)` and bare `f(..)` crate calls.
+            let line = p
+                .path
+                .segments
+                .last()
+                .map(|s| s.ident.span().start().line)
+                .unwrap_or(0);
+            let table = self.table;
+            let file = self.file;
+            let resolved = if segs.len() >= 2
+                && segs[segs.len() - 2]
+                    .chars()
+                    .next()
+                    .is_some_and(|ch| ch.is_uppercase())
+            {
+                table.resolve_method(&segs[segs.len() - 2], segs.last().expect("non-empty"))
+            } else if segs.len() == 1 {
+                table.resolve_free(file, &segs[0])
+            } else {
+                None
+            };
+            if let Some(callee) = resolved {
+                let guard = self.on_resolved_call(callee, line);
+                for a in &c.args {
+                    self.walk_child(a);
+                }
+                return guard;
+            }
+        } else {
+            self.walk_child(&c.func);
+        }
+        for a in &c.args {
+            self.walk_child(a);
+        }
+        None
+    }
+}
+
+fn is_self_path(e: &syn::Expr) -> bool {
+    matches!(e, syn::Expr::Path(p) if p.path.is_ident("self"))
+}
+
+fn pat_binding(pat: &syn::Pat) -> Option<String> {
+    match pat {
+        syn::Pat::Ident(p) => Some(p.ident.to_string()),
+        syn::Pat::Type(p) => pat_binding(&p.pat),
+        _ => None,
+    }
+}
+
+// ----------------------------------------------------------- entry point
+
+pub(crate) struct CrateReport {
+    pub findings: Vec<Finding>,
+    pub edges: Vec<LockEdge>,
+}
+
+/// Run the crate-wide rules (PL006–PL008) over a set of already-read
+/// files. `order == None` disables PL006 entirely (including the
+/// undeclared-lock check); PL007/PL008 always run.
+pub(crate) fn check_crate(
+    files: &[(String, String)],
+    order: Option<&LockOrder>,
+) -> Result<CrateReport, String> {
+    let mut asts: Vec<(String, syn::File)> = Vec::with_capacity(files.len());
+    for (rel, src) in files {
+        let ast =
+            syn::parse_file(src).map_err(|e| format!("{rel}: parse error: {e}"))?;
+        asts.push((rel.clone(), ast));
+    }
+
+    // Pass 1: symbol table + registry.
+    let mut table = SymbolTable { fns: Vec::new() };
+    let mut registry = Registry::default();
+    for (rel, ast) in &asts {
+        collect_file(rel, &ast.items, None, &mut table, &mut registry);
+    }
+
+    // Pass 2: walk every non-test fn body with the crate context.
+    let mut findings = Vec::new();
+    let mut edges: BTreeSet<LockEdge> = BTreeSet::new();
+    for (rel, ast) in &asts {
+        walk_items(
+            rel,
+            &ast.items,
+            None,
+            order,
+            &table,
+            &registry,
+            &mut findings,
+            &mut edges,
+        );
+    }
+    Ok(CrateReport { findings, edges: edges.into_iter().collect() })
+}
+
+#[allow(clippy::too_many_arguments)] // internal plumbing, not API
+fn walk_items(
+    file: &str,
+    items: &[syn::Item],
+    self_ty: Option<&str>,
+    order: Option<&LockOrder>,
+    table: &SymbolTable,
+    registry: &Registry,
+    findings: &mut Vec<Finding>,
+    edges: &mut BTreeSet<LockEdge>,
+) {
+    for item in items {
+        match item {
+            syn::Item::Fn(f) => {
+                if is_test_gated(&f.attrs) {
+                    continue;
+                }
+                let mut w = Walker {
+                    file,
+                    self_ty,
+                    hot: hot_path(file),
+                    order,
+                    table,
+                    registry,
+                    live: Vec::new(),
+                    // explicit reborrows: a bare `findings` in a struct
+                    // literal would *move* the &mut out of the loop
+                    findings: &mut *findings,
+                    edges: &mut *edges,
+                };
+                w.walk_block(&f.block);
+            }
+            syn::Item::Impl(imp) => {
+                if is_test_gated(&imp.attrs) {
+                    continue;
+                }
+                let ty = impl_type_name(imp);
+                for ii in &imp.items {
+                    if let syn::ImplItem::Fn(f) = ii {
+                        if is_test_gated(&f.attrs) {
+                            continue;
+                        }
+                        let mut w = Walker {
+                            file,
+                            self_ty: ty.as_deref(),
+                            hot: hot_path(file),
+                            order,
+                            table,
+                            registry,
+                            live: Vec::new(),
+                            findings: &mut *findings,
+                            edges: &mut *edges,
+                        };
+                        w.walk_block(&f.block);
+                    }
+                }
+            }
+            syn::Item::Mod(m) => {
+                if is_test_gated(&m.attrs) {
+                    continue;
+                }
+                if let Some((_, inner)) = &m.content {
+                    walk_items(
+                        file, inner, self_ty, order, table, registry, findings, edges,
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+}

@@ -39,12 +39,51 @@
 //!   stay dead. Prose (doc comments) is exempt: names are matched as
 //!   code identifiers, not text.
 //!
-//! Rules PL001–PL004 skip `#[cfg(test)]`-gated subtrees and `#[test]`
-//! functions; PL005 does not. Findings not covered by a
-//! `lint-allow.toml` entry (each with a written justification and a
-//! `max` budget) make the binary exit nonzero; so do allowlist entries
-//! that no longer match anything — exceptions must not outlive their
-//! reason.
+//! Three further rules are *crate-wide* — they need a symbol table and
+//! call graph over all of `rust/src` at once, built by the two-pass
+//! analyzer in [`graph`]:
+//!
+//! - **PL006** — lock acquisitions must follow the hierarchy declared
+//!   in `rust/lint-order.toml` (`--order`). Guards are tracked across
+//!   intra-procedural flow and one call level deep; an inverted,
+//!   unordered, re-entrant, or undeclared acquisition is a finding,
+//!   and the declared order itself must be acyclic (a cycle is a
+//!   config error, exit 2).
+//! - **PL007** — no blocking call (`recv`/`recv_timeout`/
+//!   `recv_deadline`, zero-arg `join`, `thread::sleep`/`park`) and no
+//!   nested `*_recover` while a guard is live on the hot-path files
+//!   (`engine/sched.rs`, `runtime/pool.rs`, `coordinator/batcher.rs`).
+//!   Condvar `wait`/`wait_timeout` are exempt by design — they release
+//!   the guard while parked.
+//! - **PL008** — every metrics emission site (`.add`/`.set`/`.record`
+//!   with a wire-name first argument) must reference a constant from
+//!   the `coordinator/stats.rs` `names` registry module; raw string
+//!   literals and unknown `names::*` paths are findings.
+//!
+//! Rules PL001–PL004 and PL006–PL008 skip `#[cfg(test)]`-gated
+//! subtrees and `#[test]` functions; PL005 does not. Findings not
+//! covered by a `lint-allow.toml` entry (each with a written
+//! justification and a `max` budget) make the binary exit nonzero; so
+//! do allowlist entries that no longer match anything — exceptions
+//! must not outlive their reason.
+//!
+//! # JSON report schema (`--json`)
+//!
+//! One object with five fixed keys, stable across releases (consumers:
+//! the `lint-invariants` CI job and its artifact):
+//!
+//! ```text
+//! {
+//!   "rules":    { "PL001": "<summary>", ... },          // full catalog
+//!   "findings": [ {"rule", "file", "line", "message"} ],// active (unsuppressed)
+//!   "suppressed": <int>,                                // count absorbed by allowlist
+//!   "unused_allow_entries": [ {"rule", "file"} ],       // stale exceptions (fail)
+//!   "lock_edges": [ {"from", "to", "ok"} ]              // observed PL006 pairs
+//! }
+//! ```
+//!
+//! Exit codes (the binary): 0 = clean, 1 = findings or stale allowlist
+//! entries, 2 = usage / IO / parse error.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -52,6 +91,10 @@ use std::path::Path;
 
 use proc_macro2::TokenTree;
 use syn::visit::Visit;
+
+mod graph;
+
+pub use graph::{lock_order_dot, parse_lock_order, LockDecl, LockEdge, LockOrder};
 
 /// Rule catalog: (id, one-line summary) — the JSON report embeds it so
 /// downstream tooling doesn't need this crate's docs.
@@ -61,6 +104,9 @@ pub const RULES: &[(&str, &str)] = &[
     ("PL003", "no raw Instant::now() on scheduler/pool hot paths"),
     ("PL004", "Budget/CancelToken/RequestCtx minted only at defining modules and ingress"),
     ("PL005", "deleted shim names must stay dead (tests included)"),
+    ("PL006", "lock acquisitions follow the declared hierarchy in lint-order.toml"),
+    ("PL007", "no blocking call while holding a guard on sched/pool/batcher hot paths"),
+    ("PL008", "metrics wire names come from the coordinator stats names registry"),
 ];
 
 /// One rule violation at a source location. `file` is the path relative
@@ -122,10 +168,12 @@ const PL005_BANNED: &[&str] = &[
 
 // -------------------------------------------------------------- checking
 
-/// Run every rule over one file's source. `rel_path` scopes the
-/// path-sensitive rules (PL001/PL003/PL004) — pass the path relative to
-/// the crate's `src/`, `/`-separated. Returns `Err` if the file does
-/// not parse as Rust.
+/// Run the per-file rules (PL001–PL005) over one file's source.
+/// `rel_path` scopes the path-sensitive rules (PL001/PL003/PL004) —
+/// pass the path relative to the crate's `src/`, `/`-separated.
+/// Returns `Err` if the file does not parse as Rust. The crate-wide
+/// rules (PL006–PL008) need the whole file set — use [`check_sources`]
+/// or [`check_tree`] for those.
 pub fn check_source(rel_path: &str, src: &str) -> Result<Vec<Finding>, String> {
     let ast = syn::parse_file(src).map_err(|e| format!("{rel_path}: parse error: {e}"))?;
     let mut v = Rules { file: rel_path, test_depth: 0, findings: Vec::new() };
@@ -133,13 +181,44 @@ pub fn check_source(rel_path: &str, src: &str) -> Result<Vec<Finding>, String> {
     Ok(v.findings)
 }
 
-/// Recursively check every `*.rs` under `root` (deterministic order).
-pub fn check_tree(root: &Path) -> Result<Vec<Finding>, String> {
-    let mut files = Vec::new();
-    collect_rs(root, &mut files)?;
-    files.sort();
+/// Everything one full run produces: the merged findings of all eight
+/// rules plus the observed lock-order edges (for the DOT artifact).
+#[derive(Debug, Default)]
+pub struct TreeReport {
+    pub findings: Vec<Finding>,
+    /// held→acquired pairs observed by PL006, by declared lock name;
+    /// empty when no `--order` was given
+    pub lock_edges: Vec<LockEdge>,
+}
+
+/// Run all rules — per-file *and* crate-wide — over an in-memory file
+/// set of `(rel_path, source)` pairs. `order == None` disables PL006.
+/// Findings are sorted by (file, line, rule) for deterministic output.
+pub fn check_sources(
+    files: &[(String, String)],
+    order: Option<&LockOrder>,
+) -> Result<TreeReport, String> {
     let mut findings = Vec::new();
-    for path in files {
+    for (rel, src) in files {
+        findings.extend(check_source(rel, src)?);
+    }
+    let crate_rep = graph::check_crate(files, order)?;
+    findings.extend(crate_rep.findings);
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule, a.message.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.rule, b.message.as_str()))
+    });
+    Ok(TreeReport { findings, lock_edges: crate_rep.edges })
+}
+
+/// Recursively check every `*.rs` under `root` (deterministic order)
+/// with all eight rules.
+pub fn check_tree(root: &Path, order: Option<&LockOrder>) -> Result<TreeReport, String> {
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for path in paths {
         let rel = path
             .strip_prefix(root)
             .map_err(|_| format!("{}: not under source root", path.display()))?
@@ -149,9 +228,9 @@ pub fn check_tree(root: &Path) -> Result<Vec<Finding>, String> {
             .join("/");
         let src = std::fs::read_to_string(&path)
             .map_err(|e| format!("{}: {e}", path.display()))?;
-        findings.extend(check_source(&rel, &src)?);
+        files.push((rel, src));
     }
-    Ok(findings)
+    check_sources(&files, order)
 }
 
 fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
@@ -188,8 +267,9 @@ impl Rules<'_> {
 /// Does any attribute gate this node to test builds? Catches `#[test]`
 /// and any `#[cfg(...)]` whose argument tokens mention the ident `test`
 /// (so `#[cfg(any(test, feature = "x"))]` counts — conservative in the
-/// safe direction for PL001–PL004's *exemption*).
-fn is_test_gated(attrs: &[syn::Attribute]) -> bool {
+/// safe direction for PL001–PL004's *exemption*). Shared with the
+/// crate-wide analyzer, which skips the same subtrees.
+pub(crate) fn is_test_gated(attrs: &[syn::Attribute]) -> bool {
     attrs.iter().any(|a| {
         if a.path().is_ident("test") {
             return true;
@@ -473,9 +553,20 @@ pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, String> {
             return Err(format!("{at}: empty `reason` — every exception needs a justification"));
         }
         if !RULES.iter().any(|(id, _)| *id == rule) {
-            return Err(format!("{at}: unknown rule `{rule}`"));
+            let valid: Vec<&str> = RULES.iter().map(|(id, _)| *id).collect();
+            return Err(format!(
+                "{at}: unknown rule `{rule}` (valid rules: {})",
+                valid.join(", ")
+            ));
         }
-        Ok(AllowEntry { rule, file, max: p.max.unwrap_or(1), reason })
+        let max = p.max.unwrap_or(1);
+        if max == 0 {
+            return Err(format!(
+                "{at}: `max = 0` is stale by construction — an exception that \
+                 suppresses nothing must be deleted"
+            ));
+        }
+        Ok(AllowEntry { rule, file, max, reason })
     }
     fn unquote(v: &str, line_no: usize) -> Result<String, String> {
         let v = v.trim();
@@ -524,6 +615,21 @@ pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, String> {
     }
     if let Some(p) = cur.take() {
         entries.push(finish(p)?);
+    }
+    // Duplicate (rule, file) pairs are an error, not a merge: matching
+    // is first-entry-wins, so a second entry would silently never fire
+    // and its `reason`/`max` would be dead text.
+    for (i, e) in entries.iter().enumerate() {
+        if entries[..i]
+            .iter()
+            .any(|prev| prev.rule == e.rule && prev.file == e.file)
+        {
+            return Err(format!(
+                "duplicate [[allow]] entry for ({}, {}) — merge the budgets into one \
+                 entry",
+                e.rule, e.file
+            ));
+        }
     }
     Ok(entries)
 }
@@ -594,9 +700,10 @@ fn json_escape(s: &str) -> String {
 }
 
 /// Machine-readable report (rule catalog + active findings + allowlist
-/// accounting). Hand-rolled writer — same no-new-deps rule as the
-/// config parser.
-pub fn json_report(report: &AllowReport) -> String {
+/// accounting + observed lock edges). Hand-rolled writer — same
+/// no-new-deps rule as the config parser. The schema is documented in
+/// the crate root and is stable: consumers parse it from CI artifacts.
+pub fn json_report(report: &AllowReport, lock_edges: &[LockEdge]) -> String {
     let mut out = String::from("{\n  \"rules\": {");
     for (i, (id, desc)) in RULES.iter().enumerate() {
         if i > 0 {
@@ -628,6 +735,19 @@ pub fn json_report(report: &AllowReport) -> String {
             "\n    {{\"rule\": \"{}\", \"file\": \"{}\"}}",
             json_escape(&e.rule),
             json_escape(&e.file)
+        ));
+    }
+    out.push_str("\n  ],");
+    out.push_str("\n  \"lock_edges\": [");
+    for (i, e) in lock_edges.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"from\": \"{}\", \"to\": \"{}\", \"ok\": {}}}",
+            json_escape(&e.from),
+            json_escape(&e.to),
+            e.ok
         ));
     }
     out.push_str("\n  ]\n}\n");
@@ -666,6 +786,104 @@ reason = "connection threads are I/O-bound, not compute"
         )
         .is_err());
         assert!(parse_allowlist("rule = \"PL001\"").is_err(), "key outside a block");
+    }
+
+    #[test]
+    fn allowlist_unknown_rule_lists_valid_rules() {
+        let err = parse_allowlist(
+            "[[allow]]\nrule = \"PL999\"\nfile = \"a.rs\"\nreason = \"x\"",
+        )
+        .unwrap_err();
+        for (id, _) in RULES {
+            assert!(err.contains(id), "error should list `{id}`, got: {err}");
+        }
+    }
+
+    #[test]
+    fn allowlist_rejects_zero_max() {
+        let err = parse_allowlist(
+            "[[allow]]\nrule = \"PL001\"\nfile = \"a.rs\"\nmax = 0\nreason = \"x\"",
+        )
+        .unwrap_err();
+        assert!(err.contains("stale by construction"), "got: {err}");
+    }
+
+    #[test]
+    fn allowlist_rejects_duplicate_rule_file_pairs() {
+        let text = r#"
+[[allow]]
+rule = "PL001"
+file = "a.rs"
+reason = "first"
+
+[[allow]]
+rule = "PL001"
+file = "a.rs"
+reason = "second — would never fire"
+"#;
+        let err = parse_allowlist(text).unwrap_err();
+        assert!(err.contains("duplicate"), "got: {err}");
+        // same rule in a different file is fine
+        let ok = r#"
+[[allow]]
+rule = "PL001"
+file = "a.rs"
+reason = "r"
+
+[[allow]]
+rule = "PL001"
+file = "b.rs"
+reason = "r"
+"#;
+        assert_eq!(parse_allowlist(ok).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn lock_order_parses_and_rejects_cycles() {
+        let good = r#"
+# hierarchy
+[[lock]]
+name = "a"
+field = "fa"
+
+[[lock]]
+name = "b"
+field = "fb"
+field = "fb2"
+
+order = "a < b"
+"#;
+        let order = parse_lock_order(good).unwrap();
+        assert_eq!(order.lock_names(), vec!["a", "b"]);
+
+        let cyclic = r#"
+[[lock]]
+name = "a"
+field = "fa"
+
+[[lock]]
+name = "b"
+field = "fb"
+
+order = "a < b"
+order = "b < a"
+"#;
+        let err = parse_lock_order(cyclic).unwrap_err();
+        assert!(err.contains("cycle"), "got: {err}");
+
+        let unknown = "[[lock]]\nname = \"a\"\nfield = \"fa\"\norder = \"a < zz\"";
+        assert!(parse_lock_order(unknown).unwrap_err().contains("unknown lock"));
+
+        let dup_field = r#"
+[[lock]]
+name = "a"
+field = "shared"
+
+[[lock]]
+name = "b"
+field = "shared"
+"#;
+        assert!(parse_lock_order(dup_field).unwrap_err().contains("claimed by both"));
     }
 
     #[test]
@@ -724,9 +942,12 @@ reason = "connection threads are I/O-bound, not compute"
             unused: vec![],
             over_budget: vec![],
         };
-        let j = json_report(&report);
+        let edges = vec![LockEdge { from: "a".into(), to: "b".into(), ok: true }];
+        let j = json_report(&report, &edges);
         assert!(j.contains("\"PL002\""));
         assert!(j.contains("\\\" and\\nnewline"));
         assert!(j.contains("\"suppressed\": 4"));
+        assert!(j.contains("\"lock_edges\""));
+        assert!(j.contains("\"ok\": true"));
     }
 }

@@ -1,31 +1,47 @@
 //! `pallas-lint` CLI.
 //!
 //! ```text
-//! pallas-lint [--allow lint-allow.toml] [--json report.json] SRC_ROOT
+//! pallas-lint [--allow lint-allow.toml] [--order lint-order.toml]
+//!             [--json report.json] [--dot lock-order.dot] SRC_ROOT
 //! ```
 //!
 //! Prints findings as `file:line RULE message`, one per line, plus an
-//! allowlist accounting summary. Optionally writes a JSON report.
+//! allowlist accounting summary. Optionally writes a JSON report
+//! (schema documented in the library crate root) and, when `--order`
+//! is given, a Graphviz DOT rendering of the declared lock hierarchy
+//! plus the acquisition edges actually observed in the tree.
 //!
-//! Exit codes:
+//! Without `--order`, rule PL006 is disabled; PL007/PL008 always run.
+//! `--dot` requires `--order` (there is no graph without a hierarchy).
+//!
+//! Exit codes (stable — CI consumers rely on them):
 //! - `0` — no active findings, no stale allowlist entries
 //! - `1` — findings survive the allowlist, an entry is over its `max`
 //!   budget, or an entry matches nothing (stale)
-//! - `2` — usage, I/O, config-parse, or Rust-parse error
+//! - `2` — usage, I/O, config-parse (allowlist or lock order, including
+//!   a cyclic declared hierarchy), or Rust-parse error
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use pallas_lint::{apply_allowlist, check_tree, json_report, parse_allowlist, AllowEntry};
+use pallas_lint::{
+    apply_allowlist, check_tree, json_report, lock_order_dot, parse_allowlist,
+    parse_lock_order, AllowEntry, LockOrder,
+};
 
 fn usage() -> ExitCode {
-    eprintln!("usage: pallas-lint [--allow FILE] [--json FILE] SRC_ROOT");
+    eprintln!(
+        "usage: pallas-lint [--allow FILE] [--order FILE] [--json FILE] [--dot FILE] \
+         SRC_ROOT"
+    );
     ExitCode::from(2)
 }
 
 fn main() -> ExitCode {
     let mut allow_path: Option<PathBuf> = None;
+    let mut order_path: Option<PathBuf> = None;
     let mut json_path: Option<PathBuf> = None;
+    let mut dot_path: Option<PathBuf> = None;
     let mut root: Option<PathBuf> = None;
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
@@ -34,8 +50,16 @@ fn main() -> ExitCode {
                 Some(v) => allow_path = Some(PathBuf::from(v)),
                 None => return usage(),
             },
+            "--order" => match args.next() {
+                Some(v) => order_path = Some(PathBuf::from(v)),
+                None => return usage(),
+            },
             "--json" => match args.next() {
                 Some(v) => json_path = Some(PathBuf::from(v)),
+                None => return usage(),
+            },
+            "--dot" => match args.next() {
+                Some(v) => dot_path = Some(PathBuf::from(v)),
                 None => return usage(),
             },
             "--help" | "-h" => {
@@ -43,7 +67,10 @@ fn main() -> ExitCode {
                 for (id, desc) in pallas_lint::RULES {
                     println!("  {id}  {desc}");
                 }
-                println!("\nusage: pallas-lint [--allow FILE] [--json FILE] SRC_ROOT");
+                println!(
+                    "\nusage: pallas-lint [--allow FILE] [--order FILE] [--json FILE] \
+                     [--dot FILE] SRC_ROOT"
+                );
                 return ExitCode::SUCCESS;
             }
             _ if root.is_none() && !arg.starts_with('-') => root = Some(PathBuf::from(arg)),
@@ -51,9 +78,33 @@ fn main() -> ExitCode {
         }
     }
     let Some(root) = root else { return usage() };
+    if dot_path.is_some() && order_path.is_none() {
+        eprintln!("pallas-lint: --dot requires --order (no graph without a hierarchy)");
+        return usage();
+    }
 
-    let findings = match check_tree(&root) {
-        Ok(f) => f,
+    let order: Option<LockOrder> = match &order_path {
+        None => None,
+        Some(path) => {
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("pallas-lint: {}: {e}", path.display());
+                    return ExitCode::from(2);
+                }
+            };
+            match parse_lock_order(&text) {
+                Ok(o) => Some(o),
+                Err(e) => {
+                    eprintln!("pallas-lint: {}: {e}", path.display());
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    };
+
+    let tree = match check_tree(&root, order.as_ref()) {
+        Ok(t) => t,
         Err(e) => {
             eprintln!("pallas-lint: {e}");
             return ExitCode::from(2);
@@ -80,7 +131,7 @@ fn main() -> ExitCode {
         }
     };
 
-    let report = apply_allowlist(&findings, &allow);
+    let report = apply_allowlist(&tree.findings, &allow);
 
     for f in &report.active {
         println!("{f}");
@@ -96,7 +147,13 @@ fn main() -> ExitCode {
     }
 
     if let Some(path) = &json_path {
-        if let Err(e) = std::fs::write(path, json_report(&report)) {
+        if let Err(e) = std::fs::write(path, json_report(&report, &tree.lock_edges)) {
+            eprintln!("pallas-lint: writing {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+    if let (Some(path), Some(order)) = (&dot_path, &order) {
+        if let Err(e) = std::fs::write(path, lock_order_dot(order, &tree.lock_edges)) {
             eprintln!("pallas-lint: writing {}: {e}", path.display());
             return ExitCode::from(2);
         }

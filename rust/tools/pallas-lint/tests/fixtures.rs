@@ -3,15 +3,35 @@
 //! additionally prove their scoping by re-checking the same source
 //! under an exempt virtual path.
 
-use pallas_lint::{check_source, Finding};
+use pallas_lint::{check_source, check_sources, parse_lock_order, Finding, LockOrder, TreeReport};
 
 fn check(virtual_path: &str, src: &str) -> Vec<Finding> {
     check_source(virtual_path, src).expect("fixture must parse")
 }
 
+/// Run the full eight-rule analysis (per-file + crate-wide) over one
+/// fixture under a virtual path.
+fn check_crate(virtual_path: &str, src: &str, order: Option<&LockOrder>) -> TreeReport {
+    check_sources(&[(virtual_path.to_string(), src.to_string())], order)
+        .expect("fixture must parse")
+}
+
 fn rules(findings: &[Finding]) -> Vec<&'static str> {
     findings.iter().map(|f| f.rule).collect()
 }
+
+/// The two-lock hierarchy the PL006 fixtures are written against.
+const AB_ORDER: &str = r#"
+[[lock]]
+name = "locks.alpha"
+field = "alpha"
+
+[[lock]]
+name = "locks.beta"
+field = "beta"
+
+order = "locks.alpha < locks.beta"
+"#;
 
 // ------------------------------------------------------------------ PL001
 
@@ -139,6 +159,150 @@ fn pl005_fires_on_shim_names_even_in_tests() {
 fn pl005_spares_the_live_builder_names_and_prose() {
     let f = check("engine/part.rs", include_str!("../fixtures/pl005_clean.rs"));
     assert!(f.is_empty(), "findings: {f:#?}");
+}
+
+// ------------------------------------------------------------------ PL006
+
+#[test]
+fn pl006_fires_on_inverted_and_undeclared_acquisitions() {
+    let order = parse_lock_order(AB_ORDER).expect("test hierarchy parses");
+    let rep = check_crate(
+        "engine/work.rs",
+        include_str!("../fixtures/pl006_fire.rs"),
+        Some(&order),
+    );
+    let f = &rep.findings;
+    assert_eq!(rules(f), vec!["PL006", "PL006", "PL006"], "findings: {f:#?}");
+    assert_eq!(f[0].line, 24, "direct inversion");
+    assert!(f[0].message.contains("inverts the declared order"), "got: {}", f[0].message);
+    assert_eq!(f[1].line, 31, "inversion one call level deep");
+    assert!(f[1].message.contains("via call to `Work::grab_alpha`"), "got: {}", f[1].message);
+    assert_eq!(f[2].line, 41, "undeclared lock");
+    assert!(f[2].message.contains("matches no [[lock]] entry"), "got: {}", f[2].message);
+    // the illegal pair is also reported as a non-ok observed edge
+    assert!(
+        rep.lock_edges.iter().any(|e| e.from == "locks.beta" && e.to == "locks.alpha" && !e.ok),
+        "edges: {:?}",
+        rep.lock_edges
+    );
+}
+
+#[test]
+fn pl006_accepts_in_order_nesting_tail_guards_and_tests() {
+    let order = parse_lock_order(AB_ORDER).expect("test hierarchy parses");
+    let rep = check_crate(
+        "engine/work.rs",
+        include_str!("../fixtures/pl006_clean.rs"),
+        Some(&order),
+    );
+    assert!(rep.findings.is_empty(), "findings: {:#?}", rep.findings);
+    // the legal alpha→beta nesting is observed and marked ok — this is
+    // what the DOT artifact renders as a dashed blue edge
+    assert!(
+        rep.lock_edges.iter().all(|e| e.ok) && !rep.lock_edges.is_empty(),
+        "edges: {:?}",
+        rep.lock_edges
+    );
+}
+
+#[test]
+fn pl006_is_inert_without_a_declared_order() {
+    let rep = check_crate("engine/work.rs", include_str!("../fixtures/pl006_fire.rs"), None);
+    assert!(rep.findings.is_empty(), "findings: {:#?}", rep.findings);
+    assert!(rep.lock_edges.is_empty());
+}
+
+// ------------------------------------------------------------------ PL007
+
+#[test]
+fn pl007_fires_on_blocking_and_nested_acquires_under_a_guard() {
+    let rep = check_crate(
+        "engine/sched.rs",
+        include_str!("../fixtures/pl007_fire.rs"),
+        None,
+    );
+    let f = &rep.findings;
+    assert_eq!(rules(f), vec!["PL007"; 5], "findings: {f:#?}");
+    assert_eq!(f[0].line, 25, "zero-arg join under the for-head temporary");
+    assert!(f[0].message.contains(".join()"), "got: {}", f[0].message);
+    assert_eq!(f[1].line, 31, "recv under a named guard");
+    assert_eq!(f[2].line, 38, "recv_timeout under a named guard");
+    assert_eq!(f[3].line, 45, "thread::sleep under a named guard");
+    assert!(f[3].message.contains("thread::sleep()"), "got: {}", f[3].message);
+    assert_eq!(f[4].line, 51, "nested lock_recover");
+    assert!(f[4].message.contains("nested lock acquisition"), "got: {}", f[4].message);
+}
+
+#[test]
+fn pl007_only_scopes_the_hot_path_files() {
+    let rep = check_crate(
+        "engine/profile.rs",
+        include_str!("../fixtures/pl007_fire.rs"),
+        None,
+    );
+    assert!(rep.findings.is_empty(), "findings: {:#?}", rep.findings);
+}
+
+#[test]
+fn pl007_accepts_condvar_waits_collect_then_join_and_tests() {
+    let rep = check_crate(
+        "coordinator/batcher.rs",
+        include_str!("../fixtures/pl007_clean.rs"),
+        None,
+    );
+    assert!(rep.findings.is_empty(), "findings: {:#?}", rep.findings);
+}
+
+// ------------------------------------------------------------------ PL008
+
+#[test]
+fn pl008_fires_on_literal_names_and_unknown_constants() {
+    let rep = check_crate(
+        "coordinator/router.rs",
+        include_str!("../fixtures/pl008_fire.rs"),
+        None,
+    );
+    let f = &rep.findings;
+    assert_eq!(rules(f), vec!["PL008", "PL008", "PL008"], "findings: {f:#?}");
+    assert_eq!(f[0].line, 23, "string-literal .add");
+    assert!(f[0].message.contains("raw string literal"), "got: {}", f[0].message);
+    assert_eq!(f[1].line, 24, "string-literal .record");
+    assert_eq!(f[2].line, 25, "unknown names:: constant");
+    assert!(
+        f[2].message.contains("`names::QUEUE_DEPTH` is not a constant"),
+        "got: {}",
+        f[2].message
+    );
+}
+
+#[test]
+fn pl008_accepts_registry_paths_imports_and_non_string_args() {
+    let rep = check_crate(
+        "coordinator/router.rs",
+        include_str!("../fixtures/pl008_clean.rs"),
+        None,
+    );
+    assert!(rep.findings.is_empty(), "findings: {:#?}", rep.findings);
+}
+
+// --------------------------------------------------------- fixture corpus
+
+/// Meta-test: adding a PL00N rule without both fixture halves is
+/// itself a test failure — the corpus cannot silently drift behind the
+/// rule table.
+#[test]
+fn every_rule_has_fire_and_clean_fixtures() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures");
+    for (id, _) in pallas_lint::RULES {
+        let stem = id.to_lowercase();
+        for kind in ["fire", "clean"] {
+            let path = dir.join(format!("{stem}_{kind}.rs"));
+            let meta = std::fs::metadata(&path).unwrap_or_else(|_| {
+                panic!("rule {id} is missing its must-{kind} fixture at {}", path.display())
+            });
+            assert!(meta.len() > 0, "rule {id}'s {kind} fixture is empty");
+        }
+    }
 }
 
 // --------------------------------------------------------------- ordering

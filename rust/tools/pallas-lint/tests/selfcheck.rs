@@ -1,13 +1,16 @@
 //! Runs pallas-lint against the real `rust/src/` tree as part of
-//! `cargo test`, with the checked-in allowlist applied. This is the
-//! same check CI's `lint-invariants` job runs via the binary — keeping
-//! it in the test suite means a plain `cargo test` in `rust/` cannot
-//! pass while the tree violates a concurrency contract, and that the
-//! allowlist cannot rot (a stale entry fails this test too).
+//! `cargo test`, with the checked-in allowlist and lock hierarchy
+//! applied — all eight rules, exactly as CI's `lint-invariants` job
+//! runs them via the binary. Keeping this in the test suite means a
+//! plain `cargo test` in `rust/` cannot pass while the tree violates a
+//! concurrency contract, and that neither config file can rot (a stale
+//! allowlist entry or a cyclic lock hierarchy fails here too).
 
 use std::path::Path;
 
-use pallas_lint::{apply_allowlist, check_tree, parse_allowlist};
+use pallas_lint::{
+    apply_allowlist, check_tree, parse_allowlist, parse_lock_order, LockOrder, TreeReport,
+};
 
 fn crate_root() -> &'static Path {
     // tools/pallas-lint -> tools -> rust
@@ -17,17 +20,27 @@ fn crate_root() -> &'static Path {
         .expect("pallas-lint lives two levels under the rust crate root")
 }
 
+fn lock_order() -> LockOrder {
+    let text = std::fs::read_to_string(crate_root().join("lint-order.toml"))
+        .expect("rust/lint-order.toml must exist");
+    parse_lock_order(&text).expect("lint-order.toml must parse and be acyclic")
+}
+
+fn run_full_check() -> TreeReport {
+    let order = lock_order();
+    check_tree(&crate_root().join("src"), Some(&order)).expect("rust/src must parse")
+}
+
 #[test]
 fn real_source_tree_is_lint_clean_under_the_checked_in_allowlist() {
-    let src = crate_root().join("src");
     let allow_path = crate_root().join("lint-allow.toml");
 
-    let findings = check_tree(&src).expect("rust/src must parse");
+    let tree = run_full_check();
     let allow_text =
         std::fs::read_to_string(&allow_path).expect("rust/lint-allow.toml must exist");
     let allow = parse_allowlist(&allow_text).expect("lint-allow.toml must parse");
 
-    let report = apply_allowlist(&findings, &allow);
+    let report = apply_allowlist(&tree.findings, &allow);
 
     assert!(
         report.over_budget.is_empty(),
@@ -64,11 +77,47 @@ fn the_allowlist_suppresses_something() {
     // `unused` check above would catch it, but this pins the intent —
     // the tree currently *needs* exceptions (ingress spawns, default
     // kill-switch tokens), and `suppressed` counts them.
-    let src = crate_root().join("src");
     let allow_text =
         std::fs::read_to_string(crate_root().join("lint-allow.toml")).unwrap();
-    let findings = check_tree(&src).expect("rust/src must parse");
+    let tree = run_full_check();
     let allow = parse_allowlist(&allow_text).expect("lint-allow.toml must parse");
-    let report = apply_allowlist(&findings, &allow);
+    let report = apply_allowlist(&tree.findings, &allow);
     assert!(report.suppressed > 0, "expected the justified exceptions to match");
+}
+
+#[test]
+fn observed_lock_edges_respect_the_declared_hierarchy() {
+    // PL006 would already have failed the first test on a violation;
+    // this pins the *shape* of the result: every held→acquired pair
+    // observed in the real tree is a legal (ok) edge of the declared
+    // order. Today the tree nests no locks at all, so the edge set is
+    // empty — if a legal nesting appears later this stays green, and
+    // the DOT artifact starts showing the dashed observed edge.
+    let tree = run_full_check();
+    let bad: Vec<String> = tree
+        .lock_edges
+        .iter()
+        .filter(|e| !e.ok)
+        .map(|e| format!("{} -> {}", e.from, e.to))
+        .collect();
+    assert!(bad.is_empty(), "illegal observed lock edges: {bad:?}");
+}
+
+#[test]
+fn the_declared_hierarchy_names_the_known_locks() {
+    // The hierarchy file is load-bearing data: if a lock is renamed or
+    // added in src without updating lint-order.toml, PL006's
+    // undeclared-acquisition check fails the selfcheck above; this
+    // test pins the reverse direction — the declared names themselves.
+    let order = lock_order();
+    let names = order.lock_names();
+    for expected in [
+        "sched.shards",
+        "profile.store",
+        "metrics.counters",
+        "metrics.histograms",
+        "batcher.queue",
+    ] {
+        assert!(names.contains(&expected), "lint-order.toml lost `{expected}`: {names:?}");
+    }
 }
