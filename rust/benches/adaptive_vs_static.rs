@@ -7,34 +7,43 @@
 //! Static (paper §3.1 default) weighs parts by declared input size and
 //! hands the 40ms part a single core; adaptive runs the §3.1 profiling
 //! phase online (engine::profile) and re-sizes by measured cost
-//! (engine::adaptive), giving the heavy part most of the budget. The
-//! acceptance bar — adaptive at least 10% better p95 — is asserted
-//! here and enforced per-PR by the `bench-gate` binary, which runs the
-//! same scenarios (this bench is the full-size member of the gate's
-//! scenario list; see rust/scripts/bench_gate.rs).
+//! (engine::adaptive), giving the heavy part most of the budget.
+//!
+//! The workload definition is the checked-in barometer scenario
+//! (`bench/scenarios/longshort.toml`) — this bench is its full-size
+//! run, and the acceptance bar (adaptive at least 10% better p95) is
+//! the scenario's own `[[bar]]`, enforced per-PR by `bench-bar diff`.
 //!
 //! Runs on the scaling-aware simulated runner (no PJRT artifacts
 //! needed), so it exercises the real dispatcher on any machine.
 
-use dnc_serve::bench::gate::{longshort_scenario, ScenarioResult};
+use std::path::Path;
 
-fn print_row(r: &ScenarioResult) {
+use dnc_serve::bar::{by_name, check_bars, run_cell, Measurement, Mode, Scenario};
+
+fn print_row(m: &Measurement) {
     println!(
         "{:<22} {:>6} {:>14.1} {:>9.2} {:>9.2}",
-        r.name, r.jobs, r.throughput_jobs_s, r.p50_ms, r.p95_ms
+        m.engine, m.jobs, m.throughput_jobs_s, m.p50_ms, m.p95_ms
     );
 }
 
 fn main() {
     const JOBS: usize = 60;
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("bench/scenarios/longshort.toml");
+    let text = std::fs::read_to_string(&path).expect("longshort scenario file");
+    let mut sc = Scenario::parse(&text).expect("longshort scenario parses");
+    sc.arrival.submitters = 1;
+    sc.arrival.jobs = JOBS;
+
     println!("# adaptive_vs_static — fig-8 long/short mix, misleading sizes, {JOBS} jobs each");
     println!(
         "{:<22} {:>6} {:>14} {:>9} {:>9}",
-        "variant", "jobs", "throughput/s", "p50 ms", "p95 ms"
+        "engine", "jobs", "throughput/s", "p50 ms", "p95 ms"
     );
-    let stat = longshort_scenario(false, JOBS);
+    let stat = run_cell(&sc, by_name("static").unwrap(), Mode::Full).expect("static cell");
     print_row(&stat);
-    let adap = longshort_scenario(true, JOBS);
+    let adap = run_cell(&sc, by_name("adaptive").unwrap(), Mode::Full).expect("adaptive cell");
     print_row(&adap);
 
     let gain = 100.0 * (1.0 - adap.p95_ms / stat.p95_ms);
@@ -44,10 +53,6 @@ fn main() {
         adap.p95_ms,
         adap.throughput_jobs_s / stat.throughput_jobs_s
     );
-    assert!(
-        adap.p95_ms <= 0.9 * stat.p95_ms,
-        "adaptive must be >=10% better p95: adaptive {:.2} ms vs static {:.2} ms",
-        adap.p95_ms,
-        stat.p95_ms
-    );
+    let failures = check_bars(&[sc], &[stat, adap]);
+    assert!(failures.is_empty(), "{failures:?}");
 }

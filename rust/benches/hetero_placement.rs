@@ -1,42 +1,58 @@
 //! E13: class-blind vs class-aware placement on a heterogeneous core
-//! map — the fig-style demo of the typed ledger. The machine is
-//! [`HETERO_SPEC`] (4 full-speed cores + 12 at 0.5x, the big.LITTLE
-//! shape of "Deep Learning Inference on Heterogeneous Mobile
-//! Processors"); each round submits three 4-thread hog jobs and one
-//! 4-thread latency-sensitive job back to back.
+//! map — the fig-style demo of the typed ledger. The machine is the
+//! `hetero_inversion` scenario's (4 full-speed cores + 12 at 0.5x, the
+//! big.LITTLE shape of "Deep Learning Inference on Heterogeneous
+//! Mobile Processors"); each round submits three 4-thread hog jobs and
+//! one 4-thread latency-sensitive job back to back.
 //!
-//! Class-blind placement (plain `RequestCtx`, affinity `Any`) lets the
-//! first hog squat the fast quartet, so the latency job runs on slow
-//! silicon and its p95 roughly doubles — *heterogeneity inversion*.
-//! Class-aware placement expresses intent through the same ctx plumbing
-//! the serving edge uses (hogs Low -> prefer Slow, latency job High ->
-//! prefer Fast) and restores it. The acceptance bar — class-aware at
-//! least 10% better p95 — is asserted here and enforced per-PR by the
-//! `bench-gate` binary over the same scenario pair
-//! (`hetero_inversion` / `hetero_inversion_blind`).
+//! Class-blind placement (the `blind` engine: plain `RequestCtx`,
+//! affinity `Any`) lets the first hog squat the fast quartet, so the
+//! latency job runs on slow silicon and its p95 roughly doubles —
+//! *heterogeneity inversion*. Class-aware placement (the `static`
+//! engine) expresses intent through the same ctx plumbing the serving
+//! edge uses (hogs Low -> prefer Slow, latency job High -> prefer
+//! Fast) and restores it.
+//!
+//! The workload definition is the checked-in barometer scenario
+//! (`bench/scenarios/hetero_inversion.toml`) — this bench is its
+//! full-size run, and the acceptance bar (class-aware at least 10%
+//! better p95) is the scenario's own `[[bar]]`, enforced per-PR by
+//! `bench-bar diff`.
 //!
 //! Runs on the scaling-aware simulated runner (no PJRT artifacts
 //! needed), so it exercises the real dispatcher on any machine.
 
-use dnc_serve::bench::gate::{hetero_bar, hetero_inversion_scenario, ScenarioResult, HETERO_SPEC};
+use std::path::Path;
 
-fn print_row(r: &ScenarioResult) {
+use dnc_serve::bar::{by_name, check_bars, run_cell, Measurement, Mode, Scenario};
+
+fn print_row(m: &Measurement) {
     println!(
         "{:<24} {:>6} {:>14.1} {:>9.2} {:>9.2}",
-        r.name, r.jobs, r.throughput_jobs_s, r.p50_ms, r.p95_ms
+        m.engine, m.jobs, m.throughput_jobs_s, m.p50_ms, m.p95_ms
     );
 }
 
 fn main() {
     const JOBS: usize = 60;
-    println!("# hetero_placement — cores {HETERO_SPEC}, 3 hogs + 1 latency job, {JOBS} jobs each");
+    let path =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("bench/scenarios/hetero_inversion.toml");
+    let text = std::fs::read_to_string(&path).expect("hetero_inversion scenario file");
+    let mut sc = Scenario::parse(&text).expect("hetero_inversion scenario parses");
+    sc.arrival.submitters = 1;
+    sc.arrival.jobs = JOBS;
+
+    println!(
+        "# hetero_placement — cores {}, 3 hogs + 1 latency job, {JOBS} jobs each",
+        sc.cores_spec
+    );
     println!(
         "{:<24} {:>6} {:>14} {:>9} {:>9}",
-        "variant", "jobs", "throughput/s", "p50 ms", "p95 ms"
+        "engine", "jobs", "throughput/s", "p50 ms", "p95 ms"
     );
-    let blind = hetero_inversion_scenario(false, JOBS);
+    let blind = run_cell(&sc, by_name("blind").unwrap(), Mode::Full).expect("blind cell");
     print_row(&blind);
-    let aware = hetero_inversion_scenario(true, JOBS);
+    let aware = run_cell(&sc, by_name("static").unwrap(), Mode::Full).expect("static cell");
     print_row(&aware);
 
     let gain = 100.0 * (1.0 - aware.p95_ms / blind.p95_ms);
@@ -46,7 +62,6 @@ fn main() {
         aware.p95_ms,
         aware.throughput_jobs_s / blind.throughput_jobs_s
     );
-    if let Some(msg) = hetero_bar(&aware, &blind) {
-        panic!("{msg}");
-    }
+    let failures = check_bars(&[sc], &[blind, aware]);
+    assert!(failures.is_empty(), "{failures:?}");
 }

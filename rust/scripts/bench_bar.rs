@@ -1,0 +1,253 @@
+//! `bench-bar` — the rebar-style scheduler barometer CLI.
+//!
+//! Scenarios are data (`rust/bench/scenarios/*.toml`), engines are the
+//! named scheduler configurations in `dnc_serve::bar::ENGINES`, and
+//! measurements are recorded CSVs under `rust/bench/record/<machine>/`
+//! (schema: `rust/bench/FORMAT.md`).
+//!
+//! ```text
+//! bench-bar run    [--quick] [--scenarios DIR] [--out FILE]
+//! bench-bar record [--quick] [--scenarios DIR] [--record-dir DIR] [--machine NAME]
+//! bench-bar diff   [--quick] [--scenarios DIR] [--record-dir DIR] [--machine NAME]
+//!                  [--out FILE] [--legacy-json FILE]
+//! bench-bar rank   [--quick] [--scenarios DIR] [--input FILE]
+//! ```
+//!
+//! - `run`    run the full scenario × engine matrix and print it;
+//!            `--out` also writes the measurements CSV
+//! - `record` run the matrix and (re)write the recorded baseline CSV —
+//!            run on a quiet machine, then commit the file
+//! - `diff`   run the matrix and gate it against the recorded baseline
+//!            (per-scenario `tolerance_pct`) plus every scenario's
+//!            self-relative bars; this is CI's blocking bench gate.
+//!            `--legacy-json` additionally emits the retired
+//!            `BENCH_pr.json` shape (kept for one release)
+//! - `rank`   geometric-mean p95/throughput ranking of engines across
+//!            the suite, from a fresh run or `--input` CSV
+//!
+//! - `--quick`     smoke-sized job counts (what CI runs per PR)
+//! - `--machine`   record-file subdirectory (default `ci16`)
+//! - `--scenarios` scenario dir (default: `bench/scenarios`, then
+//!                 `rust/bench/scenarios` — so it works from `rust/`
+//!                 or the repo root)
+//! - `--record-dir` record root (default: `bench/record`, then
+//!                 `rust/bench/record`)
+//!
+//! Exit codes: 0 pass, 1 gate/measurement failure, 2 config error.
+
+use std::path::PathBuf;
+use std::process::exit;
+
+use dnc_serve::bar::{
+    self, by_name, legacy_json, rank, record_path, render_rank, Measurement, Mode, Scenario,
+};
+use dnc_serve::util::args::Args;
+
+fn main() {
+    let args = Args::parse_env();
+    let code = match dispatch(&args) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<i32, String> {
+    let sub = args
+        .subcommand
+        .clone()
+        .ok_or_else(|| "missing subcommand — expected run, record, diff, or rank".to_string())?;
+    let mode = if args.flag("quick") { Mode::Quick } else { Mode::Full };
+    match sub.as_str() {
+        "run" => cmd_run(args, mode),
+        "record" => cmd_record(args, mode),
+        "diff" => cmd_diff(args, mode),
+        "rank" => cmd_rank(args, mode),
+        other => Err(format!(
+            "unknown subcommand `{other}` — expected run, record, diff, or rank"
+        )),
+    }
+}
+
+/// Resolve a directory option against the two supported invocation
+/// roots (`rust/` and the repo root).
+fn resolve_dir(explicit: Option<&str>, candidates: [&str; 2], what: &str) -> Result<PathBuf, String> {
+    if let Some(p) = explicit {
+        let p = PathBuf::from(p);
+        if !p.is_dir() {
+            return Err(format!("{what} dir {} does not exist", p.display()));
+        }
+        return Ok(p);
+    }
+    candidates
+        .iter()
+        .map(PathBuf::from)
+        .find(|p| p.is_dir())
+        .ok_or_else(|| format!("no {what} dir at {} or {}", candidates[0], candidates[1]))
+}
+
+fn load_scenarios(args: &Args) -> Result<Vec<Scenario>, String> {
+    let dir = resolve_dir(
+        args.get("scenarios"),
+        ["bench/scenarios", "rust/bench/scenarios"],
+        "scenario",
+    )?;
+    bar::load_dir(&dir)
+}
+
+/// Run the scenario × engine matrix cell by cell, narrating progress.
+/// Returns measurement failures as `Err` tagged for exit code 1 — by
+/// this point the config has validated, so anything that goes wrong is
+/// the scheduler misbehaving, not the operator.
+fn run_cells(scenarios: &[Scenario], mode: Mode) -> Result<Vec<Measurement>, String> {
+    let mut rows = Vec::new();
+    for sc in scenarios {
+        for engine in &sc.engines {
+            let eng = by_name(engine).expect("validated against ENGINES");
+            let m = bar::run_cell(sc, eng, mode)
+                .map_err(|e| format!("{}/{engine}: {e}", sc.name))?;
+            println!(
+                "  {:<20} {:<9} {:>6} jobs  {:>12.1}/s  p95 {:>8.2} ms",
+                m.scenario, m.engine, m.jobs, m.throughput_jobs_s, m.p95_ms
+            );
+            rows.push(m);
+        }
+    }
+    rows.sort_by(|a, b| (&a.scenario, &a.engine).cmp(&(&b.scenario, &b.engine)));
+    Ok(rows)
+}
+
+fn write_file(path: &PathBuf, contents: &str) -> Result<(), String> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .map_err(|e| format!("creating {}: {e}", parent.display()))?;
+    }
+    std::fs::write(path, contents).map_err(|e| format!("writing {}: {e}", path.display()))
+}
+
+fn cmd_run(args: &Args, mode: Mode) -> Result<i32, String> {
+    let scenarios = load_scenarios(args)?;
+    let out = args.get("out").map(PathBuf::from);
+    args.finish().map_err(|e| format!("{e:#}"))?;
+    println!("# bench-bar run ({} mode): {} scenarios", mode.as_str(), scenarios.len());
+    let rows = match run_cells(&scenarios, mode) {
+        Ok(rows) => rows,
+        Err(e) => {
+            eprintln!("FAIL: {e}");
+            return Ok(1);
+        }
+    };
+    if let Some(path) = out {
+        write_file(&path, &bar::to_csv(&rows))?;
+        println!("wrote {}", path.display());
+    }
+    Ok(0)
+}
+
+fn cmd_record(args: &Args, mode: Mode) -> Result<i32, String> {
+    let scenarios = load_scenarios(args)?;
+    let record_dir = resolve_dir(
+        args.get("record-dir"),
+        ["bench/record", "rust/bench/record"],
+        "record",
+    )?;
+    let machine = args.get_or("machine", "ci16");
+    args.finish().map_err(|e| format!("{e:#}"))?;
+    println!("# bench-bar record ({} mode) for machine `{machine}`", mode.as_str());
+    let rows = match run_cells(&scenarios, mode) {
+        Ok(rows) => rows,
+        Err(e) => {
+            eprintln!("FAIL: {e}");
+            return Ok(1);
+        }
+    };
+    let path = record_path(&record_dir, machine, mode);
+    write_file(&path, &bar::to_csv(&rows))?;
+    println!("recorded {} cells to {}", rows.len(), path.display());
+    Ok(0)
+}
+
+fn cmd_diff(args: &Args, mode: Mode) -> Result<i32, String> {
+    let scenarios = load_scenarios(args)?;
+    let record_dir = resolve_dir(
+        args.get("record-dir"),
+        ["bench/record", "rust/bench/record"],
+        "record",
+    )?;
+    let machine = args.get_or("machine", "ci16");
+    let out = args.get("out").map(PathBuf::from);
+    let legacy = args.get("legacy-json").map(PathBuf::from);
+    args.finish().map_err(|e| format!("{e:#}"))?;
+
+    let base_path = record_path(&record_dir, machine, mode);
+    let base_text = std::fs::read_to_string(&base_path).map_err(|e| {
+        format!(
+            "no recorded baseline at {} ({e}); record one with `bench-bar record`",
+            base_path.display()
+        )
+    })?;
+    let baseline = bar::parse_csv(&base_text).map_err(|e| format!("{}: {e}", base_path.display()))?;
+
+    println!("# bench-bar diff ({} mode) vs {}", mode.as_str(), base_path.display());
+    let rows = match run_cells(&scenarios, mode) {
+        Ok(rows) => rows,
+        Err(e) => {
+            eprintln!("FAIL: {e}");
+            return Ok(1);
+        }
+    };
+    if let Some(path) = out {
+        write_file(&path, &bar::to_csv(&rows))?;
+        println!("wrote {}", path.display());
+    }
+    if let Some(path) = legacy {
+        write_file(&path, &legacy_json(&rows).to_string())?;
+        println!("wrote legacy {}", path.display());
+    }
+
+    let outcome = bar::diff(&rows, &baseline, &scenarios);
+    println!();
+    for line in &outcome.lines {
+        println!("{line}");
+    }
+    if outcome.passed() {
+        println!("\ngate PASS: {} cells within tolerance, all bars hold", outcome.lines.len());
+        Ok(0)
+    } else {
+        eprintln!("\ngate FAIL:");
+        for f in &outcome.failures {
+            eprintln!("  - {f}");
+        }
+        Ok(1)
+    }
+}
+
+fn cmd_rank(args: &Args, mode: Mode) -> Result<i32, String> {
+    let input = args.get("input").map(PathBuf::from);
+    let rows = match input {
+        Some(path) => {
+            args.finish().map_err(|e| format!("{e:#}"))?;
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| format!("reading {}: {e}", path.display()))?;
+            bar::parse_csv(&text).map_err(|e| format!("{}: {e}", path.display()))?
+        }
+        None => {
+            let scenarios = load_scenarios(args)?;
+            args.finish().map_err(|e| format!("{e:#}"))?;
+            println!("# bench-bar rank ({} mode)", mode.as_str());
+            match run_cells(&scenarios, mode) {
+                Ok(rows) => rows,
+                Err(e) => {
+                    eprintln!("FAIL: {e}");
+                    return Ok(1);
+                }
+            }
+        }
+    };
+    println!();
+    print!("{}", render_rank(&rank(&rows)));
+    Ok(0)
+}

@@ -1,0 +1,560 @@
+//! The engine matrix: named scheduler configurations every scenario
+//! runs against, plus the deterministic load generator that drives
+//! them over the [`SimRunner`].
+//!
+//! An "engine" in rebar's sense is one contender: here, one way of
+//! configuring the scheduler stack. The matrix crosses every scenario
+//! with every engine named in its `engines` list, and each cell runs
+//! the *same* seeded arrival schedule (see [`plans`]) so cells differ
+//! only by the engine under test.
+//!
+//! This module is the barometer's ingress: it plays the client, so
+//! the per-request state ([`RequestCtx`], [`Budget`]) for each
+//! simulated request is minted here (PL004 lists this file as an
+//! ingress module), and its submitter/producer threads are the
+//! documented PL001 exceptions — the load generator must live outside
+//! the pool it measures.
+
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use crate::bench::gate::{sim_model, SimRunner};
+use crate::engine::{
+    allocate, AdaptiveConfig, AdaptivePolicy, AllocPolicy, Budget, PartTask, PartWeights,
+    Priority, ProfileStore, RequestCtx, SchedConfig, Scheduler, SubmitHandle,
+};
+use crate::util::prng::Rng;
+
+use super::measure::{Measurement, Mode};
+use super::scenario::{Loop, Scenario};
+
+/// One named scheduler configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineSpec {
+    pub name: &'static str,
+    pub summary: &'static str,
+    /// dispatcher shards; 0 = auto (1 per 16 cores)
+    pub shards: usize,
+    /// profile auto-sized parts first, then size them by measured cost
+    /// ([`AdaptivePolicy::part_weights`]) instead of declared size
+    pub adaptive: bool,
+    /// `false` strips request priorities: every task submits with a
+    /// plain ctx, so affinity is `Any` and priority admission is off —
+    /// the class-blind ablation of the paper's placement argument
+    pub class_aware: bool,
+}
+
+/// The engine matrix columns. `static` is the reference engine the
+/// ranking normalizes against; the other three each ablate or extend
+/// exactly one axis of it.
+pub const ENGINES: &[EngineSpec] = &[
+    EngineSpec {
+        name: "static",
+        summary: "size-proportional split, auto shards, ctx-derived class placement",
+        shards: 0,
+        adaptive: false,
+        class_aware: true,
+    },
+    EngineSpec {
+        name: "adaptive",
+        summary: "static engine with profiled part weights (paper §3.1) for auto-sized parts",
+        shards: 0,
+        adaptive: true,
+        class_aware: true,
+    },
+    EngineSpec {
+        name: "sharded2",
+        summary: "static engine with a 2-shard work-stealing dispatcher",
+        shards: 2,
+        adaptive: false,
+        class_aware: true,
+    },
+    EngineSpec {
+        name: "blind",
+        summary: "static engine with priorities stripped: class-blind, admission-order placement",
+        shards: 0,
+        adaptive: false,
+        class_aware: false,
+    },
+];
+
+/// Look an engine up by its scenario-file name.
+pub fn by_name(name: &str) -> Option<&'static EngineSpec> {
+    ENGINES.iter().find(|e| e.name == name)
+}
+
+/// One submitter's precomputed schedule: the inter-job gap before each
+/// submit, and for each job the cancel coin-flip per cancellable part
+/// instance (in part file order, instances flattened). Computed from
+/// the scenario seed alone, so the schedule is identical across
+/// engines, runs, and machines — the determinism the recorded-baseline
+/// discipline depends on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SubmitterPlan {
+    pub gaps_us: Vec<u64>,
+    pub cancels: Vec<Vec<bool>>,
+}
+
+/// Derive every submitter's schedule for a scenario. Each submitter
+/// forks its own RNG stream from the scenario seed, and each job draws
+/// its gap then its cancel flips, so the draw structure is fixed and
+/// the schedule reproducible.
+pub fn plans(sc: &Scenario, mode: Mode) -> Vec<SubmitterPlan> {
+    let jobs = sc.arrival.jobs_for(mode);
+    let cancel_probs: Vec<f64> = sc
+        .parts
+        .iter()
+        .flat_map(|p| std::iter::repeat(p).take(p.count))
+        .filter(|p| p.cancel_after_ms.is_some())
+        .map(|p| p.cancel_prob)
+        .collect();
+    let spacing = sc.arrival.spacing_us;
+    let mut root = Rng::new(sc.arrival.seed);
+    (0..sc.arrival.submitters)
+        .map(|_| {
+            let mut r = root.fork();
+            let mut gaps_us = Vec::with_capacity(jobs);
+            let mut cancels = Vec::with_capacity(jobs);
+            for _ in 0..jobs {
+                let gap = if spacing == 0 {
+                    0
+                } else if sc.arrival.uniform_jitter {
+                    r.u64_in(spacing / 2, spacing + spacing / 2)
+                } else {
+                    spacing
+                };
+                gaps_us.push(gap);
+                cancels.push(cancel_probs.iter().map(|&p| r.bool(p)).collect());
+            }
+            SubmitterPlan { gaps_us, cancels }
+        })
+        .collect()
+}
+
+/// One part instance with its allocation resolved.
+#[derive(Clone)]
+struct Instance {
+    model: String,
+    threads: usize,
+    size: usize,
+    auto: bool,
+    priority: Priority,
+    budget_ms: Option<f64>,
+    cancel_after_ms: Option<f64>,
+    measured: bool,
+}
+
+fn expand_instances(sc: &Scenario) -> Vec<Instance> {
+    sc.parts
+        .iter()
+        .flat_map(|p| {
+            std::iter::repeat(Instance {
+                model: sim_model(p.base_ms),
+                threads: p.threads,
+                size: p.size,
+                auto: p.threads == 0,
+                priority: p.priority,
+                budget_ms: p.budget_ms,
+                cancel_after_ms: p.cancel_after_ms,
+                measured: p.measured,
+            })
+            .take(p.count)
+        })
+        .collect()
+}
+
+/// Run one matrix cell: `scenario` under `engine`, at `mode`'s job
+/// counts. Any part failure (a task error, a cancelled part that
+/// completed anyway, a panicked submitter) poisons the whole cell —
+/// a half-measured cell must not become a number.
+pub fn run_cell(sc: &Scenario, eng: &EngineSpec, mode: Mode) -> Result<Measurement, String> {
+    let sched = Scheduler::start(
+        SchedConfig {
+            cores: sc.cores,
+            shards: eng.shards,
+            aging: Duration::from_millis(50),
+            backfill: true,
+            deadline_running: None,
+            ..SchedConfig::default()
+        },
+        Arc::new(SimRunner { workers: sc.workers }),
+    );
+    let mut instances = expand_instances(sc);
+    resolve_auto_threads(sc, eng, &sched, &mut instances)?;
+    let plans = plans(sc, mode);
+
+    let (walls, total_s) = match sc.arrival.mode {
+        Loop::Closed => run_closed(sc, eng, &sched, &instances, plans)?,
+        Loop::Open => run_open(sc, eng, &sched, &instances, plans)?,
+    };
+    let stats = sched.stats();
+    Ok(Measurement::from_walls(&sc.name, eng.name, mode, &walls, total_s, &stats))
+}
+
+/// Run every (scenario × listed engine) cell of the matrix.
+pub fn run_matrix(
+    scenarios: &[Scenario],
+    mode: Mode,
+) -> Result<Vec<Measurement>, String> {
+    let mut out = Vec::new();
+    for sc in scenarios {
+        for name in &sc.engines {
+            let eng = by_name(name)
+                .ok_or_else(|| format!("scenario `{}`: unknown engine `{name}`", sc.name))?;
+            out.push(run_cell(sc, eng, mode)?);
+        }
+    }
+    Ok(out)
+}
+
+/// Fill in `threads` for auto-sized instances. The static engines size
+/// them by declared size; the adaptive engine first runs the paper's
+/// §3.1 profiling phase (each auto part at one thread, enough samples
+/// to trust the distribution window) and sizes by measured cost.
+/// Profiling happens on the same scheduler but before the measured
+/// window opens, so it never pollutes the walls.
+fn resolve_auto_threads(
+    sc: &Scenario,
+    eng: &EngineSpec,
+    sched: &Arc<Scheduler>,
+    instances: &mut [Instance],
+) -> Result<(), String> {
+    let autos: Vec<(String, usize)> = instances
+        .iter()
+        .filter(|i| i.auto)
+        .map(|i| (i.model.clone(), i.size))
+        .collect();
+    if autos.is_empty() {
+        return Ok(());
+    }
+    let threads = if eng.adaptive {
+        let profiles = Arc::new(ProfileStore::new());
+        let policy = AdaptivePolicy::new(Arc::clone(&profiles), AdaptiveConfig::default());
+        for _ in 0..crate::engine::profile::MIN_DISTRIBUTION_SAMPLES {
+            let handles: Vec<_> = autos
+                .iter()
+                .map(|(m, _)| sched.submit(PartTask::new(m.clone(), Vec::new(), 1)))
+                .collect();
+            for (h, (m, _)) in handles.into_iter().zip(autos.iter()) {
+                let done = h
+                    .wait()
+                    .map_err(|e| format!("scenario `{}`: profiling failed: {e}", sc.name))?;
+                profiles.observe(m, done.exec);
+            }
+        }
+        let keyed: Vec<(&str, usize)> =
+            autos.iter().map(|(m, s)| (m.as_str(), *s)).collect();
+        allocate(
+            PartWeights::Measured(&policy.part_weights(&keyed)),
+            &sc.cores,
+            AllocPolicy::PrunDef,
+        )
+        .into_threads()
+    } else {
+        let sizes: Vec<usize> = autos.iter().map(|(_, s)| *s).collect();
+        allocate(PartWeights::Sizes(&sizes), &sc.cores, AllocPolicy::PrunDef).into_threads()
+    };
+    let mut it = threads.into_iter();
+    for inst in instances.iter_mut().filter(|i| i.auto) {
+        inst.threads = it.next().expect("one allocation per auto instance");
+    }
+    Ok(())
+}
+
+/// Closed loop: each submitter runs its jobs back to back (plus any
+/// configured pacing), waiting for each job's measured parts before
+/// the next submit. Walls are per-job: submit of the first part to
+/// completion of the last measured part.
+fn run_closed(
+    sc: &Scenario,
+    eng: &EngineSpec,
+    sched: &Arc<Scheduler>,
+    instances: &[Instance],
+    plans: Vec<SubmitterPlan>,
+) -> Result<(Vec<f64>, f64), String> {
+    let t0 = Instant::now();
+    let mut joins = Vec::with_capacity(plans.len());
+    for plan in plans {
+        let sched = Arc::clone(sched);
+        let instances = instances.to_vec();
+        let class_aware = eng.class_aware;
+        joins.push(std::thread::spawn(move || -> Result<Vec<f64>, String> {
+            let mut walls = Vec::with_capacity(plan.gaps_us.len());
+            for (gap, cancels) in plan.gaps_us.iter().zip(plan.cancels.iter()) {
+                if *gap > 0 {
+                    std::thread::sleep(Duration::from_micros(*gap));
+                }
+                walls.push(run_one_job(&sched, &instances, cancels, class_aware)?);
+            }
+            Ok(walls)
+        }));
+    }
+    let mut walls = Vec::new();
+    for j in joins {
+        let sub_walls = j
+            .join()
+            .map_err(|_| format!("scenario `{}`: submitter thread panicked", sc.name))??;
+        walls.extend(sub_walls);
+    }
+    Ok((walls, t0.elapsed().as_secs_f64()))
+}
+
+/// Submit one job's parts, run the cancel pass, and wait it out.
+fn run_one_job(
+    sched: &Scheduler,
+    instances: &[Instance],
+    cancels: &[bool],
+    class_aware: bool,
+) -> Result<f64, String> {
+    struct Pending {
+        h: Option<SubmitHandle>,
+        measured: bool,
+        cancelled: bool,
+    }
+    // Same-priority parts share one request identity per job, like the
+    // serving edge; cancellable parts get their own (a ctx token is
+    // shared, and cancelling one doomed part must not kill its
+    // siblings). The class-blind engine strips priorities entirely.
+    let mk_ctx = |p: Priority| {
+        if class_aware {
+            RequestCtx::new().with_priority(p)
+        } else {
+            RequestCtx::new()
+        }
+    };
+    let mut shared_ctx: [Option<RequestCtx>; 3] = [None, None, None];
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(instances.len());
+    let mut cancel_pass: Vec<(f64, usize)> = Vec::new();
+    let mut flip = 0usize;
+    for inst in instances {
+        let mut task = PartTask::new(inst.model.clone(), Vec::new(), inst.threads);
+        match inst.cancel_after_ms {
+            Some(after_ms) => {
+                // own identity; priority only if the engine honors it
+                if class_aware {
+                    task = task.with_priority(inst.priority);
+                }
+                if cancels[flip] {
+                    cancel_pass.push((after_ms, pending.len()));
+                }
+                flip += 1;
+            }
+            None => {
+                let slot = &mut shared_ctx[inst.priority as usize];
+                let ctx = slot.get_or_insert_with(|| mk_ctx(inst.priority));
+                task = task.with_ctx(ctx);
+            }
+        }
+        if let Some(ms) = inst.budget_ms {
+            task = task.with_budget(Budget::new(Duration::from_secs_f64(ms / 1e3)));
+        }
+        let h = sched.submit(task);
+        pending.push(Pending { h: Some(h), measured: inst.measured, cancelled: false });
+    }
+    // cancel pass, in offset order from the job submit instant
+    cancel_pass.sort_by(|a, b| a.0.total_cmp(&b.0));
+    for (after_ms, idx) in cancel_pass {
+        let target = t0 + Duration::from_secs_f64(after_ms / 1e3);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let p = &mut pending[idx];
+        p.h.as_ref().expect("handle still pending").cancel();
+        p.cancelled = true;
+    }
+    // the measured parts define the wall…
+    for p in pending.iter_mut().filter(|p| p.measured) {
+        p.h.take()
+            .expect("measured handle")
+            .wait()
+            .map_err(|e| format!("measured part failed: {e}"))?;
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    // …then the rest drains: cancelled parts must have died, the
+    // other unmeasured parts must complete.
+    for p in pending {
+        let Some(h) = p.h else { continue };
+        let res = h.wait();
+        if p.cancelled {
+            if res.is_ok() {
+                return Err(
+                    "cancelled part completed anyway — cancellation is broken".to_string()
+                );
+            }
+        } else {
+            res.map_err(|e| format!("drained part failed: {e}"))?;
+        }
+    }
+    Ok(wall_ms)
+}
+
+/// Open loop: producers flood jobs at their pacing without waiting on
+/// completions. Throughput is submit-phase ops/sec — the figure
+/// sharding lifts — while walls (submit → last measured part done)
+/// keep the latency regression net. Consecutive request ids spread the
+/// flood round-robin across shards.
+fn run_open(
+    sc: &Scenario,
+    eng: &EngineSpec,
+    sched: &Arc<Scheduler>,
+    instances: &[Instance],
+    plans: Vec<SubmitterPlan>,
+) -> Result<(Vec<f64>, f64), String> {
+    let producers = plans.len();
+    let jobs = plans.first().map(|p| p.gaps_us.len()).unwrap_or(0);
+    let barrier = Arc::new(Barrier::new(producers + 1));
+    let mut joins = Vec::with_capacity(producers);
+    for (p, plan) in plans.into_iter().enumerate() {
+        let sched = Arc::clone(sched);
+        let barrier = Arc::clone(&barrier);
+        let instances = instances.to_vec();
+        let class_aware = eng.class_aware;
+        joins.push(std::thread::spawn(
+            move || -> Result<(Instant, Vec<f64>), String> {
+                barrier.wait();
+                let mut in_flight = Vec::with_capacity(jobs);
+                for (i, gap) in plan.gaps_us.iter().enumerate() {
+                    if *gap > 0 {
+                        std::thread::sleep(Duration::from_micros(*gap));
+                    }
+                    let rid = (p * jobs + i) as u64;
+                    let t = Instant::now();
+                    let handles: Vec<(SubmitHandle, bool)> = instances
+                        .iter()
+                        .map(|inst| {
+                            let mut task =
+                                PartTask::new(inst.model.clone(), Vec::new(), inst.threads);
+                            if class_aware && inst.priority != Priority::Normal {
+                                task = task.with_priority(inst.priority);
+                            }
+                            if let Some(ms) = inst.budget_ms {
+                                task = task
+                                    .with_budget(Budget::new(Duration::from_secs_f64(ms / 1e3)));
+                            }
+                            (sched.submit(task.with_request_id(rid)), inst.measured)
+                        })
+                        .collect();
+                    in_flight.push((t, handles));
+                }
+                let submits_done = Instant::now();
+                let mut walls = Vec::with_capacity(jobs);
+                for (t, handles) in in_flight {
+                    let (measured, rest): (Vec<_>, Vec<_>) =
+                        handles.into_iter().partition(|(_, m)| *m);
+                    for (h, _) in measured {
+                        h.wait().map_err(|e| format!("measured part failed: {e}"))?;
+                    }
+                    walls.push(t.elapsed().as_secs_f64() * 1e3);
+                    for (h, _) in rest {
+                        h.wait().map_err(|e| format!("drained part failed: {e}"))?;
+                    }
+                }
+                Ok((submits_done, walls))
+            },
+        ));
+    }
+    let t0 = Instant::now();
+    barrier.wait();
+    let mut walls = Vec::new();
+    let mut submit_phase = Duration::ZERO;
+    for j in joins {
+        let (done, w) = j
+            .join()
+            .map_err(|_| format!("scenario `{}`: producer thread panicked", sc.name))??;
+        submit_phase = submit_phase.max(done.duration_since(t0));
+        walls.extend(w);
+    }
+    Ok((walls, submit_phase.as_secs_f64()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bar::scenario::Scenario;
+
+    fn scenario(extra_arrival: &str, extra_part: &str) -> Scenario {
+        Scenario::parse(&format!(
+            r#"
+[scenario]
+name = "t"
+engines = ["static"]
+
+[arrival]
+submitters = 2
+jobs = 8
+quick_jobs = 3
+seed = 7
+{extra_arrival}
+
+[[part]]
+name = "work"
+base_ms = 2.0
+threads = 1
+{extra_part}
+"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_mode_sized() {
+        let sc = scenario("spacing_us = 1000\njitter = \"uniform\"", "");
+        let a = plans(&sc, Mode::Quick);
+        let b = plans(&sc, Mode::Quick);
+        assert_eq!(a, b, "same seed must give the identical arrival schedule");
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].gaps_us.len(), 3);
+        assert_eq!(plans(&sc, Mode::Full)[0].gaps_us.len(), 8);
+        // jittered gaps stay within ±50% of the spacing
+        for plan in &a {
+            for g in &plan.gaps_us {
+                assert!((500..=1500).contains(g), "gap {g}us out of jitter range");
+            }
+        }
+        // submitters get distinct streams (forked, not shared)
+        assert_ne!(a[0].gaps_us, a[1].gaps_us);
+    }
+
+    #[test]
+    fn cancel_flips_follow_the_probability_edges() {
+        let sure = scenario(
+            "",
+            "measured = false\ncancel_after_ms = 1.0\n\n\
+             [[part]]\nname = \"w2\"\nbase_ms = 1.0\nthreads = 1",
+        );
+        for plan in plans(&sure, Mode::Full) {
+            assert!(plan.cancels.iter().all(|c| c == &vec![true]), "prob defaults to 1");
+        }
+        let never = scenario(
+            "",
+            "measured = false\ncancel_after_ms = 1.0\ncancel_prob = 0.0\n\n\
+             [[part]]\nname = \"w2\"\nbase_ms = 1.0\nthreads = 1",
+        );
+        for plan in plans(&never, Mode::Full) {
+            assert!(plan.cancels.iter().all(|c| c == &vec![false]));
+        }
+    }
+
+    #[test]
+    fn engine_lookup_and_matrix_shape() {
+        assert_eq!(by_name("static").unwrap().shards, 0);
+        assert_eq!(by_name("sharded2").unwrap().shards, 2);
+        assert!(by_name("adaptive").unwrap().adaptive);
+        assert!(!by_name("blind").unwrap().class_aware);
+        assert!(by_name("warp9").is_none());
+        assert!(ENGINES.len() >= 3, "acceptance: the matrix crosses >= 3 engines");
+    }
+
+    #[test]
+    fn run_cell_measures_a_tiny_closed_scenario() {
+        let sc = scenario("", "");
+        let m = run_cell(&sc, by_name("static").unwrap(), Mode::Quick).unwrap();
+        assert_eq!((m.scenario.as_str(), m.engine), ("t", "static".to_string()));
+        assert_eq!(m.jobs, 6, "2 submitters x 3 quick jobs");
+        assert!(m.throughput_jobs_s > 0.0);
+        assert!(m.p50_ms <= m.p95_ms && m.p95_ms <= m.p99_ms);
+        assert!(!m.estimated);
+    }
+}

@@ -1,0 +1,87 @@
+//! One matrix cell's measured outcome.
+
+use crate::engine::SchedStats;
+use crate::util::stats::percentiles;
+
+/// Measurement mode: `quick` is the per-PR CI smoke (small job
+/// counts), `full` the long-form run. The two are never comparable —
+/// job counts shift the percentiles and steady-state throughput — so
+/// the mode is part of the cell identity and records live in separate
+/// files.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Quick,
+    Full,
+}
+
+impl Mode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Mode::Quick => "quick",
+            Mode::Full => "full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Mode, String> {
+        match s {
+            "quick" => Ok(Mode::Quick),
+            "full" => Ok(Mode::Full),
+            other => Err(format!("unknown mode `{other}` — expected `quick` or `full`")),
+        }
+    }
+}
+
+/// One (scenario, engine, mode) cell: the latency/throughput outcome
+/// plus the scheduler counters that explain *why* (a p95 win from
+/// stealing looks different from one bought by class degradation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Measurement {
+    pub scenario: String,
+    pub engine: String,
+    pub mode: Mode,
+    /// measured job walls behind the percentiles (mode guard: a
+    /// quick-vs-full mismatch shows up here before the numbers lie)
+    pub jobs: usize,
+    pub throughput_jobs_s: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// queued tasks pulled over from a loaded peer shard
+    pub steals: u64,
+    /// armed-deadline timer expirations (the only clock-driven wakeups)
+    pub timer_wakeups: u64,
+    /// tasks launched on a class other than their preferred one
+    pub class_degraded: u64,
+    /// `true` for hand-estimated baseline rows that have not yet been
+    /// re-recorded on a toolchain box (see `rust/bench/FORMAT.md`)
+    pub estimated: bool,
+}
+
+impl Measurement {
+    /// Build a cell from measured job walls (ms), the wall-clock span
+    /// of the measured phase, and the scheduler's final counters.
+    pub fn from_walls(
+        scenario: &str,
+        engine: &str,
+        mode: Mode,
+        walls_ms: &[f64],
+        total_s: f64,
+        stats: &SchedStats,
+    ) -> Measurement {
+        let ps = percentiles(walls_ms, &[50.0, 95.0, 99.0]);
+        Measurement {
+            scenario: scenario.to_string(),
+            engine: engine.to_string(),
+            mode,
+            jobs: walls_ms.len(),
+            throughput_jobs_s: walls_ms.len() as f64 / total_s.max(1e-9),
+            p50_ms: ps[0],
+            p95_ms: ps[1],
+            p99_ms: ps[2],
+            steals: stats.steals,
+            timer_wakeups: stats.timer_wakeups,
+            class_degraded: stats.class_degraded,
+            estimated: false,
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! `pallas-bar` — the rebar-style scheduler barometer.
+//!
+//! The paper's whole argument is quantitative: divide-and-conquer
+//! placement wins only if p95/throughput say so. This subsystem makes
+//! that claim checkable the way rebar made it checkable for regex
+//! engines — many small *declaratively defined* benchmarks, a recorded
+//! measurement format checked into the repo, and ranking tooling
+//! across engines:
+//!
+//! - [`scenario`] — scenario definitions as data, not code:
+//!   `rust/bench/scenarios/*.toml` describes the workload mix (sim
+//!   model base-ms, part counts, declared sizes), the arrival process
+//!   (open/closed loop, seeded deterministic RNG), budget / priority /
+//!   cancel distributions, the `CoreMap`, and per-scenario acceptance
+//!   bars. Parsed by the shared `util::toml` subset parser with
+//!   pallas-lint-style validation: unknown keys, duplicate sections,
+//!   or out-of-range values are a config error (`bench-bar` exits 2).
+//! - [`engine`] — the engine matrix: named scheduler configurations
+//!   (static, adaptive, sharded×2, class-blind) that every scenario
+//!   runs against over the existing
+//!   [`SimRunner`](crate::bench::gate::SimRunner).
+//! - [`measure`] — one matrix cell's measured outcome: throughput,
+//!   p50/p95/p99, and the scheduler counters that explain *why*
+//!   (steals, timer wakeups, class degradations).
+//! - [`record`] — the recorded measurement format: CSV files under
+//!   `rust/bench/record/<machine>/<mode>.csv`, written by `bench-bar
+//!   record` and checked in (rebar FORMAT.md style; schema in
+//!   `rust/bench/FORMAT.md`).
+//! - [`rank`] — comparison tooling: `bench-bar diff` gates a fresh run
+//!   against the recorded baseline with per-scenario tolerances plus
+//!   the scenarios' self-relative bars; `bench-bar rank` emits a
+//!   geometric-mean speedup ranking of engines across the suite.
+//!
+//! The `bench-bar` binary (`rust/scripts/bench_bar.rs`) is the CLI
+//! over all of this; CI's `bench-smoke` job runs `bench-bar diff
+//! --quick` as a blocking gate.
+
+pub mod engine;
+pub mod measure;
+pub mod rank;
+pub mod record;
+pub mod scenario;
+
+pub use engine::{by_name, plans, run_cell, run_matrix, EngineSpec, SubmitterPlan, ENGINES};
+pub use measure::{Measurement, Mode};
+pub use rank::{
+    check_bars, diff, legacy_json, legacy_name, rank, render_rank, DiffOutcome, RankRow,
+    REFERENCE_ENGINE,
+};
+pub use record::{parse_csv, record_path, to_csv, CSV_HEADER};
+pub use scenario::{load_dir, Arrival, BarMetric, BarSpec, Loop, PartSpec, Scenario};

@@ -1,0 +1,464 @@
+//! Comparison tooling over recorded measurements: the regression gate
+//! (`bench-bar diff`), the scenarios' self-relative bars, the
+//! cross-engine ranking (`bench-bar rank`), and the legacy
+//! `BENCH_pr.json` bridge.
+
+use std::collections::BTreeMap;
+
+use crate::bench::gate::{results_to_json, ScenarioResult};
+use crate::util::json::Json;
+use crate::util::stats::geomean;
+
+use super::measure::Measurement;
+use super::scenario::{BarMetric, Scenario};
+
+/// The ranking's denominator: every engine's speedups are relative to
+/// this one, which therefore always ranks with geomean 1.0.
+pub const REFERENCE_ENGINE: &str = "static";
+
+fn cell<'a>(rows: &'a [Measurement], scenario: &str, engine: &str) -> Option<&'a Measurement> {
+    rows.iter().find(|m| m.scenario == scenario && m.engine == engine)
+}
+
+// ---------------------------------------------------------------- diff
+
+/// Outcome of a baseline diff: a human-readable line per compared cell
+/// plus the failures that should gate.
+#[derive(Debug, Default)]
+pub struct DiffOutcome {
+    pub lines: Vec<String>,
+    pub failures: Vec<String>,
+}
+
+impl DiffOutcome {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Gate `current` against the recorded `baseline`.
+///
+/// Regression math is the old JSON gate's, generalized: per scenario,
+/// the TOML's `tolerance_pct` bounds how far p50/p95/p99 may rise and
+/// throughput may fall relative to the recorded cell. Only regressions
+/// gate — improvements are reported but never fail (the baseline is
+/// refreshed by re-recording, see `bench/FORMAT.md`). Structural
+/// drift is always a failure: a cell missing from either side, or a
+/// job-count mismatch (the quick-vs-full mode guard). The scenarios'
+/// own self-relative bars are checked on `current` too, so the gate
+/// subsumes the old hetero/adaptive/sharded acceptance checks.
+pub fn diff(current: &[Measurement], baseline: &[Measurement], scenarios: &[Scenario]) -> DiffOutcome {
+    let mut out = DiffOutcome::default();
+    let tolerances: BTreeMap<&str, f64> =
+        scenarios.iter().map(|s| (s.name.as_str(), s.tolerance_pct)).collect();
+    for m in current {
+        let tol = match tolerances.get(m.scenario.as_str()) {
+            Some(t) => *t,
+            None => {
+                out.failures.push(format!(
+                    "{}/{}: no scenario definition supplies a tolerance",
+                    m.scenario, m.engine
+                ));
+                continue;
+            }
+        };
+        let Some(base) = cell(baseline, &m.scenario, &m.engine) else {
+            out.failures.push(format!(
+                "{}/{}: missing from the recorded baseline — run `bench-bar record`",
+                m.scenario, m.engine
+            ));
+            continue;
+        };
+        if base.jobs != m.jobs {
+            out.failures.push(format!(
+                "{}/{}: job count {} vs recorded {} — mode/scenario drift, re-record the baseline",
+                m.scenario, m.engine, m.jobs, base.jobs
+            ));
+            continue;
+        }
+        let mut cell_fail = false;
+        for (what, cur, rec) in [
+            ("p50_ms", m.p50_ms, base.p50_ms),
+            ("p95_ms", m.p95_ms, base.p95_ms),
+            ("p99_ms", m.p99_ms, base.p99_ms),
+        ] {
+            if cur > rec * (1.0 + tol / 100.0) {
+                cell_fail = true;
+                out.failures.push(format!(
+                    "{}/{}: {what} {cur:.2} exceeds recorded {rec:.2} by more than {tol}%",
+                    m.scenario, m.engine
+                ));
+            }
+        }
+        if m.throughput_jobs_s < base.throughput_jobs_s * (1.0 - tol / 100.0) {
+            cell_fail = true;
+            out.failures.push(format!(
+                "{}/{}: throughput {:.1} jobs/s fell more than {tol}% below recorded {:.1}",
+                m.scenario, m.engine, m.throughput_jobs_s, base.throughput_jobs_s
+            ));
+        }
+        out.lines.push(format!(
+            "{} {}/{}: p95 {:.2}ms (recorded {:.2}{}), throughput {:.1} jobs/s (recorded {:.1})",
+            if cell_fail { "FAIL" } else { "  ok" },
+            m.scenario,
+            m.engine,
+            m.p95_ms,
+            base.p95_ms,
+            if base.estimated { ", estimated" } else { "" },
+            m.throughput_jobs_s,
+            base.throughput_jobs_s,
+        ));
+    }
+    // baseline cells the run never produced are drift too
+    for base in baseline {
+        if cell(current, &base.scenario, &base.engine).is_none() {
+            out.failures.push(format!(
+                "{}/{}: recorded in the baseline but absent from this run",
+                base.scenario, base.engine
+            ));
+        }
+    }
+    out.failures.extend(check_bars(scenarios, current));
+    out
+}
+
+/// Evaluate every scenario's self-relative bars against a set of
+/// measurements; returns the failures. These are the suite's absolute
+/// acceptance claims (adaptive beats static on the misleading mix,
+/// sharding out-submits a single dispatcher, class-aware placement
+/// beats blind on the hetero machine) — they compare cells *within*
+/// one run, so they hold or fail independent of any baseline.
+pub fn check_bars(scenarios: &[Scenario], rows: &[Measurement]) -> Vec<String> {
+    let mut failures = Vec::new();
+    for sc in scenarios {
+        for bar in &sc.bars {
+            let (Some(better), Some(than)) =
+                (cell(rows, &sc.name, &bar.better), cell(rows, &sc.name, &bar.than))
+            else {
+                failures.push(format!(
+                    "{}: bar needs both `{}` and `{}` cells in this run",
+                    sc.name, bar.better, bar.than
+                ));
+                continue;
+            };
+            let ok = match bar.metric {
+                BarMetric::P95Ms => better.p95_ms <= than.p95_ms * (1.0 - bar.margin_pct / 100.0),
+                BarMetric::ThroughputJobsS => {
+                    better.throughput_jobs_s > than.throughput_jobs_s * (1.0 + bar.margin_pct / 100.0)
+                }
+            };
+            if !ok {
+                let (bv, tv) = match bar.metric {
+                    BarMetric::P95Ms => (better.p95_ms, than.p95_ms),
+                    BarMetric::ThroughputJobsS => (better.throughput_jobs_s, than.throughput_jobs_s),
+                };
+                failures.push(format!(
+                    "{}: bar failed — {} of `{}` ({bv:.2}) is not {}% better than `{}` ({tv:.2})",
+                    sc.name,
+                    bar.metric.as_str(),
+                    bar.better,
+                    bar.margin_pct,
+                    bar.than,
+                ));
+            }
+        }
+    }
+    failures
+}
+
+// ---------------------------------------------------------------- rank
+
+/// One engine's row in the cross-suite ranking.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankRow {
+    pub engine: String,
+    /// geomean over scenarios of `static_p95 / engine_p95` — above 1.0
+    /// means the engine's tail is faster than the reference overall
+    pub p95_speedup: f64,
+    /// geomean over scenarios of `engine_throughput / static_throughput`
+    pub throughput_ratio: f64,
+    /// scenarios contributing (cells present for both this engine and
+    /// the reference)
+    pub scenarios: usize,
+}
+
+/// Rank engines across the suite by geometric-mean p95 speedup over
+/// [`REFERENCE_ENGINE`] (rebar's summary statistic: a geomean of
+/// ratios, so no one scenario's absolute scale dominates). Input order
+/// never affects the output: cells are keyed and sorted before
+/// aggregation, and ties break by engine name.
+pub fn rank(rows: &[Measurement]) -> Vec<RankRow> {
+    let mut engines: Vec<&str> = rows.iter().map(|m| m.engine.as_str()).collect();
+    engines.sort_unstable();
+    engines.dedup();
+    let mut scenarios: Vec<&str> = rows.iter().map(|m| m.scenario.as_str()).collect();
+    scenarios.sort_unstable();
+    scenarios.dedup();
+    let mut out: Vec<RankRow> = engines
+        .into_iter()
+        .map(|eng| {
+            let mut speedups = Vec::new();
+            let mut ratios = Vec::new();
+            for sc in &scenarios {
+                let (Some(mine), Some(reference)) =
+                    (cell(rows, sc, eng), cell(rows, sc, REFERENCE_ENGINE))
+                else {
+                    continue;
+                };
+                if mine.p95_ms > 0.0 && reference.p95_ms > 0.0 {
+                    speedups.push(reference.p95_ms / mine.p95_ms);
+                }
+                if mine.throughput_jobs_s > 0.0 && reference.throughput_jobs_s > 0.0 {
+                    ratios.push(mine.throughput_jobs_s / reference.throughput_jobs_s);
+                }
+            }
+            RankRow {
+                engine: eng.to_string(),
+                p95_speedup: geomean(&speedups),
+                throughput_ratio: geomean(&ratios),
+                scenarios: speedups.len(),
+            }
+        })
+        .collect();
+    out.sort_by(|a, b| {
+        b.p95_speedup
+            .total_cmp(&a.p95_speedup)
+            .then_with(|| a.engine.cmp(&b.engine))
+    });
+    out
+}
+
+/// Render a ranking as an aligned text table.
+pub fn render_rank(rows: &[RankRow]) -> String {
+    let mut out = String::from("engine      p95 speedup   throughput    scenarios\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{:<10}  {:>10.3}x  {:>10.3}x  {:>10}\n",
+            r.engine, r.p95_speedup, r.throughput_ratio, r.scenarios
+        ));
+    }
+    out
+}
+
+// -------------------------------------------------------- legacy JSON
+
+/// Map a matrix cell back to the scenario name the retired
+/// `BENCH_baseline.json` gate used, for consumers still reading
+/// `BENCH_pr.json` (kept for one release; see `bench/FORMAT.md`).
+pub fn legacy_name(scenario: &str, engine: &str) -> Option<&'static str> {
+    Some(match (scenario, engine) {
+        ("sched_smoke", "static") => "sched_smoke",
+        ("longshort", "static") => "longshort_static",
+        ("longshort", "adaptive") => "longshort_adaptive",
+        ("cancel_storm", "static") => "cancel_storm",
+        ("priority_inversion", "static") => "priority_inversion",
+        ("hetero_inversion", "static") => "hetero_inversion",
+        ("hetero_inversion", "blind") => "hetero_inversion_blind",
+        ("submit_storm", "sharded2") => "submit_storm",
+        ("submit_storm", "static") => "submit_storm_single",
+        _ => return None,
+    })
+}
+
+/// Project measurements onto the legacy `BENCH_pr.json` shape: only
+/// the cells with a legacy name, in legacy-name order.
+pub fn legacy_json(rows: &[Measurement]) -> Json {
+    let mut results: Vec<ScenarioResult> = rows
+        .iter()
+        .filter_map(|m| {
+            legacy_name(&m.scenario, &m.engine).map(|name| ScenarioResult {
+                name: name.to_string(),
+                jobs: m.jobs,
+                throughput_jobs_s: m.throughput_jobs_s,
+                p50_ms: m.p50_ms,
+                p95_ms: m.p95_ms,
+            })
+        })
+        .collect();
+    results.sort_by(|a, b| a.name.cmp(&b.name));
+    results_to_json(&results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bar::measure::{Measurement, Mode};
+
+    fn cell_with(scenario: &str, engine: &str, jobs: usize, thr: f64, p95: f64) -> Measurement {
+        Measurement {
+            scenario: scenario.to_string(),
+            engine: engine.to_string(),
+            mode: Mode::Quick,
+            jobs,
+            throughput_jobs_s: thr,
+            p50_ms: p95 * 0.8,
+            p95_ms: p95,
+            p99_ms: p95 * 1.1,
+            steals: 0,
+            timer_wakeups: 0,
+            class_degraded: 0,
+            estimated: false,
+        }
+    }
+
+    fn one_scenario(toml_tail: &str) -> Scenario {
+        Scenario::parse(&format!(
+            r#"
+[scenario]
+name = "s1"
+engines = ["static", "adaptive"]
+tolerance_pct = 20.0
+
+[arrival]
+submitters = 1
+jobs = 10
+quick_jobs = 10
+
+[[part]]
+name = "w"
+base_ms = 5.0
+threads = 1
+{toml_tail}
+"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn diff_passes_within_tolerance_and_fails_beyond() {
+        let sc = one_scenario("");
+        let base = vec![cell_with("s1", "static", 10, 100.0, 10.0)];
+        let ok = diff(&[cell_with("s1", "static", 10, 90.0, 11.5)], &base, &[sc.clone()]);
+        assert!(ok.passed(), "{:?}", ok.failures);
+        assert_eq!(ok.lines.len(), 1);
+
+        let slow = diff(&[cell_with("s1", "static", 10, 100.0, 12.5)], &base, &[sc.clone()]);
+        assert!(slow.failures.iter().any(|f| f.contains("p95_ms")), "{:?}", slow.failures);
+
+        let starved = diff(&[cell_with("s1", "static", 10, 70.0, 10.0)], &base, &[sc]);
+        assert!(
+            starved.failures.iter().any(|f| f.contains("throughput")),
+            "{:?}",
+            starved.failures
+        );
+    }
+
+    #[test]
+    fn diff_catches_structural_drift() {
+        let sc = one_scenario("");
+        let base = vec![cell_with("s1", "static", 10, 100.0, 10.0)];
+        let missing = diff(&[], &base, &[sc.clone()]);
+        assert!(missing.failures.iter().any(|f| f.contains("absent from this run")));
+
+        let unrecorded = diff(
+            &[cell_with("s1", "adaptive", 10, 100.0, 10.0)],
+            &base,
+            &[sc.clone()],
+        );
+        assert!(unrecorded
+            .failures
+            .iter()
+            .any(|f| f.contains("missing from the recorded baseline")));
+
+        let jobs = diff(&[cell_with("s1", "static", 7, 100.0, 10.0)], &base, &[sc.clone()]);
+        assert!(jobs.failures.iter().any(|f| f.contains("job count 7 vs recorded 10")));
+
+        let orphan = diff(
+            &[cell_with("ghost", "static", 10, 100.0, 10.0)],
+            &[cell_with("ghost", "static", 10, 100.0, 10.0)],
+            &[sc],
+        );
+        assert!(orphan.failures.iter().any(|f| f.contains("no scenario definition")));
+    }
+
+    #[test]
+    fn bars_gate_on_relative_margin() {
+        let sc = one_scenario(
+            "\n[[bar]]\nmetric = \"p95_ms\"\nbetter = \"adaptive\"\nthan = \"static\"\nmargin_pct = 10.0",
+        );
+        // 8.8 <= 0.9 * 10.0 → holds
+        let pass = check_bars(
+            &[sc.clone()],
+            &[
+                cell_with("s1", "static", 10, 100.0, 10.0),
+                cell_with("s1", "adaptive", 10, 100.0, 8.8),
+            ],
+        );
+        assert!(pass.is_empty(), "{pass:?}");
+        // 9.5 > 0.9 * 10.0 → fails
+        let fail = check_bars(
+            &[sc.clone()],
+            &[
+                cell_with("s1", "static", 10, 100.0, 10.0),
+                cell_with("s1", "adaptive", 10, 100.0, 9.5),
+            ],
+        );
+        assert!(fail.iter().any(|f| f.contains("bar failed")), "{fail:?}");
+        // a bar with a missing cell is a failure, not a skip
+        let missing = check_bars(&[sc], &[cell_with("s1", "static", 10, 100.0, 10.0)]);
+        assert!(missing.iter().any(|f| f.contains("needs both")), "{missing:?}");
+    }
+
+    #[test]
+    fn rank_is_order_independent_and_reference_anchored() {
+        let mut rows = vec![
+            cell_with("s1", "static", 10, 100.0, 10.0),
+            cell_with("s1", "adaptive", 10, 110.0, 5.0),
+            cell_with("s2", "static", 10, 50.0, 40.0),
+            cell_with("s2", "adaptive", 10, 50.0, 20.0),
+            cell_with("s2", "blind", 10, 25.0, 80.0),
+        ];
+        let a = rank(&rows);
+        rows.reverse();
+        rows.swap(0, 2);
+        assert_eq!(rank(&rows), a, "rank must not depend on input order");
+
+        assert_eq!(a[0].engine, "adaptive");
+        assert!((a[0].p95_speedup - 2.0).abs() < 1e-9, "geomean of 2x and 2x");
+        let reference = a.iter().find(|r| r.engine == "static").unwrap();
+        assert!((reference.p95_speedup - 1.0).abs() < 1e-9);
+        assert!((reference.throughput_ratio - 1.0).abs() < 1e-9);
+        let blind = a.iter().find(|r| r.engine == "blind").unwrap();
+        assert_eq!(blind.scenarios, 1, "blind only ran s2");
+        assert!((blind.p95_speedup - 0.5).abs() < 1e-9);
+        assert_eq!(a.last().unwrap().engine, "blind");
+
+        let table = render_rank(&a);
+        assert!(table.contains("engine"), "{table}");
+        assert!(table.contains("adaptive"), "{table}");
+    }
+
+    #[test]
+    fn legacy_projection_covers_the_nine_retired_scenarios() {
+        let pairs = [
+            ("sched_smoke", "static"),
+            ("longshort", "static"),
+            ("longshort", "adaptive"),
+            ("cancel_storm", "static"),
+            ("priority_inversion", "static"),
+            ("hetero_inversion", "static"),
+            ("hetero_inversion", "blind"),
+            ("submit_storm", "sharded2"),
+            ("submit_storm", "static"),
+        ];
+        let names: Vec<&str> = pairs
+            .iter()
+            .map(|(s, e)| legacy_name(s, e).expect("legacy mapping"))
+            .collect();
+        let mut unique = names.clone();
+        unique.sort_unstable();
+        unique.dedup();
+        assert_eq!(unique.len(), 9, "nine distinct legacy scenario names");
+        assert_eq!(legacy_name("sched_smoke", "blind"), None);
+
+        let rows: Vec<Measurement> = pairs
+            .iter()
+            .map(|(s, e)| cell_with(s, e, 10, 100.0, 10.0))
+            .collect();
+        let json = legacy_json(&rows);
+        let text = json.to_string();
+        for name in names {
+            assert!(text.contains(name), "legacy json missing {name}: {text}");
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! The recorded measurement format.
+//!
+//! rebar's core discipline: measurements are *recorded* — written to a
+//! small flat file, checked into the repo, and diffed against — rather
+//! than recomputed ad hoc. Ours is one CSV per (machine, mode) under
+//! `rust/bench/record/<machine>/<mode>.csv`; the schema is documented
+//! in `rust/bench/FORMAT.md` and enforced here, in both directions.
+//!
+//! Floats are serialized with Rust's shortest-round-trip `Display`, so
+//! `parse_csv(to_csv(v)) == v` exactly — the round-trip property the
+//! tests pin. No quoting or escaping: every field the schema admits is
+//! comma-free by construction (scenario/engine names are validated
+//! identifiers).
+
+use std::path::{Path, PathBuf};
+
+use super::measure::{Measurement, Mode};
+
+/// Column order is the schema; a baseline with any other header is
+/// rejected rather than guessed at.
+pub const CSV_HEADER: &str = "scenario,engine,mode,jobs,throughput_jobs_s,p50_ms,p95_ms,p99_ms,steals,timer_wakeups,class_degraded,estimated";
+
+/// Path of one record file: `<dir>/<machine>/<mode>.csv`.
+pub fn record_path(dir: &Path, machine: &str, mode: Mode) -> PathBuf {
+    dir.join(machine).join(format!("{}.csv", mode.as_str()))
+}
+
+/// Serialize measurements in the given order (callers sort for a
+/// canonical checked-in form; `bench-bar record` sorts by scenario
+/// then engine).
+pub fn to_csv(rows: &[Measurement]) -> String {
+    let mut out = String::with_capacity(64 * (rows.len() + 1));
+    out.push_str(CSV_HEADER);
+    out.push('\n');
+    for m in rows {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            m.scenario,
+            m.engine,
+            m.mode.as_str(),
+            m.jobs,
+            m.throughput_jobs_s,
+            m.p50_ms,
+            m.p95_ms,
+            m.p99_ms,
+            m.steals,
+            m.timer_wakeups,
+            m.class_degraded,
+            m.estimated,
+        ));
+    }
+    out
+}
+
+fn field<'a>(parts: &[&'a str], i: usize) -> &'a str {
+    parts[i].trim()
+}
+
+fn num<T: std::str::FromStr>(parts: &[&str], i: usize, line: usize, what: &str) -> Result<T, String> {
+    field(parts, i)
+        .parse()
+        .map_err(|_| format!("line {line}: bad {what} `{}`", field(parts, i)))
+}
+
+/// Parse a record file back into measurements, validating the header,
+/// the field count, and every field's type. Blank lines are ignored;
+/// anything else malformed is an error, tagged with its line number.
+pub fn parse_csv(text: &str) -> Result<Vec<Measurement>, String> {
+    let mut lines = text
+        .lines()
+        .enumerate()
+        .map(|(i, l)| (i + 1, l.trim()))
+        .filter(|(_, l)| !l.is_empty());
+    match lines.next() {
+        Some((_, h)) if h == CSV_HEADER => {}
+        Some((n, h)) => {
+            return Err(format!(
+                "line {n}: bad header `{h}` — expected `{CSV_HEADER}` (regenerate with `bench-bar record`)"
+            ))
+        }
+        None => return Err("empty record file".to_string()),
+    }
+    let mut rows = Vec::new();
+    for (n, line) in lines {
+        let parts: Vec<&str> = line.split(',').collect();
+        if parts.len() != 12 {
+            return Err(format!(
+                "line {n}: expected 12 comma-separated fields, got {}",
+                parts.len()
+            ));
+        }
+        let scenario = field(&parts, 0);
+        let engine = field(&parts, 1);
+        for (what, v) in [("scenario", scenario), ("engine", engine)] {
+            if v.is_empty() || !v.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_') {
+                return Err(format!("line {n}: bad {what} name `{v}`"));
+            }
+        }
+        let mode = Mode::parse(field(&parts, 2)).map_err(|e| format!("line {n}: {e}"))?;
+        let throughput_jobs_s: f64 = num(&parts, 4, n, "throughput_jobs_s")?;
+        let p50_ms: f64 = num(&parts, 5, n, "p50_ms")?;
+        let p95_ms: f64 = num(&parts, 6, n, "p95_ms")?;
+        let p99_ms: f64 = num(&parts, 7, n, "p99_ms")?;
+        for (what, v) in [
+            ("throughput_jobs_s", throughput_jobs_s),
+            ("p50_ms", p50_ms),
+            ("p95_ms", p95_ms),
+            ("p99_ms", p99_ms),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("line {n}: {what} must be a finite non-negative number"));
+            }
+        }
+        let estimated = match field(&parts, 11) {
+            "true" => true,
+            "false" => false,
+            other => return Err(format!("line {n}: bad estimated flag `{other}` — expected `true` or `false`")),
+        };
+        rows.push(Measurement {
+            scenario: scenario.to_string(),
+            engine: engine.to_string(),
+            mode,
+            jobs: num(&parts, 3, n, "jobs")?,
+            throughput_jobs_s,
+            p50_ms,
+            p95_ms,
+            p99_ms,
+            steals: num(&parts, 8, n, "steals")?,
+            timer_wakeups: num(&parts, 9, n, "timer_wakeups")?,
+            class_degraded: num(&parts, 10, n, "class_degraded")?,
+            estimated,
+        });
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(scenario: &str, engine: &str, p95: f64) -> Measurement {
+        Measurement {
+            scenario: scenario.to_string(),
+            engine: engine.to_string(),
+            mode: Mode::Quick,
+            jobs: 20,
+            throughput_jobs_s: 147.0612,
+            p50_ms: 12.25,
+            p95_ms: p95,
+            p99_ms: p95 + 1.5,
+            steals: 3,
+            timer_wakeups: 7,
+            class_degraded: 0,
+            estimated: false,
+        }
+    }
+
+    #[test]
+    fn csv_round_trips_exactly() {
+        // 0.30000000000000004 on purpose: Display's shortest
+        // round-trip form must survive parse() bit-for-bit
+        let rows = vec![cell("sched_smoke", "static", 0.1 + 0.2), cell("longshort", "adaptive", 8.8)];
+        let text = to_csv(&rows);
+        assert!(text.starts_with(CSV_HEADER));
+        assert_eq!(parse_csv(&text).unwrap(), rows);
+    }
+
+    #[test]
+    fn rejects_a_foreign_header() {
+        let err = parse_csv("name,p95\nx,1\n").unwrap_err();
+        assert!(err.contains("bad header"), "{err}");
+        assert!(parse_csv("").unwrap_err().contains("empty record file"));
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        let row = |r: &str| parse_csv(&format!("{CSV_HEADER}\n{r}\n")).unwrap_err();
+        let short = row("sched_smoke,static,quick,20,1,2,3");
+        assert!(short.contains("expected 12"), "{short}");
+        let mode = row("sched_smoke,static,warp,20,1,2,3,4,0,0,0,false");
+        assert!(mode.contains("unknown mode"), "{mode}");
+        let thr = row("sched_smoke,static,quick,20,fast,2,3,4,0,0,0,false");
+        assert!(thr.contains("bad throughput_jobs_s"), "{thr}");
+        let neg = row("sched_smoke,static,quick,20,-1,2,3,4,0,0,0,false");
+        assert!(neg.contains("finite non-negative"), "{neg}");
+        let flag = row("sched_smoke,static,quick,20,1,2,3,4,0,0,0,maybe");
+        assert!(flag.contains("bad estimated flag"), "{flag}");
+        let name = row("Sched Smoke,static,quick,20,1,2,3,4,0,0,0,false");
+        assert!(name.contains("bad scenario name"), "{name}");
+        assert!(row("sched_smoke,static,quick,20,1,2,3,4,0,0,0,false,extra").contains("got 13"));
+    }
+
+    #[test]
+    fn record_path_layout() {
+        let p = record_path(Path::new("bench/record"), "ci16", Mode::Quick);
+        assert_eq!(p, Path::new("bench/record/ci16/quick.csv"));
+    }
+}

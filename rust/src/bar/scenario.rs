@@ -1,0 +1,794 @@
+//! Scenario definitions as data: the `rust/bench/scenarios/*.toml`
+//! loader and its validation.
+//!
+//! A scenario file describes a complete benchmark with zero
+//! per-scenario Rust:
+//!
+//! ```toml
+//! [scenario]
+//! name = "longshort"               # must match the file stem
+//! summary = "misleading sizes"
+//! engines = ["static", "adaptive"] # matrix columns (default: all)
+//! tolerance_pct = 35               # diff-gate drift budget
+//!
+//! [machine]                        # optional; default 16 homogeneous
+//! cores = "fast=4,slow=12@0.5"     # CoreMap spec, or an integer
+//! workers = 4
+//!
+//! [arrival]
+//! mode = "closed"                  # or "open"
+//! submitters = 1
+//! jobs = 60                        # per submitter, full mode
+//! quick_jobs = 20                  # per submitter, --quick mode
+//! seed = 7                         # deterministic arrival/cancel RNG
+//! spacing_us = 0                   # inter-job pacing (open loop)
+//! jitter = "none"                  # or "uniform" (±50% of spacing)
+//!
+//! [[part]]                         # one entry per job part
+//! name = "heavy"
+//! count = 1
+//! base_ms = 40.0                   # SimRunner single-thread cost
+//! size = 16                        # declared input size (static split)
+//! threads = 0                      # 0 = auto (size/profile-driven)
+//! priority = "normal"              # "low" | "normal" | "high"
+//! # budget_ms = 250                # optional request budget
+//! # cancel_after_ms = 2.0          # optional client cancel offset
+//! # cancel_prob = 0.5              # cancel probability (default 1.0)
+//! # measured = false               # exclude from walls (default true)
+//!
+//! [[bar]]                          # optional self-relative bars
+//! metric = "p95_ms"                # or "throughput_jobs_s"
+//! better = "adaptive"
+//! than = "static"
+//! margin_pct = 10                  # better must win by this much
+//! ```
+//!
+//! Validation is pallas-lint-style: unknown keys, unknown or duplicate
+//! sections, and out-of-range values are all hard errors — `bench-bar`
+//! exits 2 rather than measuring against a half-read file.
+
+use std::path::Path;
+
+use crate::bench::gate::SIM_CORES;
+use crate::engine::{CoreMap, Priority};
+use crate::util::toml::{Doc, Item, Section};
+
+use super::engine::ENGINES;
+use super::measure::Mode;
+
+/// Arrival-process shape: `closed` submitters wait for each job before
+/// the next; `open` producers flood jobs at their pacing regardless of
+/// completions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Loop {
+    Closed,
+    Open,
+}
+
+/// The arrival process: who submits, how often, and how many times.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arrival {
+    pub mode: Loop,
+    pub submitters: usize,
+    /// jobs per submitter in full mode
+    pub jobs: usize,
+    /// jobs per submitter in `--quick` mode
+    pub quick_jobs: usize,
+    /// seed for the deterministic arrival/cancel RNG
+    pub seed: u64,
+    /// inter-job pacing in microseconds (0 = as fast as submit returns)
+    pub spacing_us: u64,
+    /// `true`: each gap is drawn uniformly from ±50% of `spacing_us`
+    pub uniform_jitter: bool,
+}
+
+impl Arrival {
+    pub fn jobs_for(&self, mode: Mode) -> usize {
+        match mode {
+            Mode::Quick => self.quick_jobs,
+            Mode::Full => self.jobs,
+        }
+    }
+}
+
+/// One part of every job: `count` instances of a simulated model, with
+/// the declared size the static split sees and the knobs (priority,
+/// budget, cancellation) the distributions exercise.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartSpec {
+    pub name: String,
+    pub count: usize,
+    pub base_ms: f64,
+    pub size: usize,
+    /// explicit thread count; 0 = auto (allocated from sizes or
+    /// profiled weights, depending on the engine)
+    pub threads: usize,
+    pub priority: Priority,
+    pub budget_ms: Option<f64>,
+    /// client cancels this part `cancel_after_ms` after submit…
+    pub cancel_after_ms: Option<f64>,
+    /// …with this probability (per instance, seeded RNG)
+    pub cancel_prob: f64,
+    /// measured parts define the job wall; unmeasured ones are drained
+    pub measured: bool,
+}
+
+/// Which metric a self-relative bar compares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BarMetric {
+    /// lower is better
+    P95Ms,
+    /// higher is better
+    ThroughputJobsS,
+}
+
+impl BarMetric {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BarMetric::P95Ms => "p95_ms",
+            BarMetric::ThroughputJobsS => "throughput_jobs_s",
+        }
+    }
+}
+
+/// A self-relative acceptance bar: engine `better` must beat engine
+/// `than` on `metric` by at least `margin_pct` on this scenario. These
+/// subsume the old gate's three hard-coded bars (adaptive ≥10% p95
+/// over static, sharded > single-shard throughput, class-aware ≥10%
+/// p95 over class-blind).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BarSpec {
+    pub metric: BarMetric,
+    pub better: String,
+    pub than: String,
+    pub margin_pct: f64,
+}
+
+/// One fully validated scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub summary: String,
+    /// engine-matrix columns this scenario runs against
+    pub engines: Vec<String>,
+    /// diff-gate drift budget, percent
+    pub tolerance_pct: f64,
+    pub cores: CoreMap,
+    /// the original `cores` spec text, for display
+    pub cores_spec: String,
+    pub workers: usize,
+    pub arrival: Arrival,
+    pub parts: Vec<PartSpec>,
+    pub bars: Vec<BarSpec>,
+}
+
+impl Scenario {
+    /// Parse and validate one scenario document.
+    pub fn parse(text: &str) -> Result<Scenario, String> {
+        let doc = Doc::parse(text)?;
+        if let Some(item) = doc.top.first() {
+            return Err(format!("line {}: key outside a section", item.line));
+        }
+        for sec in &doc.sections {
+            match (sec.name.as_str(), sec.array) {
+                ("scenario", false) | ("machine", false) | ("arrival", false) => {}
+                ("part", true) | ("bar", true) => {}
+                ("part", false) | ("bar", false) => {
+                    return Err(format!(
+                        "line {}: `[{}]` must be an array-of-tables — use `[[{}]]`",
+                        sec.line, sec.name, sec.name
+                    ));
+                }
+                (other, _) => {
+                    return Err(format!("line {}: unknown section `{other}`", sec.line));
+                }
+            }
+        }
+
+        let sc = doc
+            .section("scenario")
+            .ok_or_else(|| "missing [scenario] section".to_string())?;
+        let mut name = None;
+        let mut summary = String::new();
+        let mut engines: Option<Vec<String>> = None;
+        let mut tolerance_pct = 50.0;
+        for item in no_dup_keys(sc)? {
+            match item.key.as_str() {
+                "name" => name = Some(item.str()?.to_string()),
+                "summary" => summary = item.str()?.to_string(),
+                "engines" => engines = Some(item.str_list()?),
+                "tolerance_pct" => tolerance_pct = pos_f64(item)?,
+                other => return Err(format!("line {}: unknown key `{other}`", item.line)),
+            }
+        }
+        let name = name.ok_or_else(|| format!("line {}: [scenario] missing `name`", sc.line))?;
+        if name.is_empty()
+            || !name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        {
+            return Err(format!(
+                "[scenario] name `{name}` must be non-empty [a-z0-9_] (it names files and CSV rows)"
+            ));
+        }
+        let engines = match engines {
+            Some(list) => list,
+            None => ENGINES.iter().map(|e| e.name.to_string()).collect(),
+        };
+        if engines.is_empty() {
+            return Err(format!("scenario `{name}`: `engines` must not be empty"));
+        }
+        for e in &engines {
+            if !ENGINES.iter().any(|spec| spec.name == e) {
+                let known: Vec<&str> = ENGINES.iter().map(|s| s.name).collect();
+                return Err(format!(
+                    "scenario `{name}`: unknown engine `{e}` (known engines: {})",
+                    known.join(", ")
+                ));
+            }
+            if engines.iter().filter(|x| *x == e).count() > 1 {
+                return Err(format!("scenario `{name}`: duplicate engine `{e}`"));
+            }
+        }
+
+        let (cores, cores_spec, workers) = match doc.section("machine") {
+            None => (CoreMap::homogeneous(SIM_CORES), SIM_CORES.to_string(), 4),
+            Some(sec) => {
+                let mut cores = CoreMap::homogeneous(SIM_CORES);
+                let mut spec = SIM_CORES.to_string();
+                let mut workers = 4usize;
+                for item in no_dup_keys(sec)? {
+                    match item.key.as_str() {
+                        "cores" => {
+                            (cores, spec) = match &item.value {
+                                crate::util::toml::Value::Int(n) if *n >= 1 => {
+                                    (CoreMap::homogeneous(*n as usize), n.to_string())
+                                }
+                                crate::util::toml::Value::Str(s) => (
+                                    CoreMap::parse(s).map_err(|e| {
+                                        format!("line {}: bad `cores` spec: {e}", item.line)
+                                    })?,
+                                    s.clone(),
+                                ),
+                                _ => {
+                                    return Err(format!(
+                                        "line {}: `cores` expects a positive integer or a \
+                                         CoreMap spec string",
+                                        item.line
+                                    ))
+                                }
+                            };
+                        }
+                        "workers" => workers = pos_usize(item)?,
+                        other => {
+                            return Err(format!("line {}: unknown key `{other}`", item.line))
+                        }
+                    }
+                }
+                (cores, spec, workers)
+            }
+        };
+
+        let ar = doc
+            .section("arrival")
+            .ok_or_else(|| format!("scenario `{name}`: missing [arrival] section"))?;
+        let mut mode = Loop::Closed;
+        let mut submitters = 1usize;
+        let (mut jobs, mut quick_jobs) = (None, None);
+        let mut seed = 0xD1C0DE_u64;
+        let mut spacing_us = 0u64;
+        let mut uniform_jitter = false;
+        for item in no_dup_keys(ar)? {
+            match item.key.as_str() {
+                "mode" => {
+                    mode = match item.str()? {
+                        "closed" => Loop::Closed,
+                        "open" => Loop::Open,
+                        other => {
+                            return Err(format!(
+                                "line {}: unknown arrival mode `{other}` — expected \
+                                 `closed` or `open`",
+                                item.line
+                            ))
+                        }
+                    }
+                }
+                "submitters" => submitters = pos_usize(item)?,
+                "jobs" => jobs = Some(pos_usize(item)?),
+                "quick_jobs" => quick_jobs = Some(pos_usize(item)?),
+                "seed" => {
+                    seed = item
+                        .int()
+                        .ok()
+                        .filter(|n| *n >= 0)
+                        .ok_or_else(|| {
+                            format!("line {}: `seed` must be a non-negative integer", item.line)
+                        })? as u64
+                }
+                "spacing_us" => {
+                    spacing_us = item
+                        .int()
+                        .ok()
+                        .filter(|n| *n >= 0)
+                        .ok_or_else(|| {
+                            format!(
+                                "line {}: `spacing_us` must be a non-negative integer",
+                                item.line
+                            )
+                        })? as u64
+                }
+                "jitter" => {
+                    uniform_jitter = match item.str()? {
+                        "none" => false,
+                        "uniform" => true,
+                        other => {
+                            return Err(format!(
+                                "line {}: unknown jitter `{other}` — expected `none` or \
+                                 `uniform`",
+                                item.line
+                            ))
+                        }
+                    }
+                }
+                other => return Err(format!("line {}: unknown key `{other}`", item.line)),
+            }
+        }
+        let jobs = jobs.ok_or_else(|| format!("scenario `{name}`: [arrival] missing `jobs`"))?;
+        let quick_jobs = quick_jobs
+            .ok_or_else(|| format!("scenario `{name}`: [arrival] missing `quick_jobs`"))?;
+        if uniform_jitter && spacing_us == 0 {
+            return Err(format!(
+                "scenario `{name}`: `jitter = \"uniform\"` needs `spacing_us > 0`"
+            ));
+        }
+        let arrival =
+            Arrival { mode, submitters, jobs, quick_jobs, seed, spacing_us, uniform_jitter };
+
+        let part_secs = doc.array_sections("part");
+        if part_secs.is_empty() {
+            return Err(format!("scenario `{name}`: needs at least one [[part]]"));
+        }
+        let mut parts = Vec::with_capacity(part_secs.len());
+        for sec in part_secs {
+            parts.push(parse_part(&name, sec, &arrival, cores.total())?);
+        }
+        if !parts.iter().any(|p| p.measured) {
+            return Err(format!(
+                "scenario `{name}`: every part is `measured = false` — nothing defines \
+                 the job wall"
+            ));
+        }
+        for p in &parts {
+            if parts.iter().filter(|q| q.name == p.name).count() > 1 {
+                return Err(format!("scenario `{name}`: duplicate part name `{}`", p.name));
+            }
+        }
+
+        let mut bars = Vec::new();
+        for sec in doc.array_sections("bar") {
+            bars.push(parse_bar(&name, sec, &engines)?);
+        }
+
+        Ok(Scenario {
+            name,
+            summary,
+            engines,
+            tolerance_pct,
+            cores,
+            cores_spec,
+            workers,
+            arrival,
+            parts,
+            bars,
+        })
+    }
+}
+
+fn parse_part(
+    scenario: &str,
+    sec: &Section,
+    arrival: &Arrival,
+    total_cores: usize,
+) -> Result<PartSpec, String> {
+    let mut name = None;
+    let mut count = 1usize;
+    let mut base_ms = None;
+    let mut size = 1usize;
+    let mut threads = None;
+    let mut priority = Priority::Normal;
+    let mut budget_ms = None;
+    let mut cancel_after_ms = None;
+    let mut cancel_prob: Option<f64> = None;
+    let mut measured = true;
+    for item in no_dup_keys(sec)? {
+        match item.key.as_str() {
+            "name" => name = Some(item.str()?.to_string()),
+            "count" => count = pos_usize(item)?,
+            "base_ms" => base_ms = Some(pos_f64(item)?),
+            "size" => size = pos_usize(item)?,
+            "threads" => {
+                threads = Some(item.int().ok().filter(|n| *n >= 0).ok_or_else(|| {
+                    format!("line {}: `threads` must be a non-negative integer", item.line)
+                })? as usize)
+            }
+            "priority" => {
+                priority = match item.str()? {
+                    "low" => Priority::Low,
+                    "normal" => Priority::Normal,
+                    "high" => Priority::High,
+                    other => {
+                        return Err(format!(
+                            "line {}: unknown priority `{other}` — expected `low`, \
+                             `normal`, or `high`",
+                            item.line
+                        ))
+                    }
+                }
+            }
+            "budget_ms" => budget_ms = Some(pos_f64(item)?),
+            "cancel_after_ms" => {
+                let v = item.f64()?;
+                if !(v.is_finite() && v >= 0.0) {
+                    return Err(format!(
+                        "line {}: `cancel_after_ms` must be finite and >= 0",
+                        item.line
+                    ));
+                }
+                cancel_after_ms = Some(v);
+            }
+            "cancel_prob" => {
+                let v = item.f64()?;
+                if !(0.0..=1.0).contains(&v) {
+                    return Err(format!(
+                        "line {}: `cancel_prob` must be within [0, 1]",
+                        item.line
+                    ));
+                }
+                cancel_prob = Some(v);
+            }
+            "measured" => measured = item.bool()?,
+            other => return Err(format!("line {}: unknown key `{other}`", item.line)),
+        }
+    }
+    let at = format!("scenario `{scenario}` [[part]] at line {}", sec.line);
+    let name = name.ok_or_else(|| format!("{at}: missing `name`"))?;
+    let base_ms = base_ms.ok_or_else(|| format!("{at}: missing `base_ms`"))?;
+    let threads = threads.ok_or_else(|| format!("{at}: missing `threads` (0 = auto)"))?;
+    if threads > total_cores {
+        return Err(format!(
+            "{at}: `threads = {threads}` exceeds the machine's {total_cores} cores"
+        ));
+    }
+    if cancel_prob.is_some() && cancel_after_ms.is_none() {
+        return Err(format!("{at}: `cancel_prob` needs `cancel_after_ms`"));
+    }
+    if cancel_after_ms.is_some() {
+        if measured {
+            return Err(format!(
+                "{at}: a cancelled part cannot be `measured` — a cancelled wall is \
+                 meaningless; set `measured = false`"
+            ));
+        }
+        if arrival.mode == Loop::Open {
+            return Err(format!(
+                "{at}: cancel distributions are closed-loop only (an open-loop \
+                 producer has moved on before `cancel_after_ms` elapses)"
+            ));
+        }
+    }
+    Ok(PartSpec {
+        name,
+        count,
+        base_ms,
+        size,
+        threads,
+        priority,
+        budget_ms,
+        cancel_after_ms,
+        cancel_prob: cancel_prob.unwrap_or(1.0),
+        measured,
+    })
+}
+
+fn parse_bar(scenario: &str, sec: &Section, engines: &[String]) -> Result<BarSpec, String> {
+    let mut metric = None;
+    let (mut better, mut than) = (None, None);
+    let mut margin_pct = 0.0;
+    for item in no_dup_keys(sec)? {
+        match item.key.as_str() {
+            "metric" => {
+                metric = Some(match item.str()? {
+                    "p95_ms" => BarMetric::P95Ms,
+                    "throughput_jobs_s" => BarMetric::ThroughputJobsS,
+                    other => {
+                        return Err(format!(
+                            "line {}: unknown bar metric `{other}` — expected `p95_ms` \
+                             or `throughput_jobs_s`",
+                            item.line
+                        ))
+                    }
+                })
+            }
+            "better" => better = Some(item.str()?.to_string()),
+            "than" => than = Some(item.str()?.to_string()),
+            "margin_pct" => {
+                let v = item.f64()?;
+                if !(v.is_finite() && (0.0..100.0).contains(&v)) {
+                    return Err(format!(
+                        "line {}: `margin_pct` must be within [0, 100)",
+                        item.line
+                    ));
+                }
+                margin_pct = v;
+            }
+            other => return Err(format!("line {}: unknown key `{other}`", item.line)),
+        }
+    }
+    let at = format!("scenario `{scenario}` [[bar]] at line {}", sec.line);
+    let metric = metric.ok_or_else(|| format!("{at}: missing `metric`"))?;
+    let better = better.ok_or_else(|| format!("{at}: missing `better`"))?;
+    let than = than.ok_or_else(|| format!("{at}: missing `than`"))?;
+    for e in [&better, &than] {
+        if !engines.contains(e) {
+            return Err(format!(
+                "{at}: engine `{e}` is not in this scenario's `engines` list"
+            ));
+        }
+    }
+    if better == than {
+        return Err(format!("{at}: `better` and `than` are both `{better}`"));
+    }
+    Ok(BarSpec { metric, better, than, margin_pct })
+}
+
+/// Scenario sections have no repeatable keys, so any duplicate is a
+/// config error (last-wins would quietly ignore the earlier line).
+fn no_dup_keys(sec: &Section) -> Result<&[Item], String> {
+    for (i, item) in sec.items.iter().enumerate() {
+        if sec.items[..i].iter().any(|prev| prev.key == item.key) {
+            return Err(format!("line {}: duplicate key `{}`", item.line, item.key));
+        }
+    }
+    Ok(&sec.items)
+}
+
+fn pos_usize(item: &Item) -> Result<usize, String> {
+    item.int()
+        .ok()
+        .filter(|n| *n >= 1)
+        .map(|n| n as usize)
+        .ok_or_else(|| format!("line {}: `{}` must be a positive integer", item.line, item.key))
+}
+
+fn pos_f64(item: &Item) -> Result<f64, String> {
+    let v = item.f64()?;
+    if v.is_finite() && v > 0.0 {
+        Ok(v)
+    } else {
+        Err(format!("line {}: `{}` must be a positive number", item.line, item.key))
+    }
+}
+
+/// Load every `*.toml` under `dir`, sorted by file name. Each file's
+/// stem must equal its declared scenario name — the file system is the
+/// scenario index, so a mismatch would make `diff` compare the wrong
+/// baselines.
+pub fn load_dir(dir: &Path) -> Result<Vec<Scenario>, String> {
+    let mut files: Vec<_> = std::fs::read_dir(dir)
+        .map_err(|e| format!("cannot read scenario dir {}: {e}", dir.display()))?
+        .filter_map(|entry| entry.ok().map(|e| e.path()))
+        .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("toml"))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        return Err(format!("no scenario TOMLs under {}", dir.display()));
+    }
+    let mut scenarios = Vec::with_capacity(files.len());
+    for path in files {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let sc = Scenario::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or_default();
+        if sc.name != stem {
+            return Err(format!(
+                "{}: scenario name `{}` does not match the file stem `{stem}`",
+                path.display(),
+                sc.name
+            ));
+        }
+        scenarios.push(sc);
+    }
+    Ok(scenarios)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINIMAL: &str = r#"
+[scenario]
+name = "mini"
+engines = ["static"]
+
+[arrival]
+jobs = 4
+quick_jobs = 2
+
+[[part]]
+name = "work"
+base_ms = 5.0
+threads = 2
+"#;
+
+    #[test]
+    fn minimal_scenario_parses_with_defaults() {
+        let sc = Scenario::parse(MINIMAL).unwrap();
+        assert_eq!(sc.name, "mini");
+        assert_eq!(sc.engines, vec!["static"]);
+        assert_eq!(sc.tolerance_pct, 50.0);
+        assert_eq!(sc.cores.total(), SIM_CORES);
+        assert_eq!(sc.workers, 4);
+        assert_eq!(sc.arrival.mode, Loop::Closed);
+        assert_eq!(sc.arrival.submitters, 1);
+        assert_eq!(sc.arrival.jobs_for(Mode::Quick), 2);
+        assert_eq!(sc.arrival.jobs_for(Mode::Full), 4);
+        assert_eq!(sc.parts.len(), 1);
+        let p = &sc.parts[0];
+        assert_eq!((p.count, p.size, p.threads), (1, 1, 2));
+        assert_eq!(p.priority, crate::engine::Priority::Normal);
+        assert!(p.measured && p.budget_ms.is_none() && p.cancel_after_ms.is_none());
+        assert!(sc.bars.is_empty());
+    }
+
+    #[test]
+    fn engines_default_to_the_full_matrix() {
+        let text = MINIMAL.replace("engines = [\"static\"]\n", "");
+        let sc = Scenario::parse(&text).unwrap();
+        assert_eq!(sc.engines.len(), ENGINES.len());
+    }
+
+    #[test]
+    fn full_featured_scenario_parses() {
+        let sc = Scenario::parse(
+            r#"
+[scenario]
+name = "storm"
+summary = "cancellation under hetero placement"
+engines = ["static", "blind"]
+tolerance_pct = 60
+
+[machine]
+cores = "fast=4,slow=12@0.5"
+workers = 4
+
+[arrival]
+mode = "closed"
+submitters = 2
+jobs = 30
+quick_jobs = 10
+seed = 42
+
+[[part]]
+name = "doomed"
+count = 3
+base_ms = 1000
+threads = 4
+priority = "low"
+cancel_after_ms = 2.0
+cancel_prob = 0.5
+measured = false
+
+[[part]]
+name = "survivor"
+base_ms = 8.0
+threads = 8
+priority = "high"
+budget_ms = 5000
+
+[[bar]]
+metric = "p95_ms"
+better = "static"
+than = "blind"
+margin_pct = 10
+"#,
+        )
+        .unwrap();
+        assert_eq!(sc.cores.total(), 16);
+        assert_eq!(sc.cores_spec, "fast=4,slow=12@0.5");
+        assert_eq!(sc.arrival.seed, 42);
+        assert_eq!(sc.parts[0].cancel_prob, 0.5);
+        assert!(!sc.parts[0].measured);
+        assert_eq!(sc.parts[1].budget_ms, Some(5000.0));
+        assert_eq!(sc.bars.len(), 1);
+        assert_eq!(sc.bars[0].metric, BarMetric::P95Ms);
+    }
+
+    /// The reject fixtures: each mutation of the minimal scenario must
+    /// fail validation with a message containing the marker.
+    #[test]
+    fn reject_fixtures() {
+        let cases: &[(&str, &str, &str)] = &[
+            // (mutation-from, mutation-to, expected error marker)
+            ("name = \"mini\"", "name = \"mini\"\ntypo_key = 1", "unknown key `typo_key`"),
+            ("[arrival]", "[oops]", "unknown section"),
+            ("[[part]]", "[part]", "use `[[part]]`"),
+            ("jobs = 4\n", "jobs = 4\njobs = 4\n", "duplicate key `jobs`"),
+            ("engines = [\"static\"]", "engines = [\"warp9\"]", "unknown engine `warp9`"),
+            ("engines = [\"static\"]", "engines = []", "must not be empty"),
+            ("name = \"mini\"", "name = \"Mini Bench\"", "[a-z0-9_]"),
+            ("base_ms = 5.0", "base_ms = -5.0", "positive number"),
+            ("base_ms = 5.0\n", "", "missing `base_ms`"),
+            ("threads = 2", "threads = 64", "exceeds the machine"),
+            ("jobs = 4", "jobs = 0", "positive integer"),
+        ];
+        for (from, to, marker) in cases {
+            let text = MINIMAL.replace(from, to);
+            assert_ne!(&text, MINIMAL, "mutation `{from}` did not apply");
+            let err = Scenario::parse(&text).unwrap_err();
+            assert!(err.contains(marker), "for `{to}` expected `{marker}`, got: {err}");
+        }
+    }
+
+    #[test]
+    fn reject_missing_sections() {
+        for section in ["[scenario]", "[arrival]", "[[part]]"] {
+            // chop the section header and everything after it up to the
+            // next header, leaving the rest of the document intact
+            let start = MINIMAL.find(section).unwrap();
+            let rest = &MINIMAL[start + section.len()..];
+            let end = rest.find("\n[").map(|i| start + section.len() + i).unwrap_or(MINIMAL.len());
+            let text = format!("{}{}", &MINIMAL[..start], &MINIMAL[end..]);
+            let err = Scenario::parse(&text).unwrap_err();
+            assert!(err.contains("missing") || err.contains("at least one"), "{section}: {err}");
+        }
+    }
+
+    #[test]
+    fn reject_bad_distributions() {
+        // cancel_prob out of range
+        let text = MINIMAL.replace(
+            "threads = 2",
+            "threads = 2\nmeasured = false\ncancel_after_ms = 1.0\ncancel_prob = 1.5",
+        );
+        let err = Scenario::parse(&text).unwrap_err();
+        assert!(err.contains("within [0, 1]"), "{err}");
+        // cancel_prob without a cancel point
+        let text = MINIMAL.replace("threads = 2", "threads = 2\ncancel_prob = 0.5");
+        let err = Scenario::parse(&text).unwrap_err();
+        assert!(err.contains("needs `cancel_after_ms`"), "{err}");
+        // a measured cancelled part
+        let text = MINIMAL.replace("threads = 2", "threads = 2\ncancel_after_ms = 1.0");
+        let err = Scenario::parse(&text).unwrap_err();
+        assert!(err.contains("cannot be `measured`"), "{err}");
+        // jitter without spacing
+        let text = MINIMAL.replace("[arrival]", "[arrival]\njitter = \"uniform\"");
+        let err = Scenario::parse(&text).unwrap_err();
+        assert!(err.contains("spacing_us > 0"), "{err}");
+        // cancels in an open loop
+        let text = MINIMAL
+            .replace("[arrival]", "[arrival]\nmode = \"open\"")
+            .replace("threads = 2", "threads = 2\nmeasured = false\ncancel_after_ms = 1.0")
+            .replace("name = \"work\"", "name = \"work\"\n")
+            + "\n[[part]]\nname = \"w2\"\nbase_ms = 1.0\nthreads = 1\n";
+        let err = Scenario::parse(&text).unwrap_err();
+        assert!(err.contains("closed-loop only"), "{err}");
+    }
+
+    #[test]
+    fn reject_every_part_unmeasured() {
+        let text = MINIMAL.replace("threads = 2", "threads = 2\nmeasured = false");
+        let err = Scenario::parse(&text).unwrap_err();
+        assert!(err.contains("nothing defines"), "{err}");
+    }
+
+    #[test]
+    fn reject_bad_bars() {
+        let bar = "\n[[bar]]\nmetric = \"p95_ms\"\nbetter = \"adaptive\"\nthan = \"static\"\n";
+        let err = Scenario::parse(&(MINIMAL.to_string() + bar)).unwrap_err();
+        assert!(err.contains("not in this scenario's `engines`"), "{err}");
+        let bar = "\n[[bar]]\nmetric = \"p42\"\nbetter = \"static\"\nthan = \"static\"\n";
+        let err = Scenario::parse(&(MINIMAL.to_string() + bar)).unwrap_err();
+        assert!(err.contains("unknown bar metric"), "{err}");
+        let bar = "\n[[bar]]\nmetric = \"p95_ms\"\nbetter = \"static\"\nthan = \"static\"\n";
+        let err = Scenario::parse(&(MINIMAL.to_string() + bar)).unwrap_err();
+        assert!(err.contains("`better` and `than`"), "{err}");
+    }
+}

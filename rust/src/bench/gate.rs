@@ -1,31 +1,28 @@
-//! CI bench-gate scenarios: small, artifact-free benchmarks of the
-//! scheduler + adaptive policy, with machine-readable results.
+//! Shared bench-harness pieces: the scaling-aware mock runner
+//! ([`SimRunner`]) and the *legacy* JSON gate format.
 //!
-//! Modelled on rebar's recorded-baseline discipline: every scenario
-//! emits `(throughput, p50, p95)`; the `bench-gate` binary
-//! (`rust/scripts/bench_gate.rs`) writes them to `BENCH_pr.json`,
-//! compares against the checked-in `BENCH_baseline.json`, and fails CI
-//! on a regression beyond the tolerance. The scenarios run on a
-//! *scaling-aware mock runner* ([`SimRunner`]) so they exercise the
-//! real dispatcher (ledger, backfill/aging, adaptive recalibration)
-//! without PJRT artifacts — they run on any box, including CI.
+//! The scenarios themselves no longer live here. They are data —
+//! `rust/bench/scenarios/*.toml` — loaded and executed by the
+//! [`crate::bar`] barometer (`bench-bar` binary), which subsumed the
+//! old hand-coded `bench-gate` suite. What remains in this module:
 //!
-//! Scenario latencies are simulated sleeps, not CPU work, so results
-//! are stable across machines; per-scenario tolerances in the baseline
-//! absorb the residual timer jitter.
+//! - [`SimRunner`] / [`sim_model`] / [`sim_base_ms`]: the simulated
+//!   executor every scenario runs on. Latencies are deadline-based
+//!   sleeps, not CPU work, so results are stable across machines and
+//!   the scenarios exercise the real dispatcher (ledger,
+//!   backfill/aging, adaptive recalibration) without PJRT artifacts.
+//! - [`ScenarioResult`] / [`results_to_json`] / [`compare`]: the
+//!   `BENCH_pr.json` record shape and comparator. `bench-bar` still
+//!   emits this JSON for one release so downstream trajectory tooling
+//!   keeps parsing PR runs; the CSV records under `rust/bench/record/`
+//!   are the format of record now (see `rust/bench/FORMAT.md`).
 
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::engine::{
-    allocate, AdaptiveConfig, AdaptivePolicy, AllocPolicy, Budget, CoreGrant, CoreMap,
-    PartTask, PartWeights, Priority, ProfileStore, RequestCtx, SchedConfig, Scheduler,
-    TaskRunner,
-};
+use crate::engine::{CoreGrant, TaskRunner};
 use crate::runtime::{CancelToken, ExecResult, ReplyFn, TaskCancelled, Tensor};
 use crate::simcpu::ScalProfile;
 use crate::util::json::{num, obj, Json};
-use crate::util::stats::percentiles;
 
 /// Scalability profile of the simulated models: a small serial fraction
 /// and a mild per-thread coordination cost — the BERT-like shape whose
@@ -33,7 +30,9 @@ use crate::util::stats::percentiles;
 /// extended-Amdahl model).
 pub const SIM_PROFILE: ScalProfile = ScalProfile::new(0.05, 0.2);
 
-/// Virtual core budget every scenario schedules against (paper: 16).
+/// Virtual core budget the classic scenarios schedule against
+/// (paper: 16). Scenario TOMLs without a `[machine]` section default
+/// to this many homogeneous cores.
 pub const SIM_CORES: usize = 16;
 
 /// Scaling-aware mock runner: a model named `"sim:<base_ms>"` executes
@@ -42,6 +41,10 @@ pub const SIM_CORES: usize = 16;
 /// whole cost, so slow cores are visibly slow — as a deadline-based
 /// sleep (slice jitter does not accumulate), polling its cancel token
 /// about once per millisecond.
+///
+/// A model name that is not a well-formed `sim:` spec fails the task:
+/// in a bench context a typo'd model must poison the measurement, not
+/// quietly simulate some default latency.
 pub struct SimRunner {
     pub workers: usize,
 }
@@ -51,11 +54,22 @@ pub fn sim_model(base_ms: f64) -> String {
     format!("sim:{base_ms}")
 }
 
-fn sim_base_ms(model: &str) -> f64 {
+/// Parse a [`SimRunner`] model name back to its base latency.
+///
+/// Malformed names are a hard error. This used to fall back to
+/// `1.0`, which made a typo'd scenario silently benchmark a 1ms
+/// no-op — quietly-wrong numbers are worse than no numbers.
+pub fn sim_base_ms(model: &str) -> Result<f64, String> {
     model
         .strip_prefix("sim:")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(1.0)
+        .and_then(|s| s.parse::<f64>().ok())
+        .filter(|b| b.is_finite() && *b >= 0.0)
+        .ok_or_else(|| {
+            format!(
+                "malformed sim model name `{model}` — expected `sim:<base_ms>` \
+                 with a finite non-negative base"
+            )
+        })
 }
 
 impl TaskRunner for SimRunner {
@@ -72,9 +86,14 @@ impl TaskRunner for SimRunner {
         cancel: CancelToken,
         reply: ReplyFn,
     ) {
-        let ms = SIM_PROFILE
-            .time_ms_at(sim_base_ms(model), grant.threads.max(1), grant.speed)
-            .max(0.0);
+        let base = match sim_base_ms(model) {
+            Ok(b) => b,
+            Err(e) => {
+                reply(Err(anyhow::anyhow!(e)));
+                return;
+            }
+        };
+        let ms = SIM_PROFILE.time_ms_at(base, grant.threads.max(1), grant.speed).max(0.0);
         std::thread::spawn(move || {
             let deadline = Instant::now() + Duration::from_secs_f64(ms / 1e3);
             loop {
@@ -97,7 +116,9 @@ impl TaskRunner for SimRunner {
     }
 }
 
-/// One scenario's measured outcome.
+/// One scenario's measured outcome in the legacy `BENCH_pr.json`
+/// shape. The barometer's richer records ([`crate::bar::Measurement`])
+/// project down to this for the one-release compatibility window.
 #[derive(Debug, Clone)]
 pub struct ScenarioResult {
     pub name: String,
@@ -105,414 +126,6 @@ pub struct ScenarioResult {
     pub throughput_jobs_s: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
-}
-
-impl ScenarioResult {
-    fn from_walls(name: &str, walls_ms: &[f64], total_s: f64) -> ScenarioResult {
-        let ps = percentiles(walls_ms, &[50.0, 95.0]);
-        ScenarioResult {
-            name: name.to_string(),
-            jobs: walls_ms.len(),
-            throughput_jobs_s: walls_ms.len() as f64 / total_s.max(1e-9),
-            p50_ms: ps[0],
-            p95_ms: ps[1],
-        }
-    }
-}
-
-/// One job part of a scenario workload: a simulated model plus the
-/// *declared* input size the static (size-proportional) split sees.
-#[derive(Debug, Clone, Copy)]
-struct SimPart {
-    base_ms: f64,
-    size: usize,
-}
-
-/// The fig-8 long/short mixed job with **misleading sizes** — the §6
-/// motivation for profiled weights: the costly part *declares* a small
-/// input, so the size-proportional split starves it.
-/// 1 heavy part (40ms single-thread, size 16) + 3 light parts (5ms,
-/// size 256 each).
-const LONGSHORT: [SimPart; 4] = [
-    SimPart { base_ms: 40.0, size: 16 },
-    SimPart { base_ms: 5.0, size: 256 },
-    SimPart { base_ms: 5.0, size: 256 },
-    SimPart { base_ms: 5.0, size: 256 },
-];
-
-/// The fig-8 long/short mixed job with *honest* sizes (cost tracks
-/// size): 1 long (24ms, size 256) + 3 short (6ms, size 16).
-const HONEST_MIX: [SimPart; 4] = [
-    SimPart { base_ms: 24.0, size: 256 },
-    SimPart { base_ms: 6.0, size: 16 },
-    SimPart { base_ms: 6.0, size: 16 },
-    SimPart { base_ms: 6.0, size: 16 },
-];
-
-fn start_sched(deadline_running: Option<Duration>) -> Arc<Scheduler> {
-    start_sched_sharded(0, deadline_running)
-}
-
-/// Like [`start_sched`] but with an explicit shard count. `0` = auto,
-/// which at [`SIM_CORES`] = 16 derives a single shard, so every legacy
-/// scenario keeps measuring the one-dispatcher configuration.
-fn start_sched_sharded(shards: usize, deadline_running: Option<Duration>) -> Arc<Scheduler> {
-    Scheduler::start(
-        SchedConfig {
-            cores: CoreMap::homogeneous(SIM_CORES),
-            shards,
-            aging: Duration::from_millis(50),
-            backfill: true,
-            deadline_running,
-            ..SchedConfig::default()
-        },
-        Arc::new(SimRunner { workers: 4 }),
-    )
-}
-
-/// Core map for the heterogeneity scenarios: 4 full-speed cores plus 12
-/// half-speed ones — the big.LITTLE-style machine where class-blind
-/// placement leaves latency-sensitive work on slow silicon.
-pub const HETERO_SPEC: &str = "fast=4,slow=12@0.5";
-
-fn start_sched_hetero() -> Arc<Scheduler> {
-    Scheduler::start(
-        SchedConfig {
-            cores: CoreMap::parse(HETERO_SPEC).expect("valid hetero spec"),
-            shards: 1,
-            aging: Duration::from_millis(50),
-            backfill: true,
-            deadline_running: None,
-            ..SchedConfig::default()
-        },
-        Arc::new(SimRunner { workers: 4 }),
-    )
-}
-
-/// Submit one job (all parts with the given allocation) and block until
-/// every part finishes; returns the job wall time in ms.
-fn run_job(sched: &Scheduler, parts: &[SimPart], alloc: &[usize]) -> f64 {
-    let t0 = Instant::now();
-    let handles: Vec<_> = parts
-        .iter()
-        .zip(alloc.iter())
-        .map(|(p, &threads)| {
-            sched.submit(PartTask::new(sim_model(p.base_ms), Vec::new(), threads))
-        })
-        .collect();
-    for h in handles {
-        h.wait().expect("gate scenario part must complete");
-    }
-    t0.elapsed().as_secs_f64() * 1e3
-}
-
-/// The adaptive-vs-static comparison (acceptance criterion: profiled
-/// sizing beats the size-proportional split by >= 10% p95 on this
-/// workload). `adaptive = false` sizes parts by declared size;
-/// `adaptive = true` first runs the paper's §3.1 profiling phase (each
-/// model at one thread, enough samples to trust the window) and then
-/// sizes parts by measured cost via [`AdaptivePolicy::part_weights`].
-pub fn longshort_scenario(adaptive: bool, jobs: usize) -> ScenarioResult {
-    let sched = start_sched(None);
-    let parts = LONGSHORT;
-    let sizes: Vec<usize> = parts.iter().map(|p| p.size).collect();
-    let models: Vec<String> = parts.iter().map(|p| sim_model(p.base_ms)).collect();
-
-    let alloc = if adaptive {
-        let profiles = Arc::new(ProfileStore::new());
-        let policy =
-            AdaptivePolicy::new(Arc::clone(&profiles), AdaptiveConfig::default());
-        // Profiling phase: run every part once per round at 1 thread
-        // (prun-1), observing single-thread cost — repeated until the
-        // distribution window is trusted over the EWMA.
-        // (profiling time is excluded from the measurement window)
-        for _ in 0..crate::engine::profile::MIN_DISTRIBUTION_SAMPLES {
-            let handles: Vec<_> = parts
-                .iter()
-                .map(|p| sched.submit(PartTask::new(sim_model(p.base_ms), Vec::new(), 1)))
-                .collect();
-            for (h, m) in handles.into_iter().zip(models.iter()) {
-                let done = h.wait().expect("profiling part must complete");
-                profiles.observe(m, done.exec);
-            }
-        }
-        let keyed: Vec<(&str, usize)> = models
-            .iter()
-            .zip(sizes.iter())
-            .map(|(m, &s)| (m.as_str(), s))
-            .collect();
-        allocate(
-            PartWeights::Measured(&policy.part_weights(&keyed)),
-            &CoreMap::homogeneous(SIM_CORES),
-            AllocPolicy::PrunDef,
-        )
-        .into_threads()
-    } else {
-        allocate(
-            PartWeights::Sizes(&sizes),
-            &CoreMap::homogeneous(SIM_CORES),
-            AllocPolicy::PrunDef,
-        )
-        .into_threads()
-    };
-
-    let t0 = Instant::now();
-    let walls: Vec<f64> = (0..jobs).map(|_| run_job(&sched, &parts, &alloc)).collect();
-    let total_s = t0.elapsed().as_secs_f64();
-    let name = if adaptive { "longshort_adaptive" } else { "longshort_static" };
-    ScenarioResult::from_walls(name, &walls, total_s)
-}
-
-/// Serving-style smoke: concurrent submitters pushing honest-size mixed
-/// jobs through the dispatcher (ledger contention, backfill, queueing).
-pub fn sched_smoke_scenario(jobs_per_submitter: usize) -> ScenarioResult {
-    const SUBMITTERS: usize = 2;
-    let sched = start_sched(None);
-    let parts = HONEST_MIX;
-    let sizes: Vec<usize> = parts.iter().map(|p| p.size).collect();
-    let alloc = allocate(
-        PartWeights::Sizes(&sizes),
-        &CoreMap::homogeneous(SIM_CORES),
-        AllocPolicy::PrunDef,
-    )
-    .into_threads();
-
-    let t0 = Instant::now();
-    let mut joins = Vec::new();
-    for _ in 0..SUBMITTERS {
-        let sched = Arc::clone(&sched);
-        let alloc = alloc.clone();
-        joins.push(std::thread::spawn(move || {
-            (0..jobs_per_submitter)
-                .map(|_| run_job(&sched, &parts, &alloc))
-                .collect::<Vec<f64>>()
-        }));
-    }
-    let mut walls = Vec::new();
-    for j in joins {
-        walls.extend(j.join().expect("submitter thread"));
-    }
-    let total_s = t0.elapsed().as_secs_f64();
-    ScenarioResult::from_walls("sched_smoke", &walls, total_s)
-}
-
-/// The ROADMAP's "cancellation storm" (the serving edge giving up en
-/// masse): every job is one survivor part racing three doomed full-size
-/// hogs whose requesters cancel almost immediately. The survivor needs
-/// 8 of the 16 cores but the hogs hold 12, so it *must* wait for the
-/// cancellation machinery to reclaim cores. If cancellation stops being
-/// prompt — a queued sweep regression, a token poll that stopped
-/// interrupting, a ledger leak — the survivor queues behind ~1s of
-/// abandoned work per hog and p95 explodes past any tolerance. The
-/// survivor carries a generous request budget (never fires) so the
-/// dispatcher's armed-deadline sweep stays on the measured path.
-pub fn cancel_storm_scenario(jobs: usize) -> ScenarioResult {
-    let sched = start_sched(None);
-    let t0 = Instant::now();
-    let mut walls = Vec::with_capacity(jobs);
-    for _ in 0..jobs {
-        let tj = Instant::now();
-        let doomed: Vec<_> = (0..3)
-            .map(|_| sched.submit(PartTask::new(sim_model(1000.0), Vec::new(), 4)))
-            .collect();
-        let survivor = sched.submit(
-            PartTask::new(sim_model(8.0), Vec::new(), 8)
-                .with_budget(Budget::new(Duration::from_secs(5))),
-        );
-        std::thread::sleep(Duration::from_millis(2));
-        for h in &doomed {
-            h.cancel();
-        }
-        survivor.wait().expect("storm survivor must complete");
-        for h in doomed {
-            h.wait().expect_err("doomed storm parts must be cancelled");
-        }
-        walls.push(tj.elapsed().as_secs_f64() * 1e3);
-    }
-    ScenarioResult::from_walls("cancel_storm", &walls, t0.elapsed().as_secs_f64())
-}
-
-/// The ROADMAP's priority-inversion scenario, exercising
-/// `RequestCtx::priority` end to end: eight Low-priority hog jobs are
-/// submitted at once — the first four saturate the 16-core ledger, the
-/// second four queue behind them — and then a High-priority
-/// latency-sensitive job arrives *last*. Its ctx priority must jump it
-/// ahead of the queued Low wave, so its wall time is one hog
-/// generation (~30ms) plus its own execution, not two. If priority
-/// admission regresses (ordering bug, a ctx priority dropped on the
-/// floor between layers), the high job waits out the entire second
-/// wave and p95 roughly doubles — past any tolerance.
-pub fn priority_inversion_scenario(jobs: usize) -> ScenarioResult {
-    let sched = start_sched(None);
-    let t0 = Instant::now();
-    let mut walls = Vec::with_capacity(jobs);
-    for _ in 0..jobs {
-        let low = RequestCtx::new().with_priority(Priority::Low);
-        let high = RequestCtx::new().with_priority(Priority::High);
-        let tj = Instant::now();
-        let hogs: Vec<_> = (0..8)
-            .map(|_| {
-                sched.submit(PartTask::new(sim_model(100.0), Vec::new(), 4).with_ctx(&low))
-            })
-            .collect();
-        // submitted last, admitted first among the queued work
-        let urgent =
-            sched.submit(PartTask::new(sim_model(10.0), Vec::new(), 4).with_ctx(&high));
-        urgent.wait().expect("high-priority job must complete");
-        walls.push(tj.elapsed().as_secs_f64() * 1e3);
-        // drain the hogs so iterations don't bleed into each other
-        for h in hogs {
-            h.wait().expect("hog job must complete");
-        }
-    }
-    ScenarioResult::from_walls("priority_inversion", &walls, t0.elapsed().as_secs_f64())
-}
-
-/// The heterogeneity-inversion scenario (fig-style demo of the core
-/// ledger's classes): on the [`HETERO_SPEC`] machine — 4 fast cores, 12
-/// half-speed slow ones — three 4-thread hog jobs and then one
-/// 4-thread latency-sensitive job arrive back to back.
-///
-/// `class_aware = false` submits everything with a plain
-/// [`RequestCtx`], so every task's affinity is `Any` and placement is
-/// class-blind: the first hog grabs the fast quartet and the latency
-/// job lands on slow silicon, where its whole cost stretches by the
-/// class's 0.5 relative speed — *heterogeneity inversion*, the
-/// throughput-optimal-but-latency-hostile outcome.
-///
-/// `class_aware = true` expresses the deployment intent through the
-/// same ctx plumbing the serving edge uses: hogs are
-/// [`Priority::Low`] (derived affinity `Prefer(Slow)`), the latency job
-/// [`Priority::High`] (derived `Prefer(Fast)`). The hogs soak the slow
-/// pool, the fast quartet stays free for the job that feels every
-/// millisecond, and its p95 roughly halves. The gate's self-relative
-/// bar ([`hetero_bar`]) pins that gap at >= 10%.
-pub fn hetero_inversion_scenario(class_aware: bool, jobs: usize) -> ScenarioResult {
-    let sched = start_sched_hetero();
-    let (hog_ctx, latency_ctx) = if class_aware {
-        (
-            RequestCtx::new().with_priority(Priority::Low),
-            RequestCtx::new().with_priority(Priority::High),
-        )
-    } else {
-        (RequestCtx::new(), RequestCtx::new())
-    };
-    let t0 = Instant::now();
-    let mut walls = Vec::with_capacity(jobs);
-    for _ in 0..jobs {
-        let tj = Instant::now();
-        let hogs: Vec<_> = (0..3)
-            .map(|_| {
-                sched.submit(
-                    PartTask::new(sim_model(60.0), Vec::new(), 4).with_ctx(&hog_ctx),
-                )
-            })
-            .collect();
-        let latency = sched
-            .submit(PartTask::new(sim_model(10.0), Vec::new(), 4).with_ctx(&latency_ctx));
-        latency.wait().expect("latency-sensitive job must complete");
-        walls.push(tj.elapsed().as_secs_f64() * 1e3);
-        // drain the hogs so iterations don't bleed into each other
-        for h in hogs {
-            h.wait().expect("hog job must complete");
-        }
-    }
-    let name = if class_aware { "hetero_inversion" } else { "hetero_inversion_blind" };
-    ScenarioResult::from_walls(name, &walls, t0.elapsed().as_secs_f64())
-}
-
-/// Self-relative acceptance bar for the heterogeneity demo: class-aware
-/// placement must beat class-blind placement by >= 10% p95 on the same
-/// workload and the same machine. Returns the failure line, or `None`
-/// when the bar holds.
-pub fn hetero_bar(aware: &ScenarioResult, blind: &ScenarioResult) -> Option<String> {
-    if aware.p95_ms > 0.9 * blind.p95_ms {
-        Some(format!(
-            "hetero_inversion: class-aware p95 {:.2} ms not >=10% better than \
-             class-blind {:.2} ms",
-            aware.p95_ms, blind.p95_ms
-        ))
-    } else {
-        None
-    }
-}
-
-/// The sharded-dispatcher scenario: a many-producer *open-loop* submit
-/// flood. Four producer threads each push `per_producer` one-core 1ms
-/// jobs into the scheduler as fast as `submit` returns — no pacing, no
-/// waiting on completions — so the measured phase is pure submission
-/// cost under 4-way producer contention: id assignment, shard routing,
-/// the shard-side counter bump, and the event-channel send (with the
-/// dispatcher draining that same channel concurrently).
-///
-/// `throughput_jobs_s` is therefore *submit ops/sec* — the figure
-/// sharding is meant to lift, since with one shard every producer and
-/// the lone dispatcher contend on a single channel — while p50/p95 are
-/// per-task completion walls (submit -> done) from the drain that
-/// follows, keeping the usual latency regression net. Tasks carry
-/// consecutive request ids so the flood spreads round-robin across all
-/// shards. `shards <= 1` records the single-shard reference point
-/// (`submit_storm_single`) that the gate's self-relative sharding bar
-/// compares against.
-pub fn submit_storm_scenario(shards: usize, per_producer: usize) -> ScenarioResult {
-    const PRODUCERS: usize = 4;
-    let sched = start_sched_sharded(shards, None);
-    let barrier = Arc::new(std::sync::Barrier::new(PRODUCERS + 1));
-    let mut joins = Vec::new();
-    for p in 0..PRODUCERS {
-        let sched = Arc::clone(&sched);
-        let barrier = Arc::clone(&barrier);
-        joins.push(std::thread::spawn(move || {
-            barrier.wait();
-            let mut pending = Vec::with_capacity(per_producer);
-            for i in 0..per_producer {
-                let rid = (p * per_producer + i) as u64;
-                let h = sched.submit(
-                    PartTask::new(sim_model(1.0), Vec::new(), 1).with_request_id(rid),
-                );
-                pending.push((Instant::now(), h));
-            }
-            let submits_done = Instant::now();
-            let walls: Vec<f64> = pending
-                .into_iter()
-                .map(|(t, h)| {
-                    h.wait().expect("storm part must complete");
-                    t.elapsed().as_secs_f64() * 1e3
-                })
-                .collect();
-            (submits_done, walls)
-        }));
-    }
-    let t0 = Instant::now();
-    barrier.wait();
-    let mut walls = Vec::new();
-    let mut submit_phase = Duration::ZERO;
-    for j in joins {
-        let (done, w) = j.join().expect("producer thread");
-        submit_phase = submit_phase.max(done.duration_since(t0));
-        walls.extend(w);
-    }
-    let name = if shards <= 1 { "submit_storm_single" } else { "submit_storm" };
-    ScenarioResult::from_walls(name, &walls, submit_phase.as_secs_f64())
-}
-
-/// Run the gate's full scenario list. `quick` shrinks job counts for
-/// the per-PR smoke run; the recorded baseline uses the same counts, so
-/// quick and full runs are not comparable to each other.
-pub fn run_all(quick: bool) -> Vec<ScenarioResult> {
-    let jobs = if quick { 20 } else { 60 };
-    vec![
-        sched_smoke_scenario(jobs / 2),
-        longshort_scenario(false, jobs),
-        longshort_scenario(true, jobs),
-        cancel_storm_scenario(jobs),
-        priority_inversion_scenario(jobs),
-        hetero_inversion_scenario(true, jobs),
-        hetero_inversion_scenario(false, jobs),
-        // 4 producers x (jobs * 5) tasks: 400 submits quick, 1200 full.
-        submit_storm_scenario(2, jobs * 5),
-        submit_storm_scenario(1, jobs * 5),
-    ]
 }
 
 // ---------------------------------------------------------------- JSON
@@ -537,13 +150,17 @@ pub fn results_to_json(results: &[ScenarioResult]) -> Json {
     Json::Obj(vec![("scenarios".to_string(), Json::Obj(entries))])
 }
 
-/// Compare a PR run against the recorded baseline. `tolerance_pct` is
-/// the default allowed drift; a baseline scenario may override it with
-/// its own `"tolerance_pct"` field (noisier concurrent scenarios carry
-/// a wider one). Returns one human-readable line per regression; empty
-/// means the gate passes. Scenarios present in the baseline but missing
-/// from the PR run (or vice versa) are regressions too — a silently
-/// dropped benchmark must not pass the gate.
+/// Compare a PR run against a recorded baseline in the legacy JSON
+/// shape. `tolerance_pct` is the default allowed drift; a baseline
+/// scenario may override it with its own `"tolerance_pct"` field
+/// (noisier concurrent scenarios carry a wider one). Returns one
+/// human-readable line per regression; empty means the gate passes.
+/// Scenarios present in the baseline but missing from the PR run (or
+/// vice versa) are regressions too — a silently dropped benchmark must
+/// not pass the gate.
+///
+/// Retained for downstream consumers of `BENCH_pr.json`; the CI gate
+/// itself now runs `bench-bar diff` over the CSV records.
 pub fn compare(pr: &Json, baseline: &Json, tolerance_pct: f64) -> Vec<String> {
     let mut failures = Vec::new();
     let empty = Json::Obj(Vec::new());
@@ -609,6 +226,8 @@ pub fn compare(pr: &Json, baseline: &Json, tolerance_pct: f64) -> Vec<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::{CoreMap, PartTask, SchedConfig, Scheduler};
+    use std::sync::Arc;
 
     fn result(name: &str, thr: f64, p95: f64) -> ScenarioResult {
         ScenarioResult {
@@ -685,86 +304,34 @@ mod tests {
     }
 
     #[test]
-    fn cancel_storm_reclaims_cores_promptly() {
-        // Three 1000ms hogs are cancelled ~2ms in; the 8-core survivor
-        // must then run, so each job's wall stays in the tens of
-        // milliseconds — three orders below the hogs' nominal runtime.
-        let r = cancel_storm_scenario(3);
-        assert_eq!(r.jobs, 3);
-        assert!(
-            r.p95_ms < 500.0,
-            "survivor waited on abandoned work: p95 {:.1}ms",
-            r.p95_ms
+    fn sim_base_ms_parses_well_formed_names() {
+        assert_eq!(sim_base_ms("sim:8").unwrap(), 8.0);
+        assert_eq!(sim_base_ms(&sim_model(2.5)).unwrap(), 2.5);
+        assert_eq!(sim_base_ms("sim:0").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn sim_base_ms_rejects_malformed_names() {
+        // Regression: these used to fall back to 1.0 and quietly
+        // benchmark a no-op.
+        for bad in ["sim:banana", "bert-base", "sim:", "sim", "sim:-4", "sim:inf", "sim:NaN"] {
+            let err = sim_base_ms(bad).unwrap_err();
+            assert!(err.contains("malformed sim model name"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn malformed_sim_model_fails_the_task_end_to_end() {
+        // The runner must reply with the parse error, not simulate a
+        // default latency: the submit handle sees a hard failure.
+        let sched = Scheduler::start(
+            SchedConfig { cores: CoreMap::homogeneous(4), ..SchedConfig::default() },
+            Arc::new(SimRunner { workers: 1 }),
         );
-    }
-
-    #[test]
-    fn priority_inversion_high_job_jumps_the_queued_wave() {
-        // One hog generation is ~30ms simulated; the high-priority job
-        // must finish well before the second Low wave would have let
-        // it run (~60ms+). Generous bound for slow CI boxes.
-        let r = priority_inversion_scenario(3);
-        assert_eq!(r.jobs, 3);
-        assert!(
-            r.p95_ms < 55.0,
-            "high-priority job waited out the low wave: p95 {:.1}ms",
-            r.p95_ms
-        );
-    }
-
-    #[test]
-    fn submit_storm_floods_and_drains() {
-        // 2 shards over the 16 sim cores: 4 producers x 10 one-core
-        // tasks flood in, everything must drain, and the recorded
-        // throughput is the (positive) submit-phase rate.
-        let r = submit_storm_scenario(2, 10);
-        assert_eq!(r.name, "submit_storm");
-        assert_eq!(r.jobs, 40);
-        assert!(r.throughput_jobs_s > 0.0);
-        assert!(r.p95_ms < 2_000.0, "storm drain stalled: p95 {:.1}ms", r.p95_ms);
-        let r = submit_storm_scenario(1, 5);
-        assert_eq!(r.name, "submit_storm_single");
-        assert_eq!(r.jobs, 20);
-    }
-
-    #[test]
-    fn longshort_static_starves_the_heavy_part() {
-        // the declared sizes hand the heavy part a single core
-        let sizes: Vec<usize> = LONGSHORT.iter().map(|p| p.size).collect();
-        let alloc = allocate(
-            PartWeights::Sizes(&sizes),
-            &CoreMap::homogeneous(SIM_CORES),
-            AllocPolicy::PrunDef,
-        )
-        .into_threads();
-        assert_eq!(alloc[0], 1, "{alloc:?}");
-        assert_eq!(alloc.iter().sum::<usize>(), SIM_CORES);
-    }
-
-    #[test]
-    fn hetero_class_awareness_beats_blind_placement() {
-        // Class-blind: a hog grabs the fast quartet, the latency job
-        // runs on half-speed cores (~7ms). Class-aware: hogs soak the
-        // slow pool, the latency job keeps the fast cores (~3.5ms).
-        let aware = hetero_inversion_scenario(true, 4);
-        let blind = hetero_inversion_scenario(false, 4);
-        assert_eq!(aware.name, "hetero_inversion");
-        assert_eq!(blind.name, "hetero_inversion_blind");
-        assert!(
-            hetero_bar(&aware, &blind).is_none(),
-            "inversion not demonstrated: aware p95 {:.2}ms vs blind p95 {:.2}ms",
-            aware.p95_ms,
-            blind.p95_ms
-        );
-    }
-
-    #[test]
-    fn hetero_bar_flags_a_closed_gap() {
-        let aware = result("hetero_inversion", 30.0, 7.5);
-        let blind = result("hetero_inversion_blind", 30.0, 8.0);
-        let fail = hetero_bar(&aware, &blind).expect("bar must flag a <10% gap");
-        assert!(fail.contains("p95"), "{fail}");
-        let aware = result("hetero_inversion", 30.0, 4.5);
-        assert!(hetero_bar(&aware, &blind).is_none());
+        let err = sched
+            .submit(PartTask::new("sim:banana".to_string(), Vec::new(), 1))
+            .wait()
+            .expect_err("malformed sim model must fail the task");
+        assert!(err.to_string().contains("malformed sim model"), "{err}");
     }
 }

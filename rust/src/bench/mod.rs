@@ -1,6 +1,8 @@
 //! Benchmark/figure-regeneration harness (one regenerator per paper
 //! table/figure; see DESIGN.md §6 for the experiment index) plus the
-//! CI bench-gate scenarios ([`gate`]).
+//! simulated-runner substrate the barometer measures on ([`gate`];
+//! the scenarios themselves are data — see `crate::bar` and
+//! `rust/bench/FORMAT.md`).
 
 pub mod figures;
 pub mod gate;

@@ -6,6 +6,7 @@
 //! AOT-lowered to HLO text at build time; this crate (L3) loads and serves
 //! them over PJRT with the paper's `prun` parallel-inference engine.
 
+pub mod bar;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -1,7 +1,8 @@
 //! Infrastructure the offline environment requires us to own: JSON,
-//! PRNG, CLI parsing, logging, stats, a mini property-testing kit, and
-//! the crate-wide concurrency shims (poison-recovering locks, the
-//! hot-path clock) that `pallas-lint` holds the rest of the tree to.
+//! TOML-subset parsing, PRNG, CLI parsing, logging, stats, a mini
+//! property-testing kit, and the crate-wide concurrency shims
+//! (poison-recovering locks, the hot-path clock) that `pallas-lint`
+//! holds the rest of the tree to.
 
 pub mod args;
 pub mod clock;
@@ -11,3 +12,4 @@ pub mod prng;
 pub mod prop;
 pub mod stats;
 pub mod sync;
+pub mod toml;

@@ -1,0 +1,394 @@
+//! Hand-rolled TOML-subset parser shared by `pallas-lint`'s config
+//! files (`lint-allow.toml`, `lint-order.toml`) and the scheduler
+//! barometer's scenario files (`rust/bench/scenarios/*.toml`).
+//!
+//! Hand-rolled on purpose — neither consumer may grow a dependency for
+//! a page of config syntax. The subset is deliberately small:
+//!
+//! - `#` full-line comments and blank lines
+//! - `[section]` tables and `[[section]]` array-of-table headers
+//! - `key = value` pairs, where a value is a double-quoted string
+//!   (no escapes), an integer, a float, `true`/`false`, or a
+//!   single-line `[list]` of those
+//!
+//! Anything outside the subset is a parse error carrying the 1-based
+//! line number, so config typos fail loudly (pallas-lint and
+//! `bench-bar` both exit 2 on a config error rather than linting or
+//! measuring against a half-read file).
+//!
+//! This file is `#[path]`-included by the `pallas-lint` crate as well
+//! as built into `dnc_serve` as `util::toml`, so it must stay
+//! std-only and free of `crate::` references.
+
+/// A parsed value. The subset has no dates, no nested tables inside
+/// values, and no multi-line anything.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "a string",
+            Value::Int(_) => "an integer",
+            Value::Float(_) => "a float",
+            Value::Bool(_) => "a bool",
+            Value::List(_) => "a list",
+        }
+    }
+}
+
+/// One `key = value` pair, tagged with its source line for error
+/// reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Item {
+    pub key: String,
+    pub value: Value,
+    pub line: usize,
+}
+
+impl Item {
+    fn type_err(&self, want: &str) -> String {
+        format!(
+            "line {}: `{}` expects {want}, got {}",
+            self.line,
+            self.key,
+            self.value.type_name()
+        )
+    }
+
+    /// The value as a string, or a line-tagged type error.
+    pub fn str(&self) -> Result<&str, String> {
+        match &self.value {
+            Value::Str(s) => Ok(s),
+            _ => Err(self.type_err("a double-quoted string")),
+        }
+    }
+
+    /// The value as an integer, or a line-tagged type error.
+    pub fn int(&self) -> Result<i64, String> {
+        match self.value {
+            Value::Int(n) => Ok(n),
+            _ => Err(self.type_err("an integer")),
+        }
+    }
+
+    /// The value as a float (integers coerce), or a line-tagged type
+    /// error.
+    pub fn f64(&self) -> Result<f64, String> {
+        match self.value {
+            Value::Float(x) => Ok(x),
+            Value::Int(n) => Ok(n as f64),
+            _ => Err(self.type_err("a number")),
+        }
+    }
+
+    /// The value as a bool, or a line-tagged type error.
+    pub fn bool(&self) -> Result<bool, String> {
+        match self.value {
+            Value::Bool(b) => Ok(b),
+            _ => Err(self.type_err("`true` or `false`")),
+        }
+    }
+
+    /// The value as a list of strings, or a line-tagged type error.
+    pub fn str_list(&self) -> Result<Vec<String>, String> {
+        let items = match &self.value {
+            Value::List(xs) => xs,
+            _ => return Err(self.type_err("a [list] of strings")),
+        };
+        let mut out = Vec::with_capacity(items.len());
+        for v in items {
+            match v {
+                Value::Str(s) => out.push(s.clone()),
+                other => {
+                    return Err(format!(
+                        "line {}: `{}` expects a [list] of double-quoted strings, \
+                         got a list holding {}",
+                        self.line,
+                        self.key,
+                        other.type_name()
+                    ))
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// One `[name]` or `[[name]]` section and the items under it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Section {
+    pub name: String,
+    /// `true` for `[[name]]` array-of-table headers (repeatable),
+    /// `false` for plain `[name]` tables (unique per document).
+    pub array: bool,
+    pub line: usize,
+    pub items: Vec<Item>,
+}
+
+/// A parsed document: top-level items (those before any section
+/// header) plus sections in source order.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Doc {
+    pub top: Vec<Item>,
+    pub sections: Vec<Section>,
+}
+
+impl Doc {
+    /// Parse a document, or return a `line N: ...` error. Duplicate
+    /// plain `[name]` tables are rejected here (TOML semantics);
+    /// duplicate keys are left to the consumer, because some configs
+    /// use repeatable keys (`field`, `order`) on purpose.
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut doc = Doc::default();
+        for (idx, raw) in text.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line.starts_with('[') {
+                let (name, array) = parse_header(line, line_no)?;
+                if !array
+                    && doc.sections.iter().any(|s| !s.array && s.name == name)
+                {
+                    return Err(format!("line {line_no}: duplicate section [{name}]"));
+                }
+                doc.sections.push(Section { name, array, line: line_no, items: Vec::new() });
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {line_no}: expected `key = value`, got `{line}`"))?;
+            let key = key.trim();
+            if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                return Err(format!("line {line_no}: malformed key `{key}`"));
+            }
+            let item = Item {
+                key: key.to_string(),
+                value: parse_value(value.trim(), line_no)?,
+                line: line_no,
+            };
+            match doc.sections.last_mut() {
+                Some(sec) => sec.items.push(item),
+                None => doc.top.push(item),
+            }
+        }
+        Ok(doc)
+    }
+
+    /// The unique plain `[name]` section, if present.
+    pub fn section(&self, name: &str) -> Option<&Section> {
+        self.sections.iter().find(|s| !s.array && s.name == name)
+    }
+
+    /// All `[[name]]` array sections, in source order.
+    pub fn array_sections(&self, name: &str) -> Vec<&Section> {
+        self.sections.iter().filter(|s| s.array && s.name == name).collect()
+    }
+}
+
+fn parse_header(line: &str, line_no: usize) -> Result<(String, bool), String> {
+    let bad = || format!("line {line_no}: malformed section header `{line}`");
+    let (inner, array) = if let Some(rest) = line.strip_prefix("[[") {
+        (rest.strip_suffix("]]").ok_or_else(bad)?, true)
+    } else {
+        let rest = line.strip_prefix('[').ok_or_else(bad)?;
+        (rest.strip_suffix(']').ok_or_else(bad)?, false)
+    };
+    let name = inner.trim();
+    if name.is_empty()
+        || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.')
+    {
+        return Err(bad());
+    }
+    Ok((name.to_string(), array))
+}
+
+fn parse_value(v: &str, line_no: usize) -> Result<Value, String> {
+    if let Some(rest) = v.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .filter(|_| v.len() >= 2)
+            .ok_or_else(|| {
+                format!("line {line_no}: expected a double-quoted string, got `{v}`")
+            })?;
+        if inner.contains('"') || inner.contains('\\') {
+            return Err(format!(
+                "line {line_no}: string escapes and embedded quotes are not supported"
+            ));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if v == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = v.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| format!("line {line_no}: unclosed `[list]`"))?;
+        let mut out = Vec::new();
+        for part in split_list(inner, line_no)? {
+            if part.starts_with('[') {
+                return Err(format!("line {line_no}: nested lists are not supported"));
+            }
+            out.push(parse_value(&part, line_no)?);
+        }
+        return Ok(Value::List(out));
+    }
+    // Only digit-shaped tokens are tried as numbers, so bare words
+    // (including `inf` / `nan`, which `f64::from_str` would accept)
+    // fall through to the catch-all error.
+    if v.starts_with(|c: char| c.is_ascii_digit() || c == '-' || c == '+' || c == '.') {
+        if let Ok(n) = v.parse::<i64>() {
+            return Ok(Value::Int(n));
+        }
+        if let Ok(x) = v.parse::<f64>() {
+            if x.is_finite() {
+                return Ok(Value::Float(x));
+            }
+        }
+    }
+    Err(format!(
+        "line {line_no}: expected a double-quoted string, number, bool, or [list], got `{v}`"
+    ))
+}
+
+/// Split a list body on commas that are outside double quotes. Keeps
+/// the parser single-pass and escape-free like the rest of the subset.
+fn split_list(inner: &str, line_no: usize) -> Result<Vec<String>, String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in inner.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                parts.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if in_str {
+        return Err(format!("line {line_no}: unterminated string in list"));
+    }
+    let last = cur.trim().to_string();
+    if !last.is_empty() {
+        parts.push(last);
+    } else if !parts.is_empty() {
+        // trailing comma: `["a",]` is fine, `["a",,]` is not
+        // (the empty middle element already landed in `parts`).
+    }
+    if parts.iter().any(|p| p.is_empty()) {
+        return Err(format!("line {line_no}: empty element in [list]"));
+    }
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_items_and_value_types() {
+        let doc = Doc::parse(
+            r#"
+# comment
+top = "level"
+
+[scenario]
+name = "longshort"
+tolerance_pct = 35
+base_ms = 2.5
+measured = false
+engines = ["static", "adaptive"]
+
+[[part]]
+count = 3
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.top.len(), 1);
+        assert_eq!(doc.top[0].str().unwrap(), "level");
+        let sc = doc.section("scenario").unwrap();
+        assert_eq!(sc.items.len(), 5);
+        assert_eq!(sc.items[0].str().unwrap(), "longshort");
+        assert_eq!(sc.items[1].int().unwrap(), 35);
+        assert_eq!(sc.items[1].f64().unwrap(), 35.0, "ints coerce to f64");
+        assert_eq!(sc.items[2].f64().unwrap(), 2.5);
+        assert!(!sc.items[3].bool().unwrap());
+        assert_eq!(sc.items[4].str_list().unwrap(), vec!["static", "adaptive"]);
+        let parts = doc.array_sections("part");
+        assert_eq!(parts.len(), 1);
+        assert!(parts[0].array);
+        assert_eq!(parts[0].items[0].int().unwrap(), 3);
+    }
+
+    #[test]
+    fn line_numbers_are_one_based_and_survive_comments() {
+        let doc = Doc::parse("# one\n\n[s]\nk = 1\n").unwrap();
+        assert_eq!(doc.section("s").unwrap().line, 3);
+        assert_eq!(doc.section("s").unwrap().items[0].line, 4);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        for (text, want) in [
+            ("just words", "expected `key = value`"),
+            ("[unclosed", "malformed section header"),
+            ("[[half]", "malformed section header"),
+            ("[]", "malformed section header"),
+            ("k-ey = 1", "malformed key"),
+            ("k = \"unterminated", "expected a double-quoted string"),
+            ("k = bareword", "expected a double-quoted string, number, bool"),
+            ("k = [1, [2]]", "nested lists"),
+            ("k = [1, 2", "unclosed `[list]`"),
+            ("k = [\"a\", , \"b\"]", "empty element"),
+            ("k = inf", "expected a double-quoted string, number, bool"),
+            ("k = \"has \\\\ escape\"", "escapes"),
+        ] {
+            let err = Doc::parse(text).unwrap_err();
+            assert!(err.contains(want), "for `{text}` expected `{want}`, got: {err}");
+            assert!(err.contains("line 1"), "for `{text}` got: {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_duplicate_plain_sections_but_not_array_sections() {
+        let err = Doc::parse("[m]\nk = 1\n[m]\nk = 2\n").unwrap_err();
+        assert!(err.contains("duplicate section [m]"), "got: {err}");
+        let doc = Doc::parse("[[a]]\nk = 1\n[[a]]\nk = 2\n").unwrap();
+        assert_eq!(doc.array_sections("a").len(), 2);
+    }
+
+    #[test]
+    fn type_errors_name_the_key_and_line() {
+        let doc = Doc::parse("[s]\nk = 5\n").unwrap();
+        let err = doc.section("s").unwrap().items[0].str().unwrap_err();
+        assert!(err.contains("line 2"), "got: {err}");
+        assert!(err.contains("`k`"), "got: {err}");
+        assert!(err.contains("an integer"), "got: {err}");
+    }
+
+    #[test]
+    fn negative_and_float_forms_parse() {
+        let doc = Doc::parse("[s]\na = -4\nb = 0.5\nc = -1.5\n").unwrap();
+        let s = doc.section("s").unwrap();
+        assert_eq!(s.items[0].int().unwrap(), -4);
+        assert_eq!(s.items[1].f64().unwrap(), 0.5);
+        assert_eq!(s.items[2].f64().unwrap(), -1.5);
+    }
+}

@@ -11,10 +11,12 @@
 //!   misleading-size workload sees **>= 10% better p95** than the
 //!   static size-proportional split.
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use dnc_serve::bench::gate::{longshort_scenario, sim_model, SimRunner};
+use dnc_serve::bar::{by_name, run_cell, Mode, Scenario};
+use dnc_serve::bench::gate::{sim_model, SimRunner};
 use dnc_serve::engine::{
     AdaptiveConfig, AdaptivePolicy, CoreMap, PartTask, ProfileStore, SchedConfig,
     SchedError, Scheduler,
@@ -106,10 +108,16 @@ fn adaptive_aging_recalibrates_from_observed_latency() {
 
 #[test]
 fn adaptive_beats_static_p95_on_misleading_sizes() {
-    // Small-scale pin of the bench acceptance bar (the full-size run
-    // lives in benches/adaptive_vs_static.rs and the CI bench gate).
-    let stat = longshort_scenario(false, 8);
-    let adap = longshort_scenario(true, 8);
+    // Small-scale pin of the bench acceptance bar over the checked-in
+    // barometer scenario (the full-size run lives in
+    // benches/adaptive_vs_static.rs; CI enforces it via bench-bar).
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("bench/scenarios/longshort.toml");
+    let text = std::fs::read_to_string(&path).expect("longshort scenario file");
+    let mut sc = Scenario::parse(&text).expect("longshort scenario parses");
+    sc.arrival.submitters = 1;
+    sc.arrival.quick_jobs = 8;
+    let stat = run_cell(&sc, by_name("static").unwrap(), Mode::Quick).expect("static cell");
+    let adap = run_cell(&sc, by_name("adaptive").unwrap(), Mode::Quick).expect("adaptive cell");
     assert!(
         adap.p95_ms <= 0.9 * stat.p95_ms,
         "adaptive p95 {:.2} ms must be >=10% better than static {:.2} ms",

@@ -1,0 +1,224 @@
+//! End-to-end tests for the `pallas-bar` barometer: the checked-in
+//! scenario suite and recorded baseline stay coherent (the matrix CI
+//! gates on actually exists), the arrival plans are deterministic, and
+//! small-scale cell runs pin the behavioral claims the retired Rust
+//! gate scenarios used to assert.
+
+use std::path::{Path, PathBuf};
+
+use dnc_serve::bar::{
+    by_name, check_bars, legacy_name, load_dir, parse_csv, plans, run_cell, to_csv, Mode,
+    Scenario,
+};
+
+fn scenario_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("bench/scenarios")
+}
+
+fn load_suite() -> Vec<Scenario> {
+    load_dir(&scenario_dir()).expect("checked-in scenario suite loads")
+}
+
+fn baseline() -> Vec<dnc_serve::bar::Measurement> {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("bench/record/ci16/quick.csv");
+    let text = std::fs::read_to_string(&path).expect("checked-in baseline CSV");
+    parse_csv(&text).expect("baseline CSV parses")
+}
+
+#[test]
+fn suite_has_the_eight_migrated_scenarios_on_at_least_three_engines() {
+    let suite = load_suite();
+    let names: Vec<&str> = suite.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(
+        names,
+        [
+            "cancel_churn",
+            "cancel_storm",
+            "hetero_inversion",
+            "longshort",
+            "open_mix",
+            "priority_inversion",
+            "sched_smoke",
+            "submit_storm",
+        ],
+        "load_dir is sorted by file name and every stem matches its scenario"
+    );
+    for sc in &suite {
+        assert!(
+            sc.engines.len() >= 3,
+            "acceptance: `{}` must run against >= 3 engines, has {:?}",
+            sc.name,
+            sc.engines
+        );
+        for e in &sc.engines {
+            assert!(by_name(e).is_some(), "`{}` lists unknown engine {e}", sc.name);
+        }
+    }
+}
+
+#[test]
+fn legacy_mapping_is_backed_by_the_suite() {
+    // Every retired JSON-gate scenario must map onto a (scenario,
+    // engine) cell the suite actually runs — otherwise BENCH_pr.json
+    // consumers silently lose rows.
+    let suite = load_suite();
+    let pairs = [
+        ("sched_smoke", "static"),
+        ("longshort", "static"),
+        ("longshort", "adaptive"),
+        ("cancel_storm", "static"),
+        ("priority_inversion", "static"),
+        ("hetero_inversion", "static"),
+        ("hetero_inversion", "blind"),
+        ("submit_storm", "sharded2"),
+        ("submit_storm", "static"),
+    ];
+    for (scenario, engine) in pairs {
+        assert!(legacy_name(scenario, engine).is_some(), "{scenario}/{engine} unmapped");
+        let sc = suite
+            .iter()
+            .find(|s| s.name == scenario)
+            .unwrap_or_else(|| panic!("legacy scenario `{scenario}` missing from the suite"));
+        assert!(
+            sc.engines.iter().any(|e| e == engine),
+            "legacy cell {scenario}/{engine} not in the scenario's engine list"
+        );
+    }
+}
+
+#[test]
+fn recorded_baseline_covers_the_exact_quick_matrix() {
+    let suite = load_suite();
+    let base = baseline();
+    let mut expected = 0usize;
+    for sc in &suite {
+        for engine in &sc.engines {
+            expected += 1;
+            let cells: Vec<_> = base
+                .iter()
+                .filter(|m| m.scenario == sc.name && m.engine == *engine)
+                .collect();
+            assert_eq!(cells.len(), 1, "exactly one baseline cell for {}/{engine}", sc.name);
+            let m = cells[0];
+            assert_eq!(m.mode, Mode::Quick);
+            assert_eq!(
+                m.jobs,
+                sc.arrival.submitters * sc.arrival.jobs_for(Mode::Quick),
+                "{}/{engine}: baseline job count must match the scenario definition",
+                sc.name
+            );
+            assert!(
+                m.estimated,
+                "{}/{engine}: hand-estimated rows must say so until re-recorded",
+                sc.name
+            );
+        }
+    }
+    assert_eq!(base.len(), expected, "no orphan baseline cells");
+    // The estimated baseline must already satisfy every scenario's
+    // self-relative bar — otherwise the first real `bench-bar diff`
+    // run is incoherent about what it is defending.
+    let failures = check_bars(&suite, &base);
+    assert!(failures.is_empty(), "{failures:?}");
+    assert!(
+        suite.iter().map(|s| s.bars.len()).sum::<usize>() >= 3,
+        "the three retired gate bars must survive as scenario bars"
+    );
+}
+
+#[test]
+fn baseline_csv_round_trips_exactly() {
+    let base = baseline();
+    assert_eq!(parse_csv(&to_csv(&base)).expect("re-parse"), base);
+}
+
+#[test]
+fn arrival_plans_are_deterministic_per_scenario() {
+    // The jittered open-loop scenario is the one with real randomness:
+    // same seed, same schedule, every time — the property cross-engine
+    // comparability rests on.
+    let suite = load_suite();
+    for sc in &suite {
+        let a = plans(sc, Mode::Quick);
+        let b = plans(sc, Mode::Quick);
+        assert_eq!(a, b, "`{}` arrival schedule must be seed-deterministic", sc.name);
+        assert_eq!(a.len(), sc.arrival.submitters);
+    }
+    let open_mix = suite.iter().find(|s| s.name == "open_mix").unwrap();
+    let p = plans(open_mix, Mode::Quick);
+    assert!(
+        p[0].gaps_us.iter().any(|g| *g != open_mix.arrival.spacing_us),
+        "uniform jitter must actually perturb the gaps"
+    );
+    let churn = suite.iter().find(|s| s.name == "cancel_churn").unwrap();
+    let flips: Vec<bool> = plans(churn, Mode::Quick)
+        .iter()
+        .flat_map(|p| p.cancels.iter().flatten().copied())
+        .collect();
+    assert!(
+        flips.iter().any(|f| *f) && flips.iter().any(|f| !*f),
+        "a 0.5 cancel coin over 30 jobs lands on both sides: {flips:?}"
+    );
+}
+
+/// Small-scale behavioral pins over real scheduler runs — the claims
+/// the retired Rust gate scenarios asserted, now driven entirely from
+/// the checked-in TOMLs.
+#[test]
+fn cancel_storm_cell_is_not_starved_by_doomed_parts() {
+    let suite = load_suite();
+    let mut sc = suite.into_iter().find(|s| s.name == "cancel_storm").unwrap();
+    sc.arrival.quick_jobs = 3;
+    let m = run_cell(&sc, by_name("static").unwrap(), Mode::Quick).expect("cell runs");
+    assert_eq!(m.jobs, 3);
+    // Doomed parts declare 1000ms; if cancellation failed to reclaim
+    // their cores the survivor's wall would blow far past this.
+    assert!(
+        m.p95_ms < 500.0,
+        "survivor p95 {:.1}ms — cancellation is not reclaiming cores",
+        m.p95_ms
+    );
+}
+
+#[test]
+fn priority_inversion_cell_keeps_the_urgent_part_fast() {
+    let suite = load_suite();
+    let mut sc = suite.into_iter().find(|s| s.name == "priority_inversion").unwrap();
+    sc.arrival.quick_jobs = 3;
+    let m = run_cell(&sc, by_name("static").unwrap(), Mode::Quick).expect("cell runs");
+    // Eight 100ms hogs are in the queue; priority admission must get
+    // the urgent part out well before a FIFO drain (~2 hog waves).
+    assert!(
+        m.p95_ms < 55.0,
+        "urgent p95 {:.1}ms — priority admission is not jumping the hog queue",
+        m.p95_ms
+    );
+}
+
+#[test]
+fn hetero_cell_prefers_class_aware_placement() {
+    let suite = load_suite();
+    let mut sc = suite.into_iter().find(|s| s.name == "hetero_inversion").unwrap();
+    sc.arrival.quick_jobs = 4;
+    let aware = run_cell(&sc, by_name("static").unwrap(), Mode::Quick).expect("static cell");
+    let blind = run_cell(&sc, by_name("blind").unwrap(), Mode::Quick).expect("blind cell");
+    // Direction only at this tiny scale; the full >=10% margin is the
+    // scenario's [[bar]], enforced by `bench-bar diff` at real counts.
+    assert!(
+        aware.p95_ms < blind.p95_ms,
+        "class-aware p95 {:.2}ms must beat blind {:.2}ms on the hetero machine",
+        aware.p95_ms,
+        blind.p95_ms
+    );
+}
+
+#[test]
+fn submit_storm_cell_floods_and_drains() {
+    let suite = load_suite();
+    let mut sc = suite.into_iter().find(|s| s.name == "submit_storm").unwrap();
+    sc.arrival.submitters = 2;
+    sc.arrival.quick_jobs = 10;
+    let m = run_cell(&sc, by_name("sharded2").unwrap(), Mode::Quick).expect("cell runs");
+    assert_eq!(m.jobs, 20, "every flooded job must drain to a wall");
+    assert!(m.throughput_jobs_s > 0.0 && m.p95_ms > 0.0);
+}

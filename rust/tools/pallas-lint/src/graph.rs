@@ -116,67 +116,57 @@ impl LockOrder {
 /// Parse the `lint-order.toml` subset: `#` comments, `[[lock]]` blocks
 /// with a `name` and one or more `field` aliases, and top-level
 /// `order = "a < b < c"` chains (repeatable; the union must be
-/// acyclic). Hand-rolled like the allowlist parser — same no-new-deps
-/// rule.
+/// acyclic). Built on the shared [`crate::toml`] subset parser — same
+/// no-new-deps rule as the allowlist.
 pub fn parse_lock_order(text: &str) -> Result<LockOrder, String> {
+    let doc = crate::toml::Doc::parse(text)?;
     let mut locks: Vec<LockDecl> = Vec::new();
     let mut chains: Vec<(usize, String)> = Vec::new();
-    let mut cur: Option<LockDecl> = None;
 
-    fn finish(locks: &mut Vec<LockDecl>, cur: Option<LockDecl>) -> Result<(), String> {
-        if let Some(l) = cur {
-            if l.name.is_empty() {
-                return Err("[[lock]] block missing `name`".into());
-            }
-            if l.fields.is_empty() {
-                return Err(format!("[[lock]] `{}` declares no `field`", l.name));
-            }
-            locks.push(l);
-        }
-        Ok(())
-    }
-    fn unquote(v: &str, line_no: usize) -> Result<String, String> {
-        let v = v.trim();
-        if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
-            Ok(v[1..v.len() - 1].to_string())
-        } else {
-            Err(format!("line {line_no}: expected a double-quoted string, got `{v}`"))
+    // `order` is global: chains may appear before, between, or after
+    // [[lock]] blocks (the generic parser attributes trailing ones to
+    // the last block, so both item streams are scanned).
+    for item in &doc.top {
+        match item.key.as_str() {
+            "order" => chains.push((item.line, item.str()?.to_string())),
+            "name" => return Err(format!("line {}: `name` outside [[lock]]", item.line)),
+            "field" => return Err(format!("line {}: `field` outside [[lock]]", item.line)),
+            other => return Err(format!("line {}: unknown key `{other}`", item.line)),
         }
     }
-
-    for (idx, raw) in text.lines().enumerate() {
-        let line_no = idx + 1;
-        let line = raw.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
+    for sec in &doc.sections {
+        if !sec.array || sec.name != "lock" {
+            return Err(format!(
+                "line {}: expected `[[lock]]`, got section `{}`",
+                sec.line, sec.name
+            ));
         }
-        if line == "[[lock]]" {
-            finish(&mut locks, cur.take())?;
-            cur = Some(LockDecl { name: String::new(), fields: Vec::new() });
-            continue;
-        }
-        let (key, value) = line
-            .split_once('=')
-            .ok_or_else(|| format!("line {line_no}: expected `key = value`"))?;
-        match key.trim() {
-            // `order` is global: chains may appear between or after
-            // [[lock]] blocks.
-            "order" => chains.push((line_no, unquote(value, line_no)?)),
-            "name" => match cur.as_mut() {
-                Some(l) if l.name.is_empty() => l.name = unquote(value, line_no)?,
-                Some(l) => {
-                    return Err(format!("line {line_no}: `{}` already has a name", l.name))
+        let mut decl = LockDecl { name: String::new(), fields: Vec::new() };
+        for item in &sec.items {
+            match item.key.as_str() {
+                "order" => chains.push((item.line, item.str()?.to_string())),
+                "name" => {
+                    if decl.name.is_empty() {
+                        decl.name = item.str()?.to_string();
+                    } else {
+                        return Err(format!(
+                            "line {}: `{}` already has a name",
+                            item.line, decl.name
+                        ));
+                    }
                 }
-                None => return Err(format!("line {line_no}: `name` outside [[lock]]")),
-            },
-            "field" => match cur.as_mut() {
-                Some(l) => l.fields.push(unquote(value, line_no)?),
-                None => return Err(format!("line {line_no}: `field` outside [[lock]]")),
-            },
-            other => return Err(format!("line {line_no}: unknown key `{other}`")),
+                "field" => decl.fields.push(item.str()?.to_string()),
+                other => return Err(format!("line {}: unknown key `{other}`", item.line)),
+            }
         }
+        if decl.name.is_empty() {
+            return Err("[[lock]] block missing `name`".into());
+        }
+        if decl.fields.is_empty() {
+            return Err(format!("[[lock]] `{}` declares no `field`", decl.name));
+        }
+        locks.push(decl);
     }
-    finish(&mut locks, cur.take())?;
 
     // Validate declarations: names and field aliases must be unique
     // crate-wide (an alias names exactly one lock).

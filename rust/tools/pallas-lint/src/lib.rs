@@ -26,7 +26,8 @@
 //! - **PL004** — `Budget` / `CancelToken` / `RequestCtx` are
 //!   constructed only in their defining modules (`engine/ctx.rs`,
 //!   `engine/budget.rs`, `runtime/cancel.rs`) and the ingress modules
-//!   (`coordinator/router.rs`, `main.rs`, `bench/gate.rs`). This is the
+//!   (`coordinator/router.rs`, `main.rs`, `bench/gate.rs`,
+//!   `bar/engine.rs`). This is the
 //!   one-mint invariant: request state is minted once at the edge and
 //!   *threaded*, never re-minted mid-stack (a fresh token mid-stack is
 //!   a request the client can no longer cancel).
@@ -94,6 +95,15 @@ use syn::visit::Visit;
 
 mod graph;
 
+/// The TOML-subset parser is shared source with the serving crate
+/// (`dnc_serve`'s `util::toml`): `pallas-lint` cannot depend on the
+/// crate it lints (that would pull the PJRT build into the lint job),
+/// so it includes the one file by path instead. Public so the helpers
+/// the configs here don't exercise (list values, bools) aren't dead
+/// code in this crate.
+#[path = "../../../src/util/toml.rs"]
+pub mod toml;
+
 pub use graph::{lock_order_dot, parse_lock_order, LockDecl, LockEdge, LockOrder};
 
 /// Rule catalog: (id, one-line summary) — the JSON report embeds it so
@@ -141,7 +151,9 @@ fn pl004_exempt(file: &str) -> bool {
         // defining modules: the constructors themselves live here
         "engine/ctx.rs" | "engine/budget.rs" | "runtime/cancel.rs"
         // ingress modules: where the one mint per request happens
-        | "coordinator/router.rs" | "main.rs" | "bench/gate.rs"
+        // (bar/engine.rs is the barometer's load generator — it plays
+        // the client, so each simulated request is minted there)
+        | "coordinator/router.rs" | "main.rs" | "bench/gate.rs" | "bar/engine.rs"
     )
 }
 
@@ -533,22 +545,45 @@ pub struct AllowEntry {
 }
 
 /// Parse the `lint-allow.toml` subset: `#` comments, `[[allow]]`
-/// blocks, `key = "value"` / `max = N` pairs. Hand-rolled on purpose —
-/// the tool must not grow a dependency for 40 lines of config.
+/// blocks, `key = "value"` / `max = N` pairs. Built on the shared
+/// hand-rolled [`toml`] subset parser (also the barometer's scenario
+/// loader) — the tool must not grow a dependency for 40 lines of
+/// config.
 pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, String> {
-    #[derive(Default)]
-    struct Partial {
-        rule: Option<String>,
-        file: Option<String>,
-        max: Option<usize>,
-        reason: Option<String>,
-        start_line: usize,
+    let doc = toml::Doc::parse(text)?;
+    if let Some(item) = doc.top.first() {
+        return Err(format!("line {}: key outside an [[allow]] block", item.line));
     }
-    fn finish(p: Partial) -> Result<AllowEntry, String> {
-        let at = format!("[[allow]] block at line {}", p.start_line);
-        let rule = p.rule.ok_or_else(|| format!("{at}: missing `rule`"))?;
-        let file = p.file.ok_or_else(|| format!("{at}: missing `file`"))?;
-        let reason = p.reason.ok_or_else(|| format!("{at}: missing `reason`"))?;
+
+    let mut entries = Vec::new();
+    for sec in &doc.sections {
+        if !sec.array || sec.name != "allow" {
+            return Err(format!(
+                "line {}: expected `[[allow]]`, got section `{}`",
+                sec.line, sec.name
+            ));
+        }
+        let at = format!("[[allow]] block at line {}", sec.line);
+        let (mut rule, mut file, mut max, mut reason) = (None, None, None, None);
+        for item in &sec.items {
+            match item.key.as_str() {
+                "rule" => rule = Some(item.str()?.to_string()),
+                "file" => file = Some(item.str()?.to_string()),
+                "reason" => reason = Some(item.str()?.to_string()),
+                "max" => {
+                    let n = item
+                        .int()
+                        .ok()
+                        .filter(|n| *n >= 0)
+                        .ok_or_else(|| format!("line {}: `max` must be an integer", item.line))?;
+                    max = Some(n as usize);
+                }
+                other => return Err(format!("line {}: unknown key `{other}`", item.line)),
+            }
+        }
+        let rule = rule.ok_or_else(|| format!("{at}: missing `rule`"))?;
+        let file = file.ok_or_else(|| format!("{at}: missing `file`"))?;
+        let reason = reason.ok_or_else(|| format!("{at}: missing `reason`"))?;
         if reason.trim().is_empty() {
             return Err(format!("{at}: empty `reason` — every exception needs a justification"));
         }
@@ -559,62 +594,14 @@ pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, String> {
                 valid.join(", ")
             ));
         }
-        let max = p.max.unwrap_or(1);
+        let max = max.unwrap_or(1);
         if max == 0 {
             return Err(format!(
                 "{at}: `max = 0` is stale by construction — an exception that \
                  suppresses nothing must be deleted"
             ));
         }
-        Ok(AllowEntry { rule, file, max, reason })
-    }
-    fn unquote(v: &str, line_no: usize) -> Result<String, String> {
-        let v = v.trim();
-        if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
-            Ok(v[1..v.len() - 1].to_string())
-        } else {
-            Err(format!("line {line_no}: expected a double-quoted string, got `{v}`"))
-        }
-    }
-
-    let mut entries = Vec::new();
-    let mut cur: Option<Partial> = None;
-    for (idx, raw) in text.lines().enumerate() {
-        let line_no = idx + 1;
-        let line = raw.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        if line == "[[allow]]" {
-            if let Some(p) = cur.take() {
-                entries.push(finish(p)?);
-            }
-            cur = Some(Partial { start_line: line_no, ..Partial::default() });
-            continue;
-        }
-        let p = cur
-            .as_mut()
-            .ok_or_else(|| format!("line {line_no}: key outside an [[allow]] block"))?;
-        let (key, value) = line
-            .split_once('=')
-            .ok_or_else(|| format!("line {line_no}: expected `key = value`"))?;
-        match key.trim() {
-            "rule" => p.rule = Some(unquote(value, line_no)?),
-            "file" => p.file = Some(unquote(value, line_no)?),
-            "reason" => p.reason = Some(unquote(value, line_no)?),
-            "max" => {
-                p.max = Some(
-                    value
-                        .trim()
-                        .parse()
-                        .map_err(|_| format!("line {line_no}: `max` must be an integer"))?,
-                )
-            }
-            other => return Err(format!("line {line_no}: unknown key `{other}`")),
-        }
-    }
-    if let Some(p) = cur.take() {
-        entries.push(finish(p)?);
+        entries.push(AllowEntry { rule, file, max, reason });
     }
     // Duplicate (rule, file) pairs are an error, not a merge: matching
     // is first-entry-wins, so a second entry would silently never fire
